@@ -1,0 +1,77 @@
+//! Planner anatomy on multi-head attention: shows, vertex by vertex, what
+//! EinDecomp chooses versus the Megatron / sequence / attention-head
+//! heuristics on the paper's own Section-3 example — and why ("surprising
+//! finding": sequence decomposition is strong for prefill).
+//!
+//! ```sh
+//! cargo run --release --example attention_planner
+//! ```
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::einsum::graph::EinGraph;
+use eindecomp::einsum::macros::multihead_attention;
+use eindecomp::sim::{Cluster, NetworkProfile};
+
+fn main() -> eindecomp::Result<()> {
+    // Paper Section 3 shapes: s=seq, a=model, h=heads, d=head dim.
+    let (s, a, h, d) = (512, 256, 8, 32);
+    let mut g = EinGraph::new();
+    let q = g.input("Q", vec![s, a]);
+    let k = g.input("K", vec![s, a]);
+    let v = g.input("V", vec![s, a]);
+    let wq = g.input("WQ", vec![a, h, d]);
+    let wk = g.input("WK", vec![a, h, d]);
+    let wv = g.input("WV", vec![a, h, d]);
+    let wo = g.input("WO", vec![a, h, d]);
+    multihead_attention(&mut g, "mha", q, k, v, wq, wk, wv, wo, false)?;
+    println!(
+        "multi-head attention EinGraph: {} vertices (s={s} a={a} h={h} d={d})",
+        g.len()
+    );
+
+    let p = 8;
+    let roles = LabelRoles::by_convention();
+    let strategies = [
+        Strategy::EinDecomp,
+        Strategy::Megatron,
+        Strategy::Sequence,
+        Strategy::AttentionHead,
+    ];
+    let cluster = Cluster::new(p, NetworkProfile::gpu_server_v100());
+
+    // header
+    println!("\npredicted communication + modeled time (V100-class profile):");
+    println!("{:<12} {:>16} {:>12} {:>10}", "strategy", "pred floats", "moved MiB", "sim ms");
+    let mut plans = Vec::new();
+    for strat in &strategies {
+        let plan = assign(&g, strat, p, &roles)?;
+        let rep = cluster.dry_run(&g, &plan)?;
+        println!(
+            "{:<12} {:>16.0} {:>12.2} {:>10.3}",
+            strat.name(),
+            plan.predicted_cost,
+            rep.bytes_moved as f64 / (1 << 20) as f64,
+            rep.sim_makespan_s * 1e3
+        );
+        plans.push((strat.name(), plan));
+    }
+
+    // per-vertex comparison for the interesting vertices
+    println!("\nper-vertex partitioning vectors (d over unique labels):");
+    print!("{:<16}", "vertex");
+    for (name, _) in &plans {
+        print!(" {name:>14}");
+    }
+    println!();
+    for vert in g.vertices() {
+        if plans[0].1.parts.contains_key(&vert.id) {
+            let uniq = vert.op.unique_labels();
+            print!("{:<16}", vert.name);
+            for (_, plan) in &plans {
+                print!(" {:>14}", format!("{:?}", plan.parts[&vert.id]));
+            }
+            println!("   labels {uniq:?}");
+        }
+    }
+    Ok(())
+}

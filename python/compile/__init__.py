@@ -1,0 +1,1 @@
+"""Build-time compile path (Layer 1 + Layer 2). Never imported at run time."""

@@ -1,0 +1,165 @@
+"""AOT compile path: lower every (kind, shape) kernel of model.py to HLO
+*text* and emit the artifact manifest the rust runtime loads.
+
+Interchange is HLO text, NOT ``lowered.compile()`` or a serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+that the `xla` crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out ../artifacts [--quick]
+
+Emits ``<name>.hlo.txt`` per kernel plus ``manifest.txt`` (tab-separated:
+name, kind, dims, file — parsed by rust) and ``manifest.json`` (for
+humans). This runs ONCE at build time; the rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def kernel_table(quick: bool):
+    """(name, kind, dims, fn, specs) for every artifact.
+
+    The BMM family covers the canonical tile shapes the default example
+    and bench configurations produce; anything else falls back to the
+    rust-native kernel (runtime::engine handles dispatch).
+    """
+    table = []
+    bmm_shapes = [
+        (1, 16, 16, 16),
+        (1, 32, 32, 32),
+        (1, 64, 64, 64),
+        (1, 128, 128, 128),
+        (1, 64, 16, 64),
+        (1, 128, 32, 128),
+        (1, 32, 128, 32),
+        (1, 256, 64, 256),
+    ]
+    if not quick:
+        bmm_shapes += [
+            (1, 256, 256, 256),
+            (2, 64, 64, 64),
+            (4, 32, 32, 32),
+            (1, 512, 128, 512),
+        ]
+    for (b, m, k, n) in bmm_shapes:
+        table.append(
+            (
+                f"bmm_b{b}_m{m}_k{k}_n{n}",
+                "bmm",
+                [b, m, k, n],
+                model.bmm,
+                [f32(b, m, k), f32(b, k, n)],
+            )
+        )
+    flat_ns = [1024, 4096, 16384] + ([65536] if not quick else [])
+    for n in flat_ns:
+        for op in ["add", "mul", "sub", "div"]:
+            table.append(
+                (f"ew_{op}_n{n}", f"ew_{op}", [n], model.ew(op), [f32(n), f32(n)])
+            )
+        for op in ["exp", "relu", "silu", "square"]:
+            table.append(
+                (f"map_{op}_n{n}", f"map_{op}", [n], model.unary_map(op), [f32(n)])
+            )
+    for (rows, cols) in [(64, 64), (128, 128), (256, 128)]:
+        for op in ["sum", "max"]:
+            table.append(
+                (
+                    f"reduce_{op}_r{rows}_c{cols}",
+                    f"reduce_{op}_last",
+                    [rows, cols],
+                    model.reduce_last(op),
+                    [f32(rows, cols)],
+                )
+            )
+        table.append(
+            (
+                f"softmax_r{rows}_c{cols}",
+                "softmax",
+                [rows, cols],
+                model.softmax,
+                [f32(rows, cols)],
+            )
+        )
+    for (s, d) in [(64, 32), (128, 64)]:
+        table.append(
+            (
+                f"attention_s{s}_d{d}",
+                "attention_tile",
+                [s, d],
+                model.attention_tile,
+                [f32(s, d), f32(s, d), f32(s, d)],
+            )
+        )
+    # fused L2 FFNN tile step (batch, feat, hidden, classes)
+    (bt, ft, hd, cl) = (32, 64, 32, 16)
+    table.append(
+        (
+            f"ffnn_step_b{bt}_f{ft}_h{hd}_c{cl}",
+            "ffnn_step",
+            [bt, ft, hd, cl],
+            model.ffnn_tile_step,
+            [f32(bt, ft), f32(ft, hd), f32(hd, cl), f32(bt, cl)],
+        )
+    )
+    return table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="smaller artifact set for CI"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest_lines = []
+    manifest_json = []
+    table = kernel_table(args.quick)
+    for i, (name, kind, dims, fn, specs) in enumerate(table):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        text = to_hlo_text(fn, *specs)
+        with open(path, "w") as f:
+            f.write(text)
+        dims_s = ",".join(str(d) for d in dims)
+        manifest_lines.append(f"{name}\t{kind}\t{dims_s}\t{fname}")
+        manifest_json.append(
+            {"name": name, "kind": kind, "dims": dims, "file": fname}
+        )
+        print(f"[{i + 1}/{len(table)}] {name} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("# name\tkind\tdims\tfile\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"kernels": manifest_json}, f, indent=2)
+    print(f"wrote {len(table)} artifacts to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at run time)."""
+
+from . import elementwise, matmul, ref, softmax  # noqa: F401

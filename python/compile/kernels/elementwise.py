@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernels: elementwise binary ops, unary maps, and
+last-axis reductions — the remaining TRA kernel functions.
+
+All operate on flat or [rows, cols] layouts; the rust runtime reshapes
+tiles into these canonical forms before dispatch (mirroring the paper's
+"unpack, kernel, re-pack" CPU pipeline).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BINOPS = {
+    "add": lambda a, b: a + b,
+    "mul": lambda a, b: a * b,
+    "sub": lambda a, b: a - b,
+    "div": lambda a, b: a / b,
+}
+
+_MAPS = {
+    "exp": jnp.exp,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "square": lambda x: x * x,
+}
+
+
+def _chunk(n: int, target: int = 4096) -> int:
+    c = min(n, target)
+    while c > 1 and n % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def _ew_kernel(x_ref, y_ref, o_ref, *, op):
+    o_ref[...] = _BINOPS[op](x_ref[...], y_ref[...])
+
+
+def ew(op: str, x, y):
+    """Elementwise binary op over flat [n] arrays."""
+    (n,) = x.shape
+    c = _chunk(n)
+    return pl.pallas_call(
+        functools.partial(_ew_kernel, op=op),
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _map_kernel(x_ref, o_ref, *, op):
+    o_ref[...] = _MAPS[op](x_ref[...])
+
+
+def unary_map(op: str, x):
+    """Unary map over flat [n] arrays."""
+    (n,) = x.shape
+    c = _chunk(n)
+    return pl.pallas_call(
+        functools.partial(_map_kernel, op=op),
+        grid=(n // c,),
+        in_specs=[pl.BlockSpec((c,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _reduce_kernel(x_ref, o_ref, *, op):
+    if op == "sum":
+        o_ref[...] = jnp.sum(x_ref[...], axis=-1)
+    else:
+        o_ref[...] = jnp.max(x_ref[...], axis=-1)
+
+
+def reduce_last(op: str, x):
+    """Reduce the last axis of [rows, cols] -> [rows]; whole rows stay in
+    one VMEM block (row-blocked grid)."""
+    rows, cols = x.shape
+    rb = _chunk(rows, 256)
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, op=op),
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(x)

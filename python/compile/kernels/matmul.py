@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: blocked batched matrix multiply (the TRA kernel
+function K for Mul/Sum contractions).
+
+TPU-shaped even though we execute with ``interpret=True`` on CPU (the CPU
+PJRT plugin cannot run Mosaic custom-calls — see DESIGN.md
+§Hardware-Adaptation): operands stream HBM->VMEM in MXU-friendly blocks
+(128x128 where the shape allows), a float32 VMEM scratch accumulator runs
+across the K grid dimension (marked "arbitrary" so only the K loop is
+sequential), and the epilogue stores the accumulator once on the final K
+step. VMEM footprint per step: bm*bk + bk*bn + 2*bm*bn floats — at the
+default 128 blocks that is 256 KiB, an 8x double-buffering margin inside
+a 16 MiB VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def block_of(dim: int, target: int = 128) -> int:
+    """Largest power-of-two block <= target that divides dim (>=1)."""
+    b = min(dim, target)
+    while b > 1 and dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _bmm_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], y_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _store():
+        o_ref[0] = acc_ref[...]
+
+
+def bmm(x, y, *, bm: int = 0, bk: int = 0, bn: int = 0):
+    """Batched matmul ``[b, m, k] @ [b, k, n] -> [b, m, n]``.
+
+    Block sizes default to the largest power-of-two divisor of each dim,
+    capped at 128 (one MXU tile edge).
+    """
+    b, m, k = x.shape
+    b2, k2, n = y.shape
+    assert b == b2 and k == k2, (x.shape, y.shape)
+    bm = bm or block_of(m)
+    bk = bk or block_of(k)
+    bn = bn or block_of(n)
+    k_steps = k // bk
+    grid = (b, m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_bmm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bi, i, j, kk: (bi, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bi, i, j, kk: (bi, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bi, i, j, kk: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, y)
+
+
+def matmul(x, y, **kw):
+    """Plain 2-D matmul through the same kernel."""
+    return bmm(x[None], y[None], **kw)[0]
+
+
+def vmem_floats(bm: int, bk: int, bn: int) -> int:
+    """VMEM working-set estimate (floats) for a block configuration:
+    one x block + one y block + output block + accumulator."""
+    return bm * bk + bk * bn + 2 * bm * bn

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+reference (pytest compares kernel vs. ref under shape/seed sweeps)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def bmm(x, y):
+    return jnp.einsum("bmk,bkn->bmn", x, y)
+
+
+def matmul(x, y):
+    return x @ y
+
+
+def ew(op, x, y):
+    return {
+        "add": x + y,
+        "mul": x * y,
+        "sub": x - y,
+        "div": x / y,
+    }[op]
+
+
+def unary_map(op, x):
+    return {
+        "exp": jnp.exp(x),
+        "relu": jnp.maximum(x, 0.0),
+        "silu": x * jax.nn.sigmoid(x),
+        "square": x * x,
+    }[op]
+
+
+def reduce_last(op, x):
+    return {"sum": jnp.sum(x, axis=-1), "max": jnp.max(x, axis=-1)}[op]
+
+
+def softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def attention_tile(q, k, v):
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    return jax.nn.softmax(q @ k.T * scale, axis=-1) @ v

@@ -1,0 +1,75 @@
+"""Layer-2: the jax compute-graph functions that get AOT-lowered to HLO.
+
+Each public function here is a *kernel entry point* the rust runtime can
+load (`artifacts/manifest.txt` maps (kind, dims) -> HLO file): the TRA
+join's kernel function K in its canonical layouts. Every function calls
+the Layer-1 Pallas kernels, so the Pallas code lowers into the same HLO
+module and runs on the PJRT CPU client with no Python anywhere near the
+request path.
+
+`ffnn_tile_step` additionally demonstrates a *fused* Layer-2 graph — a
+whole FFNN forward+backward tile-step lowered as one module (XLA fuses
+the elementwise chain between the Pallas matmuls).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elementwise as ew_k
+from .kernels import matmul as mm_k
+from .kernels import softmax as sm_k
+
+
+def bmm(x, y):
+    """[b,m,k] @ [b,k,n] -> [b,m,n] (Pallas blocked BMM)."""
+    return (mm_k.bmm(x, y),)
+
+
+def ew(op):
+    def f(x, y):
+        return (ew_k.ew(op, x, y),)
+
+    return f
+
+
+def unary_map(op):
+    def f(x):
+        return (ew_k.unary_map(op, x),)
+
+    return f
+
+
+def reduce_last(op):
+    def f(x):
+        return (ew_k.reduce_last(op, x),)
+
+    return f
+
+
+def softmax(x):
+    return (sm_k.softmax(x),)
+
+
+def attention_tile(q, k, v):
+    return (sm_k.attention_tile(q, k, v),)
+
+
+def ffnn_tile_step(x, w1, w2, t):
+    """Fused forward+backward of a 2-layer FFNN on one data tile:
+    returns (loss, dW1, dW2). Pallas matmuls + XLA-fused elementwise.
+
+    Mirrors `models::ffnn` in the rust layer so the L2 fusion can be
+    compared against the per-vertex TRA execution of the same math.
+    """
+    batch = x.shape[0]
+    p1 = mm_k.matmul(x, w1)
+    h1 = jnp.maximum(p1, 0.0)
+    y = mm_k.matmul(h1, w2)
+    diff = y - t
+    loss = 0.5 / batch * jnp.sum(diff * diff)
+    g2 = diff / batch
+    dw2 = mm_k.matmul(h1.T, g2)
+    gh = mm_k.matmul(g2, w2.T)
+    g1 = gh * (p1 > 0.0)
+    dw1 = mm_k.matmul(x.T, g1)
+    return (loss, dw1, dw2)

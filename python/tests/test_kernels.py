@@ -1,0 +1,148 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (power-of-two and ragged-divisible) and seeds;
+this is the CORE build-time correctness signal for the kernels the rust
+runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise as ew_k
+from compile.kernels import matmul as mm_k
+from compile.kernels import ref
+from compile.kernels import softmax as sm_k
+
+POW2 = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def assert_close(a, b, tol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------- bmm ----------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    m=st.sampled_from(POW2[2:]),
+    k=st.sampled_from(POW2[2:]),
+    n=st.sampled_from(POW2[2:]),
+    seed=st.integers(0, 1000),
+)
+def test_bmm_matches_ref(b, m, k, n, seed):
+    x = rand(seed, b, m, k)
+    y = rand(seed + 1, b, k, n)
+    assert_close(mm_k.bmm(x, y), ref.bmm(x, y), tol=1e-4 * k)
+
+
+def test_bmm_explicit_blocks():
+    x = rand(0, 2, 64, 32)
+    y = rand(1, 2, 32, 16)
+    out = mm_k.bmm(x, y, bm=16, bk=8, bn=8)
+    assert_close(out, ref.bmm(x, y), tol=1e-4)
+
+
+def test_matmul_2d():
+    x = rand(2, 48, 24)
+    y = rand(3, 24, 12)
+    assert_close(mm_k.matmul(x, y), ref.matmul(x, y), tol=1e-4)
+
+
+def test_block_of_divides():
+    for dim in [1, 2, 3, 6, 48, 100, 128, 384, 1000]:
+        b = mm_k.block_of(dim)
+        assert dim % b == 0
+        assert b <= 128
+
+
+def test_vmem_budget_default_blocks():
+    # default 128-blocks: 4 buffers, 256 KiB — far inside 16 MiB VMEM
+    floats = mm_k.vmem_floats(128, 128, 128)
+    assert floats * 4 <= 16 * 2**20 / 8
+
+
+# ---------- elementwise / map / reduce ----------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    op=st.sampled_from(["add", "mul", "sub", "div"]),
+    n=st.sampled_from([16, 128, 1024, 4096, 5000]),
+    seed=st.integers(0, 100),
+)
+def test_ew_matches_ref(op, n, seed):
+    x = rand(seed, n)
+    y = rand(seed + 7, n) + 3.0  # keep div well-conditioned
+    assert_close(ew_k.ew(op, x, y), ref.ew(op, x, y), tol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    op=st.sampled_from(["exp", "relu", "silu", "square"]),
+    n=st.sampled_from([16, 1024, 3000]),
+    seed=st.integers(0, 100),
+)
+def test_map_matches_ref(op, n, seed):
+    x = rand(seed, n)
+    assert_close(ew_k.unary_map(op, x), ref.unary_map(op, x), tol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    op=st.sampled_from(["sum", "max"]),
+    rows=st.sampled_from([1, 8, 64, 100]),
+    cols=st.sampled_from([4, 64, 256]),
+    seed=st.integers(0, 100),
+)
+def test_reduce_matches_ref(op, rows, cols, seed):
+    x = rand(seed, rows, cols)
+    assert_close(ew_k.reduce_last(op, x), ref.reduce_last(op, x), tol=1e-4)
+
+
+# ---------- softmax / attention ----------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.sampled_from([1, 8, 64]),
+    cols=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 100),
+)
+def test_softmax_matches_ref(rows, cols, seed):
+    x = rand(seed, rows, cols) * 5.0
+    out = sm_k.softmax(x)
+    assert_close(out, ref.softmax(x), tol=1e-5)
+    # rows sum to 1
+    np.testing.assert_allclose(np.asarray(jnp.sum(out, axis=-1)), 1.0, rtol=1e-5)
+
+
+def test_softmax_extreme_values_stable():
+    x = jnp.array([[1e4, 1e4 - 1.0, 0.0], [-1e4, 0.0, 1e4]], dtype=jnp.float32)
+    out = np.asarray(sm_k.softmax(x))
+    assert np.isfinite(out).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 100),
+)
+def test_attention_tile_matches_ref(s, d, seed):
+    q, k, v = (rand(seed + i, s, d) for i in range(3))
+    assert_close(sm_k.attention_tile(q, k, v), ref.attention_tile(q, k, v), tol=1e-4)
+
+
+# ---------- dtype robustness ----------
+
+def test_bmm_rejects_shape_mismatch():
+    x = rand(0, 1, 8, 4)
+    y = rand(1, 1, 8, 4)  # bad inner dim
+    with pytest.raises(AssertionError):
+        mm_k.bmm(x, y)

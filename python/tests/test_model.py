@@ -1,0 +1,54 @@
+"""Layer-2 correctness: the fused model entry points vs jax autodiff and
+shape checks on every kernel entry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def test_bmm_entry_shape():
+    (out,) = model.bmm(rand(0, 2, 16, 8), rand(1, 2, 8, 4))
+    assert out.shape == (2, 16, 4)
+
+
+def test_ffnn_tile_step_matches_autodiff():
+    batch, feat, hid, cls = 8, 12, 10, 4
+    x = rand(0, batch, feat)
+    w1 = rand(1, feat, hid) * 0.5
+    w2 = rand(2, hid, cls) * 0.5
+    t = rand(3, batch, cls)
+
+    loss, dw1, dw2 = model.ffnn_tile_step(x, w1, w2, t)
+
+    def loss_fn(w1_, w2_):
+        h1 = jnp.maximum(x @ w1_, 0.0)
+        y = h1 @ w2_
+        return 0.5 / batch * jnp.sum((y - t) ** 2)
+
+    want_loss = loss_fn(w1, w2)
+    gw1, gw2 = jax.grad(loss_fn, argnums=(0, 1))(w1, w2)
+    np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw1), np.asarray(gw1), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw2), np.asarray(gw2), rtol=1e-3, atol=1e-4)
+
+
+def test_softmax_entry():
+    (out,) = model.softmax(rand(0, 8, 16))
+    np.testing.assert_allclose(np.asarray(out.sum(axis=-1)), 1.0, rtol=1e-5)
+
+
+def test_unary_and_ew_factories():
+    x = rand(0, 64)
+    y = rand(1, 64)
+    (s,) = model.ew("add")(x, y)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(x + y), rtol=1e-6)
+    (r,) = model.unary_map("relu")(x)
+    assert (np.asarray(r) >= 0).all()
+    (m,) = model.reduce_last("max")(x.reshape(8, 8))
+    assert m.shape == (8,)

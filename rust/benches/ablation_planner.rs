@@ -1,0 +1,110 @@
+//! Planner ablations (DESIGN.md design-choice studies):
+//!
+//!  1. exact tree DP vs linearized DP vs linearized+off-path-aware vs
+//!     greedy — cost quality and planning time;
+//!  2. the §8.1 power-of-two restriction: behaviour when the worker count
+//!     is not a power of two (p rounded up, paper's recommendation);
+//!  3. placement policy: locality-greedy vs round-robin.
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::decomp::{plan_graph, PlanMode, PlannerConfig};
+use eindecomp::einsum::graph::EinGraph;
+use eindecomp::einsum::macros::multihead_attention;
+use eindecomp::models::llama::{llama_graph, LlamaConfig};
+use eindecomp::models::matchain::chain_graph;
+use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::taskgraph::placement::Policy;
+
+fn mha_graph() -> EinGraph {
+    let (s, a, h, d) = (1024, 512, 8, 64);
+    let mut g = EinGraph::new();
+    let q = g.input("Q", vec![s, a]);
+    let k = g.input("K", vec![s, a]);
+    let v = g.input("V", vec![s, a]);
+    let wq = g.input("WQ", vec![a, h, d]);
+    let wk = g.input("WK", vec![a, h, d]);
+    let wv = g.input("WV", vec![a, h, d]);
+    let wo = g.input("WO", vec![a, h, d]);
+    multihead_attention(&mut g, "mha", q, k, v, wq, wk, wv, wo, false).unwrap();
+    g
+}
+
+fn ablate_modes(name: &str, g: &EinGraph, p: usize) {
+    println!("\n--- planner modes on {name} (p={p}) ---");
+    println!("{:<28} {:>16} {:>10}", "mode", "total cost", "plan ms");
+    let modes: Vec<(&str, PlannerConfig)> = vec![
+        (
+            "exact-tree (if tree)",
+            PlannerConfig { p, mode: PlanMode::ExactTree, off_path_cost: false },
+        ),
+        (
+            "linearized (paper §8.4)",
+            PlannerConfig { p, mode: PlanMode::Linearized, off_path_cost: false },
+        ),
+        (
+            "linearized + off-path",
+            PlannerConfig { p, mode: PlanMode::Linearized, off_path_cost: true },
+        ),
+        (
+            "greedy",
+            PlannerConfig { p, mode: PlanMode::Greedy, off_path_cost: false },
+        ),
+    ];
+    for (label, cfg) in modes {
+        let t0 = std::time::Instant::now();
+        match plan_graph(g, &cfg) {
+            Ok(plan) => println!(
+                "{label:<28} {:>16.0} {:>10.2}",
+                plan.predicted_cost,
+                t0.elapsed().as_secs_f64() * 1e3
+            ),
+            Err(e) => println!("{label:<28} n/a ({e})"),
+        }
+    }
+}
+
+fn main() {
+    // 1. modes on a tree (chain), a DAG (MHA), and a deep DAG (LLaMA 4L)
+    let chain = chain_graph(2560, true).unwrap();
+    ablate_modes("matrix chain (tree)", &chain.graph, 16);
+    ablate_modes("multi-head attention (DAG)", &mha_graph(), 8);
+    let llama = llama_graph(&LlamaConfig {
+        layers: 4,
+        ..LlamaConfig::llama7b(8, 1024)
+    })
+    .unwrap();
+    ablate_modes("LLaMA 4-layer stack (DAG)", &llama.graph, 8);
+
+    // 2. non-power-of-two worker counts: plan at p rounded up, run on the
+    //    actual worker count (paper §8.1's recommendation)
+    println!("\n--- non-pow2 workers: chain s=2560 skewed, 12 workers ---");
+    let roles = LabelRoles::by_convention();
+    let net = NetworkProfile::cpu_cluster();
+    for plan_p in [8usize, 16] {
+        let plan = assign(&chain.graph, &Strategy::EinDecomp, plan_p, &roles).unwrap();
+        let cluster = Cluster::new(12, net.clone());
+        let rep = cluster.dry_run(&chain.graph, &plan).unwrap();
+        println!(
+            "plan p={plan_p:<3} on 12 workers: makespan {:.6}s, eff {:.0}%",
+            rep.sim_makespan_s,
+            rep.efficiency() * 100.0
+        );
+    }
+
+    // 3. placement policy
+    println!("\n--- placement policy: LLaMA 4L, 8 workers ---");
+    let plan = assign(&llama.graph, &Strategy::EinDecomp, 8, &roles).unwrap();
+    for (name, pol) in [
+        ("locality-greedy", Policy::LocalityGreedy),
+        ("round-robin", Policy::RoundRobin),
+    ] {
+        let mut cluster = Cluster::new(8, net.clone());
+        cluster.placement = pol;
+        let rep = cluster.dry_run(&llama.graph, &plan).unwrap();
+        println!(
+            "{name:<16} moved {:>8.1} MiB, makespan {:.6}s",
+            rep.bytes_moved as f64 / (1 << 20) as f64,
+            rep.sim_makespan_s
+        );
+    }
+}

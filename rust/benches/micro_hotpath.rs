@@ -1,0 +1,106 @@
+//! Hot-path microbenchmarks used by the §Perf pass (EXPERIMENTS.md):
+//! GEMM throughput, permutation bandwidth, einsum dispatch, lowering and
+//! planning rates. Run with `cargo bench micro` (harness=false).
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::einsum::expr::EinSum;
+use eindecomp::einsum::label::labels;
+use eindecomp::models::llama::{llama_graph, LlamaConfig};
+use eindecomp::runtime::gemm::sgemm;
+use eindecomp::runtime::native::eval_einsum;
+use eindecomp::runtime::{Backend, DispatchEngine, KernelEngine};
+use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::tensor::Tensor;
+
+fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    // warmup
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    println!("=== L3 hot-path microbenchmarks ===");
+
+    // 1. raw GEMM
+    for n in [128usize, 256, 512, 1024] {
+        let a = Tensor::random(&[n, n], 1);
+        let b = Tensor::random(&[n, n], 2);
+        let mut c = vec![0.0f32; n * n];
+        let dt = time(
+            || sgemm(n, n, n, 1.0, a.data(), b.data(), 0.0, &mut c),
+            if n <= 256 { 20 } else { 5 },
+        );
+        let gflops = 2.0 * (n as f64).powi(3) / dt / 1e9;
+        println!("sgemm {n:>5}^3: {:>8.2} ms  {gflops:>7.2} GFLOP/s", dt * 1e3);
+    }
+
+    // 2. permutation bandwidth (the "unpack" step)
+    for n in [256usize, 1024] {
+        let t = Tensor::random(&[n, n], 3);
+        let dt = time(|| { let _ = t.permute(&[1, 0]).unwrap(); }, 10);
+        let gbps = (n * n * 4) as f64 / dt / 1e9;
+        println!("permute {n:>4}x{n:<4}: {:>8.3} ms  {gbps:>7.2} GB/s", dt * 1e3);
+    }
+
+    // 3. einsum dispatch overhead: BMM path on small tiles
+    let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+    let x = Tensor::random(&[64, 64], 4);
+    let y = Tensor::random(&[64, 64], 5);
+    let dt = time(|| { let _ = eval_einsum(&op, &[&x, &y]).unwrap(); }, 200);
+    println!("eval_einsum 64^3 (native): {:>8.1} us", dt * 1e6);
+    if let Ok(engine) = DispatchEngine::new(Backend::Auto, "artifacts") {
+        if engine.has_pjrt() {
+            let dt = time(|| { let _ = engine.eval(&op, &[&x, &y]).unwrap(); }, 200);
+            println!("eval_einsum 64^3 (pjrt):   {:>8.1} us", dt * 1e6);
+        }
+    }
+
+    // 4. planning + lowering throughput on a 32-layer LLaMA graph
+    let model = llama_graph(&LlamaConfig::llama7b(8, 1024)).unwrap();
+    println!(
+        "LLaMA-7B full graph: {} vertices",
+        model.graph.len()
+    );
+    let roles = LabelRoles::by_convention();
+    let t0 = std::time::Instant::now();
+    let plan = assign(&model.graph, &Strategy::EinDecomp, 8, &roles).unwrap();
+    println!("plan 32-layer graph (p=8): {:>8.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let cluster = Cluster::new(8, NetworkProfile::gpu_server_v100());
+    let t0 = std::time::Instant::now();
+    let tg = cluster.lower(&model.graph, &plan).unwrap();
+    println!(
+        "lower+place ({} tasks):    {:>8.1} ms",
+        tg.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let t0 = std::time::Instant::now();
+    let _ = cluster.model(&tg);
+    println!("model timeline:            {:>8.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    // 5. end-to-end small real step (executor overhead)
+    let tiny = llama_graph(&LlamaConfig {
+        layers: 2,
+        batch: 2,
+        seq: 32,
+        model_dim: 64,
+        heads: 2,
+        head_dim: 32,
+        ffn_dim: 128,
+    })
+    .unwrap();
+    let inputs = eindecomp::models::llama::llama_inputs(&tiny, 6);
+    let plan = assign(&tiny.graph, &Strategy::EinDecomp, 4, &roles).unwrap();
+    let cluster = Cluster::new(4, NetworkProfile::loopback());
+    let engine = eindecomp::runtime::NativeEngine::new();
+    let dt = time(
+        || {
+            let _ = cluster.execute(&tiny.graph, &plan, &engine, &inputs).unwrap();
+        },
+        5,
+    );
+    println!("tiny llama step (real):    {:>8.1} ms", dt * 1e3);
+}

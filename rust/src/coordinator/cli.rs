@@ -1,0 +1,287 @@
+//! Hand-rolled CLI for the `eindecomp` binary (no external arg-parsing
+//! crates in this container).
+//!
+//! ```text
+//! eindecomp plan    --model chain|chain-skewed|ffnn|llama --p 16 [--scale N] [--compare]
+//! eindecomp run     --model ...         --workers 8 [--backend native|auto]
+//! eindecomp program --file prog.ein     [--p 8] [--run]
+//! eindecomp help
+//! ```
+
+use crate::decomp::baselines::{assign, LabelRoles, Strategy};
+use crate::einsum::parser::parse_program;
+use crate::error::{Error, Result};
+use crate::models::{ffnn, llama, matchain};
+use crate::runtime::Backend;
+use crate::sim::network::NetworkProfile;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args {
+            cmd: argv.first().cloned().unwrap_or_else(|| "help".into()),
+            flags: HashMap::new(),
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Parse(format!("expected --flag, got {:?}", argv[i])))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                a.flags.insert(k.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                a.flags.insert(k.to_string(), "true".into());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, k: &str) -> bool {
+        matches!(self.get(k), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+fn strategy_by_name(name: &str) -> Result<Strategy> {
+    Ok(match name {
+        "eindecomp" => Strategy::EinDecomp,
+        "eindecomp-lin" => Strategy::EinDecompLinearized,
+        "greedy" => Strategy::Greedy,
+        "sqrt" => Strategy::Sqrt,
+        "data-parallel" => Strategy::DataParallel,
+        "megatron" => Strategy::Megatron,
+        "sequence" => Strategy::Sequence,
+        "attention" => Strategy::AttentionHead,
+        other => {
+            return Err(Error::Parse(format!(
+                "unknown strategy {other:?} (try eindecomp, sqrt, data-parallel, megatron, sequence, attention, greedy)"
+            )))
+        }
+    })
+}
+
+fn build_model(args: &Args) -> Result<crate::einsum::graph::EinGraph> {
+    let scale = args.get_usize("scale", 64);
+    match args.get("model").unwrap_or("chain") {
+        "chain" => Ok(matchain::chain_graph(scale, false)?.graph),
+        "chain-skewed" => Ok(matchain::chain_graph(scale.max(10), true)?.graph),
+        "ffnn" => {
+            let step = ffnn::ffnn_step(
+                args.get_usize("batch", 128),
+                args.get_usize("features", 1024),
+                args.get_usize("hidden", 256),
+                args.get_usize("classes", 64),
+            )?;
+            Ok(step.graph)
+        }
+        "llama" => {
+            let cfg = llama::LlamaConfig::llama7b(
+                args.get_usize("batch", 4),
+                args.get_usize("seq", 1024),
+            )
+            .scaled(args.get_usize("shrink", 16), args.get_usize("layer-shrink", 8));
+            Ok(llama::llama_graph(&cfg)?.graph)
+        }
+        other => Err(Error::Parse(format!("unknown model {other:?}"))),
+    }
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn main_with_args(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "plan" => cmd_plan(&args),
+        "run" => cmd_run(&args),
+        "program" => cmd_program(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let g = build_model(args)?;
+    let p = args.get_usize("p", 16);
+    let roles = LabelRoles::by_convention();
+    println!(
+        "graph: {} vertices, {:.3} Gflop total",
+        g.len(),
+        g.total_flops() / 1e9
+    );
+    let strategies: Vec<Strategy> = if args.get_bool("compare") {
+        vec![
+            Strategy::EinDecomp,
+            Strategy::Greedy,
+            Strategy::Sqrt,
+            Strategy::DataParallel,
+            Strategy::Megatron,
+            Strategy::Sequence,
+            Strategy::AttentionHead,
+        ]
+    } else {
+        vec![strategy_by_name(args.get("strategy").unwrap_or("eindecomp"))?]
+    };
+    println!("{:<16} {:>18} {:>10}", "strategy", "predicted floats", "plan ms");
+    for s in strategies {
+        let t0 = std::time::Instant::now();
+        match assign(&g, &s, p, &roles) {
+            Ok(plan) => println!(
+                "{:<16} {:>18.0} {:>10.2}",
+                s.name(),
+                plan.predicted_cost,
+                t0.elapsed().as_secs_f64() * 1e3
+            ),
+            Err(e) => println!("{:<16} failed: {e}", s.name()),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    use super::driver::{Driver, DriverConfig};
+    let g = build_model(args)?;
+    let workers = args.get_usize("workers", 4);
+    let backend = match args.get("backend").unwrap_or("native") {
+        "auto" => Backend::Auto,
+        "pjrt" => Backend::PjrtStrict,
+        _ => Backend::Native,
+    };
+    let cfg = DriverConfig {
+        workers,
+        p: args.get_usize("p", workers),
+        strategy: strategy_by_name(args.get("strategy").unwrap_or("eindecomp"))?,
+        backend,
+        network: NetworkProfile::cpu_cluster(),
+        ..Default::default()
+    };
+    let driver = Driver::new(cfg)?;
+    // random inputs for every graph input
+    let mut inputs = HashMap::new();
+    for (i, v) in g.inputs().into_iter().enumerate() {
+        inputs.insert(v, Tensor::random(&g.vertex(v).bound, 100 + i as u64));
+    }
+    let (_outs, rep) = driver.run(&g, &inputs)?;
+    println!("strategy       : {}", rep.strategy);
+    println!("plan cost      : {:.0} floats", rep.plan_cost);
+    println!("plan time      : {:.2} ms", rep.plan_s * 1e3);
+    println!("report         : {}", rep.exec.summary());
+    println!("json           : {}", rep.to_json().render());
+    Ok(())
+}
+
+fn cmd_program(args: &Args) -> Result<()> {
+    let path = args
+        .get("file")
+        .ok_or_else(|| Error::Parse("program needs --file".into()))?;
+    let text = std::fs::read_to_string(path)?;
+    let g = parse_program(&text)?;
+    println!("parsed {} vertices", g.len());
+    let p = args.get_usize("p", 8);
+    let plan = assign(&g, &Strategy::EinDecomp, p, &LabelRoles::by_convention())?;
+    println!("predicted cost: {:.0} floats", plan.predicted_cost);
+    for vert in g.vertices() {
+        if let Some(d) = plan.parts.get(&vert.id) {
+            println!("  {:<24} d = {:?}", vert.name, d);
+        }
+    }
+    if args.get_bool("run") {
+        use super::driver::{Driver, DriverConfig};
+        let driver = Driver::new(DriverConfig {
+            workers: p,
+            p,
+            ..Default::default()
+        })?;
+        let mut inputs = HashMap::new();
+        for (i, v) in g.inputs().into_iter().enumerate() {
+            inputs.insert(v, Tensor::random(&g.vertex(v).bound, i as u64));
+        }
+        let (_, rep) = driver.run(&g, &inputs)?;
+        println!("report: {}", rep.exec.summary());
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        r#"eindecomp — EinDecomp (PVLDB 2024) reproduction
+
+USAGE:
+  eindecomp plan    --model chain|chain-skewed|ffnn|llama [--p N] [--compare]
+                    [--scale N] [--batch N] [--seq N] [--shrink N]
+  eindecomp run     --model ... [--workers N] [--p N] [--strategy S]
+                    [--backend native|auto|pjrt]
+  eindecomp program --file prog.ein [--p N] [--run]
+
+STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,
+            megatron, sequence, attention
+
+Benches regenerating the paper's figures: `cargo bench` (see EXPERIMENTS.md)."#
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags() {
+        let argv: Vec<String> = ["plan", "--model", "chain", "--p", "8", "--compare"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        assert_eq!(a.cmd, "plan");
+        assert_eq!(a.get("model"), Some("chain"));
+        assert_eq!(a.get_usize("p", 0), 8);
+        assert!(a.get_bool("compare"));
+    }
+
+    #[test]
+    fn bad_flag_rejected() {
+        let argv: Vec<String> = ["plan", "model"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn plan_command_runs() {
+        let argv: Vec<String> = ["plan", "--model", "chain", "--scale", "32", "--p", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn strategies_resolve() {
+        for s in [
+            "eindecomp",
+            "sqrt",
+            "data-parallel",
+            "megatron",
+            "sequence",
+            "attention",
+            "greedy",
+        ] {
+            strategy_by_name(s).unwrap();
+        }
+        assert!(strategy_by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! High-level driver tying the whole stack together: choose a
+//! decomposition (EinDecomp or a baseline), lower to a task graph, place,
+//! execute on the simulated cluster with the configured kernel backend,
+//! and report. This is the entry point examples and benches use.
+
+use crate::decomp::baselines::{assign, LabelRoles, Strategy};
+use crate::decomp::Plan;
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::error::Result;
+use crate::runtime::{Backend, DispatchEngine};
+use crate::sim::cluster::{Cluster, ExecReport};
+use crate::sim::memory::{model_with_memory, MemoryConfig};
+use crate::sim::network::NetworkProfile;
+use crate::taskgraph::placement::Policy;
+use crate::tensor::Tensor;
+use crate::util::Json;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+/// Everything a run needs.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// Simulated workers (devices).
+    pub workers: usize,
+    /// Planner kernel-call target (defaults to `workers`).
+    pub p: usize,
+    pub strategy: Strategy,
+    pub backend: Backend,
+    pub artifact_dir: PathBuf,
+    pub network: NetworkProfile,
+    pub placement: Policy,
+    pub roles: LabelRoles,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            workers: 4,
+            p: 4,
+            strategy: Strategy::EinDecomp,
+            backend: Backend::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            network: NetworkProfile::cpu_cluster(),
+            placement: Policy::LocalityGreedy,
+            roles: LabelRoles::by_convention(),
+        }
+    }
+}
+
+/// Report of one full run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub strategy: String,
+    /// Planner's predicted communication bound (floats).
+    pub plan_cost: f64,
+    /// Planning wall time, seconds.
+    pub plan_s: f64,
+    pub exec: ExecReport,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("strategy".into(), Json::str(self.strategy.clone())),
+            ("plan_cost_floats".into(), Json::num(self.plan_cost)),
+            ("plan_s".into(), Json::num(self.plan_s)),
+            ("sim_makespan_s".into(), Json::num(self.exec.sim_makespan_s)),
+            ("wall_s".into(), Json::num(self.exec.wall_s)),
+            ("bytes_moved".into(), Json::num(self.exec.bytes_moved as f64)),
+            ("bytes_join".into(), Json::num(self.exec.bytes_join as f64)),
+            ("bytes_agg".into(), Json::num(self.exec.bytes_agg as f64)),
+            (
+                "bytes_repart".into(),
+                Json::num(self.exec.bytes_repart as f64),
+            ),
+            ("kernel_calls".into(), Json::num(self.exec.kernel_calls as f64)),
+            ("tasks".into(), Json::num(self.exec.tasks as f64)),
+            ("efficiency".into(), Json::num(self.exec.efficiency())),
+        ])
+    }
+}
+
+/// Orchestrates plan + execute for a fixed configuration.
+pub struct Driver {
+    pub cfg: DriverConfig,
+    engine: DispatchEngine,
+    cluster: Cluster,
+}
+
+impl Driver {
+    pub fn new(cfg: DriverConfig) -> Result<Self> {
+        let engine = DispatchEngine::new(cfg.backend, &cfg.artifact_dir)?;
+        let mut cluster = Cluster::new(cfg.workers, cfg.network.clone());
+        cluster.placement = cfg.placement;
+        Ok(Driver {
+            cfg,
+            engine,
+            cluster,
+        })
+    }
+
+    pub fn engine(&self) -> &DispatchEngine {
+        &self.engine
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Plan the graph with the configured strategy.
+    pub fn plan(&self, g: &EinGraph) -> Result<(Plan, f64)> {
+        let t0 = std::time::Instant::now();
+        let plan = assign(g, &self.cfg.strategy, self.cfg.p, &self.cfg.roles)?;
+        Ok((plan, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Plan + execute for real; returns outputs keyed by vertex.
+    pub fn run(
+        &self,
+        g: &EinGraph,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
+        let (plan, plan_s) = self.plan(g)?;
+        let (outs, exec) = self.cluster.execute(g, &plan, &self.engine, inputs)?;
+        Ok((
+            outs,
+            RunReport {
+                strategy: plan.strategy.clone(),
+                plan_cost: plan.predicted_cost,
+                plan_s,
+                exec,
+            },
+        ))
+    }
+
+    /// Run an already-computed plan (for strategy sweeps that reuse one
+    /// planning pass).
+    pub fn run_with_plan(
+        &self,
+        g: &EinGraph,
+        plan: &Plan,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
+        let (outs, exec) = self.cluster.execute(g, plan, &self.engine, inputs)?;
+        Ok((
+            outs,
+            RunReport {
+                strategy: plan.strategy.clone(),
+                plan_cost: plan.predicted_cost,
+                plan_s: 0.0,
+                exec,
+            },
+        ))
+    }
+
+    /// Plan + model only (no tensors) — used at paper-scale shapes.
+    pub fn dry_run(&self, g: &EinGraph) -> Result<RunReport> {
+        let (plan, plan_s) = self.plan(g)?;
+        let exec = self.cluster.dry_run(g, &plan)?;
+        Ok(RunReport {
+            strategy: plan.strategy.clone(),
+            plan_cost: plan.predicted_cost,
+            plan_s,
+            exec,
+        })
+    }
+
+    /// Dry run under a device-memory budget (Experiment 4 / Fig. 11).
+    pub fn dry_run_with_memory(
+        &self,
+        g: &EinGraph,
+        mem: &MemoryConfig,
+        weights: &HashSet<VertexId>,
+    ) -> Result<RunReport> {
+        let (plan, plan_s) = self.plan(g)?;
+        let tg = self.cluster.lower(g, &plan)?;
+        let exec = model_with_memory(&tg, &self.cfg.network, self.cfg.workers, mem, weights);
+        Ok(RunReport {
+            strategy: plan.strategy.clone(),
+            plan_cost: plan.predicted_cost,
+            plan_s,
+            exec,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::matchain::{chain_graph, chain_inputs, chain_reference};
+
+    #[test]
+    fn driver_end_to_end_chain() {
+        let chain = chain_graph(40, false).unwrap();
+        let driver = Driver::new(DriverConfig::default()).unwrap();
+        let inputs = chain_inputs(&chain, 1);
+        let (outs, rep) = driver.run(&chain.graph, &inputs).unwrap();
+        let want = chain_reference(&chain, &inputs).unwrap();
+        assert!(outs[&chain.z].allclose(&want, 1e-3, 1e-4));
+        assert!(rep.plan_cost > 0.0);
+        assert!(rep.exec.kernel_calls >= 4);
+        // JSON report renders
+        let j = rep.to_json().render();
+        assert!(j.contains("kernel_calls"));
+    }
+
+    #[test]
+    fn strategy_sweep_runs() {
+        let chain = chain_graph(40, true).unwrap();
+        let inputs = chain_inputs(&chain, 2);
+        let want = chain_reference(&chain, &inputs).unwrap();
+        for strategy in [Strategy::EinDecomp, Strategy::Sqrt, Strategy::Greedy] {
+            let driver = Driver::new(DriverConfig {
+                strategy: strategy.clone(),
+                ..Default::default()
+            })
+            .unwrap();
+            let (outs, _) = driver.run(&chain.graph, &inputs).unwrap();
+            assert!(
+                outs[&chain.z].allclose(&want, 1e-3, 1e-4),
+                "{}",
+                strategy.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! The L3 coordinator: configuration, the high-level [`driver::Driver`]
+//! (plan → lower → place → execute → report), and the CLI front-end used
+//! by the `eindecomp` binary.
+
+pub mod cli;
+pub mod driver;

@@ -1,0 +1,112 @@
+//! Synthetic workload data.
+//!
+//! The paper's Experiment 2 uses AmazonCat-14K (14,588 labels, 597,540
+//! features). That dataset is not available here, so we generate synthetic
+//! batches with matching dimensions: the experiment measures *throughput
+//! versus feature count*, which depends on shapes, not values (see
+//! DESIGN.md §Deviations). A planted linear model makes the learning
+//! problem solvable, so the end-to-end training example shows a genuinely
+//! decreasing loss curve.
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A synthetic classifier batch: `X [batch, features]` with the given
+/// nonzero density, and soft targets `T [batch, classes]` produced by a
+/// planted random linear map (so the task is learnable).
+pub fn classifier_batch(
+    batch: usize,
+    features: usize,
+    classes: usize,
+    density: f32,
+    seed: u64,
+) -> (Tensor, Tensor) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut x = Tensor::zeros(&[batch, features]);
+    for v in x.data_mut() {
+        if rng.next_f32() < density {
+            *v = rng.next_centered() * 2.0;
+        }
+    }
+    // planted weights: deterministic per (features, classes), independent
+    // of the batch seed so every batch shares the same ground truth
+    let mut wrng = Rng::seed_from_u64(0xFEED ^ (features as u64) ^ ((classes as u64) << 20));
+    let planted: Vec<f32> = (0..features * classes)
+        .map(|_| wrng.next_centered() * (2.0 / features as f32).sqrt() * 4.0)
+        .collect();
+    let mut t = Tensor::zeros(&[batch, classes]);
+    for bi in 0..batch {
+        for c in 0..classes {
+            let mut acc = 0.0f32;
+            for f in 0..features {
+                let xv = x.at(&[bi, f]);
+                if xv != 0.0 {
+                    acc += xv * planted[f * classes + c];
+                }
+            }
+            t.set(&[bi, c], acc.tanh()); // squash into a bounded target
+        }
+    }
+    (x, t)
+}
+
+/// AmazonCat-14K-like dimensions (paper §9.2 Experiment 2).
+pub struct AmazonCatDims;
+
+impl AmazonCatDims {
+    pub const LABELS: usize = 14_588;
+    pub const FEATURES: usize = 597_540;
+    pub const HIDDEN: usize = 8_192;
+}
+
+/// A synthetic token stream for the tiny-corpus transformer demo: a
+/// repeating Markov-ish pattern so a model can learn something.
+pub fn token_stream(len: usize, vocab: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(len);
+    let mut state = 0usize;
+    for _ in 0..len {
+        // mostly deterministic cycle with occasional jumps
+        state = if rng.next_f32() < 0.85 {
+            (state * 7 + 3) % vocab
+        } else {
+            rng.next_below(vocab)
+        };
+        out.push(state);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_density() {
+        let (x, t) = classifier_batch(32, 100, 8, 0.3, 1);
+        assert_eq!(x.shape(), &[32, 100]);
+        assert_eq!(t.shape(), &[32, 8]);
+        let nz = x.data().iter().filter(|&&v| v != 0.0).count();
+        let frac = nz as f32 / x.len() as f32;
+        assert!((0.2..0.4).contains(&frac), "density {frac}");
+    }
+
+    #[test]
+    fn targets_bounded_and_learnable() {
+        let (_, t) = classifier_batch(16, 50, 4, 0.5, 2);
+        assert!(t.data().iter().all(|v| v.abs() <= 1.0));
+        // same planted model across seeds: two batches with identical X
+        // rows would give identical targets; spot-check determinism
+        let (x1, t1) = classifier_batch(4, 10, 2, 1.0, 3);
+        let (x2, t2) = classifier_batch(4, 10, 2, 1.0, 3);
+        assert_eq!(x1, x2);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn token_stream_in_vocab() {
+        let toks = token_stream(1000, 64, 4);
+        assert_eq!(toks.len(), 1000);
+        assert!(toks.iter().all(|&t| t < 64));
+    }
+}

@@ -1,0 +1,437 @@
+//! Baseline decomposition strategies (paper §9): the bespoke schemes
+//! EinDecomp is compared against. Each produces a full [`Plan`] over the
+//! same EinGraph, so every comparison isolates the *decomposition* — the
+//! paper's own methodology for its Experiment 3 ("all three of these
+//! methods were implemented on top of Einsummable").
+//!
+//! Strategies assign partitionings by label *role* (batch / sequence /
+//! head / hidden / feature); model builders supply a [`LabelRoles`]
+//! describing their graphs.
+
+use super::{plan_graph, Plan, PlanMode, PlannerConfig};
+use crate::einsum::expr::EinSum;
+use crate::einsum::graph::EinGraph;
+use crate::einsum::label::Label;
+use crate::error::Result;
+
+/// Semantic roles of labels in a model graph, used by role-driven
+/// baselines (data parallel = split batch, Megatron = split heads/hidden,
+/// sequence = split sequence, ...).
+#[derive(Clone, Debug, Default)]
+pub struct LabelRoles {
+    pub batch: Vec<Label>,
+    pub seq: Vec<Label>,
+    pub head: Vec<Label>,
+    pub hidden: Vec<Label>,
+    pub feature: Vec<Label>,
+}
+
+impl LabelRoles {
+    /// Default name-based roles: `b`→batch, `s`/`s'`→seq, `h`→head,
+    /// `f`→hidden, `a`→feature.
+    pub fn by_convention() -> Self {
+        LabelRoles {
+            batch: vec![Label::new("b")],
+            seq: vec![Label::new("s"), Label::new("s'")],
+            head: vec![Label::new("h")],
+            hidden: vec![Label::new("f")],
+            feature: vec![Label::new("a")],
+        }
+    }
+}
+
+/// A decomposition strategy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// The paper's algorithm (exact DP on trees, linearized on DAGs).
+    EinDecomp,
+    /// EinDecomp restricted to the linearized DP (ablation).
+    EinDecompLinearized,
+    /// Per-vertex local greedy (ablation).
+    Greedy,
+    /// "SQRT": slice every tensor sqrt(p) x sqrt(p) (paper Experiment 1).
+    /// For square matmuls this induces the 3D-algorithm-style co-partition.
+    Sqrt,
+    /// Classic data parallelism: shard batch labels, replicate weights.
+    DataParallel,
+    /// Megatron-style tensor/model parallelism: shard heads in attention
+    /// and the hidden dimension in feed-forward blocks.
+    Megatron,
+    /// Shard the sequence dimension (paper's "sequence" baseline).
+    Sequence,
+    /// Shard attention heads only; sequence elsewhere (paper's
+    /// "attention" baseline).
+    AttentionHead,
+    /// Dask-like fixed chunking: split every dimension into tiles of at
+    /// most `chunk` elements, regardless of `p`.
+    DaskLike { chunk: usize },
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::EinDecomp => "eindecomp".into(),
+            Strategy::EinDecompLinearized => "eindecomp-lin".into(),
+            Strategy::Greedy => "greedy".into(),
+            Strategy::Sqrt => "sqrt".into(),
+            Strategy::DataParallel => "data-parallel".into(),
+            Strategy::Megatron => "megatron".into(),
+            Strategy::Sequence => "sequence".into(),
+            Strategy::AttentionHead => "attention".into(),
+            Strategy::DaskLike { chunk } => format!("dask-chunk{chunk}"),
+        }
+    }
+}
+
+/// Assign a plan for `g` under `strategy` with `p` processors.
+pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -> Result<Plan> {
+    match strategy {
+        // EinDecomp default: exact DP on trees; on DAGs, a small portfolio
+        // — the linearized DP *with* cross-path cost awareness
+        // (off_path_cost, strictly better-informed than the paper's §8.4
+        // which ignores the black edges of its Fig. 6) AND the local
+        // greedy, keeping whichever the full cost model scores lower
+        // (greedy's complete producer visibility wins on wide DAGs, the
+        // path DP on deep stacks; see the ablation_planner bench). The
+        // paper-faithful variant is `EinDecompLinearized`.
+        Strategy::EinDecomp => {
+            let a = plan_graph(
+                g,
+                &PlannerConfig {
+                    p,
+                    mode: PlanMode::Auto,
+                    off_path_cost: true,
+                },
+            )?;
+            if g.is_tree_like() {
+                Ok(a)
+            } else {
+                let b = plan_graph(
+                    g,
+                    &PlannerConfig {
+                        p,
+                        mode: PlanMode::Greedy,
+                        off_path_cost: false,
+                    },
+                )?;
+                let mut best = if b.predicted_cost < a.predicted_cost { b } else { a };
+                best.strategy = "eindecomp".into();
+                Ok(best)
+            }
+        }
+        Strategy::EinDecompLinearized => plan_graph(
+            g,
+            &PlannerConfig {
+                p,
+                mode: PlanMode::Linearized,
+                off_path_cost: false,
+            },
+        ),
+        Strategy::Greedy => plan_graph(
+            g,
+            &PlannerConfig {
+                p,
+                mode: PlanMode::Greedy,
+                off_path_cost: false,
+            },
+        ),
+        Strategy::Sqrt => role_plan(g, p, strategy.name(), |_, _| RolePrefs::sqrt()),
+        Strategy::DataParallel => role_plan(g, p, strategy.name(), |roles_, _| RolePrefs {
+            tiers: vec![roles_.batch.clone(), roles_.seq.clone()],
+            fill: Fill::None,
+        })
+        .map(with_roles(roles)),
+        Strategy::Megatron => role_plan(g, p, strategy.name(), |roles_, _| RolePrefs {
+            tiers: vec![
+                [roles_.head.clone(), roles_.hidden.clone()].concat(),
+                [roles_.batch.clone(), roles_.seq.clone()].concat(),
+            ],
+            fill: Fill::None,
+        })
+        .map(with_roles(roles)),
+        Strategy::Sequence => role_plan(g, p, strategy.name(), |roles_, _| RolePrefs {
+            tiers: vec![roles_.seq.clone(), roles_.batch.clone()],
+            fill: Fill::None,
+        })
+        .map(with_roles(roles)),
+        Strategy::AttentionHead => role_plan(g, p, strategy.name(), |roles_, _| RolePrefs {
+            tiers: vec![
+                roles_.head.clone(),
+                roles_.seq.clone(),
+                roles_.batch.clone(),
+            ],
+            fill: Fill::None,
+        })
+        .map(with_roles(roles)),
+        Strategy::DaskLike { chunk } => dask_plan(g, *chunk),
+    }
+    .map(|mut plan| {
+        plan.finalize_inputs(g);
+        plan.predicted_cost = plan.total_cost(g).unwrap_or(f64::NAN);
+        plan
+    })
+}
+
+// role_plan's closure receives roles captured separately; this adapter is
+// a no-op that keeps the closure signatures simple.
+fn with_roles(_roles: &LabelRoles) -> impl Fn(Plan) -> Plan + '_ {
+    |p| p
+}
+
+/// How a role strategy picks labels to split.
+struct RolePrefs {
+    /// Priority tiers of labels: split tier 0's labels as far as possible,
+    /// then tier 1's, etc.
+    tiers: Vec<Vec<Label>>,
+    fill: Fill,
+}
+
+/// What to do if the preferred labels cannot absorb all of `p`.
+enum Fill {
+    /// Leave the vertex under-parallelized (classic data parallel with a
+    /// small batch really does idle processors).
+    None,
+    /// Split remaining output labels, largest remaining tile first (SQRT).
+    OutputLabels,
+}
+
+impl RolePrefs {
+    fn sqrt() -> Self {
+        RolePrefs {
+            tiers: vec![],
+            fill: Fill::OutputLabels,
+        }
+    }
+}
+
+/// Build a plan by assigning each vertex independently according to label
+/// preferences. The co-partitioning constraint is automatic because `d`
+/// is stored over unique labels.
+fn role_plan(
+    g: &EinGraph,
+    p: usize,
+    name: String,
+    prefs_for: impl Fn(&LabelRoles, &EinSum) -> RolePrefs,
+) -> Result<Plan> {
+    let roles = LabelRoles::by_convention();
+    let mut plan = Plan {
+        strategy: name,
+        ..Default::default()
+    };
+    for vert in g.vertices() {
+        if matches!(vert.op, EinSum::Input) {
+            continue;
+        }
+        let op = &vert.op;
+        let in_bounds: Vec<&[usize]> = vert
+            .inputs
+            .iter()
+            .map(|&i| g.vertex(i).bound.as_slice())
+            .collect();
+        let ubounds = super::viable::unique_label_bounds(op, &in_bounds);
+        let uniq = op.unique_labels();
+        let prefs = prefs_for(&roles, op);
+        let mut d = vec![1usize; uniq.len()];
+        let mut remaining = p.next_power_of_two();
+
+        // split preference tiers in order
+        for tier in &prefs.tiers {
+            for (i, l) in uniq.iter().enumerate() {
+                if !tier.contains(l) {
+                    continue;
+                }
+                while remaining > 1 && d[i] * 2 <= ubounds[i] {
+                    d[i] *= 2;
+                    remaining /= 2;
+                }
+            }
+            if remaining == 1 {
+                break;
+            }
+        }
+        // fill policy
+        if remaining > 1 {
+            match prefs.fill {
+                Fill::None => {}
+                Fill::OutputLabels => {
+                    // SQRT semantics: slice the *output* sqrt(p) x sqrt(p)
+                    // (and co-partition whatever that implies on inputs).
+                    // Repeatedly halve the output label with the largest
+                    // current tile.
+                    let lz = op.lz().unwrap().clone();
+                    while remaining > 1 {
+                        let mut best: Option<(usize, f64)> = None;
+                        for (i, l) in uniq.iter().enumerate() {
+                            if !lz.contains(l) || d[i] * 2 > ubounds[i] {
+                                continue;
+                            }
+                            let tile = ubounds[i] as f64 / d[i] as f64;
+                            if best.map_or(true, |(_, t)| tile > t) {
+                                best = Some((i, tile));
+                            }
+                        }
+                        match best {
+                            Some((i, _)) => {
+                                d[i] *= 2;
+                                remaining /= 2;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+        }
+        plan.parts.insert(vert.id, d);
+    }
+    Ok(plan)
+}
+
+/// Dask-like chunking: split every unique label so tiles are at most
+/// `chunk` long per dimension (power-of-two splits).
+fn dask_plan(g: &EinGraph, chunk: usize) -> Result<Plan> {
+    let mut plan = Plan {
+        strategy: format!("dask-chunk{chunk}"),
+        ..Default::default()
+    };
+    for vert in g.vertices() {
+        if matches!(vert.op, EinSum::Input) {
+            continue;
+        }
+        let op = &vert.op;
+        let in_bounds: Vec<&[usize]> = vert
+            .inputs
+            .iter()
+            .map(|&i| g.vertex(i).bound.as_slice())
+            .collect();
+        let ubounds = super::viable::unique_label_bounds(op, &in_bounds);
+        let d: Vec<usize> = ubounds
+            .iter()
+            .map(|&b| {
+                let mut parts = 1usize;
+                while b.div_ceil(parts) > chunk && parts * 2 <= b {
+                    parts *= 2;
+                }
+                parts
+            })
+            .collect();
+        plan.parts.insert(vert.id, d);
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::expr::JoinOp;
+    use crate::einsum::label::labels;
+
+    fn matmul_graph(m: usize, k: usize, n: usize) -> EinGraph {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![m, k]);
+        let b = g.input("B", vec![k, n]);
+        g.add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn sqrt_splits_output_square() {
+        let g = matmul_graph(64, 64, 64);
+        let plan = assign(&g, &Strategy::Sqrt, 16, &LabelRoles::by_convention()).unwrap();
+        let z = g.by_name("Z").unwrap();
+        let d = &plan.parts[&z];
+        // output labels i, k split 4x4; join label j untouched
+        assert_eq!(d, &vec![4, 1, 4]);
+    }
+
+    #[test]
+    fn sqrt_does_not_adapt_to_skew() {
+        // skewed matmul: the paper's point is SQRT still slices square.
+        let g = matmul_graph(1024, 8, 1024);
+        let sqrt = assign(&g, &Strategy::Sqrt, 16, &LabelRoles::by_convention()).unwrap();
+        let ein = assign(&g, &Strategy::EinDecomp, 16, &LabelRoles::by_convention()).unwrap();
+        assert!(
+            ein.predicted_cost <= sqrt.predicted_cost + 1e-6,
+            "eindecomp {} vs sqrt {}",
+            ein.predicted_cost,
+            sqrt.predicted_cost
+        );
+    }
+
+    #[test]
+    fn data_parallel_splits_batch_only() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![64, 32]); // [b, f_in]
+        let w = g.input("W", vec![32, 16]);
+        let b_lab = Label::new("b");
+        let f = Label::new("j");
+        let n = Label::new("k");
+        g.add(
+            "H",
+            EinSum::contraction(vec![b_lab, f], vec![f, n], vec![b_lab, n]),
+            vec![x, w],
+        )
+        .unwrap();
+        let plan = assign(&g, &Strategy::DataParallel, 8, &LabelRoles::by_convention()).unwrap();
+        let h = g.by_name("H").unwrap();
+        let d = &plan.parts[&h];
+        // unique labels [b, j, k]: batch split 8, weights untouched
+        assert_eq!(d, &vec![8, 1, 1]);
+    }
+
+    #[test]
+    fn all_strategies_produce_valid_plans() {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![32, 32]);
+        let b = g.input("B", vec![32, 32]);
+        let ab = g
+            .add(
+                "AB",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        let c = g.input("C", vec![32, 32]);
+        g.add(
+            "Z",
+            EinSum::elementwise(labels("i k"), labels("i k"), JoinOp::Add),
+            vec![ab, c],
+        )
+        .unwrap();
+        let roles = LabelRoles::by_convention();
+        for s in [
+            Strategy::EinDecomp,
+            Strategy::EinDecompLinearized,
+            Strategy::Greedy,
+            Strategy::Sqrt,
+            Strategy::DataParallel,
+            Strategy::Sequence,
+            Strategy::Megatron,
+            Strategy::AttentionHead,
+            Strategy::DaskLike { chunk: 8 },
+        ] {
+            let plan = assign(&g, &s, 4, &roles).unwrap();
+            assert_eq!(plan.parts.len(), 2, "{}", s.name());
+            assert!(plan.predicted_cost.is_finite(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn dask_chunking_ignores_p() {
+        let g = matmul_graph(64, 64, 64);
+        let plan = assign(
+            &g,
+            &Strategy::DaskLike { chunk: 16 },
+            4,
+            &LabelRoles::by_convention(),
+        )
+        .unwrap();
+        let z = g.by_name("Z").unwrap();
+        // every label split 64/16 = 4 ways regardless of p=4
+        assert_eq!(plan.parts[&z], vec![4, 4, 4]);
+    }
+}

@@ -1,0 +1,194 @@
+//! The EinDecomp planner (paper Sections 5–8): choose a partitioning
+//! vector for every vertex of an EinGraph so as to minimize an upper bound
+//! on communication, subject to producing (about) `p` independent kernel
+//! calls per vertex.
+//!
+//! * [`viable`] — enumerate candidate partitioning vectors (§6, §8.1);
+//! * [`cost`] — the three transfer-cost components (§7);
+//! * [`dp`] — the exact dynamic program for tree-like graphs (§8.2–8.3);
+//! * [`linearize`] — path-decomposition DP for general DAGs (§8.4);
+//! * [`baselines`] — the bespoke decomposition strategies the paper
+//!   compares against (SQRT, data/model parallel, sequence, attention,
+//!   ScaLAPACK-like, Dask-like, ZeRO-like, FlexGen-like).
+
+pub mod baselines;
+pub mod cost;
+pub mod dp;
+pub mod linearize;
+pub mod viable;
+
+use crate::einsum::expr::EinSum;
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::einsum::label::project;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// How the planner explores the assignment space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Exact DP — valid when no non-input vertex has more than one
+    /// consumer (§8.2). Errors otherwise.
+    ExactTree,
+    /// Linearize into longest paths and DP along each (§8.4).
+    Linearized,
+    /// Per-vertex local greedy (ablation baseline).
+    Greedy,
+    /// ExactTree when the graph allows it, Linearized otherwise.
+    Auto,
+}
+
+/// Planner configuration.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Number of processors: the planner targets exactly `p` kernel calls
+    /// per vertex. Rounded up to a power of two (§8.1).
+    pub p: usize,
+    pub mode: PlanMode,
+    /// §8.4: when optimizing along a path, also charge repartition cost
+    /// for off-path inputs whose partitioning is already fixed. The paper
+    /// ignores these edges; including them is a strictly better
+    /// approximation that we evaluate as an ablation.
+    pub off_path_cost: bool,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            p: 16,
+            mode: PlanMode::Auto,
+            off_path_cost: false,
+        }
+    }
+}
+
+/// A complete decomposition: one partitioning vector (parallel to
+/// `op.unique_labels()`) per non-input vertex, plus the partitioning each
+/// *input* tensor should be pre-sharded with (the paper treats input
+/// placement as free and offline).
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    /// vertex -> d over the vertex's unique labels.
+    pub parts: HashMap<VertexId, Vec<usize>>,
+    /// input vertex -> pre-partitioning (derived from its first consumer).
+    pub input_parts: HashMap<VertexId, Vec<usize>>,
+    /// The planner's predicted communication upper bound (floats moved).
+    pub predicted_cost: f64,
+    /// Human-readable strategy tag for reports.
+    pub strategy: String,
+}
+
+impl Plan {
+    /// Output partitioning `d_Z` of a vertex under this plan (inputs use
+    /// their assigned pre-partitioning; unassigned inputs default to
+    /// unpartitioned).
+    pub fn out_part(&self, g: &EinGraph, v: VertexId) -> Vec<usize> {
+        let vert = g.vertex(v);
+        match &vert.op {
+            EinSum::Input => self
+                .input_parts
+                .get(&v)
+                .cloned()
+                .unwrap_or_else(|| vec![1; vert.bound.len()]),
+            op => {
+                let d = &self.parts[&v];
+                let uniq = op.unique_labels();
+                project(d, op.lz().unwrap(), &uniq)
+            }
+        }
+    }
+
+    /// Partitioning this plan requires for operand `o` of vertex `v`.
+    pub fn required_in_part(&self, g: &EinGraph, v: VertexId, o: usize) -> Vec<usize> {
+        let vert = g.vertex(v);
+        let op = &vert.op;
+        let d = &self.parts[&v];
+        let uniq = op.unique_labels();
+        project(d, op.operand_labels()[o], &uniq)
+    }
+
+    /// Derive `input_parts` from the consumers: each input is pre-sharded
+    /// the way its first consumer wants it (free, per the paper).
+    pub fn finalize_inputs(&mut self, g: &EinGraph) {
+        for vert in g.vertices() {
+            if matches!(vert.op, EinSum::Input) {
+                continue;
+            }
+            if !self.parts.contains_key(&vert.id) {
+                continue;
+            }
+            for (o, &c) in vert.inputs.iter().enumerate() {
+                if matches!(g.vertex(c).op, EinSum::Input) {
+                    let req = self.required_in_part(g, vert.id, o);
+                    self.input_parts.entry(c).or_insert(req);
+                }
+            }
+        }
+        // inputs nobody consumes (degenerate): unpartitioned
+        for vert in g.vertices() {
+            if matches!(vert.op, EinSum::Input) {
+                self.input_parts
+                    .entry(vert.id)
+                    .or_insert_with(|| vec![1; vert.bound.len()]);
+            }
+        }
+    }
+
+    /// Evaluate the full communication upper bound of this plan under the
+    /// paper's cost model: per-vertex join + aggregation costs, plus
+    /// repartition costs on every producer->consumer edge (and on input
+    /// edges whose pre-partitioning differs from what the consumer needs —
+    /// free only for the *first* consumer).
+    pub fn total_cost(&self, g: &EinGraph) -> Result<f64> {
+        let mut total = 0.0;
+        for vert in g.vertices() {
+            if matches!(vert.op, EinSum::Input) {
+                continue;
+            }
+            let d = self.parts.get(&vert.id).ok_or_else(|| {
+                Error::NoViablePlan(format!("vertex {} unassigned", vert.name))
+            })?;
+            let in_bounds: Vec<&[usize]> = vert
+                .inputs
+                .iter()
+                .map(|&i| g.vertex(i.0.into()).bound.as_slice())
+                .collect();
+            total += cost::vertex_cost(&vert.op, &in_bounds, d)?;
+            for (o, &c) in vert.inputs.iter().enumerate() {
+                let have = self.out_part(g, c);
+                let need = self.required_in_part(g, vert.id, o);
+                total += cost::cost_repart(&need, &have, &g.vertex(c).bound);
+            }
+        }
+        Ok(total)
+    }
+}
+
+// VertexId helper for total_cost's indexing
+impl From<usize> for VertexId {
+    fn from(v: usize) -> Self {
+        VertexId(v)
+    }
+}
+
+/// Top-level entry: plan an EinGraph with the EinDecomp algorithm.
+pub fn plan_graph(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
+    let mode = match cfg.mode {
+        PlanMode::Auto => {
+            if g.is_tree_like() {
+                PlanMode::ExactTree
+            } else {
+                PlanMode::Linearized
+            }
+        }
+        m => m,
+    };
+    let mut plan = match mode {
+        PlanMode::ExactTree => dp::plan_exact_tree(g, cfg)?,
+        PlanMode::Linearized => linearize::plan_linearized(g, cfg)?,
+        PlanMode::Greedy => dp::plan_greedy(g, cfg)?,
+        PlanMode::Auto => unreachable!(),
+    };
+    plan.finalize_inputs(g);
+    plan.predicted_cost = plan.total_cost(g)?;
+    Ok(plan)
+}

@@ -1,0 +1,233 @@
+//! Enumerating viable partitioning vectors (paper §6 and §8.1).
+//!
+//! A partitioning vector `d` (stored parallel to the EinSum's unique
+//! labels, which bakes in the co-partitioning of repeated labels) is
+//! *viable* for processor count `p` iff every entry is a power of two and
+//! the number of join result tuples
+//! `N(l_X, l_Y, d) = prod d[l_X (.) l_Y]` equals exactly `p` — ensuring
+//! `p` independent kernel calls, no more (movement) and no fewer
+//! (idle processors).
+//!
+//! Because every entry is a power of two, enumeration is stars-and-bars:
+//! place `log2(p)` balls into `D` buckets (§8.1: `(N+D-1)! / (N!(D-1)!)`
+//! possibilities). Entries are additionally capped by the dimension bound
+//! so no tile is empty — a practical constraint the paper leaves implicit.
+
+use crate::einsum::expr::EinSum;
+use crate::einsum::label::project;
+use crate::error::{Error, Result};
+
+/// Number of unconstrained partitionings: `C(n_balls + buckets - 1,
+/// buckets - 1)` — the paper's counting formula (§8.1).
+pub fn count_partitionings(n_balls: u32, buckets: u32) -> u128 {
+    if buckets == 0 {
+        return u128::from(n_balls == 0);
+    }
+    // C(n + b - 1, b - 1)
+    binomial(u128::from(n_balls + buckets - 1), u128::from(buckets - 1))
+}
+
+fn binomial(n: u128, k: u128) -> u128 {
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc * (n - i) / (i + 1);
+    }
+    acc
+}
+
+/// Round `p` up to the next power of two (§8.1: "If the actual number of
+/// processors is not a power of two, p can be chosen to be larger").
+pub fn pow2_at_least(p: usize) -> usize {
+    p.next_power_of_two()
+}
+
+/// Enumerate all viable partitioning vectors for an EinSum expression.
+///
+/// * `op` — the expression; `d` is parallel to `op.unique_labels()`.
+/// * `bounds` — the bound of each unique label (callers derive it from the
+///   operand bounds).
+/// * `p` — target kernel calls; must be a power of two (use
+///   [`pow2_at_least`]).
+///
+/// Returns vectors `d` with `prod(d) == p` and `d[i] <= bounds[i]`.
+pub fn viable(op: &EinSum, bounds: &[usize], p: usize) -> Result<Vec<Vec<usize>>> {
+    let uniq = op.unique_labels();
+    if bounds.len() != uniq.len() {
+        return Err(Error::InvalidPartitioning(format!(
+            "bounds {bounds:?} not parallel to unique labels {uniq:?}"
+        )));
+    }
+    if !p.is_power_of_two() {
+        return Err(Error::InvalidPartitioning(format!(
+            "p={p} must be a power of two (see pow2_at_least)"
+        )));
+    }
+    let n_balls = p.trailing_zeros();
+    let mut out = Vec::new();
+    let mut cur = vec![1usize; uniq.len()];
+    distribute(n_balls, 0, bounds, &mut cur, &mut out);
+    if out.is_empty() {
+        return Err(Error::NoViablePlan(format!(
+            "no power-of-two partitioning of {bounds:?} yields {p} kernel calls"
+        )));
+    }
+    Ok(out)
+}
+
+/// Recursively place `balls` doublings into buckets `from..`.
+fn distribute(
+    balls: u32,
+    from: usize,
+    bounds: &[usize],
+    cur: &mut Vec<usize>,
+    out: &mut Vec<Vec<usize>>,
+) {
+    if balls == 0 {
+        out.push(cur.clone());
+        return;
+    }
+    if from >= cur.len() {
+        return;
+    }
+    // number of balls this bucket can absorb without exceeding its bound
+    let mut max_here = 0u32;
+    while (cur[from] << (max_here + 1)) <= bounds[from] && max_here + 1 <= balls {
+        max_here += 1;
+    }
+    for b in 0..=max_here {
+        cur[from] <<= b;
+        distribute(balls - b, from + 1, bounds, cur, out);
+        cur[from] >>= b;
+    }
+}
+
+/// Bounds of the unique labels of `op`, derived from the operand bounds.
+pub fn unique_label_bounds(op: &EinSum, in_bounds: &[&[usize]]) -> Vec<usize> {
+    let uniq = op.unique_labels();
+    let lxy = op.lxy();
+    let bxy = op.bxy(in_bounds);
+    project(&bxy, &uniq, &lxy)
+}
+
+/// The set of distinct output partitionings `d_Z` reachable from a list of
+/// viable `d` vectors (used to size the DP table).
+pub fn output_partitionings(op: &EinSum, ds: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let uniq = op.unique_labels();
+    let lz = op.lz().expect("not an input");
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    for d in ds {
+        let dz = project(d, lz, &uniq);
+        if !out.contains(&dz) {
+            out.push(dz);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+
+    #[test]
+    fn counting_matches_paper() {
+        // §8.1: N=10 balls, D=6 buckets -> 3003 partitionings.
+        assert_eq!(count_partitionings(10, 6), 3003);
+        assert_eq!(count_partitionings(0, 4), 1);
+        assert_eq!(count_partitionings(3, 1), 1);
+    }
+
+    #[test]
+    fn pow2_rounding() {
+        assert_eq!(pow2_at_least(8), 8);
+        assert_eq!(pow2_at_least(12), 16);
+        assert_eq!(pow2_at_least(1), 1);
+    }
+
+    #[test]
+    fn matmul_p8_matches_paper_enumeration() {
+        // §8.2 lists 8 partitioning vectors for the 8x8 matmul at p=8, but
+        // the complete stars-and-bars enumeration (3 balls, 3 buckets) has
+        // C(5,2) = 10 — the paper's own §8.1 formula. The two the paper's
+        // list omits are [2,4,1] and [1,4,2] (d_j = 4). We enumerate all 10.
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        let ds = viable(&op, &[8, 8, 8], 8).unwrap();
+        assert_eq!(ds.len(), 10);
+        assert!(ds.contains(&vec![2, 4, 1]));
+        for d in &ds {
+            assert_eq!(d.iter().product::<usize>(), 8);
+        }
+        assert!(ds.contains(&vec![2, 2, 2]));
+        assert!(ds.contains(&vec![1, 8, 1]));
+        assert!(ds.contains(&vec![8, 1, 1]));
+    }
+
+    #[test]
+    fn paper_output_partitionings_for_p8() {
+        // §8.2 lists the d_Z values [2,4];[4,2];[8,1];[1,8];[2,2];[4,1];
+        // [1,4];[1,1] — all of which must be reachable. The complete
+        // enumeration also reaches [2,1] and [1,2] (via the two d vectors
+        // the paper's list omits; see matmul_p8_matches_paper_enumeration).
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        let ds = viable(&op, &[8, 8, 8], 8).unwrap();
+        let dzs = output_partitionings(&op, &ds);
+        let want: Vec<Vec<usize>> = vec![
+            vec![2, 4],
+            vec![4, 2],
+            vec![8, 1],
+            vec![1, 8],
+            vec![2, 2],
+            vec![4, 1],
+            vec![1, 4],
+            vec![1, 1],
+        ];
+        for w in want {
+            assert!(dzs.contains(&w), "missing {w:?}");
+        }
+        assert_eq!(dzs.len(), 10);
+    }
+
+    #[test]
+    fn bounds_cap_enumeration() {
+        // a 4x4 matmul cannot split any dim more than 4 ways
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        let ds = viable(&op, &[4, 4, 4], 16).unwrap();
+        for d in &ds {
+            assert!(d.iter().all(|&x| x <= 4));
+            assert_eq!(d.iter().product::<usize>(), 16);
+        }
+        // p=256 impossible on 4x4x4 (max 4*4*4=64)
+        assert!(viable(&op, &[4, 4, 4], 256).is_err());
+    }
+
+    #[test]
+    fn stars_and_bars_count_without_bounds() {
+        // With generous bounds the enumeration size equals the formula.
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        let ds = viable(&op, &[1 << 20, 1 << 20, 1 << 20], 1 << 10).unwrap();
+        assert_eq!(ds.len() as u128, count_partitionings(10, 3));
+    }
+
+    #[test]
+    fn unary_viable() {
+        let op = EinSum::reduce(labels("i j"), labels("i"), crate::einsum::expr::AggOp::Sum);
+        let ds = viable(&op, &[16, 16], 4).unwrap();
+        // [1,4],[2,2],[4,1]
+        assert_eq!(ds.len(), 3);
+    }
+
+    #[test]
+    fn unique_bounds_derivation() {
+        let op = EinSum::contraction(labels("i j b"), labels("j b k"), labels("i k"));
+        let b = unique_label_bounds(&op, &[&[10, 100, 20], &[100, 20, 2000]]);
+        // unique labels [i, j, b, k]
+        assert_eq!(b, vec![10, 100, 20, 2000]);
+    }
+
+    #[test]
+    fn p_must_be_pow2() {
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        assert!(viable(&op, &[8, 8, 8], 6).is_err());
+    }
+}

@@ -1,0 +1,641 @@
+//! Reverse-mode automatic differentiation of EinSum graphs.
+//!
+//! The Einsummable system trains models by differentiating relational
+//! computations (Tang et al., ICML 2023 — reference [50] of the paper);
+//! gradients come out as *more EinSum vertices*, so the same EinDecomp
+//! planner decomposes forward and backward together. This module builds
+//! the backward graph:
+//!
+//! * contraction `Z = sum_agg X (*) Y`  ->  `dX = sum X-free(dZ (*) Y)`
+//!   (the classic einsum transpose rule: swap the differentiated operand
+//!   with the output gradient and contract over what `l_X` lacks);
+//! * elementwise Add/Sub/Mul/Div and the softmax SubExp join;
+//! * unary maps via pointwise derivative rules;
+//! * unary Sum-reductions broadcast the gradient back (expressed with the
+//!   `Right` join against the primal, since EinSum has no broadcast);
+//! * Max/Min reductions are treated as stop-gradient. This matches the
+//!   standard numerically-stable-softmax treatment (the subtracted max
+//!   cancels in the softmax gradient), which is the only place the model
+//!   macros use them.
+//!
+//! Gradients of a vertex consumed `k` times accumulate with `k-1`
+//! elementwise adds, in reverse topological order.
+
+use super::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use super::graph::{EinGraph, VertexId};
+use super::label::{concat_dedup, difference, LabelList};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Result of [`grad`]: the extended graph, the seed-input vertex (caller
+/// feeds ones shaped like the loss), and the gradient vertex for each
+/// requested input.
+pub struct GradGraph {
+    pub graph: EinGraph,
+    pub seed: VertexId,
+    pub grads: HashMap<VertexId, VertexId>,
+}
+
+/// Append the backward pass of `loss` w.r.t. `wrt` onto (a clone of) `g`.
+pub fn grad(g: &EinGraph, loss: VertexId, wrt: &[VertexId]) -> Result<GradGraph> {
+    let mut out = g.clone();
+    let loss_bound = g.vertex(loss).bound.clone();
+    let seed = out.input("d_seed", loss_bound);
+
+    // adjoints[v]: list of gradient contributions to v's output
+    let mut contrib: HashMap<VertexId, Vec<VertexId>> = HashMap::new();
+    contrib.entry(loss).or_default().push(seed);
+
+    // walk original vertices in reverse topological order
+    for vid in g.topo_order().into_iter().rev() {
+        let Some(parts) = contrib.remove(&vid) else {
+            continue;
+        };
+        let vert = g.vertex(vid);
+        // sum multiple contributions
+        let lz = match vert.op.lz() {
+            Some(lz) => lz.clone(),
+            None => {
+                // input vertex: just record the accumulated gradient
+                let total = accumulate(&mut out, &vert.name, parts, vert.bound.len())?;
+                contrib.insert(vid, vec![total]);
+                continue;
+            }
+        };
+        let dz = accumulate(&mut out, &vert.name, parts, lz.len())?;
+        // push through the operation
+        match vert.op.clone() {
+            EinSum::Input => unreachable!(),
+            EinSum::Unary { lx, lz, op, agg } => {
+                let dx = grad_unary(&mut out, &vert.name, vid, vert.inputs[0], &lx, &lz, op, agg, dz)?;
+                if let Some(dx) = dx {
+                    contrib.entry(vert.inputs[0]).or_default().push(dx);
+                }
+            }
+            EinSum::Binary {
+                lx,
+                ly,
+                lz,
+                join,
+                agg,
+            } => {
+                if agg != AggOp::Sum && !vert.op.lagg().is_empty() {
+                    return Err(Error::InvalidEinsum(format!(
+                        "autodiff: non-Sum aggregation in {} is not differentiable here",
+                        vert.name
+                    )));
+                }
+                let (x, y) = (vert.inputs[0], vert.inputs[1]);
+                let (dx, dy) =
+                    grad_binary(&mut out, &vert.name, vid, x, y, &lx, &ly, &lz, join, dz)?;
+                if let Some(dx) = dx {
+                    contrib.entry(x).or_default().push(dx);
+                }
+                if let Some(dy) = dy {
+                    contrib.entry(y).or_default().push(dy);
+                }
+            }
+        }
+    }
+
+    let mut grads = HashMap::new();
+    for &w in wrt {
+        let parts = contrib.remove(&w).unwrap_or_default();
+        if parts.is_empty() {
+            return Err(Error::InvalidEinsum(format!(
+                "no gradient path from loss to {}",
+                g.vertex(w).name
+            )));
+        }
+        let total = accumulate(&mut out, &g.vertex(w).name, parts, g.vertex(w).bound.len())?;
+        // Wrap in an identity so every requested gradient is a graph
+        // *output* even when the raw adjoint vertex feeds other adjoints
+        // (e.g. the SubExp dX tensor is reused by its dC reduction).
+        let rank = g.vertex(w).bound.len();
+        let labs: LabelList = (0..rank)
+            .map(|i| super::label::Label::new(&format!("_g{i}")))
+            .collect();
+        let wrapped = out.add(
+            &format!("grad_{}", g.vertex(w).name),
+            EinSum::map(labs, UnaryOp::Identity),
+            vec![total],
+        )?;
+        grads.insert(w, wrapped);
+    }
+    Ok(GradGraph {
+        graph: out,
+        seed,
+        grads,
+    })
+}
+
+/// Sum a list of same-shaped gradient vertices.
+fn accumulate(
+    out: &mut EinGraph,
+    name: &str,
+    mut parts: Vec<VertexId>,
+    rank: usize,
+) -> Result<VertexId> {
+    let labs: LabelList = (0..rank)
+        .map(|i| super::label::Label::new(&format!("_g{i}")))
+        .collect();
+    let mut acc = parts.remove(0);
+    for (i, p) in parts.into_iter().enumerate() {
+        acc = out.add(
+            &format!("d_{name}.acc{i}"),
+            EinSum::elementwise(labs.clone(), labs.clone(), JoinOp::Add),
+            vec![acc, p],
+        )?;
+    }
+    Ok(acc)
+}
+
+/// dX for a unary vertex; `None` means stop-gradient.
+#[allow(clippy::too_many_arguments)]
+fn grad_unary(
+    out: &mut EinGraph,
+    name: &str,
+    z: VertexId,
+    x: VertexId,
+    lx: &LabelList,
+    lz: &LabelList,
+    op: UnaryOp,
+    agg: AggOp,
+    dz: VertexId,
+) -> Result<Option<VertexId>> {
+    let dropped = difference(lx, lz);
+    // 1. reduction part: broadcast dZ back over the dropped labels
+    let dz_full = if dropped.is_empty() {
+        // pure map/transpose: re-orient dZ (labelled lz) to lx order is
+        // implicit — downstream ops reference labels, not positions.
+        dz
+    } else {
+        match agg {
+            AggOp::Sum => {
+                // spray dZ across lx using the primal X for shape
+                out.add(
+                    &format!("d_{name}.bcast"),
+                    EinSum::Binary {
+                        lx: lx.clone(),
+                        ly: lz.clone(),
+                        lz: lx.clone(),
+                        join: JoinOp::Right,
+                        agg: AggOp::Sum,
+                    },
+                    vec![x, dz],
+                )?
+            }
+            // Max/Min reductions: stop-gradient (see module docs)
+            _ => return Ok(None),
+        }
+    };
+    // 2. map part: chain rule through the pointwise function
+    let dx = match op {
+        UnaryOp::Identity => {
+            if lz.len() == lx.len() && lz != lx {
+                // pure transpose: re-express dz (over lz) in lx order
+                out.add(
+                    &format!("d_{name}.perm"),
+                    EinSum::reduce(lz.clone(), lx.clone(), AggOp::Sum),
+                    vec![dz_full],
+                )?
+            } else {
+                dz_full
+            }
+        }
+        UnaryOp::Scale(c) => out.add(
+            &format!("d_{name}.scale"),
+            EinSum::map(lx.clone(), UnaryOp::Scale(c)),
+            vec![dz_full],
+        )?,
+        UnaryOp::Neg => out.add(
+            &format!("d_{name}.neg"),
+            EinSum::map(lx.clone(), UnaryOp::Neg),
+            vec![dz_full],
+        )?,
+        UnaryOp::AddConst(_) => dz_full,
+        UnaryOp::Relu => {
+            let mask = out.add(
+                &format!("d_{name}.mask"),
+                EinSum::map(lx.clone(), UnaryOp::ReluGrad),
+                vec![x],
+            )?;
+            out.add(
+                &format!("d_{name}.mul"),
+                EinSum::elementwise(lx.clone(), lx.clone(), JoinOp::Mul),
+                vec![dz_full, mask],
+            )?
+        }
+        UnaryOp::Exp => {
+            // d exp = exp(x) = Z itself (only valid for pure maps)
+            if !difference(lx, lz).is_empty() {
+                return Err(Error::InvalidEinsum(format!(
+                    "autodiff: exp+reduce in one vertex unsupported ({name})"
+                )));
+            }
+            out.add(
+                &format!("d_{name}.mul"),
+                EinSum::elementwise(lx.clone(), lx.clone(), JoinOp::Mul),
+                vec![dz_full, z],
+            )?
+        }
+        UnaryOp::Square => {
+            let two_x = out.add(
+                &format!("d_{name}.2x"),
+                EinSum::map(lx.clone(), UnaryOp::Scale(2.0)),
+                vec![x],
+            )?;
+            out.add(
+                &format!("d_{name}.mul"),
+                EinSum::elementwise(lx.clone(), lx.clone(), JoinOp::Mul),
+                vec![dz_full, two_x],
+            )?
+        }
+        other => {
+            return Err(Error::InvalidEinsum(format!(
+                "autodiff: unary {other:?} not supported ({name})"
+            )))
+        }
+    };
+    Ok(Some(dx))
+}
+
+/// (dX, dY) for a binary vertex.
+#[allow(clippy::too_many_arguments)]
+fn grad_binary(
+    out: &mut EinGraph,
+    name: &str,
+    z: VertexId,
+    x: VertexId,
+    y: VertexId,
+    lx: &LabelList,
+    ly: &LabelList,
+    lz: &LabelList,
+    join: JoinOp,
+    dz: VertexId,
+) -> Result<(Option<VertexId>, Option<VertexId>)> {
+    // helper: contraction dOp = sum_free( dZ (x) Other ) -> l_target
+    let contract =
+        |out: &mut EinGraph, tag: &str, other: VertexId, lo: &LabelList, lt: &LabelList| {
+            out.add(
+                &format!("d_{name}.{tag}"),
+                EinSum::contraction(lz.clone(), lo.clone(), lt.clone()),
+                vec![dz, other],
+            )
+        };
+    // helper: reduce dZ (over lz) down to l_target (for +/- style joins
+    // where the operand may index fewer labels)
+    let reduce_to = |out: &mut EinGraph, tag: &str, lt: &LabelList| {
+        if lt == lz {
+            Ok(dz)
+        } else {
+            out.add(
+                &format!("d_{name}.{tag}"),
+                EinSum::reduce(lz.clone(), lt.clone(), AggOp::Sum),
+                vec![dz],
+            )
+        }
+    };
+    match join {
+        JoinOp::Mul => {
+            // works uniformly for contraction AND (broadcast) elementwise:
+            // dX = sum_{labels not in lx} dZ * Y ; symmetric for Y.
+            // Valid when every l_X label appears in l_Z or l_Y (no
+            // operand-private aggregated labels) — true for all our model
+            // graphs; reject otherwise.
+            let ok_x = lx.iter().all(|l| lz.contains(l) || ly.contains(l));
+            let ok_y = ly.iter().all(|l| lz.contains(l) || lx.contains(l));
+            if !ok_x || !ok_y {
+                return Err(Error::InvalidEinsum(format!(
+                    "autodiff: operand-private aggregated label in {name}"
+                )));
+            }
+            let dx = contract(out, "dx", y, ly, lx)?;
+            let dy = contract(out, "dy", x, lx, ly)?;
+            Ok((Some(dx), Some(dy)))
+        }
+        JoinOp::Add => {
+            let dx = reduce_to(out, "dx", lx)?;
+            let dy = reduce_to(out, "dy", ly)?;
+            Ok((Some(dx), Some(dy)))
+        }
+        JoinOp::Sub => {
+            let dx = reduce_to(out, "dx", lx)?;
+            let dy0 = reduce_to(out, "dy0", ly)?;
+            let dy = out.add(
+                &format!("d_{name}.dyneg"),
+                EinSum::map(ly.clone(), UnaryOp::Neg),
+                vec![dy0],
+            )?;
+            Ok((Some(dx), Some(dy)))
+        }
+        JoinOp::Div => {
+            // z = x / y (elementwise, possibly broadcast on y):
+            // dX = dZ / Y ; dY = -sum(dZ * Z) / Y
+            let dx_full = out.add(
+                &format!("d_{name}.dxdiv"),
+                EinSum::Binary {
+                    lx: lz.clone(),
+                    ly: ly.clone(),
+                    lz: lz.clone(),
+                    join: JoinOp::Div,
+                    agg: AggOp::Sum,
+                },
+                vec![dz, y],
+            )?;
+            let dx = if lx == lz {
+                dx_full
+            } else {
+                out.add(
+                    &format!("d_{name}.dxred"),
+                    EinSum::reduce(lz.clone(), lx.clone(), AggOp::Sum),
+                    vec![dx_full],
+                )?
+            };
+            let dzz = out.add(
+                &format!("d_{name}.dzz"),
+                EinSum::elementwise(lz.clone(), lz.clone(), JoinOp::Mul),
+                vec![dz, z],
+            )?;
+            let red = out.add(
+                &format!("d_{name}.dyred"),
+                EinSum::reduce(lz.clone(), ly.clone(), AggOp::Sum),
+                vec![dzz],
+            )?;
+            let div = out.add(
+                &format!("d_{name}.dydiv"),
+                EinSum::elementwise(ly.clone(), ly.clone(), JoinOp::Div),
+                vec![red, y],
+            )?;
+            let dy = out.add(
+                &format!("d_{name}.dyneg"),
+                EinSum::map(ly.clone(), UnaryOp::Neg),
+                vec![div],
+            )?;
+            Ok((Some(dx), Some(dy)))
+        }
+        JoinOp::SubExp => {
+            // z = e^(x - c): dX = dZ * Z ; dC = -sum(dZ * Z)
+            let dzz = out.add(
+                &format!("d_{name}.dzz"),
+                EinSum::elementwise(lz.clone(), lz.clone(), JoinOp::Mul),
+                vec![dz, z],
+            )?;
+            let dx = if lx == lz {
+                dzz
+            } else {
+                out.add(
+                    &format!("d_{name}.dxred"),
+                    EinSum::reduce(lz.clone(), lx.clone(), AggOp::Sum),
+                    vec![dzz],
+                )?
+            };
+            let red = out.add(
+                &format!("d_{name}.dcred"),
+                EinSum::reduce(lz.clone(), ly.clone(), AggOp::Sum),
+                vec![dzz],
+            )?;
+            let dy = out.add(
+                &format!("d_{name}.dcneg"),
+                EinSum::map(ly.clone(), UnaryOp::Neg),
+                vec![red],
+            )?;
+            Ok((Some(dx), Some(dy)))
+        }
+        other => Err(Error::InvalidEinsum(format!(
+            "autodiff: join {other:?} not supported ({name})"
+        ))),
+    }
+}
+
+/// Convenience: `l_X (.) l_Y` (kept for future broadcast support).
+#[allow(dead_code)]
+fn joint(lx: &LabelList, ly: &LabelList) -> LabelList {
+    concat_dedup(lx, ly)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+    use crate::runtime::native::eval_einsum;
+    use crate::runtime::NativeEngine;
+    use crate::sim::{Cluster, NetworkProfile};
+    use crate::tensor::Tensor;
+
+    /// Evaluate a graph densely (single worker) and return named outputs.
+    fn run(
+        g: &EinGraph,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> HashMap<VertexId, Tensor> {
+        let plan = crate::decomp::plan_graph(
+            g,
+            &crate::decomp::PlannerConfig {
+                p: 1,
+                mode: crate::decomp::PlanMode::Greedy,
+                off_path_cost: false,
+            },
+        )
+        .unwrap();
+        let cluster = Cluster::new(1, NetworkProfile::loopback());
+        let (outs, _) = cluster
+            .execute(g, &plan, &NativeEngine::new(), inputs)
+            .unwrap();
+        outs
+    }
+
+    /// loss = sum((X W)^2) — check dW against finite differences.
+    #[test]
+    fn grad_matmul_square_sum_matches_fd() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![4, 5]);
+        let w = g.input("W", vec![5, 3]);
+        let z = g
+            .add(
+                "Z",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![x, w],
+            )
+            .unwrap();
+        let sq = g
+            .add("Sq", EinSum::map(labels("i k"), UnaryOp::Square), vec![z])
+            .unwrap();
+        let loss = g
+            .add("L", EinSum::reduce(labels("i k"), vec![], AggOp::Sum), vec![sq])
+            .unwrap();
+        let gg = grad(&g, loss, &[w, x]).unwrap();
+        gg.graph.validate().unwrap();
+
+        let tx = Tensor::random(&[4, 5], 1);
+        let tw = Tensor::random(&[5, 3], 2);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, tx.clone());
+        inputs.insert(w, tw.clone());
+        inputs.insert(gg.seed, Tensor::scalar(1.0));
+        let outs = run(&gg.graph, &inputs);
+        let dw = &outs[&gg.grads[&w]];
+        let dx = &outs[&gg.grads[&x]];
+        assert_eq!(dw.shape(), &[5, 3]);
+        assert_eq!(dx.shape(), &[4, 5]);
+
+        // finite differences on dW
+        let f = |tw: &Tensor| -> f32 {
+            let z = eval_einsum(&g.vertex(z).op, &[&tx, tw]).unwrap();
+            z.data().iter().map(|v| v * v).sum()
+        };
+        let eps = 1e-3;
+        for &(i, j) in &[(0usize, 0usize), (2, 1), (4, 2)] {
+            let mut plus = tw.clone();
+            plus.set(&[i, j], tw.at(&[i, j]) + eps);
+            let mut minus = tw.clone();
+            minus.set(&[i, j], tw.at(&[i, j]) - eps);
+            let fd = (f(&plus) - f(&minus)) / (2.0 * eps);
+            let an = dw.at(&[i, j]);
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dW[{i},{j}]: fd {fd} vs {an}"
+            );
+        }
+    }
+
+    /// Autodiff of the FFNN forward must match the hand-written backward
+    /// in models::ffnn.
+    #[test]
+    fn grad_matches_handwritten_ffnn() {
+        use crate::models::ffnn::{ffnn_step, step_inputs, FfnnState};
+        let step = ffnn_step(6, 8, 5, 3).unwrap();
+        let state = FfnnState::init(8, 5, 3, 4);
+        let (xb, tb) = crate::data::classifier_batch(6, 8, 3, 0.6, 9);
+        // hand-written grads
+        let inputs = step_inputs(&step, &state, xb.clone(), tb.clone());
+        let outs = run(&step.graph, &inputs);
+        let dw1_hand = outs[&step.dw1].clone();
+        let dw2_hand = outs[&step.dw2].clone();
+        // autodiff grads of the same loss
+        let gg = grad(&step.graph, step.loss, &[step.w1, step.w2]).unwrap();
+        let mut inputs2 = step_inputs(&step, &state, xb, tb);
+        inputs2.insert(gg.seed, Tensor::scalar(1.0));
+        let outs2 = run(&gg.graph, &inputs2);
+        let dw1_auto = &outs2[&gg.grads[&step.w1]];
+        let dw2_auto = &outs2[&gg.grads[&step.w2]];
+        assert!(
+            dw1_auto.allclose(&dw1_hand, 1e-3, 1e-4),
+            "dW1 mismatch: {}",
+            dw1_auto.max_abs_diff(&dw1_hand).unwrap()
+        );
+        assert!(dw2_auto.allclose(&dw2_hand, 1e-3, 1e-4));
+    }
+
+    /// Softmax (with its Max stop-gradient) differentiates correctly:
+    /// compare against finite differences of sum(softmax(X) * C).
+    #[test]
+    fn grad_softmax_matches_fd() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![3, 4]);
+        let c = g.input("C", vec![3, 4]);
+        let sm = crate::einsum::macros::softmax(&mut g, "sm", x, &labels("i j")).unwrap();
+        let prod = g
+            .add(
+                "P",
+                EinSum::elementwise(labels("i j"), labels("i j"), JoinOp::Mul),
+                vec![sm, c],
+            )
+            .unwrap();
+        let loss = g
+            .add("L", EinSum::reduce(labels("i j"), vec![], AggOp::Sum), vec![prod])
+            .unwrap();
+        let gg = grad(&g, loss, &[x]).unwrap();
+        let tx = Tensor::random(&[3, 4], 11);
+        let tc = Tensor::random(&[3, 4], 12);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, tx.clone());
+        inputs.insert(c, tc.clone());
+        inputs.insert(gg.seed, Tensor::scalar(1.0));
+        let outs = run(&gg.graph, &inputs);
+        let dx = &outs[&gg.grads[&x]];
+
+        let f = |tx: &Tensor| -> f32 {
+            let mut total = 0.0f32;
+            for i in 0..3 {
+                let row: Vec<f32> = (0..4).map(|j| tx.at(&[i, j])).collect();
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let e: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+                let s: f32 = e.iter().sum();
+                for j in 0..4 {
+                    total += e[j] / s * tc.at(&[i, j]);
+                }
+            }
+            total
+        };
+        let eps = 1e-3;
+        for &(i, j) in &[(0usize, 0usize), (1, 2), (2, 3)] {
+            let mut plus = tx.clone();
+            plus.set(&[i, j], tx.at(&[i, j]) + eps);
+            let mut minus = tx.clone();
+            minus.set(&[i, j], tx.at(&[i, j]) - eps);
+            let fd = (f(&plus) - f(&minus)) / (2.0 * eps);
+            let an = dx.at(&[i, j]);
+            assert!(
+                (fd - an).abs() < 5e-3 * (1.0 + fd.abs()),
+                "dX[{i},{j}]: fd {fd} vs autodiff {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_rejects_unreachable() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![2, 2]);
+        let w = g.input("W", vec![2, 2]); // never used
+        let loss = g
+            .add("L", EinSum::reduce(labels("i j"), vec![], AggOp::Sum), vec![x])
+            .unwrap();
+        assert!(grad(&g, loss, &[w]).is_err());
+    }
+
+    /// The backward graph is plannable and decomposes correctly (p=4
+    /// matches p=1).
+    #[test]
+    fn grad_graph_decomposes() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![8, 8]);
+        let w = g.input("W", vec![8, 8]);
+        let z = g
+            .add(
+                "Z",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![x, w],
+            )
+            .unwrap();
+        let r = g
+            .add("R", EinSum::map(labels("i k"), UnaryOp::Relu), vec![z])
+            .unwrap();
+        let loss = g
+            .add("L", EinSum::reduce(labels("i k"), vec![], AggOp::Sum), vec![r])
+            .unwrap();
+        let gg = grad(&g, loss, &[w]).unwrap();
+        let tx = Tensor::random(&[8, 8], 5);
+        let tw = Tensor::random(&[8, 8], 6);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, tx);
+        inputs.insert(w, tw);
+        inputs.insert(gg.seed, Tensor::scalar(1.0));
+        let o1 = run(&gg.graph, &inputs);
+        // p=4 via the full planner
+        let plan = crate::decomp::plan_graph(
+            &gg.graph,
+            &crate::decomp::PlannerConfig {
+                p: 4,
+                mode: crate::decomp::PlanMode::Linearized,
+                off_path_cost: true,
+            },
+        )
+        .unwrap();
+        let cluster = Cluster::new(4, NetworkProfile::loopback());
+        let (o4, _) = cluster
+            .execute(&gg.graph, &plan, &NativeEngine::new(), &inputs)
+            .unwrap();
+        let gvert = gg.grads[&w];
+        assert!(o4[&gvert].allclose(&o1[&gvert], 1e-3, 1e-4));
+    }
+}

@@ -1,0 +1,576 @@
+//! EinSum expressions — the paper's Section 3 in code.
+//!
+//! A binary EinSum in full generality (paper Eq. 2) is
+//!
+//! ```text
+//!   forall l_Z in I(b_Z):  Z[l_Z] <- (+)_{l_agg} (x)(X[l_X], Y[l_Y])
+//! ```
+//!
+//! where `(+)` is any commutative/associative aggregation ([`AggOp`]) and
+//! `(x)` any scalar join function ([`JoinOp`]) — this is what makes it an
+//! *extended* Einstein notation. Unary EinSums replace the join with a map
+//! ([`UnaryOp`]) and optionally aggregate (e.g. `C_i <- max_j X_ij`).
+//!
+//! Broadcasts (output labels absent from all inputs) are rejected, as in
+//! the paper ("we ignore broadcasts and focus on contractions").
+
+use super::label::{
+    all_distinct, concat, concat_dedup, difference, project, try_project, LabelList,
+};
+use crate::error::{Error, Result};
+
+/// Commutative, associative aggregation operator `(+)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AggOp {
+    Sum,
+    Max,
+    Min,
+    Prod,
+}
+
+impl AggOp {
+    /// Identity element of the aggregation.
+    pub fn identity(&self) -> f32 {
+        match self {
+            AggOp::Sum => 0.0,
+            AggOp::Max => f32::NEG_INFINITY,
+            AggOp::Min => f32::INFINITY,
+            AggOp::Prod => 1.0,
+        }
+    }
+
+    /// Combine two partial aggregates.
+    #[inline]
+    pub fn combine(&self, a: f32, b: f32) -> f32 {
+        match self {
+            AggOp::Sum => a + b,
+            AggOp::Max => a.max(b),
+            AggOp::Min => a.min(b),
+            AggOp::Prod => a * b,
+        }
+    }
+}
+
+/// Scalar join function `(x)` applied to matched pairs of input values.
+///
+/// `Mul` + `Sum` is a classic contraction; `SquaredDiff` + `Sum` computes
+/// pairwise squared L2 distances; `AbsDiff` + `Max` computes the L-inf
+/// distance — the paper's motivating examples.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JoinOp {
+    Mul,
+    Add,
+    Sub,
+    Div,
+    /// `(x - y)^2`
+    SquaredDiff,
+    /// `|x - y|`
+    AbsDiff,
+    /// `e^(x - y)` — used by the numerically-stable softmax macro.
+    SubExp,
+    Max,
+    Min,
+    /// Selects the right operand (`y`). Not user-facing: the autodiff
+    /// module uses it to express broadcast ("spray `dZ` across the labels
+    /// `l_X` has and `l_Z` lacks") without extending EinSum with true
+    /// broadcasts, by joining against the primal `X`.
+    Right,
+}
+
+impl Eq for JoinOp {}
+
+impl std::hash::Hash for JoinOp {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        std::mem::discriminant(self).hash(state);
+    }
+}
+
+impl JoinOp {
+    /// Apply the scalar join function.
+    #[inline]
+    pub fn apply(&self, x: f32, y: f32) -> f32 {
+        match self {
+            JoinOp::Mul => x * y,
+            JoinOp::Add => x + y,
+            JoinOp::Sub => x - y,
+            JoinOp::Div => x / y,
+            JoinOp::SquaredDiff => (x - y) * (x - y),
+            JoinOp::AbsDiff => (x - y).abs(),
+            JoinOp::SubExp => (x - y).exp(),
+            JoinOp::Max => x.max(y),
+            JoinOp::Min => x.min(y),
+            JoinOp::Right => y,
+        }
+    }
+}
+
+/// Scalar map function for unary EinSums.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnaryOp {
+    Identity,
+    Exp,
+    Neg,
+    Relu,
+    /// derivative of ReLU: 1 if x > 0 else 0
+    ReluGrad,
+    Recip,
+    Sqrt,
+    Rsqrt,
+    Square,
+    /// x * c
+    Scale(f32),
+    /// x + c
+    AddConst(f32),
+    /// SiLU / swish: x * sigmoid(x) — used by the LLaMA feed-forward block.
+    Silu,
+    Sigmoid,
+    Tanh,
+    Ln,
+}
+
+impl Eq for UnaryOp {}
+
+impl std::hash::Hash for UnaryOp {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        std::mem::discriminant(self).hash(state);
+        match self {
+            UnaryOp::Scale(c) | UnaryOp::AddConst(c) => c.to_bits().hash(state),
+            _ => {}
+        }
+    }
+}
+
+impl UnaryOp {
+    /// Apply the scalar map.
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            UnaryOp::Identity => x,
+            UnaryOp::Exp => x.exp(),
+            UnaryOp::Neg => -x,
+            UnaryOp::Relu => x.max(0.0),
+            UnaryOp::ReluGrad => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            UnaryOp::Recip => 1.0 / x,
+            UnaryOp::Sqrt => x.sqrt(),
+            UnaryOp::Rsqrt => 1.0 / x.sqrt(),
+            UnaryOp::Square => x * x,
+            UnaryOp::Scale(c) => x * c,
+            UnaryOp::AddConst(c) => x + c,
+            UnaryOp::Silu => x / (1.0 + (-x).exp()),
+            UnaryOp::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            UnaryOp::Tanh => x.tanh(),
+            UnaryOp::Ln => x.ln(),
+        }
+    }
+}
+
+/// An EinSum expression — the code run at an EinGraph vertex.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum EinSum {
+    /// A graph input (leaf). `inputs` is empty iff the EinSum is `Input`.
+    Input,
+    /// `Z[l_z] <- agg_{l_x \ l_z} op(X[l_x])`: map, transpose (when `l_z`
+    /// permutes `l_x`), and/or reduction (when labels are dropped).
+    Unary {
+        lx: LabelList,
+        lz: LabelList,
+        op: UnaryOp,
+        agg: AggOp,
+    },
+    /// `Z[l_z] <- agg_{l_agg} join(X[l_x], Y[l_y])` (paper Eq. 2).
+    Binary {
+        lx: LabelList,
+        ly: LabelList,
+        lz: LabelList,
+        join: JoinOp,
+        agg: AggOp,
+    },
+}
+
+impl EinSum {
+    /// Classic contraction constructor: `Mul`/`Sum` over the given labels.
+    pub fn contraction(lx: LabelList, ly: LabelList, lz: LabelList) -> EinSum {
+        EinSum::Binary {
+            lx,
+            ly,
+            lz,
+            join: JoinOp::Mul,
+            agg: AggOp::Sum,
+        }
+    }
+
+    /// Elementwise binary op (no aggregation): `l_z` must equal the
+    /// deduplicated join schema.
+    pub fn elementwise(lx: LabelList, ly: LabelList, join: JoinOp) -> EinSum {
+        let lz = concat_dedup(&lx, &ly);
+        EinSum::Binary {
+            lx,
+            ly,
+            lz,
+            join,
+            agg: AggOp::Sum,
+        }
+    }
+
+    /// Unary map preserving shape.
+    pub fn map(lx: LabelList, op: UnaryOp) -> EinSum {
+        EinSum::Unary {
+            lz: lx.clone(),
+            lx,
+            op,
+            agg: AggOp::Sum,
+        }
+    }
+
+    /// Unary reduction: aggregate out the labels of `lx` missing from `lz`.
+    pub fn reduce(lx: LabelList, lz: LabelList, agg: AggOp) -> EinSum {
+        EinSum::Unary {
+            lx,
+            lz,
+            op: UnaryOp::Identity,
+            agg,
+        }
+    }
+
+    /// Number of tensor operands (0 for `Input`).
+    pub fn arity(&self) -> usize {
+        match self {
+            EinSum::Input => 0,
+            EinSum::Unary { .. } => 1,
+            EinSum::Binary { .. } => 2,
+        }
+    }
+
+    /// Output label list (`None` for inputs, which carry only a bound).
+    pub fn lz(&self) -> Option<&LabelList> {
+        match self {
+            EinSum::Input => None,
+            EinSum::Unary { lz, .. } => Some(lz),
+            EinSum::Binary { lz, .. } => Some(lz),
+        }
+    }
+
+    /// Operand label lists in order.
+    pub fn operand_labels(&self) -> Vec<&LabelList> {
+        match self {
+            EinSum::Input => vec![],
+            EinSum::Unary { lx, .. } => vec![lx],
+            EinSum::Binary { lx, ly, .. } => vec![lx, ly],
+        }
+    }
+
+    /// `l_XY`: concatenation of all operand label lists (duplicates kept).
+    pub fn lxy(&self) -> LabelList {
+        match self {
+            EinSum::Input => vec![],
+            EinSum::Unary { lx, .. } => lx.clone(),
+            EinSum::Binary { lx, ly, .. } => concat(lx, ly),
+        }
+    }
+
+    /// Unique labels across operands (the `D` "buckets" of Section 8.1 are
+    /// these, with co-partitioned repeats collapsed).
+    pub fn unique_labels(&self) -> LabelList {
+        match self {
+            EinSum::Input => vec![],
+            EinSum::Unary { lx, .. } => lx.clone(),
+            EinSum::Binary { lx, ly, .. } => concat_dedup(lx, ly),
+        }
+    }
+
+    /// `l_agg`: labels aggregated out (in inputs, not in output).
+    pub fn lagg(&self) -> LabelList {
+        match self.lz() {
+            None => vec![],
+            Some(lz) => difference(&self.unique_labels(), lz),
+        }
+    }
+
+    /// True if this is a contraction in the paper's sense: some labels are
+    /// aggregated out.
+    pub fn is_contraction(&self) -> bool {
+        !self.lagg().is_empty()
+    }
+
+    /// True if this is an elementwise op (no aggregation).
+    pub fn is_elementwise(&self) -> bool {
+        self.arity() > 0 && self.lagg().is_empty()
+    }
+
+    /// Validate the expression against operand bounds and infer the output
+    /// bound `b_Z = b_XY[l_Z; l_XY]`.
+    ///
+    /// Checks (per Section 3): no repeated labels *within* one operand; all
+    /// output labels appear in some input (no broadcast); repeated labels
+    /// across operands agree on their bound.
+    pub fn infer_bound(&self, input_bounds: &[&[usize]]) -> Result<Vec<usize>> {
+        if input_bounds.len() != self.arity() {
+            return Err(Error::InvalidEinsum(format!(
+                "expected {} operands, got {}",
+                self.arity(),
+                input_bounds.len()
+            )));
+        }
+        match self {
+            EinSum::Input => Err(Error::InvalidEinsum(
+                "cannot infer bound of an Input vertex (bound is given, not derived)".into(),
+            )),
+            EinSum::Unary { lx, lz, .. } => {
+                let bx = input_bounds[0];
+                if bx.len() != lx.len() {
+                    return Err(Error::InvalidEinsum(format!(
+                        "rank mismatch: labels {lx:?} vs bound {bx:?}"
+                    )));
+                }
+                if !all_distinct(lx) {
+                    return Err(Error::InvalidEinsum(format!(
+                        "repeated label within operand: {lx:?}"
+                    )));
+                }
+                if !all_distinct(lz) {
+                    return Err(Error::InvalidEinsum(format!(
+                        "repeated label in output: {lz:?}"
+                    )));
+                }
+                try_project(bx, lz, lx).ok_or_else(|| {
+                    Error::InvalidEinsum(format!(
+                        "output labels {lz:?} not all present in input {lx:?} (broadcast unsupported)"
+                    ))
+                })
+            }
+            EinSum::Binary { lx, ly, lz, .. } => {
+                let (bx, by) = (input_bounds[0], input_bounds[1]);
+                if bx.len() != lx.len() || by.len() != ly.len() {
+                    return Err(Error::InvalidEinsum(format!(
+                        "rank mismatch: {lx:?}/{bx:?} or {ly:?}/{by:?}"
+                    )));
+                }
+                if !all_distinct(lx) || !all_distinct(ly) {
+                    return Err(Error::InvalidEinsum(format!(
+                        "repeated label within an operand: {lx:?} / {ly:?}"
+                    )));
+                }
+                if !all_distinct(lz) {
+                    return Err(Error::InvalidEinsum(format!(
+                        "repeated label in output: {lz:?}"
+                    )));
+                }
+                // Shared labels must agree on bounds.
+                for (i, lab) in lx.iter().enumerate() {
+                    if let Some(j) = ly.iter().position(|m| m == lab) {
+                        if bx[i] != by[j] {
+                            return Err(Error::InvalidEinsum(format!(
+                                "label {lab} bound mismatch: {} vs {}",
+                                bx[i], by[j]
+                            )));
+                        }
+                    }
+                }
+                let bxy = [bx, by].concat();
+                let lxy = self.lxy();
+                try_project(&bxy, lz, &lxy).ok_or_else(|| {
+                    Error::InvalidEinsum(format!(
+                        "output labels {lz:?} not all present in inputs {lxy:?} (broadcast unsupported)"
+                    ))
+                })
+            }
+        }
+    }
+
+    /// `b_XY`: concatenated operand bounds (binary), or `b_X` (unary).
+    pub fn bxy(&self, input_bounds: &[&[usize]]) -> Vec<usize> {
+        input_bounds.concat()
+    }
+
+    /// Estimated floating-point operations to evaluate this EinSum on the
+    /// given operand bounds (one op per join application + one per
+    /// aggregation combine). Used for work-balance diagnostics; all
+    /// decompositions of a vertex share this total (the paper's premise
+    /// that only *communication* differentiates them).
+    pub fn flops(&self, input_bounds: &[&[usize]]) -> Result<f64> {
+        match self {
+            EinSum::Input => Ok(0.0),
+            EinSum::Unary { lx, .. } => {
+                let bx = input_bounds[0];
+                if bx.len() != lx.len() {
+                    return Err(Error::InvalidEinsum("rank mismatch in flops".into()));
+                }
+                Ok(bx.iter().map(|&b| b as f64).product::<f64>() * 2.0)
+            }
+            EinSum::Binary { lz, .. } => {
+                let bxy = self.bxy(input_bounds);
+                let lxy = self.lxy();
+                let uniq = self.unique_labels();
+                let full: f64 = project(&bxy, &uniq, &lxy)
+                    .iter()
+                    .map(|&b| b as f64)
+                    .product();
+                let out: f64 = project(&bxy, lz, &lxy).iter().map(|&b| b as f64).product();
+                // one join op per point in the full iteration space, plus
+                // one combine per aggregated element
+                Ok(full + (full - out).max(0.0))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for EinSum {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        fn ll(l: &LabelList) -> String {
+            l.iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+        match self {
+            EinSum::Input => write!(f, "input"),
+            EinSum::Unary { lx, lz, op, agg } => {
+                if lz.len() < lx.len() {
+                    write!(f, "Z[{}] <- {:?}_{{..}} {:?}(X[{}])", ll(lz), agg, op, ll(lx))
+                } else {
+                    write!(f, "Z[{}] <- {:?}(X[{}])", ll(lz), op, ll(lx))
+                }
+            }
+            EinSum::Binary {
+                lx,
+                ly,
+                lz,
+                join,
+                agg,
+            } => write!(
+                f,
+                "Z[{}] <- {:?}_{{..}} {:?}(X[{}], Y[{}])",
+                ll(lz),
+                agg,
+                join,
+                ll(lx),
+                ll(ly)
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+
+    fn matmul() -> EinSum {
+        EinSum::contraction(labels("i j"), labels("j k"), labels("i k"))
+    }
+
+    #[test]
+    fn matmul_bound_inference() {
+        let e = matmul();
+        let b = e.infer_bound(&[&[100, 200], &[200, 50]]).unwrap();
+        assert_eq!(b, vec![100, 50]);
+        assert_eq!(e.lagg(), labels("j"));
+        assert!(e.is_contraction());
+    }
+
+    #[test]
+    fn bound_mismatch_rejected() {
+        let e = matmul();
+        assert!(e.infer_bound(&[&[100, 200], &[300, 50]]).is_err());
+    }
+
+    #[test]
+    fn broadcast_rejected() {
+        let e = EinSum::contraction(labels("i j"), labels("j k"), labels("i k m"));
+        assert!(e.infer_bound(&[&[4, 4], &[4, 4]]).is_err());
+    }
+
+    #[test]
+    fn repeated_label_within_operand_rejected() {
+        let e = EinSum::contraction(labels("i i"), labels("i k"), labels("k"));
+        assert!(e.infer_bound(&[&[4, 4], &[4, 4]]).is_err());
+    }
+
+    #[test]
+    fn paper_batch_matmul_example() {
+        // Z_ik <- sum_{b,j} X_{i,j,b} Y_{j,b,k}; bX=[10,100,20], bY=[100,20,2000]
+        let e = EinSum::contraction(labels("i j b"), labels("j b k"), labels("i k"));
+        let bz = e.infer_bound(&[&[10, 100, 20], &[100, 20, 2000]]).unwrap();
+        assert_eq!(bz, vec![10, 2000]);
+        // l_agg = [b, j] per the paper (order: unique(lxy) \ lz = [j, b])
+        let lagg = e.lagg();
+        assert_eq!(lagg.len(), 2);
+        assert!(lagg.contains(&labels("b")[0]) && lagg.contains(&labels("j")[0]));
+        // bound vector for the aggregation is [20,100] (b then j) or [100,20]
+        // in our (j,b) order — same multiset.
+        let bxy = e.bxy(&[&[10, 100, 20], &[100, 20, 2000]]);
+        let agg_bound = crate::einsum::label::project(&bxy, &lagg, &e.lxy());
+        let mut sorted = agg_bound.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![20, 100]);
+    }
+
+    #[test]
+    fn elementwise_classification() {
+        let e = EinSum::elementwise(labels("i j"), labels("i j"), JoinOp::Add);
+        assert!(e.is_elementwise());
+        assert!(!e.is_contraction());
+        assert_eq!(e.infer_bound(&[&[3, 4], &[3, 4]]).unwrap(), vec![3, 4]);
+    }
+
+    #[test]
+    fn broadcast_join_divide_by_row() {
+        // Y_ij <- E_ij / S_i  (the softmax normalization step)
+        let e = EinSum::Binary {
+            lx: labels("i j"),
+            ly: labels("i"),
+            lz: labels("i j"),
+            join: JoinOp::Div,
+            agg: AggOp::Sum,
+        };
+        assert_eq!(e.infer_bound(&[&[4, 8], &[4]]).unwrap(), vec![4, 8]);
+        assert!(e.lagg().is_empty());
+    }
+
+    #[test]
+    fn unary_reduce_max() {
+        // C_i <- max_j X_ij
+        let e = EinSum::reduce(labels("i j"), labels("i"), AggOp::Max);
+        assert_eq!(e.infer_bound(&[&[4, 8]]).unwrap(), vec![4]);
+        assert_eq!(e.lagg(), labels("j"));
+    }
+
+    #[test]
+    fn unary_transpose() {
+        let e = EinSum::reduce(labels("i j b"), labels("b i j"), AggOp::Sum);
+        assert_eq!(e.infer_bound(&[&[10, 100, 20]]).unwrap(), vec![20, 10, 100]);
+        assert!(e.lagg().is_empty());
+    }
+
+    #[test]
+    fn scalar_ops() {
+        assert_eq!(JoinOp::SquaredDiff.apply(3.0, 1.0), 4.0);
+        assert_eq!(JoinOp::AbsDiff.apply(1.0, 3.0), 2.0);
+        assert_eq!(AggOp::Max.combine(1.0, 2.0), 2.0);
+        assert_eq!(AggOp::Sum.identity(), 0.0);
+        assert_eq!(AggOp::Max.identity(), f32::NEG_INFINITY);
+        assert!((UnaryOp::Silu.apply(0.0)).abs() < 1e-7);
+        assert_eq!(UnaryOp::Scale(2.0).apply(3.0), 6.0);
+        assert_eq!(UnaryOp::ReluGrad.apply(-1.0), 0.0);
+    }
+
+    #[test]
+    fn flops_matmul() {
+        let e = matmul();
+        // 8x8x8: 512 joins + (512-64) combines
+        let f = e.flops(&[&[8, 8], &[8, 8]]).unwrap();
+        assert_eq!(f, 512.0 + 448.0);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let s = format!("{}", matmul());
+        assert!(s.contains("Mul"));
+    }
+}

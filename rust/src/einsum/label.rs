@@ -1,0 +1,221 @@
+//! Labels and label lists.
+//!
+//! A *label* is a symbol that indexes a tensor dimension (the `i`, `j`, `k`
+//! of `Z_ik <- sum_j X_ij * Y_jk`). Labels are interned into `u32` handles
+//! so that label lists are cheap to copy, hash, and compare — the planner
+//! manipulates millions of them while enumerating partitionings.
+//!
+//! The key primitive on label lists is the paper's project/permute
+//! operation `b[l1; l2]` ([`project`]): build a vector of length `|l1|`
+//! whose `i`-th entry is `b[j]` where `l1[i] == l2[j]`.
+
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::RwLock;
+
+/// Global label interner: name -> id and id -> name.
+struct Interner {
+    by_name: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+static INTERNER: Lazy<RwLock<Interner>> = Lazy::new(|| {
+    RwLock::new(Interner {
+        by_name: HashMap::new(),
+        names: Vec::new(),
+    })
+});
+
+/// An interned dimension label.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Label(pub u32);
+
+impl Label {
+    /// Intern a label by name. The same name always returns the same id.
+    pub fn new(name: &str) -> Label {
+        {
+            let g = INTERNER.read().unwrap();
+            if let Some(&id) = g.by_name.get(name) {
+                return Label(id);
+            }
+        }
+        let mut g = INTERNER.write().unwrap();
+        if let Some(&id) = g.by_name.get(name) {
+            return Label(id);
+        }
+        let id = g.names.len() as u32;
+        g.names.push(name.to_string());
+        g.by_name.insert(name.to_string(), id);
+        Label(id)
+    }
+
+    /// The interned name.
+    pub fn name(&self) -> String {
+        INTERNER.read().unwrap().names[self.0 as usize].clone()
+    }
+}
+
+impl fmt::Debug for Label {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl fmt::Display for Label {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Convenience: intern a whitespace- or comma-separated list of label names.
+///
+/// ```no_run
+/// // (no_run: doctest binaries in this container lack the xla rpath)
+/// use eindecomp::einsum::label::labels;
+/// let l = labels("i j k");
+/// assert_eq!(l.len(), 3);
+/// ```
+pub fn labels(spec: &str) -> Vec<Label> {
+    spec.split(|c: char| c.is_whitespace() || c == ',')
+        .filter(|s| !s.is_empty())
+        .map(Label::new)
+        .collect()
+}
+
+/// A list (vector) of labels — `l_X` in the paper.
+pub type LabelList = Vec<Label>;
+
+/// The paper's `b[l1; l2]` operation: project/permute `values` (parallel to
+/// `l2`) onto the order given by `l1`. Entry `i` of the result is
+/// `values[j]` for the first `j` with `l1[i] == l2[j]`.
+///
+/// Example from the paper: `b = [2,3,4]`, `l1 = [k,i]`, `l2 = [i,j,k]`
+/// gives `[4,2]`.
+pub fn project<T: Copy>(values: &[T], l1: &[Label], l2: &[Label]) -> Vec<T> {
+    debug_assert_eq!(values.len(), l2.len(), "values must parallel l2");
+    l1.iter()
+        .map(|a| {
+            let j = l2
+                .iter()
+                .position(|b| b == a)
+                .unwrap_or_else(|| panic!("label {a} not found in {l2:?}"));
+            values[j]
+        })
+        .collect()
+}
+
+/// Fallible version of [`project`] for validation paths.
+pub fn try_project<T: Copy>(values: &[T], l1: &[Label], l2: &[Label]) -> Option<Vec<T>> {
+    if values.len() != l2.len() {
+        return None;
+    }
+    l1.iter()
+        .map(|a| l2.iter().position(|b| b == a).map(|j| values[j]))
+        .collect()
+}
+
+/// The paper's `⊙` operator: concatenate two label lists, removing
+/// duplicates (keeping first occurrence) — the schema of a natural join.
+/// Duplicates within `l1` itself are removed too, so
+/// `concat_dedup(l_XY, [])` yields the unique-label list.
+pub fn concat_dedup(l1: &[Label], l2: &[Label]) -> LabelList {
+    let mut out: LabelList = Vec::with_capacity(l1.len() + l2.len());
+    for &l in l1.iter().chain(l2) {
+        if !out.contains(&l) {
+            out.push(l);
+        }
+    }
+    out
+}
+
+/// Plain concatenation `l_XY` (duplicates kept).
+pub fn concat(l1: &[Label], l2: &[Label]) -> LabelList {
+    let mut out = l1.to_vec();
+    out.extend_from_slice(l2);
+    out
+}
+
+/// Labels of `l1` not present in `l2` (order preserved): e.g. `l_agg` is
+/// `unique(l_XY) \ l_Z`.
+pub fn difference(l1: &[Label], l2: &[Label]) -> LabelList {
+    l1.iter().filter(|l| !l2.contains(l)).copied().collect()
+}
+
+/// True if the list has no repeated label.
+pub fn all_distinct(l: &[Label]) -> bool {
+    for i in 0..l.len() {
+        for j in (i + 1)..l.len() {
+            if l[i] == l[j] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_stable() {
+        let a = Label::new("i");
+        let b = Label::new("i");
+        let c = Label::new("j");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.name(), "i");
+    }
+
+    #[test]
+    fn labels_parses_sep() {
+        assert_eq!(labels("i j k"), labels("i,j,k"));
+        assert_eq!(labels("  i  "), vec![Label::new("i")]);
+    }
+
+    #[test]
+    fn project_matches_paper_example() {
+        // b = [2,3,4], l1 = [k,i], l2 = [i,j,k] => [4,2]
+        let b = [2usize, 3, 4];
+        let l1 = labels("k i");
+        let l2 = labels("i j k");
+        assert_eq!(project(&b, &l1, &l2), vec![4, 2]);
+    }
+
+    #[test]
+    fn project_uses_first_occurrence() {
+        // b_XY over l_XY with repeated labels: first occurrence is taken.
+        let bxy = [10usize, 100, 20, 100, 20, 2000];
+        let lxy = labels("i j b j b k");
+        let lagg = labels("b j");
+        assert_eq!(project(&bxy, &lagg, &lxy), vec![20, 100]);
+    }
+
+    #[test]
+    fn try_project_missing_label() {
+        let b = [1usize, 2];
+        assert!(try_project(&b, &labels("z"), &labels("i j")).is_none());
+    }
+
+    #[test]
+    fn concat_dedup_natural_join_schema() {
+        let lx = labels("i j");
+        let ly = labels("j k");
+        assert_eq!(concat_dedup(&lx, &ly), labels("i j k"));
+    }
+
+    #[test]
+    fn difference_gives_agg_labels() {
+        let lxy = labels("i j j k");
+        let lz = labels("i k");
+        let uniq = concat_dedup(&lxy, &[]);
+        assert_eq!(difference(&uniq, &lz), labels("j"));
+    }
+
+    #[test]
+    fn distinctness() {
+        assert!(all_distinct(&labels("i j k")));
+        assert!(!all_distinct(&labels("i j i")));
+    }
+}

@@ -1,0 +1,376 @@
+//! EinSum "macros": reusable sub-graph builders for the constructions the
+//! paper spells out in Section 3 — numerically-stable softmax, the
+//! attention mechanism, and multi-headed attention — plus small helpers
+//! (linear layers) shared by the model builders in [`crate::models`].
+
+use super::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use super::graph::{EinGraph, VertexId};
+use super::label::{difference, Label, LabelList};
+use crate::error::{Error, Result};
+
+/// Numerically-stable softmax over the *last* rank of `x`, batched across
+/// the leading ranks — exactly the paper's four-EinSum construction:
+///
+/// ```text
+///   C_i   <- max_j X_ij
+///   E_ij  <- e^(X_ij - C_i)     (SubExp join)
+///   S_i   <- sum_j E_ij
+///   Y_ij  <- E_ij / S_i
+/// ```
+pub fn softmax(g: &mut EinGraph, name: &str, x: VertexId, lx: &LabelList) -> Result<VertexId> {
+    let rank = g.vertex(x).bound.len();
+    if lx.len() != rank {
+        return Err(Error::InvalidEinsum(format!(
+            "softmax labels {lx:?} do not match rank {rank}"
+        )));
+    }
+    if rank < 1 {
+        return Err(Error::InvalidEinsum("softmax needs rank >= 1".into()));
+    }
+    let batch: LabelList = lx[..rank - 1].to_vec();
+    let c = g.add(
+        &format!("{name}.max"),
+        EinSum::reduce(lx.clone(), batch.clone(), AggOp::Max),
+        vec![x],
+    )?;
+    let e = g.add(
+        &format!("{name}.exp"),
+        EinSum::Binary {
+            lx: lx.clone(),
+            ly: batch.clone(),
+            lz: lx.clone(),
+            join: JoinOp::SubExp,
+            agg: AggOp::Sum,
+        },
+        vec![x, c],
+    )?;
+    let s = g.add(
+        &format!("{name}.sum"),
+        EinSum::reduce(lx.clone(), batch.clone(), AggOp::Sum),
+        vec![e],
+    )?;
+    g.add(
+        &format!("{name}.norm"),
+        EinSum::Binary {
+            lx: lx.clone(),
+            ly: batch,
+            lz: lx.clone(),
+            join: JoinOp::Div,
+            agg: AggOp::Sum,
+        },
+        vec![e, s],
+    )
+}
+
+/// Single-head attention `softmax(Q K^T / sqrt(d_k)) V` (paper Section 3):
+///
+/// ```text
+///   T1_ik <- sum_j Q_ij K_kj          T2 <- T1 / sqrt(d_k)
+///   T3    <- softmax(T2)              Y_ik <- sum_j T3_ij V_jk
+/// ```
+///
+/// `q`, `k`, `v` are rank-2 with bounds `[s, d]`, `[s', d]`, `[s', d]`.
+pub fn attention(
+    g: &mut EinGraph,
+    name: &str,
+    q: VertexId,
+    k: VertexId,
+    v: VertexId,
+) -> Result<VertexId> {
+    let dk = *g
+        .vertex(k)
+        .bound
+        .last()
+        .ok_or_else(|| Error::InvalidEinsum("attention: K must be rank-2".into()))?;
+    let (i, j, kk) = (Label::new("i"), Label::new("j"), Label::new("k"));
+    let t1 = g.add(
+        &format!("{name}.qk"),
+        EinSum::contraction(vec![i, j], vec![kk, j], vec![i, kk]),
+        vec![q, k],
+    )?;
+    let t2 = g.add(
+        &format!("{name}.scale"),
+        EinSum::map(vec![i, kk], UnaryOp::Scale(1.0 / (dk as f32).sqrt())),
+        vec![t1],
+    )?;
+    let t3 = softmax(g, &format!("{name}.softmax"), t2, &vec![i, kk])?;
+    g.add(
+        &format!("{name}.av"),
+        EinSum::contraction(vec![i, j], vec![j, kk], vec![i, kk]),
+        vec![t3, v],
+    )
+}
+
+/// Multi-headed attention, exactly the paper's EinSum formulation with
+/// labels `s` (sequence), `s'`, `h` (head), `a` (attribute/model dim),
+/// `d` (per-head dim), optionally batched with a leading `b` label:
+///
+/// ```text
+///   QH_shd <- sum_a Q_sa WQ_ahd      (same for K, V)
+///   T1_hss' <- sum_d QH_shd KH_s'hd      T2 <- T1 / sqrt(d_k)
+///   T3 <- softmax(T2)                    O_shd <- sum_s' T3_hss' VH_s'hd
+///   Y_sa <- sum_{h,d} O_shd WO_ahd
+/// ```
+///
+/// Returns the output projection vertex. `batched=true` adds a leading `b`
+/// dimension to the activations (weights are shared), which is the form
+/// used for LLaMA first-token inference with batch > 1.
+#[allow(clippy::too_many_arguments)]
+pub fn multihead_attention(
+    g: &mut EinGraph,
+    name: &str,
+    q: VertexId,
+    k: VertexId,
+    v: VertexId,
+    wq: VertexId,
+    wk: VertexId,
+    wv: VertexId,
+    wo: VertexId,
+    batched: bool,
+) -> Result<VertexId> {
+    let b = Label::new("b");
+    let s = Label::new("s");
+    let s2 = Label::new("s'");
+    let h = Label::new("h");
+    let d = Label::new("d");
+    let a = Label::new("a");
+    let with_b = |mut l: LabelList| -> LabelList {
+        if batched {
+            let mut out = vec![b];
+            out.append(&mut l);
+            out
+        } else {
+            l
+        }
+    };
+    // d_k = per-head dimension = last dim of WK [a, h, d]
+    let dk = *g.vertex(wk).bound.last().unwrap() as f32;
+
+    let proj = |g: &mut EinGraph, nm: &str, x: VertexId, w: VertexId| -> Result<VertexId> {
+        // QH_(b)shd <- sum_a Q_(b)sa x WQ_ahd
+        g.add(
+            nm,
+            EinSum::contraction(with_b(vec![s, a]), vec![a, h, d], with_b(vec![s, h, d])),
+            vec![x, w],
+        )
+    };
+    let qh = proj(g, &format!("{name}.qproj"), q, wq)?;
+    let kh = proj(g, &format!("{name}.kproj"), k, wk)?;
+    let vh = proj(g, &format!("{name}.vproj"), v, wv)?;
+
+    // scores: T1_(b)hss' <- sum_d QH_(b)shd x KH_(b)s'hd
+    // (the s' side reuses the same label list with s replaced by s')
+    let kh_labels = with_b(vec![s2, h, d]);
+    let t1 = g.add(
+        &format!("{name}.scores"),
+        EinSum::contraction(with_b(vec![s, h, d]), kh_labels, with_b(vec![h, s, s2])),
+        vec![qh, kh],
+    )?;
+    let t2 = g.add(
+        &format!("{name}.scale"),
+        EinSum::map(with_b(vec![h, s, s2]), UnaryOp::Scale(1.0 / dk.sqrt())),
+        vec![t1],
+    )?;
+    let t3 = softmax(g, &format!("{name}.softmax"), t2, &with_b(vec![h, s, s2]))?;
+    // O_(b)shd <- sum_s' T3_(b)hss' x VH_(b)s'hd
+    let o = g.add(
+        &format!("{name}.attnv"),
+        EinSum::contraction(
+            with_b(vec![h, s, s2]),
+            with_b(vec![s2, h, d]),
+            with_b(vec![s, h, d]),
+        ),
+        vec![t3, vh],
+    )?;
+    // Y_(b)sa <- sum_{h,d} O_(b)shd x WO_ahd  (WO is rank-3 as in the paper)
+    g.add(
+        &format!("{name}.oproj"),
+        EinSum::contraction(with_b(vec![s, h, d]), vec![a, h, d], with_b(vec![s, a])),
+        vec![o, wo],
+    )
+}
+
+/// Dense layer `Y[.., n] <- sum_f X[.., f] W[f, n]` with labels supplied by
+/// the caller; optionally followed by a unary activation.
+pub fn linear(
+    g: &mut EinGraph,
+    name: &str,
+    x: VertexId,
+    w: VertexId,
+    lx: &LabelList,
+    f: Label,
+    n: Label,
+    activation: Option<UnaryOp>,
+) -> Result<VertexId> {
+    let lz: LabelList = lx
+        .iter()
+        .map(|&l| if l == f { n } else { l })
+        .collect();
+    let mut out = g.add(
+        name,
+        EinSum::contraction(lx.clone(), vec![f, n], lz.clone()),
+        vec![x, w],
+    )?;
+    if let Some(act) = activation {
+        out = g.add(&format!("{name}.act"), EinSum::map(lz, act), vec![out])?;
+    }
+    Ok(out)
+}
+
+/// RMSNorm-style normalization used by LLaMA blocks, expressed in EinSum:
+///
+/// ```text
+///   SQ = X^2 ; MS_s = (1/dim) sum_a SQ_sa ; R = rsqrt(MS) ;
+///   XN_sa = X_sa * R_s ; Y_sa = XN_sa * G_a
+/// ```
+pub fn rmsnorm(
+    g: &mut EinGraph,
+    name: &str,
+    x: VertexId,
+    gain: VertexId,
+    lx: &LabelList,
+) -> Result<VertexId> {
+    let rank = lx.len();
+    let batch: LabelList = lx[..rank - 1].to_vec();
+    let feat = lx[rank - 1];
+    let dim = *g.vertex(x).bound.last().unwrap() as f32;
+    let sq = g.add(
+        &format!("{name}.sq"),
+        EinSum::map(lx.clone(), UnaryOp::Square),
+        vec![x],
+    )?;
+    let ssum = g.add(
+        &format!("{name}.ssum"),
+        EinSum::reduce(lx.clone(), batch.clone(), AggOp::Sum),
+        vec![sq],
+    )?;
+    let ms = g.add(
+        &format!("{name}.mean"),
+        EinSum::map(batch.clone(), UnaryOp::Scale(1.0 / dim)),
+        vec![ssum],
+    )?;
+    let r = g.add(
+        &format!("{name}.rsqrt"),
+        EinSum::map(batch.clone(), UnaryOp::Rsqrt),
+        vec![ms],
+    )?;
+    let xn = g.add(
+        &format!("{name}.apply"),
+        EinSum::Binary {
+            lx: lx.clone(),
+            ly: batch,
+            lz: lx.clone(),
+            join: JoinOp::Mul,
+            agg: AggOp::Sum,
+        },
+        vec![x, r],
+    )?;
+    g.add(
+        &format!("{name}.gain"),
+        EinSum::Binary {
+            lx: lx.clone(),
+            ly: vec![feat],
+            lz: lx.clone(),
+            join: JoinOp::Mul,
+            agg: AggOp::Sum,
+        },
+        vec![xn, gain],
+    )
+}
+
+/// Labels `l_agg` that a softmax over `lx` aggregates (the last label).
+pub fn softmax_agg_labels(lx: &LabelList) -> LabelList {
+    difference(lx, &lx[..lx.len() - 1].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+
+    #[test]
+    fn softmax_shapes() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![4, 8]);
+        let y = softmax(&mut g, "sm", x, &labels("i j")).unwrap();
+        assert_eq!(g.vertex(y).bound, vec![4, 8]);
+        g.validate().unwrap();
+        // 4 EinSum vertices added
+        assert_eq!(g.len(), 5);
+    }
+
+    #[test]
+    fn softmax_rank3_batched() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![2, 4, 8]);
+        let y = softmax(&mut g, "sm", x, &labels("h s t")).unwrap();
+        assert_eq!(g.vertex(y).bound, vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn attention_shapes() {
+        let mut g = EinGraph::new();
+        let q = g.input("Q", vec![16, 8]);
+        let k = g.input("K", vec![16, 8]);
+        let v = g.input("V", vec![16, 8]);
+        let y = attention(&mut g, "attn", q, k, v).unwrap();
+        assert_eq!(g.vertex(y).bound, vec![16, 8]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn mha_shapes_match_paper() {
+        // Q,K,V: [s, a]; W{Q,K,V}: [a, h, d]; WO: [a, h, d]; out [s, a]
+        let (s, a, h, d) = (16, 32, 4, 8);
+        let mut g = EinGraph::new();
+        let q = g.input("Q", vec![s, a]);
+        let k = g.input("K", vec![s, a]);
+        let v = g.input("V", vec![s, a]);
+        let wq = g.input("WQ", vec![a, h, d]);
+        let wk = g.input("WK", vec![a, h, d]);
+        let wv = g.input("WV", vec![a, h, d]);
+        let wo = g.input("WO", vec![a, h, d]);
+        let y = multihead_attention(&mut g, "mha", q, k, v, wq, wk, wv, wo, false).unwrap();
+        assert_eq!(g.vertex(y).bound, vec![s, a]);
+        g.validate().unwrap();
+        // scores vertex has bound [h, s, s]
+        let scores = g.by_name("mha.scores").unwrap();
+        assert_eq!(g.vertex(scores).bound, vec![h, s, s]);
+    }
+
+    #[test]
+    fn mha_batched() {
+        let (b, s, a, h, d) = (2, 8, 16, 2, 8);
+        let mut g = EinGraph::new();
+        let q = g.input("Q", vec![b, s, a]);
+        let k = g.input("K", vec![b, s, a]);
+        let v = g.input("V", vec![b, s, a]);
+        let wq = g.input("WQ", vec![a, h, d]);
+        let wk = g.input("WK", vec![a, h, d]);
+        let wv = g.input("WV", vec![a, h, d]);
+        let wo = g.input("WO", vec![a, h, d]);
+        let y = multihead_attention(&mut g, "mha", q, k, v, wq, wk, wv, wo, true).unwrap();
+        assert_eq!(g.vertex(y).bound, vec![b, s, a]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn linear_with_activation() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![4, 8]);
+        let w = g.input("W", vec![8, 16]);
+        let (bl, f, n) = (Label::new("bb"), Label::new("f"), Label::new("n"));
+        let y = linear(&mut g, "fc", x, w, &vec![bl, f], f, n, Some(UnaryOp::Relu)).unwrap();
+        assert_eq!(g.vertex(y).bound, vec![4, 16]);
+    }
+
+    #[test]
+    fn rmsnorm_shapes() {
+        let mut g = EinGraph::new();
+        let x = g.input("X", vec![8, 32]);
+        let gain = g.input("G", vec![32]);
+        let y = rmsnorm(&mut g, "rms", x, gain, &labels("s a")).unwrap();
+        assert_eq!(g.vertex(y).bound, vec![8, 32]);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+//! The EinSum language: labels, expressions, graphs, parser, and model
+//! macros (softmax, attention, ...). This is the paper's *programming
+//! abstraction* (Section 3): a fully declarative specification of tensor
+//! computations from which the system derives parallel decompositions.
+
+pub mod autodiff;
+pub mod expr;
+pub mod graph;
+pub mod label;
+pub mod macros;
+pub mod parser;
+
+pub use expr::{AggOp, EinSum, JoinOp, UnaryOp};
+pub use graph::{EinGraph, Vertex, VertexId};
+pub use label::{labels, Label, LabelList};

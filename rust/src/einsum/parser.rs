@@ -1,0 +1,360 @@
+//! Textual front-end for EinSum programs.
+//!
+//! Two levels are provided:
+//!
+//! 1. [`parse_spec`] — classic `numpy.einsum`-style subscript strings,
+//!    `"ij,jk->ik"` (single-character labels) or the multi-character form
+//!    `"b i j, b j k -> b i k"` (whitespace-separated labels). Returns the
+//!    operand/output label lists of a contraction.
+//!
+//! 2. [`parse_program`] — a small line-oriented program format used by the
+//!    CLI, mirroring how EinGraphs are supplied to the system:
+//!
+//!    ```text
+//!    input X [128, 256]
+//!    input Y [256, 64]
+//!    Z  = einsum ij,jk->ik X Y           # Mul/Sum contraction
+//!    D  = einsum ij,jk->ik X Y agg=max join=absdiff
+//!    R  = map relu Z
+//!    S  = reduce sum ij->i R
+//!    E  = ew add Z Z                     # elementwise binary
+//!    ```
+
+use super::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use super::graph::{EinGraph, VertexId};
+use super::label::{Label, LabelList};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parse one operand's subscripts: either all single-char (`"ij"`) or
+/// whitespace-separated multi-char (`"i j"` / `"seq head"`).
+fn parse_operand(s: &str) -> Result<LabelList> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    if s.contains(char::is_whitespace) {
+        Ok(s.split_whitespace().map(Label::new).collect())
+    } else {
+        Ok(s.chars()
+            .map(|c| {
+                if c.is_alphanumeric() || c == '\'' || c == '_' {
+                    Ok(Label::new(&c.to_string()))
+                } else {
+                    Err(Error::Parse(format!("bad subscript char {c:?} in {s:?}")))
+                }
+            })
+            .collect::<Result<Vec<_>>>()?)
+    }
+}
+
+/// Parse an einsum subscript spec `"lhs0,lhs1->rhs"` (or unary
+/// `"lhs->rhs"`). Returns (operand label lists, output label list).
+pub fn parse_spec(spec: &str) -> Result<(Vec<LabelList>, LabelList)> {
+    let (lhs, rhs) = spec
+        .split_once("->")
+        .ok_or_else(|| Error::Parse(format!("spec {spec:?} missing '->'")))?;
+    let operands = lhs
+        .split(',')
+        .map(parse_operand)
+        .collect::<Result<Vec<_>>>()?;
+    if operands.is_empty() || operands.len() > 2 {
+        return Err(Error::Parse(format!(
+            "spec {spec:?}: {} operands (1 or 2 supported)",
+            operands.len()
+        )));
+    }
+    let out = parse_operand(rhs)?;
+    Ok((operands, out))
+}
+
+/// Build a contraction-style [`EinSum`] from a spec string plus optional
+/// agg/join overrides.
+pub fn einsum_from_spec(spec: &str, agg: AggOp, join: JoinOp) -> Result<EinSum> {
+    let (ops, lz) = parse_spec(spec)?;
+    match ops.len() {
+        1 => Ok(EinSum::Unary {
+            lx: ops[0].clone(),
+            lz,
+            op: UnaryOp::Identity,
+            agg,
+        }),
+        2 => Ok(EinSum::Binary {
+            lx: ops[0].clone(),
+            ly: ops[1].clone(),
+            lz,
+            join,
+            agg,
+        }),
+        _ => unreachable!(),
+    }
+}
+
+fn parse_agg(s: &str) -> Result<AggOp> {
+    match s {
+        "sum" => Ok(AggOp::Sum),
+        "max" => Ok(AggOp::Max),
+        "min" => Ok(AggOp::Min),
+        "prod" => Ok(AggOp::Prod),
+        _ => Err(Error::Parse(format!("unknown agg op {s:?}"))),
+    }
+}
+
+fn parse_join(s: &str) -> Result<JoinOp> {
+    match s {
+        "mul" => Ok(JoinOp::Mul),
+        "add" => Ok(JoinOp::Add),
+        "sub" => Ok(JoinOp::Sub),
+        "div" => Ok(JoinOp::Div),
+        "sqdiff" => Ok(JoinOp::SquaredDiff),
+        "absdiff" => Ok(JoinOp::AbsDiff),
+        "subexp" => Ok(JoinOp::SubExp),
+        "max" => Ok(JoinOp::Max),
+        "min" => Ok(JoinOp::Min),
+        _ => Err(Error::Parse(format!("unknown join op {s:?}"))),
+    }
+}
+
+fn parse_unary(s: &str) -> Result<UnaryOp> {
+    if let Some(c) = s.strip_prefix("scale:") {
+        let v: f32 = c
+            .parse()
+            .map_err(|_| Error::Parse(format!("bad scale constant {c:?}")))?;
+        return Ok(UnaryOp::Scale(v));
+    }
+    if let Some(c) = s.strip_prefix("addc:") {
+        let v: f32 = c
+            .parse()
+            .map_err(|_| Error::Parse(format!("bad add constant {c:?}")))?;
+        return Ok(UnaryOp::AddConst(v));
+    }
+    match s {
+        "id" | "identity" => Ok(UnaryOp::Identity),
+        "exp" => Ok(UnaryOp::Exp),
+        "neg" => Ok(UnaryOp::Neg),
+        "relu" => Ok(UnaryOp::Relu),
+        "relugrad" => Ok(UnaryOp::ReluGrad),
+        "recip" => Ok(UnaryOp::Recip),
+        "sqrt" => Ok(UnaryOp::Sqrt),
+        "rsqrt" => Ok(UnaryOp::Rsqrt),
+        "square" => Ok(UnaryOp::Square),
+        "silu" => Ok(UnaryOp::Silu),
+        "sigmoid" => Ok(UnaryOp::Sigmoid),
+        "tanh" => Ok(UnaryOp::Tanh),
+        "ln" => Ok(UnaryOp::Ln),
+        _ => Err(Error::Parse(format!("unknown unary op {s:?}"))),
+    }
+}
+
+fn parse_bound(s: &str) -> Result<Vec<usize>> {
+    let s = s.trim();
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| Error::Parse(format!("bound {s:?} must look like [8, 8]")))?;
+    inner
+        .split(',')
+        .filter(|x| !x.trim().is_empty())
+        .map(|x| {
+            x.trim()
+                .parse::<usize>()
+                .map_err(|_| Error::Parse(format!("bad bound entry {x:?}")))
+        })
+        .collect()
+}
+
+/// Parse a whole-program text into an [`EinGraph`]. See module docs for the
+/// format. `#`-comments and blank lines are skipped.
+pub fn parse_program(text: &str) -> Result<EinGraph> {
+    let mut g = EinGraph::new();
+    let mut env: HashMap<String, VertexId> = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: String| Error::Parse(format!("line {}: {msg}", lineno + 1));
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks[0] == "input" {
+            if toks.len() < 3 {
+                return Err(err("input NAME [dims]".into()));
+            }
+            let name = toks[1];
+            let bound = parse_bound(&toks[2..].join(" "))?;
+            let id = g.input(name, bound);
+            env.insert(name.to_string(), id);
+            continue;
+        }
+        // NAME = <cmd> ...
+        if toks.len() < 3 || toks[1] != "=" {
+            return Err(err(format!("expected 'NAME = cmd ...', got {line:?}")));
+        }
+        let name = toks[0];
+        let cmd = toks[2];
+        let rest = &toks[3..];
+        let lookup = |n: &str| -> Result<VertexId> {
+            env.get(n)
+                .copied()
+                .ok_or_else(|| Error::Parse(format!("line {}: unknown tensor {n:?}", lineno + 1)))
+        };
+        let id = match cmd {
+            "einsum" => {
+                if rest.len() < 2 {
+                    return Err(err("einsum SPEC X [Y] [agg=..] [join=..]".into()));
+                }
+                let spec = rest[0];
+                let mut agg = AggOp::Sum;
+                let mut join = JoinOp::Mul;
+                let mut args = Vec::new();
+                for t in &rest[1..] {
+                    if let Some(v) = t.strip_prefix("agg=") {
+                        agg = parse_agg(v)?;
+                    } else if let Some(v) = t.strip_prefix("join=") {
+                        join = parse_join(v)?;
+                    } else {
+                        args.push(lookup(t)?);
+                    }
+                }
+                let e = einsum_from_spec(spec, agg, join)?;
+                if e.arity() != args.len() {
+                    return Err(err(format!(
+                        "spec has {} operands but {} tensors given",
+                        e.arity(),
+                        args.len()
+                    )));
+                }
+                g.add(name, e, args)?
+            }
+            "map" => {
+                if rest.len() != 2 {
+                    return Err(err("map OP X".into()));
+                }
+                let op = parse_unary(rest[0])?;
+                let x = lookup(rest[1])?;
+                let lx = default_labels(g.vertex(x).bound.len());
+                g.add(name, EinSum::map(lx, op), vec![x])?
+            }
+            "reduce" => {
+                if rest.len() != 3 {
+                    return Err(err("reduce AGG SPEC X".into()));
+                }
+                let agg = parse_agg(rest[0])?;
+                let (ops, lz) = parse_spec(rest[1])?;
+                if ops.len() != 1 {
+                    return Err(err("reduce takes a unary spec like ij->i".into()));
+                }
+                let x = lookup(rest[2])?;
+                g.add(name, EinSum::reduce(ops[0].clone(), lz, agg), vec![x])?
+            }
+            "ew" => {
+                if rest.len() != 3 {
+                    return Err(err("ew JOIN X Y".into()));
+                }
+                let join = parse_join(rest[0])?;
+                let x = lookup(rest[1])?;
+                let y = lookup(rest[2])?;
+                let lx = default_labels(g.vertex(x).bound.len());
+                let ly = default_labels(g.vertex(y).bound.len());
+                g.add(name, EinSum::elementwise(lx, ly, join), vec![x, y])?
+            }
+            _ => return Err(err(format!("unknown command {cmd:?}"))),
+        };
+        env.insert(name.to_string(), id);
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+/// Fresh canonical labels `_d0.._dn` for rank-n elementwise ops where the
+/// user did not name dimensions.
+fn default_labels(rank: usize) -> LabelList {
+    (0..rank).map(|i| Label::new(&format!("_d{i}"))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+
+    #[test]
+    fn parse_single_char_spec() {
+        let (ops, out) = parse_spec("ij,jk->ik").unwrap();
+        assert_eq!(ops[0], labels("i j"));
+        assert_eq!(ops[1], labels("j k"));
+        assert_eq!(out, labels("i k"));
+    }
+
+    #[test]
+    fn parse_multi_char_spec() {
+        let (ops, out) = parse_spec("s a, a h d -> s h d").unwrap();
+        assert_eq!(ops[0], labels("s a"));
+        assert_eq!(ops[1], labels("a h d"));
+        assert_eq!(out, labels("s h d"));
+    }
+
+    #[test]
+    fn parse_unary_spec() {
+        let (ops, out) = parse_spec("ij->i").unwrap();
+        assert_eq!(ops.len(), 1);
+        assert_eq!(out, labels("i"));
+    }
+
+    #[test]
+    fn reject_bad_specs() {
+        assert!(parse_spec("ij,jk").is_err());
+        assert!(parse_spec("i!j->ij").is_err());
+        assert!(parse_spec("a,b,c->abc").is_err());
+    }
+
+    #[test]
+    fn parse_program_matmul_chain() {
+        let g = parse_program(
+            r#"
+            # (A x B) + (C x (D x E))
+            input A [8, 8]
+            input B [8, 8]
+            input C [8, 8]
+            input D [8, 8]
+            input E [8, 8]
+            AB  = einsum ij,jk->ik A B
+            DE  = einsum jk,km->jm D E
+            CDE = einsum ij,jm->im C DE
+            Z   = ew add AB CDE
+            "#,
+        )
+        .unwrap();
+        assert_eq!(g.len(), 9);
+        let z = g.by_name("Z").unwrap();
+        assert_eq!(g.vertex(z).bound, vec![8, 8]);
+    }
+
+    #[test]
+    fn parse_program_with_ops() {
+        let g = parse_program(
+            r#"
+            input X [4, 8]
+            input Y [8, 4]
+            D = einsum ij,jk->ik X Y agg=max join=absdiff
+            R = map relu D
+            S = reduce sum ik->i R
+            T = map scale:0.5 S
+            "#,
+        )
+        .unwrap();
+        let s = g.by_name("S").unwrap();
+        assert_eq!(g.vertex(s).bound, vec![4]);
+        let t = g.by_name("T").unwrap();
+        assert_eq!(g.vertex(t).bound, vec![4]);
+    }
+
+    #[test]
+    fn unknown_tensor_rejected() {
+        assert!(parse_program("Z = map relu W").is_err());
+    }
+
+    #[test]
+    fn bad_bound_rejected() {
+        assert!(parse_program("input X 8,8").is_err());
+        assert!(parse_program("input X [8, -1]").is_err());
+    }
+}

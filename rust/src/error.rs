@@ -1,0 +1,64 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All errors surfaced by the eindecomp library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// An EinSum expression is structurally invalid (label/bound mismatch,
+    /// repeated labels within one operand, rank mismatch, ...).
+    #[error("invalid einsum: {0}")]
+    InvalidEinsum(String),
+
+    /// The textual einsum spec could not be parsed.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// An EinGraph is malformed (dangling input, cycle, bound mismatch).
+    #[error("invalid graph: {0}")]
+    InvalidGraph(String),
+
+    /// Shape/bound error in a tensor operation.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// A partitioning vector is invalid for the bound it is applied to.
+    #[error("invalid partitioning: {0}")]
+    InvalidPartitioning(String),
+
+    /// The planner could not find any viable decomposition.
+    #[error("no viable decomposition: {0}")]
+    NoViablePlan(String),
+
+    /// Task graph construction/validation failure.
+    #[error("task graph error: {0}")]
+    TaskGraph(String),
+
+    /// Simulated cluster execution failure.
+    #[error("execution error: {0}")]
+    Exec(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact (AOT-compiled HLO) missing or unreadable.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Device memory capacity exceeded and paging disabled.
+    #[error("out of device memory: {0}")]
+    Oom(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

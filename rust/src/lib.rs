@@ -1,0 +1,57 @@
+//! # eindecomp
+//!
+//! A reproduction of *EinDecomp: Decomposition of Declaratively-Specified
+//! Machine Learning and Numerical Computations for Parallel Execution*
+//! (Bourgeois et al., PVLDB 2024).
+//!
+//! The library is organised around the paper's pipeline:
+//!
+//! ```text
+//!   EinSum program (einsum::)          -- declarative spec, a DAG of EinSum ops
+//!     -> EinDecomp planner (decomp::)  -- choose a partitioning vector per vertex
+//!     -> TaskGraph (taskgraph::)       -- lower to kernel calls + transfers
+//!     -> simulated cluster (sim::)     -- p workers, byte-accurate network model
+//!     -> kernels (runtime::)           -- PJRT-compiled XLA kernels / native fallback
+//! ```
+//!
+//! The tensor-relational algebra of the paper (join / aggregation /
+//! repartition over *tensor relations*) lives in [`tra`]; model builders
+//! (matrix chains, FFNN training, multi-head attention, LLaMA-style
+//! transformer graphs) live in [`models`]; the experiment drivers that
+//! regenerate every figure of the paper's evaluation live under
+//! `rust/benches/`.
+
+pub mod coordinator;
+pub mod data;
+pub mod decomp;
+pub mod einsum;
+pub mod error;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod taskgraph;
+pub mod tensor;
+pub mod tra;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Crate-wide convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::coordinator::driver::{Driver, DriverConfig, RunReport};
+    pub use crate::decomp::{
+        baselines::Strategy, cost::CostModel, plan_graph, Plan, PlannerConfig,
+    };
+    pub use crate::einsum::{
+        expr::{AggOp, EinSum, JoinOp, UnaryOp},
+        graph::{EinGraph, VertexId},
+        label::{labels, Label},
+    };
+    pub use crate::error::{Error, Result};
+    pub use crate::runtime::{Backend, KernelEngine};
+    pub use crate::sim::cluster::{Cluster, ExecReport};
+    pub use crate::sim::network::NetworkProfile;
+    pub use crate::taskgraph::{lower::lower_graph, TaskGraph};
+    pub use crate::tensor::Tensor;
+    pub use crate::tra::relation::TensorRelation;
+}

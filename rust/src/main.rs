@@ -1,0 +1,10 @@
+//! `eindecomp` binary: plan and run EinSum programs and the paper's model
+//! workloads on the simulated cluster. See `eindecomp help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = eindecomp::coordinator::cli::main_with_args(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

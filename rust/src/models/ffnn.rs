@@ -1,0 +1,281 @@
+//! Experiment 2 workload: training step of a feed-forward classifier,
+//! expressed *entirely* as an EinGraph — forward pass, loss, and all
+//! gradients are EinSum vertices, so EinDecomp plans the whole step.
+//!
+//! Network (paper: AmazonCat-14K, 597,540 features, 8,192 hidden units,
+//! 14,588 labels):
+//!
+//! ```text
+//!   P1 = X W1            H1 = relu(P1)
+//!   Y  = H1 W2                       (logits)
+//!   G2 = (Y - T) * (1/batch)         (MSE-style output gradient)
+//!   dW2 = H1^T G2
+//!   GH = G2 W2^T ; G1 = GH * relu'(P1)
+//!   dW1 = X^T G1
+//!   loss = sum (Y - T)^2 * (0.5/batch)
+//! ```
+//!
+//! Labels: `b` batch, `f` input features, `h` hidden, `c` classes — so the
+//! data-parallel baseline shards `b`, the model-parallel baseline shards
+//! `h`/`c`, and EinDecomp mixes per vertex.
+
+use crate::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::einsum::label::Label;
+use crate::error::Result;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Network + graph handles for one training step.
+pub struct FfnnStep {
+    pub graph: EinGraph,
+    pub x: VertexId,
+    pub t: VertexId,
+    pub w1: VertexId,
+    pub w2: VertexId,
+    pub logits: VertexId,
+    pub dw1: VertexId,
+    pub dw2: VertexId,
+    pub loss: VertexId,
+    pub batch: usize,
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+/// Build the training-step graph.
+pub fn ffnn_step(batch: usize, features: usize, hidden: usize, classes: usize) -> Result<FfnnStep> {
+    let b = Label::new("b");
+    let f = Label::new("f");
+    let h = Label::new("h");
+    let c = Label::new("c");
+    let mut g = EinGraph::new();
+    let x = g.input("X", vec![batch, features]);
+    let t = g.input("T", vec![batch, classes]);
+    let w1 = g.input("W1", vec![features, hidden]);
+    let w2 = g.input("W2", vec![hidden, classes]);
+
+    // forward
+    let p1 = g.add(
+        "P1",
+        EinSum::contraction(vec![b, f], vec![f, h], vec![b, h]),
+        vec![x, w1],
+    )?;
+    let h1 = g.add("H1", EinSum::map(vec![b, h], UnaryOp::Relu), vec![p1])?;
+    let y = g.add(
+        "Y",
+        EinSum::contraction(vec![b, h], vec![h, c], vec![b, c]),
+        vec![h1, w2],
+    )?;
+
+    // output gradient (MSE): G2 = (Y - T) / batch
+    let diff = g.add(
+        "Diff",
+        EinSum::elementwise(vec![b, c], vec![b, c], JoinOp::Sub),
+        vec![y, t],
+    )?;
+    let g2 = g.add(
+        "G2",
+        EinSum::map(vec![b, c], UnaryOp::Scale(1.0 / batch as f32)),
+        vec![diff],
+    )?;
+
+    // loss = 0.5/batch * sum diff^2
+    let sq = g.add("SqErr", EinSum::map(vec![b, c], UnaryOp::Square), vec![diff])?;
+    let sse = g.add("SSE", EinSum::reduce(vec![b, c], vec![], AggOp::Sum), vec![sq])?;
+    let loss = g.add(
+        "Loss",
+        EinSum::map(vec![], UnaryOp::Scale(0.5 / batch as f32)),
+        vec![sse],
+    )?;
+
+    // dW2 = H1^T G2 : dW2_hc <- sum_b H1_bh G2_bc
+    let dw2 = g.add(
+        "dW2",
+        EinSum::contraction(vec![b, h], vec![b, c], vec![h, c]),
+        vec![h1, g2],
+    )?;
+
+    // GH = G2 W2^T : GH_bh <- sum_c G2_bc W2_hc
+    let gh = g.add(
+        "GH",
+        EinSum::contraction(vec![b, c], vec![h, c], vec![b, h]),
+        vec![g2, w2],
+    )?;
+    // relu'(P1)
+    let dr = g.add("dRelu", EinSum::map(vec![b, h], UnaryOp::ReluGrad), vec![p1])?;
+    let g1 = g.add(
+        "G1",
+        EinSum::elementwise(vec![b, h], vec![b, h], JoinOp::Mul),
+        vec![gh, dr],
+    )?;
+    // dW1 = X^T G1 : dW1_fh <- sum_b X_bf G1_bh
+    let dw1 = g.add(
+        "dW1",
+        EinSum::contraction(vec![b, f], vec![b, h], vec![f, h]),
+        vec![x, g1],
+    )?;
+
+    g.validate()?;
+    Ok(FfnnStep {
+        graph: g,
+        x,
+        t,
+        w1,
+        w2,
+        logits: y,
+        dw1,
+        dw2,
+        loss,
+        batch,
+        features,
+        hidden,
+        classes,
+    })
+}
+
+/// Mutable training state (weights live outside the graph; the step graph
+/// reads them as inputs and emits gradients).
+pub struct FfnnState {
+    pub w1: Tensor,
+    pub w2: Tensor,
+}
+
+impl FfnnState {
+    pub fn init(features: usize, hidden: usize, classes: usize, seed: u64) -> Self {
+        // small-variance init so relu nets at these widths stay stable
+        let scale1 = (2.0 / features as f32).sqrt();
+        let scale2 = (2.0 / hidden as f32).sqrt();
+        let mut w1 = Tensor::random(&[features, hidden], seed);
+        for v in w1.data_mut() {
+            *v *= 2.0 * scale1;
+        }
+        let mut w2 = Tensor::random(&[hidden, classes], seed + 1);
+        for v in w2.data_mut() {
+            *v *= 2.0 * scale2;
+        }
+        FfnnState { w1, w2 }
+    }
+
+    /// SGD update from the step's gradient outputs.
+    pub fn apply(&mut self, dw1: &Tensor, dw2: &Tensor, lr: f32) -> Result<()> {
+        self.w1.accumulate(dw1, move |w, g| w - lr * g)?;
+        self.w2.accumulate(dw2, move |w, g| w - lr * g)?;
+        Ok(())
+    }
+}
+
+/// Inputs map for one step.
+pub fn step_inputs(
+    step: &FfnnStep,
+    state: &FfnnState,
+    x: Tensor,
+    t: Tensor,
+) -> HashMap<VertexId, Tensor> {
+    let mut m = HashMap::new();
+    m.insert(step.x, x);
+    m.insert(step.t, t);
+    m.insert(step.w1, state.w1.clone());
+    m.insert(step.w2, state.w2.clone());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::classifier_batch;
+    use crate::decomp::{plan_graph, PlanMode, PlannerConfig};
+    use crate::runtime::NativeEngine;
+    use crate::sim::{Cluster, NetworkProfile};
+
+    #[test]
+    fn graph_builds_and_is_dag() {
+        let s = ffnn_step(8, 32, 16, 4).unwrap();
+        // X, H1, P1, G2 all multiply consumed -> not tree-like
+        assert!(!s.graph.is_tree_like());
+        assert_eq!(s.graph.vertex(s.dw1).bound, vec![32, 16]);
+        assert_eq!(s.graph.vertex(s.dw2).bound, vec![16, 4]);
+        assert_eq!(s.graph.vertex(s.loss).bound, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let step = ffnn_step(4, 6, 5, 3).unwrap();
+        let mut state = FfnnState::init(6, 5, 3, 7);
+        let (x, t) = classifier_batch(4, 6, 3, 0.5, 11);
+        let plan = plan_graph(
+            &step.graph,
+            &PlannerConfig { p: 2, mode: PlanMode::Linearized, ..Default::default() },
+        )
+        .unwrap();
+        let cluster = Cluster::new(2, NetworkProfile::loopback());
+        let engine = NativeEngine::new();
+        let run = |state: &FfnnState| {
+            let inputs = step_inputs(&step, state, x.clone(), t.clone());
+            let (outs, _) = cluster.execute(&step.graph, &plan, &engine, &inputs).unwrap();
+            (
+                outs[&step.loss].at(&[]),
+                outs[&step.dw1].clone(),
+                outs[&step.dw2].clone(),
+            )
+        };
+        let (_, dw1, dw2) = run(&state);
+        // finite differences on a few coordinates
+        let eps = 1e-3f32;
+        for &(i, j) in &[(0usize, 0usize), (2, 3), (5, 4)] {
+            let orig = state.w1.at(&[i, j]);
+            state.w1.set(&[i, j], orig + eps);
+            let (lp, _, _) = run(&state);
+            state.w1.set(&[i, j], orig - eps);
+            let (lm, _, _) = run(&state);
+            state.w1.set(&[i, j], orig);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = dw1.at(&[i, j]);
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                "dW1[{i},{j}]: fd {fd} vs analytic {an}"
+            );
+        }
+        for &(i, j) in &[(0usize, 0usize), (4, 2)] {
+            let orig = state.w2.at(&[i, j]);
+            state.w2.set(&[i, j], orig + eps);
+            let (lp, _, _) = run(&state);
+            state.w2.set(&[i, j], orig - eps);
+            let (lm, _, _) = run(&state);
+            state.w2.set(&[i, j], orig);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = dw2.at(&[i, j]);
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                "dW2[{i},{j}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn short_training_reduces_loss() {
+        let step = ffnn_step(16, 24, 12, 4).unwrap();
+        let mut state = FfnnState::init(24, 12, 4, 3);
+        let plan = plan_graph(
+            &step.graph,
+            &PlannerConfig { p: 4, mode: PlanMode::Linearized, ..Default::default() },
+        )
+        .unwrap();
+        let cluster = Cluster::new(4, NetworkProfile::loopback());
+        let engine = NativeEngine::new();
+        let (x, t) = classifier_batch(16, 24, 4, 0.5, 5);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let inputs = step_inputs(&step, &state, x.clone(), t.clone());
+            let (outs, _) = cluster.execute(&step.graph, &plan, &engine, &inputs).unwrap();
+            losses.push(outs[&step.loss].at(&[]));
+            state
+                .apply(&outs[&step.dw1], &outs[&step.dw2], 0.5)
+                .unwrap();
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.5),
+            "loss did not drop: {losses:?}"
+        );
+    }
+}

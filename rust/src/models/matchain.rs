@@ -1,0 +1,137 @@
+//! Experiment 1 workload: the matrix chain `(A x B) + (C x (D x E))`.
+//!
+//! Two variants (paper §9.2): *uniform* — all matrices `s x s`; *skewed* —
+//! `A: s x s/10`, `B: s/10 x s`, `C: s x s/10`, `D: s/10 x 10s`,
+//! `E: 10s x s`. The skewed chain is where SQRT's shape-blind slicing
+//! loses to EinDecomp (Figs. 7–8).
+
+use crate::einsum::expr::{EinSum, JoinOp};
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::einsum::label::labels;
+use crate::error::Result;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Handles into the chain graph.
+pub struct Chain {
+    pub graph: EinGraph,
+    pub a: VertexId,
+    pub b: VertexId,
+    pub c: VertexId,
+    pub d: VertexId,
+    pub e: VertexId,
+    pub z: VertexId,
+}
+
+/// Build the chain at scale `s` (`skewed` selects the second variant; `s`
+/// should be a multiple of 10 for the skewed shapes).
+pub fn chain_graph(s: usize, skewed: bool) -> Result<Chain> {
+    let t = (s / 10).max(1); // 0.1 s
+    let (da, db, dc, dd, de) = if skewed {
+        ([s, t], [t, s], [s, t], [t, 10 * s], [10 * s, s])
+    } else {
+        ([s, s], [s, s], [s, s], [s, s], [s, s])
+    };
+    let mut g = EinGraph::new();
+    let a = g.input("A", da.to_vec());
+    let b = g.input("B", db.to_vec());
+    let c = g.input("C", dc.to_vec());
+    let d = g.input("D", dd.to_vec());
+    let e = g.input("E", de.to_vec());
+    let ab = g.add(
+        "AB",
+        EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+        vec![a, b],
+    )?;
+    let de = g.add(
+        "DE",
+        EinSum::contraction(labels("j m"), labels("m k"), labels("j k")),
+        vec![d, e],
+    )?;
+    let cde = g.add(
+        "CDE",
+        EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+        vec![c, de],
+    )?;
+    let z = g.add(
+        "Z",
+        EinSum::elementwise(labels("i k"), labels("i k"), JoinOp::Add),
+        vec![ab, cde],
+    )?;
+    Ok(Chain {
+        graph: g,
+        a,
+        b,
+        c,
+        d,
+        e,
+        z,
+    })
+}
+
+/// Random inputs for a chain, keyed by vertex.
+pub fn chain_inputs(chain: &Chain, seed: u64) -> HashMap<VertexId, Tensor> {
+    let g = &chain.graph;
+    let mut m = HashMap::new();
+    for (i, &v) in [chain.a, chain.b, chain.c, chain.d, chain.e].iter().enumerate() {
+        m.insert(v, Tensor::random(&g.vertex(v).bound, seed + i as u64));
+    }
+    m
+}
+
+/// Dense reference result for correctness checks.
+pub fn chain_reference(chain: &Chain, inputs: &HashMap<VertexId, Tensor>) -> Result<Tensor> {
+    use crate::runtime::native::eval_einsum;
+    let g = &chain.graph;
+    let ab = eval_einsum(
+        &g.vertex(g.by_name("AB").unwrap()).op,
+        &[&inputs[&chain.a], &inputs[&chain.b]],
+    )?;
+    let de = eval_einsum(
+        &g.vertex(g.by_name("DE").unwrap()).op,
+        &[&inputs[&chain.d], &inputs[&chain.e]],
+    )?;
+    let cde = eval_einsum(
+        &g.vertex(g.by_name("CDE").unwrap()).op,
+        &[&inputs[&chain.c], &de],
+    )?;
+    eval_einsum(&g.vertex(chain.z).op, &[&ab, &cde])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{plan_graph, PlannerConfig};
+    use crate::runtime::NativeEngine;
+    use crate::sim::{Cluster, NetworkProfile};
+
+    #[test]
+    fn uniform_chain_shapes() {
+        let c = chain_graph(40, false).unwrap();
+        c.graph.validate().unwrap();
+        assert_eq!(c.graph.vertex(c.z).bound, vec![40, 40]);
+        assert!(c.graph.is_tree_like());
+    }
+
+    #[test]
+    fn skewed_chain_shapes_match_paper() {
+        let c = chain_graph(40, true).unwrap();
+        assert_eq!(c.graph.vertex(c.a).bound, vec![40, 4]);
+        assert_eq!(c.graph.vertex(c.d).bound, vec![4, 400]);
+        assert_eq!(c.graph.vertex(c.e).bound, vec![400, 40]);
+        assert_eq!(c.graph.vertex(c.z).bound, vec![40, 40]);
+    }
+
+    #[test]
+    fn executed_chain_matches_reference() {
+        let c = chain_graph(40, true).unwrap();
+        let inputs = chain_inputs(&c, 9);
+        let want = chain_reference(&c, &inputs).unwrap();
+        let plan = plan_graph(&c.graph, &PlannerConfig { p: 4, ..Default::default() }).unwrap();
+        let cluster = Cluster::new(4, NetworkProfile::loopback());
+        let (outs, _) = cluster
+            .execute(&c.graph, &plan, &NativeEngine::new(), &inputs)
+            .unwrap();
+        assert!(outs[&c.z].allclose(&want, 1e-3, 1e-4));
+    }
+}

@@ -1,0 +1,13 @@
+//! Model-graph builders for the paper's evaluation workloads:
+//!
+//! * [`matchain`] — the matrix-operation chain of Experiment 1
+//!   (`(A x B) + (C x (D x E))`, uniform and skewed);
+//! * [`ffnn`] — the feed-forward classifier *training step* (forward +
+//!   backward, gradients as EinSums) of Experiment 2;
+//! * [`llama`] — the LLaMA-style decoder stack (RMSNorm, multi-head
+//!   attention, SwiGLU FFN) used for first-token inference in
+//!   Experiments 3 and 4.
+
+pub mod ffnn;
+pub mod llama;
+pub mod matchain;

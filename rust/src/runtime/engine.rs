@@ -1,0 +1,97 @@
+//! Dispatching kernel engine: PJRT artifacts when available, native
+//! fallback otherwise — plus per-kind hit counters so benches can report
+//! how much of the hot path ran on AOT-compiled XLA kernels.
+
+use super::native::NativeEngine;
+use super::pjrt::PjrtEngine;
+use super::{Backend, KernelEngine};
+use crate::einsum::expr::EinSum;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Composite engine implementing the [`Backend`] policy.
+pub struct DispatchEngine {
+    backend: Backend,
+    native: NativeEngine,
+    pjrt: Option<Arc<PjrtEngine>>,
+    pjrt_hits: AtomicU64,
+    native_hits: AtomicU64,
+}
+
+impl DispatchEngine {
+    /// Build an engine for the chosen backend. `artifact_dir` is consulted
+    /// only for `Auto`/`PjrtStrict`. `Auto` silently degrades to native if
+    /// the artifacts are missing (e.g. `make artifacts` not yet run).
+    pub fn new(backend: Backend, artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let pjrt = match backend {
+            Backend::Native => None,
+            Backend::Auto => PjrtEngine::load(&artifact_dir).ok().map(Arc::new),
+            Backend::PjrtStrict => Some(Arc::new(PjrtEngine::load(&artifact_dir)?)),
+        };
+        Ok(DispatchEngine {
+            backend,
+            native: NativeEngine::new(),
+            pjrt,
+            pjrt_hits: AtomicU64::new(0),
+            native_hits: AtomicU64::new(0),
+        })
+    }
+
+    /// Native-only engine (no artifact directory needed).
+    pub fn native() -> Self {
+        DispatchEngine {
+            backend: Backend::Native,
+            native: NativeEngine::new(),
+            pjrt: None,
+            pjrt_hits: AtomicU64::new(0),
+            native_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// (pjrt, native) kernel-invocation counters.
+    pub fn hit_counts(&self) -> (u64, u64) {
+        (
+            self.pjrt_hits.load(Ordering::Relaxed),
+            self.native_hits.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Whether a PJRT engine is attached.
+    pub fn has_pjrt(&self) -> bool {
+        self.pjrt.is_some()
+    }
+}
+
+impl KernelEngine for DispatchEngine {
+    fn eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
+        if let Some(pjrt) = &self.pjrt {
+            match pjrt.try_eval(op, inputs)? {
+                Some(t) => {
+                    self.pjrt_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(t);
+                }
+                None => {
+                    if self.backend == Backend::PjrtStrict {
+                        return Err(Error::Artifact(format!(
+                            "PjrtStrict: no artifact for {op} on {:?}",
+                            inputs.iter().map(|t| t.shape()).collect::<Vec<_>>()
+                        )));
+                    }
+                }
+            }
+        }
+        self.native_hits.fetch_add(1, Ordering::Relaxed);
+        self.native.eval(op, inputs)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.backend {
+            Backend::Native => "native",
+            Backend::Auto => "auto(pjrt+native)",
+            Backend::PjrtStrict => "pjrt-strict",
+        }
+    }
+}

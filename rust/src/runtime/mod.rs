@@ -1,0 +1,49 @@
+//! Kernel execution engines.
+//!
+//! The TRA join invokes a *kernel function* `K` on pairs of sub-tensors
+//! (paper §4.2). A [`KernelEngine`] evaluates an arbitrary EinSum
+//! expression on concrete tile tensors. Two engines are provided:
+//!
+//! * [`native::NativeEngine`] — pure-rust evaluator with a batched-GEMM
+//!   fast path (`matrixmultiply`) for Mul/Sum contractions and a generic
+//!   loop-nest fallback for the extended `(+)`/`(x)` operator space. Used
+//!   as the always-available fallback and as a second correctness oracle.
+//! * [`pjrt::PjrtEngine`] — loads AOT-compiled HLO artifacts produced by
+//!   the python/jax/Pallas compile path (`make artifacts`) and executes
+//!   them on the PJRT CPU client. Python never runs on this path.
+//!
+//! [`engine::DispatchEngine`] composes the two: PJRT when an artifact with
+//! a matching (kind, shape) exists, native otherwise.
+
+pub mod engine;
+pub mod gemm;
+pub mod native;
+pub mod pjrt;
+
+use crate::einsum::expr::EinSum;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Which kernel backend to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust kernels only.
+    Native,
+    /// AOT PJRT kernels where artifacts exist, native fallback otherwise.
+    Auto,
+    /// PJRT only — error if no artifact matches (used by artifact tests).
+    PjrtStrict,
+}
+
+/// A kernel engine evaluates one EinSum expression on concrete tensors.
+/// This is the paper's kernel function `K` generalized to all vertex kinds.
+pub trait KernelEngine: Send + Sync {
+    fn eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor>;
+
+    /// Human-readable identifier for reports.
+    fn name(&self) -> &'static str;
+}
+
+pub use engine::DispatchEngine;
+pub use native::NativeEngine;
+pub use pjrt::PjrtEngine;

@@ -1,0 +1,530 @@
+//! Native (pure-rust) kernel engine.
+//!
+//! Mirrors the paper's CPU kernel structure (§9.1): *(1) unpack the input
+//! tensors, (2) call a batch matrix multiply, (3) re-pack the result* — here
+//! "unpack" is an axis permutation onto the canonical `[batch, m, k]` /
+//! `[batch, k, n]` layout and the BMM is the in-tree [`super::gemm`]. EinSums
+//! that do not fit the BMM pattern (non-Mul joins, non-Sum aggregations,
+//! labels private to one operand) fall back to a generic loop nest over the
+//! full iteration space, which implements the extended EinSum semantics
+//! exactly.
+
+use super::KernelEngine;
+use crate::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use crate::einsum::label::{project, Label, LabelList};
+use crate::error::{Error, Result};
+use crate::tensor::{index_space, strides_of, Tensor};
+
+/// Pure-rust kernel engine. Stateless and cheap to clone.
+#[derive(Clone, Debug, Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine
+    }
+}
+
+impl KernelEngine for NativeEngine {
+    fn eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
+        eval_einsum(op, inputs)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Evaluate an EinSum on dense tensors.
+pub fn eval_einsum(op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
+    match op {
+        EinSum::Input => Err(Error::InvalidEinsum(
+            "Input vertices are not evaluated".into(),
+        )),
+        EinSum::Unary { lx, lz, op: u, agg } => {
+            if inputs.len() != 1 {
+                return Err(Error::InvalidEinsum("unary op needs 1 input".into()));
+            }
+            eval_unary(lx, lz, *u, *agg, inputs[0])
+        }
+        EinSum::Binary {
+            lx,
+            ly,
+            lz,
+            join,
+            agg,
+        } => {
+            if inputs.len() != 2 {
+                return Err(Error::InvalidEinsum("binary op needs 2 inputs".into()));
+            }
+            eval_binary(lx, ly, lz, *join, *agg, inputs[0], inputs[1])
+        }
+    }
+}
+
+/// Unary: map + optional reduction.
+fn eval_unary(
+    lx: &LabelList,
+    lz: &LabelList,
+    u: UnaryOp,
+    agg: AggOp,
+    x: &Tensor,
+) -> Result<Tensor> {
+    if x.rank() != lx.len() {
+        return Err(Error::Shape(format!(
+            "unary: tensor rank {} vs labels {lx:?}",
+            x.rank()
+        )));
+    }
+    let bz = project(x.shape(), lz, lx);
+    // Fast path: pure map / transpose (no reduction).
+    if lz.len() == lx.len() {
+        let perm: Vec<usize> = lz
+            .iter()
+            .map(|l| lx.iter().position(|m| m == l).unwrap())
+            .collect();
+        let mut t = x.permute(&perm)?;
+        if !matches!(u, UnaryOp::Identity) {
+            for v in t.data_mut() {
+                *v = u.apply(*v);
+            }
+        }
+        return Ok(t);
+    }
+    // Reduction path: iterate I(b_X), accumulate into output.
+    let mut out = Tensor::full(&bz, agg.identity());
+    let out_strides = strides_of(&bz);
+    // position of each lz label within lx
+    let zpos: Vec<usize> = lz
+        .iter()
+        .map(|l| lx.iter().position(|m| m == l).unwrap())
+        .collect();
+    let xdata = x.data();
+    let out_data = out.data_mut();
+    for (flat, idx) in index_space(x.shape()).enumerate() {
+        let mut o = 0usize;
+        for (s, &p) in out_strides.iter().zip(&zpos) {
+            o += s * idx[p];
+        }
+        out_data[o] = agg.combine(out_data[o], u.apply(xdata[flat]));
+    }
+    Ok(out)
+}
+
+/// Label classification for the BMM fast path.
+struct BmmPlan {
+    batch: LabelList,
+    m: LabelList,
+    n: LabelList,
+    k: LabelList,
+}
+
+/// Classify labels as batch (X,Y,Z), m (X,Z), n (Y,Z), k (X,Y). Returns
+/// `None` if any label falls outside those classes (e.g. appears in only
+/// one operand), which the generic path handles.
+fn bmm_plan(lx: &LabelList, ly: &LabelList, lz: &LabelList) -> Option<BmmPlan> {
+    let mut plan = BmmPlan {
+        batch: vec![],
+        m: vec![],
+        n: vec![],
+        k: vec![],
+    };
+    let in_x = |l: &Label| lx.contains(l);
+    let in_y = |l: &Label| ly.contains(l);
+    let in_z = |l: &Label| lz.contains(l);
+    let mut seen: Vec<Label> = vec![];
+    for l in lx.iter().chain(ly.iter()) {
+        if seen.contains(l) {
+            continue;
+        }
+        seen.push(*l);
+        match (in_x(l), in_y(l), in_z(l)) {
+            (true, true, true) => plan.batch.push(*l),
+            (true, false, true) => plan.m.push(*l),
+            (false, true, true) => plan.n.push(*l),
+            (true, true, false) => plan.k.push(*l),
+            _ => return None,
+        }
+    }
+    Some(plan)
+}
+
+/// Binary EinSum evaluation.
+fn eval_binary(
+    lx: &LabelList,
+    ly: &LabelList,
+    lz: &LabelList,
+    join: JoinOp,
+    agg: AggOp,
+    x: &Tensor,
+    y: &Tensor,
+) -> Result<Tensor> {
+    if x.rank() != lx.len() || y.rank() != ly.len() {
+        return Err(Error::Shape(format!(
+            "binary: ranks {}/{} vs labels {lx:?}/{ly:?}",
+            x.rank(),
+            y.rank()
+        )));
+    }
+    // shared labels must agree on size
+    for (i, l) in lx.iter().enumerate() {
+        if let Some(j) = ly.iter().position(|m| m == l) {
+            if x.shape()[i] != y.shape()[j] {
+                return Err(Error::Shape(format!(
+                    "label {l}: {} vs {}",
+                    x.shape()[i],
+                    y.shape()[j]
+                )));
+            }
+        }
+    }
+    // GEMM fast path: Mul/Sum with a clean batch/m/n/k split.
+    if join == JoinOp::Mul && agg == AggOp::Sum {
+        if let Some(plan) = bmm_plan(lx, ly, lz) {
+            return eval_bmm(&plan, lx, ly, lz, x, y);
+        }
+    }
+    eval_binary_generic(lx, ly, lz, join, agg, x, y)
+}
+
+/// Permute-to-BMM path: X -> [B, M, K], Y -> [B, K, N], sgemm per batch,
+/// result [B, M, N] -> permute to l_Z order.
+fn eval_bmm(
+    plan: &BmmPlan,
+    lx: &LabelList,
+    ly: &LabelList,
+    lz: &LabelList,
+    x: &Tensor,
+    y: &Tensor,
+) -> Result<Tensor> {
+    let dim_of_x = |l: &Label| x.shape()[lx.iter().position(|m| m == l).unwrap()];
+    let dim_of_y = |l: &Label| y.shape()[ly.iter().position(|m| m == l).unwrap()];
+    let b: usize = plan.batch.iter().map(dim_of_x).product();
+    let m: usize = plan.m.iter().map(dim_of_x).product();
+    let k: usize = plan.k.iter().map(dim_of_x).product();
+    let n: usize = plan.n.iter().map(dim_of_y).product();
+
+    // canonical label orders
+    let x_order: LabelList = plan
+        .batch
+        .iter()
+        .chain(plan.m.iter())
+        .chain(plan.k.iter())
+        .copied()
+        .collect();
+    let y_order: LabelList = plan
+        .batch
+        .iter()
+        .chain(plan.k.iter())
+        .chain(plan.n.iter())
+        .copied()
+        .collect();
+    let perm_x: Vec<usize> = x_order
+        .iter()
+        .map(|l| lx.iter().position(|m2| m2 == l).unwrap())
+        .collect();
+    let perm_y: Vec<usize> = y_order
+        .iter()
+        .map(|l| ly.iter().position(|m2| m2 == l).unwrap())
+        .collect();
+    let xc = x.permute(&perm_x)?; // [B.., M.., K..] row-major == [b, m, k]
+    let yc = y.permute(&perm_y)?; // [b, k, n]
+
+    let mut out = vec![0.0f32; b * m * n];
+    let xd = xc.data();
+    let yd = yc.data();
+    for bi in 0..b {
+        let xo = &xd[bi * m * k..(bi + 1) * m * k];
+        let yo = &yd[bi * k * n..(bi + 1) * k * n];
+        let oo = &mut out[bi * m * n..(bi + 1) * m * n];
+        super::gemm::sgemm(m, k, n, 1.0, xo, yo, 0.0, oo);
+    }
+    // canonical output label order: [batch, m, n]
+    let z_canon: LabelList = plan
+        .batch
+        .iter()
+        .chain(plan.m.iter())
+        .chain(plan.n.iter())
+        .copied()
+        .collect();
+    let z_shape_canon: Vec<usize> = plan
+        .batch
+        .iter()
+        .map(dim_of_x)
+        .chain(plan.m.iter().map(dim_of_x))
+        .chain(plan.n.iter().map(dim_of_y))
+        .collect();
+    let t = Tensor::new(z_shape_canon, out)?;
+    // permute canonical -> requested lz order
+    let perm_z: Vec<usize> = lz
+        .iter()
+        .map(|l| z_canon.iter().position(|m2| m2 == l).unwrap())
+        .collect();
+    t.permute(&perm_z)
+}
+
+/// Generic loop nest: iterate the joint index space of all unique labels,
+/// apply the join scalar function, aggregate into the output cell. Exact
+/// for every `(+)`/`(x)` pair, including broadcast joins where one operand
+/// indexes a subset of the labels.
+fn eval_binary_generic(
+    lx: &LabelList,
+    ly: &LabelList,
+    lz: &LabelList,
+    join: JoinOp,
+    agg: AggOp,
+    x: &Tensor,
+    y: &Tensor,
+) -> Result<Tensor> {
+    let uniq = crate::einsum::label::concat_dedup(lx, ly);
+    // bound of each unique label
+    let ubound: Vec<usize> = uniq
+        .iter()
+        .map(|l| {
+            lx.iter()
+                .position(|m| m == l)
+                .map(|i| x.shape()[i])
+                .unwrap_or_else(|| y.shape()[ly.iter().position(|m| m == l).unwrap()])
+        })
+        .collect();
+    let bz = project(&ubound, lz, &uniq);
+    let mut out = Tensor::full(&bz, agg.identity());
+
+    // Strides of x/y/out with respect to the joint index (per unique label).
+    let xs = strides_of(x.shape());
+    let ys = strides_of(y.shape());
+    let zs = strides_of(&bz);
+    let stride_for = |labels_of: &LabelList, strides: &[usize], l: &Label| -> usize {
+        labels_of
+            .iter()
+            .position(|m| m == l)
+            .map(|i| strides[i])
+            .unwrap_or(0)
+    };
+    let jx: Vec<usize> = uniq.iter().map(|l| stride_for(lx, &xs, l)).collect();
+    let jy: Vec<usize> = uniq.iter().map(|l| stride_for(ly, &ys, l)).collect();
+    let jz: Vec<usize> = uniq.iter().map(|l| stride_for(lz, &zs, l)).collect();
+
+    let xd = x.data();
+    let yd = y.data();
+    let od = out.data_mut();
+    // Odometer over ubound, maintaining the three flat offsets incrementally.
+    let rank = uniq.len();
+    if ubound.iter().any(|&b| b == 0) {
+        return Ok(out);
+    }
+    let mut idx = vec![0usize; rank];
+    let (mut ox, mut oy, mut oz) = (0usize, 0usize, 0usize);
+    loop {
+        od[oz] = agg.combine(od[oz], join.apply(xd[ox], yd[oy]));
+        // increment
+        let mut d = rank;
+        loop {
+            if d == 0 {
+                return Ok(out);
+            }
+            d -= 1;
+            idx[d] += 1;
+            ox += jx[d];
+            oy += jy[d];
+            oz += jz[d];
+            if idx[d] < ubound[d] {
+                break;
+            }
+            // reset dimension d
+            ox -= jx[d] * ubound[d];
+            oy -= jy[d] * ubound[d];
+            oz -= jz[d] * ubound[d];
+            idx[d] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+
+    fn l(s: &str) -> LabelList {
+        labels(s)
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let x = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let y = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let op = EinSum::contraction(l("i j"), l("j k"), l("i k"));
+        let z = eval_einsum(&op, &[&x, &y]).unwrap();
+        assert_eq!(z.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_transposed_output() {
+        let x = Tensor::random(&[3, 4], 1);
+        let y = Tensor::random(&[4, 5], 2);
+        let zik = eval_einsum(
+            &EinSum::contraction(l("i j"), l("j k"), l("i k")),
+            &[&x, &y],
+        )
+        .unwrap();
+        let zki = eval_einsum(
+            &EinSum::contraction(l("i j"), l("j k"), l("k i")),
+            &[&x, &y],
+        )
+        .unwrap();
+        assert_eq!(zki.shape(), &[5, 3]);
+        assert!(zki.permute(&[1, 0]).unwrap().allclose(&zik, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn batch_matmul_sum_out_batch() {
+        // Paper example: Z_ik <- sum_{b,j} X_ijb Y_jbk
+        let x = Tensor::random(&[3, 4, 2], 1);
+        let y = Tensor::random(&[4, 2, 5], 2);
+        let op = EinSum::contraction(l("i j b"), l("j b k"), l("i k"));
+        let z = eval_einsum(&op, &[&x, &y]).unwrap();
+        assert_eq!(z.shape(), &[3, 5]);
+        // manual check at one cell
+        let mut want = 0.0;
+        for j in 0..4 {
+            for b in 0..2 {
+                want += x.at(&[1, j, b]) * y.at(&[j, b, 3]);
+            }
+        }
+        assert!((z.at(&[1, 3]) - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn generic_vs_bmm_agree() {
+        // Force the generic path by wrapping Mul/Sum in a contraction the
+        // planner *can* BMM, then compare against the generic evaluator
+        // called directly.
+        let x = Tensor::random(&[4, 6], 3);
+        let y = Tensor::random(&[6, 3], 4);
+        let generic =
+            eval_binary_generic(&l("i j"), &l("j k"), &l("i k"), JoinOp::Mul, AggOp::Sum, &x, &y)
+                .unwrap();
+        let fast = eval_einsum(
+            &EinSum::contraction(l("i j"), l("j k"), l("i k")),
+            &[&x, &y],
+        )
+        .unwrap();
+        assert!(generic.allclose(&fast, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn l2_distance_einsum() {
+        // Z_ik <- sum_j (X_ij - Y_jk)^2 — paper's squared-L2 example.
+        let x = Tensor::random(&[3, 4], 5);
+        let y = Tensor::random(&[4, 2], 6);
+        let op = EinSum::Binary {
+            lx: l("i j"),
+            ly: l("j k"),
+            lz: l("i k"),
+            join: JoinOp::SquaredDiff,
+            agg: AggOp::Sum,
+        };
+        let z = eval_einsum(&op, &[&x, &y]).unwrap();
+        let mut want = 0.0;
+        for j in 0..4 {
+            let d = x.at(&[2, j]) - y.at(&[j, 1]);
+            want += d * d;
+        }
+        assert!((z.at(&[2, 1]) - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn linf_distance_einsum() {
+        // Z_ik <- max_j |X_ij - Y_jk| — paper's L-inf example.
+        let x = Tensor::random(&[3, 4], 7);
+        let y = Tensor::random(&[4, 2], 8);
+        let op = EinSum::Binary {
+            lx: l("i j"),
+            ly: l("j k"),
+            lz: l("i k"),
+            join: JoinOp::AbsDiff,
+            agg: AggOp::Max,
+        };
+        let z = eval_einsum(&op, &[&x, &y]).unwrap();
+        let want = (0..4)
+            .map(|j| (x.at(&[0, j]) - y.at(&[j, 0])).abs())
+            .fold(f32::NEG_INFINITY, f32::max);
+        assert!((z.at(&[0, 0]) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn broadcast_join_divide() {
+        // Y_ij <- E_ij / S_i
+        let e = Tensor::random(&[3, 4], 9);
+        let s = Tensor::full(&[3], 2.0);
+        let op = EinSum::Binary {
+            lx: l("i j"),
+            ly: l("i"),
+            lz: l("i j"),
+            join: JoinOp::Div,
+            agg: AggOp::Sum,
+        };
+        let z = eval_einsum(&op, &[&e, &s]).unwrap();
+        assert!((z.at(&[1, 2]) - e.at(&[1, 2]) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unary_map_and_reduce() {
+        let x = Tensor::new(vec![2, 3], vec![1., -2., 3., -4., 5., -6.]).unwrap();
+        let relu = eval_einsum(&EinSum::map(l("i j"), UnaryOp::Relu), &[&x]).unwrap();
+        assert_eq!(relu.data(), &[1., 0., 3., 0., 5., 0.]);
+        let rowmax = eval_einsum(&EinSum::reduce(l("i j"), l("i"), AggOp::Max), &[&x]).unwrap();
+        assert_eq!(rowmax.data(), &[3., 5.]);
+        let colsum = eval_einsum(&EinSum::reduce(l("i j"), l("j"), AggOp::Sum), &[&x]).unwrap();
+        assert_eq!(colsum.data(), &[-3., 3., -3.]);
+    }
+
+    #[test]
+    fn unary_transpose_with_map() {
+        let x = Tensor::random(&[2, 3, 4], 10);
+        let op = EinSum::Unary {
+            lx: l("a b c"),
+            lz: l("c a b"),
+            op: UnaryOp::Scale(2.0),
+            agg: AggOp::Sum,
+        };
+        let z = eval_einsum(&op, &[&x]).unwrap();
+        assert_eq!(z.shape(), &[4, 2, 3]);
+        assert!((z.at(&[3, 1, 0]) - 2.0 * x.at(&[1, 0, 3])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn x_only_label_reduced() {
+        // Z_k <- sum_{i,j} X_ij * Y_jk — i appears only in X, not in Z:
+        // falls off the BMM plan, exercised via the generic path.
+        let x = Tensor::random(&[3, 4], 11);
+        let y = Tensor::random(&[4, 2], 12);
+        let op = EinSum::contraction(l("i j"), l("j k"), l("k"));
+        let z = eval_einsum(&op, &[&x, &y]).unwrap();
+        let mut want = 0.0;
+        for i in 0..3 {
+            for j in 0..4 {
+                want += x.at(&[i, j]) * y.at(&[j, 1]);
+            }
+        }
+        assert!((z.at(&[1]) - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let x = Tensor::zeros(&[3, 4]);
+        let y = Tensor::zeros(&[5, 2]);
+        let op = EinSum::contraction(l("i j"), l("j k"), l("i k"));
+        assert!(eval_einsum(&op, &[&x, &y]).is_err());
+    }
+
+    #[test]
+    fn rank1_dot_product() {
+        let x = Tensor::new(vec![3], vec![1., 2., 3.]).unwrap();
+        let y = Tensor::new(vec![3], vec![4., 5., 6.]).unwrap();
+        let op = EinSum::contraction(l("i"), l("i"), vec![]);
+        let z = eval_einsum(&op, &[&x, &y]).unwrap();
+        assert_eq!(z.rank(), 0);
+        assert_eq!(z.at(&[]), 32.0);
+    }
+}

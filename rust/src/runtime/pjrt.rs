@@ -1,0 +1,366 @@
+//! PJRT kernel engine: loads HLO-text artifacts produced by the python/jax
+//! compile path (`make artifacts`) and executes them on the PJRT CPU
+//! client via the `xla` crate.
+//!
+//! The interchange format is HLO *text*, not a serialized `HloModuleProto`:
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+//! XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! Artifacts are described by `artifacts/manifest.txt`, one line per
+//! (kind, shape) kernel: `name<TAB>kind<TAB>d0,d1,..<TAB>file` (aot.py
+//! also emits a human-oriented manifest.json; rust parses only the text
+//! form to stay dependency-free). Executables are compiled lazily on
+//! first use and cached. Python never runs on this path — the manifest
+//! plus HLO files are all that is needed at run time.
+
+use super::KernelEngine;
+use crate::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use crate::einsum::label::{Label, LabelList};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One artifact in `manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Kernel kind: `bmm`, `ew_add`, `ew_mul`, `ew_sub`, `ew_div`,
+    /// `map_exp`, `map_relu`, `map_silu`, `reduce_sum_last`,
+    /// `reduce_max_last`, `softmax`, `attention_tile`, ...
+    pub kind: String,
+    /// Shape parameters, kind-specific (e.g. `[b, m, k, n]` for `bmm`).
+    pub dims: Vec<usize>,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+}
+
+/// Parse the line-oriented manifest format.
+fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 4 {
+            return Err(Error::Artifact(format!(
+                "manifest line {}: expected 4 tab-separated fields, got {}",
+                lineno + 1,
+                parts.len()
+            )));
+        }
+        let dims = parts[2]
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<usize>().map_err(|_| {
+                    Error::Artifact(format!("manifest line {}: bad dim {s:?}", lineno + 1))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.push(ManifestEntry {
+            name: parts[0].to_string(),
+            kind: parts[1].to_string(),
+            dims,
+            file: parts[3].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Compiled-executable cache entry.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT-backed kernel engine.
+///
+/// All PJRT interaction is serialized behind one mutex: the CPU client's
+/// executables are internally multi-threaded, and the FFI types are not
+/// `Sync`. Wall-clock parallel-speedup experiments therefore use the
+/// native engine; the PJRT engine demonstrates the AOT path and provides
+/// the XLA-compiled hot kernels for single-stream throughput.
+pub struct PjrtEngine {
+    inner: Mutex<PjrtInner>,
+    /// (kind, dims) -> manifest entry, for fast availability checks.
+    index: HashMap<(String, Vec<usize>), ManifestEntry>,
+    dir: PathBuf,
+}
+
+struct PjrtInner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Compiled>,
+}
+
+// SAFETY: every access to the FFI client/executables goes through the
+// mutex in `inner`; the raw pointers are never shared across threads
+// without it.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load the artifact manifest from `dir` (e.g. `artifacts/`) and create
+    /// a PJRT CPU client. Fails if the manifest is missing or unreadable.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let mut index = HashMap::new();
+        for k in parse_manifest(&text)? {
+            index.insert((k.kind.clone(), k.dims.clone()), k);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine {
+            inner: Mutex::new(PjrtInner {
+                client,
+                cache: HashMap::new(),
+            }),
+            index,
+            dir,
+        })
+    }
+
+    /// Number of registered artifacts.
+    pub fn num_artifacts(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True if an artifact for (kind, dims) exists.
+    pub fn has(&self, kind: &str, dims: &[usize]) -> bool {
+        self.index.contains_key(&(kind.to_string(), dims.to_vec()))
+    }
+
+    /// Execute the named-kind kernel on flat input buffers with explicit
+    /// shapes. Inputs/outputs are f32 tensors; the artifact must have been
+    /// lowered with `return_tuple=True` (we unwrap a 1-tuple).
+    pub fn run(&self, kind: &str, dims: &[usize], inputs: &[&Tensor]) -> Result<Tensor> {
+        let entry = self
+            .index
+            .get(&(kind.to_string(), dims.to_vec()))
+            .ok_or_else(|| {
+                Error::Artifact(format!("no artifact for kind={kind} dims={dims:?}"))
+            })?
+            .clone();
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(&entry.name) {
+            let path = self.dir.join(&entry.file);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+                    Error::Artifact(format!("non-utf8 path {}", path.display()))
+                })?)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp)?;
+            inner.cache.insert(entry.name.clone(), Compiled { exe });
+        }
+        let compiled = inner.cache.get(&entry.name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims_i64: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims_i64)
+            })
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let result = compiled.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let out_dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let values = out.to_vec::<f32>()?;
+        Tensor::new(out_dims, values)
+    }
+
+    /// Try to evaluate an EinSum via a registered artifact. Returns
+    /// `Ok(None)` when no artifact pattern matches (caller falls back).
+    pub fn try_eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Option<Tensor>> {
+        match op {
+            EinSum::Input => Ok(None),
+            EinSum::Unary { lx, lz, op: u, agg } => {
+                self.try_eval_unary(lx, lz, *u, *agg, inputs[0])
+            }
+            EinSum::Binary {
+                lx,
+                ly,
+                lz,
+                join,
+                agg,
+            } => self.try_eval_binary(lx, ly, lz, *join, *agg, inputs),
+        }
+    }
+
+    fn try_eval_unary(
+        &self,
+        lx: &LabelList,
+        lz: &LabelList,
+        u: UnaryOp,
+        agg: AggOp,
+        x: &Tensor,
+    ) -> Result<Option<Tensor>> {
+        // Pure map in the same label order: flatten to [n].
+        if lz == lx {
+            let kind = match u {
+                UnaryOp::Exp => "map_exp",
+                UnaryOp::Relu => "map_relu",
+                UnaryOp::Silu => "map_silu",
+                UnaryOp::Square => "map_square",
+                _ => return Ok(None),
+            };
+            let n = x.len();
+            if !self.has(kind, &[n]) {
+                return Ok(None);
+            }
+            let flat = x.clone().reshape(vec![n])?;
+            let out = self.run(kind, &[n], &[&flat])?;
+            return Ok(Some(out.reshape(x.shape().to_vec())?));
+        }
+        // Row reduction over the last label: [rows, cols] -> [rows].
+        if lz.len() + 1 == lx.len() && lz[..] == lx[..lz.len()] && x.rank() >= 1 {
+            let kind = match agg {
+                AggOp::Sum => "reduce_sum_last",
+                AggOp::Max => "reduce_max_last",
+                _ => return Ok(None),
+            };
+            if !matches!(u, UnaryOp::Identity) {
+                return Ok(None);
+            }
+            let cols = *x.shape().last().unwrap();
+            let rows = x.len() / cols.max(1);
+            if !self.has(kind, &[rows, cols]) {
+                return Ok(None);
+            }
+            let flat = x.clone().reshape(vec![rows, cols])?;
+            let out = self.run(kind, &[rows, cols], &[&flat])?;
+            let out_shape: Vec<usize> = x.shape()[..x.rank() - 1].to_vec();
+            return Ok(Some(out.reshape(out_shape)?));
+        }
+        Ok(None)
+    }
+
+    fn try_eval_binary(
+        &self,
+        lx: &LabelList,
+        ly: &LabelList,
+        lz: &LabelList,
+        join: JoinOp,
+        agg: AggOp,
+        inputs: &[&Tensor],
+    ) -> Result<Option<Tensor>> {
+        let (x, y) = (inputs[0], inputs[1]);
+        // Elementwise, identical label order: flatten to [n].
+        if lx == ly && lx == lz {
+            let kind = match join {
+                JoinOp::Add => "ew_add",
+                JoinOp::Mul => "ew_mul",
+                JoinOp::Sub => "ew_sub",
+                JoinOp::Div => "ew_div",
+                _ => return Ok(None),
+            };
+            let n = x.len();
+            if !self.has(kind, &[n]) {
+                return Ok(None);
+            }
+            let fx = x.clone().reshape(vec![n])?;
+            let fy = y.clone().reshape(vec![n])?;
+            let out = self.run(kind, &[n], &[&fx, &fy])?;
+            return Ok(Some(out.reshape(x.shape().to_vec())?));
+        }
+        // Mul/Sum contraction with a clean batch/m/n/k split: canonical BMM.
+        if join == JoinOp::Mul && agg == AggOp::Sum {
+            if let Some((bmnk, perm_x, perm_y, z_canon, z_shape)) =
+                bmm_canonicalize(lx, ly, lz, x, y)
+            {
+                let [b, m, k, n] = bmnk;
+                if !self.has("bmm", &[b, m, k, n]) {
+                    return Ok(None);
+                }
+                let xc = x.permute(&perm_x)?.reshape(vec![b, m, k])?;
+                let yc = y.permute(&perm_y)?.reshape(vec![b, k, n])?;
+                let out = self.run("bmm", &[b, m, k, n], &[&xc, &yc])?;
+                let out = out.reshape(z_shape)?;
+                let perm_z: Vec<usize> = lz
+                    .iter()
+                    .map(|l| z_canon.iter().position(|m2| m2 == l).unwrap())
+                    .collect();
+                return Ok(Some(out.permute(&perm_z)?));
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// Classify a Mul/Sum binary EinSum into the canonical BMM form. Returns
+/// `([b,m,k,n], perm_x, perm_y, canonical z labels, canonical z shape)`.
+#[allow(clippy::type_complexity)]
+fn bmm_canonicalize(
+    lx: &LabelList,
+    ly: &LabelList,
+    lz: &LabelList,
+    x: &Tensor,
+    y: &Tensor,
+) -> Option<([usize; 4], Vec<usize>, Vec<usize>, LabelList, Vec<usize>)> {
+    let mut batch = vec![];
+    let mut ms = vec![];
+    let mut ns = vec![];
+    let mut ks = vec![];
+    let mut seen: Vec<Label> = vec![];
+    for l in lx.iter().chain(ly.iter()) {
+        if seen.contains(l) {
+            continue;
+        }
+        seen.push(*l);
+        match (lx.contains(l), ly.contains(l), lz.contains(l)) {
+            (true, true, true) => batch.push(*l),
+            (true, false, true) => ms.push(*l),
+            (false, true, true) => ns.push(*l),
+            (true, true, false) => ks.push(*l),
+            _ => return None,
+        }
+    }
+    let dim_x = |l: &Label| x.shape()[lx.iter().position(|m| m == l).unwrap()];
+    let dim_y = |l: &Label| y.shape()[ly.iter().position(|m| m == l).unwrap()];
+    let b: usize = batch.iter().map(dim_x).product();
+    let m: usize = ms.iter().map(dim_x).product();
+    let k: usize = ks.iter().map(dim_x).product();
+    let n: usize = ns.iter().map(dim_y).product();
+    let x_order: LabelList = batch.iter().chain(&ms).chain(&ks).copied().collect();
+    let y_order: LabelList = batch.iter().chain(&ks).chain(&ns).copied().collect();
+    let perm_x: Vec<usize> = x_order
+        .iter()
+        .map(|l| lx.iter().position(|m2| m2 == l).unwrap())
+        .collect();
+    let perm_y: Vec<usize> = y_order
+        .iter()
+        .map(|l| ly.iter().position(|m2| m2 == l).unwrap())
+        .collect();
+    let z_canon: LabelList = batch.iter().chain(&ms).chain(&ns).copied().collect();
+    let z_shape: Vec<usize> = batch
+        .iter()
+        .map(dim_x)
+        .chain(ms.iter().map(dim_x))
+        .chain(ns.iter().map(dim_y))
+        .collect();
+    Some(([b, m, k, n], perm_x, perm_y, z_canon, z_shape))
+}
+
+impl KernelEngine for PjrtEngine {
+    fn eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
+        match self.try_eval(op, inputs)? {
+            Some(t) => Ok(t),
+            None => Err(Error::Artifact(format!(
+                "no PJRT artifact matches op {op} on shapes {:?}",
+                inputs.iter().map(|t| t.shape()).collect::<Vec<_>>()
+            ))),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

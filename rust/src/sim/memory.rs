@@ -1,0 +1,300 @@
+//! Memory-constrained execution modeling (paper Experiment 4 / Fig. 11).
+//!
+//! Einsummable's TURNIP engine pages GPU tiles out to CPU RAM instead of
+//! OOMing; ZeRO-Inference keeps weights sharded and gathers per layer;
+//! FlexGen streams weights from host RAM. This module models all three on
+//! top of the same task graph:
+//!
+//! * every worker has `capacity_bytes` of device memory;
+//! * produced tiles stay resident until their last consumer finishes;
+//! * over-capacity allocation evicts least-recently-used tiles to host
+//!   (`host_bps`), and faulting them back stalls the consumer;
+//! * a [`WeightPolicy`] adds the baseline-specific weight movement.
+
+use super::cluster::ExecReport;
+use super::network::NetworkProfile;
+use crate::einsum::graph::VertexId;
+use crate::taskgraph::{TaskGraph, TaskKind, TransferClass};
+use std::collections::{HashMap, HashSet};
+
+/// How model weights are stored and moved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightPolicy {
+    /// Weights resident on their owning device (Einsummable/TURNIP: they
+    /// page like any other tile under memory pressure).
+    Resident,
+    /// ZeRO-Inference-like: weights sharded across devices; every consumer
+    /// gathers its weight tiles over the interconnect each use.
+    ZeroSharded,
+    /// FlexGen-like: weights live in host RAM and stream to the device on
+    /// every use at host bandwidth.
+    HostStreamed,
+}
+
+/// Memory configuration for a modeled run.
+#[derive(Clone, Debug)]
+pub struct MemoryConfig {
+    /// Device memory per worker, bytes.
+    pub capacity_bytes: u64,
+    pub weight_policy: WeightPolicy,
+}
+
+struct Tile {
+    bytes: u64,
+    resident: bool,
+    last_use: u64,
+    refs: usize,
+    worker: usize,
+}
+
+/// Model a placed task graph under a memory budget. `weight_inputs` names
+/// the input vertices holding model weights (for the weight policies).
+pub fn model_with_memory(
+    tg: &TaskGraph,
+    net: &NetworkProfile,
+    workers: usize,
+    mem: &MemoryConfig,
+    weight_inputs: &HashSet<VertexId>,
+) -> ExecReport {
+    let n = tg.tasks.len();
+    let mut finish = vec![0.0f64; n];
+    let mut clock = vec![0.0f64; workers];
+    let mut nic = vec![0.0f64; workers]; // egress serialization (see Cluster::model)
+    let mut busy = vec![0.0f64; workers];
+    let mut report = ExecReport {
+        tasks: n,
+        kernel_calls: tg.kernel_calls(),
+        ..Default::default()
+    };
+    // refcounts: how many tasks consume each task's tile
+    let mut refs = vec![0usize; n];
+    for t in &tg.tasks {
+        for &d in &t.deps {
+            refs[d.0] += 1;
+        }
+    }
+    let mut tiles: HashMap<usize, Tile> = HashMap::new();
+    let mut used: Vec<u64> = vec![0; workers];
+    let mut tick: u64 = 0;
+
+    let is_weight_tile = |ti: usize| -> bool {
+        matches!(&tg.tasks[ti].kind, TaskKind::InputTile { vertex, .. } if weight_inputs.contains(vertex))
+    };
+
+    for t in &tg.tasks {
+        let w = t.worker;
+        tick += 1;
+        let mut ready = 0.0f64;
+        let mut stall = 0.0f64;
+        let pinned: HashSet<usize> = t.deps.iter().map(|d| d.0).collect();
+
+        for &d in &t.deps {
+            let dep = &tg.tasks[d.0];
+            let bytes = dep.out_bytes as u64;
+            let mut arrive = finish[d.0];
+            let weight = is_weight_tile(d.0);
+            // weight policies add movement independent of placement
+            match (weight, mem.weight_policy) {
+                (true, WeightPolicy::ZeroSharded) => {
+                    arrive += net.wire_s(dep.out_bytes);
+                    report.bytes_moved += bytes;
+                    report.bytes_input += bytes;
+                }
+                (true, WeightPolicy::HostStreamed) => {
+                    arrive += net.host_s(dep.out_bytes);
+                    report.bytes_paged += bytes;
+                    report.page_stall_s += net.host_s(dep.out_bytes);
+                }
+                _ => {
+                    if dep.worker != w {
+                        let send_start = finish[d.0].max(nic[dep.worker]);
+                        nic[dep.worker] =
+                            send_start + dep.out_bytes as f64 / net.bandwidth_bps;
+                        arrive = send_start + net.wire_s(dep.out_bytes);
+                        report.bytes_moved += bytes;
+                        match t.kind.class() {
+                            TransferClass::Join => report.bytes_join += bytes,
+                            TransferClass::Agg => report.bytes_agg += bytes,
+                            TransferClass::Repart => report.bytes_repart += bytes,
+                            TransferClass::Input => report.bytes_input += bytes,
+                        }
+                    } else if let Some(tile) = tiles.get_mut(&d.0) {
+                        // same-worker: fault back in if paged out
+                        if !tile.resident {
+                            let s = net.host_s(dep.out_bytes);
+                            stall += s;
+                            report.bytes_paged += bytes;
+                            report.page_stall_s += s;
+                            tile.resident = true;
+                            used[w] += bytes;
+                        }
+                        tile.last_use = tick;
+                    }
+                }
+            }
+            ready = ready.max(arrive);
+        }
+
+        // allocate the output tile (host-streamed weights never occupy
+        // device memory; everything else does)
+        let out_bytes = t.out_bytes as u64;
+        let occupies = !(is_weight_tile(t.id.0) && mem.weight_policy == WeightPolicy::HostStreamed);
+        if occupies {
+            used[w] += out_bytes;
+            // evict LRU until under capacity
+            while used[w] > mem.capacity_bytes {
+                let victim = tiles
+                    .iter()
+                    .filter(|(id, tile)| {
+                        tile.worker == w && tile.resident && !pinned.contains(id)
+                    })
+                    .min_by_key(|(_, tile)| tile.last_use)
+                    .map(|(id, _)| *id);
+                match victim {
+                    Some(vid) => {
+                        let tile = tiles.get_mut(&vid).unwrap();
+                        tile.resident = false;
+                        used[w] -= tile.bytes;
+                        let s = net.host_s(tile.bytes as usize);
+                        stall += s;
+                        report.bytes_paged += tile.bytes;
+                        report.page_stall_s += s;
+                    }
+                    None => break, // working set itself exceeds capacity
+                }
+            }
+            tiles.insert(
+                t.id.0,
+                Tile {
+                    bytes: out_bytes,
+                    resident: true,
+                    last_use: tick,
+                    refs: refs[t.id.0],
+                    worker: w,
+                },
+            );
+        }
+
+        let compute = net.compute_s(t.flops);
+        let start = (ready + stall).max(clock[w]);
+        finish[t.id.0] = start + compute;
+        clock[w] = finish[t.id.0];
+        busy[w] += compute;
+        report.flops += t.flops;
+
+        // release fully-consumed dep tiles
+        for &d in &t.deps {
+            if let Some(tile) = tiles.get_mut(&d.0) {
+                tile.refs = tile.refs.saturating_sub(1);
+                if tile.refs == 0 {
+                    if tile.resident {
+                        used[tile.worker] -= tile.bytes;
+                    }
+                    tiles.remove(&d.0);
+                }
+            }
+        }
+    }
+    report.sim_makespan_s = finish.iter().copied().fold(0.0, f64::max);
+    report.worker_busy_s = busy;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{plan_graph, PlannerConfig};
+    use crate::einsum::expr::EinSum;
+    use crate::einsum::graph::EinGraph;
+    use crate::einsum::label::labels;
+    use crate::sim::cluster::Cluster;
+
+    fn chain(depth: usize, s: usize) -> (EinGraph, HashSet<VertexId>) {
+        // x @ W1 @ W2 @ ... — weights tagged
+        let mut g = EinGraph::new();
+        let mut x = g.input("X", vec![s, s]);
+        let mut weights = HashSet::new();
+        for l in 0..depth {
+            let w = g.input(&format!("W{l}"), vec![s, s]);
+            weights.insert(w);
+            x = g
+                .add(
+                    &format!("H{l}"),
+                    EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                    vec![x, w],
+                )
+                .unwrap();
+        }
+        (g, weights)
+    }
+
+    fn lowered(
+        g: &EinGraph,
+        p: usize,
+    ) -> (TaskGraph, NetworkProfile) {
+        let plan = plan_graph(g, &PlannerConfig { p, ..Default::default() }).unwrap();
+        let cluster = Cluster::new(p, NetworkProfile::gpu_server_a100());
+        (cluster.lower(g, &plan).unwrap(), cluster.net)
+    }
+
+    #[test]
+    fn ample_memory_no_paging() {
+        let (g, weights) = chain(4, 64);
+        let (tg, net) = lowered(&g, 4);
+        let mem = MemoryConfig {
+            capacity_bytes: 1 << 30,
+            weight_policy: WeightPolicy::Resident,
+        };
+        let rep = model_with_memory(&tg, &net, 4, &mem, &weights);
+        assert_eq!(rep.bytes_paged, 0);
+        assert_eq!(rep.page_stall_s, 0.0);
+    }
+
+    #[test]
+    fn tight_memory_pages_and_slows() {
+        let (g, weights) = chain(6, 128);
+        let (tg, net) = lowered(&g, 2);
+        let roomy = MemoryConfig {
+            capacity_bytes: 1 << 30,
+            weight_policy: WeightPolicy::Resident,
+        };
+        let tight = MemoryConfig {
+            capacity_bytes: 40 * 1024, // barely one tile
+            weight_policy: WeightPolicy::Resident,
+        };
+        let r1 = model_with_memory(&tg, &net, 2, &roomy, &weights);
+        let r2 = model_with_memory(&tg, &net, 2, &tight, &weights);
+        assert!(r2.bytes_paged > 0);
+        assert!(r2.sim_makespan_s >= r1.sim_makespan_s);
+    }
+
+    #[test]
+    fn zero_policy_adds_weight_traffic() {
+        let (g, weights) = chain(4, 64);
+        let (tg, net) = lowered(&g, 4);
+        let resident = MemoryConfig {
+            capacity_bytes: 1 << 30,
+            weight_policy: WeightPolicy::Resident,
+        };
+        let zero = MemoryConfig {
+            capacity_bytes: 1 << 30,
+            weight_policy: WeightPolicy::ZeroSharded,
+        };
+        let r1 = model_with_memory(&tg, &net, 4, &resident, &weights);
+        let r2 = model_with_memory(&tg, &net, 4, &zero, &weights);
+        assert!(r2.bytes_moved > r1.bytes_moved);
+    }
+
+    #[test]
+    fn flexgen_policy_streams_from_host() {
+        let (g, weights) = chain(4, 64);
+        let (tg, net) = lowered(&g, 4);
+        let fg = MemoryConfig {
+            capacity_bytes: 1 << 30,
+            weight_policy: WeightPolicy::HostStreamed,
+        };
+        let rep = model_with_memory(&tg, &net, 4, &fg, &weights);
+        assert!(rep.bytes_paged > 0);
+        assert!(rep.page_stall_s > 0.0);
+    }
+}

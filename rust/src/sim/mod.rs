@@ -1,0 +1,21 @@
+//! The simulated distributed runtime.
+//!
+//! The paper evaluated on a 16-node AWS CPU cluster and multi-GPU servers;
+//! neither exists in this container, so (per the reproduction's
+//! substitution rule) we execute task graphs on a *simulated cluster*:
+//! `p` workers with per-worker tensor storage, a configurable
+//! bandwidth/latency [`network::NetworkProfile`], byte-accurate transfer
+//! accounting (split into the cost model's join/agg/repartition classes),
+//! and an event-driven makespan model. Real kernel execution runs
+//! multi-threaded on the host CPU, so wall-clock speedups are real; the
+//! simulated timeline adds the network the paper's clusters had.
+//!
+//! [`memory`] adds per-device memory capacity with LRU paging to host —
+//! the TURNIP-style offloading that Experiment 4 (Fig. 11) exercises.
+
+pub mod cluster;
+pub mod memory;
+pub mod network;
+
+pub use cluster::{Cluster, ExecReport};
+pub use network::NetworkProfile;

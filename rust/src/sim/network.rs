@@ -1,0 +1,138 @@
+//! Network and device profiles for the simulated cluster.
+
+/// Bandwidth/latency model of the interconnect plus a device compute rate.
+/// Transfers cost `latency_s + bytes / bandwidth_Bps`; compute costs
+/// `flops / flops_per_s`.
+#[derive(Clone, Debug)]
+pub struct NetworkProfile {
+    pub name: String,
+    /// Interconnect bandwidth, bytes/second, per link.
+    pub bandwidth_bps: f64,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+    /// Device compute throughput, flops/second (per worker).
+    pub flops_per_s: f64,
+    /// Host<->device bandwidth for paging/offload, bytes/second.
+    pub host_bps: f64,
+    /// Per-task scheduler/dispatch overhead, seconds. Our rust runtime
+    /// dispatches in microseconds; systems with a centralized Python
+    /// scheduler (Dask) pay ~0.1–1 ms per task — the fig8 bench models
+    /// the Dask baseline with an elevated value.
+    pub sched_overhead_s: f64,
+}
+
+impl NetworkProfile {
+    /// The paper's CPU cluster: m6in.16xlarge, 100 Gb/s network, one
+    /// worker = one machine (32 cores of Ice Lake ~ 1.5 TFLOP/s f32 at
+    /// realistic GEMM efficiency).
+    pub fn cpu_cluster() -> Self {
+        NetworkProfile {
+            name: "cpu-cluster-100gbps".into(),
+            bandwidth_bps: 100e9 / 8.0,
+            latency_s: 5e-6,
+            flops_per_s: 1.5e12,
+            host_bps: 12.5e9,
+            sched_overhead_s: 2e-6,
+        }
+    }
+
+    /// The paper's P100 GPU server: device-to-device over PCIe 3.0
+    /// (~12 GB/s effective), P100 ~ 9 TFLOP/s f32.
+    pub fn gpu_server_p100() -> Self {
+        NetworkProfile {
+            name: "gpu-server-p100-pcie".into(),
+            bandwidth_bps: 12e9,
+            latency_s: 10e-6,
+            flops_per_s: 9e12,
+            host_bps: 12e9,
+            sched_overhead_s: 2e-6,
+        }
+    }
+
+    /// The paper's A100 server: NVLink-class interconnect (~300 GB/s
+    /// effective per GPU pair on P4d), A100 ~ 19.5 TFLOP/s f32.
+    pub fn gpu_server_a100() -> Self {
+        NetworkProfile {
+            name: "gpu-server-a100-nvlink".into(),
+            bandwidth_bps: 300e9,
+            latency_s: 5e-6,
+            flops_per_s: 19.5e12,
+            host_bps: 25e9,
+            sched_overhead_s: 2e-6,
+        }
+    }
+
+    /// The V100 server used in Experiment 3 (8 GPUs, NVLink ~150 GB/s).
+    pub fn gpu_server_v100() -> Self {
+        NetworkProfile {
+            name: "gpu-server-v100-nvlink".into(),
+            bandwidth_bps: 150e9,
+            latency_s: 5e-6,
+            flops_per_s: 14e12,
+            host_bps: 12e9,
+            sched_overhead_s: 2e-6,
+        }
+    }
+
+    /// Local testing profile: fast, negligible latency.
+    pub fn loopback() -> Self {
+        NetworkProfile {
+            name: "loopback".into(),
+            bandwidth_bps: 1e12,
+            latency_s: 0.0,
+            flops_per_s: 1e11,
+            host_bps: 1e11,
+            sched_overhead_s: 0.0,
+        }
+    }
+
+    /// Time to move `bytes` across one link.
+    #[inline]
+    pub fn wire_s(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Time to page `bytes` to/from host memory.
+    #[inline]
+    pub fn host_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.host_bps
+    }
+
+    /// Time to compute `flops` on one worker (plus dispatch overhead).
+    #[inline]
+    pub fn compute_s(&self, flops: f64) -> f64 {
+        self.sched_overhead_s + flops / self.flops_per_s
+    }
+
+    /// Same profile with a different per-task scheduler overhead (used to
+    /// model centralized-scheduler systems like Dask).
+    pub fn with_sched_overhead(mut self, overhead_s: f64) -> Self {
+        self.sched_overhead_s = overhead_s;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_time_monotone() {
+        let n = NetworkProfile::cpu_cluster();
+        assert!(n.wire_s(1 << 20) < n.wire_s(1 << 24));
+        assert!(n.wire_s(0) >= n.latency_s);
+    }
+
+    #[test]
+    fn profiles_sane() {
+        for p in [
+            NetworkProfile::cpu_cluster(),
+            NetworkProfile::gpu_server_p100(),
+            NetworkProfile::gpu_server_a100(),
+            NetworkProfile::gpu_server_v100(),
+            NetworkProfile::loopback(),
+        ] {
+            assert!(p.bandwidth_bps > 0.0 && p.flops_per_s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! Lowering: (EinGraph, Plan) -> TaskGraph.
+//!
+//! Every non-input vertex becomes (paper §4.3/Eq. 5):
+//!
+//! 1. per operand: repartition tasks if the producer's output partitioning
+//!    differs from `d[l_o; l_uniq]` (each consumer-layout tile depends on
+//!    exactly the producer-layout tiles overlapping it);
+//! 2. `prod(d)` kernel-call tasks, one per join tuple;
+//! 3. if `prod(d[l_agg]) > 1`, one aggregation task per output tile,
+//!    reducing its group of kernel outputs.
+//!
+//! Inputs become one `InputTile` task per tile of their pre-partitioning.
+
+use super::{Task, TaskGraph, TaskId, TaskKind};
+use crate::decomp::Plan;
+use crate::einsum::expr::EinSum;
+use crate::einsum::graph::EinGraph;
+use crate::einsum::label::project;
+use crate::error::{Error, Result};
+use crate::tensor::index_space;
+use crate::tra::relation::{linearize, tile_offset, tile_size};
+
+/// Per-dimension producer tile indices overlapping a consumer region.
+fn overlapping_tiles(bound: usize, parts: usize, origin: usize, len: usize) -> (usize, usize) {
+    // balanced tiling boundaries are monotone; scan (parts is small)
+    let mut lo = None;
+    let mut hi = 0;
+    for i in 0..parts {
+        let o = tile_offset(bound, parts, i);
+        let s = tile_size(bound, parts, i);
+        if o < origin + len && o + s > origin {
+            if lo.is_none() {
+                lo = Some(i);
+            }
+            hi = i;
+        }
+    }
+    (lo.unwrap_or(0), hi)
+}
+
+/// Lower a planned EinGraph to a (not yet placed) task graph.
+pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
+    let mut tg = TaskGraph::default();
+    let push = |kind: TaskKind, deps: Vec<TaskId>, out_bytes: usize, flops: f64, tasks: &mut Vec<Task>| -> TaskId {
+        let id = TaskId(tasks.len());
+        tasks.push(Task {
+            id,
+            kind,
+            deps,
+            out_bytes,
+            flops,
+            worker: usize::MAX,
+        });
+        id
+    };
+    let mut tasks: Vec<Task> = Vec::new();
+
+    for vert in g.vertices() {
+        let v = vert.id;
+        match &vert.op {
+            EinSum::Input => {
+                let part = plan
+                    .input_parts
+                    .get(&v)
+                    .cloned()
+                    .unwrap_or_else(|| vec![1; vert.bound.len()]);
+                let mut outs = Vec::new();
+                for key in index_space(&part) {
+                    let bytes: usize = key
+                        .iter()
+                        .enumerate()
+                        .map(|(d, &k)| tile_size(vert.bound[d], part[d], k))
+                        .product::<usize>()
+                        * 4;
+                    outs.push(push(
+                        TaskKind::InputTile { vertex: v, key },
+                        vec![],
+                        bytes,
+                        0.0,
+                        &mut tasks,
+                    ));
+                }
+                tg.vertex_outputs.insert(v, outs);
+                tg.vertex_out_part.insert(v, part);
+            }
+            op => {
+                let d = plan
+                    .parts
+                    .get(&v)
+                    .ok_or_else(|| Error::TaskGraph(format!("vertex {} unplanned", vert.name)))?;
+                let uniq = op.unique_labels();
+                let lz = op.lz().unwrap();
+                let dz = project(d, lz, &uniq);
+                let bz = &vert.bound;
+
+                // 1. per-operand tile providers (repartitioned if needed)
+                let mut operand_tiles: Vec<Vec<TaskId>> = Vec::new();
+                let mut operand_parts: Vec<Vec<usize>> = Vec::new();
+                for (o, &c) in vert.inputs.iter().enumerate() {
+                    let need = project(d, op.operand_labels()[o], &uniq);
+                    let have = tg.vertex_out_part[&c].clone();
+                    let have_tiles = tg.vertex_outputs[&c].clone();
+                    let cb = &g.vertex(c).bound;
+                    if have == need {
+                        operand_tiles.push(have_tiles);
+                    } else {
+                        // repartition: one task per needed tile
+                        let mut tiles = Vec::new();
+                        for key in index_space(&need) {
+                            // deps: all producer tiles overlapping this region
+                            let ranges: Vec<(usize, usize)> = key
+                                .iter()
+                                .enumerate()
+                                .map(|(dim, &k)| {
+                                    let origin = tile_offset(cb[dim], need[dim], k);
+                                    let len = tile_size(cb[dim], need[dim], k);
+                                    overlapping_tiles(cb[dim], have[dim], origin, len)
+                                })
+                                .collect();
+                            let mut deps = Vec::new();
+                            let range_dims: Vec<usize> =
+                                ranges.iter().map(|(lo, hi)| hi - lo + 1).collect();
+                            for rk in index_space(&range_dims) {
+                                let pkey: Vec<usize> = rk
+                                    .iter()
+                                    .zip(&ranges)
+                                    .map(|(&r, &(lo, _))| lo + r)
+                                    .collect();
+                                deps.push(have_tiles[linearize(&pkey, &have)]);
+                            }
+                            let bytes: usize = key
+                                .iter()
+                                .enumerate()
+                                .map(|(dim, &k)| tile_size(cb[dim], need[dim], k))
+                                .product::<usize>()
+                                * 4;
+                            tiles.push(push(
+                                TaskKind::Repart {
+                                    producer: c,
+                                    consumer: v,
+                                    operand: o,
+                                    key,
+                                },
+                                deps,
+                                bytes,
+                                0.0,
+                                &mut tasks,
+                            ));
+                        }
+                        operand_tiles.push(tiles);
+                    }
+                    operand_parts.push(need);
+                }
+
+                // 2. kernel-call tasks, one per join tuple
+                let in_bounds: Vec<&[usize]> = vert
+                    .inputs
+                    .iter()
+                    .map(|&i| g.vertex(i).bound.as_slice())
+                    .collect();
+                let total_flops = op.flops(&in_bounds)?;
+                let n_calls: usize = d.iter().product();
+                let flops_per_call = total_flops / n_calls as f64;
+                let mut kernel_by_key: Vec<TaskId> = Vec::with_capacity(n_calls);
+                for key in index_space(d) {
+                    let mut deps = Vec::new();
+                    for (o, lo) in op.operand_labels().iter().enumerate() {
+                        let okey = project(&key, lo, &uniq);
+                        deps.push(operand_tiles[o][linearize(&okey, &operand_parts[o])]);
+                    }
+                    // output tile shape over lz under (bz, dz) at zkey
+                    let zkey = project(&key, lz, &uniq);
+                    let bytes: usize = zkey
+                        .iter()
+                        .enumerate()
+                        .map(|(dim, &k)| tile_size(bz[dim], dz[dim], k))
+                        .product::<usize>()
+                        * 4;
+                    kernel_by_key.push(push(
+                        TaskKind::Kernel { vertex: v, key },
+                        deps,
+                        bytes,
+                        flops_per_call,
+                        &mut tasks,
+                    ));
+                }
+
+                // 3. aggregation per output tile if needed
+                let lagg = op.lagg();
+                let n_agg: usize = project(d, &lagg, &uniq).iter().product();
+                let outs: Vec<TaskId> = if n_agg > 1 {
+                    let mut groups: std::collections::HashMap<Vec<usize>, Vec<TaskId>> =
+                        std::collections::HashMap::new();
+                    for (key, &tid) in index_space(d).zip(&kernel_by_key) {
+                        groups
+                            .entry(project(&key, lz, &uniq))
+                            .or_default()
+                            .push(tid);
+                    }
+                    let mut outs = Vec::new();
+                    for zkey in index_space(&dz) {
+                        let members = groups.remove(&zkey).ok_or_else(|| {
+                            Error::TaskGraph(format!("missing agg group {zkey:?}"))
+                        })?;
+                        let bytes: usize = zkey
+                            .iter()
+                            .enumerate()
+                            .map(|(dim, &k)| tile_size(bz[dim], dz[dim], k))
+                            .product::<usize>()
+                            * 4;
+                        let elems = (bytes / 4) as f64;
+                        let flops = elems * (members.len() as f64 - 1.0);
+                        outs.push(push(
+                            TaskKind::Agg {
+                                vertex: v,
+                                key: zkey,
+                            },
+                            members,
+                            bytes,
+                            flops,
+                            &mut tasks,
+                        ));
+                    }
+                    outs
+                } else {
+                    // No aggregation: the kernel tasks ARE the output
+                    // tiles, but they were created in I(d) order (over the
+                    // unique labels). Consumers index vertex outputs in
+                    // row-major I(d_Z) order (over l_Z, possibly permuted
+                    // relative to the unique labels), so reorder.
+                    let mut outs = vec![TaskId(usize::MAX); kernel_by_key.len()];
+                    for (key, &tid) in index_space(d).zip(&kernel_by_key) {
+                        let zkey = project(&key, lz, &uniq);
+                        outs[linearize(&zkey, &dz)] = tid;
+                    }
+                    debug_assert!(outs.iter().all(|t| t.0 != usize::MAX));
+                    outs
+                };
+                tg.vertex_outputs.insert(v, outs);
+                tg.vertex_out_part.insert(v, dz);
+            }
+        }
+    }
+    tg.tasks = tasks;
+    Ok(tg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{plan_graph, PlannerConfig};
+    use crate::einsum::label::labels;
+
+    fn matmul_graph(s: usize) -> EinGraph {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![s, s]);
+        let b = g.input("B", vec![s, s]);
+        g.add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn matmul_lowering_produces_p_kernels() {
+        let g = matmul_graph(64);
+        let plan = plan_graph(&g, &PlannerConfig { p: 16, ..Default::default() }).unwrap();
+        let tg = lower_graph(&g, &plan).unwrap();
+        assert_eq!(tg.kernel_calls(), 16);
+        // topological by construction
+        for t in &tg.tasks {
+            for &d in &t.deps {
+                assert!(d.0 < t.id.0);
+            }
+        }
+    }
+
+    #[test]
+    fn figure2_task_counts() {
+        // d = [2,2,4] over (i,j,k) on an 8x8 matmul: 16 kernel calls, 8
+        // output tiles each aggregated from 2 — exactly Figure 2's
+        // bottom-right dataflow.
+        let g = matmul_graph(8);
+        let z = g.by_name("Z").unwrap();
+        let mut plan = Plan::default();
+        plan.parts.insert(z, vec![2, 2, 4]);
+        plan.finalize_inputs(&g);
+        let tg = lower_graph(&g, &plan).unwrap();
+        assert_eq!(tg.kernel_calls(), 16);
+        let aggs = tg
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Agg { .. }))
+            .count();
+        assert_eq!(aggs, 8);
+        for t in &tg.tasks {
+            if let TaskKind::Agg { .. } = t.kind {
+                assert_eq!(t.deps.len(), 2);
+            }
+        }
+        // join-only cases have no aggregation tasks
+        let mut plan2 = Plan::default();
+        plan2.parts.insert(z, vec![4, 1, 4]);
+        plan2.finalize_inputs(&g);
+        let tg2 = lower_graph(&g, &plan2).unwrap();
+        assert_eq!(
+            tg2.tasks
+                .iter()
+                .filter(|t| matches!(t.kind, TaskKind::Agg { .. }))
+                .count(),
+            0
+        );
+    }
+
+    #[test]
+    fn repart_tasks_created_on_mismatch() {
+        // chain: Z1 = A@B with dz [2,4]; Z2 = Z1@C needing [4,1] -> repart
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![8, 8]);
+        let b = g.input("B", vec![8, 8]);
+        let c = g.input("C", vec![8, 8]);
+        let z1 = g
+            .add(
+                "Z1",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        let z2 = g
+            .add(
+                "Z2",
+                EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+                vec![z1, c],
+            )
+            .unwrap();
+        let mut plan = Plan::default();
+        plan.parts.insert(z1, vec![2, 2, 4]); // dz over (i,k) = [2,4]
+        plan.parts.insert(z2, vec![4, 1, 4]); // needs z1 as [4,1]
+        plan.finalize_inputs(&g);
+        let tg = lower_graph(&g, &plan).unwrap();
+        let reparts: Vec<_> = tg
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Repart { .. }))
+            .collect();
+        // consumer needs 4 tiles of Z1 under [4,1]
+        assert_eq!(reparts.len(), 4);
+        // each [4,1]-tile (2 rows x 8 cols) overlaps 1 row-block x 4
+        // col-blocks of the [2,4] layout = 4 producer tiles
+        for t in &reparts {
+            assert_eq!(t.deps.len(), 4);
+        }
+    }
+
+    #[test]
+    fn overlap_ranges_balanced_tiling() {
+        // bound 10 split 3 ways (4,3,3 at offsets 0,4,7); region [3,6)
+        // overlaps tiles 0 and 1
+        assert_eq!(overlapping_tiles(10, 3, 3, 3), (0, 1));
+        assert_eq!(overlapping_tiles(10, 3, 7, 3), (2, 2));
+        assert_eq!(overlapping_tiles(10, 3, 0, 10), (0, 2));
+    }
+
+    #[test]
+    fn input_tiles_match_pre_partitioning() {
+        let g = matmul_graph(8);
+        let z = g.by_name("Z").unwrap();
+        let mut plan = Plan::default();
+        plan.parts.insert(z, vec![2, 1, 2]);
+        plan.finalize_inputs(&g);
+        let tg = lower_graph(&g, &plan).unwrap();
+        let a = g.by_name("A").unwrap();
+        // A pre-partitioned [2,1] -> 2 input tiles of 4x8 = 128 bytes
+        assert_eq!(tg.vertex_outputs[&a].len(), 2);
+        assert_eq!(tg.task(tg.vertex_outputs[&a][0]).out_bytes, 4 * 8 * 4);
+    }
+}

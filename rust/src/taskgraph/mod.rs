@@ -1,0 +1,132 @@
+//! TaskGraphs: the concrete, executable form of a planned EinGraph.
+//!
+//! Lowering (paper Figure 3: EinGraph + partitioning vectors -> TASKGRAPH)
+//! expands every vertex into its TRA implementation — one *kernel call*
+//! task per join tuple, *aggregation* tasks per output group, and
+//! *repartition* tasks on every producer→consumer edge whose partitionings
+//! disagree. Placement then assigns each task a worker; the simulated
+//! cluster (see [`crate::sim`]) charges every cross-worker edge.
+
+pub mod lower;
+pub mod placement;
+
+use crate::einsum::graph::VertexId;
+
+/// Index of a task within its [`TaskGraph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+/// What a task does.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskKind {
+    /// A tile of a pre-partitioned graph input (materialized, no compute).
+    InputTile { vertex: VertexId, key: Vec<usize> },
+    /// One kernel call: the vertex's EinSum evaluated on operand tiles.
+    /// `key` ranges over `I(d)` (the vertex's unique-label partitioning).
+    Kernel { vertex: VertexId, key: Vec<usize> },
+    /// Reduce a group of kernel outputs with the vertex's `(+)`.
+    /// `key` ranges over `I(d_Z)`.
+    Agg { vertex: VertexId, key: Vec<usize> },
+    /// Build one consumer-layout tile of `producer`'s output from the
+    /// producer-layout tiles overlapping it. `key` ranges over the
+    /// consumer's required partitioning.
+    Repart {
+        producer: VertexId,
+        consumer: VertexId,
+        operand: usize,
+        key: Vec<usize>,
+    },
+}
+
+impl TaskKind {
+    /// Transfer class for the byte ledger (mirrors the three cost-model
+    /// components).
+    pub fn class(&self) -> TransferClass {
+        match self {
+            TaskKind::InputTile { .. } => TransferClass::Input,
+            TaskKind::Kernel { .. } => TransferClass::Join,
+            TaskKind::Agg { .. } => TransferClass::Agg,
+            TaskKind::Repart { .. } => TransferClass::Repart,
+        }
+    }
+}
+
+/// Which cost-model component a transfer belongs to (keyed by the
+/// *consuming* task's kind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TransferClass {
+    Input,
+    Join,
+    Agg,
+    Repart,
+}
+
+/// A node of the task graph.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    /// Tasks whose outputs this task reads, in operand order.
+    pub deps: Vec<TaskId>,
+    /// Bytes of the tile this task produces.
+    pub out_bytes: usize,
+    /// Estimated floating point operations of this task.
+    pub flops: f64,
+    /// Worker assignment (filled by placement; usize::MAX = unassigned).
+    pub worker: usize,
+}
+
+/// The lowered, placed task graph.
+#[derive(Clone, Debug, Default)]
+pub struct TaskGraph {
+    pub tasks: Vec<Task>,
+    /// For each EinGraph vertex: the tasks producing its output tiles, in
+    /// row-major `I(d_Z)` order.
+    pub vertex_outputs: std::collections::HashMap<VertexId, Vec<TaskId>>,
+    /// Output partitioning of each vertex (row-major key order of
+    /// `vertex_outputs`).
+    pub vertex_out_part: std::collections::HashMap<VertexId, Vec<usize>>,
+}
+
+impl TaskGraph {
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id.0]
+    }
+
+    /// Number of kernel-call tasks (the paper's unit of parallel work).
+    pub fn kernel_calls(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Kernel { .. }))
+            .count()
+    }
+
+    /// Validate topological ordering (deps precede users) and placement.
+    pub fn validate(&self, workers: usize) -> crate::error::Result<()> {
+        for t in &self.tasks {
+            for &d in &t.deps {
+                if d.0 >= t.id.0 {
+                    return Err(crate::error::Error::TaskGraph(format!(
+                        "task {} depends on later task {}",
+                        t.id.0, d.0
+                    )));
+                }
+            }
+            if t.worker >= workers {
+                return Err(crate::error::Error::TaskGraph(format!(
+                    "task {} unplaced or out of range (worker {})",
+                    t.id.0, t.worker
+                )));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,213 @@
+//! Processor placement: assign every task a worker.
+//!
+//! The cost model's aggregation term assumes the reducer is co-located
+//! with one group member, and its join term is an upper bound that good
+//! placement undercuts via locality. Two policies:
+//!
+//! * [`Policy::RoundRobin`] — spread each vertex's tasks over workers by
+//!   linear key. Simple, perfectly balanced, locality-blind.
+//! * [`Policy::LocalityGreedy`] (default) — place each task on the worker
+//!   holding the most input bytes, subject to a per-vertex load cap of
+//!   `ceil(tasks/p)` so no worker hoards a vertex's work.
+
+use super::{TaskGraph, TaskKind};
+use std::collections::HashMap;
+
+/// Placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LocalityGreedy,
+}
+
+/// Assign a worker to every task, in place.
+pub fn place(tg: &mut TaskGraph, workers: usize, policy: Policy) {
+    let workers = workers.max(1);
+    match policy {
+        Policy::RoundRobin => place_round_robin(tg, workers),
+        Policy::LocalityGreedy => place_locality(tg, workers),
+    }
+}
+
+fn place_round_robin(tg: &mut TaskGraph, workers: usize) {
+    // per-vertex counters so each vertex's tasks spread evenly
+    let mut counters: HashMap<(u8, usize), usize> = HashMap::new();
+    for i in 0..tg.tasks.len() {
+        let keyv = match &tg.tasks[i].kind {
+            TaskKind::InputTile { vertex, .. } => (0u8, vertex.0),
+            TaskKind::Kernel { vertex, .. } => (1, vertex.0),
+            TaskKind::Agg { vertex, .. } => (2, vertex.0),
+            TaskKind::Repart { producer, .. } => (3, producer.0),
+        };
+        let c = counters.entry(keyv).or_insert(0);
+        tg.tasks[i].worker = *c % workers;
+        *c += 1;
+    }
+}
+
+fn place_locality(tg: &mut TaskGraph, workers: usize) {
+    // group task indices by (kind-class, vertex) to apply per-vertex caps
+    let mut load: HashMap<(u8, usize), Vec<usize>> = HashMap::new(); // per-group per-worker load
+    let group_of = |k: &TaskKind| -> (u8, usize) {
+        match k {
+            TaskKind::InputTile { vertex, .. } => (0u8, vertex.0),
+            TaskKind::Kernel { vertex, .. } => (1, vertex.0),
+            TaskKind::Agg { vertex, .. } => (2, vertex.0),
+            TaskKind::Repart { producer, .. } => (3, producer.0),
+        }
+    };
+    // group sizes for caps
+    let mut group_size: HashMap<(u8, usize), usize> = HashMap::new();
+    for t in &tg.tasks {
+        *group_size.entry(group_of(&t.kind)).or_insert(0) += 1;
+    }
+    let mut rr: HashMap<(u8, usize), usize> = HashMap::new();
+    for i in 0..tg.tasks.len() {
+        let gid = group_of(&tg.tasks[i].kind);
+        let cap = group_size[&gid].div_ceil(workers);
+        let gl = load.entry(gid).or_insert_with(|| vec![0; workers]);
+        let worker = match &tg.tasks[i].kind {
+            TaskKind::InputTile { .. } => {
+                // inputs: pre-placed round-robin (offline, free)
+                let c = rr.entry(gid).or_insert(0);
+                let w = *c % workers;
+                *c += 1;
+                w
+            }
+            TaskKind::Agg { .. } => {
+                // co-locate with the first group member whose worker still
+                // has cap, else the least-loaded member worker
+                let mut best: Option<usize> = None;
+                for &d in &tg.tasks[i].deps {
+                    let w = tg.tasks[d.0].worker;
+                    if gl[w] < cap {
+                        best = Some(w);
+                        break;
+                    }
+                }
+                best.unwrap_or_else(|| {
+                    tg.tasks[i]
+                        .deps
+                        .iter()
+                        .map(|d| tg.tasks[d.0].worker)
+                        .min_by_key(|&w| gl[w])
+                        .unwrap_or(0)
+                })
+            }
+            _ => {
+                // kernel / repart: worker with most local input bytes,
+                // respecting the cap; fall back to least-loaded
+                let mut bytes_by_worker: HashMap<usize, usize> = HashMap::new();
+                for &d in &tg.tasks[i].deps {
+                    let dep = &tg.tasks[d.0];
+                    *bytes_by_worker.entry(dep.worker).or_insert(0) += dep.out_bytes;
+                }
+                let mut cands: Vec<(usize, usize)> = bytes_by_worker.into_iter().collect();
+                cands.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                cands
+                    .iter()
+                    .find(|(w, _)| gl[*w] < cap)
+                    .map(|(w, _)| *w)
+                    .unwrap_or_else(|| (0..workers).min_by_key(|&w| gl[w]).unwrap())
+            }
+        };
+        tg.tasks[i].worker = worker;
+        load.get_mut(&gid).unwrap()[worker] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{plan_graph, PlannerConfig};
+    use crate::einsum::expr::EinSum;
+    use crate::einsum::graph::EinGraph;
+    use crate::einsum::label::labels;
+    use crate::taskgraph::lower::lower_graph;
+
+    fn lowered(p: usize) -> TaskGraph {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![64, 64]);
+        let b = g.input("B", vec![64, 64]);
+        let c = g.input("C", vec![64, 64]);
+        let ab = g
+            .add(
+                "AB",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        g.add(
+            "ABC",
+            EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+            vec![ab, c],
+        )
+        .unwrap();
+        let plan = plan_graph(&g, &PlannerConfig { p, ..Default::default() }).unwrap();
+        lower_graph(&g, &plan).unwrap()
+    }
+
+    #[test]
+    fn round_robin_balances_kernels() {
+        let mut tg = lowered(8);
+        place(&mut tg, 8, Policy::RoundRobin);
+        tg.validate(8).unwrap();
+        // each vertex's 8 kernel calls spread over all 8 workers
+        let mut per_worker = vec![0usize; 8];
+        for t in &tg.tasks {
+            if matches!(t.kind, TaskKind::Kernel { .. }) {
+                per_worker[t.worker] += 1;
+            }
+        }
+        assert!(per_worker.iter().all(|&c| c == 2), "{per_worker:?}");
+    }
+
+    #[test]
+    fn locality_respects_cap_and_validates() {
+        let mut tg = lowered(8);
+        place(&mut tg, 8, Policy::LocalityGreedy);
+        tg.validate(8).unwrap();
+        let mut per_worker = vec![0usize; 8];
+        for t in &tg.tasks {
+            if matches!(t.kind, TaskKind::Kernel { .. }) {
+                per_worker[t.worker] += 1;
+            }
+        }
+        // cap = ceil(8/8) = 1 per vertex, two vertices -> exactly 2 each
+        assert!(per_worker.iter().all(|&c| c == 2), "{per_worker:?}");
+    }
+
+    #[test]
+    fn agg_colocated_with_a_member() {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![8, 8]);
+        let b = g.input("B", vec![8, 8]);
+        let z = g
+            .add(
+                "Z",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        let mut plan = crate::decomp::Plan::default();
+        plan.parts.insert(z, vec![2, 2, 4]);
+        plan.finalize_inputs(&g);
+        let mut tg = lower_graph(&g, &plan).unwrap();
+        place(&mut tg, 4, Policy::LocalityGreedy);
+        for t in &tg.tasks {
+            if let TaskKind::Agg { .. } = t.kind {
+                let member_workers: Vec<usize> =
+                    t.deps.iter().map(|d| tg.tasks[d.0].worker).collect();
+                assert!(member_workers.contains(&t.worker));
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_placement() {
+        let mut tg = lowered(4);
+        place(&mut tg, 1, Policy::LocalityGreedy);
+        tg.validate(1).unwrap();
+        assert!(tg.tasks.iter().all(|t| t.worker == 0));
+    }
+}

@@ -1,0 +1,539 @@
+//! Dense row-major `f32` tensors.
+//!
+//! This is the value type pushed through the tensor-relational runtime: a
+//! tensor relation stores *sub-tensors* of this type keyed by partition
+//! index (see [`crate::tra::relation`]). Only the operations the TRA
+//! executor needs are provided: slicing a region out (partitioning a tensor
+//! into a relation), assembling regions back (repartition / final
+//! collection), axis permutation (mapping einsum label orders onto the
+//! canonical batched-matmul layout), and elementwise comparison for tests.
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// A dense, row-major (C-order), `f32` tensor of arbitrary rank.
+///
+/// Rank-0 tensors (scalars) are represented with an empty shape and a
+/// single element.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create a tensor from a shape and a flat row-major buffer.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} implies {} elements, buffer has {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// Deterministic pseudo-random tensor in `[-0.5, 0.5)`, seeded so tests
+    /// and benches are reproducible.
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = Rng::seed_from_u64(seed);
+        let data = (0..n).map(|_| rng.next_centered()).collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// `iota`: 0,1,2,... useful in partitioning tests (matches the paper's
+    /// worked 4x4 example when reshaped).
+    pub fn iota(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|i| i as f32).collect(),
+        }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size of the tensor in bytes (f32 elements).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.shape)
+    }
+
+    /// Read the element at a multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let s = self.strides();
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off]
+    }
+
+    /// Write the element at a multi-index.
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let s = self.strides();
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off] = v;
+    }
+
+    /// Reshape without moving data (element count must match).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} -> {:?}",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Extract the hyper-rectangle starting at `offset` with size `size`.
+    ///
+    /// This is the tile-extraction primitive used to turn a tensor into a
+    /// tensor relation (`TensorRelation::partition`) and to slice producer
+    /// sub-tensors during repartitioning.
+    pub fn slice(&self, offset: &[usize], size: &[usize]) -> Result<Tensor> {
+        if offset.len() != self.rank() || size.len() != self.rank() {
+            return Err(Error::Shape(format!(
+                "slice rank mismatch: tensor {:?}, offset {:?}, size {:?}",
+                self.shape, offset, size
+            )));
+        }
+        for d in 0..self.rank() {
+            if offset[d] + size[d] > self.shape[d] {
+                return Err(Error::Shape(format!(
+                    "slice out of bounds on dim {}: {}+{} > {}",
+                    d, offset[d], size[d], self.shape[d]
+                )));
+            }
+        }
+        let out_n: usize = size.iter().product();
+        let mut out = Vec::with_capacity(out_n);
+        if self.rank() == 0 {
+            return Tensor::new(vec![], vec![self.data[0]]);
+        }
+        // Iterate over all rows of the slice (all dims but the last), and
+        // memcpy the contiguous innermost runs.
+        let in_strides = self.strides();
+        let last = self.rank() - 1;
+        let row_len = size[last];
+        let outer: usize = size[..last].iter().product();
+        let mut idx = vec![0usize; last];
+        for _ in 0..outer.max(1) {
+            let mut base = offset[last] * in_strides[last];
+            for d in 0..last {
+                base += (offset[d] + idx[d]) * in_strides[d];
+            }
+            out.extend_from_slice(&self.data[base..base + row_len]);
+            // increment odometer over size[..last]
+            for d in (0..last).rev() {
+                idx[d] += 1;
+                if idx[d] < size[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Tensor::new(size.to_vec(), out)
+    }
+
+    /// Write `src` into this tensor at `offset` (inverse of [`slice`]).
+    pub fn write_slice(&mut self, offset: &[usize], src: &Tensor) -> Result<()> {
+        if offset.len() != self.rank() || src.rank() != self.rank() {
+            return Err(Error::Shape(format!(
+                "write_slice rank mismatch: dst {:?}, offset {:?}, src {:?}",
+                self.shape, offset, src.shape
+            )));
+        }
+        for d in 0..self.rank() {
+            if offset[d] + src.shape[d] > self.shape[d] {
+                return Err(Error::Shape(format!(
+                    "write_slice out of bounds on dim {}: {}+{} > {}",
+                    d, offset[d], src.shape[d], self.shape[d]
+                )));
+            }
+        }
+        if self.rank() == 0 {
+            self.data[0] = src.data[0];
+            return Ok(());
+        }
+        let dst_strides = self.strides();
+        let last = self.rank() - 1;
+        let row_len = src.shape[last];
+        let outer: usize = src.shape[..last].iter().product();
+        let mut idx = vec![0usize; last];
+        let mut src_pos = 0usize;
+        for _ in 0..outer.max(1) {
+            let mut base = offset[last] * dst_strides[last];
+            for d in 0..last {
+                base += (offset[d] + idx[d]) * dst_strides[d];
+            }
+            self.data[base..base + row_len].copy_from_slice(&src.data[src_pos..src_pos + row_len]);
+            src_pos += row_len;
+            for d in (0..last).rev() {
+                idx[d] += 1;
+                if idx[d] < src.shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Permute axes: output dim `i` is input dim `perm[i]`.
+    pub fn permute(&self, perm: &[usize]) -> Result<Tensor> {
+        if perm.len() != self.rank() {
+            return Err(Error::Shape(format!(
+                "permute rank mismatch: {:?} vs {:?}",
+                self.shape, perm
+            )));
+        }
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if p >= perm.len() || seen[p] {
+                return Err(Error::Shape(format!("invalid permutation {perm:?}")));
+            }
+            seen[p] = true;
+        }
+        // Identity fast path (hot in the executor: most kernel calls are
+        // already in canonical layout).
+        if perm.iter().enumerate().all(|(i, &p)| i == p) {
+            return Ok(self.clone());
+        }
+        let out_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        let in_strides = self.strides();
+        // stride in the input for each output dim
+        let perm_strides: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+        let n = self.data.len();
+        let mut out = vec![0.0f32; n];
+        if self.rank() == 0 {
+            out[0] = self.data[0];
+            return Tensor::new(out_shape, out);
+        }
+        // Rank-2 transpose fast path: 32x32 cache tiles (the strided-read
+        // generic path manages <1 GB/s on large matrices; tiling restores
+        // ~memory bandwidth — §Perf lever 3).
+        if self.rank() == 2 && perm == [1, 0] {
+            let (r, ccols) = (self.shape[0], self.shape[1]);
+            const TB: usize = 32;
+            let src = &self.data;
+            for i0 in (0..r).step_by(TB) {
+                let imax = (i0 + TB).min(r);
+                for j0 in (0..ccols).step_by(TB) {
+                    let jmax = (j0 + TB).min(ccols);
+                    for i in i0..imax {
+                        let row = &src[i * ccols..i * ccols + ccols];
+                        for j in j0..jmax {
+                            out[j * r + i] = row[j];
+                        }
+                    }
+                }
+            }
+            return Tensor::new(out_shape, out);
+        }
+        // Odometer over the output shape; inner loop over the last output
+        // dim with its (input) stride.
+        let last = out_shape.len() - 1;
+        let inner = out_shape[last];
+        let inner_stride = perm_strides[last];
+        let outer: usize = out_shape[..last].iter().product();
+        let mut idx = vec![0usize; last];
+        let mut out_pos = 0usize;
+        for _ in 0..outer.max(1) {
+            let mut base = 0usize;
+            for d in 0..last {
+                base += idx[d] * perm_strides[d];
+            }
+            if inner_stride == 1 {
+                out[out_pos..out_pos + inner].copy_from_slice(&self.data[base..base + inner]);
+            } else {
+                for j in 0..inner {
+                    out[out_pos + j] = self.data[base + j * inner_stride];
+                }
+            }
+            out_pos += inner;
+            for d in (0..last).rev() {
+                idx[d] += 1;
+                if idx[d] < out_shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Tensor::new(out_shape, out)
+    }
+
+    /// Max absolute difference vs another tensor (testing aid).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "compare shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Relative-tolerance allclose (testing aid).
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+
+    /// In-place elementwise accumulate with an associative op.
+    pub fn accumulate(&mut self, other: &Tensor, op: impl Fn(f32, f32) -> f32) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "accumulate shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = op(*a, *b);
+        }
+        Ok(())
+    }
+}
+
+/// Row-major strides of a shape. Empty shape -> empty strides.
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+/// Iterate over all multi-indices of a bound (odometer order).
+/// This is `I(b)` in the paper's notation.
+pub fn index_space(bound: &[usize]) -> IndexSpace {
+    IndexSpace {
+        bound: bound.to_vec(),
+        cur: vec![0; bound.len()],
+        done: bound.iter().any(|&b| b == 0),
+        first: true,
+    }
+}
+
+/// Iterator over `I(b)`.
+pub struct IndexSpace {
+    bound: Vec<usize>,
+    cur: Vec<usize>,
+    done: bool,
+    first: bool,
+}
+
+impl Iterator for IndexSpace {
+    type Item = Vec<usize>;
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.done {
+            return None;
+        }
+        if self.first {
+            self.first = false;
+            return Some(self.cur.clone());
+        }
+        for d in (0..self.bound.len()).rev() {
+            self.cur[d] += 1;
+            if self.cur[d] < self.bound[d] {
+                return Some(self.cur.clone());
+            }
+            self.cur[d] = 0;
+        }
+        self.done = true;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_of(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_of(&[5]), vec![1]);
+        assert_eq!(strides_of(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn at_and_set() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.set(&[1, 2], 7.0);
+        assert_eq!(t.at(&[1, 2]), 7.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn slice_matches_paper_u_example() {
+        // The paper's 4x4 matrix U, partitioned d=[2,2]: tile (1,0) is
+        // [[9,10],[11,12]].
+        let u = Tensor::new(
+            vec![4, 4],
+            vec![
+                1., 2., 5., 6., 3., 4., 7., 8., 9., 10., 13., 14., 11., 12., 15., 16.,
+            ],
+        )
+        .unwrap();
+        let tile = u.slice(&[2, 0], &[2, 2]).unwrap();
+        assert_eq!(tile.data(), &[9., 10., 11., 12.]);
+        // d=[4,2]: tile (0,1) is the column [2,4]^T
+        let tile2 = u.slice(&[0, 2], &[1, 2]).unwrap();
+        assert_eq!(tile2.data(), &[5., 6.]);
+    }
+
+    #[test]
+    fn slice_out_of_bounds() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(t.slice(&[3, 0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn slice_write_roundtrip() {
+        let t = Tensor::iota(&[4, 6]);
+        let s = t.slice(&[1, 2], &[2, 3]).unwrap();
+        let mut z = Tensor::zeros(&[4, 6]);
+        z.write_slice(&[1, 2], &s).unwrap();
+        assert_eq!(z.at(&[1, 2]), t.at(&[1, 2]));
+        assert_eq!(z.at(&[2, 4]), t.at(&[2, 4]));
+        assert_eq!(z.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn permute_transpose() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let p = t.permute(&[1, 0]).unwrap();
+        assert_eq!(p.shape(), &[3, 2]);
+        assert_eq!(p.data(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn permute_rank3() {
+        let t = Tensor::iota(&[2, 3, 4]);
+        let p = t.permute(&[2, 0, 1]).unwrap();
+        assert_eq!(p.shape(), &[4, 2, 3]);
+        assert_eq!(p.at(&[3, 1, 2]), t.at(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn permute_identity_fast_path() {
+        let t = Tensor::random(&[3, 5], 1);
+        assert_eq!(t.permute(&[0, 1]).unwrap(), t);
+    }
+
+    #[test]
+    fn index_space_iterates_in_odometer_order() {
+        let v: Vec<_> = index_space(&[2, 2]).collect();
+        assert_eq!(
+            v,
+            vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]
+        );
+        assert_eq!(index_space(&[]).count(), 1); // scalar: single empty index
+        assert_eq!(index_space(&[3, 0]).count(), 0);
+    }
+
+    #[test]
+    fn accumulate_sum() {
+        let mut a = Tensor::full(&[2, 2], 1.0);
+        let b = Tensor::full(&[2, 2], 2.0);
+        a.accumulate(&b, |x, y| x + y).unwrap();
+        assert_eq!(a.data(), &[3.0; 4]);
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::full(&[2], 1.0);
+        let b = Tensor::full(&[2], 1.0 + 1e-7);
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        assert!(a.max_abs_diff(&b).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let s = Tensor::scalar(3.5);
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.at(&[]), 3.5);
+        let sl = s.slice(&[], &[]).unwrap();
+        assert_eq!(sl.at(&[]), 3.5);
+    }
+}

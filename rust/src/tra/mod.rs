@@ -1,0 +1,18 @@
+//! The tensor-relational algebra (TRA) of Section 4: relations mapping
+//! integer key vectors to *sub-tensors*, with three operations — `join`,
+//! `aggregation`, `repartition` — sufficient to implement any EinSum
+//! expression once a partitioning vector `d` is chosen.
+//!
+//! This module is the *semantic* (single-process, in-memory) implementation
+//! used as an executable specification: [`ops::eval_einsum_tra`] rewrites an
+//! EinSum into TRA exactly as Eq. 5 of the paper and must agree with direct
+//! dense evaluation for every valid `d` (a property the test suite checks
+//! exhaustively and via proptest). The *distributed* implementation of the
+//! same algebra — where tuples live on workers and movement is accounted —
+//! is [`crate::taskgraph`] + [`crate::sim`].
+
+pub mod ops;
+pub mod relation;
+
+pub use ops::{aggregate, eval_einsum_tra, join, repartition};
+pub use relation::TensorRelation;

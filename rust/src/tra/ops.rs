@@ -1,0 +1,357 @@
+//! The three TRA operations (paper §4.2) and the EinSum -> TRA rewrite
+//! (paper §4.3, Eq. 5).
+//!
+//! Conventions: a partitioning vector `d` is stored *parallel to the
+//! EinSum's unique label list* (`op.unique_labels()`), which bakes in the
+//! paper's co-partitioning constraint — repeated labels across `l_X`/`l_Y`
+//! are one entry, so `d[l_X; l_XY]` and `d[l_Y; l_XY]` automatically agree
+//! on shared labels. All per-operand partitionings are derived with the
+//! `project` operation.
+
+use crate::einsum::expr::{AggOp, EinSum};
+use crate::einsum::label::{concat_dedup, project, LabelList};
+use crate::error::{Error, Result};
+use crate::runtime::KernelEngine;
+use crate::tensor::{index_space, Tensor};
+use crate::tra::relation::TensorRelation;
+
+/// TRA join (paper §4.2): match tuples of `x` and `y` whose keys agree on
+/// shared labels, and apply the kernel `K` to each matched pair.
+///
+/// Output keys range over `l_X (.) l_Y` (concat-dedup: natural-join
+/// schema); the output tile for key `key` is
+/// `K(x.tile(key[l_X]), y.tile(key[l_Y]))`.
+///
+/// `out_bound`/`out_part` describe the join output *as a relation* keyed
+/// over the dedup schema (needed to size tiles); the kernel decides each
+/// tile's actual shape, which is validated against them.
+pub fn join(
+    x: &TensorRelation,
+    y: &TensorRelation,
+    lx: &LabelList,
+    ly: &LabelList,
+    kernel: &mut dyn FnMut(&Tensor, &Tensor) -> Result<Tensor>,
+) -> Result<Vec<(Vec<usize>, Tensor)>> {
+    if x.part().len() != lx.len() || y.part().len() != ly.len() {
+        return Err(Error::InvalidPartitioning(format!(
+            "join: relation ranks {:?}/{:?} vs labels {lx:?}/{ly:?}",
+            x.part(),
+            y.part()
+        )));
+    }
+    let lj = concat_dedup(lx, ly);
+    // partitioning of the join key space: first occurrence wins (they agree
+    // on shared labels by the co-partitioning invariant, checked below).
+    let mut dj = Vec::with_capacity(lj.len());
+    for l in &lj {
+        let from_x = lx.iter().position(|m| m == l).map(|i| x.part()[i]);
+        let from_y = ly.iter().position(|m| m == l).map(|i| y.part()[i]);
+        match (from_x, from_y) {
+            (Some(a), Some(b)) if a != b => {
+                return Err(Error::InvalidPartitioning(format!(
+                    "join label {l} not co-partitioned: {a} vs {b}"
+                )))
+            }
+            (Some(a), _) => dj.push(a),
+            (None, Some(b)) => dj.push(b),
+            (None, None) => unreachable!(),
+        }
+    }
+    let mut out = Vec::new();
+    for key in index_space(&dj) {
+        let kx = project(&key, lx, &lj);
+        let ky = project(&key, ly, &lj);
+        let t = kernel(x.tile(&kx), y.tile(&ky))?;
+        out.push((key, t));
+    }
+    Ok(out)
+}
+
+/// TRA aggregation (paper §4.2): group tuples whose keys agree on all
+/// labels *not* in `l_agg`, and reduce each group's tensors elementwise
+/// with `agg`. `lin` labels the input keys; `lout` labels the output keys
+/// (a subset of `lin`, in output order).
+pub fn aggregate(
+    tuples: Vec<(Vec<usize>, Tensor)>,
+    lin: &LabelList,
+    lout: &LabelList,
+    agg: AggOp,
+) -> Result<Vec<(Vec<usize>, Tensor)>> {
+    use std::collections::HashMap;
+    let mut groups: HashMap<Vec<usize>, Tensor> = HashMap::new();
+    for (key, t) in tuples {
+        let gkey = project(&key, lout, lin);
+        match groups.entry(gkey) {
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(t);
+            }
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().accumulate(&t, |a, b| agg.combine(a, b))?;
+            }
+        }
+    }
+    let mut out: Vec<_> = groups.into_iter().collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+/// TRA repartition (paper §4.2): `Pi_d(X)` produces the relation with
+/// partitioning `d` equivalent to the same dense tensor.
+///
+/// This semantic implementation assembles and re-partitions; the
+/// distributed implementation in [`crate::taskgraph`] moves only the
+/// overlapping sub-regions (and its transfer volume is what
+/// `cost_repart` bounds).
+pub fn repartition(x: &TensorRelation, d: &[usize]) -> Result<TensorRelation> {
+    if x.part() == d {
+        return Ok(x.clone());
+    }
+    let dense = x.assemble()?;
+    TensorRelation::partition(&dense, d)
+}
+
+/// Evaluate one EinSum expression through the TRA rewrite of Eq. 5:
+/// partition inputs according to `d` (parallel to `op.unique_labels()`),
+/// join with the tile-local kernel (the same EinSum evaluated by
+/// `engine` on sub-tensors), aggregate with `(+)`, and return the result
+/// as a relation partitioned `d[l_Z; l_XY]`.
+///
+/// This is the executable form of the paper's claim that the rewrite is
+/// equivalence-preserving; tests compare it against direct dense
+/// evaluation for many `d`.
+pub fn eval_einsum_tra(
+    op: &EinSum,
+    inputs: &[&Tensor],
+    d: &[usize],
+    engine: &dyn KernelEngine,
+) -> Result<TensorRelation> {
+    let uniq = op.unique_labels();
+    if d.len() != uniq.len() {
+        return Err(Error::InvalidPartitioning(format!(
+            "d {d:?} not parallel to unique labels {uniq:?}"
+        )));
+    }
+    let lz = op
+        .lz()
+        .ok_or_else(|| Error::InvalidEinsum("cannot evaluate Input".into()))?
+        .clone();
+    let in_bounds: Vec<&[usize]> = inputs.iter().map(|t| t.shape()).collect();
+    let bz = op.infer_bound(&in_bounds)?;
+    let dz = project(d, &lz, &uniq);
+
+    match op {
+        EinSum::Input => unreachable!(),
+        EinSum::Unary { lx, .. } => {
+            let dx = project(d, lx, &uniq);
+            let rx = TensorRelation::partition(inputs[0], &dx)?;
+            // map/reduce each tile with the tile-local op
+            let mut tuples = Vec::new();
+            for (key, tile) in rx.iter() {
+                tuples.push((key, engine.eval(op, &[tile])?));
+            }
+            let agg = match op {
+                EinSum::Unary { agg, .. } => *agg,
+                _ => unreachable!(),
+            };
+            let grouped = aggregate(tuples, lx, &lz, agg)?;
+            let tiles: Vec<Tensor> = grouped.into_iter().map(|(_, t)| t).collect();
+            TensorRelation::from_tiles(bz, dz, tiles)
+        }
+        EinSum::Binary {
+            lx, ly, agg: aggop, ..
+        } => {
+            let dx = project(d, lx, &uniq);
+            let dy = project(d, ly, &uniq);
+            let rx = TensorRelation::partition(inputs[0], &dx)?;
+            let ry = TensorRelation::partition(inputs[1], &dy)?;
+            let mut kernel = |a: &Tensor, b: &Tensor| engine.eval(op, &[a, b]);
+            let joined = join(&rx, &ry, lx, ly, &mut kernel)?;
+            let lj = concat_dedup(lx, ly);
+            let grouped = aggregate(joined, &lj, &lz, *aggop)?;
+            let tiles: Vec<Tensor> = grouped.into_iter().map(|(_, t)| t).collect();
+            TensorRelation::from_tiles(bz, dz, tiles)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::expr::{JoinOp, UnaryOp};
+    use crate::einsum::label::labels;
+    use crate::runtime::native::{eval_einsum, NativeEngine};
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new()
+    }
+
+    /// Check Eq. 5 equivalence: TRA evaluation == dense evaluation.
+    fn check_equiv(op: &EinSum, inputs: &[&Tensor], d: &[usize]) {
+        let dense = eval_einsum(op, inputs).unwrap();
+        let rel = eval_einsum_tra(op, inputs, d, &engine()).unwrap();
+        let assembled = rel.assemble().unwrap();
+        assert!(
+            assembled.allclose(&dense, 1e-4, 1e-5),
+            "TRA != dense for d={d:?}: max diff {}",
+            assembled.max_abs_diff(&dense).unwrap()
+        );
+    }
+
+    #[test]
+    fn matmul_all_figure1_partitionings() {
+        // The four partitionings of Figure 1 on an 8x8 matmul, d over
+        // unique labels [i, j, k].
+        let x = Tensor::random(&[8, 8], 1);
+        let y = Tensor::random(&[8, 8], 2);
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        for d in [[4, 1, 4], [2, 1, 8], [2, 4, 2], [2, 2, 4]] {
+            check_equiv(&op, &[&x, &y], &d);
+        }
+    }
+
+    #[test]
+    fn figure1_kernel_call_counts() {
+        // Each Figure 1 partitioning produces exactly 16 kernel calls:
+        // N = prod d[l_X (.) l_Y] = d_i * d_j * d_k.
+        let x = Tensor::random(&[8, 8], 1);
+        let y = Tensor::random(&[8, 8], 2);
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        for d in [[4usize, 1, 4], [2, 1, 8], [2, 4, 2], [2, 2, 4]] {
+            let uniq = op.unique_labels();
+            let (lx, ly) = (labels("i j"), labels("j k"));
+            let rx =
+                TensorRelation::partition(&x, &project(&d, &lx, &uniq)).unwrap();
+            let ry =
+                TensorRelation::partition(&y, &project(&d, &ly, &uniq)).unwrap();
+            let mut calls = 0usize;
+            let mut kernel = |a: &Tensor, b: &Tensor| {
+                calls += 1;
+                eval_einsum(&op, &[a, b])
+            };
+            join(&rx, &ry, &lx, &ly, &mut kernel).unwrap();
+            assert_eq!(calls, 16, "d={d:?}");
+        }
+    }
+
+    #[test]
+    fn matmul_uneven_bounds() {
+        let x = Tensor::random(&[7, 10], 3);
+        let y = Tensor::random(&[10, 5], 4);
+        let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        for d in [[1usize, 1, 1], [3, 2, 2], [7, 10, 5], [2, 3, 1]] {
+            check_equiv(&op, &[&x, &y], &d);
+        }
+    }
+
+    #[test]
+    fn extended_ops_decompose_correctly() {
+        let x = Tensor::random(&[6, 8], 5);
+        let y = Tensor::random(&[8, 4], 6);
+        // squared-L2 with Sum
+        let l2 = EinSum::Binary {
+            lx: labels("i j"),
+            ly: labels("j k"),
+            lz: labels("i k"),
+            join: JoinOp::SquaredDiff,
+            agg: AggOp::Sum,
+        };
+        check_equiv(&l2, &[&x, &y], &[2, 4, 2]);
+        // L-inf with Max — max aggregation across tiles must also hold
+        let linf = EinSum::Binary {
+            lx: labels("i j"),
+            ly: labels("j k"),
+            lz: labels("i k"),
+            join: JoinOp::AbsDiff,
+            agg: AggOp::Max,
+        };
+        check_equiv(&linf, &[&x, &y], &[3, 2, 4]);
+    }
+
+    #[test]
+    fn broadcast_join_decomposes() {
+        // softmax normalization: Y_ij <- E_ij / S_i; i co-partitioned.
+        let e = Tensor::random(&[8, 6], 7);
+        let s = Tensor::random(&[8], 8).reshape(vec![8]).unwrap();
+        let op = EinSum::Binary {
+            lx: labels("i j"),
+            ly: labels("i"),
+            lz: labels("i j"),
+            join: JoinOp::Div,
+            agg: AggOp::Sum,
+        };
+        for d in [[1usize, 1], [4, 2], [8, 3], [2, 6]] {
+            check_equiv(&op, &[&e, &s], &d);
+        }
+    }
+
+    #[test]
+    fn unary_reduce_decomposes() {
+        let x = Tensor::random(&[9, 12], 9);
+        let op = EinSum::reduce(labels("i j"), labels("i"), AggOp::Max);
+        for d in [[1usize, 1], [3, 4], [9, 12], [2, 5]] {
+            check_equiv(&op, &[&x], &d);
+        }
+    }
+
+    #[test]
+    fn unary_map_transpose_decomposes() {
+        let x = Tensor::random(&[6, 4], 10);
+        let op = EinSum::Unary {
+            lx: labels("i j"),
+            lz: labels("j i"),
+            op: UnaryOp::Exp,
+            agg: AggOp::Sum,
+        };
+        for d in [[2usize, 2], [3, 4], [1, 1]] {
+            check_equiv(&op, &[&x], &d);
+        }
+    }
+
+    #[test]
+    fn rank3_contraction_decomposes() {
+        // Z_ik <- sum_{b,j} X_ijb Y_jbk
+        let x = Tensor::random(&[4, 6, 2], 11);
+        let y = Tensor::random(&[6, 2, 5], 12);
+        let op = EinSum::contraction(labels("i j b"), labels("j b k"), labels("i k"));
+        // unique labels: [i, j, b, k]
+        for d in [[1usize, 1, 1, 1], [2, 3, 2, 5], [4, 2, 1, 1]] {
+            check_equiv(&op, &[&x, &y], &d);
+        }
+    }
+
+    #[test]
+    fn join_rejects_non_copartitioned() {
+        let x = Tensor::random(&[8, 8], 1);
+        let y = Tensor::random(&[8, 8], 2);
+        let rx = TensorRelation::partition(&x, &[2, 4]).unwrap();
+        let ry = TensorRelation::partition(&y, &[2, 2]).unwrap(); // j: 4 vs 2
+        let mut k = |a: &Tensor, _b: &Tensor| Ok(a.clone());
+        assert!(join(&rx, &ry, &labels("i j"), &labels("j k"), &mut k).is_err());
+    }
+
+    #[test]
+    fn repartition_preserves_equivalence() {
+        let t = Tensor::random(&[8, 12], 13);
+        let r = TensorRelation::partition(&t, &[2, 3]).unwrap();
+        let r2 = repartition(&r, &[4, 2]).unwrap();
+        assert_eq!(r2.part(), &[4, 2]);
+        assert_eq!(r2.assemble().unwrap(), t);
+    }
+
+    #[test]
+    fn aggregate_groups_correctly() {
+        // keys over [i, j] with part [2, 2]; aggregate j out with Sum.
+        let tuples = vec![
+            (vec![0, 0], Tensor::full(&[2], 1.0)),
+            (vec![0, 1], Tensor::full(&[2], 2.0)),
+            (vec![1, 0], Tensor::full(&[2], 3.0)),
+            (vec![1, 1], Tensor::full(&[2], 4.0)),
+        ];
+        let out = aggregate(tuples, &labels("i j"), &labels("i"), AggOp::Sum).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.data(), &[3.0, 3.0]);
+        assert_eq!(out[1].1.data(), &[7.0, 7.0]);
+    }
+
+    use crate::einsum::label::project;
+}

@@ -1,0 +1,278 @@
+//! Tensor relations: `R : I(d) -> (I(b/d) -> R)` (paper §4.1).
+//!
+//! A [`TensorRelation`] with bound `b` and partitioning vector `d` stores a
+//! tensor of bound `b` as `prod(d)` keyed sub-tensors. The paper assumes
+//! `d` divides `b` exactly; real bounds (e.g. AmazonCat's 14,588 labels)
+//! rarely oblige, so we use *balanced* tiling: along a dimension of size
+//! `b` split `d` ways, tile `i` has size `b/d + (i < b mod d)`. When `d | b`
+//! this degenerates to the paper's uniform `b/d` tiles, and all tiles that
+//! share a co-partitioned label always agree on size.
+
+use crate::error::{Error, Result};
+use crate::tensor::{index_space, Tensor};
+
+/// Balanced tile size of tile `i` when `bound` is split `parts` ways.
+#[inline]
+pub fn tile_size(bound: usize, parts: usize, i: usize) -> usize {
+    bound / parts + usize::from(i < bound % parts)
+}
+
+/// Offset of tile `i` when `bound` is split `parts` ways.
+#[inline]
+pub fn tile_offset(bound: usize, parts: usize, i: usize) -> usize {
+    i * (bound / parts) + i.min(bound % parts)
+}
+
+/// Multi-dimensional tile shape for key `key` under `(bound, part)`.
+pub fn tile_shape(bound: &[usize], part: &[usize], key: &[usize]) -> Vec<usize> {
+    key.iter()
+        .enumerate()
+        .map(|(d, &k)| tile_size(bound[d], part[d], k))
+        .collect()
+}
+
+/// Multi-dimensional tile offset for key `key` under `(bound, part)`.
+pub fn tile_origin(bound: &[usize], part: &[usize], key: &[usize]) -> Vec<usize> {
+    key.iter()
+        .enumerate()
+        .map(|(d, &k)| tile_offset(bound[d], part[d], k))
+        .collect()
+}
+
+/// Validate a partitioning vector against a bound: every entry positive and
+/// no larger than the dimension (so no tile is empty).
+pub fn validate_part(bound: &[usize], part: &[usize]) -> Result<()> {
+    if bound.len() != part.len() {
+        return Err(Error::InvalidPartitioning(format!(
+            "partitioning {part:?} rank != bound {bound:?}"
+        )));
+    }
+    for (d, (&b, &p)) in bound.iter().zip(part).enumerate() {
+        if p == 0 || p > b {
+            return Err(Error::InvalidPartitioning(format!(
+                "dim {d}: cannot split bound {b} into {p} non-empty tiles"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// A relation mapping keys in `I(d)` to sub-tensors — the unit of data the
+/// TRA runtime pushes between kernels.
+#[derive(Clone, Debug)]
+pub struct TensorRelation {
+    bound: Vec<usize>,
+    part: Vec<usize>,
+    /// Tiles in row-major key order over `I(part)`.
+    tiles: Vec<Tensor>,
+}
+
+impl TensorRelation {
+    /// Number of tuples, `prod(d)`.
+    pub fn num_tiles(&self) -> usize {
+        self.part.iter().product()
+    }
+
+    pub fn bound(&self) -> &[usize] {
+        &self.bound
+    }
+
+    pub fn part(&self) -> &[usize] {
+        &self.part
+    }
+
+    /// Linearize a key over `I(d)` (row-major).
+    pub fn key_index(&self, key: &[usize]) -> usize {
+        linearize(key, &self.part)
+    }
+
+    /// The sub-tensor at `key` (`R^key` in the paper).
+    pub fn tile(&self, key: &[usize]) -> &Tensor {
+        &self.tiles[self.key_index(key)]
+    }
+
+    pub fn tile_linear(&self, i: usize) -> &Tensor {
+        &self.tiles[i]
+    }
+
+    /// Iterate `(key, tile)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (Vec<usize>, &Tensor)> {
+        index_space(&self.part).zip(self.tiles.iter())
+    }
+
+    /// Build a relation from keyed tiles produced in row-major key order.
+    pub fn from_tiles(bound: Vec<usize>, part: Vec<usize>, tiles: Vec<Tensor>) -> Result<Self> {
+        validate_part(&bound, &part)?;
+        let n: usize = part.iter().product();
+        if tiles.len() != n {
+            return Err(Error::InvalidPartitioning(format!(
+                "expected {} tiles for d={part:?}, got {}",
+                n,
+                tiles.len()
+            )));
+        }
+        for (key, t) in index_space(&part).zip(&tiles) {
+            let want = tile_shape(&bound, &part, &key);
+            if t.shape() != want.as_slice() {
+                return Err(Error::InvalidPartitioning(format!(
+                    "tile {key:?}: shape {:?} != expected {want:?}",
+                    t.shape()
+                )));
+            }
+        }
+        Ok(TensorRelation { bound, part, tiles })
+    }
+
+    /// Partition a dense tensor into an equivalent relation (`R ≡ 𝓡`):
+    /// slice `t` according to `d`, keying each slice by its tile index.
+    pub fn partition(t: &Tensor, part: &[usize]) -> Result<Self> {
+        validate_part(t.shape(), part)?;
+        let bound = t.shape().to_vec();
+        let mut tiles = Vec::with_capacity(part.iter().product());
+        for key in index_space(part) {
+            let origin = tile_origin(&bound, part, &key);
+            let shape = tile_shape(&bound, part, &key);
+            tiles.push(t.slice(&origin, &shape)?);
+        }
+        Ok(TensorRelation {
+            bound,
+            part: part.to_vec(),
+            tiles,
+        })
+    }
+
+    /// Assemble the dense tensor this relation is equivalent to (inverse of
+    /// [`partition`]).
+    pub fn assemble(&self) -> Result<Tensor> {
+        let mut out = Tensor::zeros(&self.bound);
+        for (key, tile) in self.iter() {
+            let origin = tile_origin(&self.bound, &self.part, &key);
+            out.write_slice(&origin, tile)?;
+        }
+        Ok(out)
+    }
+
+    /// Total bytes held by all tiles.
+    pub fn bytes(&self) -> usize {
+        self.tiles.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+/// Row-major linearization of `key` within bound `dims`.
+pub fn linearize(key: &[usize], dims: &[usize]) -> usize {
+    debug_assert_eq!(key.len(), dims.len());
+    let mut idx = 0usize;
+    for (k, d) in key.iter().zip(dims) {
+        debug_assert!(k < d);
+        idx = idx * d + k;
+    }
+    idx
+}
+
+/// Inverse of [`linearize`].
+pub fn delinearize(mut idx: usize, dims: &[usize]) -> Vec<usize> {
+    let mut key = vec![0usize; dims.len()];
+    for d in (0..dims.len()).rev() {
+        key[d] = idx % dims[d];
+        idx /= dims[d];
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's 4x4 matrix U.
+    fn paper_u() -> Tensor {
+        Tensor::new(
+            vec![4, 4],
+            vec![
+                1., 2., 5., 6., 3., 4., 7., 8., 9., 10., 13., 14., 11., 12., 15., 16.,
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn partition_d42_matches_paper() {
+        // d = [4, 2]: sub-tensors with bound [1, 2]; tuple <0,1> is [2, 4]
+        // as a 1x2... wait, the paper stores column vectors [2,4]^T with
+        // bound [4,4]/[4,2] = [1,2]: tile <0,1> = [[2, 4]]? The paper shows
+        // ( <0,1>, [2;4] ) with shape 1x2 sliced from rows 0..1, cols 2..4
+        // = [2, 5]? No: the paper's U has u[0] = [1,2,5,6], so rows are
+        // split 4 ways (each 1 row), cols 2 ways (each 2 cols):
+        // tile <0,1> = [[5, 6]].
+        let u = paper_u();
+        let r = TensorRelation::partition(&u, &[4, 2]).unwrap();
+        assert_eq!(r.num_tiles(), 8);
+        assert_eq!(r.tile(&[0, 1]).data(), &[5., 6.]);
+        assert_eq!(r.tile(&[2, 0]).data(), &[9., 10.]);
+    }
+
+    #[test]
+    fn partition_d22_matches_paper() {
+        // d = [2, 2]: tile <1,0> = [[9,10],[11,12]] — exactly the paper.
+        let u = paper_u();
+        let r = TensorRelation::partition(&u, &[2, 2]).unwrap();
+        assert_eq!(r.tile(&[1, 0]).data(), &[9., 10., 11., 12.]);
+        assert_eq!(r.tile(&[0, 1]).data(), &[5., 6., 7., 8.]);
+    }
+
+    #[test]
+    fn partition_assemble_roundtrip() {
+        let t = Tensor::random(&[6, 10, 4], 42);
+        for part in [&[1usize, 1, 1][..], &[2, 5, 2], &[3, 2, 1], &[6, 10, 4]] {
+            let r = TensorRelation::partition(&t, part).unwrap();
+            assert_eq!(r.assemble().unwrap(), t, "part {part:?}");
+        }
+    }
+
+    #[test]
+    fn uneven_balanced_tiling() {
+        // 7 split 3 ways: tiles 3, 2, 2
+        assert_eq!(tile_size(7, 3, 0), 3);
+        assert_eq!(tile_size(7, 3, 1), 2);
+        assert_eq!(tile_size(7, 3, 2), 2);
+        assert_eq!(tile_offset(7, 3, 0), 0);
+        assert_eq!(tile_offset(7, 3, 1), 3);
+        assert_eq!(tile_offset(7, 3, 2), 5);
+        let t = Tensor::random(&[7, 5], 1);
+        let r = TensorRelation::partition(&t, &[3, 2]).unwrap();
+        assert_eq!(r.assemble().unwrap(), t);
+    }
+
+    #[test]
+    fn invalid_partitionings_rejected() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(TensorRelation::partition(&t, &[5, 1]).is_err()); // > bound
+        assert!(TensorRelation::partition(&t, &[0, 1]).is_err()); // zero
+        assert!(TensorRelation::partition(&t, &[2]).is_err()); // rank
+    }
+
+    #[test]
+    fn linearize_roundtrip() {
+        let dims = [3usize, 4, 5];
+        for i in 0..60 {
+            let k = delinearize(i, &dims);
+            assert_eq!(linearize(&k, &dims), i);
+        }
+    }
+
+    #[test]
+    fn from_tiles_validates_shapes() {
+        let tiles = vec![Tensor::zeros(&[2, 2]); 4];
+        assert!(TensorRelation::from_tiles(vec![4, 4], vec![2, 2], tiles.clone()).is_ok());
+        assert!(TensorRelation::from_tiles(vec![4, 4], vec![2, 2], tiles[..3].to_vec()).is_err());
+        let bad = vec![Tensor::zeros(&[2, 3]); 4];
+        assert!(TensorRelation::from_tiles(vec![4, 4], vec![2, 2], bad).is_err());
+    }
+
+    #[test]
+    fn scalar_relation() {
+        let t = Tensor::scalar(5.0);
+        let r = TensorRelation::partition(&t, &[]).unwrap();
+        assert_eq!(r.num_tiles(), 1);
+        assert_eq!(r.assemble().unwrap().at(&[]), 5.0);
+    }
+}

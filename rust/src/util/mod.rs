@@ -1,0 +1,208 @@
+//! Small in-tree utilities replacing unavailable external crates: a
+//! deterministic RNG (no `rand`), a scoped thread-pool helper (no
+//! `rayon`), and a minimal JSON *writer* for reports (no `serde_json`).
+
+/// Deterministic SplitMix64 RNG — reproducible across runs and platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Rng {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in [-0.5, 0.5).
+    #[inline]
+    pub fn next_centered(&mut self) -> f32 {
+        self.next_f32() - 0.5
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Approximate standard normal via the sum of 4 uniforms (Irwin–Hall,
+    /// variance-corrected) — plenty for weight init.
+    #[inline]
+    pub fn next_normal(&mut self) -> f32 {
+        let s: f32 = (0..4).map(|_| self.next_f32()).sum::<f32>() - 2.0;
+        s * (12.0f32 / 4.0).sqrt()
+    }
+}
+
+/// Run `f(chunk_index)` for `n` chunks on up to `threads` OS threads.
+/// A minimal data-parallel scatter used by the executor and benches.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Minimal JSON value writer for structured reports (we only ever *write*
+/// JSON; the artifact manifest uses a line format both sides parse).
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn num(v: impl Into<f64>) -> Json {
+        Json::Num(v.into())
+    }
+
+    pub fn str(v: impl Into<String>) -> Json {
+        Json::Str(v.into())
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_f32_in_range() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rng_mean_reasonable() {
+        let mut r = Rng::seed_from_u64(2);
+        let n = 100_000;
+        let mean: f32 = (0..n).map(|_| r.next_centered()).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn parallel_for_covers_all() {
+        let hits: Vec<std::sync::atomic::AtomicUsize> =
+            (0..100).map(|_| std::sync::atomic::AtomicUsize::new(0)).collect();
+        parallel_for(100, 8, |i| {
+            hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(std::sync::atomic::Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn json_rendering() {
+        let j = Json::Obj(vec![
+            ("a".into(), Json::num(1.5)),
+            ("b".into(), Json::Arr(vec![Json::str("x\"y"), Json::Bool(true)])),
+        ]);
+        assert_eq!(j.render(), r#"{"a":1.5,"b":["x\"y",true]}"#);
+    }
+}

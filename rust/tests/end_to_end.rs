@@ -1,0 +1,169 @@
+//! End-to-end integration: the public Driver API across all models and
+//! strategies, numerics checked against dense references; short training
+//! runs; CLI smoke.
+
+use eindecomp::coordinator::driver::{Driver, DriverConfig};
+use eindecomp::data::classifier_batch;
+use eindecomp::decomp::baselines::Strategy;
+use eindecomp::models::ffnn::{ffnn_step, step_inputs, FfnnState};
+use eindecomp::models::llama::{llama_graph, llama_inputs, LlamaConfig};
+use eindecomp::models::matchain::{chain_graph, chain_inputs, chain_reference};
+use eindecomp::runtime::Backend;
+use eindecomp::sim::NetworkProfile;
+
+fn driver(strategy: Strategy, workers: usize) -> Driver {
+    Driver::new(DriverConfig {
+        workers,
+        p: workers,
+        strategy,
+        backend: Backend::Native,
+        network: NetworkProfile::loopback(),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn every_strategy_correct_on_both_chains() {
+    for skewed in [false, true] {
+        let chain = chain_graph(80, skewed).unwrap();
+        let inputs = chain_inputs(&chain, 21);
+        let want = chain_reference(&chain, &inputs).unwrap();
+        for strategy in [
+            Strategy::EinDecomp,
+            Strategy::EinDecompLinearized,
+            Strategy::Greedy,
+            Strategy::Sqrt,
+            Strategy::DataParallel,
+            Strategy::Sequence,
+            Strategy::DaskLike { chunk: 20 },
+        ] {
+            let d = driver(strategy.clone(), 4);
+            let (outs, rep) = d.run(&chain.graph, &inputs).unwrap();
+            assert!(
+                outs[&chain.z].allclose(&want, 1e-3, 1e-3),
+                "{} skewed={skewed}",
+                strategy.name()
+            );
+            assert!(rep.exec.kernel_calls > 0);
+        }
+    }
+}
+
+#[test]
+fn every_strategy_correct_on_llama_block() {
+    let cfg = LlamaConfig {
+        layers: 1,
+        batch: 2,
+        seq: 16,
+        model_dim: 32,
+        heads: 2,
+        head_dim: 16,
+        ffn_dim: 64,
+    };
+    let model = llama_graph(&cfg).unwrap();
+    let inputs = llama_inputs(&model, 31);
+    let mut reference = None;
+    for strategy in [
+        Strategy::EinDecomp,
+        Strategy::Megatron,
+        Strategy::Sequence,
+        Strategy::AttentionHead,
+        Strategy::Greedy,
+    ] {
+        let d = driver(strategy.clone(), 4);
+        let (outs, _) = d.run(&model.graph, &inputs).unwrap();
+        let out = outs[&model.out].clone();
+        assert!(out.data().iter().all(|v| v.is_finite()), "{}", strategy.name());
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => assert!(
+                out.allclose(r, 1e-3, 1e-3),
+                "{} diverged",
+                strategy.name()
+            ),
+        }
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let chain = chain_graph(60, true).unwrap();
+    let inputs = chain_inputs(&chain, 77);
+    let want = chain_reference(&chain, &inputs).unwrap();
+    for workers in [1usize, 2, 3, 5, 8] {
+        let d = driver(Strategy::EinDecomp, workers);
+        let (outs, _) = d.run(&chain.graph, &inputs).unwrap();
+        assert!(outs[&chain.z].allclose(&want, 1e-3, 1e-3), "workers={workers}");
+    }
+}
+
+#[test]
+fn training_reduces_loss_through_full_stack() {
+    let step = ffnn_step(32, 48, 24, 8).unwrap();
+    let d = driver(Strategy::EinDecomp, 4);
+    let (plan, _) = d.plan(&step.graph).unwrap();
+    let mut state = FfnnState::init(48, 24, 8, 9);
+    let mut losses = Vec::new();
+    for s in 0..60 {
+        let (x, t) = classifier_batch(32, 48, 8, 0.4, 900 + s);
+        let inputs = step_inputs(&step, &state, x, t);
+        let (outs, _) = d.run_with_plan(&step.graph, &plan, &inputs).unwrap();
+        losses.push(outs[&step.loss].at(&[]));
+        state
+            .apply(&outs[&step.dw1], &outs[&step.dw2], 0.4)
+            .unwrap();
+    }
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first * 0.8,
+        "loss did not fall: {first:.4} -> {last:.4} ({losses:?})"
+    );
+}
+
+#[test]
+fn dry_run_matches_real_traffic() {
+    // dry_run and execute must report identical modeled traffic
+    let chain = chain_graph(64, false).unwrap();
+    let d = driver(Strategy::EinDecomp, 4);
+    let inputs = chain_inputs(&chain, 5);
+    let dry = d.dry_run(&chain.graph).unwrap();
+    let (_, real) = d.run(&chain.graph, &inputs).unwrap();
+    assert_eq!(dry.exec.bytes_moved, real.exec.bytes_moved);
+    assert_eq!(dry.exec.kernel_calls, real.exec.kernel_calls);
+    assert!(real.exec.wall_s > 0.0 && dry.exec.wall_s == 0.0);
+}
+
+#[test]
+fn cli_plan_and_run_smoke() {
+    use eindecomp::coordinator::cli::main_with_args;
+    for args in [
+        vec!["plan", "--model", "chain", "--scale", "32", "--p", "4", "--compare"],
+        vec!["run", "--model", "chain", "--scale", "32", "--workers", "2"],
+        vec!["plan", "--model", "ffnn", "--batch", "16", "--features", "64", "--hidden", "32", "--classes", "8"],
+        vec!["help"],
+    ] {
+        let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        main_with_args(&argv).unwrap();
+    }
+}
+
+#[test]
+fn program_file_roundtrip() {
+    use eindecomp::coordinator::cli::main_with_args;
+    let dir = std::env::temp_dir().join("eindecomp_test_prog");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("prog.ein");
+    std::fs::write(
+        &path,
+        "input X [32, 32]\ninput Y [32, 32]\nZ = einsum ij,jk->ik X Y\nR = map relu Z\n",
+    )
+    .unwrap();
+    let argv: Vec<String> = ["program", "--file", path.to_str().unwrap(), "--p", "4", "--run"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    main_with_args(&argv).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,307 @@
+//! Property-based tests (hand-rolled generators — no proptest crate in
+//! this container; see Cargo.toml note). Each property runs against many
+//! seeded random cases; failures report the seed.
+//!
+//! Core invariants:
+//!  * TRA rewrite equivalence (paper §4.3): for ANY EinSum and ANY valid
+//!    partitioning vector, the join->aggregate rewrite equals dense
+//!    evaluation;
+//!  * partition/assemble round-trips for any balanced tiling;
+//!  * lowered task graphs execute to the same result as dense evaluation
+//!    for arbitrary per-vertex plans (routing/repartition invariant);
+//!  * viable() enumerations respect the exactly-p constraint and bounds;
+//!  * cost-model sanity (non-negativity, zero at identity).
+
+use eindecomp::decomp::viable::viable;
+use eindecomp::decomp::{plan_graph, Plan, PlanMode, PlannerConfig};
+use eindecomp::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use eindecomp::einsum::graph::EinGraph;
+use eindecomp::einsum::label::Label;
+use eindecomp::runtime::native::eval_einsum;
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::tensor::Tensor;
+use eindecomp::tra::ops::eval_einsum_tra;
+use eindecomp::util::Rng;
+use std::collections::HashMap;
+
+fn labset() -> Vec<Label> {
+    ["i", "j", "k", "m", "n"].iter().map(|s| Label::new(s)).collect()
+}
+
+/// Random binary EinSum over 1-3 labels per operand with random ops.
+fn random_binary(rng: &mut Rng) -> (EinSum, Vec<usize>, Vec<usize>) {
+    let labs = labset();
+    let nx = 1 + rng.next_below(3);
+    let ny = 1 + rng.next_below(3);
+    let mut pool = labs.clone();
+    let mut lx = Vec::new();
+    for _ in 0..nx {
+        if pool.is_empty() { break; }
+        let i = rng.next_below(pool.len());
+        lx.push(pool.remove(i));
+    }
+    let mut ly = Vec::new();
+    for _ in 0..ny {
+        if !lx.is_empty() && rng.next_f32() < 0.5 {
+            let cand = lx[rng.next_below(lx.len())];
+            if !ly.contains(&cand) {
+                ly.push(cand);
+                continue;
+            }
+        }
+        if let Some(l) = pool.pop() {
+            ly.push(l);
+        }
+    }
+    if ly.is_empty() {
+        ly.push(lx[0]);
+    }
+    let uniq: Vec<Label> = {
+        let mut u = lx.clone();
+        for &l in &ly {
+            if !u.contains(&l) {
+                u.push(l);
+            }
+        }
+        u
+    };
+    let mut lz = Vec::new();
+    for &l in &uniq {
+        if rng.next_f32() < 0.6 {
+            lz.push(l);
+        }
+    }
+    if lz.is_empty() && rng.next_f32() < 0.8 {
+        lz.push(uniq[rng.next_below(uniq.len())]);
+    }
+    let join = [JoinOp::Mul, JoinOp::Add, JoinOp::SquaredDiff, JoinOp::AbsDiff, JoinOp::Max]
+        [rng.next_below(5)];
+    let agg = [AggOp::Sum, AggOp::Max, AggOp::Min][rng.next_below(3)];
+    let sizes = [2usize, 3, 4, 5, 6, 8];
+    let mut bound_of: HashMap<Label, usize> = HashMap::new();
+    for &l in &uniq {
+        bound_of.insert(l, sizes[rng.next_below(sizes.len())]);
+    }
+    let bx: Vec<usize> = lx.iter().map(|l| bound_of[l]).collect();
+    let by: Vec<usize> = ly.iter().map(|l| bound_of[l]).collect();
+    (EinSum::Binary { lx, ly, lz, join, agg }, bx, by)
+}
+
+fn random_part(rng: &mut Rng, bounds: &[usize]) -> Vec<usize> {
+    bounds.iter().map(|&b| 1 + rng.next_below(b.min(4))).collect()
+}
+
+#[test]
+fn prop_tra_rewrite_equals_dense() {
+    let engine = NativeEngine::new();
+    let mut checked = 0;
+    for seed in 0..200u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let (op, bx, by) = random_binary(&mut rng);
+        let x = Tensor::random(&bx, seed * 2 + 1);
+        let y = Tensor::random(&by, seed * 2 + 2);
+        let dense = match eval_einsum(&op, &[&x, &y]) {
+            Ok(d) => d,
+            Err(_) => continue,
+        };
+        let ubounds = eindecomp::decomp::viable::unique_label_bounds(&op, &[&bx, &by]);
+        let d = random_part(&mut rng, &ubounds);
+        let rel = eval_einsum_tra(&op, &[&x, &y], &d, &engine)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e} (op {op}, d {d:?})"));
+        let assembled = rel.assemble().unwrap();
+        assert!(
+            assembled.allclose(&dense, 1e-3, 1e-4),
+            "seed {seed}: TRA != dense for {op}, d={d:?}, diff={}",
+            assembled.max_abs_diff(&dense).unwrap()
+        );
+        checked += 1;
+    }
+    assert!(checked > 150, "only {checked} cases checked");
+}
+
+#[test]
+fn prop_unary_tra_rewrite_equals_dense() {
+    let engine = NativeEngine::new();
+    for seed in 0..100u64 {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let labs = labset();
+        let rank = 1 + rng.next_below(3);
+        let lx: Vec<Label> = labs[..rank].to_vec();
+        let keep = rng.next_below(rank + 1);
+        let mut lz = lx.clone();
+        while lz.len() > keep {
+            let i = rng.next_below(lz.len());
+            lz.remove(i);
+        }
+        let u = [UnaryOp::Identity, UnaryOp::Exp, UnaryOp::Relu, UnaryOp::Square]
+            [rng.next_below(4)];
+        let agg = [AggOp::Sum, AggOp::Max][rng.next_below(2)];
+        let op = EinSum::Unary { lx: lx.clone(), lz, op: u, agg };
+        let bx: Vec<usize> = (0..rank).map(|_| 2 + rng.next_below(6)).collect();
+        let x = Tensor::random(&bx, seed + 5);
+        let dense = eval_einsum(&op, &[&x]).unwrap();
+        let d = random_part(&mut rng, &bx);
+        let rel = eval_einsum_tra(&op, &[&x], &d, &engine).unwrap();
+        assert!(
+            rel.assemble().unwrap().allclose(&dense, 1e-3, 1e-4),
+            "seed {seed}: unary TRA mismatch"
+        );
+    }
+}
+
+#[test]
+fn prop_partition_assemble_roundtrip() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let rank = 1 + rng.next_below(4);
+        let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.next_below(9)).collect();
+        let t = Tensor::random(&shape, seed);
+        let part: Vec<usize> = shape.iter().map(|&b| 1 + rng.next_below(b)).collect();
+        let rel = eindecomp::tra::relation::TensorRelation::partition(&t, &part).unwrap();
+        assert_eq!(rel.assemble().unwrap(), t, "seed {seed} part {part:?}");
+        assert_eq!(rel.bytes(), t.bytes());
+    }
+}
+
+#[test]
+fn prop_viable_products_and_bounds() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let op = EinSum::contraction(
+            vec![Label::new("i"), Label::new("j")],
+            vec![Label::new("j"), Label::new("k")],
+            vec![Label::new("i"), Label::new("k")],
+        );
+        let bounds: Vec<usize> = (0..3).map(|_| 4 << rng.next_below(4)).collect();
+        let p = 1usize << rng.next_below(5);
+        if let Ok(ds) = viable(&op, &bounds, p) {
+            for d in &ds {
+                assert_eq!(d.iter().product::<usize>(), p, "seed {seed}");
+                for (x, b) in d.iter().zip(&bounds) {
+                    assert!(x <= b && x.is_power_of_two());
+                }
+            }
+            let mut sorted = ds.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(sorted.len(), ds.len());
+        }
+    }
+}
+
+#[test]
+fn prop_cost_model_sane() {
+    use eindecomp::decomp::cost::{cost_agg, cost_join, cost_repart};
+    for seed in 0..100u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let (op, bx, by) = random_binary(&mut rng);
+        let ubounds = eindecomp::decomp::viable::unique_label_bounds(&op, &[&bx, &by]);
+        let d = random_part(&mut rng, &ubounds);
+        let j = cost_join(&op, &[&bx, &by], &d).unwrap();
+        let a = cost_agg(&op, &[&bx, &by], &d).unwrap();
+        assert!(j >= 0.0 && a >= 0.0, "seed {seed}");
+        let bound: Vec<usize> = (0..2).map(|_| 2 + rng.next_below(10)).collect();
+        let d1: Vec<usize> = bound.iter().map(|&b| 1 + rng.next_below(b)).collect();
+        let d2: Vec<usize> = bound.iter().map(|&b| 1 + rng.next_below(b)).collect();
+        assert_eq!(cost_repart(&d1, &d1, &bound), 0.0);
+        assert!(cost_repart(&d1, &d2, &bound) >= 0.0);
+        assert!(cost_repart(&d2, &d1, &bound) >= 0.0);
+    }
+}
+
+#[test]
+fn prop_random_plans_execute_correctly() {
+    let engine = NativeEngine::new();
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let s = 6 + rng.next_below(8);
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![s, s]);
+        let b = g.input("B", vec![s, s]);
+        let c = g.input("C", vec![s, s]);
+        let z1 = g
+            .add(
+                "Z1",
+                EinSum::contraction(
+                    vec![Label::new("i"), Label::new("j")],
+                    vec![Label::new("j"), Label::new("k")],
+                    vec![Label::new("i"), Label::new("k")],
+                ),
+                vec![a, b],
+            )
+            .unwrap();
+        let z2 = g
+            .add(
+                "Z2",
+                EinSum::contraction(
+                    vec![Label::new("i"), Label::new("k")],
+                    vec![Label::new("k"), Label::new("m")],
+                    vec![Label::new("i"), Label::new("m")],
+                ),
+                vec![z1, c],
+            )
+            .unwrap();
+        let mut plan = Plan::default();
+        plan.parts
+            .insert(z1, (0..3).map(|_| 1 + rng.next_below(s.min(4))).collect());
+        plan.parts
+            .insert(z2, (0..3).map(|_| 1 + rng.next_below(s.min(4))).collect());
+        plan.finalize_inputs(&g);
+        let ta = Tensor::random(&[s, s], seed + 10);
+        let tb = Tensor::random(&[s, s], seed + 11);
+        let tc = Tensor::random(&[s, s], seed + 12);
+        let mut inputs = HashMap::new();
+        inputs.insert(a, ta.clone());
+        inputs.insert(b, tb.clone());
+        inputs.insert(c, tc.clone());
+        let workers = 1 + rng.next_below(6);
+        let cluster = Cluster::new(workers, NetworkProfile::loopback());
+        let (outs, _) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+        let w1 = eval_einsum(&g.vertex(z1).op, &[&ta, &tb]).unwrap();
+        let want = eval_einsum(&g.vertex(z2).op, &[&w1, &tc]).unwrap();
+        assert!(
+            outs[&z2].allclose(&want, 1e-3, 1e-4),
+            "seed {seed}: wrong result under random plan"
+        );
+    }
+}
+
+#[test]
+fn prop_planner_never_worse_than_greedy_on_trees() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let dims: Vec<usize> = (0..5).map(|_| 8 << rng.next_below(4)).collect();
+        let mut g = EinGraph::new();
+        let mut cur = g.input("X0", vec![dims[0], dims[1]]);
+        for l in 0..3 {
+            let w = g.input(&format!("W{l}"), vec![dims[l + 1], dims[l + 2]]);
+            let li = Label::new("i");
+            let lj = Label::new(&format!("t{l}"));
+            let lk = Label::new(&format!("t{}", l + 1));
+            cur = g
+                .add(
+                    &format!("H{l}"),
+                    EinSum::contraction(vec![li, lj], vec![lj, lk], vec![li, lk]),
+                    vec![cur, w],
+                )
+                .unwrap();
+        }
+        let exact = plan_graph(
+            &g,
+            &PlannerConfig { p: 8, mode: PlanMode::ExactTree, off_path_cost: false },
+        );
+        let greedy = plan_graph(
+            &g,
+            &PlannerConfig { p: 8, mode: PlanMode::Greedy, off_path_cost: false },
+        );
+        if let (Ok(e), Ok(gr)) = (exact, greedy) {
+            assert!(
+                e.predicted_cost <= gr.predicted_cost + 1e-6,
+                "seed {seed}: exact {:.0} > greedy {:.0}",
+                e.predicted_cost,
+                gr.predicted_cost
+            );
+        }
+    }
+}
