@@ -1,6 +1,9 @@
 //! Hot-path microbenchmarks used by the §Perf pass (EXPERIMENTS.md):
 //! GEMM throughput, permutation bandwidth, einsum dispatch, lowering and
-//! planning rates. Run with `cargo bench micro` (harness=false).
+//! planning rates, and the real-execution scheduler A/B (work stealing vs
+//! the retained level-barrier reference). Run with `cargo bench micro`
+//! (harness=false). Set `EINDECOMP_SMOKE=1` for the capped configuration
+//! used by `rust/scripts/bench_smoke.sh` / CI.
 
 use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
 use eindecomp::einsum::expr::EinSum;
@@ -9,7 +12,7 @@ use eindecomp::models::llama::{llama_graph, LlamaConfig};
 use eindecomp::runtime::gemm::sgemm;
 use eindecomp::runtime::native::eval_einsum;
 use eindecomp::runtime::{Backend, DispatchEngine, KernelEngine};
-use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::sim::{Cluster, ExecMode, NetworkProfile};
 use eindecomp::tensor::Tensor;
 
 fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
@@ -23,10 +26,14 @@ fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
 }
 
 fn main() {
-    println!("=== L3 hot-path microbenchmarks ===");
+    let smoke = std::env::var("EINDECOMP_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    println!("=== L3 hot-path microbenchmarks{} ===", if smoke { " (smoke)" } else { "" });
 
     // 1. raw GEMM
-    for n in [128usize, 256, 512, 1024] {
+    let gemm_sizes: &[usize] = if smoke { &[128, 256] } else { &[128, 256, 512, 1024] };
+    for &n in gemm_sizes {
         let a = Tensor::random(&[n, n], 1);
         let b = Tensor::random(&[n, n], 2);
         let mut c = vec![0.0f32; n * n];
@@ -39,7 +46,8 @@ fn main() {
     }
 
     // 2. permutation bandwidth (the "unpack" step)
-    for n in [256usize, 1024] {
+    let perm_sizes: &[usize] = if smoke { &[256] } else { &[256, 1024] };
+    for &n in perm_sizes {
         let t = Tensor::random(&[n, n], 3);
         let dt = time(|| { let _ = t.permute(&[1, 0]).unwrap(); }, 10);
         let gbps = (n * n * 4) as f64 / dt / 1e9;
@@ -60,30 +68,35 @@ fn main() {
     }
 
     // 4. planning + lowering throughput on a 32-layer LLaMA graph
-    let model = llama_graph(&LlamaConfig::llama7b(8, 1024)).unwrap();
-    println!(
-        "LLaMA-7B full graph: {} vertices",
-        model.graph.len()
-    );
     let roles = LabelRoles::by_convention();
-    let t0 = std::time::Instant::now();
-    let plan = assign(&model.graph, &Strategy::EinDecomp, 8, &roles).unwrap();
-    println!("plan 32-layer graph (p=8): {:>8.1} ms", t0.elapsed().as_secs_f64() * 1e3);
-    let cluster = Cluster::new(8, NetworkProfile::gpu_server_v100());
-    let t0 = std::time::Instant::now();
-    let tg = cluster.lower(&model.graph, &plan).unwrap();
-    println!(
-        "lower+place ({} tasks):    {:>8.1} ms",
-        tg.len(),
-        t0.elapsed().as_secs_f64() * 1e3
-    );
-    let t0 = std::time::Instant::now();
-    let _ = cluster.model(&tg);
-    println!("model timeline:            {:>8.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    if !smoke {
+        let model = llama_graph(&LlamaConfig::llama7b(8, 1024)).unwrap();
+        println!("LLaMA-7B full graph: {} vertices", model.graph.len());
+        let t0 = std::time::Instant::now();
+        let plan = assign(&model.graph, &Strategy::EinDecomp, 8, &roles).unwrap();
+        println!("plan 32-layer graph (p=8): {:>8.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        let cluster = Cluster::new(8, NetworkProfile::gpu_server_v100());
+        let t0 = std::time::Instant::now();
+        let tg = cluster.lower(&model.graph, &plan).unwrap();
+        println!(
+            "lower+place ({} tasks):    {:>8.1} ms",
+            tg.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let t0 = std::time::Instant::now();
+        let _ = cluster.model(&tg);
+        println!("model timeline:            {:>8.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    }
 
-    // 5. end-to-end small real step (executor overhead)
+    // 5. end-to-end real execution: work-stealing vs level-barrier A/B.
+    // The tiny-llama stack is deep (hundreds of levels, few tasks per
+    // level) — exactly the shape where per-level barriers idle cores and
+    // dependency-counted overlap pays off.
+    let engine = eindecomp::runtime::NativeEngine::new();
+    let reps = if smoke { 3 } else { 5 };
+
     let tiny = llama_graph(&LlamaConfig {
-        layers: 2,
+        layers: if smoke { 2 } else { 4 },
         batch: 2,
         seq: 32,
         model_dim: 64,
@@ -94,13 +107,42 @@ fn main() {
     .unwrap();
     let inputs = eindecomp::models::llama::llama_inputs(&tiny, 6);
     let plan = assign(&tiny.graph, &Strategy::EinDecomp, 4, &roles).unwrap();
-    let cluster = Cluster::new(4, NetworkProfile::loopback());
-    let engine = eindecomp::runtime::NativeEngine::new();
-    let dt = time(
-        || {
-            let _ = cluster.execute(&tiny.graph, &plan, &engine, &inputs).unwrap();
-        },
-        5,
+    scheduler_ab("tiny llama step", 4, &tiny.graph, &plan, &inputs, &engine, reps);
+
+    // same A/B on a wide-and-shallow graph (many tasks per level): the
+    // barrier is cheap here, so this bounds the scheduler's overhead.
+    let chain_scale = if smoke { 160 } else { 320 };
+    let chain = eindecomp::models::matchain::chain_graph(chain_scale, true).unwrap();
+    let cinputs = eindecomp::models::matchain::chain_inputs(&chain, 7);
+    let cplan = assign(&chain.graph, &Strategy::EinDecomp, 8, &roles).unwrap();
+    scheduler_ab("skewed chain   ", 8, &chain.graph, &cplan, &cinputs, &engine, reps);
+}
+
+/// One barrier-vs-steal A/B measurement over a placed plan: times both
+/// exec modes and prints the speedup line the acceptance criteria read.
+fn scheduler_ab(
+    label: &str,
+    workers: usize,
+    g: &eindecomp::einsum::graph::EinGraph,
+    plan: &eindecomp::decomp::Plan,
+    inputs: &std::collections::HashMap<eindecomp::einsum::graph::VertexId, Tensor>,
+    engine: &eindecomp::runtime::NativeEngine,
+    reps: usize,
+) {
+    let mut wall = Vec::new();
+    for mode in [ExecMode::LevelBarrier, ExecMode::WorkStealing] {
+        let cluster = Cluster::new(workers, NetworkProfile::loopback()).with_exec_mode(mode);
+        let dt = time(
+            || {
+                let _ = cluster.execute(g, plan, engine, inputs).unwrap();
+            },
+            reps,
+        );
+        println!("{label} ({mode:?}): {:>8.1} ms", dt * 1e3);
+        wall.push(dt);
+    }
+    println!(
+        "scheduler speedup (barrier/steal): {:>5.2}x",
+        wall[0] / wall[1]
     );
-    println!("tiny llama step (real):    {:>8.1} ms", dt * 1e3);
 }

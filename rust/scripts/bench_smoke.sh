@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Capped bench smoke: exercises the two real-execution benches end to end
+# without the full figure sweeps. Used by CI and as a quick local sanity
+# check that the scheduler A/B still runs and reports a speedup line.
+#
+#   rust/scripts/bench_smoke.sh
+#
+# EINDECOMP_SMOKE=1 makes micro_hotpath shrink its problem sizes (see the
+# bench source); fig9_ffnn is dry-run-only modeling and already cheap at
+# its smallest sweep points, so it runs as-is.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== micro_hotpath (EINDECOMP_SMOKE=1) =="
+EINDECOMP_SMOKE=1 cargo bench --bench micro_hotpath
+
+echo
+echo "== fig9_ffnn (modeled, full sweep is cheap) =="
+cargo bench --bench fig9_ffnn

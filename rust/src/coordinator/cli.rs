@@ -164,12 +164,22 @@ fn cmd_run(args: &Args) -> Result<()> {
         "pjrt" => Backend::PjrtStrict,
         _ => Backend::Native,
     };
+    let exec_mode = match args.get("exec").unwrap_or("steal") {
+        "barrier" | "level" => crate::sim::ExecMode::LevelBarrier,
+        "steal" | "ws" => crate::sim::ExecMode::WorkStealing,
+        other => {
+            return Err(Error::Parse(format!(
+                "unknown exec mode {other:?} (try steal or barrier)"
+            )))
+        }
+    };
     let cfg = DriverConfig {
         workers,
         p: args.get_usize("p", workers),
         strategy: strategy_by_name(args.get("strategy").unwrap_or("eindecomp"))?,
         backend,
         network: NetworkProfile::cpu_cluster(),
+        exec_mode,
         ..Default::default()
     };
     let driver = Driver::new(cfg)?;
@@ -227,7 +237,7 @@ USAGE:
   eindecomp plan    --model chain|chain-skewed|ffnn|llama [--p N] [--compare]
                     [--scale N] [--batch N] [--seq N] [--shrink N]
   eindecomp run     --model ... [--workers N] [--p N] [--strategy S]
-                    [--backend native|auto|pjrt]
+                    [--backend native|auto|pjrt] [--exec steal|barrier]
   eindecomp program --file prog.ein [--p N] [--run]
 
 STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,

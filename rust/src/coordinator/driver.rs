@@ -8,7 +8,7 @@ use crate::decomp::Plan;
 use crate::einsum::graph::{EinGraph, VertexId};
 use crate::error::Result;
 use crate::runtime::{Backend, DispatchEngine};
-use crate::sim::cluster::{Cluster, ExecReport};
+use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
 use crate::sim::memory::{model_with_memory, MemoryConfig};
 use crate::sim::network::NetworkProfile;
 use crate::taskgraph::placement::Policy;
@@ -29,6 +29,9 @@ pub struct DriverConfig {
     pub artifact_dir: PathBuf,
     pub network: NetworkProfile,
     pub placement: Policy,
+    /// Host-thread scheduler for real execution (work stealing by
+    /// default; [`ExecMode::LevelBarrier`] is the reference mode).
+    pub exec_mode: ExecMode,
     pub roles: LabelRoles,
 }
 
@@ -42,6 +45,7 @@ impl Default for DriverConfig {
             artifact_dir: PathBuf::from("artifacts"),
             network: NetworkProfile::cpu_cluster(),
             placement: Policy::LocalityGreedy,
+            exec_mode: ExecMode::WorkStealing,
             roles: LabelRoles::by_convention(),
         }
     }
@@ -92,6 +96,7 @@ impl Driver {
         let engine = DispatchEngine::new(cfg.backend, &cfg.artifact_dir)?;
         let mut cluster = Cluster::new(cfg.workers, cfg.network.clone());
         cluster.placement = cfg.placement;
+        cluster.exec_mode = cfg.exec_mode;
         Ok(Driver {
             cfg,
             engine,
@@ -202,6 +207,22 @@ mod tests {
         // JSON report renders
         let j = rep.to_json().render();
         assert!(j.contains("kernel_calls"));
+    }
+
+    #[test]
+    fn exec_modes_agree_through_driver() {
+        let chain = chain_graph(32, false).unwrap();
+        let inputs = chain_inputs(&chain, 8);
+        let want = chain_reference(&chain, &inputs).unwrap();
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            let driver = Driver::new(DriverConfig {
+                exec_mode: mode,
+                ..Default::default()
+            })
+            .unwrap();
+            let (outs, _) = driver.run(&chain.graph, &inputs).unwrap();
+            assert!(outs[&chain.z].allclose(&want, 1e-3, 1e-4), "{mode:?}");
+        }
     }
 
     #[test]

@@ -9,10 +9,9 @@
 //! operation `b[l1; l2]` ([`project`]): build a vector of length `|l1|`
 //! whose `i`-th entry is `b[j]` where `l1[i] == l2[j]`.
 
-use once_cell::sync::Lazy;
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::RwLock;
+use std::sync::{OnceLock, RwLock};
 
 /// Global label interner: name -> id and id -> name.
 struct Interner {
@@ -20,12 +19,18 @@ struct Interner {
     names: Vec<String>,
 }
 
-static INTERNER: Lazy<RwLock<Interner>> = Lazy::new(|| {
-    RwLock::new(Interner {
-        by_name: HashMap::new(),
-        names: Vec::new(),
+// std-only lazy global (no `once_cell` in this crate).
+static INTERNER_CELL: OnceLock<RwLock<Interner>> = OnceLock::new();
+
+#[allow(non_snake_case)]
+fn INTERNER() -> &'static RwLock<Interner> {
+    INTERNER_CELL.get_or_init(|| {
+        RwLock::new(Interner {
+            by_name: HashMap::new(),
+            names: Vec::new(),
+        })
     })
-});
+}
 
 /// An interned dimension label.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -35,12 +40,12 @@ impl Label {
     /// Intern a label by name. The same name always returns the same id.
     pub fn new(name: &str) -> Label {
         {
-            let g = INTERNER.read().unwrap();
+            let g = INTERNER().read().unwrap();
             if let Some(&id) = g.by_name.get(name) {
                 return Label(id);
             }
         }
-        let mut g = INTERNER.write().unwrap();
+        let mut g = INTERNER().write().unwrap();
         if let Some(&id) = g.by_name.get(name) {
             return Label(id);
         }
@@ -52,7 +57,7 @@ impl Label {
 
     /// The interned name.
     pub fn name(&self) -> String {
-        INTERNER.read().unwrap().names[self.0 as usize].clone()
+        INTERNER().read().unwrap().names[self.0 as usize].clone()
     }
 }
 
@@ -70,8 +75,7 @@ impl fmt::Display for Label {
 
 /// Convenience: intern a whitespace- or comma-separated list of label names.
 ///
-/// ```no_run
-/// // (no_run: doctest binaries in this container lack the xla rpath)
+/// ```
 /// use eindecomp::einsum::label::labels;
 /// let l = labels("i j k");
 /// assert_eq!(l.len(), 3);

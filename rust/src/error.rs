@@ -1,64 +1,99 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — this
+//! crate is dependency-free, so no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors surfaced by the eindecomp library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// An EinSum expression is structurally invalid (label/bound mismatch,
     /// repeated labels within one operand, rank mismatch, ...).
-    #[error("invalid einsum: {0}")]
     InvalidEinsum(String),
 
     /// The textual einsum spec could not be parsed.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// An EinGraph is malformed (dangling input, cycle, bound mismatch).
-    #[error("invalid graph: {0}")]
     InvalidGraph(String),
 
     /// Shape/bound error in a tensor operation.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// A partitioning vector is invalid for the bound it is applied to.
-    #[error("invalid partitioning: {0}")]
     InvalidPartitioning(String),
 
     /// The planner could not find any viable decomposition.
-    #[error("no viable decomposition: {0}")]
     NoViablePlan(String),
 
     /// Task graph construction/validation failure.
-    #[error("task graph error: {0}")]
     TaskGraph(String),
 
     /// Simulated cluster execution failure.
-    #[error("execution error: {0}")]
     Exec(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact (AOT-compiled HLO) missing or unreadable.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Device memory capacity exceeded and paging disabled.
-    #[error("out of device memory: {0}")]
     Oom(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(format!("{e:?}"))
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidEinsum(m) => write!(f, "invalid einsum: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::InvalidGraph(m) => write!(f, "invalid graph: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::InvalidPartitioning(m) => write!(f, "invalid partitioning: {m}"),
+            Error::NoViablePlan(m) => write!(f, "no viable decomposition: {m}"),
+            Error::TaskGraph(m) => write!(f, "task graph error: {m}"),
+            Error::Exec(m) => write!(f, "execution error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Oom(m) => write!(f, "out of device memory: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_variant() {
+        assert!(format!("{}", Error::Parse("x".into())).starts_with("parse error"));
+        assert!(format!("{}", Error::Exec("x".into())).starts_with("execution error"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -24,12 +24,29 @@ pub struct DispatchEngine {
 impl DispatchEngine {
     /// Build an engine for the chosen backend. `artifact_dir` is consulted
     /// only for `Auto`/`PjrtStrict`. `Auto` silently degrades to native if
-    /// the artifacts are missing (e.g. `make artifacts` not yet run).
+    /// the artifacts are missing (e.g. `make artifacts` not yet run) or if
+    /// this build lacks an executing PJRT runtime (see
+    /// [`PjrtEngine::runtime_available`]).
     pub fn new(backend: Backend, artifact_dir: impl AsRef<Path>) -> Result<Self> {
         let pjrt = match backend {
             Backend::Native => None,
-            Backend::Auto => PjrtEngine::load(&artifact_dir).ok().map(Arc::new),
-            Backend::PjrtStrict => Some(Arc::new(PjrtEngine::load(&artifact_dir)?)),
+            Backend::Auto => {
+                if PjrtEngine::runtime_available() {
+                    PjrtEngine::load(&artifact_dir).ok().map(Arc::new)
+                } else {
+                    None
+                }
+            }
+            Backend::PjrtStrict => {
+                if !PjrtEngine::runtime_available() {
+                    return Err(Error::Runtime(
+                        "PjrtStrict requested but this build has no executing PJRT \
+                         runtime (xla FFI absent); use Backend::Native or Auto"
+                            .into(),
+                    ));
+                }
+                Some(Arc::new(PjrtEngine::load(&artifact_dir)?))
+            }
         };
         Ok(DispatchEngine {
             backend,

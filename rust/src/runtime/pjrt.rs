@@ -1,27 +1,27 @@
-//! PJRT kernel engine: loads HLO-text artifacts produced by the python/jax
-//! compile path (`make artifacts`) and executes them on the PJRT CPU
-//! client via the `xla` crate.
+//! PJRT kernel engine: registry for the HLO-text artifacts produced by the
+//! python/jax compile path (`make artifacts`).
 //!
-//! The interchange format is HLO *text*, not a serialized `HloModuleProto`:
-//! jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
-//! XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
-//! round-trips cleanly (see /opt/xla-example/README.md).
+//! The interchange format is HLO *text* described by
+//! `artifacts/manifest.txt`, one line per (kind, shape) kernel:
+//! `name<TAB>kind<TAB>d0,d1,..<TAB>file` (aot.py also emits a
+//! human-oriented manifest.json; rust parses only the text form to stay
+//! dependency-free).
 //!
-//! Artifacts are described by `artifacts/manifest.txt`, one line per
-//! (kind, shape) kernel: `name<TAB>kind<TAB>d0,d1,..<TAB>file` (aot.py
-//! also emits a human-oriented manifest.json; rust parses only the text
-//! form to stay dependency-free). Executables are compiled lazily on
-//! first use and cached. Python never runs on this path — the manifest
-//! plus HLO files are all that is needed at run time.
+//! This build is **dependency-free**: the `xla` FFI crate that executes
+//! the compiled HLO is not available, so [`PjrtEngine`] degrades to a
+//! manifest registry. [`PjrtEngine::runtime_available`] reports whether
+//! execution is possible (`false` here); [`PjrtEngine::try_eval`] then
+//! always returns `Ok(None)` so [`super::DispatchEngine`] with
+//! [`super::Backend::Auto`] transparently falls back to the native
+//! kernels, and `run`/`eval` return an [`Error::Runtime`] explaining the
+//! missing FFI. Artifact-dependent tests gate on `runtime_available()`.
 
 use super::KernelEngine;
-use crate::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
-use crate::einsum::label::{Label, LabelList};
+use crate::einsum::expr::EinSum;
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 /// One artifact in `manifest.txt`.
 #[derive(Clone, Debug)]
@@ -38,7 +38,7 @@ pub struct ManifestEntry {
 }
 
 /// Parse the line-oriented manifest format.
-fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
     let mut out = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -72,39 +72,16 @@ fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
     Ok(out)
 }
 
-/// Compiled-executable cache entry.
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// PJRT-backed kernel engine.
-///
-/// All PJRT interaction is serialized behind one mutex: the CPU client's
-/// executables are internally multi-threaded, and the FFI types are not
-/// `Sync`. Wall-clock parallel-speedup experiments therefore use the
-/// native engine; the PJRT engine demonstrates the AOT path and provides
-/// the XLA-compiled hot kernels for single-stream throughput.
+/// PJRT artifact registry (execution stubbed; see module docs).
 pub struct PjrtEngine {
-    inner: Mutex<PjrtInner>,
     /// (kind, dims) -> manifest entry, for fast availability checks.
     index: HashMap<(String, Vec<usize>), ManifestEntry>,
     dir: PathBuf,
 }
 
-struct PjrtInner {
-    client: xla::PjRtClient,
-    cache: HashMap<String, Compiled>,
-}
-
-// SAFETY: every access to the FFI client/executables goes through the
-// mutex in `inner`; the raw pointers are never shared across threads
-// without it.
-unsafe impl Send for PjrtEngine {}
-unsafe impl Sync for PjrtEngine {}
-
 impl PjrtEngine {
-    /// Load the artifact manifest from `dir` (e.g. `artifacts/`) and create
-    /// a PJRT CPU client. Fails if the manifest is missing or unreadable.
+    /// Load the artifact manifest from `dir` (e.g. `artifacts/`). Fails if
+    /// the manifest is missing or unreadable.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.txt");
@@ -118,15 +95,19 @@ impl PjrtEngine {
         for k in parse_manifest(&text)? {
             index.insert((k.kind.clone(), k.dims.clone()), k);
         }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtEngine {
-            inner: Mutex::new(PjrtInner {
-                client,
-                cache: HashMap::new(),
-            }),
-            index,
-            dir,
-        })
+        Ok(PjrtEngine { index, dir })
+    }
+
+    /// Whether this build can actually execute compiled HLO. Always
+    /// `false` without the `xla` FFI; tests and benches that need real
+    /// PJRT execution must gate on this.
+    pub fn runtime_available() -> bool {
+        false
+    }
+
+    /// Directory the manifest was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     /// Number of registered artifacts.
@@ -134,219 +115,36 @@ impl PjrtEngine {
         self.index.len()
     }
 
-    /// True if an artifact for (kind, dims) exists.
+    /// True if an artifact for (kind, dims) exists in the manifest.
     pub fn has(&self, kind: &str, dims: &[usize]) -> bool {
         self.index.contains_key(&(kind.to_string(), dims.to_vec()))
     }
 
-    /// Execute the named-kind kernel on flat input buffers with explicit
-    /// shapes. Inputs/outputs are f32 tensors; the artifact must have been
-    /// lowered with `return_tuple=True` (we unwrap a 1-tuple).
-    pub fn run(&self, kind: &str, dims: &[usize], inputs: &[&Tensor]) -> Result<Tensor> {
-        let entry = self
-            .index
-            .get(&(kind.to_string(), dims.to_vec()))
-            .ok_or_else(|| {
-                Error::Artifact(format!("no artifact for kind={kind} dims={dims:?}"))
-            })?
-            .clone();
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.cache.contains_key(&entry.name) {
-            let path = self.dir.join(&entry.file);
-            let proto =
-                xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
-                    Error::Artifact(format!("non-utf8 path {}", path.display()))
-                })?)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner.client.compile(&comp)?;
-            inner.cache.insert(entry.name.clone(), Compiled { exe });
-        }
-        let compiled = inner.cache.get(&entry.name).unwrap();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims_i64: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(t.data()).reshape(&dims_i64)
-            })
-            .collect::<std::result::Result<Vec<_>, _>>()?;
-        let result = compiled.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let shape = out.array_shape()?;
-        let out_dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let values = out.to_vec::<f32>()?;
-        Tensor::new(out_dims, values)
+    /// Manifest entry for (kind, dims), if registered.
+    pub fn entry(&self, kind: &str, dims: &[usize]) -> Option<&ManifestEntry> {
+        self.index.get(&(kind.to_string(), dims.to_vec()))
     }
 
-    /// Try to evaluate an EinSum via a registered artifact. Returns
-    /// `Ok(None)` when no artifact pattern matches (caller falls back).
-    pub fn try_eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Option<Tensor>> {
-        match op {
-            EinSum::Input => Ok(None),
-            EinSum::Unary { lx, lz, op: u, agg } => {
-                self.try_eval_unary(lx, lz, *u, *agg, inputs[0])
-            }
-            EinSum::Binary {
-                lx,
-                ly,
-                lz,
-                join,
-                agg,
-            } => self.try_eval_binary(lx, ly, lz, *join, *agg, inputs),
+    /// Execute the named-kind kernel. Unavailable in this build.
+    pub fn run(&self, kind: &str, dims: &[usize], _inputs: &[&Tensor]) -> Result<Tensor> {
+        if self.entry(kind, dims).is_none() {
+            return Err(Error::Artifact(format!(
+                "no artifact for kind={kind} dims={dims:?}"
+            )));
         }
+        Err(Error::Runtime(
+            "PJRT execution unavailable: this build has no xla FFI (dependency-free crate); \
+             use the native engine"
+                .into(),
+        ))
     }
 
-    fn try_eval_unary(
-        &self,
-        lx: &LabelList,
-        lz: &LabelList,
-        u: UnaryOp,
-        agg: AggOp,
-        x: &Tensor,
-    ) -> Result<Option<Tensor>> {
-        // Pure map in the same label order: flatten to [n].
-        if lz == lx {
-            let kind = match u {
-                UnaryOp::Exp => "map_exp",
-                UnaryOp::Relu => "map_relu",
-                UnaryOp::Silu => "map_silu",
-                UnaryOp::Square => "map_square",
-                _ => return Ok(None),
-            };
-            let n = x.len();
-            if !self.has(kind, &[n]) {
-                return Ok(None);
-            }
-            let flat = x.clone().reshape(vec![n])?;
-            let out = self.run(kind, &[n], &[&flat])?;
-            return Ok(Some(out.reshape(x.shape().to_vec())?));
-        }
-        // Row reduction over the last label: [rows, cols] -> [rows].
-        if lz.len() + 1 == lx.len() && lz[..] == lx[..lz.len()] && x.rank() >= 1 {
-            let kind = match agg {
-                AggOp::Sum => "reduce_sum_last",
-                AggOp::Max => "reduce_max_last",
-                _ => return Ok(None),
-            };
-            if !matches!(u, UnaryOp::Identity) {
-                return Ok(None);
-            }
-            let cols = *x.shape().last().unwrap();
-            let rows = x.len() / cols.max(1);
-            if !self.has(kind, &[rows, cols]) {
-                return Ok(None);
-            }
-            let flat = x.clone().reshape(vec![rows, cols])?;
-            let out = self.run(kind, &[rows, cols], &[&flat])?;
-            let out_shape: Vec<usize> = x.shape()[..x.rank() - 1].to_vec();
-            return Ok(Some(out.reshape(out_shape)?));
-        }
+    /// Try to evaluate an EinSum via a registered artifact. Without an
+    /// executing runtime this always returns `Ok(None)`, which makes
+    /// `Backend::Auto` fall back to the native engine.
+    pub fn try_eval(&self, _op: &EinSum, _inputs: &[&Tensor]) -> Result<Option<Tensor>> {
         Ok(None)
     }
-
-    fn try_eval_binary(
-        &self,
-        lx: &LabelList,
-        ly: &LabelList,
-        lz: &LabelList,
-        join: JoinOp,
-        agg: AggOp,
-        inputs: &[&Tensor],
-    ) -> Result<Option<Tensor>> {
-        let (x, y) = (inputs[0], inputs[1]);
-        // Elementwise, identical label order: flatten to [n].
-        if lx == ly && lx == lz {
-            let kind = match join {
-                JoinOp::Add => "ew_add",
-                JoinOp::Mul => "ew_mul",
-                JoinOp::Sub => "ew_sub",
-                JoinOp::Div => "ew_div",
-                _ => return Ok(None),
-            };
-            let n = x.len();
-            if !self.has(kind, &[n]) {
-                return Ok(None);
-            }
-            let fx = x.clone().reshape(vec![n])?;
-            let fy = y.clone().reshape(vec![n])?;
-            let out = self.run(kind, &[n], &[&fx, &fy])?;
-            return Ok(Some(out.reshape(x.shape().to_vec())?));
-        }
-        // Mul/Sum contraction with a clean batch/m/n/k split: canonical BMM.
-        if join == JoinOp::Mul && agg == AggOp::Sum {
-            if let Some((bmnk, perm_x, perm_y, z_canon, z_shape)) =
-                bmm_canonicalize(lx, ly, lz, x, y)
-            {
-                let [b, m, k, n] = bmnk;
-                if !self.has("bmm", &[b, m, k, n]) {
-                    return Ok(None);
-                }
-                let xc = x.permute(&perm_x)?.reshape(vec![b, m, k])?;
-                let yc = y.permute(&perm_y)?.reshape(vec![b, k, n])?;
-                let out = self.run("bmm", &[b, m, k, n], &[&xc, &yc])?;
-                let out = out.reshape(z_shape)?;
-                let perm_z: Vec<usize> = lz
-                    .iter()
-                    .map(|l| z_canon.iter().position(|m2| m2 == l).unwrap())
-                    .collect();
-                return Ok(Some(out.permute(&perm_z)?));
-            }
-        }
-        Ok(None)
-    }
-}
-
-/// Classify a Mul/Sum binary EinSum into the canonical BMM form. Returns
-/// `([b,m,k,n], perm_x, perm_y, canonical z labels, canonical z shape)`.
-#[allow(clippy::type_complexity)]
-fn bmm_canonicalize(
-    lx: &LabelList,
-    ly: &LabelList,
-    lz: &LabelList,
-    x: &Tensor,
-    y: &Tensor,
-) -> Option<([usize; 4], Vec<usize>, Vec<usize>, LabelList, Vec<usize>)> {
-    let mut batch = vec![];
-    let mut ms = vec![];
-    let mut ns = vec![];
-    let mut ks = vec![];
-    let mut seen: Vec<Label> = vec![];
-    for l in lx.iter().chain(ly.iter()) {
-        if seen.contains(l) {
-            continue;
-        }
-        seen.push(*l);
-        match (lx.contains(l), ly.contains(l), lz.contains(l)) {
-            (true, true, true) => batch.push(*l),
-            (true, false, true) => ms.push(*l),
-            (false, true, true) => ns.push(*l),
-            (true, true, false) => ks.push(*l),
-            _ => return None,
-        }
-    }
-    let dim_x = |l: &Label| x.shape()[lx.iter().position(|m| m == l).unwrap()];
-    let dim_y = |l: &Label| y.shape()[ly.iter().position(|m| m == l).unwrap()];
-    let b: usize = batch.iter().map(dim_x).product();
-    let m: usize = ms.iter().map(dim_x).product();
-    let k: usize = ks.iter().map(dim_x).product();
-    let n: usize = ns.iter().map(dim_y).product();
-    let x_order: LabelList = batch.iter().chain(&ms).chain(&ks).copied().collect();
-    let y_order: LabelList = batch.iter().chain(&ks).chain(&ns).copied().collect();
-    let perm_x: Vec<usize> = x_order
-        .iter()
-        .map(|l| lx.iter().position(|m2| m2 == l).unwrap())
-        .collect();
-    let perm_y: Vec<usize> = y_order
-        .iter()
-        .map(|l| ly.iter().position(|m2| m2 == l).unwrap())
-        .collect();
-    let z_canon: LabelList = batch.iter().chain(&ms).chain(&ns).copied().collect();
-    let z_shape: Vec<usize> = batch
-        .iter()
-        .map(dim_x)
-        .chain(ms.iter().map(dim_x))
-        .chain(ns.iter().map(dim_y))
-        .collect();
-    Some(([b, m, k, n], perm_x, perm_y, z_canon, z_shape))
 }
 
 impl KernelEngine for PjrtEngine {
@@ -354,13 +152,59 @@ impl KernelEngine for PjrtEngine {
         match self.try_eval(op, inputs)? {
             Some(t) => Ok(t),
             None => Err(Error::Artifact(format!(
-                "no PJRT artifact matches op {op} on shapes {:?}",
-                inputs.iter().map(|t| t.shape()).collect::<Vec<_>>()
+                "no PJRT artifact matches op {op} on shapes {:?} (runtime available: {})",
+                inputs.iter().map(|t| t.shape()).collect::<Vec<_>>(),
+                Self::runtime_available()
             ))),
         }
     }
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_rejects() {
+        let entries =
+            parse_manifest("# comment\nk1\tbmm\t1,64,64,64\tk1.hlo\nk2\tew_add\t1024\tk2.hlo\n")
+                .unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].kind, "bmm");
+        assert_eq!(entries[0].dims, vec![1, 64, 64, 64]);
+        assert!(parse_manifest("only\ttwo\n").is_err());
+        assert!(parse_manifest("a\tb\tnot-a-dim\tf\n").is_err());
+    }
+
+    #[test]
+    fn engine_load_from_manifest_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("eindecomp_pjrt_stub_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "k1\tbmm\t1,8,8,8\tk1.hlo\n").unwrap();
+        let e = PjrtEngine::load(&dir).unwrap();
+        assert_eq!(e.num_artifacts(), 1);
+        assert!(e.has("bmm", &[1, 8, 8, 8]));
+        assert!(!e.has("bmm", &[2, 8, 8, 8]));
+        // execution is stubbed out in the dependency-free build
+        assert!(!PjrtEngine::runtime_available());
+        let t = Tensor::zeros(&[8, 8]);
+        assert!(e.run("bmm", &[1, 8, 8, 8], &[&t, &t]).is_err());
+        let op = EinSum::contraction(
+            crate::einsum::label::labels("i j"),
+            crate::einsum::label::labels("j k"),
+            crate::einsum::label::labels("i k"),
+        );
+        assert!(e.try_eval(&op, &[&t, &t]).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_fails() {
+        assert!(PjrtEngine::load("/nonexistent/artifacts").is_err());
     }
 }

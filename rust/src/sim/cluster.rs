@@ -3,10 +3,9 @@
 //! Two modes over the same task graph:
 //!
 //! * **real** ([`Cluster::execute`]) — actually computes every kernel call
-//!   (multi-threaded over the host's cores via [`crate::util::parallel_for`])
-//!   and returns the assembled output tensors, together with the modeled
-//!   report. Used by the examples, the end-to-end training driver, and all
-//!   numerics tests.
+//!   multi-threaded on the host's cores and returns the assembled output
+//!   tensors, together with the modeled report. Used by the examples, the
+//!   end-to-end training driver, and all numerics tests.
 //! * **dry** ([`Cluster::dry_run`]) — models time and traffic only, which
 //!   is how paper-scale configurations (LLaMA-7B/65B shapes) are costed
 //!   without materializing terabytes.
@@ -15,6 +14,39 @@
 //! producer tiles have arrived (cross-worker edges pay latency +
 //! bytes/bandwidth), each worker executes its tasks in graph order, and
 //! compute costs `flops / flops_per_s`.
+//!
+//! # Real-execution scheduling
+//!
+//! Real execution mirrors that event-driven model with a dependency-
+//! counted, work-stealing scheduler ([`ExecMode::WorkStealing`], the
+//! default — see [`crate::util::execute_dag`] for the queue protocol):
+//!
+//! * every task carries a readiness counter initialized to its dep
+//!   occurrence count; the worker thread that performs a counter's final
+//!   decrement owns the hand-off and pushes the now-ready task onto its
+//!   own deque, so a consumer usually runs where its freshest input was
+//!   just produced;
+//! * idle threads steal from the front of other deques (oldest-first), so
+//!   independent subgraphs overlap instead of waiting for a level barrier;
+//! * task *results* are deterministic regardless of interleaving: each
+//!   task writes only its own `OnceLock` slot, kernel inputs are fixed by
+//!   the task graph, and aggregations combine their deps in the fixed
+//!   `deps` order — never in completion order. `cargo test` locks this in
+//!   with a bitwise-determinism differential suite (`tests/
+//!   scheduler_differential.rs`).
+//!
+//! [`ExecMode::LevelBarrier`] retains the previous implementation — a
+//! persistent thread team synchronized per ASAP level with a barrier — as
+//! a reference mode for differential tests and A/B benchmarks
+//! (`cargo bench micro_hotpath` reports both). Both modes produce
+//! bitwise-identical outputs; the barrier mode simply idles cores
+//! whenever a level drains unevenly, which is exactly where the paper's
+//! event-driven cost model (§7) says work should overlap.
+//!
+//! The modeled makespan/traffic accounting ([`Cluster::model`]) is shared
+//! by both modes and unchanged by the scheduler choice: `ExecReport`'s
+//! `sim_*`/`bytes_*` fields describe the modeled cluster, `wall_s` the
+//! real host execution.
 
 use super::network::NetworkProfile;
 use crate::decomp::Plan;
@@ -29,6 +61,19 @@ use crate::tensor::Tensor;
 use crate::tra::relation::{tile_origin, tile_shape};
 use std::collections::HashMap;
 use std::sync::OnceLock;
+
+/// How [`Cluster::execute`] schedules real task execution on host threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Dependency-counted work stealing (default): tasks start the moment
+    /// their producers finish, independent subgraphs overlap.
+    #[default]
+    WorkStealing,
+    /// Reference mode: execute level by level with a full barrier between
+    /// levels. Kept for differential testing and as the A/B baseline the
+    /// work-stealing speedup is measured against.
+    LevelBarrier,
+}
 
 /// Execution summary for one run.
 #[derive(Clone, Debug, Default)]
@@ -88,6 +133,9 @@ pub struct Cluster {
     pub workers: usize,
     pub net: NetworkProfile,
     pub placement: Policy,
+    /// Host-thread scheduling of real execution (modeled accounting is
+    /// independent of this).
+    pub exec_mode: ExecMode,
 }
 
 impl Cluster {
@@ -96,7 +144,14 @@ impl Cluster {
             workers,
             net,
             placement: Policy::LocalityGreedy,
+            exec_mode: ExecMode::WorkStealing,
         }
+    }
+
+    /// Builder-style override of the real-execution scheduler.
+    pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
+        self.exec_mode = mode;
+        self
     }
 
     /// Lower + place a planned graph.
@@ -164,8 +219,9 @@ impl Cluster {
     }
 
     /// Execute for real: compute every task with `engine`, multi-threaded
-    /// level-by-level, and return the dense outputs of the graph's output
-    /// vertices plus the report (modeled timeline + measured wall time).
+    /// per [`ExecMode`], and return the dense outputs of the graph's
+    /// output vertices plus the report (modeled timeline + measured wall
+    /// time).
     pub fn execute(
         &self,
         g: &EinGraph,
@@ -191,25 +247,7 @@ impl Cluster {
         let tg = self.lower(g, plan)?;
         let mut report = self.model(&tg);
 
-        // level schedule
         let n = tg.tasks.len();
-        let mut level = vec![0usize; n];
-        let mut max_level = 0usize;
-        for t in &tg.tasks {
-            let l = t
-                .deps
-                .iter()
-                .map(|d| level[d.0] + 1)
-                .max()
-                .unwrap_or(0);
-            level[t.id.0] = l;
-            max_level = max_level.max(l);
-        }
-        let mut by_level: Vec<Vec<usize>> = vec![vec![]; max_level + 1];
-        for (i, &l) in level.iter().enumerate() {
-            by_level[l].push(i);
-        }
-
         let results: Vec<OnceLock<Tensor>> = (0..n).map(|_| OnceLock::new()).collect();
         // Pre-slice all input tiles serially (they carry no deps and model
         // the paper's free, offline pre-partitioning).
@@ -233,58 +271,13 @@ impl Cluster {
             .min(self.workers.max(1) * 2)
             .max(1);
         let t0 = std::time::Instant::now();
-        // One persistent thread team for the whole run, synchronized per
-        // level with a barrier. (The first implementation spawned fresh
-        // scoped threads per level; on deep graphs — a LLaMA stack has
-        // hundreds of levels — spawn cost dominated the step. §Perf
-        // lever 1: 74 ms -> ~maximum kernel-bound time on the tiny-llama
-        // microbench.)
-        let err = std::sync::Mutex::new(None::<Error>);
-        if threads == 1 {
-            for lvl in &by_level {
-                for &ti in lvl {
-                    if results[ti].get().is_some() {
-                        continue;
-                    }
-                    let t = exec_task(&tg, g, plan, engine, &results, ti)?;
-                    let _ = results[ti].set(t);
-                }
+        match self.exec_mode {
+            ExecMode::WorkStealing => {
+                self.run_work_stealing(&tg, g, plan, engine, &results, threads)?
             }
-        } else {
-            use std::sync::atomic::{AtomicUsize, Ordering};
-            let counters: Vec<AtomicUsize> =
-                by_level.iter().map(|_| AtomicUsize::new(0)).collect();
-            let barrier = std::sync::Barrier::new(threads);
-            std::thread::scope(|scope| {
-                for _ in 0..threads {
-                    scope.spawn(|| {
-                        for (li, lvl) in by_level.iter().enumerate() {
-                            loop {
-                                let i = counters[li].fetch_add(1, Ordering::Relaxed);
-                                if i >= lvl.len() {
-                                    break;
-                                }
-                                let ti = lvl[i];
-                                if results[ti].get().is_some() {
-                                    continue; // pre-sliced input tile
-                                }
-                                match exec_task(&tg, g, plan, engine, &results, ti) {
-                                    Ok(t) => {
-                                        let _ = results[ti].set(t);
-                                    }
-                                    Err(e) => {
-                                        *err.lock().unwrap() = Some(e);
-                                    }
-                                }
-                            }
-                            barrier.wait();
-                        }
-                    });
-                }
-            });
-        }
-        if let Some(e) = err.into_inner().unwrap() {
-            return Err(e);
+            ExecMode::LevelBarrier => {
+                self.run_level_barrier(&tg, g, plan, engine, &results, threads)?
+            }
         }
         report.wall_s = t0.elapsed().as_secs_f64();
 
@@ -305,6 +298,96 @@ impl Cluster {
             outputs.insert(out, dense);
         }
         Ok((outputs, report))
+    }
+
+    /// Dependency-counted work-stealing execution (default mode). Input
+    /// tiles are already materialized in `results`; their tasks are
+    /// no-ops that exist only to release their consumers' counters.
+    fn run_work_stealing(
+        &self,
+        tg: &TaskGraph,
+        g: &EinGraph,
+        plan: &Plan,
+        engine: &dyn KernelEngine,
+        results: &[OnceLock<Tensor>],
+        threads: usize,
+    ) -> Result<()> {
+        let consumers = tg.consumers();
+        let indegree = tg.indegrees();
+        // Placement seeds initial deque affinity: a task's home deque is
+        // its placed worker (mod nothing — out-of-range homes fall into
+        // the shared injector, which is exactly the case threads < workers).
+        let home: Vec<usize> = tg.tasks.iter().map(|t| t.worker).collect();
+        crate::util::execute_dag(&consumers, &indegree, &home, threads, |ti| {
+            if results[ti].get().is_some() {
+                return Ok(()); // pre-sliced input tile
+            }
+            let t = exec_task(tg, g, plan, engine, results, ti)?;
+            let _ = results[ti].set(t);
+            Ok(())
+        })
+    }
+
+    /// Reference mode: one persistent thread team, synchronized per ASAP
+    /// level with a barrier. Retained so differential tests and benches
+    /// can compare against the work-stealing scheduler.
+    fn run_level_barrier(
+        &self,
+        tg: &TaskGraph,
+        g: &EinGraph,
+        plan: &Plan,
+        engine: &dyn KernelEngine,
+        results: &[OnceLock<Tensor>],
+        threads: usize,
+    ) -> Result<()> {
+        let by_level = tg.levels();
+        if threads == 1 {
+            for lvl in &by_level {
+                for &ti in lvl {
+                    if results[ti].get().is_some() {
+                        continue;
+                    }
+                    let t = exec_task(tg, g, plan, engine, results, ti)?;
+                    let _ = results[ti].set(t);
+                }
+            }
+            return Ok(());
+        }
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let err = std::sync::Mutex::new(None::<Error>);
+        let counters: Vec<AtomicUsize> = by_level.iter().map(|_| AtomicUsize::new(0)).collect();
+        let barrier = std::sync::Barrier::new(threads);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    for (li, lvl) in by_level.iter().enumerate() {
+                        loop {
+                            let i = counters[li].fetch_add(1, Ordering::Relaxed);
+                            if i >= lvl.len() {
+                                break;
+                            }
+                            let ti = lvl[i];
+                            if results[ti].get().is_some() {
+                                continue; // pre-sliced input tile
+                            }
+                            match exec_task(tg, g, plan, engine, results, ti) {
+                                Ok(t) => {
+                                    let _ = results[ti].set(t);
+                                }
+                                Err(e) => {
+                                    *err.lock().unwrap() = Some(e);
+                                }
+                            }
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        match err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -342,6 +425,8 @@ fn exec_task(
                 EinSum::Binary { agg, .. } => *agg,
                 EinSum::Input => AggOp::Sum,
             };
+            // Deterministic regardless of scheduling: combine in fixed
+            // `deps` order, never completion order.
             let mut acc = dep_tensor(task.deps[0])?.clone();
             for &d in &task.deps[1..] {
                 acc.accumulate(dep_tensor(d)?, |a, b| agg.combine(a, b))?;
@@ -452,18 +537,20 @@ mod tests {
     fn execute_matches_dense_eval() {
         let g = matmul_graph(32);
         let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() }).unwrap();
-        let cluster = Cluster::new(4, NetworkProfile::loopback());
         let a = Tensor::random(&[32, 32], 1);
         let b = Tensor::random(&[32, 32], 2);
         let mut inputs = HashMap::new();
         inputs.insert(g.by_name("A").unwrap(), a.clone());
         inputs.insert(g.by_name("B").unwrap(), b.clone());
         let engine = NativeEngine::new();
-        let (outs, rep) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
         let z = g.by_name("Z").unwrap();
         let want = crate::runtime::native::eval_einsum(&g.vertex(z).op, &[&a, &b]).unwrap();
-        assert!(outs[&z].allclose(&want, 1e-4, 1e-5));
-        assert!(rep.wall_s > 0.0);
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            let cluster = Cluster::new(4, NetworkProfile::loopback()).with_exec_mode(mode);
+            let (outs, rep) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+            assert!(outs[&z].allclose(&want, 1e-4, 1e-5), "{mode:?}");
+            assert!(rep.wall_s > 0.0);
+        }
     }
 
     #[test]
@@ -505,6 +592,33 @@ mod tests {
         let want = crate::runtime::native::eval_einsum(&g.vertex(z2).op, &[&w1, &tc]).unwrap();
         assert!(outs[&z2].allclose(&want, 1e-4, 1e-5));
         assert!(rep.bytes_repart > 0 || rep.bytes_moved > 0);
+    }
+
+    #[test]
+    fn exec_modes_agree_bitwise() {
+        let g = matmul_graph(24);
+        let z = g.by_name("Z").unwrap();
+        let mut plan = crate::decomp::Plan::default();
+        plan.parts.insert(z, vec![2, 3, 2]); // forces aggregation tasks
+        plan.finalize_inputs(&g);
+        let a = Tensor::random(&[24, 24], 6);
+        let b = Tensor::random(&[24, 24], 7);
+        let mut inputs = HashMap::new();
+        inputs.insert(g.by_name("A").unwrap(), a);
+        inputs.insert(g.by_name("B").unwrap(), b);
+        let engine = NativeEngine::new();
+        let ws = Cluster::new(4, NetworkProfile::loopback())
+            .with_exec_mode(ExecMode::WorkStealing)
+            .execute(&g, &plan, &engine, &inputs)
+            .unwrap()
+            .0;
+        let lb = Cluster::new(4, NetworkProfile::loopback())
+            .with_exec_mode(ExecMode::LevelBarrier)
+            .execute(&g, &plan, &engine, &inputs)
+            .unwrap()
+            .0;
+        // bitwise: the two schedulers evaluate identical task graphs
+        assert_eq!(ws[&z], lb[&z]);
     }
 
     #[test]

@@ -17,5 +17,5 @@ pub mod cluster;
 pub mod memory;
 pub mod network;
 
-pub use cluster::{Cluster, ExecReport};
+pub use cluster::{Cluster, ExecMode, ExecReport};
 pub use network::NetworkProfile;

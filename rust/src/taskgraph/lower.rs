@@ -11,7 +11,7 @@
 //!
 //! Inputs become one `InputTile` task per tile of their pre-partitioning.
 
-use super::{Task, TaskGraph, TaskId, TaskKind};
+use super::{TaskGraph, TaskId, TaskKind};
 use crate::decomp::Plan;
 use crate::einsum::expr::EinSum;
 use crate::einsum::graph::EinGraph;
@@ -41,19 +41,6 @@ fn overlapping_tiles(bound: usize, parts: usize, origin: usize, len: usize) -> (
 /// Lower a planned EinGraph to a (not yet placed) task graph.
 pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
     let mut tg = TaskGraph::default();
-    let push = |kind: TaskKind, deps: Vec<TaskId>, out_bytes: usize, flops: f64, tasks: &mut Vec<Task>| -> TaskId {
-        let id = TaskId(tasks.len());
-        tasks.push(Task {
-            id,
-            kind,
-            deps,
-            out_bytes,
-            flops,
-            worker: usize::MAX,
-        });
-        id
-    };
-    let mut tasks: Vec<Task> = Vec::new();
 
     for vert in g.vertices() {
         let v = vert.id;
@@ -72,12 +59,11 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                         .map(|(d, &k)| tile_size(vert.bound[d], part[d], k))
                         .product::<usize>()
                         * 4;
-                    outs.push(push(
+                    outs.push(tg.push_task(
                         TaskKind::InputTile { vertex: v, key },
                         vec![],
                         bytes,
                         0.0,
-                        &mut tasks,
                     ));
                 }
                 tg.vertex_outputs.insert(v, outs);
@@ -134,7 +120,7 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                                 .map(|(dim, &k)| tile_size(cb[dim], need[dim], k))
                                 .product::<usize>()
                                 * 4;
-                            tiles.push(push(
+                            tiles.push(tg.push_task(
                                 TaskKind::Repart {
                                     producer: c,
                                     consumer: v,
@@ -144,7 +130,6 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                                 deps,
                                 bytes,
                                 0.0,
-                                &mut tasks,
                             ));
                         }
                         operand_tiles.push(tiles);
@@ -176,12 +161,11 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                         .map(|(dim, &k)| tile_size(bz[dim], dz[dim], k))
                         .product::<usize>()
                         * 4;
-                    kernel_by_key.push(push(
+                    kernel_by_key.push(tg.push_task(
                         TaskKind::Kernel { vertex: v, key },
                         deps,
                         bytes,
                         flops_per_call,
-                        &mut tasks,
                     ));
                 }
 
@@ -210,7 +194,7 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                             * 4;
                         let elems = (bytes / 4) as f64;
                         let flops = elems * (members.len() as f64 - 1.0);
-                        outs.push(push(
+                        outs.push(tg.push_task(
                             TaskKind::Agg {
                                 vertex: v,
                                 key: zkey,
@@ -218,7 +202,6 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                             members,
                             bytes,
                             flops,
-                            &mut tasks,
                         ));
                     }
                     outs
@@ -241,7 +224,6 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
             }
         }
     }
-    tg.tasks = tasks;
     Ok(tg)
 }
 

@@ -93,6 +93,68 @@ impl TaskGraph {
         self.tasks.len()
     }
 
+    /// Append a task (unplaced) and return its id. Lowering builds the
+    /// graph through this, which guarantees `id == index` and topological
+    /// dep order by construction.
+    pub fn push_task(
+        &mut self,
+        kind: TaskKind,
+        deps: Vec<TaskId>,
+        out_bytes: usize,
+        flops: f64,
+    ) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        self.tasks.push(Task {
+            id,
+            kind,
+            deps,
+            out_bytes,
+            flops,
+            worker: usize::MAX,
+        });
+        id
+    }
+
+    /// Occurrence-counted consumer adjacency: `consumers[p]` lists every
+    /// task depending on `p`, once per dep occurrence. A task that reads
+    /// the same producer tile through two operands therefore appears
+    /// twice — matching [`indegrees`](Self::indegrees), so the scheduler's
+    /// per-edge decrements balance exactly.
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut c: Vec<Vec<usize>> = vec![vec![]; self.tasks.len()];
+        for t in &self.tasks {
+            for &d in &t.deps {
+                c[d.0].push(t.id.0);
+            }
+        }
+        c
+    }
+
+    /// Dep-occurrence count per task (the scheduler's initial readiness
+    /// counters; parallel to [`consumers`](Self::consumers)).
+    pub fn indegrees(&self) -> Vec<usize> {
+        self.tasks.iter().map(|t| t.deps.len()).collect()
+    }
+
+    /// Tasks grouped by ASAP level (level = longest dep chain length).
+    /// Used by the retained level-barrier execution mode and by
+    /// diagnostics; the work-stealing executor does not need levels.
+    pub fn levels(&self) -> Vec<Vec<usize>> {
+        let n = self.tasks.len();
+        let mut level = vec![0usize; n];
+        let mut max_level = 0usize;
+        for t in &self.tasks {
+            let l = t.deps.iter().map(|d| level[d.0] + 1).max().unwrap_or(0);
+            level[t.id.0] = l;
+            max_level = max_level.max(l);
+        }
+        let mut by_level: Vec<Vec<usize>> = vec![vec![]; if n == 0 { 0 } else { max_level + 1 }];
+        for (i, &l) in level.iter().enumerate() {
+            by_level[l].push(i);
+        }
+        by_level
+    }
+
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }
@@ -128,5 +190,68 @@ impl TaskGraph {
             }
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> TaskGraph {
+        // 0, 1 inputs; 2 reads both; 3 reads 2 twice (duplicate edge)
+        let mut tg = TaskGraph::default();
+        let a = tg.push_task(
+            TaskKind::InputTile { vertex: VertexId(0), key: vec![0] },
+            vec![],
+            4,
+            0.0,
+        );
+        let b = tg.push_task(
+            TaskKind::InputTile { vertex: VertexId(1), key: vec![0] },
+            vec![],
+            4,
+            0.0,
+        );
+        let k = tg.push_task(
+            TaskKind::Kernel { vertex: VertexId(2), key: vec![0] },
+            vec![a, b],
+            4,
+            1.0,
+        );
+        tg.push_task(
+            TaskKind::Kernel { vertex: VertexId(3), key: vec![0] },
+            vec![k, k],
+            4,
+            1.0,
+        );
+        tg
+    }
+
+    #[test]
+    fn consumers_and_indegrees_count_occurrences() {
+        let tg = tiny_graph();
+        let c = tg.consumers();
+        assert_eq!(c[0], vec![2]);
+        assert_eq!(c[1], vec![2]);
+        // duplicate edge appears twice, balancing the indegree of 2
+        assert_eq!(c[2], vec![3, 3]);
+        assert_eq!(tg.indegrees(), vec![0, 0, 2, 2]);
+    }
+
+    #[test]
+    fn levels_follow_longest_chain() {
+        let tg = tiny_graph();
+        let lv = tg.levels();
+        assert_eq!(lv, vec![vec![0, 1], vec![2], vec![3]]);
+        assert!(TaskGraph::default().levels().is_empty());
+    }
+
+    #[test]
+    fn push_task_assigns_sequential_ids() {
+        let tg = tiny_graph();
+        for (i, t) in tg.tasks.iter().enumerate() {
+            assert_eq!(t.id.0, i);
+            assert_eq!(t.worker, usize::MAX);
+        }
     }
 }

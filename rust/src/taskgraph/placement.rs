@@ -2,7 +2,10 @@
 //!
 //! The cost model's aggregation term assumes the reducer is co-located
 //! with one group member, and its join term is an upper bound that good
-//! placement undercuts via locality. Two policies:
+//! placement undercuts via locality. Besides driving the modeled
+//! timeline, the placed worker also seeds each task's *home deque* in the
+//! real work-stealing executor (see [`crate::sim::cluster`]), so the two
+//! views of locality stay aligned. Two policies:
 //!
 //! * [`Policy::RoundRobin`] — spread each vertex's tasks over workers by
 //!   linear key. Simple, perfectly balanced, locality-blind.
@@ -14,9 +17,10 @@ use super::{TaskGraph, TaskKind};
 use std::collections::HashMap;
 
 /// Placement policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Policy {
     RoundRobin,
+    #[default]
     LocalityGreedy,
 }
 

@@ -1,6 +1,7 @@
 //! Small in-tree utilities replacing unavailable external crates: a
-//! deterministic RNG (no `rand`), a scoped thread-pool helper (no
-//! `rayon`), and a minimal JSON *writer* for reports (no `serde_json`).
+//! deterministic RNG (no `rand`), a scoped thread-pool helper and a
+//! work-stealing DAG scheduler (no `rayon`/`crossbeam`), and a minimal
+//! JSON *writer* for reports (no `serde_json`).
 
 /// Deterministic SplitMix64 RNG — reproducible across runs and platforms.
 #[derive(Clone, Debug)]
@@ -76,6 +77,185 @@ where
             });
         }
     });
+}
+
+/// Execute a dependency-counted task DAG on `threads` OS threads with
+/// per-worker deques, a shared injector, and work stealing.
+///
+/// * `consumers[p]` lists every task that depends on `p`, **once per dep
+///   occurrence** (a task reading the same producer tile through two
+///   operands appears twice);
+/// * `indegree[t]` is the matching occurrence count of `t`'s deps — a task
+///   becomes ready exactly when its counter hits zero;
+/// * `home[t]` is the preferred worker (tasks seed onto
+///   `deques[home[t]]` when `home[t] < threads`, the injector otherwise);
+/// * `f(t)` runs each task exactly once, after all of its deps.
+///
+/// Scheduling protocol (the executor's readiness/stealing invariants live
+/// here; `sim::cluster` documents how they map onto task graphs):
+///
+/// 1. initially-ready tasks (indegree 0) are seeded to their home deque
+///    or the shared injector;
+/// 2. a worker pops from the **back** of its own deque (freshest first —
+///    its own recent outputs are cache-hot), then from the front of the
+///    injector, then steals from the **front** of other workers' deques
+///    (oldest first, the classic Chase–Lev discipline);
+/// 3. completing a task decrements each consumer's counter once per dep
+///    edge; the worker that performs the final decrement pushes that
+///    consumer onto its *own* deque (the consumer's first input is the
+///    tile just produced — locality);
+/// 4. at most one deque lock is ever held at a time, so stealing cannot
+///    deadlock;
+/// 5. workers that find nothing to pop park on a condvar with a short
+///    timeout (no busy-spin); every push/completion/abort notifies;
+/// 6. an `Err` from `f` aborts the run: in-flight tasks finish, nothing
+///    new starts, and the first error is returned.
+///
+/// Any error type `E: Send` is supported. Panics if the scheduler
+/// deadlocks — no task queued, none running, yet not all completed —
+/// which indicates a cyclic or miscounted dependency structure (the
+/// `outstanding` counter makes this state detectable: it counts tasks
+/// that are queued or running, and only the completion of a running
+/// task can queue new ones).
+pub fn execute_dag<E, F>(
+    consumers: &[Vec<usize>],
+    indegree: &[usize],
+    home: &[usize],
+    threads: usize,
+    f: F,
+) -> std::result::Result<(), E>
+where
+    F: Fn(usize) -> std::result::Result<(), E> + Sync,
+    E: Send,
+{
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let n = consumers.len();
+    debug_assert_eq!(indegree.len(), n);
+    debug_assert_eq!(home.len(), n);
+    if n == 0 {
+        return Ok(());
+    }
+    let threads = threads.max(1);
+    let pending: Vec<AtomicUsize> = indegree.iter().map(|&d| AtomicUsize::new(d)).collect();
+    let deques: Vec<Mutex<VecDeque<usize>>> =
+        (0..threads).map(|_| Mutex::new(VecDeque::new())).collect();
+    let injector: Mutex<VecDeque<usize>> = Mutex::new(VecDeque::new());
+    // Tasks that are queued or currently running. A running task keeps its
+    // +1 until after it has queued its newly-ready consumers, so
+    // `outstanding == 0` with `completed < n` can only mean deadlock.
+    let outstanding = AtomicUsize::new(0);
+    let mut seeded = 0usize;
+    for (i, &d) in indegree.iter().enumerate() {
+        if d == 0 {
+            seeded += 1;
+            if home[i] < threads {
+                deques[home[i]].lock().unwrap().push_back(i);
+            } else {
+                injector.lock().unwrap().push_back(i);
+            }
+        }
+    }
+    outstanding.store(seeded, Ordering::SeqCst);
+    let completed = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let error: Mutex<Option<E>> = Mutex::new(None);
+    // Idle parking: workers with nothing to pop wait here (with a timeout
+    // guarding the push-vs-sleep race) instead of busy-spinning.
+    let park = Mutex::new(());
+    let wake = std::sync::Condvar::new();
+
+    let worker = |w: usize| {
+        loop {
+            if abort.load(Ordering::SeqCst) || completed.load(Ordering::SeqCst) >= n {
+                break;
+            }
+            // Each pop is a separate statement so at most one deque lock
+            // is held at a time (invariant 4).
+            let mut task = deques[w].lock().unwrap().pop_back();
+            if task.is_none() {
+                task = injector.lock().unwrap().pop_front();
+            }
+            if task.is_none() {
+                for off in 1..threads {
+                    let v = (w + off) % threads;
+                    task = deques[v].lock().unwrap().pop_front();
+                    if task.is_some() {
+                        break;
+                    }
+                }
+            }
+            let Some(t) = task else {
+                if outstanding.load(Ordering::SeqCst) == 0
+                    && completed.load(Ordering::SeqCst) < n
+                    && !abort.load(Ordering::SeqCst)
+                {
+                    // Nothing queued, nothing running, work remains:
+                    // no task can ever become ready again.
+                    panic!(
+                        "execute_dag: deadlock ({} of {n} tasks completed) — \
+                         cyclic or miscounted dependency structure",
+                        completed.load(Ordering::SeqCst)
+                    );
+                }
+                let guard = park.lock().unwrap();
+                let _ = wake
+                    .wait_timeout(guard, std::time::Duration::from_micros(200))
+                    .unwrap();
+                continue;
+            };
+            match f(t) {
+                Ok(()) => {
+                    for &c in &consumers[t] {
+                        if pending[c].fetch_sub(1, Ordering::AcqRel) == 1 {
+                            outstanding.fetch_add(1, Ordering::SeqCst);
+                            deques[w].lock().unwrap().push_back(c);
+                            wake.notify_all();
+                        }
+                    }
+                    completed.fetch_add(1, Ordering::SeqCst);
+                    // Release this task's running +1 only after its
+                    // consumers are queued (see `outstanding` above).
+                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                    if completed.load(Ordering::SeqCst) >= n {
+                        wake.notify_all();
+                    }
+                }
+                Err(e) => {
+                    let mut slot = error.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    drop(slot);
+                    abort.store(true, Ordering::SeqCst);
+                    wake.notify_all();
+                    break;
+                }
+            }
+        }
+    };
+
+    if threads == 1 {
+        worker(0);
+    } else {
+        std::thread::scope(|scope| {
+            for w in 0..threads {
+                let worker = &worker;
+                scope.spawn(move || worker(w));
+            }
+        });
+    }
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    debug_assert_eq!(
+        completed.load(Ordering::SeqCst),
+        n,
+        "execute_dag: workers exited with unexecuted tasks"
+    );
+    Ok(())
 }
 
 /// Minimal JSON value writer for structured reports (we only ever *write*
@@ -195,6 +375,99 @@ mod tests {
         for h in &hits {
             assert_eq!(h.load(std::sync::atomic::Ordering::Relaxed), 1);
         }
+    }
+
+    /// Build (consumers, indegree) from a dep list, occurrence-counted.
+    fn dag(deps: &[Vec<usize>]) -> (Vec<Vec<usize>>, Vec<usize>) {
+        let mut consumers = vec![vec![]; deps.len()];
+        for (t, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                consumers[d].push(t);
+            }
+        }
+        let indegree: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+        (consumers, indegree)
+    }
+
+    #[test]
+    fn execute_dag_respects_dependencies() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        // 0 -> 1 -> 3, 0 -> 2 -> 3, plus a duplicate edge 2 -> 3
+        let deps = vec![vec![], vec![0], vec![0], vec![1, 2, 2]];
+        let (consumers, indegree) = dag(&deps);
+        let done: Vec<AtomicBool> = (0..4).map(|_| AtomicBool::new(false)).collect();
+        for threads in [1usize, 2, 8] {
+            for d in &done {
+                d.store(false, Ordering::SeqCst);
+            }
+            execute_dag::<(), _>(&consumers, &indegree, &[0, 0, 1, 1], threads, |t| {
+                for &d in &deps[t] {
+                    assert!(done[d].load(Ordering::SeqCst), "task {t} ran before dep {d}");
+                }
+                done[t].store(true, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+            assert!(done.iter().all(|d| d.load(Ordering::SeqCst)));
+        }
+    }
+
+    #[test]
+    fn execute_dag_runs_each_task_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // random-ish wide/deep DAG: task t depends on some earlier tasks
+        let mut rng = Rng::seed_from_u64(42);
+        let n = 400;
+        let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for t in 0..n {
+            let k = if t == 0 { 0 } else { rng.next_below(3.min(t) + 1) };
+            let mut ds = Vec::new();
+            for _ in 0..k {
+                ds.push(rng.next_below(t));
+            }
+            deps.push(ds);
+        }
+        let (consumers, indegree) = dag(&deps);
+        let home: Vec<usize> = (0..n).map(|t| t % 5).collect();
+        let runs: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        execute_dag::<(), _>(&consumers, &indegree, &home, 6, |t| {
+            runs[t].fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        for (t, r) in runs.iter().enumerate() {
+            assert_eq!(r.load(Ordering::SeqCst), 1, "task {t}");
+        }
+    }
+
+    #[test]
+    fn execute_dag_propagates_errors() {
+        let deps = vec![vec![], vec![0], vec![1], vec![2]];
+        let (consumers, indegree) = dag(&deps);
+        let r = execute_dag::<String, _>(&consumers, &indegree, &[0; 4], 4, |t| {
+            if t == 1 {
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(r.unwrap_err(), "boom");
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn execute_dag_detects_miscounted_deps() {
+        // indegree claims one dep, but no producer ever decrements it
+        let consumers = vec![vec![]];
+        let indegree = vec![1usize];
+        let _ = execute_dag::<(), _>(&consumers, &indegree, &[0], 1, |_| Ok(()));
+    }
+
+    #[test]
+    fn execute_dag_empty_and_single() {
+        execute_dag::<(), _>(&[], &[], &[], 4, |_| Ok(())).unwrap();
+        let (consumers, indegree) = dag(&[vec![]]);
+        execute_dag::<(), _>(&consumers, &indegree, &[99], 4, |_| Ok(())).unwrap();
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Planner optimality, proven by exhaustion on tiny graphs.
+//!
+//! For graphs of ≤ 4 compute vertices and p ∈ {2, 4}, enumerate EVERY
+//! combination of viable partitioning vectors, score each complete plan
+//! with `Plan::total_cost` (the objective `plan_graph` reports as
+//! `predicted_cost`), and assert:
+//!
+//! * `PlanMode::ExactTree` matches the brute-force optimum exactly
+//!   (paper §8.2's optimality claim, machine-checked);
+//! * `PlanMode::Linearized` and `PlanMode::Greedy` are never *better*
+//!   than the exact DP (they approximate the same objective).
+
+use eindecomp::decomp::viable::{pow2_at_least, unique_label_bounds, viable};
+use eindecomp::decomp::{plan_graph, Plan, PlanMode, PlannerConfig};
+use eindecomp::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use eindecomp::einsum::graph::{EinGraph, VertexId};
+use eindecomp::einsum::label::labels;
+
+/// All viable d-vectors for every compute vertex of `g` at kernel-call
+/// target `p` (after the same pow2 rounding the planner applies).
+fn candidates(g: &EinGraph, p: usize) -> Vec<(VertexId, Vec<Vec<usize>>)> {
+    let p = pow2_at_least(p);
+    g.vertices()
+        .iter()
+        .filter(|v| !matches!(v.op, EinSum::Input))
+        .map(|v| {
+            let in_bounds: Vec<&[usize]> = v
+                .inputs
+                .iter()
+                .map(|&i| g.vertex(i).bound.as_slice())
+                .collect();
+            let ub = unique_label_bounds(&v.op, &in_bounds);
+            (v.id, viable(&v.op, &ub, p).unwrap())
+        })
+        .collect()
+}
+
+/// Brute-force the cheapest complete plan by Cartesian product over all
+/// per-vertex candidates. Returns (best cost, number of plans scored).
+fn brute_force(g: &EinGraph, p: usize) -> (f64, usize) {
+    let cands = candidates(g, p);
+    let mut idx = vec![0usize; cands.len()];
+    let mut best = f64::INFINITY;
+    let mut scored = 0usize;
+    loop {
+        let mut plan = Plan::default();
+        for (slot, (v, ds)) in idx.iter().zip(&cands) {
+            plan.parts.insert(*v, ds[*slot].clone());
+        }
+        plan.finalize_inputs(g);
+        let cost = plan.total_cost(g).unwrap();
+        scored += 1;
+        if cost < best {
+            best = cost;
+        }
+        // odometer over the candidate lists
+        let mut d = cands.len();
+        loop {
+            if d == 0 {
+                return (best, scored);
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < cands[d].1.len() {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+fn check_graph(name: &str, g: &EinGraph) {
+    assert!(g.is_tree_like(), "{name}: exact DP needs a tree-like graph");
+    let compute = g.len() - g.inputs().len();
+    assert!(compute <= 4, "{name}: keep brute force tiny");
+    for p in [2usize, 4] {
+        let (best, scored) = brute_force(g, p);
+        let cfg = |mode| PlannerConfig {
+            p,
+            mode,
+            off_path_cost: false,
+        };
+        let exact = plan_graph(g, &cfg(PlanMode::ExactTree)).unwrap();
+        assert!(
+            (exact.predicted_cost - best).abs() <= 1e-9 * best.max(1.0),
+            "{name} p={p}: exact DP {} != brute-force optimum {best} \
+             (over {scored} complete plans)",
+            exact.predicted_cost
+        );
+        for mode in [PlanMode::Linearized, PlanMode::Greedy] {
+            let approx = plan_graph(g, &cfg(mode)).unwrap();
+            assert!(
+                approx.predicted_cost >= exact.predicted_cost - 1e-9 * best.max(1.0),
+                "{name} p={p}: {mode:?} cost {} beats exact {} — objective mismatch",
+                approx.predicted_cost,
+                exact.predicted_cost
+            );
+        }
+    }
+}
+
+#[test]
+fn single_matmul_exact_is_optimal() {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![16, 16]);
+    let b = g.input("B", vec![16, 16]);
+    g.add(
+        "Z",
+        EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+        vec![a, b],
+    )
+    .unwrap();
+    check_graph("matmul", &g);
+}
+
+#[test]
+fn skewed_matmul_exact_is_optimal() {
+    // skew makes the optimum non-square — a real test of the DP's search
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![32, 4]);
+    let b = g.input("B", vec![4, 32]);
+    g.add(
+        "Z",
+        EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+        vec![a, b],
+    )
+    .unwrap();
+    check_graph("skewed-matmul", &g);
+}
+
+#[test]
+fn two_op_chain_exact_is_optimal() {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![16, 8]);
+    let b = g.input("B", vec![8, 16]);
+    let c = g.input("C", vec![16, 16]);
+    let ab = g
+        .add(
+            "AB",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    g.add(
+        "ABC",
+        EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+        vec![ab, c],
+    )
+    .unwrap();
+    check_graph("two-op-chain", &g);
+}
+
+#[test]
+fn chain_with_map_and_reduce_exact_is_optimal() {
+    // 4 compute vertices: contraction -> elementwise -> map -> reduce;
+    // the cross-vertex repartition terms are where greedy goes wrong.
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![16, 16]);
+    let b = g.input("B", vec![16, 16]);
+    let c = g.input("C", vec![16, 16]);
+    let ab = g
+        .add(
+            "AB",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let e = g
+        .add(
+            "E",
+            EinSum::elementwise(labels("i k"), labels("i k"), JoinOp::Add),
+            vec![ab, c],
+        )
+        .unwrap();
+    let r = g
+        .add("R", EinSum::map(labels("i k"), UnaryOp::Relu), vec![e])
+        .unwrap();
+    g.add(
+        "S",
+        EinSum::reduce(labels("i k"), labels("i"), AggOp::Sum),
+        vec![r],
+    )
+    .unwrap();
+    check_graph("map-reduce-chain", &g);
+}

@@ -1,0 +1,216 @@
+//! Differential and determinism tests for the real-execution schedulers.
+//!
+//! These lock in the two invariants the work-stealing rewrite must
+//! preserve (see `sim/cluster.rs` module docs):
+//!
+//! 1. **Differential**: for randomized graphs, partitioning vectors, and
+//!    worker counts, `Cluster::execute` equals single-threaded dense
+//!    evaluation (`runtime::native::eval_einsum` over the topo order) in
+//!    BOTH execution modes;
+//! 2. **Determinism**: repeated runs of the same plan produce *bitwise*
+//!    identical tensors regardless of thread interleaving, and the two
+//!    modes agree bitwise with each other — aggregation combines in fixed
+//!    dep order, never completion order.
+
+use eindecomp::decomp::Plan;
+use eindecomp::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use eindecomp::einsum::graph::{EinGraph, VertexId};
+use eindecomp::einsum::label::Label;
+use eindecomp::runtime::native::eval_einsum;
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::{Cluster, ExecMode, NetworkProfile};
+use eindecomp::tensor::Tensor;
+use eindecomp::util::Rng;
+use std::collections::HashMap;
+
+/// Dense single-threaded reference: evaluate every vertex in topo order.
+fn dense_eval(g: &EinGraph, inputs: &HashMap<VertexId, Tensor>) -> HashMap<VertexId, Tensor> {
+    let mut vals: HashMap<VertexId, Tensor> = inputs.clone();
+    for v in g.topo_order() {
+        let vert = g.vertex(v);
+        if matches!(vert.op, EinSum::Input) {
+            continue;
+        }
+        let ins: Vec<Tensor> = vert.inputs.iter().map(|i| vals[i].clone()).collect();
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let t = eval_einsum(&vert.op, &refs).unwrap();
+        vals.insert(v, t);
+    }
+    vals
+}
+
+/// Random diamond-ish DAG over 2-D tensors plus a random per-vertex plan.
+/// Returns (graph, plan, inputs, output vertices). The graph mixes
+/// contractions (agg tasks), elementwise joins, and unary maps; random
+/// mismatched partitionings force repartition tasks.
+fn random_case(seed: u64) -> (EinGraph, Plan, HashMap<VertexId, Tensor>, Vec<VertexId>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let s = 4 + rng.next_below(9); // 4..12
+    let (i, j, k, m) = (
+        Label::new("i"),
+        Label::new("j"),
+        Label::new("k"),
+        Label::new("m"),
+    );
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![s, s]);
+    let b = g.input("B", vec![s, s]);
+    let c = g.input("C", vec![s, s]);
+    let z1 = g
+        .add(
+            "Z1",
+            EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]),
+            vec![a, b],
+        )
+        .unwrap();
+    let z2 = g
+        .add(
+            "Z2",
+            EinSum::contraction(vec![i, k], vec![k, m], vec![i, m]),
+            vec![z1, c],
+        )
+        .unwrap();
+    // Z1 consumed twice (diamond) — its tiles feed Z2 and Z3 under
+    // different required partitionings.
+    let z3 = g
+        .add(
+            "Z3",
+            EinSum::elementwise(vec![i, k], vec![i, k], JoinOp::Add),
+            vec![z1, z2],
+        )
+        .unwrap();
+    let z4 = g
+        .add("Z4", EinSum::map(vec![i, k], UnaryOp::Relu), vec![z3])
+        .unwrap();
+    // reduce with Max exercises non-Sum aggregation across tiles
+    let z5 = g
+        .add("Z5", EinSum::reduce(vec![i, k], vec![i], AggOp::Max), vec![z4])
+        .unwrap();
+
+    let mut plan = Plan::default();
+    let mut rand_d = |nlabels: usize| -> Vec<usize> {
+        (0..nlabels)
+            .map(|_| 1 + rng.next_below(s.min(4)))
+            .collect()
+    };
+    plan.parts.insert(z1, rand_d(3)); // unique labels [i, j, k]
+    plan.parts.insert(z2, rand_d(3)); // [i, k, m]
+    plan.parts.insert(z3, rand_d(2)); // [i, k]
+    plan.parts.insert(z4, rand_d(2)); // [i, k]
+    plan.parts.insert(z5, rand_d(2)); // [i, k]
+    plan.finalize_inputs(&g);
+
+    let mut inputs = HashMap::new();
+    inputs.insert(a, Tensor::random(&[s, s], seed * 7 + 1));
+    inputs.insert(b, Tensor::random(&[s, s], seed * 7 + 2));
+    inputs.insert(c, Tensor::random(&[s, s], seed * 7 + 3));
+    let outs = g.outputs();
+    (g, plan, inputs, outs)
+}
+
+#[test]
+fn differential_random_graphs_both_modes() {
+    let engine = NativeEngine::new();
+    for seed in 0..30u64 {
+        let (g, plan, inputs, outs) = random_case(seed);
+        let want = dense_eval(&g, &inputs);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xABCD);
+        let workers = 1 + rng.next_below(6);
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            let cluster =
+                Cluster::new(workers, NetworkProfile::loopback()).with_exec_mode(mode);
+            let (got, rep) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+            for &o in &outs {
+                assert!(
+                    got[&o].allclose(&want[&o], 1e-3, 1e-4),
+                    "seed {seed} workers {workers} {mode:?}: output {o} diverged, \
+                     max diff {}",
+                    got[&o].max_abs_diff(&want[&o]).unwrap()
+                );
+            }
+            assert_eq!(rep.tasks, cluster.lower(&g, &plan).unwrap().len());
+        }
+    }
+}
+
+#[test]
+fn work_stealing_is_bitwise_deterministic() {
+    let engine = NativeEngine::new();
+    for seed in [3u64, 11, 19] {
+        let (g, plan, inputs, outs) = random_case(seed);
+        let cluster = Cluster::new(4, NetworkProfile::loopback())
+            .with_exec_mode(ExecMode::WorkStealing);
+        let (first, _) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+        for run in 1..6 {
+            let (again, _) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+            for &o in &outs {
+                // Tensor PartialEq is element-exact: bitwise determinism
+                assert_eq!(first[&o], again[&o], "seed {seed} run {run} output {o}");
+            }
+        }
+    }
+}
+
+#[test]
+fn level_barrier_is_bitwise_deterministic() {
+    let engine = NativeEngine::new();
+    let (g, plan, inputs, outs) = random_case(5);
+    let cluster =
+        Cluster::new(4, NetworkProfile::loopback()).with_exec_mode(ExecMode::LevelBarrier);
+    let (first, _) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+    for _ in 0..4 {
+        let (again, _) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+        for &o in &outs {
+            assert_eq!(first[&o], again[&o]);
+        }
+    }
+}
+
+#[test]
+fn modes_agree_bitwise_across_worker_counts() {
+    let engine = NativeEngine::new();
+    for seed in [2u64, 13] {
+        let (g, plan, inputs, outs) = random_case(seed);
+        for workers in [1usize, 2, 5, 8] {
+            let ws = Cluster::new(workers, NetworkProfile::loopback())
+                .with_exec_mode(ExecMode::WorkStealing)
+                .execute(&g, &plan, &engine, &inputs)
+                .unwrap()
+                .0;
+            let lb = Cluster::new(workers, NetworkProfile::loopback())
+                .with_exec_mode(ExecMode::LevelBarrier)
+                .execute(&g, &plan, &engine, &inputs)
+                .unwrap()
+                .0;
+            for &o in &outs {
+                assert_eq!(ws[&o], lb[&o], "seed {seed} workers {workers} output {o}");
+            }
+        }
+    }
+}
+
+/// Both modes report identical *modeled* accounting for the same plan —
+/// the scheduler choice must not perturb ExecReport's sim/bytes ledger.
+#[test]
+fn modeled_accounting_independent_of_exec_mode() {
+    let engine = NativeEngine::new();
+    let (g, plan, inputs, _) = random_case(21);
+    let base = Cluster::new(4, NetworkProfile::loopback());
+    let (_, ws) = base
+        .clone()
+        .with_exec_mode(ExecMode::WorkStealing)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap();
+    let (_, lb) = base
+        .with_exec_mode(ExecMode::LevelBarrier)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap();
+    assert_eq!(ws.bytes_moved, lb.bytes_moved);
+    assert_eq!(ws.bytes_join, lb.bytes_join);
+    assert_eq!(ws.bytes_agg, lb.bytes_agg);
+    assert_eq!(ws.bytes_repart, lb.bytes_repart);
+    assert_eq!(ws.kernel_calls, lb.kernel_calls);
+    assert_eq!(ws.tasks, lb.tasks);
+    assert!((ws.sim_makespan_s - lb.sim_makespan_s).abs() < 1e-12);
+    assert!(ws.wall_s > 0.0 && lb.wall_s > 0.0);
+}
