@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks used by the §Perf pass (EXPERIMENTS.md):
-//! GEMM throughput, permutation bandwidth, einsum dispatch, lowering and
-//! planning rates, and the real-execution scheduler A/B (work stealing vs
-//! the retained level-barrier reference). Run with `cargo bench micro`
+//! GEMM throughput, the GEMM intra-op A/B (serial vs row-sharded packed
+//! kernel at 1/2/4/8 shards), permutation bandwidth, einsum dispatch,
+//! lowering and planning rates, and the real-execution scheduler A/B
+//! (work stealing vs the retained level-barrier reference). Run with
+//! `cargo bench micro`
 //! (harness=false). Set `EINDECOMP_SMOKE=1` for the capped configuration
 //! used by `rust/scripts/bench_smoke.sh` / CI.
 
@@ -9,11 +11,12 @@ use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
 use eindecomp::einsum::expr::EinSum;
 use eindecomp::einsum::label::labels;
 use eindecomp::models::llama::{llama_graph, LlamaConfig};
-use eindecomp::runtime::gemm::sgemm;
+use eindecomp::runtime::gemm::{sgemm, sgemm_scoped};
 use eindecomp::runtime::native::eval_einsum;
 use eindecomp::runtime::{Backend, DispatchEngine, KernelEngine};
 use eindecomp::sim::{Cluster, ExecMode, NetworkProfile};
 use eindecomp::tensor::Tensor;
+use eindecomp::util::with_intra_op_pool;
 
 fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     // warmup
@@ -43,6 +46,36 @@ fn main() {
         );
         let gflops = 2.0 * (n as f64).powi(3) / dt / 1e9;
         println!("sgemm {n:>5}^3: {:>8.2} ms  {gflops:>7.2} GFLOP/s", dt * 1e3);
+    }
+
+    // 1b. GEMM intra-op A/B: serial packed kernel vs row-sharded under a
+    // standalone intra-op pool at 1/2/4/8 shards. The acceptance line the
+    // docs quote (rust/README.md) is the 8-shard speedup; outputs are
+    // asserted bitwise-identical to serial while we are at it.
+    let n = if smoke { 256 } else { 512 };
+    let a = Tensor::random(&[n, n], 11);
+    let b = Tensor::random(&[n, n], 12);
+    let (ad, bd) = (a.data(), b.data());
+    let reps_ab = if smoke { 10 } else { 5 };
+    let mut serial_c = vec![0.0f32; n * n];
+    let serial_dt = time(|| sgemm(n, n, n, 1.0, ad, bd, 0.0, &mut serial_c), reps_ab);
+    println!(
+        "sgemm {n:>5}^3 serial:     {:>8.2} ms  {:>7.2} GFLOP/s",
+        serial_dt * 1e3,
+        2.0 * (n as f64).powi(3) / serial_dt / 1e9
+    );
+    for shards in [1usize, 2, 4, 8] {
+        let mut c = vec![0.0f32; n * n];
+        let dt = with_intra_op_pool(shards, |scope| {
+            time(|| sgemm_scoped(n, n, n, 1.0, ad, bd, 0.0, &mut c, scope), reps_ab)
+        });
+        assert_eq!(c, serial_c, "sharded GEMM diverged at {shards} shards");
+        println!(
+            "sgemm {n:>5}^3 intra-op {shards}: {:>8.2} ms  {:>7.2} GFLOP/s  speedup {:>5.2}x",
+            dt * 1e3,
+            2.0 * (n as f64).powi(3) / dt / 1e9,
+            serial_dt / dt
+        );
     }
 
     // 2. permutation bandwidth (the "unpack" step)

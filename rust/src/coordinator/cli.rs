@@ -4,6 +4,7 @@
 //! ```text
 //! eindecomp plan    --model chain|chain-skewed|ffnn|llama --p 16 [--scale N] [--compare]
 //! eindecomp run     --model ...         --workers 8 [--backend native|auto]
+//!                   [--exec steal|barrier] [--intra-op N]
 //! eindecomp program --file prog.ein     [--p 8] [--run]
 //! eindecomp help
 //! ```
@@ -180,6 +181,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         backend,
         network: NetworkProfile::cpu_cluster(),
         exec_mode,
+        // 0 = match the executor's thread count (see DriverConfig docs).
+        intra_op: args.get_usize("intra-op", 0),
         ..Default::default()
     };
     let driver = Driver::new(cfg)?;
@@ -238,6 +241,7 @@ USAGE:
                     [--scale N] [--batch N] [--seq N] [--shrink N]
   eindecomp run     --model ... [--workers N] [--p N] [--strategy S]
                     [--backend native|auto|pjrt] [--exec steal|barrier]
+                    [--intra-op N]   (kernel shard fan-out; 0 = threads)
   eindecomp program --file prog.ein [--p N] [--run]
 
 STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,

@@ -32,6 +32,11 @@ pub struct DriverConfig {
     /// Host-thread scheduler for real execution (work stealing by
     /// default; [`ExecMode::LevelBarrier`] is the reference mode).
     pub exec_mode: ExecMode,
+    /// Intra-op shard fan-out for real execution (`--intra-op` on the
+    /// CLI): how many independent shards each kernel splits into so idle
+    /// workers can steal them. `0` (default) matches the executor's
+    /// thread count. Bitwise-neutral — see [`Cluster::with_intra_op`].
+    pub intra_op: usize,
     pub roles: LabelRoles,
 }
 
@@ -46,6 +51,7 @@ impl Default for DriverConfig {
             network: NetworkProfile::cpu_cluster(),
             placement: Policy::LocalityGreedy,
             exec_mode: ExecMode::WorkStealing,
+            intra_op: 0,
             roles: LabelRoles::by_convention(),
         }
     }
@@ -97,6 +103,7 @@ impl Driver {
         let mut cluster = Cluster::new(cfg.workers, cfg.network.clone());
         cluster.placement = cfg.placement;
         cluster.exec_mode = cfg.exec_mode;
+        cluster.intra_op = cfg.intra_op;
         Ok(Driver {
             cfg,
             engine,

@@ -171,6 +171,36 @@ impl From<usize> for VertexId {
 }
 
 /// Top-level entry: plan an EinGraph with the EinDecomp algorithm.
+///
+/// Picks one partitioning vector per non-input vertex (parallel to the
+/// vertex's unique labels, product exactly `p` after rounding `p` up to a
+/// power of two) minimizing the §7 communication upper bound, then
+/// derives input pre-partitionings and the plan's predicted cost.
+///
+/// ```
+/// use eindecomp::decomp::{plan_graph, PlannerConfig};
+/// use eindecomp::einsum::expr::EinSum;
+/// use eindecomp::einsum::graph::EinGraph;
+/// use eindecomp::einsum::label::labels;
+///
+/// // Z[i,k] = sum_j A[i,j] * B[j,k], planned for p = 4 kernel calls.
+/// let mut g = EinGraph::new();
+/// let a = g.input("A", vec![64, 64]);
+/// let b = g.input("B", vec![64, 64]);
+/// let z = g.add(
+///     "Z",
+///     EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+///     vec![a, b],
+/// )?;
+/// let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() })?;
+///
+/// // d runs over Z's unique labels (i, j, k) and yields exactly p tiles.
+/// let d = &plan.parts[&z];
+/// assert_eq!(d.len(), 3);
+/// assert_eq!(d.iter().product::<usize>(), 4);
+/// assert!(plan.predicted_cost > 0.0);
+/// # Ok::<(), eindecomp::Error>(())
+/// ```
 pub fn plan_graph(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
     let mode = match cfg.mode {
         PlanMode::Auto => {

@@ -11,11 +11,41 @@
 //!     -> EinDecomp planner (decomp::)  -- choose a partitioning vector per vertex
 //!     -> TaskGraph (taskgraph::)       -- lower to kernel calls + transfers, place
 //!     -> simulated cluster (sim::)     -- p workers, byte-accurate network model,
-//!                                         real execution via a work-stealing
-//!                                         task-graph scheduler (util::execute_dag)
-//!     -> kernels (runtime::)           -- pure-rust native kernels (in-tree GEMM);
-//!                                         the PJRT artifact path is a registry-only
-//!                                         stub in this dependency-free build
+//!                                         real execution via a nested work-stealing
+//!                                         scheduler (util::execute_dag_scoped):
+//!                                         idle workers steal whole tasks AND
+//!                                         intra-op shards of running kernels
+//!     -> kernels (runtime::)           -- pure-rust native kernels (in-tree packed
+//!                                         intra-op GEMM); the PJRT artifact path is
+//!                                         a registry-only stub in this build
+//! ```
+//!
+//! End to end, in code — declare, plan, execute, verify:
+//!
+//! ```
+//! use eindecomp::prelude::*;
+//! use std::collections::HashMap;
+//!
+//! // Declare: Z[i,k] = sum_j A[i,j] * B[j,k] over 32x32 inputs.
+//! let mut g = EinGraph::new();
+//! let a = g.input("A", vec![32, 32]);
+//! let b = g.input("B", vec![32, 32]);
+//! let z = g.add(
+//!     "Z",
+//!     EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+//!     vec![a, b],
+//! )?;
+//!
+//! // Plan + execute on a 2-worker simulated cluster.
+//! let driver = Driver::new(DriverConfig { workers: 2, p: 2, ..Default::default() })?;
+//! let mut inputs = HashMap::new();
+//! inputs.insert(a, Tensor::random(&[32, 32], 1));
+//! inputs.insert(b, Tensor::random(&[32, 32], 2));
+//! let (outs, report) = driver.run(&g, &inputs)?;
+//!
+//! assert_eq!(outs[&z].shape(), &[32, 32]);
+//! assert!(report.exec.kernel_calls >= 2);
+//! # Ok::<(), eindecomp::Error>(())
 //! ```
 //!
 //! The tensor-relational algebra of the paper (join / aggregation /

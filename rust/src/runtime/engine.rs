@@ -8,6 +8,7 @@ use super::{Backend, KernelEngine};
 use crate::einsum::expr::EinSum;
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
+use crate::util::ShardScope;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -84,6 +85,12 @@ impl DispatchEngine {
 
 impl KernelEngine for DispatchEngine {
     fn eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.eval_scoped(op, inputs, &crate::util::serial_scope())
+    }
+
+    /// PJRT kernels are opaque AOT binaries and run as one shard; only
+    /// the native fallback forwards the scope for intra-op sharding.
+    fn eval_scoped(&self, op: &EinSum, inputs: &[&Tensor], scope: &ShardScope) -> Result<Tensor> {
         if let Some(pjrt) = &self.pjrt {
             match pjrt.try_eval(op, inputs)? {
                 Some(t) => {
@@ -101,7 +108,7 @@ impl KernelEngine for DispatchEngine {
             }
         }
         self.native_hits.fetch_add(1, Ordering::Relaxed);
-        self.native.eval(op, inputs)
+        self.native.eval_scoped(op, inputs, scope)
     }
 
     fn name(&self) -> &'static str {

@@ -5,9 +5,11 @@
 //! expression on concrete tile tensors. Two engines are provided:
 //!
 //! * [`native::NativeEngine`] — pure-rust evaluator with a batched-GEMM
-//!   fast path (`matrixmultiply`) for Mul/Sum contractions and a generic
-//!   loop-nest fallback for the extended `(+)`/`(x)` operator space. Used
-//!   as the always-available fallback and as a second correctness oracle.
+//!   fast path (the in-tree packed kernel in [`gemm`]) for Mul/Sum
+//!   contractions and a generic loop-nest fallback for the extended
+//!   `(+)`/`(x)` operator space. Used as the always-available fallback,
+//!   as a second correctness oracle, and — through
+//!   [`KernelEngine::eval_scoped`] — as the intra-op-parallel hot path.
 //! * [`pjrt::PjrtEngine`] — loads AOT-compiled HLO artifacts produced by
 //!   the python/jax/Pallas compile path (`make artifacts`) and executes
 //!   them on the PJRT CPU client. Python never runs on this path.
@@ -23,6 +25,7 @@ pub mod pjrt;
 use crate::einsum::expr::EinSum;
 use crate::error::Result;
 use crate::tensor::Tensor;
+use crate::util::ShardScope;
 
 /// Which kernel backend to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +42,18 @@ pub enum Backend {
 /// This is the paper's kernel function `K` generalized to all vertex kinds.
 pub trait KernelEngine: Send + Sync {
     fn eval(&self, op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor>;
+
+    /// Evaluate with an intra-op [`ShardScope`]: engines that can split a
+    /// kernel into independent shards (row blocks of a GEMM, batch
+    /// entries of a BMM, chunks of an elementwise map) publish them
+    /// through `scope` so idle executor workers help. Results must be
+    /// bitwise-identical to [`KernelEngine::eval`] — sharding is a
+    /// scheduling choice, never a numerics choice. The default ignores
+    /// the scope and evaluates serially.
+    fn eval_scoped(&self, op: &EinSum, inputs: &[&Tensor], scope: &ShardScope) -> Result<Tensor> {
+        let _ = scope;
+        self.eval(op, inputs)
+    }
 
     /// Human-readable identifier for reports.
     fn name(&self) -> &'static str;

@@ -8,12 +8,26 @@
 //! labels private to one operand) fall back to a generic loop nest over the
 //! full iteration space, which implements the extended EinSum semantics
 //! exactly.
+//!
+//! # Intra-op sharding
+//!
+//! Every evaluation path accepts a [`ShardScope`] (via
+//! [`eval_einsum_scoped`]) and splits itself into independent shards that
+//! idle executor workers steal: the BMM path shards across the batch
+//! dimension or (for small batches) across GEMM row blocks, the generic
+//! loop nest and the unary reduction shard over the leading index-space
+//! dimension when it maps to an output label, and pure elementwise maps
+//! chunk their buffer. All shard splits are chosen deterministically from
+//! the problem shape and write disjoint output regions in the serial
+//! kernel's per-cell order, so sharded results are **bitwise-identical**
+//! to serial ones for every intra-op degree (`tests/gemm_parallel.rs`).
 
 use super::KernelEngine;
 use crate::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
 use crate::einsum::label::{project, Label, LabelList};
 use crate::error::{Error, Result};
 use crate::tensor::{index_space, strides_of, Tensor};
+use crate::util::{chunk_bounds, serial_scope, ShardScope, SyncPtr, SHARD_MIN};
 
 /// Pure-rust kernel engine. Stateless and cheap to clone.
 #[derive(Clone, Debug, Default)]
@@ -30,13 +44,24 @@ impl KernelEngine for NativeEngine {
         eval_einsum(op, inputs)
     }
 
+    fn eval_scoped(&self, op: &EinSum, inputs: &[&Tensor], scope: &ShardScope) -> Result<Tensor> {
+        eval_einsum_scoped(op, inputs, scope)
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
 }
 
-/// Evaluate an EinSum on dense tensors.
+/// Evaluate an EinSum on dense tensors (serial).
 pub fn eval_einsum(op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
+    eval_einsum_scoped(op, inputs, &serial_scope())
+}
+
+/// Evaluate an EinSum on dense tensors, sharding the hot loops through
+/// `scope` (see the module docs for which paths shard and why the result
+/// is bitwise-identical to [`eval_einsum`]).
+pub fn eval_einsum_scoped(op: &EinSum, inputs: &[&Tensor], scope: &ShardScope) -> Result<Tensor> {
     match op {
         EinSum::Input => Err(Error::InvalidEinsum(
             "Input vertices are not evaluated".into(),
@@ -45,7 +70,7 @@ pub fn eval_einsum(op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
             if inputs.len() != 1 {
                 return Err(Error::InvalidEinsum("unary op needs 1 input".into()));
             }
-            eval_unary(lx, lz, *u, *agg, inputs[0])
+            eval_unary(lx, lz, *u, *agg, inputs[0], scope)
         }
         EinSum::Binary {
             lx,
@@ -57,7 +82,7 @@ pub fn eval_einsum(op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
             if inputs.len() != 2 {
                 return Err(Error::InvalidEinsum("binary op needs 2 inputs".into()));
             }
-            eval_binary(lx, ly, lz, *join, *agg, inputs[0], inputs[1])
+            eval_binary(lx, ly, lz, *join, *agg, inputs[0], inputs[1], scope)
         }
     }
 }
@@ -69,6 +94,7 @@ fn eval_unary(
     u: UnaryOp,
     agg: AggOp,
     x: &Tensor,
+    scope: &ShardScope,
 ) -> Result<Tensor> {
     if x.rank() != lx.len() {
         return Err(Error::Shape(format!(
@@ -85,8 +111,25 @@ fn eval_unary(
             .collect();
         let mut t = x.permute(&perm)?;
         if !matches!(u, UnaryOp::Identity) {
-            for v in t.data_mut() {
-                *v = u.apply(*v);
+            let data = t.data_mut();
+            let p = scope.parallelism();
+            if p > 1 && data.len() >= SHARD_MIN {
+                // Elementwise map: any chunking is bitwise-identical;
+                // chunk bounds are still fixed by (len, p) for clarity.
+                let len = data.len();
+                let ptr = SyncPtr::new(data.as_mut_ptr());
+                scope.fork_join(p, |ci| {
+                    let (lo, hi) = chunk_bounds(len, p, ci);
+                    // SAFETY: [lo, hi) chunks are pairwise disjoint.
+                    let s = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(lo), hi - lo) };
+                    for v in s {
+                        *v = u.apply(*v);
+                    }
+                });
+            } else {
+                for v in data {
+                    *v = u.apply(*v);
+                }
             }
         }
         return Ok(t);
@@ -100,6 +143,39 @@ fn eval_unary(
         .map(|l| lx.iter().position(|m| m == l).unwrap())
         .collect();
     let xdata = x.data();
+    let p = scope.parallelism();
+    // Shard over the leading input dimension when it survives into the
+    // output: distinct leading coordinates then touch distinct output
+    // cells (disjoint writes), and each cell's accumulation order stays
+    // exactly the serial row-major order (bitwise-identical).
+    let dim0_in_out = !lx.is_empty() && lz.contains(&lx[0]);
+    if p > 1 && dim0_in_out && x.shape()[0] >= 2 && x.len() >= SHARD_MIN {
+        let d0 = x.shape()[0];
+        let rest: Vec<usize> = x.shape()[1..].to_vec();
+        let rest_len: usize = rest.iter().product();
+        let shards = p.min(d0);
+        let optr = SyncPtr::new(out.data_mut().as_mut_ptr());
+        scope.fork_join(shards, |s| {
+            let (lo, hi) = chunk_bounds(d0, shards, s);
+            for i0 in lo..hi {
+                for (r, ridx) in index_space(&rest).enumerate() {
+                    let flat = i0 * rest_len + r;
+                    let mut o = 0usize;
+                    for (st, &pz) in out_strides.iter().zip(&zpos) {
+                        o += st * if pz == 0 { i0 } else { ridx[pz - 1] };
+                    }
+                    // SAFETY: o depends injectively on i0 for fixed ridx
+                    // (lx[0] is an output coordinate), so shards write
+                    // disjoint cells.
+                    unsafe {
+                        let cell = optr.get().add(o);
+                        *cell = agg.combine(*cell, u.apply(xdata[flat]));
+                    }
+                }
+            }
+        });
+        return Ok(out);
+    }
     let out_data = out.data_mut();
     for (flat, idx) in index_space(x.shape()).enumerate() {
         let mut o = 0usize;
@@ -150,6 +226,7 @@ fn bmm_plan(lx: &LabelList, ly: &LabelList, lz: &LabelList) -> Option<BmmPlan> {
 }
 
 /// Binary EinSum evaluation.
+#[allow(clippy::too_many_arguments)]
 fn eval_binary(
     lx: &LabelList,
     ly: &LabelList,
@@ -158,6 +235,7 @@ fn eval_binary(
     agg: AggOp,
     x: &Tensor,
     y: &Tensor,
+    scope: &ShardScope,
 ) -> Result<Tensor> {
     if x.rank() != lx.len() || y.rank() != ly.len() {
         return Err(Error::Shape(format!(
@@ -181,14 +259,21 @@ fn eval_binary(
     // GEMM fast path: Mul/Sum with a clean batch/m/n/k split.
     if join == JoinOp::Mul && agg == AggOp::Sum {
         if let Some(plan) = bmm_plan(lx, ly, lz) {
-            return eval_bmm(&plan, lx, ly, lz, x, y);
+            return eval_bmm(&plan, lx, ly, lz, x, y, scope);
         }
     }
-    eval_binary_generic(lx, ly, lz, join, agg, x, y)
+    eval_binary_generic_scoped(lx, ly, lz, join, agg, x, y, scope)
 }
 
 /// Permute-to-BMM path: X -> [B, M, K], Y -> [B, K, N], sgemm per batch,
 /// result [B, M, N] -> permute to l_Z order.
+///
+/// Intra-op sharding: a batch dimension at least as wide as the scope's
+/// fan-out shards across batch entries (disjoint `[b, m, n]` slabs,
+/// serial kernel per slab); smaller batches run
+/// [`super::gemm::sgemm_scoped`] per entry, sharding GEMM row blocks
+/// instead. Both splits are bitwise-
+/// identical to the serial loop because the per-entry kernel is.
 fn eval_bmm(
     plan: &BmmPlan,
     lx: &LabelList,
@@ -196,6 +281,7 @@ fn eval_bmm(
     lz: &LabelList,
     x: &Tensor,
     y: &Tensor,
+    scope: &ShardScope,
 ) -> Result<Tensor> {
     let dim_of_x = |l: &Label| x.shape()[lx.iter().position(|m| m == l).unwrap()];
     let dim_of_y = |l: &Label| y.shape()[ly.iter().position(|m| m == l).unwrap()];
@@ -233,11 +319,33 @@ fn eval_bmm(
     let mut out = vec![0.0f32; b * m * n];
     let xd = xc.data();
     let yd = yc.data();
-    for bi in 0..b {
-        let xo = &xd[bi * m * k..(bi + 1) * m * k];
-        let yo = &yd[bi * k * n..(bi + 1) * k * n];
-        let oo = &mut out[bi * m * n..(bi + 1) * m * n];
-        super::gemm::sgemm(m, k, n, 1.0, xo, yo, 0.0, oo);
+    let p = scope.parallelism();
+    if p > 1 && b >= p && b * m * k * n >= SHARD_MIN {
+        // Wide batch: at most p shards, each a contiguous batch range
+        // running the serial GEMM per entry (bounded fork-join overhead,
+        // matching every other sharded path's p-way split).
+        let optr = SyncPtr::new(out.as_mut_ptr());
+        scope.fork_join(p, |s| {
+            let (blo, bhi) = chunk_bounds(b, p, s);
+            let base = optr.get();
+            for bi in blo..bhi {
+                let xo = &xd[bi * m * k..(bi + 1) * m * k];
+                let yo = &yd[bi * k * n..(bi + 1) * k * n];
+                // SAFETY: batch slabs [bi*m*n, (bi+1)*m*n) are disjoint
+                // across the disjoint batch ranges.
+                let oo = unsafe { std::slice::from_raw_parts_mut(base.add(bi * m * n), m * n) };
+                super::gemm::sgemm(m, k, n, 1.0, xo, yo, 0.0, oo);
+            }
+        });
+    } else {
+        // Narrow batch (typically b == 1 after decomposition): shard the
+        // GEMM's M row blocks instead.
+        for bi in 0..b {
+            let xo = &xd[bi * m * k..(bi + 1) * m * k];
+            let yo = &yd[bi * k * n..(bi + 1) * k * n];
+            let oo = &mut out[bi * m * n..(bi + 1) * m * n];
+            super::gemm::sgemm_scoped(m, k, n, 1.0, xo, yo, 0.0, oo, scope);
+        }
     }
     // canonical output label order: [batch, m, n]
     let z_canon: LabelList = plan
@@ -266,7 +374,9 @@ fn eval_bmm(
 /// Generic loop nest: iterate the joint index space of all unique labels,
 /// apply the join scalar function, aggregate into the output cell. Exact
 /// for every `(+)`/`(x)` pair, including broadcast joins where one operand
-/// indexes a subset of the labels.
+/// indexes a subset of the labels. Serial oracle for the BMM fast path —
+/// production callers go through the scoped form below.
+#[cfg(test)]
 fn eval_binary_generic(
     lx: &LabelList,
     ly: &LabelList,
@@ -275,6 +385,27 @@ fn eval_binary_generic(
     agg: AggOp,
     x: &Tensor,
     y: &Tensor,
+) -> Result<Tensor> {
+    eval_binary_generic_scoped(lx, ly, lz, join, agg, x, y, &serial_scope())
+}
+
+/// [`eval_binary_generic`] with intra-op sharding: when the *leading*
+/// unique label maps to an output coordinate, the iteration splits over
+/// that label's range. Each shard then writes a disjoint set of output
+/// cells, and every cell still receives its contributions in the serial
+/// row-major order (its leading coordinate is fixed), so the result is
+/// bitwise-identical to the serial nest. A leading label that is reduced
+/// away (no disjoint split exists along it) falls back to serial.
+#[allow(clippy::too_many_arguments)]
+fn eval_binary_generic_scoped(
+    lx: &LabelList,
+    ly: &LabelList,
+    lz: &LabelList,
+    join: JoinOp,
+    agg: AggOp,
+    x: &Tensor,
+    y: &Tensor,
+    scope: &ShardScope,
 ) -> Result<Tensor> {
     let uniq = crate::einsum::label::concat_dedup(lx, ly);
     // bound of each unique label
@@ -307,29 +438,85 @@ fn eval_binary_generic(
 
     let xd = x.data();
     let yd = y.data();
-    let od = out.data_mut();
-    // Odometer over ubound, maintaining the three flat offsets incrementally.
     let rank = uniq.len();
     if ubound.iter().any(|&b| b == 0) {
         return Ok(out);
     }
+    if rank == 0 {
+        let od = out.data_mut();
+        od[0] = agg.combine(od[0], join.apply(xd[0], yd[0]));
+        return Ok(out);
+    }
+    let total: usize = ubound.iter().product();
+    let p = scope.parallelism();
+    // Output strides are never 0, so jz[0] != 0 iff uniq[0] is in l_Z.
+    let od = SyncPtr::new(out.data_mut().as_mut_ptr());
+    if p > 1 && jz[0] != 0 && ubound[0] >= 2 && total >= SHARD_MIN {
+        let shards = p.min(ubound[0]);
+        scope.fork_join(shards, |s| {
+            let (lo, hi) = chunk_bounds(ubound[0], shards, s);
+            // SAFETY: uniq[0] is an output coordinate, so disjoint
+            // leading ranges write disjoint output cells.
+            unsafe { generic_nest(lo, hi, &ubound, &jx, &jy, &jz, xd, yd, od.get(), join, agg) };
+        });
+    } else {
+        let hi = ubound[0];
+        // SAFETY: single caller, exclusive access to the output buffer.
+        unsafe { generic_nest(0, hi, &ubound, &jx, &jy, &jz, xd, yd, od.get(), join, agg) };
+    }
+    Ok(out)
+}
+
+/// Odometer over the joint index space with the leading dimension
+/// restricted to `[lo, hi)`, maintaining the three flat offsets
+/// incrementally.
+///
+/// # Safety
+///
+/// `od` must be valid for the whole output buffer, and concurrent callers
+/// must use disjoint `[lo, hi)` ranges whose cells do not overlap (which
+/// holds exactly when `jz[0] != 0`, i.e. the leading unique label is an
+/// output coordinate).
+#[allow(clippy::too_many_arguments)]
+unsafe fn generic_nest(
+    lo: usize,
+    hi: usize,
+    ubound: &[usize],
+    jx: &[usize],
+    jy: &[usize],
+    jz: &[usize],
+    xd: &[f32],
+    yd: &[f32],
+    od: *mut f32,
+    join: JoinOp,
+    agg: AggOp,
+) {
+    if lo >= hi {
+        return;
+    }
+    let rank = ubound.len();
     let mut idx = vec![0usize; rank];
-    let (mut ox, mut oy, mut oz) = (0usize, 0usize, 0usize);
+    idx[0] = lo;
+    let (mut ox, mut oy, mut oz) = (lo * jx[0], lo * jy[0], lo * jz[0]);
     loop {
-        od[oz] = agg.combine(od[oz], join.apply(xd[ox], yd[oy]));
+        *od.add(oz) = agg.combine(*od.add(oz), join.apply(xd[ox], yd[oy]));
         // increment
         let mut d = rank;
         loop {
             if d == 0 {
-                return Ok(out);
+                return;
             }
             d -= 1;
             idx[d] += 1;
             ox += jx[d];
             oy += jy[d];
             oz += jz[d];
-            if idx[d] < ubound[d] {
+            let bound = if d == 0 { hi } else { ubound[d] };
+            if idx[d] < bound {
                 break;
+            }
+            if d == 0 {
+                return;
             }
             // reset dimension d
             ox -= jx[d] * ubound[d];

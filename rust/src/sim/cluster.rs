@@ -28,12 +28,21 @@
 //!   just produced;
 //! * idle threads steal from the front of other deques (oldest-first), so
 //!   independent subgraphs overlap instead of waiting for a level barrier;
+//! * threads that find no ready *task* steal **shards** of tasks other
+//!   workers are running (nested work stealing, see
+//!   [`crate::util::execute_dag_scoped`]): kernel bodies split their GEMM
+//!   row blocks, batch entries, elementwise chunks, and aggregation folds
+//!   into `intra_op`-many independent pieces, so a 2-vertex plan on 16
+//!   cores no longer runs at 2/16 utilization. The fan-out is set by
+//!   [`Cluster::with_intra_op`] (default: the executor's thread count);
 //! * task *results* are deterministic regardless of interleaving: each
 //!   task writes only its own `OnceLock` slot, kernel inputs are fixed by
-//!   the task graph, and aggregations combine their deps in the fixed
-//!   `deps` order — never in completion order. `cargo test` locks this in
-//!   with a bitwise-determinism differential suite (`tests/
-//!   scheduler_differential.rs`).
+//!   the task graph, aggregations combine their deps in the fixed `deps`
+//!   order — never in completion order — and every sharded kernel is
+//!   bitwise-identical to its serial form (shard boundaries are a pure
+//!   function of the problem shape). `cargo test` locks this in with
+//!   bitwise-determinism differential suites (`tests/
+//!   scheduler_differential.rs`, `tests/gemm_parallel.rs`).
 //!
 //! [`ExecMode::LevelBarrier`] retains the previous implementation — a
 //! persistent thread team synchronized per ASAP level with a barrier — as
@@ -59,6 +68,7 @@ use crate::taskgraph::placement::{place, Policy};
 use crate::taskgraph::{TaskGraph, TaskKind, TransferClass};
 use crate::tensor::Tensor;
 use crate::tra::relation::{tile_origin, tile_shape};
+use crate::util::{chunk_bounds, serial_scope, ShardScope, SyncPtr, SHARD_MIN};
 use std::collections::HashMap;
 use std::sync::OnceLock;
 
@@ -136,6 +146,12 @@ pub struct Cluster {
     /// Host-thread scheduling of real execution (modeled accounting is
     /// independent of this).
     pub exec_mode: ExecMode,
+    /// Intra-op shard fan-out for real execution under
+    /// [`ExecMode::WorkStealing`]: how many independent shards a kernel
+    /// splits into so idle workers can help. `0` (the default) means
+    /// "match the executor's thread count". Purely a scheduling knob —
+    /// results are bitwise-identical for every value.
+    pub intra_op: usize,
 }
 
 impl Cluster {
@@ -145,12 +161,20 @@ impl Cluster {
             net,
             placement: Policy::LocalityGreedy,
             exec_mode: ExecMode::WorkStealing,
+            intra_op: 0,
         }
     }
 
     /// Builder-style override of the real-execution scheduler.
     pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
         self.exec_mode = mode;
+        self
+    }
+
+    /// Builder-style override of the intra-op shard fan-out (`0` = match
+    /// the executor's thread count).
+    pub fn with_intra_op(mut self, intra_op: usize) -> Self {
+        self.intra_op = intra_op;
         self
     }
 
@@ -303,6 +327,10 @@ impl Cluster {
     /// Dependency-counted work-stealing execution (default mode). Input
     /// tiles are already materialized in `results`; their tasks are
     /// no-ops that exist only to release their consumers' counters.
+    ///
+    /// Kernel bodies receive the scheduler's [`ShardScope`] so idle
+    /// workers steal intra-op shards of running tasks — the fan-out is
+    /// `self.intra_op`, defaulting to the thread count.
     fn run_work_stealing(
         &self,
         tg: &TaskGraph,
@@ -318,14 +346,26 @@ impl Cluster {
         // its placed worker (mod nothing — out-of-range homes fall into
         // the shared injector, which is exactly the case threads < workers).
         let home: Vec<usize> = tg.tasks.iter().map(|t| t.worker).collect();
-        crate::util::execute_dag(&consumers, &indegree, &home, threads, |ti| {
-            if results[ti].get().is_some() {
-                return Ok(()); // pre-sliced input tile
-            }
-            let t = exec_task(tg, g, plan, engine, results, ti)?;
-            let _ = results[ti].set(t);
-            Ok(())
-        })
+        let intra_op = if self.intra_op == 0 {
+            threads
+        } else {
+            self.intra_op
+        };
+        crate::util::execute_dag_scoped(
+            &consumers,
+            &indegree,
+            &home,
+            threads,
+            intra_op,
+            |ti, scope| {
+                if results[ti].get().is_some() {
+                    return Ok(()); // pre-sliced input tile
+                }
+                let t = exec_task(tg, g, plan, engine, results, ti, scope)?;
+                let _ = results[ti].set(t);
+                Ok(())
+            },
+        )
     }
 
     /// Reference mode: one persistent thread team, synchronized per ASAP
@@ -347,7 +387,7 @@ impl Cluster {
                     if results[ti].get().is_some() {
                         continue;
                     }
-                    let t = exec_task(tg, g, plan, engine, results, ti)?;
+                    let t = exec_task(tg, g, plan, engine, results, ti, &serial_scope())?;
                     let _ = results[ti].set(t);
                 }
             }
@@ -370,7 +410,7 @@ impl Cluster {
                             if results[ti].get().is_some() {
                                 continue; // pre-sliced input tile
                             }
-                            match exec_task(tg, g, plan, engine, results, ti) {
+                            match exec_task(tg, g, plan, engine, results, ti, &serial_scope()) {
                                 Ok(t) => {
                                     let _ = results[ti].set(t);
                                 }
@@ -391,7 +431,9 @@ impl Cluster {
     }
 }
 
-/// Execute a single task; all deps already computed.
+/// Execute a single task; all deps already computed. `scope` is the
+/// executor's intra-op shard capability (serial in the level-barrier
+/// reference mode); every sharded path is bitwise-identical to serial.
 fn exec_task(
     tg: &TaskGraph,
     g: &EinGraph,
@@ -399,6 +441,7 @@ fn exec_task(
     engine: &dyn KernelEngine,
     results: &[OnceLock<Tensor>],
     ti: usize,
+    scope: &ShardScope,
 ) -> Result<Tensor> {
     let task = &tg.tasks[ti];
     let dep_tensor = |d: crate::taskgraph::TaskId| -> Result<&Tensor> {
@@ -417,7 +460,7 @@ fn exec_task(
                 .iter()
                 .map(|&d| dep_tensor(d))
                 .collect::<Result<_>>()?;
-            engine.eval(op, &ins)
+            engine.eval_scoped(op, &ins, scope)
         }
         TaskKind::Agg { vertex, .. } => {
             let agg = match &g.vertex(*vertex).op {
@@ -426,10 +469,43 @@ fn exec_task(
                 EinSum::Input => AggOp::Sum,
             };
             // Deterministic regardless of scheduling: combine in fixed
-            // `deps` order, never completion order.
+            // `deps` order, never completion order. Large folds chunk the
+            // output buffer across shards — each cell still combines its
+            // deps in the same order, so chunking cannot change bits.
             let mut acc = dep_tensor(task.deps[0])?.clone();
-            for &d in &task.deps[1..] {
-                acc.accumulate(dep_tensor(d)?, |a, b| agg.combine(a, b))?;
+            let rest: Vec<&Tensor> = task.deps[1..]
+                .iter()
+                .map(|&d| dep_tensor(d))
+                .collect::<Result<_>>()?;
+            let p = scope.parallelism();
+            if p > 1 && !rest.is_empty() && acc.len() >= SHARD_MIN {
+                for t in &rest {
+                    if t.shape() != acc.shape() {
+                        return Err(Error::Shape(format!(
+                            "aggregate shape mismatch: {:?} vs {:?}",
+                            acc.shape(),
+                            t.shape()
+                        )));
+                    }
+                }
+                let len = acc.len();
+                let aptr = SyncPtr::new(acc.data_mut().as_mut_ptr());
+                scope.fork_join(p, |ci| {
+                    let (lo, hi) = chunk_bounds(len, p, ci);
+                    let base = aptr.get();
+                    for t in &rest {
+                        let td = &t.data()[lo..hi];
+                        // SAFETY: [lo, hi) chunks are pairwise disjoint.
+                        let ad = unsafe { std::slice::from_raw_parts_mut(base.add(lo), hi - lo) };
+                        for (a, &b) in ad.iter_mut().zip(td) {
+                            *a = agg.combine(*a, b);
+                        }
+                    }
+                });
+            } else {
+                for t in &rest {
+                    acc.accumulate(t, |a, b| agg.combine(a, b))?;
+                }
             }
             Ok(acc)
         }
@@ -619,6 +695,37 @@ mod tests {
             .0;
         // bitwise: the two schedulers evaluate identical task graphs
         assert_eq!(ws[&z], lb[&z]);
+    }
+
+    #[test]
+    fn intra_op_degrees_agree_bitwise() {
+        // The intra-op fan-out is a scheduling knob only: every degree
+        // must produce identical bytes (shard boundaries are a pure
+        // function of shape, never of idleness).
+        let g = matmul_graph(48);
+        let z = g.by_name("Z").unwrap();
+        let mut plan = crate::decomp::Plan::default();
+        plan.parts.insert(z, vec![2, 2, 2]); // forces aggregation tasks
+        plan.finalize_inputs(&g);
+        let a = Tensor::random(&[48, 48], 8);
+        let b = Tensor::random(&[48, 48], 9);
+        let mut inputs = HashMap::new();
+        inputs.insert(g.by_name("A").unwrap(), a);
+        inputs.insert(g.by_name("B").unwrap(), b);
+        let engine = NativeEngine::new();
+        let base = Cluster::new(4, NetworkProfile::loopback())
+            .with_intra_op(1)
+            .execute(&g, &plan, &engine, &inputs)
+            .unwrap()
+            .0;
+        for intra in [0usize, 2, 8] {
+            let got = Cluster::new(4, NetworkProfile::loopback())
+                .with_intra_op(intra)
+                .execute(&g, &plan, &engine, &inputs)
+                .unwrap()
+                .0;
+            assert_eq!(got[&z], base[&z], "intra_op {intra}");
+        }
     }
 
     #[test]

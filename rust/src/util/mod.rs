@@ -1,7 +1,14 @@
 //! Small in-tree utilities replacing unavailable external crates: a
-//! deterministic RNG (no `rand`), a scoped thread-pool helper and a
-//! work-stealing DAG scheduler (no `rayon`/`crossbeam`), and a minimal
-//! JSON *writer* for reports (no `serde_json`).
+//! deterministic RNG (no `rand`), a scoped thread-pool helper, a
+//! work-stealing DAG scheduler with nested intra-op work stealing (no
+//! `rayon`/`crossbeam`), and a minimal JSON *writer* for reports (no
+//! `serde_json`).
+//!
+//! The intra-op layer ([`ShardRegistry`] / [`ShardScope`]) lets a running
+//! task publish independent *shards* of itself (e.g. row blocks of a
+//! GEMM) that idle scheduler workers pick up — so a plan with fewer ready
+//! tasks than cores still saturates the machine. See
+//! [`execute_dag_scoped`] for how the two levels compose.
 
 /// Deterministic SplitMix64 RNG — reproducible across runs and platforms.
 #[derive(Clone, Debug)]
@@ -79,6 +86,291 @@ where
     });
 }
 
+/// Shared pointer to an `f32` buffer that several shards write through.
+///
+/// # Safety contract (callers)
+///
+/// Every user must guarantee that concurrently-executing shards write
+/// **disjoint** index sets of the buffer, and that the buffer outlives
+/// the `fork_join` call that spawns the writers. The intra-op kernels
+/// (`runtime::gemm::sgemm_scoped`, the sharded paths in
+/// `runtime::native`, the chunked aggregation fold in `sim::cluster`)
+/// all split by fixed, deterministically-computed output regions, which
+/// is what makes their results bitwise-identical to the serial kernels.
+pub(crate) struct SyncPtr(*mut f32);
+
+// SAFETY: `SyncPtr` is only a capability to *derive* disjoint sub-slices;
+// disjointness is the caller's obligation (see the type docs).
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+impl SyncPtr {
+    pub(crate) fn new(ptr: *mut f32) -> Self {
+        SyncPtr(ptr)
+    }
+
+    /// The raw pointer. A *method* rather than a public field so that
+    /// closures capture `&SyncPtr` (which is `Sync`) instead of the bare
+    /// `*mut f32` (which is not) under edition-2021 disjoint capture.
+    #[inline]
+    pub(crate) fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Minimum output-element (or flop-proxy) count before a sharded kernel
+/// path is worth the fork-join hand-off; shared by every intra-op path
+/// (`runtime::gemm`, `runtime::native`, the aggregation fold in
+/// `sim::cluster`).
+pub(crate) const SHARD_MIN: usize = 4096;
+
+/// `[lo, hi)` bounds of chunk `i` when `len` items split into `parts`
+/// contiguous chunks. Chunks are pairwise disjoint and cover `[0, len)` —
+/// the single audited implementation every [`SyncPtr`]-based sharded
+/// writer's disjointness argument rests on. Deterministic in
+/// `(len, parts, i)` alone, which keeps chunked kernels bitwise-stable.
+#[inline]
+pub(crate) fn chunk_bounds(len: usize, parts: usize, i: usize) -> (usize, usize) {
+    (len * i / parts, len * (i + 1) / parts)
+}
+
+/// One published fork-join group: `total` shards, claimed by atomically
+/// incrementing `next`, completion tracked in `done`.
+struct ShardGroup {
+    /// Type-erased shard body, stored as a raw pointer (not a reference)
+    /// because helpers can briefly hold the `Arc` past the publisher's
+    /// return, and a live Rust *reference* to the then-dead closure frame
+    /// would violate validity rules even if never called. SAFETY: the
+    /// publisher removes the group from the registry and waits for
+    /// `done == total` before returning from `fork_join`, and once
+    /// `next >= total` no thread dereferences the pointer again.
+    f: *const (dyn Fn(usize) + Sync),
+    total: usize,
+    next: std::sync::atomic::AtomicUsize,
+    done: std::sync::atomic::AtomicUsize,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced under the
+// claim protocol above, and the erased closure itself is `Sync` (the
+// `fork_join` bound), so sharing the group across worker threads is sound.
+unsafe impl Send for ShardGroup {}
+unsafe impl Sync for ShardGroup {}
+
+/// Converts a panic in a shard body into a process abort. Unwinding out
+/// of the fork-join protocol is unsound either way: a publisher panic
+/// would free the erased closure while helpers can still claim shards
+/// (use-after-free), and a helper panic would leave `done < total`
+/// forever, hanging the publisher. Fail fast instead.
+struct AbortOnUnwind;
+
+impl Drop for AbortOnUnwind {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!("fatal: intra-op shard body panicked; aborting (see message above)");
+            std::process::abort();
+        }
+    }
+}
+
+/// Registry of in-flight intra-op shard groups, shared by all workers of
+/// one scheduler (or one standalone pool).
+///
+/// `intra_op` is the *configured* shard fan-out: kernels ask
+/// [`ShardScope::parallelism`] how many shards to split into, and the
+/// answer never depends on runtime idleness — shard boundaries must be a
+/// deterministic function of the problem shape so that results are
+/// reproducible run to run (see `tests/gemm_parallel.rs`).
+pub struct ShardRegistry {
+    groups: std::sync::Mutex<Vec<std::sync::Arc<ShardGroup>>>,
+    intra_op: usize,
+    /// Parking lot shared with the owning scheduler: helpers park here,
+    /// publishers and task-completions notify it.
+    park: std::sync::Mutex<()>,
+    wake: std::sync::Condvar,
+}
+
+impl ShardRegistry {
+    pub fn new(intra_op: usize) -> Self {
+        ShardRegistry {
+            groups: std::sync::Mutex::new(Vec::new()),
+            intra_op: intra_op.max(1),
+            park: std::sync::Mutex::new(()),
+            wake: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Handle that task bodies use to publish shards.
+    pub fn scope(&self) -> ShardScope<'_> {
+        ShardScope { reg: self }
+    }
+
+    /// Execute pending shards of other tasks, if any. Returns whether any
+    /// shard body actually ran. Called by idle workers before parking.
+    pub fn help(&self) -> bool {
+        use std::sync::atomic::Ordering;
+        let mut did = false;
+        loop {
+            let group = {
+                let groups = self.groups.lock().unwrap();
+                groups
+                    .iter()
+                    .find(|g| g.next.load(Ordering::Relaxed) < g.total)
+                    .cloned()
+            };
+            let Some(g) = group else { return did };
+            let mut claimed = false;
+            loop {
+                let i = g.next.fetch_add(1, Ordering::SeqCst);
+                if i >= g.total {
+                    break;
+                }
+                claimed = true;
+                did = true;
+                let guard = AbortOnUnwind;
+                // SAFETY: i < total, so the publisher is still inside
+                // fork_join and the erased closure is alive (see
+                // ShardGroup::f); the reference is transient.
+                let body: &(dyn Fn(usize) + Sync) = unsafe { &*g.f };
+                body(i);
+                drop(guard);
+                if g.done.fetch_add(1, Ordering::SeqCst) + 1 == g.total {
+                    self.wake.notify_all();
+                }
+            }
+            if !claimed {
+                // Lost the race for the last shard: `next` is now past
+                // `total`, so the find above cannot return this group
+                // again — no livelock.
+                return did;
+            }
+        }
+    }
+
+    /// Park until notified or `timeout` elapses (guards the push-vs-sleep
+    /// race the same way `execute_dag`'s workers do).
+    fn park_timeout(&self, timeout: std::time::Duration) {
+        let guard = self.park.lock().unwrap();
+        let _ = self.wake.wait_timeout(guard, timeout).unwrap();
+    }
+}
+
+/// Capability handed to task bodies for publishing intra-op shards.
+#[derive(Clone, Copy)]
+pub struct ShardScope<'a> {
+    reg: &'a ShardRegistry,
+}
+
+impl ShardScope<'_> {
+    /// Configured intra-op fan-out (>= 1). Kernels use this to pick a
+    /// *deterministic* shard count; it intentionally does not reflect how
+    /// many workers happen to be idle right now.
+    pub fn parallelism(&self) -> usize {
+        self.reg.intra_op
+    }
+
+    /// Run `f(0..shards)` with the calling thread plus any idle scheduler
+    /// workers, returning only after every shard has finished.
+    ///
+    /// Shard bodies must be independent (no shard may wait on another)
+    /// and — when they write a shared buffer — must write disjoint
+    /// regions. A panicking shard body **aborts the process** (unwinding
+    /// out of the claim protocol would dangle the erased closure or hang
+    /// the publisher — see `AbortOnUnwind`). Serial fallback
+    /// (`shards <= 1` or a registry configured with `intra_op = 1`) runs
+    /// the shards inline in index order, which every sharded kernel in
+    /// this crate is bitwise equivalent to by construction.
+    pub fn fork_join<F>(&self, shards: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        if shards <= 1 || self.reg.intra_op <= 1 {
+            for i in 0..shards {
+                f(i);
+            }
+            return;
+        }
+        let local: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY of the lifetime erasure: the group is removed from the
+        // registry below, and this function only returns once
+        // `done == total`; after that point `next >= total` forever, so
+        // no helper dereferences the pointer again (same fat-pointer
+        // layout on both sides of the transmute).
+        let erased: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(local) };
+        let group = std::sync::Arc::new(ShardGroup {
+            f: erased,
+            total: shards,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+        });
+        self.reg.groups.lock().unwrap().push(group.clone());
+        self.reg.wake.notify_all();
+        // The publisher works its own group first (helpers join in from
+        // the registry side).
+        loop {
+            let i = group.next.fetch_add(1, Ordering::SeqCst);
+            if i >= group.total {
+                break;
+            }
+            let guard = AbortOnUnwind;
+            f(i);
+            drop(guard);
+            if group.done.fetch_add(1, Ordering::SeqCst) + 1 == group.total {
+                self.reg.wake.notify_all();
+            }
+        }
+        self.reg.groups.lock().unwrap().retain(|g| !std::sync::Arc::ptr_eq(g, &group));
+        // Wait for helper-claimed shards still in flight.
+        while group.done.load(Ordering::SeqCst) < group.total {
+            let guard = self.reg.park.lock().unwrap();
+            if group.done.load(Ordering::SeqCst) >= group.total {
+                break;
+            }
+            let _ = self
+                .reg
+                .wake
+                .wait_timeout(guard, std::time::Duration::from_micros(100))
+                .unwrap();
+        }
+    }
+}
+
+/// A [`ShardScope`] that always runs shards inline (intra-op = 1). Used
+/// by serial entry points and the level-barrier reference executor.
+pub fn serial_scope() -> ShardScope<'static> {
+    static SERIAL: std::sync::OnceLock<ShardRegistry> = std::sync::OnceLock::new();
+    SERIAL.get_or_init(|| ShardRegistry::new(1)).scope()
+}
+
+/// Run `f` with a [`ShardScope`] backed by a standalone pool of
+/// `threads` helper threads (the calling thread participates at
+/// `fork_join` time, so `threads = n` means an `n`-way `parallelism()`).
+/// Used by tests and benches to exercise sharded kernels without a task
+/// DAG.
+pub fn with_intra_op_pool<R>(threads: usize, f: impl FnOnce(&ShardScope) -> R) -> R {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let reg = ShardRegistry::new(threads);
+    if threads <= 1 {
+        return f(&reg.scope());
+    }
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for _ in 0..threads - 1 {
+            scope.spawn(|| {
+                while !stop.load(Ordering::SeqCst) {
+                    if !reg.help() {
+                        reg.park_timeout(std::time::Duration::from_micros(200));
+                    }
+                }
+            });
+        }
+        let r = f(&reg.scope());
+        stop.store(true, Ordering::SeqCst);
+        reg.wake.notify_all();
+        r
+    })
+}
+
 /// Execute a dependency-counted task DAG on `threads` OS threads with
 /// per-worker deques, a shared injector, and work stealing.
 ///
@@ -128,6 +420,44 @@ where
     F: Fn(usize) -> std::result::Result<(), E> + Sync,
     E: Send,
 {
+    execute_dag_scoped(consumers, indegree, home, threads, 1, |t, _| f(t))
+}
+
+/// [`execute_dag`] with **nested** work stealing: each task body receives
+/// a [`ShardScope`] through which it can `fork_join` independent shards
+/// of itself (row blocks of a GEMM, batch entries of a BMM, chunks of an
+/// elementwise map), and workers with no ready *task* execute pending
+/// *shards* of running tasks before parking.
+///
+/// `intra_op` configures [`ShardScope::parallelism`] — the shard fan-out
+/// kernels split into. It bounds shard-queue pressure, not concurrency:
+/// however many workers are idle may help, but the shard *boundaries*
+/// depend only on `intra_op` and the problem shape, which keeps sharded
+/// kernels bitwise-deterministic (two idle workers vs. seven executing
+/// the same 8 shards produce identical bytes).
+///
+/// Scheduling protocol additions over [`execute_dag`]:
+///
+/// * a worker that finds no ready task first drains the shard registry
+///   ([`ShardRegistry::help`]) and only parks when both levels are empty;
+/// * `fork_join` publishers and final shard completions notify the same
+///   condvar the DAG uses, so a shard hand-off wakes parked workers just
+///   like a task hand-off does;
+/// * deadlock detection is unchanged: a task blocked in `fork_join`
+///   still holds its `outstanding` +1, and shard bodies cannot wait on
+///   tasks, so the two levels cannot cycle.
+pub fn execute_dag_scoped<E, F>(
+    consumers: &[Vec<usize>],
+    indegree: &[usize],
+    home: &[usize],
+    threads: usize,
+    intra_op: usize,
+    f: F,
+) -> std::result::Result<(), E>
+where
+    F: Fn(usize, &ShardScope) -> std::result::Result<(), E> + Sync,
+    E: Send,
+{
     use std::collections::VecDeque;
     use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::Mutex;
@@ -139,6 +469,7 @@ where
         return Ok(());
     }
     let threads = threads.max(1);
+    let registry = ShardRegistry::new(intra_op);
     let pending: Vec<AtomicUsize> = indegree.iter().map(|&d| AtomicUsize::new(d)).collect();
     let deques: Vec<Mutex<VecDeque<usize>>> =
         (0..threads).map(|_| Mutex::new(VecDeque::new())).collect();
@@ -162,10 +493,11 @@ where
     let completed = AtomicUsize::new(0);
     let abort = AtomicBool::new(false);
     let error: Mutex<Option<E>> = Mutex::new(None);
-    // Idle parking: workers with nothing to pop wait here (with a timeout
-    // guarding the push-vs-sleep race) instead of busy-spinning.
-    let park = Mutex::new(());
-    let wake = std::sync::Condvar::new();
+    // Idle parking: workers with nothing to pop (tasks or shards) wait on
+    // the registry's condvar (with a timeout guarding the push-vs-sleep
+    // race) instead of busy-spinning. The registry shares it so shard
+    // publications wake parked workers too.
+    let wake = &registry.wake;
 
     let worker = |w: usize| {
         loop {
@@ -188,6 +520,11 @@ where
                 }
             }
             let Some(t) = task else {
+                // No ready task: execute pending intra-op shards of tasks
+                // other workers are running (nested work stealing).
+                if registry.help() {
+                    continue;
+                }
                 if outstanding.load(Ordering::SeqCst) == 0
                     && completed.load(Ordering::SeqCst) < n
                     && !abort.load(Ordering::SeqCst)
@@ -200,13 +537,10 @@ where
                         completed.load(Ordering::SeqCst)
                     );
                 }
-                let guard = park.lock().unwrap();
-                let _ = wake
-                    .wait_timeout(guard, std::time::Duration::from_micros(200))
-                    .unwrap();
+                registry.park_timeout(std::time::Duration::from_micros(200));
                 continue;
             };
-            match f(t) {
+            match f(t, &registry.scope()) {
                 Ok(()) => {
                     for &c in &consumers[t] {
                         if pending[c].fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -468,6 +802,79 @@ mod tests {
         execute_dag::<(), _>(&[], &[], &[], 4, |_| Ok(())).unwrap();
         let (consumers, indegree) = dag(&[vec![]]);
         execute_dag::<(), _>(&consumers, &indegree, &[99], 4, |_| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn fork_join_runs_every_shard_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for threads in [1usize, 2, 8] {
+            let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+            with_intra_op_pool(threads, |scope| {
+                assert_eq!(scope.parallelism(), threads.max(1));
+                scope.fork_join(100, |i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "shard {i} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_scope_runs_shards_inline_in_order() {
+        let seen = std::sync::Mutex::new(Vec::new());
+        let scope = serial_scope();
+        assert_eq!(scope.parallelism(), 1);
+        scope.fork_join(5, |i| seen.lock().unwrap().push(i));
+        assert_eq!(*seen.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nested_fork_join_inside_dag_tasks() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // 12 independent tasks on 4 workers, each publishing 8 shards:
+        // idle workers must help without double-running any shard.
+        let n = 12;
+        let shards = 8;
+        let consumers = vec![vec![]; n];
+        let indegree = vec![0usize; n];
+        let home: Vec<usize> = (0..n).map(|t| t % 4).collect();
+        let hits: Vec<AtomicUsize> = (0..n * shards).map(|_| AtomicUsize::new(0)).collect();
+        execute_dag_scoped::<(), _>(&consumers, &indegree, &home, 4, shards, |t, scope| {
+            assert_eq!(scope.parallelism(), shards);
+            scope.fork_join(shards, |s| {
+                hits[t * shards + s].fetch_add(1, Ordering::SeqCst);
+            });
+            Ok(())
+        })
+        .unwrap();
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task shard {i}");
+        }
+    }
+
+    #[test]
+    fn fork_join_shards_fill_disjoint_ranges() {
+        // The SyncPtr pattern every sharded kernel uses: each shard owns a
+        // fixed chunk of one output buffer.
+        let len = 10_000;
+        let chunks = 16;
+        let mut buf = vec![0.0f32; len];
+        with_intra_op_pool(4, |scope| {
+            let ptr = SyncPtr::new(buf.as_mut_ptr());
+            scope.fork_join(chunks, |ci| {
+                let (lo, hi) = chunk_bounds(len, chunks, ci);
+                // SAFETY: [lo, hi) ranges are pairwise disjoint.
+                let s = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(lo), hi - lo) };
+                for (off, v) in s.iter_mut().enumerate() {
+                    *v = (lo + off) as f32;
+                }
+            });
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Differential and determinism tests for the intra-op sharded GEMM and
+//! the scoped kernel paths, mirroring `scheduler_differential.rs` one
+//! level down.
+//!
+//! Invariants locked in:
+//!
+//! 1. **Differential**: for random `(m, k, n, alpha, beta)` cases, the
+//!    sharded kernel (`sgemm_scoped` under a 1/2/8-thread intra-op pool)
+//!    is **bitwise-identical** to the serial `sgemm` — shard boundaries
+//!    are a pure function of `(m, shard count)` and each C row sees the
+//!    same update sequence regardless of the split;
+//! 2. **Determinism**: repeated sharded runs produce identical bytes no
+//!    matter how helper threads interleave;
+//! 3. the same holds end-to-end through `Cluster::execute` for every
+//!    `intra_op` fan-out, including the scoped einsum paths (BMM batch
+//!    sharding, generic nest, unary reduction, aggregation folds).
+
+use eindecomp::einsum::expr::{AggOp, EinSum, JoinOp};
+use eindecomp::einsum::label::labels;
+use eindecomp::runtime::gemm::{row_shards, sgemm, sgemm_scoped, MR};
+use eindecomp::runtime::native::{eval_einsum, eval_einsum_scoped};
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::tensor::Tensor;
+use eindecomp::util::{with_intra_op_pool, Rng};
+use std::collections::HashMap;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from_u64(seed);
+    (0..n).map(|_| r.next_centered()).collect()
+}
+
+/// Random (m, k, n, alpha, beta) drawn to cover MR-aligned and ragged
+/// shapes, panel edges, and the alpha/beta special cases.
+fn random_case(rng: &mut Rng) -> (usize, usize, usize, f32, f32) {
+    let m = 1 + rng.next_below(97);
+    let k = 1 + rng.next_below(300);
+    let n = 1 + rng.next_below(290);
+    let alpha = [1.0f32, 0.5, -2.0, 0.0][rng.next_below(4)];
+    let beta = [0.0f32, 1.0, 0.5][rng.next_below(3)];
+    (m, k, n, alpha, beta)
+}
+
+#[test]
+fn sharded_gemm_is_bitwise_identical_to_serial() {
+    let mut rng = Rng::seed_from_u64(0xD1FF);
+    for case in 0..12 {
+        let (m, k, n, alpha, beta) = random_case(&mut rng);
+        let a = rand_vec(m * k, 1000 + case);
+        let b = rand_vec(k * n, 2000 + case);
+        let c0 = rand_vec(m * n, 3000 + case);
+        let mut want = c0.clone();
+        sgemm(m, k, n, alpha, &a, &b, beta, &mut want);
+        for threads in [1usize, 2, 8] {
+            let mut got = c0.clone();
+            with_intra_op_pool(threads, |scope| {
+                sgemm_scoped(m, k, n, alpha, &a, &b, beta, &mut got, scope);
+            });
+            // Tensor-free bitwise check: f32 == on every element, plus
+            // bit patterns to catch -0.0 vs 0.0 drift.
+            assert_eq!(got.len(), want.len());
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "case {case} ({m},{k},{n},{alpha},{beta}) threads {threads} elem {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_gemm_deterministic_across_runs() {
+    let (m, k, n) = (91, 257, 130); // straddles KB/NB panel edges
+    let a = rand_vec(m * k, 7);
+    let b = rand_vec(k * n, 8);
+    let first = {
+        let mut c = vec![0.0f32; m * n];
+        with_intra_op_pool(8, |scope| {
+            sgemm_scoped(m, k, n, 1.0, &a, &b, 0.0, &mut c, scope);
+        });
+        c
+    };
+    for run in 1..6 {
+        let mut c = vec![0.0f32; m * n];
+        with_intra_op_pool(8, |scope| {
+            sgemm_scoped(m, k, n, 1.0, &a, &b, 0.0, &mut c, scope);
+        });
+        assert_eq!(c, first, "run {run}");
+    }
+}
+
+#[test]
+fn shard_plan_is_deterministic_and_aligned() {
+    for m in [1usize, 4, 37, 96, 1000] {
+        for s in [1usize, 2, 8, 16] {
+            let plan = row_shards(m, s);
+            assert_eq!(plan, row_shards(m, s), "m={m} s={s} not deterministic");
+            let mut next = 0;
+            for &(lo, hi) in &plan {
+                assert_eq!(lo % MR, 0, "m={m} s={s}");
+                assert_eq!(lo, next);
+                next = hi;
+            }
+            assert_eq!(next, m);
+        }
+    }
+}
+
+#[test]
+fn scoped_einsum_paths_match_serial_bitwise() {
+    // Exercises each sharded path in runtime::native against its serial
+    // twin: BMM (batch >= p and batch < p), the generic loop nest, and
+    // the unary reduction.
+    let cases: Vec<(EinSum, Vec<Vec<usize>>)> = vec![
+        // plain matmul -> row-sharded GEMM
+        (
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![vec![96, 80], vec![80, 72]],
+        ),
+        // wide batch -> batch-sharded BMM
+        (
+            EinSum::contraction(labels("b i j"), labels("b j k"), labels("b i k")),
+            vec![vec![16, 12, 10], vec![16, 10, 8]],
+        ),
+        // squared-diff join -> generic nest (leading label is in l_Z)
+        (
+            EinSum::Binary {
+                lx: labels("i j"),
+                ly: labels("j k"),
+                lz: labels("i k"),
+                join: JoinOp::SquaredDiff,
+                agg: AggOp::Sum,
+            },
+            vec![vec![64, 32], vec![32, 48]],
+        ),
+    ];
+    for (ci, (op, shapes)) in cases.iter().enumerate() {
+        let ts: Vec<Tensor> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s, (ci * 10 + i) as u64))
+            .collect();
+        let refs: Vec<&Tensor> = ts.iter().collect();
+        let want = eval_einsum(op, &refs).unwrap();
+        for threads in [2usize, 8] {
+            let got = with_intra_op_pool(threads, |scope| {
+                eval_einsum_scoped(op, &refs, scope).unwrap()
+            });
+            assert_eq!(got, want, "case {ci} threads {threads}");
+        }
+    }
+    // unary reduction: row-max over a tall matrix (leading label kept)
+    let x = Tensor::random(&[128, 64], 42);
+    let op = EinSum::reduce(labels("i j"), labels("i"), AggOp::Max);
+    let want = eval_einsum(&op, &[&x]).unwrap();
+    for threads in [2usize, 8] {
+        let got = with_intra_op_pool(threads, |scope| {
+            eval_einsum_scoped(&op, &[&x], scope).unwrap()
+        });
+        assert_eq!(got, want, "reduce threads {threads}");
+    }
+}
+
+#[test]
+fn cluster_execution_bitwise_across_intra_op_degrees() {
+    // End-to-end: a two-vertex chain with forced aggregation tasks, run
+    // at several intra-op fan-outs, must produce identical bytes — this
+    // is the determinism story the work-stealing + intra-op design rests
+    // on (mirrors scheduler_differential.rs one level down).
+    let mut g = eindecomp::einsum::graph::EinGraph::new();
+    let a = g.input("A", vec![64, 64]);
+    let b = g.input("B", vec![64, 64]);
+    let c = g.input("C", vec![64, 64]);
+    let z1 = g
+        .add(
+            "Z1",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let z2 = g
+        .add(
+            "Z2",
+            EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+            vec![z1, c],
+        )
+        .unwrap();
+    let mut plan = eindecomp::decomp::Plan::default();
+    plan.parts.insert(z1, vec![2, 2, 2]); // dj = 2 forces agg tasks
+    plan.parts.insert(z2, vec![2, 2, 2]);
+    plan.finalize_inputs(&g);
+    let mut inputs = HashMap::new();
+    inputs.insert(a, Tensor::random(&[64, 64], 1));
+    inputs.insert(b, Tensor::random(&[64, 64], 2));
+    inputs.insert(c, Tensor::random(&[64, 64], 3));
+    let engine = NativeEngine::new();
+    let base = Cluster::new(4, NetworkProfile::loopback())
+        .with_intra_op(1)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    for intra in [0usize, 2, 4, 8] {
+        for run in 0..3 {
+            let got = Cluster::new(4, NetworkProfile::loopback())
+                .with_intra_op(intra)
+                .execute(&g, &plan, &engine, &inputs)
+                .unwrap()
+                .0;
+            assert_eq!(got[&z2], base[&z2], "intra {intra} run {run}");
+        }
+    }
+}
