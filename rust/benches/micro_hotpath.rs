@@ -1,22 +1,29 @@
 //! Hot-path microbenchmarks used by the §Perf pass (EXPERIMENTS.md):
 //! GEMM throughput, the GEMM intra-op A/B (serial vs row-sharded packed
 //! kernel at 1/2/4/8 shards), permutation bandwidth, einsum dispatch,
-//! lowering and planning rates, and the real-execution scheduler A/B
-//! (work stealing vs the retained level-barrier reference). Run with
-//! `cargo bench micro`
+//! lowering and planning rates, the real-execution scheduler A/B
+//! (work stealing vs the retained level-barrier reference), and the
+//! zero-copy data-plane A/B (owned-tile copies vs strided views on
+//! partition / assemble / repartition and the end-to-end `ij,jk->ik` TRA
+//! path). Run with `cargo bench micro`
 //! (harness=false). Set `EINDECOMP_SMOKE=1` for the capped configuration
-//! used by `rust/scripts/bench_smoke.sh` / CI.
+//! used by `rust/scripts/bench_smoke.sh` / CI. Data-plane timings are
+//! also written to `BENCH_micro.json` (`{op, shape, mode, ns_per_iter}`
+//! entries) so the perf trajectory is tracked across PRs; CI uploads the
+//! file as an artifact.
 
 use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
 use eindecomp::einsum::expr::EinSum;
-use eindecomp::einsum::label::labels;
+use eindecomp::einsum::label::{concat_dedup, labels, project};
 use eindecomp::models::llama::{llama_graph, LlamaConfig};
 use eindecomp::runtime::gemm::{sgemm, sgemm_scoped};
 use eindecomp::runtime::native::eval_einsum;
-use eindecomp::runtime::{Backend, DispatchEngine, KernelEngine};
+use eindecomp::runtime::{Backend, DispatchEngine, KernelEngine, NativeEngine};
 use eindecomp::sim::{Cluster, ExecMode, NetworkProfile};
-use eindecomp::tensor::Tensor;
-use eindecomp::util::with_intra_op_pool;
+use eindecomp::tensor::{Tensor, TensorView};
+use eindecomp::tra::ops::{aggregate, join, repartition};
+use eindecomp::tra::relation::TensorRelation;
+use eindecomp::util::{with_intra_op_pool, Json};
 
 fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     // warmup
@@ -149,6 +156,156 @@ fn main() {
     let cinputs = eindecomp::models::matchain::chain_inputs(&chain, 7);
     let cplan = assign(&chain.graph, &Strategy::EinDecomp, 8, &roles).unwrap();
     scheduler_ab("skewed chain   ", 8, &chain.graph, &cplan, &cinputs, &engine, reps);
+
+    // 6. zero-copy data plane A/B: owned-tile copies vs strided views.
+    // Timings are recorded into BENCH_micro.json for cross-PR tracking.
+    let mut entries: Vec<Json> = Vec::new();
+    let np = if smoke { 512 } else { 1024 };
+    let dense = Tensor::random(&[np, np], 20);
+    let reps_dp = if smoke { 20 } else { 10 };
+    let shape2 = format!("{np}x{np}");
+    let dt_pc = time(
+        || {
+            let _ = TensorRelation::partition_owned(&dense, &[4, 4]).unwrap();
+        },
+        reps_dp,
+    );
+    let dt_pv = time(
+        || {
+            let _ = TensorRelation::partition(&dense, &[4, 4]).unwrap();
+        },
+        reps_dp,
+    );
+    println!(
+        "partition {shape2} d=[4,4]  copy: {:>9.1} us  view: {:>9.1} us  speedup {:>6.1}x",
+        dt_pc * 1e6,
+        dt_pv * 1e6,
+        dt_pc / dt_pv
+    );
+    record(&mut entries, "partition", &shape2, "copy", dt_pc);
+    record(&mut entries, "partition", &shape2, "view", dt_pv);
+    let rel_owned = TensorRelation::partition_owned(&dense, &[4, 4]).unwrap();
+    let rel_view = TensorRelation::partition(&dense, &[4, 4]).unwrap();
+    let dt_ac = time(|| { let _ = rel_owned.assemble().unwrap(); }, reps_dp);
+    let dt_av = time(|| { let _ = rel_view.assemble().unwrap(); }, reps_dp);
+    assert_eq!(rel_owned.assemble().unwrap(), rel_view.assemble().unwrap());
+    println!(
+        "assemble  {shape2} d=[4,4]  copy: {:>9.1} us  view: {:>9.1} us",
+        dt_ac * 1e6,
+        dt_av * 1e6
+    );
+    record(&mut entries, "assemble", &shape2, "copy", dt_ac);
+    record(&mut entries, "assemble", &shape2, "view", dt_av);
+    // repartition [4,4] -> [8,2]: the old path assembled the full dense
+    // tensor and re-sliced it; the new path moves only overlapping
+    // sub-regions tile-to-tile (aliasing contained tiles).
+    let dt_rc = time(
+        || {
+            let d = rel_owned.assemble().unwrap();
+            let _ = TensorRelation::partition_owned(&d, &[8, 2]).unwrap();
+        },
+        reps_dp,
+    );
+    let dt_rv = time(|| { let _ = repartition(&rel_view, &[8, 2]).unwrap(); }, reps_dp);
+    println!(
+        "repart    {shape2} [4,4]->[8,2]  copy: {:>9.1} us  view: {:>9.1} us  speedup {:>6.1}x",
+        dt_rc * 1e6,
+        dt_rv * 1e6,
+        dt_rc / dt_rv
+    );
+    record(&mut entries, "repartition", &shape2, "copy", dt_rc);
+    record(&mut entries, "repartition", &shape2, "view", dt_rv);
+
+    // End-to-end ij,jk->ik TRA path at d = [2,2,4] — the acceptance
+    // gate reads this line: the view pipeline must be >= 1.5x the serial
+    // copy-based baseline, bitwise-identical. A movement-bound shape
+    // (skinny contracted dim) isolates the data plane the way the
+    // post-decomposition tiles on real graphs do.
+    let (mt, jt) = if smoke { (768, 8) } else { (1024, 8) };
+    let tx = Tensor::random(&[mt, jt], 21);
+    let ty = Tensor::random(&[jt, mt], 22);
+    let d224 = [2usize, 2, 4];
+    let shape_tra = format!("{mt}x{jt}x{mt}");
+    let reps_tra = if smoke { 10 } else { 5 };
+    let base = tra_matmul(&tx, &ty, &d224, true);
+    let view = tra_matmul(&tx, &ty, &d224, false);
+    assert_eq!(view, base, "TRA view path diverged from copy baseline");
+    let dt_tc = time(|| { let _ = tra_matmul(&tx, &ty, &d224, true); }, reps_tra);
+    let dt_tv = time(|| { let _ = tra_matmul(&tx, &ty, &d224, false); }, reps_tra);
+    println!(
+        "TRA ij,jk->ik {shape_tra} d=[2,2,4]  copy: {:>8.2} ms  view: {:>8.2} ms  speedup {:>5.2}x",
+        dt_tc * 1e3,
+        dt_tv * 1e3,
+        dt_tc / dt_tv
+    );
+    record(&mut entries, "tra_matmul", &shape_tra, "copy", dt_tc);
+    record(&mut entries, "tra_matmul", &shape_tra, "view", dt_tv);
+
+    let report = Json::Obj(vec![
+        ("schema".into(), Json::str("eindecomp-bench-micro/v1")),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("entries".into(), Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_micro.json", report.render()).expect("write BENCH_micro.json");
+    println!("wrote BENCH_micro.json");
+}
+
+/// Append one `{op, shape, mode, ns_per_iter}` record.
+fn record(entries: &mut Vec<Json>, op: &str, shape: &str, mode: &str, secs_per_iter: f64) {
+    entries.push(Json::Obj(vec![
+        ("op".into(), Json::str(op)),
+        ("shape".into(), Json::str(shape)),
+        ("mode".into(), Json::str(mode)),
+        ("ns_per_iter".into(), Json::num(secs_per_iter * 1e9)),
+    ]));
+}
+
+/// One serial `ij,jk->ik` evaluation through the TRA rewrite.
+/// `copy_based = true` replays the pre-refactor data plane: owned-tile
+/// partitioning, per-call operand materialization onto the canonical
+/// layout, and a fresh (unpooled) output buffer per kernel call — the
+/// three copy seams the zero-copy refactor deleted. Both modes return
+/// bitwise-identical tensors.
+fn tra_matmul(x: &Tensor, y: &Tensor, d: &[usize], copy_based: bool) -> Tensor {
+    let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+    let (lx, ly, lz) = (labels("i j"), labels("j k"), labels("i k"));
+    let uniq = op.unique_labels();
+    let dx = project(d, &lx, &uniq);
+    let dy = project(d, &ly, &uniq);
+    let dz = project(d, &lz, &uniq);
+    let bz = vec![x.shape()[0], y.shape()[1]];
+    let engine = NativeEngine::new();
+    let (rx, ry) = if copy_based {
+        (
+            TensorRelation::partition_owned(x, &dx).unwrap(),
+            TensorRelation::partition_owned(y, &dy).unwrap(),
+        )
+    } else {
+        (
+            TensorRelation::partition(x, &dx).unwrap(),
+            TensorRelation::partition(y, &dy).unwrap(),
+        )
+    };
+    let mut kernel = |a: &TensorView, b: &TensorView| {
+        if copy_based {
+            // pre-refactor seams: permute-materialize both operands onto
+            // the canonical layout, re-pack the result into a fresh Vec
+            let ao = Tensor::new(a.shape().to_vec(), a.to_vec()).unwrap();
+            let bo = Tensor::new(b.shape().to_vec(), b.to_vec()).unwrap();
+            let z = engine.eval(&op, &[&ao, &bo]).unwrap();
+            Tensor::new(z.shape().to_vec(), z.data().to_vec())
+        } else {
+            engine.eval_view(&op, &[a, b])
+        }
+    };
+    let joined = join(&rx, &ry, &lx, &ly, &mut kernel).unwrap();
+    let lj = concat_dedup(&lx, &ly);
+    let grouped = aggregate(joined, &lj, &lz, eindecomp::einsum::expr::AggOp::Sum).unwrap();
+    let tiles: Vec<Tensor> = grouped.into_iter().map(|(_, t)| t).collect();
+    TensorRelation::from_tiles(bz, dz, tiles)
+        .unwrap()
+        .assemble()
+        .unwrap()
 }
 
 /// One barrier-vs-steal A/B measurement over a placed plan: times both

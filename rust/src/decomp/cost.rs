@@ -14,7 +14,7 @@ use crate::error::{Error, Result};
 
 #[inline]
 fn ceil_div(b: usize, d: usize) -> f64 {
-    ((b + d - 1) / d) as f64
+    b.div_ceil(d) as f64
 }
 
 /// Product of per-dimension tile sizes `ceil(b/d)`.

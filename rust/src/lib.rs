@@ -20,6 +20,13 @@
 //!                                         a registry-only stub in this build
 //! ```
 //!
+//! The data plane between those stages is zero-copy: partitioning
+//! produces strided [`tensor::TensorView`] tiles in O(1), kernels read
+//! operands through view strides (packing B straight from the strided
+//! tile), repartitioned tiles alias their producer when contained in it,
+//! and output/scratch buffers recycle through a per-worker
+//! [`util::BufferPool`].
+//!
 //! End to end, in code — declare, plan, execute, verify:
 //!
 //! ```
@@ -104,6 +111,7 @@ pub mod prelude {
     pub use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
     pub use crate::sim::network::NetworkProfile;
     pub use crate::taskgraph::{lower::lower_graph, TaskGraph};
-    pub use crate::tensor::Tensor;
+    pub use crate::tensor::{Tensor, TensorView};
     pub use crate::tra::relation::TensorRelation;
+    pub use crate::util::BufferPool;
 }

@@ -7,7 +7,7 @@ use super::pjrt::PjrtEngine;
 use super::{Backend, KernelEngine};
 use crate::einsum::expr::EinSum;
 use crate::error::{Error, Result};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::util::ShardScope;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -109,6 +109,40 @@ impl KernelEngine for DispatchEngine {
         }
         self.native_hits.fetch_add(1, Ordering::Relaxed);
         self.native.eval_scoped(op, inputs, scope)
+    }
+
+    fn eval_view(&self, op: &EinSum, inputs: &[&TensorView]) -> Result<Tensor> {
+        self.eval_view_scoped(op, inputs, &crate::util::serial_scope())
+    }
+
+    /// View tiles stay strided on the native path; only a PJRT artifact
+    /// hit forces materialization (AOT kernels take contiguous buffers).
+    fn eval_view_scoped(
+        &self,
+        op: &EinSum,
+        inputs: &[&TensorView],
+        scope: &ShardScope,
+    ) -> Result<Tensor> {
+        if let Some(pjrt) = &self.pjrt {
+            let owned: Vec<Tensor> = inputs.iter().map(|v| v.to_tensor()).collect();
+            let refs: Vec<&Tensor> = owned.iter().collect();
+            match pjrt.try_eval(op, &refs)? {
+                Some(t) => {
+                    self.pjrt_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(t);
+                }
+                None => {
+                    if self.backend == Backend::PjrtStrict {
+                        return Err(Error::Artifact(format!(
+                            "PjrtStrict: no artifact for {op} on {:?}",
+                            inputs.iter().map(|t| t.shape()).collect::<Vec<_>>()
+                        )));
+                    }
+                }
+            }
+        }
+        self.native_hits.fetch_add(1, Ordering::Relaxed);
+        self.native.eval_view_scoped(op, inputs, scope)
     }
 
     fn name(&self) -> &'static str {

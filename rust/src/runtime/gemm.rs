@@ -30,7 +30,7 @@
 //! accumulator; `alpha == 0` only applies the beta scaling. The product
 //! term accumulates in f32 (no widening), grouped per K panel.
 
-use crate::util::{ShardScope, SyncPtr, SHARD_MIN};
+use crate::util::{PooledVec, ShardScope, SyncPtr, SHARD_MIN};
 
 /// Micro-kernel row block: shard boundaries are multiples of this.
 pub const MR: usize = 4;
@@ -41,24 +41,31 @@ const KB: usize = 256;
 /// N-panel width of the packed B layout (multiple of [`NR`]).
 const NB: usize = 256;
 
+/// Storage behind a [`PackedB`]: borrowed when the input layout already
+/// *is* the packed layout, otherwise a pooled scratch buffer that returns
+/// to the thread's [`crate::util::BufferPool`] on drop.
+enum PackData<'a> {
+    Borrowed(&'a [f32]),
+    Owned(PooledVec),
+}
+
 /// B packed into `KB x NB` panels, row-major within each panel.
 ///
 /// Layout: panels ordered K-panel-major then N-panel; the panel covering
 /// `k in [k0, k0+kb) x j in [j0, j0+nb)` starts at offset
 /// `k0 * n + kb * j0` and is `kb * nb` contiguous floats. Packing cost is
 /// one pass over B; every row block of A then reads B only through these
-/// cache-friendly strips. When `n <= NB` the packed layout coincides with
-/// the row-major input byte-for-byte, so B is *borrowed* rather than
-/// copied — the common case for small post-decomposition tiles.
+/// cache-friendly strips. When the input is contiguous row-major with
+/// `n <= NB` the packed layout coincides with it byte-for-byte, so B is
+/// *borrowed* rather than copied — the common case for small
+/// post-decomposition tiles. Owned pack buffers are pooled scratch.
 pub struct PackedB<'a> {
-    data: std::borrow::Cow<'a, [f32]>,
+    data: PackData<'a>,
     k: usize,
     n: usize,
 }
 
-/// Pack row-major `b` (`k x n`) for [`sgemm_rows`]. The packed bytes are
-/// a pure relayout — no arithmetic — so packing order cannot affect
-/// results.
+/// Pack row-major `b` (`k x n`, contiguous) for [`sgemm_rows`].
 pub fn pack_b(k: usize, n: usize, b: &[f32]) -> PackedB<'_> {
     assert!(
         b.len() >= k * n,
@@ -66,16 +73,35 @@ pub fn pack_b(k: usize, n: usize, b: &[f32]) -> PackedB<'_> {
         b.len(),
         k * n
     );
-    if n <= NB {
-        // Single N-panel: for every K panel, base = k0 * n and nb = n, so
-        // the packed layout is exactly the row-major input. Borrow it.
+    pack_b_strided(k, n, b, n, 1)
+}
+
+/// Pack a *strided* `k x n` operand: element `(kk, j)` lives at
+/// `b[kk * rsb + j * csb]`. This is how the BMM path packs straight from
+/// a [`crate::tensor::TensorView`] tile — no contiguous materialization
+/// of B ever happens. The packed bytes are a pure relayout — no
+/// arithmetic — so neither packing order nor source layout can affect
+/// results: panels are value-identical to packing a materialized copy.
+pub fn pack_b_strided(k: usize, n: usize, b: &[f32], rsb: usize, csb: usize) -> PackedB<'_> {
+    if k > 0 && n > 0 {
+        let max = (k - 1) * rsb + (n - 1) * csb;
+        assert!(
+            b.len() > max,
+            "pack_b_strided: B has {} elements, max index {max}",
+            b.len()
+        );
+    }
+    if csb == 1 && rsb == n && n <= NB {
+        // Single N-panel over a contiguous row-major input: for every K
+        // panel, base = k0 * n and nb = n, so the packed layout is
+        // exactly the input. Borrow it.
         return PackedB {
-            data: std::borrow::Cow::Borrowed(&b[..k * n]),
+            data: PackData::Borrowed(&b[..k * n]),
             k,
             n,
         };
     }
-    let mut data = vec![0.0f32; k * n];
+    let mut data = PooledVec::take(k * n);
     let mut k0 = 0;
     while k0 < k {
         let kb = KB.min(k - k0);
@@ -84,25 +110,45 @@ pub fn pack_b(k: usize, n: usize, b: &[f32]) -> PackedB<'_> {
             let nb = NB.min(n - j0);
             let base = k0 * n + kb * j0;
             for kk in 0..kb {
-                let src = (k0 + kk) * n + j0;
-                data[base + kk * nb..base + kk * nb + nb].copy_from_slice(&b[src..src + nb]);
+                let src = (k0 + kk) * rsb + j0 * csb;
+                if csb == 1 {
+                    data[base + kk * nb..base + kk * nb + nb]
+                        .copy_from_slice(&b[src..src + nb]);
+                } else {
+                    for j in 0..nb {
+                        data[base + kk * nb + j] = b[src + j * csb];
+                    }
+                }
             }
             j0 += nb;
         }
         k0 += kb;
     }
     PackedB {
-        data: std::borrow::Cow::Owned(data),
+        data: PackData::Owned(data),
         k,
         n,
     }
 }
 
 impl PackedB<'_> {
+    fn as_slice(&self) -> &[f32] {
+        match &self.data {
+            PackData::Borrowed(s) => s,
+            PackData::Owned(v) => v,
+        }
+    }
+
+    /// Whether the pack borrowed the input instead of copying (the
+    /// zero-copy fast path; exposed for tests and benches).
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self.data, PackData::Borrowed(_))
+    }
+
     #[inline]
     fn panel(&self, k0: usize, kb: usize, j0: usize, nb: usize) -> &[f32] {
         let base = k0 * self.n + kb * j0;
-        &self.data[base..base + kb * nb]
+        &self.as_slice()[base..base + kb * nb]
     }
 }
 
@@ -159,7 +205,7 @@ pub fn sgemm(
         return;
     }
     let bp = pack_b(k, n, b);
-    sgemm_rows(0, m, k, n, alpha, a, &bp, &mut c[..m * n]);
+    sgemm_rows(0, m, k, n, alpha, a, k, &bp, &mut c[..m * n]);
 }
 
 /// Intra-op parallel [`sgemm`]: pack B once, then split the M dimension
@@ -179,11 +225,41 @@ pub fn sgemm_scoped(
     scope: &ShardScope,
 ) {
     check_dims(m, k, n, a, b, c);
+    let bp = pack_b(k, n, b);
+    sgemm_packed_scoped(m, k, n, alpha, a, k, &bp, beta, c, scope);
+}
+
+/// The strided-operand GEMM entry the view-based BMM path uses:
+/// `C = alpha * A @ packed(B) + beta * C` where A's rows start `lda`
+/// apart (its columns must be unit-stride — that is what lets the
+/// micro-kernel read K runs as contiguous slices) and B was packed by
+/// [`pack_b`] / [`pack_b_strided`]. Row shards fork-join through `scope`
+/// exactly like [`sgemm_scoped`]; results are bitwise-identical to the
+/// contiguous path because the per-row update sequence never depends on
+/// `lda` or the shard split.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_packed_scoped(
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    bp: &PackedB,
+    beta: f32,
+    c: &mut [f32],
+    scope: &ShardScope,
+) {
+    assert!(
+        c.len() >= m * n,
+        "sgemm: C has {} elements, need m*n = {}",
+        c.len(),
+        m * n
+    );
     apply_beta(beta, &mut c[..m * n]);
     if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
         return;
     }
-    let bp = pack_b(k, n, b);
     // Tiny problems (work below SHARD_MIN flops-ish) are not worth the
     // fork-join hand-off; the serial path is bitwise-identical anyway.
     let shards = if m * k * n < SHARD_MIN {
@@ -192,7 +268,7 @@ pub fn sgemm_scoped(
         row_shards(m, scope.parallelism())
     };
     if shards.len() <= 1 {
-        sgemm_rows(0, m, k, n, alpha, a, &bp, &mut c[..m * n]);
+        sgemm_rows(0, m, k, n, alpha, a, lda, bp, &mut c[..m * n]);
         return;
     }
     let cptr = SyncPtr::new(c.as_mut_ptr());
@@ -202,14 +278,17 @@ pub fn sgemm_scoped(
         // SAFETY: shard row ranges are pairwise disjoint, so the derived
         // sub-slices never alias; `c` outlives the fork_join.
         let rows = unsafe { std::slice::from_raw_parts_mut(base.add(lo * n), (hi - lo) * n) };
-        sgemm_rows(lo, hi, k, n, alpha, a, &bp, rows);
+        sgemm_rows(lo, hi, k, n, alpha, a, lda, bp, rows);
     });
 }
 
 /// Compute rows `[m0, m1)` of `C += alpha * A @ packed(B)` (the beta
 /// prologue is the caller's job). `c_rows` holds exactly those rows.
-/// `m0` must be a multiple of [`MR`] so that row-block boundaries match
-/// the serial kernel's — the bitwise-determinism invariant.
+/// A's row `i` starts at `a[i * lda]` with unit column stride (`lda = k`
+/// for a contiguous A); `m0` must be a multiple of [`MR`] so that
+/// row-block boundaries match the serial kernel's — the
+/// bitwise-determinism invariant.
+#[allow(clippy::too_many_arguments)]
 pub fn sgemm_rows(
     m0: usize,
     m1: usize,
@@ -217,6 +296,7 @@ pub fn sgemm_rows(
     n: usize,
     alpha: f32,
     a: &[f32],
+    lda: usize,
     bp: &PackedB,
     c_rows: &mut [f32],
 ) {
@@ -229,10 +309,10 @@ pub fn sgemm_rows(
         bp.n
     );
     assert!(
-        a.len() >= m1 * k,
-        "sgemm_rows: A has {} elements, need m1*k = {}",
+        m1 == 0 || a.len() >= (m1 - 1) * lda + k,
+        "sgemm_rows: A has {} elements, need (m1-1)*lda+k = {}",
         a.len(),
-        m1 * k
+        (m1.max(1) - 1) * lda + k
     );
     assert!(
         c_rows.len() >= (m1 - m0) * n,
@@ -258,10 +338,10 @@ pub fn sgemm_rows(
                 let nb = NB.min(n - j0);
                 let panel = bp.panel(k0, kb, j0, nb);
                 if ib == MR {
-                    let a0 = &a[i * k + k0..i * k + k0 + kb];
-                    let a1 = &a[(i + 1) * k + k0..(i + 1) * k + k0 + kb];
-                    let a2 = &a[(i + 2) * k + k0..(i + 2) * k + k0 + kb];
-                    let a3 = &a[(i + 3) * k + k0..(i + 3) * k + k0 + kb];
+                    let a0 = &a[i * lda + k0..i * lda + k0 + kb];
+                    let a1 = &a[(i + 1) * lda + k0..(i + 1) * lda + k0 + kb];
+                    let a2 = &a[(i + 2) * lda + k0..(i + 2) * lda + k0 + kb];
+                    let a3 = &a[(i + 3) * lda + k0..(i + 3) * lda + k0 + kb];
                     let (r01, r23) = c_rows[ri * n..(ri + 4) * n].split_at_mut(2 * n);
                     let (r0, r1) = r01.split_at_mut(n);
                     let (r2, r3) = r23.split_at_mut(n);
@@ -281,7 +361,7 @@ pub fn sgemm_rows(
                     // row. The tail always runs through this path, in any
                     // shard split, so its bits match the serial kernel's.
                     for r in 0..ib {
-                        let arow = &a[(i + r) * k + k0..(i + r) * k + k0 + kb];
+                        let arow = &a[(i + r) * lda + k0..(i + r) * lda + k0 + kb];
                         let crow = &mut c_rows[(ri + r) * n + j0..(ri + r) * n + j0 + nb];
                         for (kk, &av) in arow.iter().enumerate() {
                             let f = alpha * av;
@@ -531,7 +611,7 @@ mod tests {
         let (k, n) = (300, 128);
         let b = rand_vec(k * n, 12);
         let bp = pack_b(k, n, &b);
-        assert!(matches!(bp.data, std::borrow::Cow::Borrowed(_)));
+        assert!(bp.is_borrowed());
         let mut k0 = 0;
         while k0 < k {
             let kb = KB.min(k - k0);
@@ -555,15 +635,72 @@ mod tests {
         let b = rand_vec(k * n, 10);
         let bp = pack_b(k, n, &b);
         let mut serial = vec![0.0f32; m * n];
-        sgemm_rows(0, m, k, n, 1.0, &a, &bp, &mut serial);
+        sgemm_rows(0, m, k, n, 1.0, &a, k, &bp, &mut serial);
         for shards in [2usize, 3, 8] {
             let mut c = vec![0.0f32; m * n];
             let mut ranges = row_shards(m, shards);
             ranges.reverse(); // order must not matter
             for (lo, hi) in ranges {
-                sgemm_rows(lo, hi, k, n, 1.0, &a, &bp, &mut c[lo * n..hi * n]);
+                sgemm_rows(lo, hi, k, n, 1.0, &a, k, &bp, &mut c[lo * n..hi * n]);
             }
             assert_eq!(c, serial, "shards {shards}");
         }
+    }
+
+    #[test]
+    fn strided_pack_matches_contiguous_pack() {
+        // A k x n operand embedded in a larger row-major buffer (rsb > n)
+        // and a transposed one (csb > 1) must pack to the same panels as
+        // packing a materialized contiguous copy.
+        let (k, n) = (37, 290); // n > NB: owned multi-panel path
+        let (big_rows, big_cols) = (k + 5, n + 11);
+        let big = rand_vec(big_rows * big_cols, 21);
+        // contiguous copy of the top-left k x n window
+        let mut dense = vec![0.0f32; k * n];
+        for kk in 0..k {
+            dense[kk * n..kk * n + n].copy_from_slice(&big[kk * big_cols..kk * big_cols + n]);
+        }
+        let want = pack_b(k, n, &dense);
+        let got = pack_b_strided(k, n, &big, big_cols, 1);
+        assert_eq!(want.as_slice(), got.as_slice());
+        // transposed window: element (kk, j) at big[j * big_cols + kk]
+        let (kt, nt) = (29, 31);
+        let mut dense_t = vec![0.0f32; kt * nt];
+        for kk in 0..kt {
+            for j in 0..nt {
+                dense_t[kk * nt + j] = big[j * big_cols + kk];
+            }
+        }
+        let want_t = pack_b(kt, nt, &dense_t);
+        let got_t = pack_b_strided(kt, nt, &big, 1, big_cols);
+        assert_eq!(want_t.as_slice(), got_t.as_slice());
+    }
+
+    #[test]
+    fn lda_gemm_matches_contiguous_gemm_bitwise() {
+        // A embedded with lda > k must give bit-identical C to the
+        // contiguous kernel on a materialized copy of A.
+        let (m, k, n) = (23, 41, 57);
+        let lda = k + 9;
+        let abig = rand_vec(m * lda, 22);
+        let mut adense = vec![0.0f32; m * k];
+        for i in 0..m {
+            adense[i * k..i * k + k].copy_from_slice(&abig[i * lda..i * lda + k]);
+        }
+        let b = rand_vec(k * n, 23);
+        let mut want = vec![0.0f32; m * n];
+        sgemm(m, k, n, 1.0, &adense, &b, 0.0, &mut want);
+        let bp = pack_b(k, n, &b);
+        let mut got = vec![0.0f32; m * n];
+        crate::util::with_intra_op_pool(1, |scope| {
+            sgemm_packed_scoped(m, k, n, 1.0, &abig, lda, &bp, 0.0, &mut got, scope);
+        });
+        assert_eq!(got, want);
+        // and under row sharding
+        let mut got4 = vec![0.0f32; m * n];
+        crate::util::with_intra_op_pool(4, |scope| {
+            sgemm_packed_scoped(m, k, n, 1.0, &abig, lda, &bp, 0.0, &mut got4, scope);
+        });
+        assert_eq!(got4, want);
     }
 }

@@ -24,7 +24,7 @@ pub mod pjrt;
 
 use crate::einsum::expr::EinSum;
 use crate::error::Result;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::util::ShardScope;
 
 /// Which kernel backend to use.
@@ -53,6 +53,29 @@ pub trait KernelEngine: Send + Sync {
     fn eval_scoped(&self, op: &EinSum, inputs: &[&Tensor], scope: &ShardScope) -> Result<Tensor> {
         let _ = scope;
         self.eval(op, inputs)
+    }
+
+    /// Evaluate on strided [`TensorView`] tiles — the zero-copy hot path
+    /// the TRA join and the executor use. Engines that can read through
+    /// strides (the native engine) override this; the default
+    /// materializes each view and calls [`eval`](Self::eval). Results
+    /// must be bitwise-identical to evaluating the materialized tiles.
+    fn eval_view(&self, op: &EinSum, inputs: &[&TensorView]) -> Result<Tensor> {
+        let owned: Vec<Tensor> = inputs.iter().map(|v| v.to_tensor()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        self.eval(op, &refs)
+    }
+
+    /// [`eval_view`](Self::eval_view) with an intra-op [`ShardScope`].
+    fn eval_view_scoped(
+        &self,
+        op: &EinSum,
+        inputs: &[&TensorView],
+        scope: &ShardScope,
+    ) -> Result<Tensor> {
+        let owned: Vec<Tensor> = inputs.iter().map(|v| v.to_tensor()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        self.eval_scoped(op, &refs, scope)
     }
 
     /// Human-readable identifier for reports.

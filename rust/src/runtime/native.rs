@@ -1,13 +1,24 @@
 //! Native (pure-rust) kernel engine.
 //!
 //! Mirrors the paper's CPU kernel structure (§9.1): *(1) unpack the input
-//! tensors, (2) call a batch matrix multiply, (3) re-pack the result* — here
-//! "unpack" is an axis permutation onto the canonical `[batch, m, k]` /
-//! `[batch, k, n]` layout and the BMM is the in-tree [`super::gemm`]. EinSums
-//! that do not fit the BMM pattern (non-Mul joins, non-Sum aggregations,
-//! labels private to one operand) fall back to a generic loop nest over the
-//! full iteration space, which implements the extended EinSum semantics
-//! exactly.
+//! tensors, (2) call a batch matrix multiply, (3) re-pack the result* —
+//! except that on this implementation's hot path the "unpack" step no
+//! longer moves bytes: kernels consume strided [`TensorView`]s directly.
+//! Mapping einsum label orders onto the canonical `[batch, m, k]` /
+//! `[batch, k, n]` layout is an O(1) stride permutation, the GEMM packs B
+//! straight from the strided tile ([`super::gemm::pack_b_strided`]) and
+//! reads A rows through a leading stride, and the generic loop nest and
+//! unary reduction index through view strides. A contiguous operand copy
+//! is materialized only when a multi-label dim group cannot be collapsed
+//! to a single stride — exactly the cases the old code permute-copied
+//! unconditionally. EinSums that do not fit the BMM pattern (non-Mul
+//! joins, non-Sum aggregations, labels private to one operand) fall back
+//! to a generic loop nest over the full iteration space, which implements
+//! the extended EinSum semantics exactly.
+//!
+//! Every path is **bitwise-identical** to the copy-based evaluator it
+//! replaced: iteration orders and per-cell accumulation sequences are
+//! unchanged, only load addresses differ (`tests/zero_copy.rs`).
 //!
 //! # Intra-op sharding
 //!
@@ -26,8 +37,8 @@ use super::KernelEngine;
 use crate::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
 use crate::einsum::label::{project, Label, LabelList};
 use crate::error::{Error, Result};
-use crate::tensor::{index_space, strides_of, Tensor};
-use crate::util::{chunk_bounds, serial_scope, ShardScope, SyncPtr, SHARD_MIN};
+use crate::tensor::{index_space, strides_of, Tensor, TensorView};
+use crate::util::{chunk_bounds, serial_scope, BufferPool, ShardScope, SyncPtr, SHARD_MIN};
 
 /// Pure-rust kernel engine. Stateless and cheap to clone.
 #[derive(Clone, Debug, Default)]
@@ -48,6 +59,19 @@ impl KernelEngine for NativeEngine {
         eval_einsum_scoped(op, inputs, scope)
     }
 
+    fn eval_view(&self, op: &EinSum, inputs: &[&TensorView]) -> Result<Tensor> {
+        eval_einsum_view_scoped(op, inputs, &serial_scope())
+    }
+
+    fn eval_view_scoped(
+        &self,
+        op: &EinSum,
+        inputs: &[&TensorView],
+        scope: &ShardScope,
+    ) -> Result<Tensor> {
+        eval_einsum_view_scoped(op, inputs, scope)
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -59,9 +83,28 @@ pub fn eval_einsum(op: &EinSum, inputs: &[&Tensor]) -> Result<Tensor> {
 }
 
 /// Evaluate an EinSum on dense tensors, sharding the hot loops through
-/// `scope` (see the module docs for which paths shard and why the result
-/// is bitwise-identical to [`eval_einsum`]).
+/// `scope`. Owned tensors evaluate as whole-buffer views (an O(1)
+/// wrapping), so this shares every code path with
+/// [`eval_einsum_view_scoped`].
 pub fn eval_einsum_scoped(op: &EinSum, inputs: &[&Tensor], scope: &ShardScope) -> Result<Tensor> {
+    let views: Vec<TensorView> = inputs.iter().map(|t| t.view()).collect();
+    let refs: Vec<&TensorView> = views.iter().collect();
+    eval_einsum_view_scoped(op, &refs, scope)
+}
+
+/// Evaluate an EinSum on strided tile views (serial).
+pub fn eval_einsum_view(op: &EinSum, inputs: &[&TensorView]) -> Result<Tensor> {
+    eval_einsum_view_scoped(op, inputs, &serial_scope())
+}
+
+/// Evaluate an EinSum on strided tile views, sharding the hot loops
+/// through `scope` (see the module docs for which paths shard and why the
+/// result is bitwise-identical to the serial, copy-based evaluator).
+pub fn eval_einsum_view_scoped(
+    op: &EinSum,
+    inputs: &[&TensorView],
+    scope: &ShardScope,
+) -> Result<Tensor> {
     match op {
         EinSum::Input => Err(Error::InvalidEinsum(
             "Input vertices are not evaluated".into(),
@@ -93,7 +136,7 @@ fn eval_unary(
     lz: &LabelList,
     u: UnaryOp,
     agg: AggOp,
-    x: &Tensor,
+    x: &TensorView,
     scope: &ShardScope,
 ) -> Result<Tensor> {
     if x.rank() != lx.len() {
@@ -103,13 +146,15 @@ fn eval_unary(
         )));
     }
     let bz = project(x.shape(), lz, lx);
-    // Fast path: pure map / transpose (no reduction).
+    // Fast path: pure map / transpose (no reduction). The permutation is
+    // an O(1) stride shuffle; materialization happens once, into the
+    // output (and not at all for an identity map of a whole tensor).
     if lz.len() == lx.len() {
         let perm: Vec<usize> = lz
             .iter()
             .map(|l| lx.iter().position(|m| m == l).unwrap())
             .collect();
-        let mut t = x.permute(&perm)?;
+        let mut t = x.permute(&perm)?.to_tensor();
         if !matches!(u, UnaryOp::Identity) {
             let data = t.data_mut();
             let p = scope.parallelism();
@@ -134,15 +179,17 @@ fn eval_unary(
         }
         return Ok(t);
     }
-    // Reduction path: iterate I(b_X), accumulate into output.
-    let mut out = Tensor::full(&bz, agg.identity());
+    // Reduction path: iterate I(b_X) in row-major order, reading the
+    // input through its view strides, accumulating into the output.
+    let mut out = Tensor::full_pooled(&bz, agg.identity());
     let out_strides = strides_of(&bz);
     // position of each lz label within lx
     let zpos: Vec<usize> = lz
         .iter()
         .map(|l| lx.iter().position(|m| m == l).unwrap())
         .collect();
-    let xdata = x.data();
+    let xd = x.raw();
+    let xs = x.strides().to_vec();
     let p = scope.parallelism();
     // Shard over the leading input dimension when it survives into the
     // output: distinct leading coordinates then touch distinct output
@@ -152,14 +199,16 @@ fn eval_unary(
     if p > 1 && dim0_in_out && x.shape()[0] >= 2 && x.len() >= SHARD_MIN {
         let d0 = x.shape()[0];
         let rest: Vec<usize> = x.shape()[1..].to_vec();
-        let rest_len: usize = rest.iter().product();
         let shards = p.min(d0);
         let optr = SyncPtr::new(out.data_mut().as_mut_ptr());
         scope.fork_join(shards, |s| {
             let (lo, hi) = chunk_bounds(d0, shards, s);
             for i0 in lo..hi {
-                for (r, ridx) in index_space(&rest).enumerate() {
-                    let flat = i0 * rest_len + r;
+                for ridx in index_space(&rest) {
+                    let mut flat = i0 * xs[0];
+                    for (d, &r) in ridx.iter().enumerate() {
+                        flat += r * xs[d + 1];
+                    }
                     let mut o = 0usize;
                     for (st, &pz) in out_strides.iter().zip(&zpos) {
                         o += st * if pz == 0 { i0 } else { ridx[pz - 1] };
@@ -169,7 +218,7 @@ fn eval_unary(
                     // disjoint cells.
                     unsafe {
                         let cell = optr.get().add(o);
-                        *cell = agg.combine(*cell, u.apply(xdata[flat]));
+                        *cell = agg.combine(*cell, u.apply(xd[flat]));
                     }
                 }
             }
@@ -177,12 +226,16 @@ fn eval_unary(
         return Ok(out);
     }
     let out_data = out.data_mut();
-    for (flat, idx) in index_space(x.shape()).enumerate() {
-        let mut o = 0usize;
-        for (s, &p) in out_strides.iter().zip(&zpos) {
-            o += s * idx[p];
+    for idx in index_space(x.shape()) {
+        let mut flat = 0usize;
+        for (d, &i) in idx.iter().enumerate() {
+            flat += i * xs[d];
         }
-        out_data[o] = agg.combine(out_data[o], u.apply(xdata[flat]));
+        let mut o = 0usize;
+        for (s, &pz) in out_strides.iter().zip(&zpos) {
+            o += s * idx[pz];
+        }
+        out_data[o] = agg.combine(out_data[o], u.apply(xd[flat]));
     }
     Ok(out)
 }
@@ -233,8 +286,8 @@ fn eval_binary(
     lz: &LabelList,
     join: JoinOp,
     agg: AggOp,
-    x: &Tensor,
-    y: &Tensor,
+    x: &TensorView,
+    y: &TensorView,
     scope: &ShardScope,
 ) -> Result<Tensor> {
     if x.rank() != lx.len() || y.rank() != ly.len() {
@@ -265,22 +318,58 @@ fn eval_binary(
     eval_binary_generic_scoped(lx, ly, lz, join, agg, x, y, scope)
 }
 
-/// Permute-to-BMM path: X -> [B, M, K], Y -> [B, K, N], sgemm per batch,
-/// result [B, M, N] -> permute to l_Z order.
+/// Collapse a run of view dims into the stride of the flattened group,
+/// when the layout allows it: ignoring size-1 dims, each kept stride must
+/// chain (`stride[i] == shape[i+1] * stride[i+1]`). An empty (or all
+/// size-1) group collapses to stride 0, which callers never advance.
+fn collapse_dims(shape: &[usize], strides: &[usize]) -> Option<usize> {
+    let kept: Vec<(usize, usize)> = shape
+        .iter()
+        .zip(strides)
+        .filter(|(&d, _)| d != 1)
+        .map(|(&d, &s)| (d, s))
+        .collect();
+    if kept.is_empty() {
+        return Some(0);
+    }
+    for w in kept.windows(2) {
+        let ((_, s1), (d2, s2)) = (w[0], w[1]);
+        if s1 != d2 * s2 {
+            return None;
+        }
+    }
+    kept.last().map(|&(_, s)| s)
+}
+
+/// Flat offset of every batch entry (row-major over the batch dims).
+fn batch_offsets(dims: &[usize], strides: &[usize]) -> Vec<usize> {
+    index_space(dims)
+        .map(|key| key.iter().zip(strides).map(|(&i, &s)| i * s).sum())
+        .collect()
+}
+
+/// Strided-BMM path: map X onto `[B, M, K]` and Y onto `[B, K, N]` by
+/// stride permutation (O(1)), run the packed GEMM per batch entry reading
+/// A through a row stride and packing B straight from the strided tile,
+/// then permute the `[B, M, N]` result to `l_Z` order (O(1) when the
+/// order already matches, the common 2-D case). An operand materializes a
+/// contiguous copy only when its m/k (resp. k/n) label groups do not
+/// collapse to single strides — the layouts the old code permute-copied
+/// for every call.
 ///
 /// Intra-op sharding: a batch dimension at least as wide as the scope's
 /// fan-out shards across batch entries (disjoint `[b, m, n]` slabs,
 /// serial kernel per slab); smaller batches run
-/// [`super::gemm::sgemm_scoped`] per entry, sharding GEMM row blocks
-/// instead. Both splits are bitwise-
-/// identical to the serial loop because the per-entry kernel is.
+/// [`super::gemm::sgemm_packed_scoped`] per entry, sharding GEMM row
+/// blocks instead. Both splits are bitwise-identical to the serial loop
+/// because the per-entry kernel is.
 fn eval_bmm(
     plan: &BmmPlan,
     lx: &LabelList,
     ly: &LabelList,
     lz: &LabelList,
-    x: &Tensor,
-    y: &Tensor,
+    x: &TensorView,
+    y: &TensorView,
     scope: &ShardScope,
 ) -> Result<Tensor> {
     let dim_of_x = |l: &Label| x.shape()[lx.iter().position(|m| m == l).unwrap()];
@@ -313,38 +402,88 @@ fn eval_bmm(
         .iter()
         .map(|l| ly.iter().position(|m2| m2 == l).unwrap())
         .collect();
-    let xc = x.permute(&perm_x)?; // [B.., M.., K..] row-major == [b, m, k]
-    let yc = y.permute(&perm_y)?; // [b, k, n]
+    let xv = x.permute(&perm_x)?; // logical [B.., M.., K..], strided
+    let yv = y.permute(&perm_y)?; // logical [B.., K.., N..], strided
+    let nb_ = plan.batch.len();
+    let nm = plan.m.len();
+    let nk = plan.k.len();
 
-    let mut out = vec![0.0f32; b * m * n];
-    let xd = xc.data();
-    let yd = yc.data();
+    // A in place when the M group collapses to a row stride and the K
+    // group collapses to unit stride (contiguous K runs for the
+    // micro-kernel); otherwise materialize the canonical copy once.
+    let sm = collapse_dims(&xv.shape()[nb_..nb_ + nm], &xv.strides()[nb_..nb_ + nm]);
+    let sk = collapse_dims(&xv.shape()[nb_ + nm..], &xv.strides()[nb_ + nm..]);
+    let a_direct: Option<usize> = match (sm, sk) {
+        (Some(sm), Some(sk)) if k <= 1 || sk == 1 => Some(if m <= 1 { k } else { sm }),
+        _ => None,
+    };
+    let a_mat: Option<Tensor> = if a_direct.is_some() {
+        None
+    } else {
+        Some(xv.to_tensor())
+    };
+    let (a_data, lda, a_offs): (&[f32], usize, Vec<usize>) = match (&a_mat, a_direct) {
+        (Some(t), _) => (t.data(), k, (0..b).map(|bi| bi * m * k).collect()),
+        (None, Some(lda)) => (
+            xv.raw(),
+            lda,
+            batch_offsets(&xv.shape()[..nb_], &xv.strides()[..nb_]),
+        ),
+        (None, None) => unreachable!(),
+    };
+    // B packs from any (row, col) stride pair, so it needs only the two
+    // group collapses — no unit-stride requirement.
+    let rk = collapse_dims(&yv.shape()[nb_..nb_ + nk], &yv.strides()[nb_..nb_ + nk]);
+    let rn = collapse_dims(&yv.shape()[nb_ + nk..], &yv.strides()[nb_ + nk..]);
+    let b_direct: Option<(usize, usize)> = match (rk, rn) {
+        (Some(r), Some(c)) => Some((r, c)),
+        _ => None,
+    };
+    let b_mat: Option<Tensor> = if b_direct.is_some() {
+        None
+    } else {
+        Some(yv.to_tensor())
+    };
+    let (b_data, rsb, csb, b_offs): (&[f32], usize, usize, Vec<usize>) = match (&b_mat, b_direct) {
+        (Some(t), _) => (t.data(), n, 1, (0..b).map(|bi| bi * k * n).collect()),
+        (None, Some((rsb, csb))) => (
+            yv.raw(),
+            rsb,
+            csb,
+            batch_offsets(&yv.shape()[..nb_], &yv.strides()[..nb_]),
+        ),
+        (None, None) => unreachable!(),
+    };
+
+    let mut out = BufferPool::take(b * m * n);
     let p = scope.parallelism();
     if p > 1 && b >= p && b * m * k * n >= SHARD_MIN {
         // Wide batch: at most p shards, each a contiguous batch range
         // running the serial GEMM per entry (bounded fork-join overhead,
-        // matching every other sharded path's p-way split).
+        // matching every other sharded path's p-way split). Pack buffers
+        // come from each helper thread's own pool.
         let optr = SyncPtr::new(out.as_mut_ptr());
         scope.fork_join(p, |s| {
             let (blo, bhi) = chunk_bounds(b, p, s);
             let base = optr.get();
             for bi in blo..bhi {
-                let xo = &xd[bi * m * k..(bi + 1) * m * k];
-                let yo = &yd[bi * k * n..(bi + 1) * k * n];
+                let a = &a_data[a_offs[bi]..];
+                let bp = super::gemm::pack_b_strided(k, n, &b_data[b_offs[bi]..], rsb, csb);
                 // SAFETY: batch slabs [bi*m*n, (bi+1)*m*n) are disjoint
                 // across the disjoint batch ranges.
                 let oo = unsafe { std::slice::from_raw_parts_mut(base.add(bi * m * n), m * n) };
-                super::gemm::sgemm(m, k, n, 1.0, xo, yo, 0.0, oo);
+                oo.fill(0.0); // beta = 0 prologue (pooled buffers are stale)
+                super::gemm::sgemm_rows(0, m, k, n, 1.0, a, lda, &bp, oo);
             }
         });
     } else {
         // Narrow batch (typically b == 1 after decomposition): shard the
         // GEMM's M row blocks instead.
         for bi in 0..b {
-            let xo = &xd[bi * m * k..(bi + 1) * m * k];
-            let yo = &yd[bi * k * n..(bi + 1) * k * n];
+            let a = &a_data[a_offs[bi]..];
+            let bp = super::gemm::pack_b_strided(k, n, &b_data[b_offs[bi]..], rsb, csb);
             let oo = &mut out[bi * m * n..(bi + 1) * m * n];
-            super::gemm::sgemm_scoped(m, k, n, 1.0, xo, yo, 0.0, oo, scope);
+            super::gemm::sgemm_packed_scoped(m, k, n, 1.0, a, lda, &bp, 0.0, oo, scope);
         }
     }
     // canonical output label order: [batch, m, n]
@@ -363,7 +502,7 @@ fn eval_bmm(
         .chain(plan.n.iter().map(dim_of_y))
         .collect();
     let t = Tensor::new(z_shape_canon, out)?;
-    // permute canonical -> requested lz order
+    // permute canonical -> requested lz order (O(1) when identical)
     let perm_z: Vec<usize> = lz
         .iter()
         .map(|l| z_canon.iter().position(|m2| m2 == l).unwrap())
@@ -386,16 +525,18 @@ fn eval_binary_generic(
     x: &Tensor,
     y: &Tensor,
 ) -> Result<Tensor> {
-    eval_binary_generic_scoped(lx, ly, lz, join, agg, x, y, &serial_scope())
+    eval_binary_generic_scoped(lx, ly, lz, join, agg, &x.view(), &y.view(), &serial_scope())
 }
 
-/// [`eval_binary_generic`] with intra-op sharding: when the *leading*
-/// unique label maps to an output coordinate, the iteration splits over
-/// that label's range. Each shard then writes a disjoint set of output
-/// cells, and every cell still receives its contributions in the serial
-/// row-major order (its leading coordinate is fixed), so the result is
-/// bitwise-identical to the serial nest. A leading label that is reduced
-/// away (no disjoint split exists along it) falls back to serial.
+/// [`eval_binary_generic`] with view inputs and intra-op sharding: the
+/// nest walks per-label *view* strides, so strided tiles evaluate in
+/// place. When the *leading* unique label maps to an output coordinate,
+/// the iteration splits over that label's range. Each shard then writes a
+/// disjoint set of output cells, and every cell still receives its
+/// contributions in the serial row-major order (its leading coordinate is
+/// fixed), so the result is bitwise-identical to the serial nest. A
+/// leading label that is reduced away (no disjoint split exists along it)
+/// falls back to serial.
 #[allow(clippy::too_many_arguments)]
 fn eval_binary_generic_scoped(
     lx: &LabelList,
@@ -403,8 +544,8 @@ fn eval_binary_generic_scoped(
     lz: &LabelList,
     join: JoinOp,
     agg: AggOp,
-    x: &Tensor,
-    y: &Tensor,
+    x: &TensorView,
+    y: &TensorView,
     scope: &ShardScope,
 ) -> Result<Tensor> {
     let uniq = crate::einsum::label::concat_dedup(lx, ly);
@@ -419,11 +560,12 @@ fn eval_binary_generic_scoped(
         })
         .collect();
     let bz = project(&ubound, lz, &uniq);
-    let mut out = Tensor::full(&bz, agg.identity());
+    let mut out = Tensor::full_pooled(&bz, agg.identity());
 
-    // Strides of x/y/out with respect to the joint index (per unique label).
-    let xs = strides_of(x.shape());
-    let ys = strides_of(y.shape());
+    // Strides of x/y/out with respect to the joint index (per unique
+    // label). x/y use their *view* strides; out is owned row-major.
+    let xs = x.strides().to_vec();
+    let ys = y.strides().to_vec();
     let zs = strides_of(&bz);
     let stride_for = |labels_of: &LabelList, strides: &[usize], l: &Label| -> usize {
         labels_of
@@ -436,8 +578,8 @@ fn eval_binary_generic_scoped(
     let jy: Vec<usize> = uniq.iter().map(|l| stride_for(ly, &ys, l)).collect();
     let jz: Vec<usize> = uniq.iter().map(|l| stride_for(lz, &zs, l)).collect();
 
-    let xd = x.data();
-    let yd = y.data();
+    let xd = x.raw();
+    let yd = y.raw();
     let rank = uniq.len();
     if ubound.iter().any(|&b| b == 0) {
         return Ok(out);
@@ -600,6 +742,65 @@ mod tests {
     }
 
     #[test]
+    fn view_tiles_evaluate_bitwise_equal_to_owned_tiles() {
+        // The zero-copy contract: a strided tile view must produce the
+        // exact bytes the materialized tile produces, on both the BMM and
+        // generic paths.
+        let x = Tensor::random(&[9, 11], 5);
+        let y = Tensor::random(&[11, 7], 6);
+        let xv = x.slice_view(&[2, 3], &[4, 5]).unwrap();
+        let yv = y.slice_view(&[3, 1], &[5, 4]).unwrap();
+        let xo = x.slice(&[2, 3], &[4, 5]).unwrap();
+        let yo = y.slice(&[3, 1], &[5, 4]).unwrap();
+        let bmm = EinSum::contraction(l("i j"), l("j k"), l("i k"));
+        let via_views = eval_einsum_view(&bmm, &[&xv, &yv]).unwrap();
+        let via_owned = eval_einsum(&bmm, &[&xo, &yo]).unwrap();
+        assert_eq!(via_views, via_owned);
+        let generic = EinSum::Binary {
+            lx: l("i j"),
+            ly: l("j k"),
+            lz: l("i k"),
+            join: JoinOp::SquaredDiff,
+            agg: AggOp::Sum,
+        };
+        let gv = eval_einsum_view(&generic, &[&xv, &yv]).unwrap();
+        let go = eval_einsum(&generic, &[&xo, &yo]).unwrap();
+        assert_eq!(gv, go);
+    }
+
+    #[test]
+    fn transposed_operand_layout_falls_back_and_matches() {
+        // lx = (j, i): the m label has unit stride and the k label has
+        // row stride, so A cannot stream contiguous K runs — the path
+        // must materialize and still match the owned evaluation bitwise.
+        let x = Tensor::random(&[6, 5], 7); // labels (j, i)
+        let y = Tensor::random(&[6, 4], 8); // labels (j, k)
+        let op = EinSum::contraction(l("j i"), l("j k"), l("i k"));
+        let via_views = eval_einsum_view(&op, &[&x.view(), &y.view()]).unwrap();
+        let via_owned = eval_einsum(&op, &[&x, &y]).unwrap();
+        assert_eq!(via_views, via_owned);
+        // sanity vs the generic nest
+        let gen =
+            eval_binary_generic(&l("j i"), &l("j k"), &l("i k"), JoinOp::Mul, AggOp::Sum, &x, &y)
+                .unwrap();
+        assert!(via_owned.allclose(&gen, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn collapse_dims_rules() {
+        // contiguous pair collapses to the inner stride
+        assert_eq!(collapse_dims(&[3, 4], &[4, 1]), Some(1));
+        // chained but non-unit inner stride
+        assert_eq!(collapse_dims(&[3, 4], &[8, 2]), Some(2));
+        // broken chain (a sliced dim): no collapse
+        assert_eq!(collapse_dims(&[3, 4], &[16, 1]), None);
+        // size-1 dims are transparent
+        assert_eq!(collapse_dims(&[1, 4], &[999, 1]), Some(1));
+        assert_eq!(collapse_dims(&[], &[]), Some(0));
+        assert_eq!(collapse_dims(&[1, 1], &[5, 9]), Some(0));
+    }
+
+    #[test]
     fn l2_distance_einsum() {
         // Z_ik <- sum_j (X_ij - Y_jk)^2 — paper's squared-L2 example.
         let x = Tensor::random(&[3, 4], 5);
@@ -664,6 +865,28 @@ mod tests {
         assert_eq!(rowmax.data(), &[3., 5.]);
         let colsum = eval_einsum(&EinSum::reduce(l("i j"), l("j"), AggOp::Sum), &[&x]).unwrap();
         assert_eq!(colsum.data(), &[-3., 3., -3.]);
+    }
+
+    #[test]
+    fn unary_on_view_tiles_matches_owned() {
+        let x = Tensor::random(&[8, 10], 11);
+        let xv = x.slice_view(&[1, 2], &[5, 6]).unwrap();
+        let xo = x.slice(&[1, 2], &[5, 6]).unwrap();
+        for op in [
+            EinSum::map(l("i j"), UnaryOp::Exp),
+            EinSum::reduce(l("i j"), l("i"), AggOp::Sum),
+            EinSum::reduce(l("i j"), l("j"), AggOp::Max),
+            EinSum::Unary {
+                lx: l("i j"),
+                lz: l("j i"),
+                op: UnaryOp::Scale(0.5),
+                agg: AggOp::Sum,
+            },
+        ] {
+            let v = eval_einsum_view(&op, &[&xv]).unwrap();
+            let o = eval_einsum(&op, &[&xo]).unwrap();
+            assert_eq!(v, o, "{op:?}");
+        }
     }
 
     #[test]

@@ -36,13 +36,20 @@
 //!   cores no longer runs at 2/16 utilization. The fan-out is set by
 //!   [`Cluster::with_intra_op`] (default: the executor's thread count);
 //! * task *results* are deterministic regardless of interleaving: each
-//!   task writes only its own `OnceLock` slot, kernel inputs are fixed by
+//!   task writes only its own result slot, kernel inputs are fixed by
 //!   the task graph, aggregations combine their deps in the fixed `deps`
 //!   order — never in completion order — and every sharded kernel is
 //!   bitwise-identical to its serial form (shard boundaries are a pure
 //!   function of the problem shape). `cargo test` locks this in with
 //!   bitwise-determinism differential suites (`tests/
-//!   scheduler_differential.rs`, `tests/gemm_parallel.rs`).
+//!   scheduler_differential.rs`, `tests/gemm_parallel.rs`);
+//! * the data plane is zero-copy: tiles move between tasks as strided
+//!   [`TensorView`]s (input pre-slicing is O(1), kernels read through
+//!   strides, repartition tiles contained in one producer tile alias it),
+//!   and a tile's buffer is recycled into the per-worker
+//!   [`crate::util::BufferPool`] the moment its last consumer has read
+//!   it — reclamation frees buffers, never values, so determinism is
+//!   untouched.
 //!
 //! [`ExecMode::LevelBarrier`] retains the previous implementation — a
 //! persistent thread team synchronized per ASAP level with a barrier — as
@@ -66,11 +73,17 @@ use crate::runtime::KernelEngine;
 use crate::taskgraph::lower::lower_graph;
 use crate::taskgraph::placement::{place, Policy};
 use crate::taskgraph::{TaskGraph, TaskKind, TransferClass};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::tra::relation::{tile_origin, tile_shape};
 use crate::util::{chunk_bounds, serial_scope, ShardScope, SyncPtr, SHARD_MIN};
 use std::collections::HashMap;
-use std::sync::OnceLock;
+use std::sync::Mutex;
+
+/// A task's result slot: the produced tile as a zero-copy view. Slots
+/// are `Option` so the executor can *take* a tile back once every
+/// consumer has read it and recycle its buffer into the
+/// [`crate::util::BufferPool`].
+type ResultSlot = Mutex<Option<TensorView>>;
 
 /// How [`Cluster::execute`] schedules real task execution on host threads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -272,9 +285,10 @@ impl Cluster {
         let mut report = self.model(&tg);
 
         let n = tg.tasks.len();
-        let results: Vec<OnceLock<Tensor>> = (0..n).map(|_| OnceLock::new()).collect();
+        let results: Vec<ResultSlot> = (0..n).map(|_| Mutex::new(None)).collect();
         // Pre-slice all input tiles serially (they carry no deps and model
-        // the paper's free, offline pre-partitioning).
+        // the paper's free, offline pre-partitioning). With views this is
+        // O(1) per tile — no input bytes are copied.
         for t in &tg.tasks {
             if let TaskKind::InputTile { vertex, key } = &t.kind {
                 let vert = g.vertex(*vertex);
@@ -285,8 +299,16 @@ impl Cluster {
                     .unwrap_or_else(|| vec![1; vert.bound.len()]);
                 let origin = tile_origin(&vert.bound, &part, key);
                 let shape = tile_shape(&vert.bound, &part, key);
-                let tile = inputs[vertex].slice(&origin, &shape)?;
-                let _ = results[t.id.0].set(tile);
+                let tile = inputs[vertex].slice_view(&origin, &shape)?;
+                *results[t.id.0].lock().unwrap() = Some(tile);
+            }
+        }
+        // Output-vertex tiles must survive until assembly below; every
+        // other tile is recycled once its last consumer has read it.
+        let mut keep = vec![false; n];
+        for out in g.outputs() {
+            for tid in &tg.vertex_outputs[&out] {
+                keep[tid.0] = true;
             }
         }
         let threads = std::thread::available_parallelism()
@@ -297,7 +319,7 @@ impl Cluster {
         let t0 = std::time::Instant::now();
         match self.exec_mode {
             ExecMode::WorkStealing => {
-                self.run_work_stealing(&tg, g, plan, engine, &results, threads)?
+                self.run_work_stealing(&tg, g, plan, engine, &results, threads, &keep)?
             }
             ExecMode::LevelBarrier => {
                 self.run_level_barrier(&tg, g, plan, engine, &results, threads)?
@@ -314,12 +336,25 @@ impl Cluster {
             let mut dense = Tensor::zeros(&vert.bound);
             for (key, &tid) in crate::tensor::index_space(part).zip(tiles) {
                 let tile = results[tid.0]
-                    .get()
+                    .lock()
+                    .unwrap()
+                    .take()
                     .ok_or_else(|| Error::Exec("missing result tile".into()))?;
                 let origin = tile_origin(&vert.bound, part, &key);
-                dense.write_slice(&origin, tile)?;
+                dense.write_slice_view(&origin, &tile)?;
+                tile.recycle();
             }
             outputs.insert(out, dense);
+        }
+        // Drain whatever is left (un-reclaimed tiles, level-barrier runs)
+        // into the calling thread's pool. Note the reuse horizon: buffers
+        // reclaimed mid-run land in scoped *worker* threads' pools and are
+        // reused within this execute() only (those pools die with the
+        // thread scope); what is drained here survives across executes.
+        for slot in &results {
+            if let Some(v) = slot.lock().unwrap().take() {
+                v.recycle();
+            }
         }
         Ok((outputs, report))
     }
@@ -331,15 +366,31 @@ impl Cluster {
     /// Kernel bodies receive the scheduler's [`ShardScope`] so idle
     /// workers steal intra-op shards of running tasks — the fan-out is
     /// `self.intra_op`, defaulting to the thread count.
+    ///
+    /// After a task completes it decrements each dependency's
+    /// remaining-reader counter (initialized to the occurrence-counted
+    /// consumer count the scheduler also uses); the reader performing the
+    /// final decrement takes the tile out of its slot and recycles its
+    /// buffer into that worker's [`crate::util::BufferPool`] — unless the
+    /// tile belongs to a graph output, which assembly consumes later.
+    /// Worker pools are thread-local to scoped threads, so this
+    /// reclamation feeds allocation reuse *within* the run; cross-run
+    /// reuse comes from the end-of-`execute` drain on the caller's
+    /// thread. Reclamation only recycles buffers with no remaining
+    /// references, so it cannot affect values (and aliased tiles keep
+    /// shared buffers alive).
+    #[allow(clippy::too_many_arguments)]
     fn run_work_stealing(
         &self,
         tg: &TaskGraph,
         g: &EinGraph,
         plan: &Plan,
         engine: &dyn KernelEngine,
-        results: &[OnceLock<Tensor>],
+        results: &[ResultSlot],
         threads: usize,
+        keep: &[bool],
     ) -> Result<()> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
         let consumers = tg.consumers();
         let indegree = tg.indegrees();
         // Placement seeds initial deque affinity: a task's home deque is
@@ -351,6 +402,8 @@ impl Cluster {
         } else {
             self.intra_op
         };
+        let reads_left: Vec<AtomicUsize> =
+            consumers.iter().map(|c| AtomicUsize::new(c.len())).collect();
         crate::util::execute_dag_scoped(
             &consumers,
             &indegree,
@@ -358,11 +411,18 @@ impl Cluster {
             threads,
             intra_op,
             |ti, scope| {
-                if results[ti].get().is_some() {
-                    return Ok(()); // pre-sliced input tile
+                let precomputed = results[ti].lock().unwrap().is_some();
+                if !precomputed {
+                    let t = exec_task(tg, g, plan, engine, results, ti, scope)?;
+                    *results[ti].lock().unwrap() = Some(t);
                 }
-                let t = exec_task(tg, g, plan, engine, results, ti, scope)?;
-                let _ = results[ti].set(t);
+                for &d in &tg.tasks[ti].deps {
+                    if reads_left[d.0].fetch_sub(1, Ordering::AcqRel) == 1 && !keep[d.0] {
+                        if let Some(v) = results[d.0].lock().unwrap().take() {
+                            v.recycle();
+                        }
+                    }
+                }
                 Ok(())
             },
         )
@@ -377,18 +437,18 @@ impl Cluster {
         g: &EinGraph,
         plan: &Plan,
         engine: &dyn KernelEngine,
-        results: &[OnceLock<Tensor>],
+        results: &[ResultSlot],
         threads: usize,
     ) -> Result<()> {
         let by_level = tg.levels();
         if threads == 1 {
             for lvl in &by_level {
                 for &ti in lvl {
-                    if results[ti].get().is_some() {
+                    if results[ti].lock().unwrap().is_some() {
                         continue;
                     }
                     let t = exec_task(tg, g, plan, engine, results, ti, &serial_scope())?;
-                    let _ = results[ti].set(t);
+                    *results[ti].lock().unwrap() = Some(t);
                 }
             }
             return Ok(());
@@ -407,12 +467,12 @@ impl Cluster {
                                 break;
                             }
                             let ti = lvl[i];
-                            if results[ti].get().is_some() {
+                            if results[ti].lock().unwrap().is_some() {
                                 continue; // pre-sliced input tile
                             }
                             match exec_task(tg, g, plan, engine, results, ti, &serial_scope()) {
                                 Ok(t) => {
-                                    let _ = results[ti].set(t);
+                                    *results[ti].lock().unwrap() = Some(t);
                                 }
                                 Err(e) => {
                                     *err.lock().unwrap() = Some(e);
@@ -434,19 +494,25 @@ impl Cluster {
 /// Execute a single task; all deps already computed. `scope` is the
 /// executor's intra-op shard capability (serial in the level-barrier
 /// reference mode); every sharded path is bitwise-identical to serial.
+///
+/// Dependencies are read as cheap view clones (an `Arc` bump) out of
+/// their slots, so a concurrent reclamation of *other* tasks' slots can
+/// never invalidate them.
 fn exec_task(
     tg: &TaskGraph,
     g: &EinGraph,
     plan: &Plan,
     engine: &dyn KernelEngine,
-    results: &[OnceLock<Tensor>],
+    results: &[ResultSlot],
     ti: usize,
     scope: &ShardScope,
-) -> Result<Tensor> {
+) -> Result<TensorView> {
     let task = &tg.tasks[ti];
-    let dep_tensor = |d: crate::taskgraph::TaskId| -> Result<&Tensor> {
+    let dep_view = |d: crate::taskgraph::TaskId| -> Result<TensorView> {
         results[d.0]
-            .get()
+            .lock()
+            .unwrap()
+            .clone()
             .ok_or_else(|| Error::Exec(format!("dep {} not computed", d.0)))
     };
     match &task.kind {
@@ -455,12 +521,13 @@ fn exec_task(
         )),
         TaskKind::Kernel { vertex, .. } => {
             let op = &g.vertex(*vertex).op;
-            let ins: Vec<&Tensor> = task
+            let ins: Vec<TensorView> = task
                 .deps
                 .iter()
-                .map(|&d| dep_tensor(d))
+                .map(|&d| dep_view(d))
                 .collect::<Result<_>>()?;
-            engine.eval_scoped(op, &ins, scope)
+            let refs: Vec<&TensorView> = ins.iter().collect();
+            engine.eval_view_scoped(op, &refs, scope).map(Tensor::into_view)
         }
         TaskKind::Agg { vertex, .. } => {
             let agg = match &g.vertex(*vertex).op {
@@ -472,42 +539,52 @@ fn exec_task(
             // `deps` order, never completion order. Large folds chunk the
             // output buffer across shards — each cell still combines its
             // deps in the same order, so chunking cannot change bits.
-            let mut acc = dep_tensor(task.deps[0])?.clone();
-            let rest: Vec<&Tensor> = task.deps[1..]
+            let mut acc = dep_view(task.deps[0])?.to_tensor();
+            let rest: Vec<TensorView> = task.deps[1..]
                 .iter()
-                .map(|&d| dep_tensor(d))
+                .map(|&d| dep_view(d))
                 .collect::<Result<_>>()?;
-            let p = scope.parallelism();
-            if p > 1 && !rest.is_empty() && acc.len() >= SHARD_MIN {
-                for t in &rest {
-                    if t.shape() != acc.shape() {
-                        return Err(Error::Shape(format!(
-                            "aggregate shape mismatch: {:?} vs {:?}",
-                            acc.shape(),
-                            t.shape()
-                        )));
-                    }
+            for t in &rest {
+                if t.shape() != acc.shape() {
+                    return Err(Error::Shape(format!(
+                        "aggregate shape mismatch: {:?} vs {:?}",
+                        acc.shape(),
+                        t.shape()
+                    )));
                 }
+            }
+            // Kernel outputs are contiguous whole-buffer views; fold over
+            // their flat slices. (A non-contiguous dep — impossible today
+            // — would materialize below.)
+            let p = scope.parallelism();
+            if p > 1
+                && !rest.is_empty()
+                && acc.len() >= SHARD_MIN
+                && rest.iter().all(|t| t.is_contiguous())
+            {
                 let len = acc.len();
                 let aptr = SyncPtr::new(acc.data_mut().as_mut_ptr());
+                let rslices: Vec<&[f32]> =
+                    rest.iter().map(|t| t.as_contiguous().unwrap()).collect();
                 scope.fork_join(p, |ci| {
                     let (lo, hi) = chunk_bounds(len, p, ci);
                     let base = aptr.get();
-                    for t in &rest {
-                        let td = &t.data()[lo..hi];
+                    for td in &rslices {
                         // SAFETY: [lo, hi) chunks are pairwise disjoint.
                         let ad = unsafe { std::slice::from_raw_parts_mut(base.add(lo), hi - lo) };
-                        for (a, &b) in ad.iter_mut().zip(td) {
+                        for (a, &b) in ad.iter_mut().zip(&td[lo..hi]) {
                             *a = agg.combine(*a, b);
                         }
                     }
                 });
             } else {
                 for t in &rest {
-                    acc.accumulate(t, |a, b| agg.combine(a, b))?;
+                    let owned = t.to_tensor();
+                    acc.accumulate(&owned, |a, b| agg.combine(a, b))?;
+                    owned.recycle();
                 }
             }
-            Ok(acc)
+            Ok(acc.into_view())
         }
         TaskKind::Repart {
             producer,
@@ -520,21 +597,39 @@ fn exec_task(
             let need = plan.required_in_part(g, *consumer, *operand);
             let t_origin = tile_origin(pb, &need, key);
             let t_shape = tile_shape(pb, &need, key);
-            let mut out = Tensor::zeros(&t_shape);
             // Producer tile keys are recovered from each dep's position in
             // the producer's output list (row-major I(d_Z) order) — the
             // task's own `key` field may range over different labels (a
             // Kernel task keys over the unique labels).
             let vouts = &tg.vertex_outputs[producer];
-            for &d in &task.deps {
+            let dep_key = |d: crate::taskgraph::TaskId| -> Result<Vec<usize>> {
                 let pos = vouts
                     .iter()
                     .position(|&t| t == d)
                     .ok_or_else(|| Error::Exec("repart dep not a producer output".into()))?;
-                let pkey = crate::tra::relation::delinearize(pos, have);
+                Ok(crate::tra::relation::delinearize(pos, have))
+            };
+            // A single overlapping producer tile contains the whole
+            // consumer region: alias it as a zero-copy sub-view.
+            if task.deps.len() == 1 {
+                let pkey = dep_key(task.deps[0])?;
+                let p_origin = tile_origin(pb, have, &pkey);
+                let rel_off: Vec<usize> = t_origin
+                    .iter()
+                    .zip(&p_origin)
+                    .map(|(t, p)| t - p)
+                    .collect();
+                return dep_view(task.deps[0])?.slice(&rel_off, &t_shape);
+            }
+            // Otherwise move exactly the overlapping sub-regions. The
+            // union of intersections covers the tile once, so the pooled
+            // buffer is fully overwritten.
+            let mut out = Tensor::full_pooled(&t_shape, 0.0);
+            for &d in &task.deps {
+                let pkey = dep_key(d)?;
                 let p_origin = tile_origin(pb, have, &pkey);
                 let p_shape = tile_shape(pb, have, &pkey);
-                let ptile = dep_tensor(d)?;
+                let ptile = dep_view(d)?;
                 // intersection in global coords
                 let rank = pb.len();
                 let mut lo = vec![0usize; rank];
@@ -558,9 +653,9 @@ fn exec_task(
                 let dst_off: Vec<usize> =
                     lo.iter().zip(&t_origin).map(|(a, o)| a - o).collect();
                 let piece = ptile.slice(&src_off, &sz)?;
-                out.write_slice(&dst_off, &piece)?;
+                out.write_slice_view(&dst_off, &piece)?;
             }
-            Ok(out)
+            Ok(out.into_view())
         }
     }
 }

@@ -18,25 +18,9 @@ use crate::einsum::graph::EinGraph;
 use crate::einsum::label::project;
 use crate::error::{Error, Result};
 use crate::tensor::index_space;
-use crate::tra::relation::{linearize, tile_offset, tile_size};
-
-/// Per-dimension producer tile indices overlapping a consumer region.
-fn overlapping_tiles(bound: usize, parts: usize, origin: usize, len: usize) -> (usize, usize) {
-    // balanced tiling boundaries are monotone; scan (parts is small)
-    let mut lo = None;
-    let mut hi = 0;
-    for i in 0..parts {
-        let o = tile_offset(bound, parts, i);
-        let s = tile_size(bound, parts, i);
-        if o < origin + len && o + s > origin {
-            if lo.is_none() {
-                lo = Some(i);
-            }
-            hi = i;
-        }
-    }
-    (lo.unwrap_or(0), hi)
-}
+use crate::tra::relation::{
+    linearize, overlapping_tiles, tile_bytes, tile_offset, tile_size,
+};
 
 /// Lower a planned EinGraph to a (not yet placed) task graph.
 pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
@@ -53,12 +37,7 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                     .unwrap_or_else(|| vec![1; vert.bound.len()]);
                 let mut outs = Vec::new();
                 for key in index_space(&part) {
-                    let bytes: usize = key
-                        .iter()
-                        .enumerate()
-                        .map(|(d, &k)| tile_size(vert.bound[d], part[d], k))
-                        .product::<usize>()
-                        * 4;
+                    let bytes = tile_bytes(&vert.bound, &part, &key);
                     outs.push(tg.push_task(
                         TaskKind::InputTile { vertex: v, key },
                         vec![],
@@ -114,12 +93,7 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                                     .collect();
                                 deps.push(have_tiles[linearize(&pkey, &have)]);
                             }
-                            let bytes: usize = key
-                                .iter()
-                                .enumerate()
-                                .map(|(dim, &k)| tile_size(cb[dim], need[dim], k))
-                                .product::<usize>()
-                                * 4;
+                            let bytes = tile_bytes(cb, &need, &key);
                             tiles.push(tg.push_task(
                                 TaskKind::Repart {
                                     producer: c,
@@ -155,12 +129,7 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                     }
                     // output tile shape over lz under (bz, dz) at zkey
                     let zkey = project(&key, lz, &uniq);
-                    let bytes: usize = zkey
-                        .iter()
-                        .enumerate()
-                        .map(|(dim, &k)| tile_size(bz[dim], dz[dim], k))
-                        .product::<usize>()
-                        * 4;
+                    let bytes = tile_bytes(bz, &dz, &zkey);
                     kernel_by_key.push(tg.push_task(
                         TaskKind::Kernel { vertex: v, key },
                         deps,
@@ -186,12 +155,7 @@ pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
                         let members = groups.remove(&zkey).ok_or_else(|| {
                             Error::TaskGraph(format!("missing agg group {zkey:?}"))
                         })?;
-                        let bytes: usize = zkey
-                            .iter()
-                            .enumerate()
-                            .map(|(dim, &k)| tile_size(bz[dim], dz[dim], k))
-                            .product::<usize>()
-                            * 4;
+                        let bytes = tile_bytes(bz, &dz, &zkey);
                         let elems = (bytes / 4) as f64;
                         let flops = elems * (members.len() as f64 - 1.0);
                         outs.push(tg.push_task(

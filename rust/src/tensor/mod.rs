@@ -1,24 +1,31 @@
-//! Dense row-major `f32` tensors.
+//! Dense row-major `f32` tensors and strided views over them.
 //!
-//! This is the value type pushed through the tensor-relational runtime: a
-//! tensor relation stores *sub-tensors* of this type keyed by partition
-//! index (see [`crate::tra::relation`]). Only the operations the TRA
-//! executor needs are provided: slicing a region out (partitioning a tensor
-//! into a relation), assembling regions back (repartition / final
-//! collection), axis permutation (mapping einsum label orders onto the
-//! canonical batched-matmul layout), and elementwise comparison for tests.
+//! [`Tensor`] is the owned value type pushed through the tensor-relational
+//! runtime; [`TensorView`] is the zero-copy window type the
+//! data plane moves instead of copies — a tensor relation stores
+//! *sub-tensor views* keyed by partition index (see
+//! [`crate::tra::relation`]). Tensor buffers are reference-counted
+//! (`Arc`), so cloning a tensor, taking a whole-tensor view, and the
+//! identity permutation are all O(1); mutation goes through copy-on-write
+//! ([`Tensor::data_mut`]).
 
 use crate::error::{Error, Result};
-use crate::util::Rng;
+use crate::util::{BufferPool, Rng};
+use std::sync::Arc;
+
+mod view;
+pub use view::TensorView;
 
 /// A dense, row-major (C-order), `f32` tensor of arbitrary rank.
 ///
 /// Rank-0 tensors (scalars) are represented with an empty shape and a
-/// single element.
+/// single element. The buffer is shared (`Arc`): `clone()` is O(1) and
+/// [`data_mut`](Self::data_mut) copies-on-write only when the buffer is
+/// actually shared.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl Tensor {
@@ -33,7 +40,17 @@ impl Tensor {
                 data.len()
             )));
         }
-        Ok(Tensor { shape, data })
+        Ok(Tensor {
+            shape,
+            data: Arc::new(data),
+        })
+    }
+
+    /// Build a tensor around an already-shared buffer (no copy). Internal:
+    /// used by [`TensorView::to_tensor`] and the pooled constructors.
+    pub(crate) fn from_shared(shape: Vec<usize>, data: Arc<Vec<f32>>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
     }
 
     /// All-zeros tensor of the given shape.
@@ -41,7 +58,7 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: vec![0.0; n],
+            data: Arc::new(vec![0.0; n]),
         }
     }
 
@@ -50,7 +67,18 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: vec![v; n],
+            data: Arc::new(vec![v; n]),
+        }
+    }
+
+    /// Like [`full`](Self::full), but drawing the buffer from the calling
+    /// thread's [`BufferPool`] — the hot-path constructor for kernel
+    /// outputs (recycled later via [`recycle`](Self::recycle)).
+    pub fn full_pooled(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: Arc::new(BufferPool::take_filled(n, v)),
         }
     }
 
@@ -62,7 +90,7 @@ impl Tensor {
         let data = (0..n).map(|_| rng.next_centered()).collect();
         Tensor {
             shape: shape.to_vec(),
-            data,
+            data: Arc::new(data),
         }
     }
 
@@ -72,7 +100,7 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: (0..n).map(|i| i as f32).collect(),
+            data: Arc::new((0..n).map(|i| i as f32).collect()),
         }
     }
 
@@ -80,7 +108,7 @@ impl Tensor {
     pub fn scalar(v: f32) -> Self {
         Tensor {
             shape: vec![],
-            data: vec![v],
+            data: Arc::new(vec![v]),
         }
     }
 
@@ -109,12 +137,43 @@ impl Tensor {
         &self.data
     }
 
+    /// Mutable access to the buffer, copying-on-write if it is shared
+    /// with views or clones.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        Arc::make_mut(&mut self.data)
     }
 
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        match Arc::try_unwrap(self.data) {
+            Ok(v) => v,
+            Err(shared) => (*shared).clone(),
+        }
+    }
+
+    /// Return this tensor's buffer to the calling thread's
+    /// [`BufferPool`] if this was its last reference (views and clones
+    /// keep it alive); otherwise just drop.
+    pub fn recycle(self) {
+        if let Ok(v) = Arc::try_unwrap(self.data) {
+            BufferPool::give(v);
+        }
+    }
+
+    /// O(1) whole-tensor [`TensorView`] (shares the buffer).
+    pub fn view(&self) -> TensorView {
+        TensorView::from_parts(self.data.clone(), 0, self.shape.clone(), self.strides())
+    }
+
+    /// O(1) conversion into a whole-tensor [`TensorView`].
+    pub fn into_view(self) -> TensorView {
+        let strides = self.strides();
+        TensorView::from_parts(self.data, 0, self.shape, strides)
+    }
+
+    /// O(1) view of the hyper-rectangle at `offset` with size `size` —
+    /// the zero-copy counterpart of [`slice`](Self::slice).
+    pub fn slice_view(&self, offset: &[usize], size: &[usize]) -> Result<TensorView> {
+        self.view().slice(offset, size)
     }
 
     /// Row-major strides for the current shape.
@@ -124,17 +183,13 @@ impl Tensor {
 
     /// Read the element at a multi-index.
     pub fn at(&self, idx: &[usize]) -> f32 {
-        debug_assert_eq!(idx.len(), self.shape.len());
-        let s = self.strides();
-        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
-        self.data[off]
+        self.data[flat_offset(&self.shape, idx)]
     }
 
-    /// Write the element at a multi-index.
+    /// Write the element at a multi-index (copy-on-write if shared).
     pub fn set(&mut self, idx: &[usize], v: f32) {
-        let s = self.strides();
-        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
-        self.data[off] = v;
+        let off = flat_offset(&self.shape, idx);
+        Arc::make_mut(&mut self.data)[off] = v;
     }
 
     /// Reshape without moving data (element count must match).
@@ -217,7 +272,7 @@ impl Tensor {
             }
         }
         if self.rank() == 0 {
-            self.data[0] = src.data[0];
+            self.data_mut()[0] = src.data[0];
             return Ok(());
         }
         let dst_strides = self.strides();
@@ -226,16 +281,80 @@ impl Tensor {
         let outer: usize = src.shape[..last].iter().product();
         let mut idx = vec![0usize; last];
         let mut src_pos = 0usize;
+        let dst = Arc::make_mut(&mut self.data);
         for _ in 0..outer.max(1) {
             let mut base = offset[last] * dst_strides[last];
             for d in 0..last {
                 base += (offset[d] + idx[d]) * dst_strides[d];
             }
-            self.data[base..base + row_len].copy_from_slice(&src.data[src_pos..src_pos + row_len]);
+            dst[base..base + row_len].copy_from_slice(&src.data[src_pos..src_pos + row_len]);
             src_pos += row_len;
             for d in (0..last).rev() {
                 idx[d] += 1;
                 if idx[d] < src.shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write a [`TensorView`]'s elements into this tensor at `offset` —
+    /// the strided-source counterpart of [`write_slice`](Self::write_slice)
+    /// (used to assemble relations of view tiles back into dense form).
+    pub fn write_slice_view(&mut self, offset: &[usize], src: &TensorView) -> Result<()> {
+        if offset.len() != self.rank() || src.rank() != self.rank() {
+            return Err(Error::Shape(format!(
+                "write_slice_view rank mismatch: dst {:?}, offset {:?}, src {:?}",
+                self.shape,
+                offset,
+                src.shape()
+            )));
+        }
+        for d in 0..self.rank() {
+            if offset[d] + src.shape()[d] > self.shape[d] {
+                return Err(Error::Shape(format!(
+                    "write_slice_view out of bounds on dim {}: {}+{} > {}",
+                    d,
+                    offset[d],
+                    src.shape()[d],
+                    self.shape[d]
+                )));
+            }
+        }
+        if src.is_empty() {
+            return Ok(());
+        }
+        if self.rank() == 0 {
+            self.data_mut()[0] = src.at(&[]);
+            return Ok(());
+        }
+        let dst_strides = self.strides();
+        let last = self.rank() - 1;
+        let row_len = src.shape()[last];
+        let src_strides = src.strides().to_vec();
+        let src_data = src.raw();
+        let outer: usize = src.shape()[..last].iter().product();
+        let mut idx = vec![0usize; last];
+        let dst = Arc::make_mut(&mut self.data);
+        for _ in 0..outer.max(1) {
+            let mut base = offset[last] * dst_strides[last];
+            let mut sbase = 0usize;
+            for d in 0..last {
+                base += (offset[d] + idx[d]) * dst_strides[d];
+                sbase += idx[d] * src_strides[d];
+            }
+            if src_strides[last] == 1 {
+                dst[base..base + row_len].copy_from_slice(&src_data[sbase..sbase + row_len]);
+            } else {
+                for j in 0..row_len {
+                    dst[base + j] = src_data[sbase + j * src_strides[last]];
+                }
+            }
+            for d in (0..last).rev() {
+                idx[d] += 1;
+                if idx[d] < src.shape()[d] {
                     break;
                 }
                 idx[d] = 0;
@@ -260,7 +379,8 @@ impl Tensor {
             seen[p] = true;
         }
         // Identity fast path (hot in the executor: most kernel calls are
-        // already in canonical layout).
+        // already in canonical layout). O(1): the clone shares the
+        // reference-counted buffer, no floats move.
         if perm.iter().enumerate().all(|(i, &p)| i == p) {
             return Ok(self.clone());
         }
@@ -338,7 +458,7 @@ impl Tensor {
         Ok(self
             .data
             .iter()
-            .zip(&other.data)
+            .zip(other.data.iter())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max))
     }
@@ -350,7 +470,7 @@ impl Tensor {
         }
         self.data
             .iter()
-            .zip(&other.data)
+            .zip(other.data.iter())
             .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
     }
 
@@ -362,11 +482,22 @@ impl Tensor {
                 self.shape, other.shape
             )));
         }
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        let dst = Arc::make_mut(&mut self.data);
+        for (a, b) in dst.iter_mut().zip(other.data.iter()) {
             *a = op(*a, *b);
         }
         Ok(())
     }
+}
+
+/// Row-major flat offset of `idx` within `shape` (no allocation).
+#[inline]
+fn flat_offset(shape: &[usize], idx: &[usize]) -> usize {
+    debug_assert_eq!(idx.len(), shape.len());
+    idx.iter().zip(shape).fold(0usize, |acc, (&i, &d)| {
+        debug_assert!(i < d);
+        acc * d + i
+    })
 }
 
 /// Row-major strides of a shape. Empty shape -> empty strides.
@@ -526,6 +657,53 @@ mod tests {
         let b = Tensor::full(&[2], 1.0 + 1e-7);
         assert!(a.allclose(&b, 1e-5, 1e-6));
         assert!(a.max_abs_diff(&b).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn clone_is_shared_and_cow_isolates() {
+        let mut a = Tensor::iota(&[2, 3]);
+        let b = a.clone();
+        // clone shares the buffer...
+        assert!(std::ptr::eq(a.data().as_ptr(), b.data().as_ptr()));
+        // ...until a write, which copies a's buffer and leaves b intact.
+        a.set(&[0, 0], 99.0);
+        assert_eq!(a.at(&[0, 0]), 99.0);
+        assert_eq!(b.at(&[0, 0]), 0.0);
+        assert!(!std::ptr::eq(a.data().as_ptr(), b.data().as_ptr()));
+    }
+
+    #[test]
+    fn identity_permute_shares_buffer() {
+        let t = Tensor::random(&[3, 5], 1);
+        let p = t.permute(&[0, 1]).unwrap();
+        assert!(std::ptr::eq(t.data().as_ptr(), p.data().as_ptr()));
+    }
+
+    #[test]
+    fn write_slice_view_matches_write_slice() {
+        let t = Tensor::iota(&[4, 6]);
+        let owned = t.slice(&[1, 2], &[2, 3]).unwrap();
+        let view = t.slice_view(&[1, 2], &[2, 3]).unwrap();
+        let mut a = Tensor::zeros(&[4, 6]);
+        let mut b = Tensor::zeros(&[4, 6]);
+        a.write_slice(&[1, 2], &owned).unwrap();
+        b.write_slice_view(&[1, 2], &view).unwrap();
+        assert_eq!(a, b);
+        // strided source (transposed view) gathers per element
+        let tv = view.permute(&[1, 0]).unwrap();
+        let mut c = Tensor::zeros(&[3, 2]);
+        c.write_slice_view(&[0, 0], &tv).unwrap();
+        assert_eq!(c, owned.permute(&[1, 0]).unwrap());
+        assert!(b.write_slice_view(&[3, 4], &view).is_err());
+    }
+
+    #[test]
+    fn into_data_handles_sharing() {
+        let t = Tensor::iota(&[2, 2]);
+        let keep = t.clone();
+        let v = t.into_data(); // shared: falls back to a copy
+        assert_eq!(v, keep.data());
+        assert_eq!(keep.into_data(), v); // unique: moves out
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Strided, reference-counted tensor views — the zero-copy tile type.
+//!
+//! A [`TensorView`] is `(shared buffer, offset, shape, strides)`: it
+//! describes a hyper-rectangle *inside* a [`Tensor`]'s buffer without
+//! owning or copying it. Partitioning a tensor into a relation
+//! ([`crate::tra::relation::TensorRelation::partition`]) produces one
+//! view per tile in O(1) each; slicing and axis permutation on a view
+//! are stride arithmetic, never data movement. Paths that genuinely need
+//! a contiguous, row-major buffer (PJRT kernels, network serialization)
+//! call [`TensorView::to_tensor`], which is itself O(1) whenever the
+//! view already covers a whole contiguous buffer.
+
+use crate::error::{Error, Result};
+use crate::tensor::{strides_of, Tensor};
+use crate::util::BufferPool;
+use std::sync::Arc;
+
+/// A strided window into a shared `f32` buffer.
+///
+/// The element at multi-index `idx` lives at flat position
+/// `offset + Σ idx[d] * strides[d]` of the underlying buffer. Views are
+/// cheap to clone (an `Arc` bump plus two small `Vec`s) and immutable:
+/// all kernels read through views and write fresh output buffers.
+///
+/// ```
+/// use eindecomp::tensor::Tensor;
+/// let t = Tensor::iota(&[4, 4]);
+/// // O(1): no floats are copied to make or slice a view.
+/// let tile = t.slice_view(&[2, 0], &[2, 2]).unwrap();
+/// assert_eq!(tile.shape(), &[2, 2]);
+/// assert_eq!(tile.at(&[0, 1]), t.at(&[2, 1]));
+/// // Materialize only when contiguity is required.
+/// assert_eq!(tile.to_tensor().data(), &[8.0, 9.0, 12.0, 13.0]);
+/// ```
+#[derive(Clone)]
+pub struct TensorView {
+    buf: Arc<Vec<f32>>,
+    offset: usize,
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+}
+
+impl std::fmt::Debug for TensorView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TensorView")
+            .field("offset", &self.offset)
+            .field("shape", &self.shape)
+            .field("strides", &self.strides)
+            .finish()
+    }
+}
+
+impl TensorView {
+    /// Build a view from raw parts. Internal: callers guarantee that
+    /// every addressable element lies inside `buf` (checked here).
+    pub(crate) fn from_parts(
+        buf: Arc<Vec<f32>>,
+        offset: usize,
+        shape: Vec<usize>,
+        strides: Vec<usize>,
+    ) -> TensorView {
+        debug_assert_eq!(shape.len(), strides.len());
+        if !shape.iter().any(|&d| d == 0) {
+            let max: usize = offset
+                + shape
+                    .iter()
+                    .zip(&strides)
+                    .map(|(&d, &s)| (d - 1) * s)
+                    .sum::<usize>();
+            debug_assert!(
+                max < buf.len().max(1),
+                "view out of bounds: max index {max}, buffer {}",
+                buf.len()
+            );
+        }
+        TensorView {
+            buf,
+            offset,
+            shape,
+            strides,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Strides of this view **in the underlying buffer** (not the
+    /// row-major strides of `shape()` unless the view is contiguous).
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Logical element count, `prod(shape)`.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical size in bytes (f32 elements).
+    pub fn bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Read the element at a multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let off: usize = idx.iter().zip(&self.strides).map(|(i, s)| i * s).sum();
+        self.buf[self.offset + off]
+    }
+
+    /// The addressable tail of the underlying buffer, starting at this
+    /// view's origin. Kernels index it via [`strides`](Self::strides);
+    /// construction guarantees every `(idx < shape) · strides` offset is
+    /// in bounds.
+    pub(crate) fn raw(&self) -> &[f32] {
+        &self.buf[self.offset..]
+    }
+
+    /// Whether elements are laid out exactly row-major and adjacent
+    /// (strides equal the row-major strides of `shape`).
+    pub fn is_contiguous(&self) -> bool {
+        self.strides == strides_of(&self.shape)
+    }
+
+    /// The view's elements as a single contiguous slice, when the layout
+    /// allows it (no copy).
+    pub fn as_contiguous(&self) -> Option<&[f32]> {
+        if self.is_contiguous() {
+            Some(&self.buf[self.offset..self.offset + self.len()])
+        } else {
+            None
+        }
+    }
+
+    /// O(1) sub-view: the hyper-rectangle at `offset` with size `size`.
+    pub fn slice(&self, offset: &[usize], size: &[usize]) -> Result<TensorView> {
+        if offset.len() != self.rank() || size.len() != self.rank() {
+            return Err(Error::Shape(format!(
+                "view slice rank mismatch: view {:?}, offset {offset:?}, size {size:?}",
+                self.shape
+            )));
+        }
+        for d in 0..self.rank() {
+            if offset[d] + size[d] > self.shape[d] {
+                return Err(Error::Shape(format!(
+                    "view slice out of bounds on dim {d}: {}+{} > {}",
+                    offset[d], size[d], self.shape[d]
+                )));
+            }
+        }
+        let extra: usize = offset.iter().zip(&self.strides).map(|(o, s)| o * s).sum();
+        Ok(TensorView::from_parts(
+            self.buf.clone(),
+            self.offset + extra,
+            size.to_vec(),
+            self.strides.clone(),
+        ))
+    }
+
+    /// O(1) axis permutation: output dim `i` is input dim `perm[i]`.
+    /// Pure stride shuffling — no data moves, which is what deletes the
+    /// "unpack" materialization on the BMM path.
+    pub fn permute(&self, perm: &[usize]) -> Result<TensorView> {
+        if perm.len() != self.rank() {
+            return Err(Error::Shape(format!(
+                "view permute rank mismatch: {:?} vs {perm:?}",
+                self.shape
+            )));
+        }
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if p >= perm.len() || seen[p] {
+                return Err(Error::Shape(format!("invalid permutation {perm:?}")));
+            }
+            seen[p] = true;
+        }
+        Ok(TensorView::from_parts(
+            self.buf.clone(),
+            self.offset,
+            perm.iter().map(|&p| self.shape[p]).collect(),
+            perm.iter().map(|&p| self.strides[p]).collect(),
+        ))
+    }
+
+    /// Copy the view's elements, row-major, into `dst` (which must hold
+    /// exactly `len()` floats). Innermost runs with stride 1 are memcpys.
+    pub fn copy_into(&self, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.len(), "copy_into: size mismatch");
+        if self.is_empty() {
+            return;
+        }
+        let src = self.raw();
+        if self.rank() == 0 {
+            dst[0] = src[0];
+            return;
+        }
+        // Rank-2 strided gather (e.g. a transposed view): 32x32 cache
+        // tiles, mirroring `Tensor::permute`'s transpose fast path.
+        if self.rank() == 2 && self.strides[1] != 1 {
+            let (r, c) = (self.shape[0], self.shape[1]);
+            let (s0, s1) = (self.strides[0], self.strides[1]);
+            const TB: usize = 32;
+            for i0 in (0..r).step_by(TB) {
+                let imax = (i0 + TB).min(r);
+                for j0 in (0..c).step_by(TB) {
+                    let jmax = (j0 + TB).min(c);
+                    for i in i0..imax {
+                        for j in j0..jmax {
+                            dst[i * c + j] = src[i * s0 + j * s1];
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        let last = self.rank() - 1;
+        let inner = self.shape[last];
+        let inner_stride = self.strides[last];
+        let outer: usize = self.shape[..last].iter().product();
+        let mut idx = vec![0usize; last];
+        let mut out_pos = 0usize;
+        for _ in 0..outer.max(1) {
+            let mut base = 0usize;
+            for d in 0..last {
+                base += idx[d] * self.strides[d];
+            }
+            if inner_stride == 1 {
+                dst[out_pos..out_pos + inner].copy_from_slice(&src[base..base + inner]);
+            } else {
+                for j in 0..inner {
+                    dst[out_pos + j] = src[base + j * inner_stride];
+                }
+            }
+            out_pos += inner;
+            for d in (0..last).rev() {
+                idx[d] += 1;
+                if idx[d] < self.shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
+    /// Materialize an owned, contiguous [`Tensor`] with the same
+    /// elements. O(1) when the view already covers a whole contiguous
+    /// buffer (the common case for kernel outputs wrapped via
+    /// [`Tensor::into_view`]); otherwise one strided copy into a pooled
+    /// buffer.
+    pub fn to_tensor(&self) -> Tensor {
+        if self.is_contiguous() && self.offset == 0 && self.len() == self.buf.len() {
+            return Tensor::from_shared(self.shape.clone(), self.buf.clone());
+        }
+        let mut out = BufferPool::take(self.len());
+        self.copy_into(&mut out);
+        Tensor::from_shared(self.shape.clone(), Arc::new(out))
+    }
+
+    /// Row-major copy of the elements (testing / display aid).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.copy_into(&mut out);
+        out
+    }
+
+    /// Recycle the underlying buffer into the thread's [`BufferPool`] if
+    /// this view was its last reference; otherwise just drop the view.
+    pub fn recycle(self) {
+        if let Ok(v) = Arc::try_unwrap(self.buf) {
+            BufferPool::give(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_view_matches_tensor() {
+        let t = Tensor::random(&[3, 5], 1);
+        let v = t.view();
+        assert!(v.is_contiguous());
+        assert_eq!(v.as_contiguous().unwrap(), t.data());
+        assert_eq!(v.to_tensor(), t);
+        assert_eq!(v.strides(), t.strides().as_slice());
+    }
+
+    #[test]
+    fn slice_view_matches_owned_slice() {
+        let t = Tensor::iota(&[4, 6, 3]);
+        let (off, sz) = (&[1usize, 2, 0][..], &[2usize, 3, 2][..]);
+        let owned = t.slice(off, sz).unwrap();
+        let view = t.slice_view(off, sz).unwrap();
+        assert_eq!(view.shape(), owned.shape());
+        assert_eq!(view.to_vec(), owned.data());
+        assert_eq!(view.to_tensor(), owned);
+        assert!(!view.is_contiguous());
+    }
+
+    #[test]
+    fn nested_slicing_composes() {
+        let t = Tensor::iota(&[8, 8]);
+        let a = t.slice_view(&[2, 2], &[4, 4]).unwrap();
+        let b = a.slice(&[1, 1], &[2, 2]).unwrap();
+        assert_eq!(b.at(&[0, 0]), t.at(&[3, 3]));
+        assert_eq!(b.to_vec(), t.slice(&[3, 3], &[2, 2]).unwrap().data());
+    }
+
+    #[test]
+    fn permute_is_stride_shuffle() {
+        let t = Tensor::iota(&[2, 3, 4]);
+        let v = t.view().permute(&[2, 0, 1]).unwrap();
+        assert_eq!(v.shape(), &[4, 2, 3]);
+        assert_eq!(v.at(&[3, 1, 2]), t.at(&[1, 2, 3]));
+        assert_eq!(v.to_tensor(), t.permute(&[2, 0, 1]).unwrap());
+    }
+
+    #[test]
+    fn permute_of_slice_matches_materialized() {
+        let t = Tensor::random(&[5, 7], 9);
+        let v = t.slice_view(&[1, 2], &[3, 4]).unwrap();
+        let pv = v.permute(&[1, 0]).unwrap();
+        let want = t.slice(&[1, 2], &[3, 4]).unwrap().permute(&[1, 0]).unwrap();
+        assert_eq!(pv.to_tensor(), want);
+    }
+
+    #[test]
+    fn rank0_and_empty_views() {
+        let s = Tensor::scalar(4.5);
+        let v = s.view();
+        assert_eq!(v.rank(), 0);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v.at(&[]), 4.5);
+        assert_eq!(v.to_tensor(), s);
+        let e = Tensor::zeros(&[0, 3]);
+        assert!(e.view().is_empty());
+        assert_eq!(e.view().to_vec(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn out_of_bounds_slices_rejected() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(t.view().slice(&[3, 0], &[2, 2]).is_err());
+        assert!(t.view().slice(&[0], &[1]).is_err());
+        assert!(t.view().permute(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn to_tensor_is_o1_for_whole_buffers() {
+        let t = Tensor::random(&[16, 16], 3);
+        let v = t.view();
+        let u = v.to_tensor();
+        // Shares the allocation: no copy happened.
+        assert!(std::ptr::eq(t.data().as_ptr(), u.data().as_ptr()));
+    }
+}

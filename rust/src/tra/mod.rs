@@ -14,5 +14,7 @@
 pub mod ops;
 pub mod relation;
 
-pub use ops::{aggregate, eval_einsum_tra, join, repartition};
+pub use ops::{
+    aggregate, eval_einsum_tra, join, repartition, repartition_with_stats, RepartStats,
+};
 pub use relation::TensorRelation;

@@ -12,25 +12,25 @@ use crate::einsum::expr::{AggOp, EinSum};
 use crate::einsum::label::{concat_dedup, project, LabelList};
 use crate::error::{Error, Result};
 use crate::runtime::KernelEngine;
-use crate::tensor::{index_space, Tensor};
-use crate::tra::relation::TensorRelation;
+use crate::tensor::{index_space, Tensor, TensorView};
+use crate::tra::relation::{
+    overlapping_tiles, tile_origin, tile_shape, validate_part, TensorRelation,
+};
 
 /// TRA join (paper §4.2): match tuples of `x` and `y` whose keys agree on
 /// shared labels, and apply the kernel `K` to each matched pair.
 ///
 /// Output keys range over `l_X (.) l_Y` (concat-dedup: natural-join
 /// schema); the output tile for key `key` is
-/// `K(x.tile(key[l_X]), y.tile(key[l_Y]))`.
-///
-/// `out_bound`/`out_part` describe the join output *as a relation* keyed
-/// over the dedup schema (needed to size tiles); the kernel decides each
-/// tile's actual shape, which is validated against them.
+/// `K(x.tile(key[l_X]), y.tile(key[l_Y]))`. The kernel receives the
+/// matched tiles as strided [`TensorView`]s — the join itself moves no
+/// tile data.
 pub fn join(
     x: &TensorRelation,
     y: &TensorRelation,
     lx: &LabelList,
     ly: &LabelList,
-    kernel: &mut dyn FnMut(&Tensor, &Tensor) -> Result<Tensor>,
+    kernel: &mut dyn FnMut(&TensorView, &TensorView) -> Result<Tensor>,
 ) -> Result<Vec<(Vec<usize>, Tensor)>> {
     if x.part().len() != lx.len() || y.part().len() != ly.len() {
         return Err(Error::InvalidPartitioning(format!(
@@ -87,6 +87,9 @@ pub fn aggregate(
             }
             std::collections::hash_map::Entry::Occupied(mut e) => {
                 e.get_mut().accumulate(&t, |a, b| agg.combine(a, b))?;
+                // The merged-away kernel output is dead: return its
+                // buffer to the thread's pool.
+                t.recycle();
             }
         }
     }
@@ -95,19 +98,99 @@ pub fn aggregate(
     Ok(out)
 }
 
+/// Byte accounting for one tile-to-tile [`repartition`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepartStats {
+    /// Bytes copied from producer tiles into consumer tiles. Each float
+    /// moves at most once, so this is at most `4 * prod(bound)` — the
+    /// floor the distributed cost model (`cost_repart`, which charges
+    /// whole-tile shipments) upper-bounds.
+    pub bytes_moved: usize,
+    /// Consumer tiles that were zero-copy sub-views of a single producer
+    /// tile (every pure refinement aliases all of its tiles).
+    pub tiles_aliased: usize,
+}
+
 /// TRA repartition (paper §4.2): `Pi_d(X)` produces the relation with
 /// partitioning `d` equivalent to the same dense tensor.
-///
-/// This semantic implementation assembles and re-partitions; the
-/// distributed implementation in [`crate::taskgraph`] moves only the
-/// overlapping sub-regions (and its transfer volume is what
-/// `cost_repart` bounds).
 pub fn repartition(x: &TensorRelation, d: &[usize]) -> Result<TensorRelation> {
+    repartition_with_stats(x, d).map(|(r, _)| r)
+}
+
+/// [`repartition`], reporting how many bytes actually moved.
+///
+/// Rather than assembling the full dense tensor and re-slicing it (two
+/// full copies plus a dense allocation), each consumer tile is built
+/// directly from the producer tiles overlapping it: a consumer tile
+/// contained in a single producer tile becomes an O(1) sub-view (zero
+/// bytes), and otherwise exactly the overlapping sub-regions are copied
+/// — each element moves at most once, matching the transfer volume the
+/// planner's `cost_repart` charge upper-bounds (`tests/zero_copy.rs`
+/// pins both facts).
+pub fn repartition_with_stats(
+    x: &TensorRelation,
+    d: &[usize],
+) -> Result<(TensorRelation, RepartStats)> {
+    validate_part(x.bound(), d)?;
     if x.part() == d {
-        return Ok(x.clone());
+        return Ok((x.clone(), RepartStats::default()));
     }
-    let dense = x.assemble()?;
-    TensorRelation::partition(&dense, d)
+    let bound = x.bound().to_vec();
+    let have = x.part().to_vec();
+    let rank = bound.len();
+    let mut stats = RepartStats::default();
+    let mut tiles = Vec::with_capacity(d.iter().product());
+    for key in index_space(d) {
+        let t_origin = tile_origin(&bound, d, &key);
+        let t_shape = tile_shape(&bound, d, &key);
+        let ranges: Vec<(usize, usize)> = (0..rank)
+            .map(|dim| overlapping_tiles(bound[dim], have[dim], t_origin[dim], t_shape[dim]))
+            .collect();
+        let range_dims: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo + 1).collect();
+        let n_overlap: usize = range_dims.iter().product();
+        if n_overlap == 1 {
+            // Contained in one producer tile: alias, don't copy.
+            let pkey: Vec<usize> = ranges.iter().map(|&(lo, _)| lo).collect();
+            let p_origin = tile_origin(&bound, &have, &pkey);
+            let rel_off: Vec<usize> = t_origin
+                .iter()
+                .zip(&p_origin)
+                .map(|(t, p)| t - p)
+                .collect();
+            tiles.push(x.tile(&pkey).slice(&rel_off, &t_shape)?);
+            stats.tiles_aliased += 1;
+            continue;
+        }
+        // The union of intersections covers the consumer tile exactly
+        // once, so the pooled buffer is fully overwritten.
+        let mut out = Tensor::full_pooled(&t_shape, 0.0);
+        for rk in index_space(&range_dims) {
+            let pkey: Vec<usize> = rk
+                .iter()
+                .zip(&ranges)
+                .map(|(&r, &(lo, _))| lo + r)
+                .collect();
+            let p_origin = tile_origin(&bound, &have, &pkey);
+            let p_shape = tile_shape(&bound, &have, &pkey);
+            let mut src_off = vec![0usize; rank];
+            let mut dst_off = vec![0usize; rank];
+            let mut sz = vec![0usize; rank];
+            for dim in 0..rank {
+                let a = t_origin[dim].max(p_origin[dim]);
+                let b = (t_origin[dim] + t_shape[dim]).min(p_origin[dim] + p_shape[dim]);
+                debug_assert!(b > a, "overlap ranges yielded an empty intersection");
+                src_off[dim] = a - p_origin[dim];
+                dst_off[dim] = a - t_origin[dim];
+                sz[dim] = b - a;
+            }
+            let piece = x.tile(&pkey).slice(&src_off, &sz)?;
+            stats.bytes_moved += piece.bytes();
+            out.write_slice_view(&dst_off, &piece)?;
+        }
+        tiles.push(out.into_view());
+    }
+    let rel = TensorRelation::from_views(bound, d.to_vec(), tiles)?;
+    Ok((rel, stats))
 }
 
 /// Evaluate one EinSum expression through the TRA rewrite of Eq. 5:
@@ -166,10 +249,10 @@ pub fn eval_einsum_tra(
         EinSum::Unary { lx, .. } => {
             let dx = project(d, lx, &uniq);
             let rx = TensorRelation::partition(inputs[0], &dx)?;
-            // map/reduce each tile with the tile-local op
+            // map/reduce each tile (a strided view) with the tile-local op
             let mut tuples = Vec::new();
             for (key, tile) in rx.iter() {
-                tuples.push((key, engine.eval(op, &[tile])?));
+                tuples.push((key, engine.eval_view(op, &[tile])?));
             }
             let agg = match op {
                 EinSum::Unary { agg, .. } => *agg,
@@ -186,7 +269,7 @@ pub fn eval_einsum_tra(
             let dy = project(d, ly, &uniq);
             let rx = TensorRelation::partition(inputs[0], &dx)?;
             let ry = TensorRelation::partition(inputs[1], &dy)?;
-            let mut kernel = |a: &Tensor, b: &Tensor| engine.eval(op, &[a, b]);
+            let mut kernel = |a: &TensorView, b: &TensorView| engine.eval_view(op, &[a, b]);
             let joined = join(&rx, &ry, lx, ly, &mut kernel)?;
             let lj = concat_dedup(lx, ly);
             let grouped = aggregate(joined, &lj, &lz, *aggop)?;
@@ -246,9 +329,9 @@ mod tests {
             let ry =
                 TensorRelation::partition(&y, &project(&d, &ly, &uniq)).unwrap();
             let mut calls = 0usize;
-            let mut kernel = |a: &Tensor, b: &Tensor| {
+            let mut kernel = |a: &TensorView, b: &TensorView| {
                 calls += 1;
-                eval_einsum(&op, &[a, b])
+                crate::runtime::native::eval_einsum_view(&op, &[a, b])
             };
             join(&rx, &ry, &lx, &ly, &mut kernel).unwrap();
             assert_eq!(calls, 16, "d={d:?}");
@@ -347,7 +430,7 @@ mod tests {
         let y = Tensor::random(&[8, 8], 2);
         let rx = TensorRelation::partition(&x, &[2, 4]).unwrap();
         let ry = TensorRelation::partition(&y, &[2, 2]).unwrap(); // j: 4 vs 2
-        let mut k = |a: &Tensor, _b: &Tensor| Ok(a.clone());
+        let mut k = |a: &TensorView, _b: &TensorView| Ok(a.to_tensor());
         assert!(join(&rx, &ry, &labels("i j"), &labels("j k"), &mut k).is_err());
     }
 
@@ -357,6 +440,39 @@ mod tests {
         let r = TensorRelation::partition(&t, &[2, 3]).unwrap();
         let r2 = repartition(&r, &[4, 2]).unwrap();
         assert_eq!(r2.part(), &[4, 2]);
+        assert_eq!(r2.assemble().unwrap(), t);
+        // uneven bounds and a sweep of targets stay equivalent
+        let u = Tensor::random(&[7, 10], 14);
+        for have in [&[1usize, 1][..], &[3, 2], &[7, 5]] {
+            let ru = TensorRelation::partition(&u, have).unwrap();
+            for want in [&[1usize, 1][..], &[2, 3], &[4, 2], &[7, 10]] {
+                let r3 = repartition(&ru, want).unwrap();
+                assert_eq!(r3.assemble().unwrap(), u, "{have:?} -> {want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn repartition_refinement_aliases_all_tiles() {
+        // [2, 2] -> [4, 4] on a 8x8: every consumer tile sits inside one
+        // producer tile — all sub-views, zero bytes moved.
+        let t = Tensor::random(&[8, 8], 15);
+        let r = TensorRelation::partition(&t, &[2, 2]).unwrap();
+        let (r2, stats) = repartition_with_stats(&r, &[4, 4]).unwrap();
+        assert_eq!(stats.bytes_moved, 0);
+        assert_eq!(stats.tiles_aliased, 16);
+        assert_eq!(r2.assemble().unwrap(), t);
+    }
+
+    #[test]
+    fn repartition_coarsening_moves_each_float_once() {
+        // [4, 4] -> [2, 2]: every consumer tile unions 4 producers, so
+        // nothing aliases and each float is copied exactly once.
+        let t = Tensor::random(&[8, 8], 16);
+        let r = TensorRelation::partition(&t, &[4, 4]).unwrap();
+        let (r2, stats) = repartition_with_stats(&r, &[2, 2]).unwrap();
+        assert_eq!(stats.tiles_aliased, 0);
+        assert_eq!(stats.bytes_moved, t.bytes());
         assert_eq!(r2.assemble().unwrap(), t);
     }
 

@@ -7,9 +7,16 @@
 //! `b` split `d` ways, tile `i` has size `b/d + (i < b mod d)`. When `d | b`
 //! this degenerates to the paper's uniform `b/d` tiles, and all tiles that
 //! share a co-partitioned label always agree on size.
+//!
+//! Tiles are stored as [`TensorView`]s: [`TensorRelation::partition`]
+//! costs O(1) per tile (stride arithmetic into the shared dense buffer,
+//! zero data copies), and kernels consume the views directly. The
+//! copy-based [`TensorRelation::partition_owned`] is retained as the
+//! differential baseline and A/B reference (`tests/zero_copy.rs`,
+//! `benches/micro_hotpath.rs`).
 
 use crate::error::{Error, Result};
-use crate::tensor::{index_space, Tensor};
+use crate::tensor::{index_space, Tensor, TensorView};
 
 /// Balanced tile size of tile `i` when `bound` is split `parts` ways.
 #[inline]
@@ -39,6 +46,16 @@ pub fn tile_origin(bound: &[usize], part: &[usize], key: &[usize]) -> Vec<usize>
         .collect()
 }
 
+/// Size in bytes of the f32 tile at `key` under `(bound, part)` — the
+/// single implementation the task-graph lowering charges transfers with.
+pub fn tile_bytes(bound: &[usize], part: &[usize], key: &[usize]) -> usize {
+    key.iter()
+        .enumerate()
+        .map(|(d, &k)| tile_size(bound[d], part[d], k))
+        .product::<usize>()
+        * std::mem::size_of::<f32>()
+}
+
 /// Validate a partitioning vector against a bound: every entry positive and
 /// no larger than the dimension (so no tile is empty).
 pub fn validate_part(bound: &[usize], part: &[usize]) -> Result<()> {
@@ -57,14 +74,15 @@ pub fn validate_part(bound: &[usize], part: &[usize]) -> Result<()> {
     Ok(())
 }
 
-/// A relation mapping keys in `I(d)` to sub-tensors — the unit of data the
-/// TRA runtime pushes between kernels.
+/// A relation mapping keys in `I(d)` to sub-tensor views — the unit of
+/// data the TRA runtime pushes between kernels. Cloning a relation is
+/// cheap (views share their buffers).
 #[derive(Clone, Debug)]
 pub struct TensorRelation {
     bound: Vec<usize>,
     part: Vec<usize>,
     /// Tiles in row-major key order over `I(part)`.
-    tiles: Vec<Tensor>,
+    tiles: Vec<TensorView>,
 }
 
 impl TensorRelation {
@@ -86,22 +104,29 @@ impl TensorRelation {
         linearize(key, &self.part)
     }
 
-    /// The sub-tensor at `key` (`R^key` in the paper).
-    pub fn tile(&self, key: &[usize]) -> &Tensor {
+    /// The sub-tensor view at `key` (`R^key` in the paper).
+    pub fn tile(&self, key: &[usize]) -> &TensorView {
         &self.tiles[self.key_index(key)]
     }
 
-    pub fn tile_linear(&self, i: usize) -> &Tensor {
+    pub fn tile_linear(&self, i: usize) -> &TensorView {
         &self.tiles[i]
     }
 
     /// Iterate `(key, tile)` pairs.
-    pub fn iter(&self) -> impl Iterator<Item = (Vec<usize>, &Tensor)> {
+    pub fn iter(&self) -> impl Iterator<Item = (Vec<usize>, &TensorView)> {
         index_space(&self.part).zip(self.tiles.iter())
     }
 
-    /// Build a relation from keyed tiles produced in row-major key order.
+    /// Build a relation from keyed owned tiles produced in row-major key
+    /// order (each becomes a whole-tensor view, O(1)).
     pub fn from_tiles(bound: Vec<usize>, part: Vec<usize>, tiles: Vec<Tensor>) -> Result<Self> {
+        Self::from_views(bound, part, tiles.into_iter().map(Tensor::into_view).collect())
+    }
+
+    /// Build a relation from keyed tile views produced in row-major key
+    /// order.
+    pub fn from_views(bound: Vec<usize>, part: Vec<usize>, tiles: Vec<TensorView>) -> Result<Self> {
         validate_part(&bound, &part)?;
         let n: usize = part.iter().product();
         if tiles.len() != n {
@@ -124,15 +149,37 @@ impl TensorRelation {
     }
 
     /// Partition a dense tensor into an equivalent relation (`R ≡ 𝓡`):
-    /// slice `t` according to `d`, keying each slice by its tile index.
+    /// each tile is an O(1) strided view into `t`'s buffer — partitioning
+    /// performs **zero data copies**, whatever `d` is.
     pub fn partition(t: &Tensor, part: &[usize]) -> Result<Self> {
+        validate_part(t.shape(), part)?;
+        let bound = t.shape().to_vec();
+        let whole = t.view();
+        let mut tiles = Vec::with_capacity(part.iter().product());
+        for key in index_space(part) {
+            let origin = tile_origin(&bound, part, &key);
+            let shape = tile_shape(&bound, part, &key);
+            tiles.push(whole.slice(&origin, &shape)?);
+        }
+        Ok(TensorRelation {
+            bound,
+            part: part.to_vec(),
+            tiles,
+        })
+    }
+
+    /// The pre-view partitioning: memcpy every tile out of `t` into its
+    /// own contiguous buffer. Kept as the differential baseline the
+    /// zero-copy suites and the `micro_hotpath` A/B compare against —
+    /// production paths use [`partition`](Self::partition).
+    pub fn partition_owned(t: &Tensor, part: &[usize]) -> Result<Self> {
         validate_part(t.shape(), part)?;
         let bound = t.shape().to_vec();
         let mut tiles = Vec::with_capacity(part.iter().product());
         for key in index_space(part) {
             let origin = tile_origin(&bound, part, &key);
             let shape = tile_shape(&bound, part, &key);
-            tiles.push(t.slice(&origin, &shape)?);
+            tiles.push(t.slice(&origin, &shape)?.into_view());
         }
         Ok(TensorRelation {
             bound,
@@ -147,7 +194,7 @@ impl TensorRelation {
         let mut out = Tensor::zeros(&self.bound);
         for (key, tile) in self.iter() {
             let origin = tile_origin(&self.bound, &self.part, &key);
-            out.write_slice(&origin, tile)?;
+            out.write_slice_view(&origin, tile)?;
         }
         Ok(out)
     }
@@ -156,6 +203,36 @@ impl TensorRelation {
     pub fn bytes(&self) -> usize {
         self.tiles.iter().map(|t| t.bytes()).sum()
     }
+
+    /// Recycle every tile buffer this relation exclusively owns into the
+    /// calling thread's [`crate::util::BufferPool`] (buffers still shared
+    /// with other views or tensors are left alive and simply dropped).
+    pub fn recycle(self) {
+        for t in self.tiles {
+            t.recycle();
+        }
+    }
+}
+
+/// Inclusive `(lo, hi)` range of tile indices overlapping the region
+/// `[origin, origin + len)` when `bound` is split `parts` ways with
+/// balanced tiling. Shared by the tile-to-tile repartition
+/// ([`crate::tra::ops::repartition`]) and the task-graph lowering.
+pub fn overlapping_tiles(bound: usize, parts: usize, origin: usize, len: usize) -> (usize, usize) {
+    // balanced tiling boundaries are monotone; scan (parts is small)
+    let mut lo = None;
+    let mut hi = 0;
+    for i in 0..parts {
+        let o = tile_offset(bound, parts, i);
+        let s = tile_size(bound, parts, i);
+        if o < origin + len && o + s > origin {
+            if lo.is_none() {
+                lo = Some(i);
+            }
+            hi = i;
+        }
+    }
+    (lo.unwrap_or(0), hi)
 }
 
 /// Row-major linearization of `key` within bound `dims`.
@@ -206,8 +283,8 @@ mod tests {
         let u = paper_u();
         let r = TensorRelation::partition(&u, &[4, 2]).unwrap();
         assert_eq!(r.num_tiles(), 8);
-        assert_eq!(r.tile(&[0, 1]).data(), &[5., 6.]);
-        assert_eq!(r.tile(&[2, 0]).data(), &[9., 10.]);
+        assert_eq!(r.tile(&[0, 1]).to_vec(), &[5., 6.]);
+        assert_eq!(r.tile(&[2, 0]).to_vec(), &[9., 10.]);
     }
 
     #[test]
@@ -215,8 +292,29 @@ mod tests {
         // d = [2, 2]: tile <1,0> = [[9,10],[11,12]] — exactly the paper.
         let u = paper_u();
         let r = TensorRelation::partition(&u, &[2, 2]).unwrap();
-        assert_eq!(r.tile(&[1, 0]).data(), &[9., 10., 11., 12.]);
-        assert_eq!(r.tile(&[0, 1]).data(), &[5., 6., 7., 8.]);
+        assert_eq!(r.tile(&[1, 0]).to_vec(), &[9., 10., 11., 12.]);
+        assert_eq!(r.tile(&[0, 1]).to_vec(), &[5., 6., 7., 8.]);
+    }
+
+    #[test]
+    fn partition_is_zero_copy_and_matches_owned() {
+        let t = Tensor::random(&[6, 10], 77);
+        for part in [&[1usize, 1][..], &[2, 5], &[3, 2], &[6, 10]] {
+            let view_rel = TensorRelation::partition(&t, part).unwrap();
+            let owned_rel = TensorRelation::partition_owned(&t, part).unwrap();
+            for ((kv, tv), (ko, to)) in view_rel.iter().zip(owned_rel.iter()) {
+                assert_eq!(kv, ko);
+                // same bytes...
+                assert_eq!(tv.to_vec(), to.to_vec(), "part {part:?} key {kv:?}");
+                // ...but the view tile aliases the dense buffer (no copy)
+                let origin = tile_origin(t.shape(), part, &kv);
+                let flat = origin[0] * 10 + origin[1];
+                assert!(std::ptr::eq(
+                    tv.raw().as_ptr(),
+                    t.data()[flat..].as_ptr()
+                ));
+            }
+        }
     }
 
     #[test]
@@ -248,6 +346,13 @@ mod tests {
         assert!(TensorRelation::partition(&t, &[5, 1]).is_err()); // > bound
         assert!(TensorRelation::partition(&t, &[0, 1]).is_err()); // zero
         assert!(TensorRelation::partition(&t, &[2]).is_err()); // rank
+    }
+
+    #[test]
+    fn tile_bytes_matches_shape_product() {
+        // 7 split 3 ways: tiles 3,2,2; 5 split 2 ways: tiles 3,2.
+        assert_eq!(tile_bytes(&[7, 5], &[3, 2], &[0, 0]), 3 * 3 * 4);
+        assert_eq!(tile_bytes(&[7, 5], &[3, 2], &[2, 1]), 2 * 2 * 4);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Small in-tree utilities replacing unavailable external crates: a
 //! deterministic RNG (no `rand`), a scoped thread-pool helper, a
 //! work-stealing DAG scheduler with nested intra-op work stealing (no
-//! `rayon`/`crossbeam`), and a minimal JSON *writer* for reports (no
-//! `serde_json`).
+//! `rayon`/`crossbeam`), a per-thread [`BufferPool`] recycling kernel
+//! output and scratch buffers, and a minimal JSON *writer* for reports
+//! (no `serde_json`).
 //!
 //! The intra-op layer ([`ShardRegistry`] / [`ShardScope`]) lets a running
 //! task publish independent *shards* of itself (e.g. row blocks of a
@@ -132,6 +133,207 @@ pub(crate) const SHARD_MIN: usize = 4096;
 #[inline]
 pub(crate) fn chunk_bounds(len: usize, parts: usize, i: usize) -> (usize, usize) {
     (len * i / parts, len * (i + 1) / parts)
+}
+
+/// Largest size class the pool retains: `2^26` floats (256 MiB). Larger
+/// buffers bypass the pool entirely.
+const POOL_MAX_CLASS: usize = 26;
+/// Free-list depth per size class — bounds pool residency per thread.
+const POOL_CLASS_CAP: usize = 32;
+
+/// Point-in-time counters of the calling thread's [`BufferPool`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers handed out ([`BufferPool::take`] / `take_filled`).
+    pub takes: u64,
+    /// Takes served from a free list (no allocation).
+    pub hits: u64,
+    /// Takes that had to allocate (`takes - hits`).
+    pub misses: u64,
+    /// Buffers returned via [`BufferPool::give`] (kept or dropped).
+    pub gives: u64,
+    /// Floats currently parked on this thread's free lists.
+    pub resident: usize,
+}
+
+/// Per-thread, size-classed free lists of `f32` buffers — the runtime's
+/// allocation recycler for kernel outputs, GEMM pack scratch, and tile
+/// buffers.
+///
+/// Buffers are classed by the power of two at or above their length;
+/// each worker thread owns its own lists (thread-local state, so every
+/// operation is lock-free by construction). A buffer allocated on one
+/// thread and recycled on another simply joins the recycler thread's
+/// lists — ownership is wherever the `give` happened.
+///
+/// **Contents are stale, not zeroed.** [`BufferPool::take`] returns a
+/// buffer whose prefix holds values from its previous life; callers must
+/// overwrite every element (GEMM outputs with `beta = 0` and fully-tiled
+/// repartition targets do so by construction) or use
+/// [`BufferPool::take_filled`].
+///
+/// ```
+/// use eindecomp::util::BufferPool;
+/// BufferPool::reset();
+/// let v = BufferPool::take_filled(1000, 0.0);
+/// BufferPool::give(v);
+/// // Same size class: the allocation is reused, not reallocated.
+/// let w = BufferPool::take(1000);
+/// assert_eq!(w.len(), 1000);
+/// let s = BufferPool::stats();
+/// assert_eq!((s.takes, s.hits, s.misses), (2, 1, 1));
+/// ```
+pub struct BufferPool {
+    /// `classes[c]` holds buffers with capacity at least `2^c`.
+    classes: Vec<Vec<Vec<f32>>>,
+    takes: u64,
+    hits: u64,
+    gives: u64,
+    resident: usize,
+}
+
+thread_local! {
+    static POOL: std::cell::RefCell<BufferPool> = std::cell::RefCell::new(BufferPool {
+        classes: (0..=POOL_MAX_CLASS).map(|_| Vec::new()).collect(),
+        takes: 0,
+        hits: 0,
+        gives: 0,
+        resident: 0,
+    });
+}
+
+/// Size class of a requested length: index of the power of two at or
+/// above it. `None` when the length is 0 or beyond [`POOL_MAX_CLASS`].
+fn pool_class_for_len(len: usize) -> Option<usize> {
+    if len == 0 {
+        return None;
+    }
+    let c = len.next_power_of_two().trailing_zeros() as usize;
+    (c <= POOL_MAX_CLASS).then_some(c)
+}
+
+/// Size class a buffer can *serve*: the largest power of two at or below
+/// its capacity (every request routed to that class fits).
+fn pool_class_for_cap(cap: usize) -> Option<usize> {
+    if cap == 0 {
+        return None;
+    }
+    let c = (usize::BITS - 1 - cap.leading_zeros()) as usize;
+    (c <= POOL_MAX_CLASS).then_some(c)
+}
+
+impl BufferPool {
+    /// Take a buffer of exactly `len` elements with **stale contents**
+    /// (see the type docs); the caller must overwrite every element.
+    pub fn take(len: usize) -> Vec<f32> {
+        POOL.with(|p| {
+            let mut pool = p.borrow_mut();
+            pool.takes += 1;
+            if let Some(c) = pool_class_for_len(len) {
+                if let Some(mut v) = pool.classes[c].pop() {
+                    pool.hits += 1;
+                    pool.resident -= v.capacity();
+                    if v.len() >= len {
+                        v.truncate(len);
+                    } else {
+                        v.resize(len, 0.0);
+                    }
+                    return v;
+                }
+                let mut v = Vec::with_capacity(1usize << c);
+                v.resize(len, 0.0);
+                return v;
+            }
+            vec![0.0; len]
+        })
+    }
+
+    /// Take a buffer of `len` elements, every element set to `fill`.
+    pub fn take_filled(len: usize, fill: f32) -> Vec<f32> {
+        let mut v = Self::take(len);
+        v.fill(fill);
+        v
+    }
+
+    /// Return a buffer to the calling thread's free lists (dropped when
+    /// its class is full or it is larger than the pool retains).
+    pub fn give(v: Vec<f32>) {
+        POOL.with(|p| {
+            let mut pool = p.borrow_mut();
+            pool.gives += 1;
+            if let Some(c) = pool_class_for_cap(v.capacity()) {
+                if pool.classes[c].len() < POOL_CLASS_CAP {
+                    pool.resident += v.capacity();
+                    pool.classes[c].push(v);
+                }
+            }
+        });
+    }
+
+    /// Counters for the calling thread's pool.
+    pub fn stats() -> PoolStats {
+        POOL.with(|p| {
+            let pool = p.borrow();
+            PoolStats {
+                takes: pool.takes,
+                hits: pool.hits,
+                misses: pool.takes - pool.hits,
+                gives: pool.gives,
+                resident: pool.resident,
+            }
+        })
+    }
+
+    /// Drop all parked buffers and zero the counters (testing aid).
+    pub fn reset() {
+        POOL.with(|p| {
+            let mut pool = p.borrow_mut();
+            for c in pool.classes.iter_mut() {
+                c.clear();
+            }
+            pool.takes = 0;
+            pool.hits = 0;
+            pool.gives = 0;
+            pool.resident = 0;
+        });
+    }
+}
+
+/// RAII handle on a pooled buffer: derefs to `[f32]`, returns the buffer
+/// to the pool on drop. Used for function-local scratch (GEMM pack
+/// panels); buffers that escape into [`crate::tensor::Tensor`]s are
+/// recycled explicitly instead (`Tensor::recycle`).
+pub struct PooledVec {
+    v: Vec<f32>,
+}
+
+impl PooledVec {
+    /// Pooled scratch with **stale contents** (every element must be
+    /// overwritten before being read).
+    pub fn take(len: usize) -> PooledVec {
+        PooledVec {
+            v: BufferPool::take(len),
+        }
+    }
+}
+
+impl Drop for PooledVec {
+    fn drop(&mut self) {
+        BufferPool::give(std::mem::take(&mut self.v));
+    }
+}
+
+impl std::ops::Deref for PooledVec {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.v
+    }
+}
+
+impl std::ops::DerefMut for PooledVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.v
+    }
 }
 
 /// One published fork-join group: `total` shards, claimed by atomically
@@ -875,6 +1077,68 @@ mod tests {
         for (i, v) in buf.iter().enumerate() {
             assert_eq!(*v, i as f32);
         }
+    }
+
+    #[test]
+    fn pool_reuses_allocations_by_class() {
+        BufferPool::reset();
+        let a = BufferPool::take_filled(1000, 1.0);
+        let cap = a.capacity();
+        assert!(cap >= 1024); // rounded up to the class size
+        BufferPool::give(a);
+        assert_eq!(BufferPool::stats().resident, cap);
+        // Any length in (512, 1024] lands in the same class and reuses it.
+        let b = BufferPool::take(700);
+        assert_eq!(b.len(), 700);
+        assert_eq!(b.capacity(), cap);
+        let s = BufferPool::stats();
+        assert_eq!((s.takes, s.hits, s.misses), (2, 1, 1));
+        assert_eq!(s.resident, 0);
+        BufferPool::reset();
+    }
+
+    #[test]
+    fn pool_take_filled_overwrites_stale_contents() {
+        BufferPool::reset();
+        BufferPool::give(vec![7.0f32; 64]);
+        let v = BufferPool::take_filled(64, 0.0);
+        assert!(v.iter().all(|&x| x == 0.0));
+        BufferPool::reset();
+    }
+
+    #[test]
+    fn pool_zero_len_and_oversize_bypass() {
+        BufferPool::reset();
+        let v = BufferPool::take(0);
+        assert!(v.is_empty());
+        BufferPool::give(v); // capacity 0: dropped, not parked
+        assert_eq!(BufferPool::stats().resident, 0);
+        BufferPool::reset();
+    }
+
+    #[test]
+    fn pooled_vec_returns_on_drop() {
+        BufferPool::reset();
+        {
+            let mut s = PooledVec::take(128);
+            s[0] = 3.0;
+            assert_eq!(s.len(), 128);
+        }
+        let st = BufferPool::stats();
+        assert_eq!(st.gives, 1);
+        assert!(st.resident >= 128);
+        BufferPool::reset();
+    }
+
+    #[test]
+    fn pool_class_cap_bounds_residency() {
+        BufferPool::reset();
+        for _ in 0..(POOL_CLASS_CAP + 5) {
+            BufferPool::give(vec![0.0f32; 16]);
+        }
+        let st = BufferPool::stats();
+        assert!(st.resident <= POOL_CLASS_CAP * 16);
+        BufferPool::reset();
     }
 
     #[test]

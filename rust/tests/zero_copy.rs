@@ -1,0 +1,251 @@
+//! Differential suite for the zero-copy TRA data plane.
+//!
+//! The refactor's contract is that moving tiles as strided views —
+//! instead of memcpy'ing them at every partition/join/repartition seam —
+//! changes **no bytes anywhere**: every test here runs the same pipeline
+//! twice, once through the retained copy-based baseline
+//! (`TensorRelation::partition_owned` + kernels on materialized tiles,
+//! exactly the pre-refactor data plane) and once through the view path,
+//! and asserts `==` on the assembled `Tensor`s (f32 bitwise, via
+//! `PartialEq`). The suite also pins the tile-to-tile repartition's byte
+//! accounting against the planner's `cost_repart` charge, and shows the
+//! buffer pool reaches a steady state with no allocation growth across
+//! repeated evaluations.
+
+use eindecomp::decomp::cost::cost_repart;
+use eindecomp::einsum::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use eindecomp::einsum::label::{concat_dedup, labels, project};
+use eindecomp::runtime::{KernelEngine, NativeEngine};
+use eindecomp::tensor::{Tensor, TensorView};
+use eindecomp::tra::ops::{aggregate, eval_einsum_tra, join, repartition_with_stats};
+use eindecomp::tra::relation::TensorRelation;
+use eindecomp::util::{with_intra_op_pool, BufferPool};
+
+/// Run one EinSum through the TRA pipeline (partition -> per-tile kernel
+/// -> aggregate -> assemble). `owned = true` replays the pre-refactor
+/// copy-based data plane: owned contiguous tiles, kernels on
+/// materialized tensors. `threads` drives the intra-op shard pool
+/// (1 = serial). Both modes must agree bitwise at every thread count.
+fn run_tra(op: &EinSum, inputs: &[&Tensor], d: &[usize], owned: bool, threads: usize) -> Tensor {
+    let uniq = op.unique_labels();
+    let lz = op.lz().unwrap().clone();
+    let in_bounds: Vec<&[usize]> = inputs.iter().map(|t| t.shape()).collect();
+    let bz = op.infer_bound(&in_bounds).unwrap();
+    let dz = project(d, &lz, &uniq);
+    let engine = NativeEngine::new();
+    with_intra_op_pool(threads, |scope| match op {
+        EinSum::Unary { lx, agg, .. } => {
+            let dx = project(d, lx, &uniq);
+            let rx = if owned {
+                TensorRelation::partition_owned(inputs[0], &dx)
+            } else {
+                TensorRelation::partition(inputs[0], &dx)
+            }
+            .unwrap();
+            let mut tuples = Vec::new();
+            for (key, tile) in rx.iter() {
+                let t = if owned {
+                    let o = tile.to_tensor();
+                    engine.eval_scoped(op, &[&o], scope).unwrap()
+                } else {
+                    engine.eval_view_scoped(op, &[tile], scope).unwrap()
+                };
+                tuples.push((key, t));
+            }
+            let grouped = aggregate(tuples, lx, &lz, *agg).unwrap();
+            let tiles: Vec<Tensor> = grouped.into_iter().map(|(_, t)| t).collect();
+            TensorRelation::from_tiles(bz.clone(), dz.clone(), tiles)
+                .unwrap()
+                .assemble()
+                .unwrap()
+        }
+        EinSum::Binary { lx, ly, agg, .. } => {
+            let dx = project(d, lx, &uniq);
+            let dy = project(d, ly, &uniq);
+            let (rx, ry) = if owned {
+                (
+                    TensorRelation::partition_owned(inputs[0], &dx).unwrap(),
+                    TensorRelation::partition_owned(inputs[1], &dy).unwrap(),
+                )
+            } else {
+                (
+                    TensorRelation::partition(inputs[0], &dx).unwrap(),
+                    TensorRelation::partition(inputs[1], &dy).unwrap(),
+                )
+            };
+            let mut kernel = |a: &TensorView, b: &TensorView| {
+                if owned {
+                    let (ao, bo) = (a.to_tensor(), b.to_tensor());
+                    engine.eval_scoped(op, &[&ao, &bo], scope)
+                } else {
+                    engine.eval_view_scoped(op, &[a, b], scope)
+                }
+            };
+            let joined = join(&rx, &ry, lx, ly, &mut kernel).unwrap();
+            let lj = concat_dedup(lx, ly);
+            let grouped = aggregate(joined, &lj, &lz, *agg).unwrap();
+            let tiles: Vec<Tensor> = grouped.into_iter().map(|(_, t)| t).collect();
+            TensorRelation::from_tiles(bz.clone(), dz.clone(), tiles)
+                .unwrap()
+                .assemble()
+                .unwrap()
+        }
+        EinSum::Input => unreachable!(),
+    })
+}
+
+#[test]
+fn figure1_partitionings_bitwise_equal() {
+    let x = Tensor::random(&[8, 8], 1);
+    let y = Tensor::random(&[8, 8], 2);
+    let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+    for d in [[4usize, 1, 4], [2, 1, 8], [2, 4, 2], [2, 2, 4]] {
+        let base = run_tra(&op, &[&x, &y], &d, true, 1);
+        let view = run_tra(&op, &[&x, &y], &d, false, 1);
+        assert_eq!(view, base, "d={d:?}");
+        // the public entry point rides the same view path
+        let rel = eval_einsum_tra(&op, &[&x, &y], &d, &NativeEngine::new()).unwrap();
+        assert_eq!(rel.assemble().unwrap(), base, "d={d:?}");
+    }
+}
+
+#[test]
+fn uneven_bounds_bitwise_equal() {
+    let x = Tensor::random(&[7, 10], 3);
+    let y = Tensor::random(&[10, 5], 4);
+    let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+    for d in [[1usize, 1, 1], [3, 2, 2], [7, 10, 5], [2, 3, 1]] {
+        let base = run_tra(&op, &[&x, &y], &d, true, 1);
+        let view = run_tra(&op, &[&x, &y], &d, false, 1);
+        assert_eq!(view, base, "d={d:?}");
+    }
+}
+
+#[test]
+fn extended_ops_bitwise_equal() {
+    // non-GEMM joins exercise the generic strided nest
+    let x = Tensor::random(&[6, 8], 5);
+    let y = Tensor::random(&[8, 4], 6);
+    for (join_op, agg) in [(JoinOp::SquaredDiff, AggOp::Sum), (JoinOp::AbsDiff, AggOp::Max)] {
+        let op = EinSum::Binary {
+            lx: labels("i j"),
+            ly: labels("j k"),
+            lz: labels("i k"),
+            join: join_op,
+            agg,
+        };
+        for d in [[1usize, 1, 1], [2, 4, 2], [3, 2, 4]] {
+            let base = run_tra(&op, &[&x, &y], &d, true, 1);
+            let view = run_tra(&op, &[&x, &y], &d, false, 1);
+            assert_eq!(view, base, "{join_op:?} d={d:?}");
+        }
+    }
+}
+
+#[test]
+fn unary_reductions_bitwise_equal() {
+    let x = Tensor::random(&[9, 12], 9);
+    let reduce = EinSum::reduce(labels("i j"), labels("i"), AggOp::Max);
+    let colsum = EinSum::reduce(labels("i j"), labels("j"), AggOp::Sum);
+    let tmap = EinSum::Unary {
+        lx: labels("i j"),
+        lz: labels("j i"),
+        op: UnaryOp::Exp,
+        agg: AggOp::Sum,
+    };
+    for op in [&reduce, &colsum, &tmap] {
+        for d in [[1usize, 1], [3, 4], [9, 12], [2, 5]] {
+            let base = run_tra(op, &[&x], &d, true, 1);
+            let view = run_tra(op, &[&x], &d, false, 1);
+            assert_eq!(view, base, "{op:?} d={d:?}");
+        }
+    }
+}
+
+#[test]
+fn intra_op_threads_bitwise_equal() {
+    // 64x64 at d=[2,2,4]: per-tile GEMMs are 32x32x16 = 16384 >= the
+    // shard gate, so 2/8-thread runs actually fork shards.
+    let x = Tensor::random(&[64, 64], 10);
+    let y = Tensor::random(&[64, 64], 11);
+    let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+    let d = [2usize, 2, 4];
+    let base = run_tra(&op, &[&x, &y], &d, true, 1);
+    for threads in [1usize, 2, 8] {
+        for owned in [true, false] {
+            let got = run_tra(&op, &[&x, &y], &d, owned, threads);
+            assert_eq!(got, base, "threads={threads} owned={owned}");
+        }
+    }
+}
+
+#[test]
+fn repartition_bytes_tracked_against_cost_model() {
+    // The planner charges `cost_repart(need, have, bound)` floats for a
+    // repartition edge (whole-tile shipments, §7). The local tile-to-tile
+    // implementation moves each float at most once — `bytes_moved` is
+    // exactly `4 * prod(bound)` minus the aliased (zero-copy) tiles — so
+    // the model's charge must always upper-bound the measured bytes.
+    let t = Tensor::random(&[24, 24], 12);
+    let cases: &[(&[usize], &[usize])] = &[
+        (&[2, 3], &[4, 2]),
+        (&[4, 4], &[2, 2]),
+        (&[3, 2], &[2, 3]),
+        (&[1, 1], &[4, 4]),
+        (&[4, 4], &[1, 1]),
+        (&[2, 2], &[4, 4]),
+    ];
+    for &(have, want) in cases {
+        let r = TensorRelation::partition(&t, have).unwrap();
+        let (r2, stats) = repartition_with_stats(&r, want).unwrap();
+        assert_eq!(r2.assemble().unwrap(), t, "{have:?} -> {want:?}");
+        let charged_bytes = 4.0 * cost_repart(want, have, &[24, 24]);
+        assert!(
+            stats.bytes_moved as f64 <= charged_bytes,
+            "{have:?} -> {want:?}: moved {} > charged {charged_bytes}",
+            stats.bytes_moved
+        );
+        assert!(stats.bytes_moved <= t.bytes(), "each float moves at most once");
+        if stats.tiles_aliased == 0 {
+            // no zero-copy tiles: the transfer volume is exactly the
+            // tensor — the floor the model's charge bounds.
+            assert_eq!(stats.bytes_moved, t.bytes(), "{have:?} -> {want:?}");
+        }
+    }
+    // pure refinement ([1,1] -> anything) aliases everything: zero bytes
+    let r = TensorRelation::partition(&t, &[1, 1]).unwrap();
+    let (_, stats) = repartition_with_stats(&r, &[4, 4]).unwrap();
+    assert_eq!(stats.bytes_moved, 0);
+    assert_eq!(stats.tiles_aliased, 16);
+}
+
+#[test]
+fn pool_reaches_steady_state_no_allocation_growth() {
+    // Repeated single-threaded TRA evaluations must stop allocating once
+    // the pool is warm: every output/pack buffer of run N+1 is a
+    // recycled buffer of run N.
+    BufferPool::reset();
+    let x = Tensor::random(&[64, 64], 13);
+    let y = Tensor::random(&[64, 64], 14);
+    let op = EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+    let engine = NativeEngine::new();
+    let run = |x: &Tensor, y: &Tensor| {
+        let rel = eval_einsum_tra(&op, &[x, y], &[2, 2, 4], &engine).unwrap();
+        rel.recycle(); // hand the result tiles back to the pool
+    };
+    run(&x, &y); // warm-up: allocates
+    let warm = BufferPool::stats();
+    assert!(warm.misses > 0, "warm-up run should allocate");
+    for i in 0..5 {
+        run(&x, &y);
+        let s = BufferPool::stats();
+        assert_eq!(
+            s.misses, warm.misses,
+            "run {i}: pool missed — live allocations grew in steady state"
+        );
+    }
+    // and the resident set is bounded by what one run uses
+    let end = BufferPool::stats();
+    assert!(end.resident > 0);
+    BufferPool::reset();
+}
