@@ -1,18 +1,44 @@
 //! Experiment-1-style demo: the matrix chain `(A x B) + (C x (D x E))`
 //! under every decomposition strategy, uniform and skewed, at a runnable
-//! scale — real execution with wall-clock, plus the modeled cluster
-//! timeline. The full sweep that regenerates Figs. 7–8 lives in
-//! `cargo bench` (fig7/fig8).
+//! scale — built with the lazy expression frontend, compiled once per
+//! strategy through a `Session`, and executed for real (wall-clock plus
+//! the modeled cluster timeline). Ends with a compile-once / run-many
+//! serving loop showing the amortized throughput the plan cache buys.
+//! The full sweep that regenerates Figs. 7–8 lives in `cargo bench`
+//! (fig7/fig8).
 //!
 //! ```sh
 //! cargo run --release --example matrix_chain [scale]
 //! ```
 
-use eindecomp::coordinator::driver::{Driver, DriverConfig};
-use eindecomp::decomp::baselines::Strategy;
-use eindecomp::models::matchain::{chain_graph, chain_inputs, chain_reference};
-use eindecomp::runtime::Backend;
-use eindecomp::sim::NetworkProfile;
+use eindecomp::prelude::*;
+use eindecomp::runtime::native::eval_graph;
+use std::collections::HashMap;
+
+/// Build the chain lazily; returns (graph, input ids, output id).
+fn build_chain(
+    session: &Session,
+    scale: usize,
+    skewed: bool,
+) -> eindecomp::Result<(EinGraph, Vec<VertexId>, VertexId)> {
+    let t = (scale / 10).max(1);
+    let (da, db, dc, dd, de) = if skewed {
+        ([scale, t], [t, scale], [scale, t], [t, 10 * scale], [10 * scale, scale])
+    } else {
+        ([scale; 2], [scale; 2], [scale; 2], [scale; 2], [scale; 2])
+    };
+    let a = session.input("A", &da);
+    let b = session.input("B", &db);
+    let c = session.input("C", &dc);
+    let d = session.input("D", &dd);
+    let e = session.input("E", &de);
+    let ab = a.einsum("ij,jk->ik", &b)?;
+    let de = d.einsum("jm,mk->jk", &e)?;
+    let cde = c.einsum("ij,jk->ik", &de)?;
+    let z = ab.ew(JoinOp::Add, &cde)?;
+    let ids = vec![a.id(), b.id(), c.id(), d.id(), e.id()];
+    Ok((z.graph(), ids, z.id()))
+}
 
 fn main() -> eindecomp::Result<()> {
     let scale: usize = std::env::args()
@@ -21,9 +47,15 @@ fn main() -> eindecomp::Result<()> {
         .unwrap_or(320);
     let p = 8;
     for skewed in [false, true] {
-        let chain = chain_graph(scale, skewed)?;
-        let inputs = chain_inputs(&chain, 7);
-        let want = chain_reference(&chain, &inputs)?;
+        // one throwaway session stages the lazy program; the per-strategy
+        // sessions below compile the resulting EinGraph
+        let builder = Session::new(DriverConfig::default())?;
+        let (graph, input_ids, z) = build_chain(&builder, scale, skewed)?;
+        let mut inputs = HashMap::new();
+        for (i, &v) in input_ids.iter().enumerate() {
+            inputs.insert(v, Tensor::random(&graph.vertex(v).bound, 7 + i as u64));
+        }
+        let want = eval_graph(&graph, &inputs)?;
         println!(
             "\n=== chain s={scale} {} | p={p} ===",
             if skewed { "skewed (paper variant 2)" } else { "uniform" }
@@ -38,7 +70,7 @@ fn main() -> eindecomp::Result<()> {
             Strategy::Sqrt,
             Strategy::DaskLike { chunk: scale / 4 },
         ] {
-            let driver = Driver::new(DriverConfig {
+            let session = Session::new(DriverConfig {
                 workers: p,
                 p,
                 strategy: strategy.clone(),
@@ -46,9 +78,10 @@ fn main() -> eindecomp::Result<()> {
                 network: NetworkProfile::cpu_cluster(),
                 ..Default::default()
             })?;
-            let (outs, rep) = driver.run(&chain.graph, &inputs)?;
+            let exe = session.compile(&graph)?;
+            let (outs, rep) = exe.run(&inputs)?;
             assert!(
-                outs[&chain.z].allclose(&want, 1e-2, 1e-2),
+                outs[&z].allclose(&want[&z], 1e-2, 1e-2),
                 "{}: wrong result",
                 strategy.name()
             );
@@ -59,6 +92,34 @@ fn main() -> eindecomp::Result<()> {
                 rep.exec.bytes_moved as f64 / (1 << 20) as f64,
                 rep.exec.sim_makespan_s * 1e3,
                 rep.exec.wall_s * 1e3,
+            );
+        }
+        // compile once, run many: the serving loop (uniform chain only)
+        if !skewed {
+            let session = Session::new(DriverConfig {
+                workers: p,
+                p,
+                network: NetworkProfile::cpu_cluster(),
+                ..Default::default()
+            })?;
+            let t0 = std::time::Instant::now();
+            let exe = session.compile(&graph)?;
+            let compile_s = t0.elapsed().as_secs_f64();
+            let reqs = 10;
+            let t1 = std::time::Instant::now();
+            for _ in 0..reqs {
+                exe.run(&inputs)?;
+            }
+            let run_s = t1.elapsed().as_secs_f64();
+            // an equivalent graph compiled again is a cache hit
+            assert_eq!(session.compile(&graph)?.provenance(), PlanProvenance::CacheHit);
+            println!(
+                "serving loop   : compile {:.1} ms once + {reqs} runs x {:.1} ms -> {:.1} req/s \
+                 amortized (cache {:?})",
+                compile_s * 1e3,
+                run_s * 1e3 / reqs as f64,
+                reqs as f64 / (compile_s + run_s),
+                session.stats()
             );
         }
     }

@@ -1,79 +1,100 @@
-//! Quickstart: declare a computation in EinSum, let EinDecomp choose the
-//! decomposition, execute it on the simulated cluster, and verify the
-//! numbers — the whole pipeline in ~60 lines of user code.
+//! Quickstart: declare a computation with the lazy expression frontend,
+//! compile it **once** (EinDecomp plan → task graph → placement), run it
+//! **many** times on the simulated cluster, and verify the numbers — the
+//! whole compile-once / run-many pipeline in ~60 lines of user code.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use eindecomp::decomp::{plan_graph, PlannerConfig};
-use eindecomp::einsum::parser::parse_program;
-use eindecomp::runtime::{Backend, DispatchEngine, KernelEngine};
-use eindecomp::sim::{Cluster, NetworkProfile};
-use eindecomp::tensor::Tensor;
+use eindecomp::prelude::*;
+use eindecomp::runtime::native::eval_graph;
 use std::collections::HashMap;
 
 fn main() -> eindecomp::Result<()> {
-    // 1. Declare the computation — a matrix chain with a reduction, in
-    //    the textual EinSum program format.
-    let g = parse_program(
-        r#"
-        input A [256, 256]
-        input B [256, 256]
-        input C [256, 256]
-        AB   = einsum ij,jk->ik A B
-        ABC  = einsum ik,km->im AB C
-        R    = map relu ABC
-        S    = reduce sum im->i R
-        "#,
-    )?;
-    println!("EinGraph: {} vertices, {:.2} Mflop", g.len(), g.total_flops() / 1e6);
+    // 1. A session owns the kernel engine, the simulated 8-worker
+    //    cluster, and the plan cache. Backend::Auto uses AOT-compiled
+    //    PJRT kernels (make artifacts) where available, native elsewhere.
+    let session = Session::new(DriverConfig {
+        workers: 8,
+        p: 8,
+        backend: Backend::Auto,
+        ..Default::default()
+    })?;
 
-    // 2. Plan: EinDecomp picks a partitioning vector per vertex that
-    //    minimizes the communication upper bound at p=8 kernel calls.
-    let plan = plan_graph(&g, &PlannerConfig { p: 8, ..Default::default() })?;
+    // 2. Declare the computation lazily — a matrix chain with a relu and
+    //    a row reduction, chained off the session's input expressions.
+    let a = session.input("A", &[256, 256]);
+    let b = session.input("B", &[256, 256]);
+    let c = session.input("C", &[256, 256]);
+    let s = a
+        .einsum("ij,jk->ik", &b)?
+        .einsum("ik,km->im", &c)?
+        .map(UnaryOp::Relu)?
+        .reduce("im->i", AggOp::Sum)?;
+
+    // 3. Compile once: EinDecomp picks a partitioning vector per vertex
+    //    minimizing the communication upper bound at p=8 kernel calls,
+    //    lowering and placement are frozen into the Executable.
+    let exe = session.compile_expr(&s)?;
+    let g = exe.graph();
+    println!("EinGraph: {} vertices, {:.2} Mflop", g.len(), g.total_flops() / 1e6);
     println!("\nEinDecomp plan (d over each vertex's unique labels):");
     for vert in g.vertices() {
-        if let Some(d) = plan.parts.get(&vert.id) {
-            println!("  {:<8} d = {:?}", vert.name, d);
+        if let Some(d) = exe.plan().parts.get(&vert.id) {
+            println!("  {:<20} d = {:?}", vert.name, d);
         }
     }
-    println!("predicted communication bound: {:.0} floats", plan.predicted_cost);
+    let (plan_s, lower_s) = exe.compile_times();
+    println!(
+        "predicted communication bound: {:.0} floats (planned in {:.2} ms, lowered in {:.2} ms)",
+        exe.plan().predicted_cost,
+        plan_s * 1e3,
+        lower_s * 1e3
+    );
 
-    // 3. Execute on a simulated 8-worker cluster. Backend::Auto uses the
-    //    AOT-compiled PJRT kernels (make artifacts) where tile shapes
-    //    match, falling back to native kernels elsewhere.
-    let engine = DispatchEngine::new(Backend::Auto, "artifacts")
-        .unwrap_or_else(|_| DispatchEngine::native());
-    let cluster = Cluster::new(8, NetworkProfile::cpu_cluster());
+    // 4. Run many: three "requests" — zero planner and zero lowering
+    //    work per call, buffer pools warm across calls.
     let mut inputs = HashMap::new();
-    for (i, v) in g.inputs().into_iter().enumerate() {
-        inputs.insert(v, Tensor::random(&g.vertex(v).bound, 42 + i as u64));
+    for (i, v) in [&a, &b, &c].into_iter().enumerate() {
+        inputs.insert(v.id(), Tensor::random(&[256, 256], 42 + i as u64));
     }
-    let (outs, report) = cluster.execute(&g, &plan, &engine, &inputs)?;
-    println!("\nexecution: {}", report.summary());
-    let (pjrt_hits, native_hits) = engine.hit_counts();
+    let mut last = None;
+    for req in 0..3 {
+        let (outs, report) = exe.run(&inputs)?;
+        println!("\nrequest {req}: {}", report.exec.summary());
+        last = Some(outs);
+    }
+    let outs = last.unwrap();
+    let (pjrt_hits, native_hits) = session.engine().hit_counts();
     println!("kernel dispatch: {pjrt_hits} PJRT (AOT XLA), {native_hits} native");
 
-    // 4. Verify against direct dense evaluation.
-    let s = g.by_name("S").unwrap();
-    let native = eindecomp::runtime::NativeEngine::new();
-    let ab = native.eval(&g.vertex(g.by_name("AB").unwrap()).op, &[
-        &inputs[&g.by_name("A").unwrap()],
-        &inputs[&g.by_name("B").unwrap()],
-    ])?;
-    let abc = native.eval(&g.vertex(g.by_name("ABC").unwrap()).op, &[
-        &ab,
-        &inputs[&g.by_name("C").unwrap()],
-    ])?;
-    let r = native.eval(&g.vertex(g.by_name("R").unwrap()).op, &[&abc])?;
-    let want = native.eval(&g.vertex(s).op, &[&r])?;
-    let got = &outs[&s];
+    // 5. A canonically-equivalent program — different tensor and label
+    //    names, same shapes — is a plan-cache hit: no second compile.
+    let x = session.input("X", &[256, 256]);
+    let y = session.input("Y", &[256, 256]);
+    let z = session.input("Z", &[256, 256]);
+    let s2 = x
+        .einsum("pq,qr->pr", &y)?
+        .einsum("pr,rt->pt", &z)?
+        .map(UnaryOp::Relu)?
+        .reduce("pt->p", AggOp::Sum)?;
+    let exe2 = session.compile_expr(&s2)?;
+    println!(
+        "\nrecompile of a renamed twin: provenance = {}, cache {:?}",
+        exe2.provenance(),
+        session.stats()
+    );
+    assert_eq!(exe2.provenance(), PlanProvenance::CacheHit);
+
+    // 6. Verify against direct dense evaluation of the same EinGraph.
+    let want = eval_graph(g, &inputs)?;
+    let got = &outs[&s.id()];
     println!(
         "\nverification: max |dense - decomposed| = {:.2e}",
-        got.max_abs_diff(&want)?
+        got.max_abs_diff(&want[&s.id()])?
     );
-    assert!(got.allclose(&want, 1e-3, 1e-3));
+    assert!(got.allclose(&want[&s.id()], 1e-3, 1e-3));
     println!("quickstart OK");
     Ok(())
 }

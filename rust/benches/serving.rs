@@ -1,0 +1,139 @@
+//! Serving-path benchmark: cold per-call `Driver::run` (re-plans and
+//! re-lowers every request) versus the compile-once / run-many `Session`
+//! path (`compile` once, `Executable::run` per request) on the Experiment-1
+//! matchain graph. Reports amortized request throughput — the cached
+//! path's amortization *includes* its one-time compile — and asserts the
+//! two paths produce bitwise-identical outputs. Timings are written to
+//! `BENCH_serving.json` (uploaded as a CI artifact alongside
+//! `BENCH_micro.json`). `EINDECOMP_SMOKE=1` caps the configuration for CI.
+//!
+//! ```sh
+//! cargo bench --bench serving
+//! ```
+
+use eindecomp::coordinator::driver::{Driver, DriverConfig, PlanProvenance};
+use eindecomp::coordinator::session::Session;
+use eindecomp::models::matchain::{chain_graph, chain_inputs};
+use eindecomp::runtime::Backend;
+use eindecomp::sim::NetworkProfile;
+use eindecomp::util::Json;
+
+fn main() {
+    let smoke = std::env::var("EINDECOMP_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let tag = if smoke { " (smoke)" } else { "" };
+    println!("=== serving: cold per-call vs compile-once/run-many{tag} ===");
+
+    let scale = if smoke { 48 } else { 96 };
+    let repeat = if smoke { 15 } else { 40 };
+    // p > workers sharpens the planner's share of each cold call — the
+    // regime the paper's Sections 5–8 spend their effort on.
+    let cfg = DriverConfig {
+        workers: 4,
+        p: 16,
+        backend: Backend::Native,
+        network: NetworkProfile::loopback(),
+        ..Default::default()
+    };
+    let chain = chain_graph(scale, false).unwrap();
+    let inputs = chain_inputs(&chain, 42);
+
+    // --- cold: plan + lower + execute on every request -----------------
+    let driver = Driver::new(cfg.clone()).unwrap();
+    let (outs_cold, rep_cold) = driver.run(&chain.graph, &inputs).unwrap(); // warmup
+    assert_eq!(rep_cold.provenance, PlanProvenance::Planned);
+    let t0 = std::time::Instant::now();
+    let mut outs_last = None;
+    for _ in 0..repeat {
+        let (outs, _) = driver.run(&chain.graph, &inputs).unwrap();
+        outs_last = Some(outs);
+    }
+    let cold_total = t0.elapsed().as_secs_f64();
+    let outs_last = outs_last.unwrap();
+    assert_eq!(outs_last[&chain.z], outs_cold[&chain.z], "cold path drifted");
+    let cold_rps = repeat as f64 / cold_total;
+    println!(
+        "driver per-call : {repeat} x {:7.3} ms -> {:8.1} req/s  (plan_s {:.3} ms/req)",
+        cold_total * 1e3 / repeat as f64,
+        cold_rps,
+        rep_cold.plan_s * 1e3
+    );
+
+    // --- warm: compile once, run many ----------------------------------
+    let session = Session::new(cfg).unwrap();
+    let tc = std::time::Instant::now();
+    let exe = session.compile(&chain.graph).unwrap();
+    let compile_s = tc.elapsed().as_secs_f64();
+    let (outs_warmup, _) = exe.run(&inputs).unwrap(); // warmup (pools, code)
+    assert_eq!(outs_warmup[&chain.z], outs_cold[&chain.z], "session != driver");
+    let t1 = std::time::Instant::now();
+    let mut outs_warm = None;
+    for _ in 0..repeat {
+        let (outs, _) = exe.run(&inputs).unwrap();
+        outs_warm = Some(outs);
+    }
+    let warm_total = t1.elapsed().as_secs_f64();
+    let outs_warm = outs_warm.unwrap();
+    // bitwise: cached runs == per-call driver runs, every byte
+    assert_eq!(outs_warm[&chain.z], outs_cold[&chain.z], "cached run diverged");
+    // recompiling is a cache hit with zero planner work
+    let exe2 = session.compile(&chain.graph).unwrap();
+    assert_eq!(exe2.provenance(), PlanProvenance::CacheHit);
+    assert_eq!(session.stats().planner_runs, 1);
+    let warm_rps_amortized = repeat as f64 / (compile_s + warm_total);
+    let (plan_s, lower_s) = exe.compile_times();
+    println!(
+        "session cached  : {repeat} x {:7.3} ms -> {:8.1} req/s amortized (compile {:.3} ms = \
+         plan {:.3} + lower {:.3})",
+        warm_total * 1e3 / repeat as f64,
+        warm_rps_amortized,
+        compile_s * 1e3,
+        plan_s * 1e3,
+        lower_s * 1e3
+    );
+    let speedup = warm_rps_amortized / cold_rps;
+    println!("amortized speedup (cached / per-call): {speedup:.2}x  (acceptance gate: >= 1.3x)");
+
+    let entry = |mode: &str, total: f64, rps: f64, extra: Vec<(String, Json)>| {
+        let mut fields = vec![
+            ("workload".to_string(), Json::str("matchain")),
+            ("scale".to_string(), Json::num(scale as f64)),
+            ("repeat".to_string(), Json::num(repeat as f64)),
+            ("mode".to_string(), Json::str(mode)),
+            ("total_s".to_string(), Json::num(total)),
+            ("ms_per_run".to_string(), Json::num(total * 1e3 / repeat as f64)),
+            ("runs_per_s".to_string(), Json::num(rps)),
+        ];
+        fields.extend(extra);
+        Json::Obj(fields)
+    };
+    let report = Json::Obj(vec![
+        (
+            "driver_per_call".to_string(),
+            entry(
+                "plan+lower+run per request",
+                cold_total,
+                cold_rps,
+                vec![("plan_s_per_req".to_string(), Json::num(rep_cold.plan_s))],
+            ),
+        ),
+        (
+            "session_cached".to_string(),
+            entry(
+                "compile once, run many",
+                warm_total,
+                warm_rps_amortized,
+                vec![
+                    ("compile_s".to_string(), Json::num(compile_s)),
+                    ("plan_s".to_string(), Json::num(plan_s)),
+                    ("lower_s".to_string(), Json::num(lower_s)),
+                ],
+            ),
+        ),
+        ("speedup_amortized".to_string(), Json::num(speedup)),
+        ("bitwise_identical".to_string(), Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_serving.json", report.render()).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
+}

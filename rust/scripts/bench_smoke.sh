@@ -15,5 +15,9 @@ echo "== micro_hotpath (EINDECOMP_SMOKE=1) =="
 EINDECOMP_SMOKE=1 cargo bench --bench micro_hotpath
 
 echo
+echo "== serving (EINDECOMP_SMOKE=1): cold vs compile-once/run-many =="
+EINDECOMP_SMOKE=1 cargo bench --bench serving
+
+echo
 echo "== fig9_ffnn (modeled, full sweep is cheap) =="
 cargo bench --bench fig9_ffnn

@@ -4,7 +4,7 @@
 //! ```text
 //! eindecomp plan    --model chain|chain-skewed|ffnn|llama --p 16 [--scale N] [--compare]
 //! eindecomp run     --model ...         --workers 8 [--backend native|auto]
-//!                   [--exec steal|barrier] [--intra-op N]
+//!                   [--exec steal|barrier] [--intra-op N] [--repeat N]
 //! eindecomp program --file prog.ein     [--p 8] [--run]
 //! eindecomp help
 //! ```
@@ -157,7 +157,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    use super::driver::{Driver, DriverConfig};
+    use super::driver::DriverConfig;
+    use super::session::Session;
     let g = build_model(args)?;
     let workers = args.get_usize("workers", 4);
     let backend = match args.get("backend").unwrap_or("native") {
@@ -185,16 +186,44 @@ fn cmd_run(args: &Args) -> Result<()> {
         intra_op: args.get_usize("intra-op", 0),
         ..Default::default()
     };
-    let driver = Driver::new(cfg)?;
+    // Compile once (plan + lower + place), run `--repeat` many times: the
+    // serving shape of the paper's pipeline. --repeat 1 is the legacy
+    // one-shot behaviour.
+    let repeat = args.get_usize("repeat", 1).max(1);
+    let session = Session::new(cfg)?;
+    let t0 = std::time::Instant::now();
+    let exe = session.compile(&g)?;
+    let compile_s = t0.elapsed().as_secs_f64();
     // random inputs for every graph input
     let mut inputs = HashMap::new();
     for (i, v) in g.inputs().into_iter().enumerate() {
         inputs.insert(v, Tensor::random(&g.vertex(v).bound, 100 + i as u64));
     }
-    let (_outs, rep) = driver.run(&g, &inputs)?;
+    let (plan_s, lower_s) = exe.compile_times();
+    let t1 = std::time::Instant::now();
+    let mut rep = None;
+    for _ in 0..repeat {
+        rep = Some(exe.run(&inputs)?.1);
+    }
+    let run_s = t1.elapsed().as_secs_f64();
+    let rep = rep.expect("repeat >= 1");
     println!("strategy       : {}", rep.strategy);
     println!("plan cost      : {:.0} floats", rep.plan_cost);
     println!("plan time      : {:.2} ms", rep.plan_s * 1e3);
+    println!(
+        "compile        : {:.2} ms (plan {:.2} + lower {:.2}), provenance {}",
+        compile_s * 1e3,
+        plan_s * 1e3,
+        lower_s * 1e3,
+        exe.provenance()
+    );
+    if repeat > 1 {
+        println!(
+            "runs           : {repeat} x {:.2} ms avg -> {:.1} runs/s amortized (incl. compile)",
+            run_s * 1e3 / repeat as f64,
+            repeat as f64 / (compile_s + run_s)
+        );
+    }
     println!("report         : {}", rep.exec.summary());
     println!("json           : {}", rep.to_json().render());
     Ok(())
@@ -242,6 +271,8 @@ USAGE:
   eindecomp run     --model ... [--workers N] [--p N] [--strategy S]
                     [--backend native|auto|pjrt] [--exec steal|barrier]
                     [--intra-op N]   (kernel shard fan-out; 0 = threads)
+                    [--repeat N]     (compile once, run N times; prints
+                                      amortized serving throughput)
   eindecomp program --file prog.ein [--p N] [--run]
 
 STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,
@@ -280,6 +311,18 @@ mod tests {
             .iter()
             .map(|s| s.to_string())
             .collect();
+        main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn run_command_with_repeat() {
+        let argv: Vec<String> = [
+            "run", "--model", "chain", "--scale", "24", "--workers", "2", "--p", "2",
+            "--repeat", "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         main_with_args(&argv).unwrap();
     }
 

@@ -1,9 +1,19 @@
-//! High-level driver tying the whole stack together: choose a
-//! decomposition (EinDecomp or a baseline), lower to a task graph, place,
-//! execute on the simulated cluster with the configured kernel backend,
-//! and report. This is the entry point examples and benches use.
+//! The legacy one-shot driver, now a thin shim over the compile-once /
+//! run-many [`Session`](super::session::Session) API.
+//!
+//! **Soft-deprecated:** new code should use [`Session::compile`] +
+//! [`Executable::run`](super::session::Executable::run), which plan and
+//! lower once and then execute the frozen task graph per call.
+//! `Driver::run` deliberately keeps the old per-call semantics —
+//! re-planning and re-lowering on *every* invocation (via
+//! [`Session::compile_fresh`]) — so existing sweeps and the serving
+//! bench's cold baseline behave exactly as before.
+//!
+//! [`Session::compile`]: super::session::Session::compile
+//! [`Session::compile_fresh`]: super::session::Session::compile_fresh
 
-use crate::decomp::baselines::{assign, LabelRoles, Strategy};
+use super::session::Session;
+use crate::decomp::baselines::{LabelRoles, Strategy};
 use crate::decomp::Plan;
 use crate::einsum::graph::{EinGraph, VertexId};
 use crate::error::Result;
@@ -57,14 +67,50 @@ impl Default for DriverConfig {
     }
 }
 
+/// Where a run's plan came from — so sweeps stop conflating "planning was
+/// free" (reused / cache hit) with "planning cost nothing" (a fresh plan
+/// whose time simply was not measured).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlanProvenance {
+    /// The planner ran for this very report; `plan_s` is its wall time.
+    Planned,
+    /// A caller-supplied plan was reused ([`Driver::run_with_plan`]);
+    /// `plan_s` is 0.0 because planning happened (and was timed)
+    /// elsewhere.
+    Reused,
+    /// Served from a [`Session`](super::session::Session) plan cache;
+    /// `plan_s` reports the original compile's real planning time.
+    CacheHit,
+}
+
+impl PlanProvenance {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanProvenance::Planned => "planned",
+            PlanProvenance::Reused => "reused",
+            PlanProvenance::CacheHit => "cache_hit",
+        }
+    }
+}
+
+impl std::fmt::Display for PlanProvenance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Report of one full run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
     pub strategy: String,
     /// Planner's predicted communication bound (floats).
     pub plan_cost: f64,
-    /// Planning wall time, seconds.
+    /// Planning wall time, seconds (the *original* compile's planning
+    /// time when `provenance` is `CacheHit`; 0.0 only for `Reused`).
     pub plan_s: f64,
+    /// Whether this run's plan was freshly planned, reused, or a cache
+    /// hit.
+    pub provenance: PlanProvenance,
     pub exec: ExecReport,
 }
 
@@ -74,6 +120,10 @@ impl RunReport {
             ("strategy".into(), Json::str(self.strategy.clone())),
             ("plan_cost_floats".into(), Json::num(self.plan_cost)),
             ("plan_s".into(), Json::num(self.plan_s)),
+            (
+                "plan_provenance".into(),
+                Json::str(self.provenance.as_str()),
+            ),
             ("sim_makespan_s".into(), Json::num(self.exec.sim_makespan_s)),
             ("wall_s".into(), Json::num(self.exec.wall_s)),
             ("bytes_moved".into(), Json::num(self.exec.bytes_moved as f64)),
@@ -90,89 +140,75 @@ impl RunReport {
     }
 }
 
-/// Orchestrates plan + execute for a fixed configuration.
+/// Orchestrates plan + execute for a fixed configuration. Thin wrapper
+/// over an owned [`Session`] that preserves the legacy plan-every-call
+/// behaviour; see the module docs.
 pub struct Driver {
-    pub cfg: DriverConfig,
-    engine: DispatchEngine,
-    cluster: Cluster,
+    session: Session,
 }
 
 impl Driver {
     pub fn new(cfg: DriverConfig) -> Result<Self> {
-        let engine = DispatchEngine::new(cfg.backend, &cfg.artifact_dir)?;
-        let mut cluster = Cluster::new(cfg.workers, cfg.network.clone());
-        cluster.placement = cfg.placement;
-        cluster.exec_mode = cfg.exec_mode;
-        cluster.intra_op = cfg.intra_op;
         Ok(Driver {
-            cfg,
-            engine,
-            cluster,
+            session: Session::new(cfg)?,
         })
     }
 
+    /// The configuration this driver (and its session) was built with.
+    pub fn cfg(&self) -> &DriverConfig {
+        &self.session.cfg
+    }
+
+    /// The underlying compile-once / run-many session.
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
     pub fn engine(&self) -> &DispatchEngine {
-        &self.engine
+        self.session.engine()
     }
 
     pub fn cluster(&self) -> &Cluster {
-        &self.cluster
+        self.session.cluster()
     }
 
     /// Plan the graph with the configured strategy.
     pub fn plan(&self, g: &EinGraph) -> Result<(Plan, f64)> {
-        let t0 = std::time::Instant::now();
-        let plan = assign(g, &self.cfg.strategy, self.cfg.p, &self.cfg.roles)?;
-        Ok((plan, t0.elapsed().as_secs_f64()))
+        self.session.plan(g)
     }
 
-    /// Plan + execute for real; returns outputs keyed by vertex.
+    /// Plan + execute for real; returns outputs keyed by vertex. Legacy
+    /// semantics: re-plans and re-lowers on every call (use
+    /// [`Session::compile`](super::session::Session::compile) to pay that
+    /// cost once).
     pub fn run(
         &self,
         g: &EinGraph,
         inputs: &HashMap<VertexId, Tensor>,
     ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
-        let (plan, plan_s) = self.plan(g)?;
-        let (outs, exec) = self.cluster.execute(g, &plan, &self.engine, inputs)?;
-        Ok((
-            outs,
-            RunReport {
-                strategy: plan.strategy.clone(),
-                plan_cost: plan.predicted_cost,
-                plan_s,
-                exec,
-            },
-        ))
+        self.session.compile_fresh(g)?.run(inputs)
     }
 
     /// Run an already-computed plan (for strategy sweeps that reuse one
-    /// planning pass).
+    /// planning pass). Reported with [`PlanProvenance::Reused`].
     pub fn run_with_plan(
         &self,
         g: &EinGraph,
         plan: &Plan,
         inputs: &HashMap<VertexId, Tensor>,
     ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
-        let (outs, exec) = self.cluster.execute(g, plan, &self.engine, inputs)?;
-        Ok((
-            outs,
-            RunReport {
-                strategy: plan.strategy.clone(),
-                plan_cost: plan.predicted_cost,
-                plan_s: 0.0,
-                exec,
-            },
-        ))
+        self.session.execute_with_plan(g, plan, inputs)
     }
 
     /// Plan + model only (no tensors) — used at paper-scale shapes.
     pub fn dry_run(&self, g: &EinGraph) -> Result<RunReport> {
-        let (plan, plan_s) = self.plan(g)?;
-        let exec = self.cluster.dry_run(g, &plan)?;
+        let (plan, plan_s) = self.session.plan(g)?;
+        let exec = self.session.cluster().dry_run(g, &plan)?;
         Ok(RunReport {
             strategy: plan.strategy.clone(),
             plan_cost: plan.predicted_cost,
             plan_s,
+            provenance: PlanProvenance::Planned,
             exec,
         })
     }
@@ -184,13 +220,15 @@ impl Driver {
         mem: &MemoryConfig,
         weights: &HashSet<VertexId>,
     ) -> Result<RunReport> {
-        let (plan, plan_s) = self.plan(g)?;
-        let tg = self.cluster.lower(g, &plan)?;
-        let exec = model_with_memory(&tg, &self.cfg.network, self.cfg.workers, mem, weights);
+        let (plan, plan_s) = self.session.plan(g)?;
+        let tg = self.session.cluster().lower(g, &plan)?;
+        let cfg = self.cfg();
+        let exec = model_with_memory(&tg, &cfg.network, cfg.workers, mem, weights);
         Ok(RunReport {
             strategy: plan.strategy.clone(),
             plan_cost: plan.predicted_cost,
             plan_s,
+            provenance: PlanProvenance::Planned,
             exec,
         })
     }
@@ -211,9 +249,27 @@ mod tests {
         assert!(outs[&chain.z].allclose(&want, 1e-3, 1e-4));
         assert!(rep.plan_cost > 0.0);
         assert!(rep.exec.kernel_calls >= 4);
-        // JSON report renders
+        assert_eq!(rep.provenance, PlanProvenance::Planned);
+        assert!(rep.plan_s > 0.0);
+        // JSON report renders, including provenance
         let j = rep.to_json().render();
         assert!(j.contains("kernel_calls"));
+        assert!(j.contains("\"plan_provenance\":\"planned\""));
+    }
+
+    #[test]
+    fn run_with_plan_reports_reused_provenance() {
+        let chain = chain_graph(32, false).unwrap();
+        let driver = Driver::new(DriverConfig::default()).unwrap();
+        let inputs = chain_inputs(&chain, 5);
+        let (plan, plan_s) = driver.plan(&chain.graph).unwrap();
+        assert!(plan_s > 0.0);
+        let (outs, rep) = driver.run_with_plan(&chain.graph, &plan, &inputs).unwrap();
+        let want = chain_reference(&chain, &inputs).unwrap();
+        assert!(outs[&chain.z].allclose(&want, 1e-3, 1e-4));
+        assert_eq!(rep.provenance, PlanProvenance::Reused);
+        assert_eq!(rep.plan_s, 0.0);
+        assert!(rep.to_json().render().contains("reused"));
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! The L3 coordinator: configuration, the high-level [`driver::Driver`]
-//! (plan → lower → place → execute → report), and the CLI front-end used
-//! by the `eindecomp` binary.
+//! The L3 coordinator: configuration, the compile-once / run-many
+//! [`session::Session`] API (plan → lower → place once, execute many
+//! times through a canonical-signature plan cache), the legacy
+//! [`driver::Driver`] shim, and the CLI front-end used by the
+//! `eindecomp` binary.
 
 pub mod cli;
 pub mod driver;
+pub mod session;

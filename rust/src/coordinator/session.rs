@@ -1,0 +1,551 @@
+//! Compile-once / run-many `Session` API.
+//!
+//! The paper's pipeline (EinSum spec → EinDecomp plan → TRA task graph →
+//! execution) is declarative end to end, and planning is the expensive
+//! step (Sections 5–8). Under a serving workload the same graph executes
+//! for millions of requests, so that cost must be paid once, not per
+//! call:
+//!
+//! * [`Session`] owns the kernel engine, the simulated cluster, and a
+//!   **plan cache** keyed by the [`CanonSignature`] of the graph
+//!   (deterministic label renaming + canonical vertex ordering + shape
+//!   vector — see [`crate::einsum::canon`]), so `"ij,jk->ik"` and
+//!   `"ab,bc->ac"` at equal shapes share one cache entry;
+//! * [`Session::compile`] runs plan → lower → place exactly once per
+//!   distinct signature and returns an [`Executable`];
+//! * [`Executable::run`] executes the frozen, placed task graph with
+//!   **zero** planner and **zero** lowering work per call, reusing the
+//!   executor's buffer pools, and reports plan provenance
+//!   ([`PlanProvenance::Planned`] on the compiling call,
+//!   [`PlanProvenance::CacheHit`] afterwards) with the real `plan_s`
+//!   either way.
+//!
+//! Graphs are built either directly ([`crate::einsum::graph::EinGraph`])
+//! or through the lazy [`Expr`] frontend ([`Session::input`] /
+//! [`Session::compile_expr`]).
+//!
+//! ```
+//! use eindecomp::prelude::*;
+//! use std::collections::HashMap;
+//!
+//! let session = Session::new(DriverConfig { workers: 2, p: 2, ..Default::default() })?;
+//! let a = session.input("A", &[16, 16]);
+//! let b = session.input("B", &[16, 16]);
+//! let z = a.einsum("ij,jk->ik", &b)?;
+//! let exe = session.compile_expr(&z)?;       // plan + lower + place, once
+//! let mut inputs = HashMap::new();
+//! inputs.insert(a.id(), Tensor::random(&[16, 16], 1));
+//! inputs.insert(b.id(), Tensor::random(&[16, 16], 2));
+//! let (outs, report) = exe.run(&inputs)?;    // zero planning per call
+//! assert_eq!(outs[&z.id()].shape(), &[16, 16]);
+//! assert_eq!(report.provenance, PlanProvenance::Planned);
+//! assert_eq!(session.stats().misses, 1);
+//! # Ok::<(), eindecomp::Error>(())
+//! ```
+
+use super::driver::{DriverConfig, PlanProvenance, RunReport};
+use crate::decomp::baselines::{assign, Strategy};
+use crate::decomp::Plan;
+use crate::einsum::canon::{canonicalize, Canon, CanonSignature};
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::einsum::lazy::Expr;
+use crate::error::{Error, Result};
+use crate::runtime::DispatchEngine;
+use crate::sim::cluster::Cluster;
+use crate::taskgraph::TaskGraph;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One compiled program: the graph snapshot, its plan, the lowered,
+/// placed task graph, and the precomputed modeled-timeline report (a
+/// pure function of the task graph — paid once here, not per request).
+/// Shared (via `Arc`) between the cache and every `Executable` handed
+/// out for it. `canon` is `None` for uncached [`Session::compile_fresh`]
+/// artifacts, which never need a remap.
+struct Artifact {
+    graph: EinGraph,
+    canon: Option<Canon>,
+    plan: Plan,
+    tg: TaskGraph,
+    model: crate::sim::cluster::ExecReport,
+    plan_s: f64,
+    lower_s: f64,
+}
+
+/// Plan-cache counters (monotonic over the session's lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `compile()` / `compile_expr()` calls (cached path only).
+    pub compiles: u64,
+    /// Compiles served from the cache (no planning, no lowering).
+    pub hits: u64,
+    /// Compiles that had to plan + lower.
+    pub misses: u64,
+    /// Total planner invocations (incl. `plan()` / `compile_fresh()`).
+    pub planner_runs: u64,
+    /// Total lower+place invocations.
+    pub lower_runs: u64,
+    /// Distinct signatures currently cached.
+    pub entries: usize,
+}
+
+/// A long-lived execution context: engine + cluster + plan cache (+ the
+/// staging graph of the lazy [`Expr`] frontend). See the module docs.
+pub struct Session {
+    pub cfg: DriverConfig,
+    engine: Arc<DispatchEngine>,
+    cluster: Cluster,
+    cache: Mutex<HashMap<CanonSignature, Arc<Artifact>>>,
+    staging: Mutex<Arc<Mutex<EinGraph>>>,
+    compiles: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    planner_runs: AtomicU64,
+    lower_runs: AtomicU64,
+}
+
+impl Session {
+    pub fn new(cfg: DriverConfig) -> Result<Self> {
+        let engine = Arc::new(DispatchEngine::new(cfg.backend, &cfg.artifact_dir)?);
+        let mut cluster = Cluster::new(cfg.workers, cfg.network.clone());
+        cluster.placement = cfg.placement;
+        cluster.exec_mode = cfg.exec_mode;
+        cluster.intra_op = cfg.intra_op;
+        Ok(Session {
+            cfg,
+            engine,
+            cluster,
+            cache: Mutex::new(HashMap::new()),
+            staging: Mutex::new(Arc::new(Mutex::new(EinGraph::new()))),
+            compiles: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            planner_runs: AtomicU64::new(0),
+            lower_runs: AtomicU64::new(0),
+        })
+    }
+
+    pub fn engine(&self) -> &DispatchEngine {
+        &self.engine
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Plan-cache counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            planner_runs: self.planner_runs.load(Ordering::Relaxed),
+            lower_runs: self.lower_runs.load(Ordering::Relaxed),
+            entries: self.cache.lock().unwrap().len(),
+        }
+    }
+
+    /// Drop every cached artifact (counters are retained).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Start (or extend) the lazy program: declare an input tensor of the
+    /// given shape and get back an [`Expr`] to chain einsums on. The
+    /// program snapshot is taken by [`Self::compile_expr`].
+    pub fn input(&self, name: &str, shape: &[usize]) -> Expr {
+        let staging = self.staging.lock().unwrap().clone();
+        Expr::input(&staging, name, shape)
+    }
+
+    /// Compile the lazy program `expr` belongs to — the **whole** staged
+    /// graph, so sibling outputs created along the way are preserved and
+    /// every staged input (used or not) becomes a required `run` input.
+    /// If `expr` is from the session's current program, the staging slate
+    /// is wiped so the next [`Self::input`] starts a fresh program.
+    pub fn compile_expr(&self, expr: &Expr) -> Result<Executable> {
+        let g = expr.graph();
+        let exe = self.compile(&g)?;
+        let mut staging = self.staging.lock().unwrap();
+        let current: &Arc<Mutex<EinGraph>> = &staging;
+        if Arc::ptr_eq(expr.builder(), current) {
+            *staging = Arc::new(Mutex::new(EinGraph::new()));
+        }
+        Ok(exe)
+    }
+
+    /// Compile a graph: plan → lower → place exactly once per canonical
+    /// signature. A canonically-equivalent graph (labels renamed, vertices
+    /// reordered, same shapes) is a cache hit; the returned [`Executable`]
+    /// transparently remaps the caller's vertex ids onto the cached
+    /// artifact.
+    pub fn compile(&self, g: &EinGraph) -> Result<Executable> {
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        let canon = canonicalize(g);
+        let key = self.cache_key(g, &canon);
+        let cached = self.cache.lock().unwrap().get(&key).cloned();
+        if let Some(art) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return self.executable(art, &canon, PlanProvenance::CacheHit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let art = self.build_artifact(g, Some(canon.clone()))?;
+        // Re-check under the lock before publishing: a concurrent compile
+        // of the same program may have landed first. Keep the incumbent so
+        // every Executable of one signature shares one artifact (the race
+        // at worst plans twice and is counted truthfully in the stats).
+        let art = {
+            let mut cache = self.cache.lock().unwrap();
+            match cache.get(&key) {
+                Some(existing) => Arc::clone(existing),
+                None => {
+                    cache.insert(key, Arc::clone(&art));
+                    art
+                }
+            }
+        };
+        self.executable(art, &canon, PlanProvenance::Planned)
+    }
+
+    /// The cache key for `g`: the canonical signature, extended with the
+    /// concrete label names when the configured strategy plans by label
+    /// *name* (role-driven baselines — their plans are not invariant
+    /// under renaming, so renamed twins must not share an entry).
+    fn cache_key(&self, g: &EinGraph, canon: &Canon) -> CanonSignature {
+        let label_sensitive = matches!(
+            self.cfg.strategy,
+            Strategy::DataParallel
+                | Strategy::Megatron
+                | Strategy::Sequence
+                | Strategy::AttentionHead
+        );
+        if label_sensitive {
+            canon.named_signature(g)
+        } else {
+            canon.signature.clone()
+        }
+    }
+
+    /// Compile without consulting or populating the cache — every call
+    /// plans and lowers afresh (no canonicalization either: the result is
+    /// used directly, so no remap can be needed). This is the legacy
+    /// per-call semantics the [`super::driver::Driver`] shim preserves
+    /// (and the baseline the serving bench measures the cache against).
+    pub fn compile_fresh(&self, g: &EinGraph) -> Result<Executable> {
+        let art = self.build_artifact(g, None)?;
+        Ok(self.executable_identity(art, PlanProvenance::Planned))
+    }
+
+    /// Convenience: compile (through the cache) and run once.
+    pub fn run(
+        &self,
+        g: &EinGraph,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
+        self.compile(g)?.run(inputs)
+    }
+
+    /// Plan only (no lowering, no cache) — wall time included.
+    pub fn plan(&self, g: &EinGraph) -> Result<(Plan, f64)> {
+        self.planner_runs.fetch_add(1, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        let plan = assign(g, &self.cfg.strategy, self.cfg.p, &self.cfg.roles)?;
+        Ok((plan, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Execute a caller-supplied plan (strategy sweeps that reuse one
+    /// planning pass). Lowers per call; reports
+    /// [`PlanProvenance::Reused`] with `plan_s = 0.0` since planning
+    /// genuinely happened elsewhere.
+    pub fn execute_with_plan(
+        &self,
+        g: &EinGraph,
+        plan: &Plan,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
+        self.lower_runs.fetch_add(1, Ordering::Relaxed);
+        let (outs, exec) = self.cluster.execute(g, plan, self.engine.as_ref(), inputs)?;
+        Ok((
+            outs,
+            RunReport {
+                strategy: plan.strategy.clone(),
+                plan_cost: plan.predicted_cost,
+                plan_s: 0.0,
+                provenance: PlanProvenance::Reused,
+                exec,
+            },
+        ))
+    }
+
+    fn build_artifact(&self, g: &EinGraph, canon: Option<Canon>) -> Result<Arc<Artifact>> {
+        self.planner_runs.fetch_add(1, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        let plan = assign(g, &self.cfg.strategy, self.cfg.p, &self.cfg.roles)?;
+        let plan_s = t0.elapsed().as_secs_f64();
+        self.lower_runs.fetch_add(1, Ordering::Relaxed);
+        let t1 = std::time::Instant::now();
+        let tg = self.cluster.lower(g, &plan)?;
+        let lower_s = t1.elapsed().as_secs_f64();
+        let model = self.cluster.model(&tg);
+        Ok(Arc::new(Artifact {
+            graph: g.clone(),
+            canon,
+            plan,
+            tg,
+            model,
+            plan_s,
+            lower_s,
+        }))
+    }
+
+    /// Wrap an artifact whose vertex numbering IS the caller's (fresh
+    /// compiles): no remap.
+    fn executable_identity(&self, art: Arc<Artifact>, provenance: PlanProvenance) -> Executable {
+        Executable {
+            art,
+            engine: Arc::clone(&self.engine),
+            cluster: self.cluster.clone(),
+            remap: None,
+            provenance,
+        }
+    }
+
+    /// Wrap an artifact for a presented graph whose canonicalization is
+    /// `presented`: compute the vertex remap between the presented and
+    /// stored numbering (identity remaps are elided).
+    fn executable(
+        &self,
+        art: Arc<Artifact>,
+        presented: &Canon,
+        provenance: PlanProvenance,
+    ) -> Result<Executable> {
+        if art.canon.is_none() {
+            // fresh artifacts are never cached, so a presented canon only
+            // ever meets a canonicalized artifact; fall back defensively
+            return Ok(self.executable_identity(art, provenance));
+        }
+        let stored = art.canon.as_ref().expect("checked above");
+        if presented.canon_of.len() != stored.canon_of.len() {
+            return Err(Error::InvalidGraph(
+                "signature collision: cached graph has different size (internal)".into(),
+            ));
+        }
+        let n = presented.canon_of.len();
+        let mut to_stored = Vec::with_capacity(n);
+        let mut identity = true;
+        for v in 0..n {
+            let s = stored.order[presented.canon_of[v]];
+            identity &= s.0 == v;
+            to_stored.push(s);
+        }
+        let remap = if identity {
+            None
+        } else {
+            let mut to_presented = vec![VertexId(0); n];
+            for (v, &s) in to_stored.iter().enumerate() {
+                to_presented[s.0] = VertexId(v);
+            }
+            Some(Remap {
+                to_stored,
+                to_presented,
+            })
+        };
+        Ok(Executable {
+            art,
+            engine: Arc::clone(&self.engine),
+            cluster: self.cluster.clone(),
+            remap,
+            provenance,
+        })
+    }
+}
+
+/// Vertex-id translation between a presented graph and the cached
+/// artifact it hit (both directions; indices are vertex ids).
+struct Remap {
+    to_stored: Vec<VertexId>,
+    to_presented: Vec<VertexId>,
+}
+
+/// A compiled program: frozen plan + placed task graph, ready to execute
+/// any number of times with zero planner/lowering work per call. Cheap to
+/// clone conceptually — obtain more handles by calling
+/// [`Session::compile`] again (a cache hit).
+pub struct Executable {
+    art: Arc<Artifact>,
+    engine: Arc<DispatchEngine>,
+    cluster: Cluster,
+    remap: Option<Remap>,
+    provenance: PlanProvenance,
+}
+
+impl Executable {
+    /// Execute the frozen task graph on `inputs` (keyed by the vertex ids
+    /// of the graph this executable was compiled from — remapping onto a
+    /// cached twin is handled internally, and tensor remap cost is O(1)
+    /// per input thanks to `Arc`-backed buffers). Outputs come back under
+    /// the caller's vertex ids. Bitwise-deterministic across calls.
+    pub fn run(
+        &self,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
+        let mapped;
+        let effective: &HashMap<VertexId, Tensor> = match &self.remap {
+            None => inputs,
+            Some(r) => {
+                let mut m = HashMap::with_capacity(inputs.len());
+                for (vid, t) in inputs {
+                    // Extraneous ids are ignored, matching the identity
+                    // path (the executor checks *required* inputs and
+                    // errors, by name, on any that are missing).
+                    if let Some(&s) = r.to_stored.get(vid.0) {
+                        m.insert(s, t.clone());
+                    }
+                }
+                mapped = m;
+                &mapped
+            }
+        };
+        let (outs, exec) = self.cluster.run_lowered_modeled(
+            &self.art.graph,
+            &self.art.plan,
+            &self.art.tg,
+            &self.art.model,
+            self.engine.as_ref(),
+            effective,
+        )?;
+        let outs = match &self.remap {
+            None => outs,
+            Some(r) => outs
+                .into_iter()
+                .map(|(vid, t)| (r.to_presented[vid.0], t))
+                .collect(),
+        };
+        Ok((
+            outs,
+            RunReport {
+                strategy: self.art.plan.strategy.clone(),
+                plan_cost: self.art.plan.predicted_cost,
+                plan_s: self.art.plan_s,
+                provenance: self.provenance,
+                exec,
+            },
+        ))
+    }
+
+    /// The frozen plan.
+    ///
+    /// **Numbering caveat:** on a [`PlanProvenance::CacheHit`], this plan
+    /// (like [`graph`](Self::graph) / [`task_graph`](Self::task_graph))
+    /// uses the *originally compiled* twin's vertex ids, which may differ
+    /// from the graph you presented. Only [`run`](Self::run) translates
+    /// ids; don't index these artifacts with presented-graph ids unless
+    /// `provenance()` is `Planned`.
+    pub fn plan(&self) -> &Plan {
+        &self.art.plan
+    }
+
+    /// The compiled graph snapshot — the cached twin's numbering on a
+    /// cache hit (see [`plan`](Self::plan) for the caveat).
+    pub fn graph(&self) -> &EinGraph {
+        &self.art.graph
+    }
+
+    /// The lowered, placed task graph this executable replays (cached
+    /// twin's numbering on a hit; see [`plan`](Self::plan)).
+    pub fn task_graph(&self) -> &TaskGraph {
+        &self.art.tg
+    }
+
+    /// Canonical signature of the compiled program (computed on demand
+    /// for [`Session::compile_fresh`] artifacts, which skip
+    /// canonicalization on their hot path).
+    pub fn signature(&self) -> CanonSignature {
+        match &self.art.canon {
+            Some(c) => c.signature.clone(),
+            None => canonicalize(&self.art.graph).signature,
+        }
+    }
+
+    /// How this executable's plan came to be: freshly planned or served
+    /// from the session's plan cache.
+    pub fn provenance(&self) -> PlanProvenance {
+        self.provenance
+    }
+
+    /// `(plan_s, lower_s)` wall-clock of the original compile.
+    pub fn compile_times(&self) -> (f64, f64) {
+        (self.art.plan_s, self.art.lower_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::expr::{AggOp, UnaryOp};
+    use crate::runtime::native::eval_graph;
+
+    fn session() -> Session {
+        Session::new(DriverConfig {
+            workers: 2,
+            p: 2,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn lazy_program_compiles_and_runs() {
+        let s = session();
+        let a = s.input("A", &[16, 8]);
+        let b = s.input("B", &[8, 16]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        let r = z.map(UnaryOp::Relu).unwrap().reduce("ik->i", AggOp::Sum).unwrap();
+        let exe = s.compile_expr(&r).unwrap();
+        assert_eq!(exe.provenance(), PlanProvenance::Planned);
+        let mut inputs = HashMap::new();
+        inputs.insert(a.id(), Tensor::random(&[16, 8], 1));
+        inputs.insert(b.id(), Tensor::random(&[8, 16], 2));
+        let (outs, rep) = exe.run(&inputs).unwrap();
+        assert_eq!(rep.provenance, PlanProvenance::Planned);
+        assert!(rep.plan_s > 0.0);
+        let want = eval_graph(exe.graph(), &inputs).unwrap();
+        assert_eq!(outs[&r.id()], want[&r.id()]);
+    }
+
+    #[test]
+    fn compile_expr_resets_the_staging_program() {
+        let s = session();
+        let a = s.input("A", &[8, 8]);
+        let b = s.input("B", &[8, 8]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        s.compile_expr(&z).unwrap();
+        // fresh program: the new input cannot combine with the old one
+        let c = s.input("C", &[8, 8]);
+        assert!(a.einsum("ij,jk->ik", &c).is_err());
+        // but builds cleanly on its own, and hits the cache (same shape)
+        let d = s.input("D", &[8, 8]);
+        let w = c.einsum("pq,qr->pr", &d).unwrap();
+        let exe = s.compile_expr(&w).unwrap();
+        assert_eq!(exe.provenance(), PlanProvenance::CacheHit);
+        assert_eq!(s.stats().hits, 1);
+    }
+
+    #[test]
+    fn compile_fresh_bypasses_the_cache() {
+        let s = session();
+        let a = s.input("A", &[8, 8]);
+        let b = s.input("B", &[8, 8]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        let g = z.graph();
+        for _ in 0..2 {
+            let exe = s.compile_fresh(&g).unwrap();
+            assert_eq!(exe.provenance(), PlanProvenance::Planned);
+        }
+        let st = s.stats();
+        assert_eq!(st.planner_runs, 2);
+        assert_eq!(st.entries, 0);
+    }
+}

@@ -133,6 +133,34 @@ impl Plan {
         }
     }
 
+    /// Signature-stable JSON serialization: vertices emitted in ascending
+    /// id order (never `HashMap` iteration order), so the same plan always
+    /// renders to the same bytes — the property the plan cache and the
+    /// bench artifacts rely on when diffing plans across runs.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let part_obj = |m: &HashMap<VertexId, Vec<usize>>| -> Json {
+            let mut entries: Vec<(VertexId, &Vec<usize>)> =
+                m.iter().map(|(&v, d)| (v, d)).collect();
+            entries.sort_by_key(|(v, _)| *v);
+            Json::Obj(
+                entries
+                    .into_iter()
+                    .map(|(v, d)| {
+                        let arr = d.iter().map(|&x| Json::num(x as f64)).collect();
+                        (v.to_string(), Json::Arr(arr))
+                    })
+                    .collect(),
+            )
+        };
+        Json::Obj(vec![
+            ("strategy".into(), Json::str(self.strategy.clone())),
+            ("predicted_cost_floats".into(), Json::num(self.predicted_cost)),
+            ("parts".into(), part_obj(&self.parts)),
+            ("input_parts".into(), part_obj(&self.input_parts)),
+        ])
+    }
+
     /// Evaluate the full communication upper bound of this plan under the
     /// paper's cost model: per-vertex join + aggregation costs, plus
     /// repartition costs on every producer->consumer edge (and on input
@@ -221,4 +249,35 @@ pub fn plan_graph(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
     plan.finalize_inputs(g);
     plan.predicted_cost = plan.total_cost(g)?;
     Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+
+    #[test]
+    fn plan_to_json_is_deterministic_and_ordered() {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![16, 16]);
+        let b = g.input("B", vec![16, 16]);
+        let z = g
+            .add(
+                "Z",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() }).unwrap();
+        let r1 = plan.to_json().render();
+        let r2 = plan.clone().to_json().render();
+        assert_eq!(r1, r2);
+        // non-input vertex is under "parts"; inputs under "input_parts"
+        // in ascending id order
+        assert!(r1.contains(&format!("\"{z}\"")));
+        let pos_a = r1.find(&format!("\"{a}\"")).unwrap();
+        let pos_b = r1.find(&format!("\"{b}\"")).unwrap();
+        assert!(pos_a < pos_b);
+        assert!(r1.contains("\"strategy\""));
+    }
 }

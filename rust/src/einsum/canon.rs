@@ -1,0 +1,476 @@
+//! Canonical EinGraph signatures — the plan-cache key of the
+//! compile-once / run-many [`crate::coordinator::session::Session`] API.
+//!
+//! Two EinGraphs that are *semantically identical programs* must map to
+//! the same signature even when they differ syntactically:
+//!
+//! * **label renaming** — labels are local to a vertex (the correspondence
+//!   between a producer's output axes and a consumer's operand axes is
+//!   positional), so `"ij,jk->ik"` and `"ab,bc->ac"` are the same
+//!   contraction. Each vertex's labels are renumbered by first occurrence
+//!   across its operand lists, which preserves exactly the equality
+//!   pattern the EinSum semantics depend on;
+//! * **vertex renumbering** — any topological insertion order of the same
+//!   DAG is the same program. Vertices are ordered by an iteratively
+//!   refined structural key (Weisfeiler–Leman style: a vertex's key mixes
+//!   its op/bound atom, its ordered operand keys, and its sorted
+//!   (consumer-key, operand-position) pairs), so isomorphic graphs sort
+//!   into the same canonical order regardless of how they were built.
+//!
+//! Shapes are part of the signature (the `bound` vector of every vertex),
+//! so the same program at different sizes — which plans, lowers, and
+//! places differently — never collides. Vertex *names* are deliberately
+//! excluded.
+//!
+//! The signature itself is the exact, human-readable canonical listing
+//! (not a hash), so equal signatures imply isomorphic graphs: a cache hit
+//! can never hand back the plan of a different program. The refinement
+//! keys are only used for ordering; a hash collision there can at worst
+//! produce a spurious *miss*, never a false hit.
+//!
+//! ```
+//! use eindecomp::einsum::canon::canonicalize;
+//! use eindecomp::einsum::expr::EinSum;
+//! use eindecomp::einsum::graph::EinGraph;
+//! use eindecomp::einsum::label::labels;
+//!
+//! let mut g1 = EinGraph::new();
+//! let a = g1.input("A", vec![8, 8]);
+//! let b = g1.input("B", vec![8, 8]);
+//! g1.add("Z", EinSum::contraction(labels("i j"), labels("j k"), labels("i k")), vec![a, b])?;
+//!
+//! // Same program, renamed labels and tensors.
+//! let mut g2 = EinGraph::new();
+//! let x = g2.input("X", vec![8, 8]);
+//! let y = g2.input("Y", vec![8, 8]);
+//! g2.add("W", EinSum::contraction(labels("p q"), labels("q r"), labels("p r")), vec![x, y])?;
+//!
+//! assert_eq!(canonicalize(&g1).signature, canonicalize(&g2).signature);
+//! # Ok::<(), eindecomp::Error>(())
+//! ```
+
+use super::expr::{EinSum, UnaryOp};
+use super::graph::{EinGraph, VertexId};
+use super::label::{Label, LabelList};
+use std::collections::HashMap;
+use std::fmt::Write;
+
+/// A canonical graph signature: equal signatures ⇔ the graphs are the same
+/// program (isomorphic DAGs of identical ops at identical shapes, up to
+/// label and vertex renaming). Cheap to hash and compare; used as the
+/// plan-cache key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CanonSignature {
+    text: String,
+}
+
+impl CanonSignature {
+    /// The full canonical listing (one `;`-terminated entry per vertex).
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+
+    /// 64-bit digest of the listing — for logs and reports, not equality.
+    pub fn digest(&self) -> u64 {
+        fnv(self.text.as_bytes())
+    }
+}
+
+impl std::fmt::Display for CanonSignature {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sig:{:016x}", self.digest())
+    }
+}
+
+/// Result of canonicalizing one graph: the signature plus the vertex
+/// permutation, which lets a cache hit remap tensors between a presented
+/// graph and the stored one (`order[canon_of[v.0]] == v`).
+#[derive(Clone, Debug)]
+pub struct Canon {
+    pub signature: CanonSignature,
+    /// `canon_of[vid.0]` = canonical position of vertex `vid`.
+    pub canon_of: Vec<usize>,
+    /// `order[i]` = the vertex at canonical position `i`.
+    pub order: Vec<VertexId>,
+}
+
+impl Canon {
+    /// The signature extended with every vertex's concrete label *names*
+    /// (in canonical vertex order). Role-driven strategies (data-parallel,
+    /// Megatron, sequence, attention-head) pick partitionings by label
+    /// name via [`crate::decomp::baselines::LabelRoles`], so their plans
+    /// are **not** invariant under renaming — sessions planning with such
+    /// a strategy key their cache with this signature instead, trading
+    /// rename-hits for correctness.
+    pub fn named_signature(&self, g: &EinGraph) -> CanonSignature {
+        let mut text = String::from(self.signature.text());
+        text.push_str("|names:");
+        for &vid in &self.order {
+            let v = g.vertex(vid);
+            for l in v.op.operand_labels() {
+                for lab in l {
+                    write!(text, "{lab},").unwrap();
+                }
+                text.push(';');
+            }
+            if let Some(lz) = v.op.lz() {
+                for lab in lz {
+                    write!(text, "{lab},").unwrap();
+                }
+            }
+            text.push('/');
+        }
+        CanonSignature { text }
+    }
+}
+
+/// FNV-1a over bytes (deterministic across runs; the crate is
+/// dependency-free by design, so no external hashers).
+fn fnv(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64 finalizer — scrambles a refinement key between rounds.
+fn scramble(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Order-sensitive key combiner.
+fn mix(h: u64, v: u64) -> u64 {
+    scramble(h.wrapping_mul(0x0000_0100_0000_01b3).wrapping_add(v))
+}
+
+/// Renumber labels by first occurrence across the given lists, preserving
+/// the equality pattern (`"i j" / "j k" -> [0,1] / [1,2]`).
+fn renumber(lists: &[&LabelList]) -> Vec<Vec<usize>> {
+    let mut map: HashMap<Label, usize> = HashMap::new();
+    let mut out = Vec::with_capacity(lists.len());
+    for l in lists {
+        let mut v = Vec::with_capacity(l.len());
+        for &lab in l.iter() {
+            let next = map.len();
+            v.push(*map.entry(lab).or_insert(next));
+        }
+        out.push(v);
+    }
+    out
+}
+
+/// Stable signature of a unary scalar op (constants by bit pattern, so
+/// `Scale(0.5)` never aliases `Scale(0.25)` across float formattings).
+fn unary_sig(op: &UnaryOp) -> String {
+    match op {
+        UnaryOp::Scale(c) => format!("Scale#{:08x}", c.to_bits()),
+        UnaryOp::AddConst(c) => format!("AddConst#{:08x}", c.to_bits()),
+        other => format!("{other:?}"),
+    }
+}
+
+/// Canonical op descriptor: kind, scalar ops, and locally-renumbered label
+/// pattern. Vertex names are deliberately not part of this.
+fn op_sig(op: &EinSum) -> String {
+    match op {
+        EinSum::Input => "in".into(),
+        EinSum::Unary { lx, lz, op, agg } => {
+            let r = renumber(&[lx, lz]);
+            format!("u:{}:{agg:?}:{:?}->{:?}", unary_sig(op), r[0], r[1])
+        }
+        EinSum::Binary {
+            lx,
+            ly,
+            lz,
+            join,
+            agg,
+        } => {
+            let r = renumber(&[lx, ly, lz]);
+            format!("b:{join:?}:{agg:?}:{:?},{:?}->{:?}", r[0], r[1], r[2])
+        }
+    }
+}
+
+fn count_distinct(keys: &[u64]) -> usize {
+    let mut sorted = keys.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    sorted.len()
+}
+
+/// Canonicalize a graph: compute its signature and the canonical vertex
+/// order. Deterministic, and invariant under label renaming and vertex
+/// renumbering (see module docs).
+pub fn canonicalize(g: &EinGraph) -> Canon {
+    let verts = g.vertices();
+    let n = verts.len();
+    // Structural atom per vertex: canonical op descriptor + output bound.
+    let atoms: Vec<String> = verts
+        .iter()
+        .map(|v| format!("{}|{:?}", op_sig(&v.op), v.bound))
+        .collect();
+    // Consumer adjacency with operand positions (which operand of the
+    // consumer reads this vertex) — the upward context of the refinement.
+    let mut cons: Vec<Vec<(usize, usize)>> = vec![vec![]; n];
+    for v in verts {
+        for (pos, &i) in v.inputs.iter().enumerate() {
+            cons[i.0].push((v.id.0, pos));
+        }
+    }
+    // Weisfeiler–Leman-style refinement: start from the atom hash, then
+    // repeatedly mix in ordered operand keys and sorted consumer context
+    // until the partition into key classes stabilizes.
+    let mut key: Vec<u64> = atoms.iter().map(|a| fnv(a.as_bytes())).collect();
+    let mut distinct = count_distinct(&key);
+    for _ in 0..n {
+        let mut next = vec![0u64; n];
+        for (vi, v) in verts.iter().enumerate() {
+            let mut h = scramble(key[vi]);
+            for &i in &v.inputs {
+                h = mix(h, key[i.0]);
+            }
+            let mut cs: Vec<(u64, usize)> =
+                cons[vi].iter().map(|&(c, pos)| (key[c], pos)).collect();
+            cs.sort_unstable();
+            for (ck, pos) in cs {
+                h = mix(mix(h, ck), pos as u64);
+            }
+            next[vi] = h;
+        }
+        key = next;
+        let d = count_distinct(&key);
+        if d == distinct {
+            break;
+        }
+        distinct = d;
+    }
+    // Canonical order: refined key, then atom (guards key collisions),
+    // then original index. Vertices still tied after refinement are
+    // structurally interchangeable, so either order yields the same
+    // signature text.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        key[a]
+            .cmp(&key[b])
+            .then_with(|| atoms[a].cmp(&atoms[b]))
+            .then(a.cmp(&b))
+    });
+    let mut canon_of = vec![0usize; n];
+    for (ci, &vi) in idx.iter().enumerate() {
+        canon_of[vi] = ci;
+    }
+    // Exact signature text over the canonical order: atom plus canonical
+    // indices of the ordered operands.
+    let mut text = String::new();
+    for (ci, &vi) in idx.iter().enumerate() {
+        let ins: Vec<usize> = verts[vi].inputs.iter().map(|i| canon_of[i.0]).collect();
+        write!(text, "{ci}:{}<-{:?};", atoms[vi], ins).unwrap();
+    }
+    Canon {
+        signature: CanonSignature { text },
+        canon_of,
+        order: idx.into_iter().map(VertexId).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::expr::JoinOp;
+    use crate::einsum::label::labels;
+
+    /// The Experiment-1 chain, parameterized over labels and build order
+    /// so tests can construct genuinely renamed/reordered clones.
+    fn chain(names: [&str; 4], reorder: bool, s: usize) -> EinGraph {
+        let mut g = EinGraph::new();
+        let [li, lj, lk, lm] = names;
+        let (spec_i, spec_j, spec_k, spec_m) = (labels(li), labels(lj), labels(lk), labels(lm));
+        let (i, j, k, m) = (spec_i[0], spec_j[0], spec_k[0], spec_m[0]);
+        if reorder {
+            let d = g.input("D", vec![s, s]);
+            let e = g.input("E", vec![s, s]);
+            let de = g
+                .add("DE", EinSum::contraction(vec![j, m], vec![m, k], vec![j, k]), vec![d, e])
+                .unwrap();
+            let a = g.input("A", vec![s, s]);
+            let b = g.input("B", vec![s, s]);
+            let c = g.input("C", vec![s, s]);
+            let ab = g
+                .add("AB", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), vec![a, b])
+                .unwrap();
+            let cde = g
+                .add("CDE", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), vec![c, de])
+                .unwrap();
+            g.add(
+                "Z",
+                EinSum::elementwise(vec![i, k], vec![i, k], JoinOp::Add),
+                vec![ab, cde],
+            )
+            .unwrap();
+        } else {
+            let a = g.input("A", vec![s, s]);
+            let b = g.input("B", vec![s, s]);
+            let c = g.input("C", vec![s, s]);
+            let d = g.input("D", vec![s, s]);
+            let e = g.input("E", vec![s, s]);
+            let ab = g
+                .add("AB", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), vec![a, b])
+                .unwrap();
+            let de = g
+                .add("DE", EinSum::contraction(vec![j, m], vec![m, k], vec![j, k]), vec![d, e])
+                .unwrap();
+            let cde = g
+                .add("CDE", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), vec![c, de])
+                .unwrap();
+            g.add(
+                "Z",
+                EinSum::elementwise(vec![i, k], vec![i, k], JoinOp::Add),
+                vec![ab, cde],
+            )
+            .unwrap();
+        }
+        g
+    }
+
+    #[test]
+    fn renamed_and_reordered_clone_matches() {
+        let g1 = chain(["i", "j", "k", "m"], false, 16);
+        let g2 = chain(["w", "x", "y", "z"], true, 16);
+        let c1 = canonicalize(&g1);
+        let c2 = canonicalize(&g2);
+        assert_eq!(c1.signature, c2.signature);
+        // the permutations compose into a real isomorphism: same atom at
+        // every canonical position
+        for ci in 0..g1.len() {
+            let v1 = g1.vertex(c1.order[ci]);
+            let v2 = g2.vertex(c2.order[ci]);
+            assert_eq!(v1.bound, v2.bound);
+            assert_eq!(op_sig(&v1.op), op_sig(&v2.op));
+        }
+    }
+
+    #[test]
+    fn shape_change_misses() {
+        let g1 = chain(["i", "j", "k", "m"], false, 16);
+        let g2 = chain(["i", "j", "k", "m"], false, 32);
+        assert_ne!(canonicalize(&g1).signature, canonicalize(&g2).signature);
+    }
+
+    #[test]
+    fn operand_order_is_significant() {
+        // A x B vs B^T-style contraction patterns must not collide.
+        let mut g1 = EinGraph::new();
+        let a = g1.input("A", vec![8, 8]);
+        let b = g1.input("B", vec![8, 8]);
+        g1.add("Z", EinSum::contraction(labels("i j"), labels("j k"), labels("i k")), vec![a, b])
+            .unwrap();
+        let mut g2 = EinGraph::new();
+        let a = g2.input("A", vec![8, 8]);
+        let b = g2.input("B", vec![8, 8]);
+        g2.add("Z", EinSum::contraction(labels("i j"), labels("k j"), labels("i k")), vec![a, b])
+            .unwrap();
+        assert_ne!(canonicalize(&g1).signature, canonicalize(&g2).signature);
+    }
+
+    #[test]
+    fn scalar_constants_are_significant() {
+        let mk = |c: f32| {
+            let mut g = EinGraph::new();
+            let a = g.input("A", vec![4]);
+            g.add("S", EinSum::map(labels("i"), UnaryOp::Scale(c)), vec![a]).unwrap();
+            g
+        };
+        assert_ne!(
+            canonicalize(&mk(0.5)).signature,
+            canonicalize(&mk(0.25)).signature
+        );
+        assert_eq!(
+            canonicalize(&mk(0.5)).signature,
+            canonicalize(&mk(0.5)).signature
+        );
+    }
+
+    #[test]
+    fn names_are_not_significant() {
+        let mut g1 = EinGraph::new();
+        let a = g1.input("weights", vec![4, 4]);
+        g1.add("out", EinSum::map(labels("i j"), UnaryOp::Relu), vec![a]).unwrap();
+        let mut g2 = EinGraph::new();
+        let a = g2.input("completely_different", vec![4, 4]);
+        g2.add("names", EinSum::map(labels("i j"), UnaryOp::Relu), vec![a]).unwrap();
+        assert_eq!(canonicalize(&g1).signature, canonicalize(&g2).signature);
+    }
+
+    #[test]
+    fn identical_twin_inputs_distinguished_by_consumers() {
+        // Two same-shape inputs are structurally identical in isolation;
+        // the consumer-position refinement must still order them so the
+        // operand edges line up across isomorphic builds.
+        let mut g1 = EinGraph::new();
+        let a = g1.input("A", vec![8, 4]);
+        let b = g1.input("B", vec![4, 8]);
+        g1.add("Z", EinSum::contraction(labels("i j"), labels("j k"), labels("i k")), vec![a, b])
+            .unwrap();
+        // swapped insertion order, same program
+        let mut g2 = EinGraph::new();
+        let b = g2.input("B", vec![4, 8]);
+        let a = g2.input("A", vec![8, 4]);
+        g2.add("Z", EinSum::contraction(labels("i j"), labels("j k"), labels("i k")), vec![a, b])
+            .unwrap();
+        let c1 = canonicalize(&g1);
+        let c2 = canonicalize(&g2);
+        assert_eq!(c1.signature, c2.signature);
+        // square twin inputs: shapes equal, so only the consumer position
+        // separates them
+        let mut g3 = EinGraph::new();
+        let a = g3.input("A", vec![8, 8]);
+        let b = g3.input("B", vec![8, 8]);
+        g3.add("Z", EinSum::contraction(labels("i j"), labels("j k"), labels("i k")), vec![a, b])
+            .unwrap();
+        let mut g4 = EinGraph::new();
+        let b = g4.input("B", vec![8, 8]);
+        let a = g4.input("A", vec![8, 8]);
+        g4.add("Z", EinSum::contraction(labels("i j"), labels("j k"), labels("i k")), vec![a, b])
+            .unwrap();
+        let (c3, c4) = (canonicalize(&g3), canonicalize(&g4));
+        assert_eq!(c3.signature, c4.signature);
+        // the isomorphism maps operand 0 to operand 0: position in the
+        // consumer's dep list is preserved by the canonical order
+        let z3 = g3.by_name("Z").unwrap();
+        let z4 = g4.by_name("Z").unwrap();
+        let op0_g3 = g3.vertex(z3).inputs[0];
+        let op0_g4 = g4.vertex(z4).inputs[0];
+        assert_eq!(c3.canon_of[op0_g3.0], c4.canon_of[op0_g4.0]);
+    }
+
+    #[test]
+    fn named_signature_distinguishes_renamings() {
+        let mk = |names: [&str; 4]| chain(names, false, 8);
+        let g1 = mk(["i", "j", "k", "m"]);
+        let g2 = mk(["w", "x", "y", "z"]);
+        let (c1, c2) = (canonicalize(&g1), canonicalize(&g2));
+        // bare signatures collapse renamings; named signatures do not
+        assert_eq!(c1.signature, c2.signature);
+        assert_ne!(c1.named_signature(&g1), c2.named_signature(&g2));
+        // but a true twin (same names, reordered build) still matches
+        let g3 = chain(["i", "j", "k", "m"], true, 8);
+        let c3 = canonicalize(&g3);
+        assert_eq!(c1.named_signature(&g1), c3.named_signature(&g3));
+    }
+
+    #[test]
+    fn canon_maps_are_inverse_permutations() {
+        let g = chain(["i", "j", "k", "m"], true, 8);
+        let c = canonicalize(&g);
+        for v in 0..g.len() {
+            assert_eq!(c.order[c.canon_of[v]], VertexId(v));
+        }
+        assert!(c.signature.text().contains("b:Mul:Sum"));
+        assert_ne!(c.signature.digest(), 0);
+    }
+}

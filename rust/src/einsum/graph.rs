@@ -50,8 +50,18 @@ impl EinGraph {
     }
 
     /// Add a computation vertex; the bound is inferred from the EinSum and
-    /// the bounds of `inputs`.
-    pub fn add(&mut self, name: &str, op: EinSum, inputs: Vec<VertexId>) -> Result<VertexId> {
+    /// the bounds of `inputs`. Accepts anything iterable over vertex ids —
+    /// `vec![a, b]`, `[a, b]`, or `&[a, b]` — so call sites need not
+    /// allocate.
+    pub fn add<I>(&mut self, name: &str, op: EinSum, inputs: I) -> Result<VertexId>
+    where
+        I: IntoIterator,
+        I::Item: std::borrow::Borrow<VertexId>,
+    {
+        let inputs: Vec<VertexId> = inputs
+            .into_iter()
+            .map(|v| *std::borrow::Borrow::borrow(&v))
+            .collect();
         if op.arity() != inputs.len() {
             return Err(Error::InvalidGraph(format!(
                 "vertex {name}: op arity {} but {} inputs given",
@@ -351,6 +361,19 @@ mod tests {
                 vec![a],
             )
             .is_err());
+    }
+
+    #[test]
+    fn add_accepts_slices_and_arrays() {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![4, 4]);
+        let b = g.input("B", vec![4, 4]);
+        let op = || EinSum::contraction(labels("i j"), labels("j k"), labels("i k"));
+        let z1 = g.add("Z1", op(), &[a, b]).unwrap();
+        let z2 = g.add("Z2", op(), [a, b]).unwrap();
+        let z3 = g.add("Z3", op(), vec![a, b]).unwrap();
+        assert_eq!(g.vertex(z1).inputs, g.vertex(z2).inputs);
+        assert_eq!(g.vertex(z2).inputs, g.vertex(z3).inputs);
     }
 
     #[test]

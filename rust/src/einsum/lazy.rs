@@ -1,0 +1,213 @@
+//! Lazy expression frontend: build EinGraphs by chaining methods on
+//! [`Expr`] handles instead of the three-step
+//! `EinGraph::new` / `input` / `add(EinSum::contraction(labels(...)))`
+//! ceremony.
+//!
+//! Expressions are created by
+//! [`Session::input`](crate::coordinator::session::Session::input) and
+//! grow a shared staging [`EinGraph`] under the hood; einsum specs are
+//! parsed with the existing textual frontend
+//! ([`crate::einsum::parser::einsum_from_spec`]), so everything the
+//! `"ij,jk->ik"` / `"b i j, b j k -> b i k"` notation supports is
+//! available here. The finished expression compiles through
+//! [`Session::compile_expr`](crate::coordinator::session::Session::compile_expr),
+//! which snapshots the staged graph into an
+//! [`Executable`](crate::coordinator::session::Executable).
+//!
+//! Labels remain *local to each vertex* (producer→consumer axis
+//! correspondence is positional), so specs on different expressions do
+//! not need to share letters.
+//!
+//! ```
+//! use eindecomp::prelude::*;
+//!
+//! let session = Session::new(DriverConfig { workers: 2, p: 2, ..Default::default() })?;
+//! let a = session.input("A", &[16, 16]);
+//! let b = session.input("B", &[16, 16]);
+//! let z = a.einsum("ij,jk->ik", &b)?.map(UnaryOp::Relu)?.reduce("ik->i", AggOp::Sum)?;
+//! assert_eq!(z.shape(), vec![16]);
+//! assert_eq!(z.graph().len(), 5); // A, B, einsum, map, reduce
+//! # Ok::<(), eindecomp::Error>(())
+//! ```
+
+use super::expr::{AggOp, EinSum, JoinOp, UnaryOp};
+use super::graph::{EinGraph, VertexId};
+use super::parser::{default_labels, einsum_from_spec, parse_spec};
+use crate::error::{Error, Result};
+use std::sync::{Arc, Mutex};
+
+/// A lazily-built vertex handle: a node of a staging [`EinGraph`] shared
+/// by every expression of the same program. Cloning is cheap (an `Arc`
+/// bump); all combinators return fresh handles and leave `self` usable.
+#[derive(Clone)]
+pub struct Expr {
+    graph: Arc<Mutex<EinGraph>>,
+    id: VertexId,
+}
+
+impl Expr {
+    /// Create an input expression in `graph` (crate-internal: the public
+    /// entry is `Session::input`).
+    pub(crate) fn input(graph: &Arc<Mutex<EinGraph>>, name: &str, shape: &[usize]) -> Expr {
+        let id = graph.lock().unwrap().input(name, shape.to_vec());
+        Expr {
+            graph: Arc::clone(graph),
+            id,
+        }
+    }
+
+    /// The staging graph this expression belongs to (crate-internal).
+    pub(crate) fn builder(&self) -> &Arc<Mutex<EinGraph>> {
+        &self.graph
+    }
+
+    /// Vertex id of this expression — the key for input tensors and run
+    /// outputs of the compiled program.
+    pub fn id(&self) -> VertexId {
+        self.id
+    }
+
+    /// Output bound (shape) of this expression.
+    pub fn shape(&self) -> Vec<usize> {
+        self.graph.lock().unwrap().vertex(self.id).bound.clone()
+    }
+
+    /// Snapshot of the program built so far, as a plain [`EinGraph`]
+    /// (vertex ids of expressions are valid in the snapshot).
+    pub fn graph(&self) -> EinGraph {
+        self.graph.lock().unwrap().clone()
+    }
+
+    fn same_program(&self, other: &Expr) -> Result<()> {
+        if Arc::ptr_eq(&self.graph, &other.graph) {
+            Ok(())
+        } else {
+            Err(Error::InvalidGraph(
+                "expressions belong to different programs (one was created after an earlier \
+                 program was compiled); build each program from a fresh set of session inputs"
+                    .into(),
+            ))
+        }
+    }
+
+    fn push(&self, name: &str, op: EinSum, inputs: &[VertexId]) -> Result<Expr> {
+        let id = self.graph.lock().unwrap().add(name, op, inputs)?;
+        Ok(Expr {
+            graph: Arc::clone(&self.graph),
+            id,
+        })
+    }
+
+    /// Binary einsum with the classic `Mul`/`Sum` contraction semantics:
+    /// `a.einsum("ij,jk->ik", &b)`. For other join/agg operators use
+    /// [`einsum_ext`](Self::einsum_ext); for unary specs use
+    /// [`reduce`](Self::reduce).
+    pub fn einsum(&self, spec: &str, rhs: &Expr) -> Result<Expr> {
+        self.einsum_ext(spec, rhs, JoinOp::Mul, AggOp::Sum)
+    }
+
+    /// Binary einsum with explicit join and aggregation operators (the
+    /// paper's extended Einstein notation, Eq. 2) — e.g. `AbsDiff`/`Max`
+    /// computes pairwise L∞ distances.
+    pub fn einsum_ext(&self, spec: &str, rhs: &Expr, join: JoinOp, agg: AggOp) -> Result<Expr> {
+        self.same_program(rhs)?;
+        let e = einsum_from_spec(spec, agg, join)?;
+        if e.arity() != 2 {
+            return Err(Error::Parse(format!(
+                "einsum spec {spec:?} has {} operand(s); use reduce() for unary specs",
+                e.arity()
+            )));
+        }
+        self.push(&format!("einsum({spec})"), e, &[self.id, rhs.id])
+    }
+
+    /// Shape-preserving elementwise map (`relu`, `exp`, `Scale(c)`, ...).
+    pub fn map(&self, op: UnaryOp) -> Result<Expr> {
+        let lx = default_labels(self.shape().len());
+        self.push(&format!("map({op:?})"), EinSum::map(lx, op), &[self.id])
+    }
+
+    /// Unary einsum `"ij->i"`: aggregate out the dropped labels with
+    /// `agg` (and/or transpose, when the output permutes the input).
+    pub fn reduce(&self, spec: &str, agg: AggOp) -> Result<Expr> {
+        let (ops, lz) = parse_spec(spec)?;
+        if ops.len() != 1 {
+            return Err(Error::Parse(format!(
+                "reduce spec {spec:?} must be unary, like \"ij->i\""
+            )));
+        }
+        self.push(
+            &format!("reduce({spec})"),
+            EinSum::reduce(ops[0].clone(), lz, agg),
+            &[self.id],
+        )
+    }
+
+    /// Elementwise binary op against a same-rank expression (labels are
+    /// positional, so no spec is needed): `a.ew(JoinOp::Add, &b)`.
+    pub fn ew(&self, join: JoinOp, rhs: &Expr) -> Result<Expr> {
+        self.same_program(rhs)?;
+        let lx = default_labels(self.shape().len());
+        let ly = default_labels(rhs.shape().len());
+        self.push(
+            &format!("ew({join:?})"),
+            EinSum::elementwise(lx, ly, join),
+            &[self.id, rhs.id],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn program() -> (Expr, Expr) {
+        let g = Arc::new(Mutex::new(EinGraph::new()));
+        let a = Expr::input(&g, "A", &[8, 4]);
+        let b = Expr::input(&g, "B", &[4, 8]);
+        (a, b)
+    }
+
+    #[test]
+    fn chained_build_matches_manual_graph() {
+        let (a, b) = program();
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        assert_eq!(z.shape(), vec![8, 8]);
+        let r = z.map(UnaryOp::Relu).unwrap();
+        let s = r.reduce("ij->j", AggOp::Max).unwrap();
+        assert_eq!(s.shape(), vec![8]);
+        let g = s.graph();
+        g.validate().unwrap();
+        assert_eq!(g.len(), 5);
+        assert_eq!(g.outputs(), vec![s.id()]);
+    }
+
+    #[test]
+    fn ew_and_ext_ops() {
+        let (a, b) = program();
+        let d = a.einsum_ext("ij,jk->ik", &b, JoinOp::AbsDiff, AggOp::Max).unwrap();
+        let sum = d.ew(JoinOp::Add, &d).unwrap();
+        assert_eq!(sum.shape(), vec![8, 8]);
+    }
+
+    #[test]
+    fn unary_spec_through_einsum_rejected() {
+        let (a, b) = program();
+        assert!(a.einsum("ij->i", &b).is_err());
+        assert!(a.reduce("ij,jk->ik", AggOp::Sum).is_err());
+    }
+
+    #[test]
+    fn cross_program_mixing_rejected() {
+        let (a, _) = program();
+        let (_, b2) = program();
+        assert!(a.einsum("ij,jk->ik", &b2).is_err());
+    }
+
+    #[test]
+    fn bad_shapes_surface_as_errors() {
+        let (a, b) = program();
+        // inner dimensions disagree under this spec (4 vs 8)
+        assert!(a.einsum("ij,kj->ik", &b).is_err());
+    }
+}

@@ -1,15 +1,20 @@
-//! The EinSum language: labels, expressions, graphs, parser, and model
+//! The EinSum language: labels, expressions, graphs, parser, the lazy
+//! [`Expr`] frontend, canonical graph signatures ([`canon`]), and model
 //! macros (softmax, attention, ...). This is the paper's *programming
 //! abstraction* (Section 3): a fully declarative specification of tensor
 //! computations from which the system derives parallel decompositions.
 
 pub mod autodiff;
+pub mod canon;
 pub mod expr;
 pub mod graph;
 pub mod label;
+pub mod lazy;
 pub mod macros;
 pub mod parser;
 
+pub use canon::{canonicalize, Canon, CanonSignature};
 pub use expr::{AggOp, EinSum, JoinOp, UnaryOp};
 pub use graph::{EinGraph, Vertex, VertexId};
 pub use label::{labels, Label, LabelList};
+pub use lazy::Expr;

@@ -266,8 +266,9 @@ pub fn parse_program(text: &str) -> Result<EinGraph> {
 }
 
 /// Fresh canonical labels `_d0.._dn` for rank-n elementwise ops where the
-/// user did not name dimensions.
-fn default_labels(rank: usize) -> LabelList {
+/// user did not name dimensions (shared with the lazy [`crate::einsum::lazy`]
+/// frontend).
+pub(crate) fn default_labels(rank: usize) -> LabelList {
     (0..rank).map(|i| Label::new(&format!("_d{i}"))).collect()
 }
 

@@ -27,33 +27,55 @@
 //! and output/scratch buffers recycle through a per-worker
 //! [`util::BufferPool`].
 //!
-//! End to end, in code — declare, plan, execute, verify:
+//! The public entry point is the **compile-once / run-many**
+//! [`coordinator::session::Session`]: graphs are declared lazily with
+//! chainable [`einsum::lazy::Expr`] handles (or built directly as
+//! [`einsum::graph::EinGraph`]s), compiled exactly once into an
+//! [`coordinator::session::Executable`] (plan → lower → place), and then
+//! executed any number of times with zero planner/lowering work per call.
+//! Compiles are cached under a canonical graph signature
+//! ([`einsum::canon`]), so label-renamed / vertex-reordered but
+//! semantically identical programs share one plan.
+//!
+//! End to end, in code — declare, compile once, run many, verify:
 //!
 //! ```
 //! use eindecomp::prelude::*;
 //! use std::collections::HashMap;
 //!
-//! // Declare: Z[i,k] = sum_j A[i,j] * B[j,k] over 32x32 inputs.
-//! let mut g = EinGraph::new();
-//! let a = g.input("A", vec![32, 32]);
-//! let b = g.input("B", vec![32, 32]);
-//! let z = g.add(
-//!     "Z",
-//!     EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
-//!     vec![a, b],
-//! )?;
+//! // Declare lazily: Z[i,k] = sum_j A[i,j] * B[j,k] over 32x32 inputs.
+//! let session = Session::new(DriverConfig { workers: 2, p: 2, ..Default::default() })?;
+//! let a = session.input("A", &[32, 32]);
+//! let b = session.input("B", &[32, 32]);
+//! let z = a.einsum("ij,jk->ik", &b)?;
 //!
-//! // Plan + execute on a 2-worker simulated cluster.
-//! let driver = Driver::new(DriverConfig { workers: 2, p: 2, ..Default::default() })?;
+//! // Compile once: plan + lower + place, frozen into an Executable.
+//! let exe = session.compile_expr(&z)?;
+//! assert_eq!(exe.provenance(), PlanProvenance::Planned);
+//!
+//! // Run many: zero planner and zero lowering work per call.
 //! let mut inputs = HashMap::new();
-//! inputs.insert(a, Tensor::random(&[32, 32], 1));
-//! inputs.insert(b, Tensor::random(&[32, 32], 2));
-//! let (outs, report) = driver.run(&g, &inputs)?;
+//! inputs.insert(a.id(), Tensor::random(&[32, 32], 1));
+//! inputs.insert(b.id(), Tensor::random(&[32, 32], 2));
+//! for _ in 0..3 {
+//!     let (outs, report) = exe.run(&inputs)?;
+//!     assert_eq!(outs[&z.id()].shape(), &[32, 32]);
+//!     assert!(report.exec.kernel_calls >= 2);
+//! }
 //!
-//! assert_eq!(outs[&z].shape(), &[32, 32]);
-//! assert!(report.exec.kernel_calls >= 2);
+//! // A canonically-equivalent program (renamed labels and tensors) is a
+//! // cache hit: no second planning pass.
+//! let x = session.input("X", &[32, 32]);
+//! let y = session.input("Y", &[32, 32]);
+//! let w = x.einsum("pq,qr->pr", &y)?;
+//! let exe2 = session.compile_expr(&w)?;
+//! assert_eq!(exe2.provenance(), PlanProvenance::CacheHit);
+//! assert_eq!(session.stats().planner_runs, 1);
 //! # Ok::<(), eindecomp::Error>(())
 //! ```
+//!
+//! The legacy [`coordinator::driver::Driver`] remains as a thin shim with
+//! the old plan-on-every-call semantics.
 //!
 //! The tensor-relational algebra of the paper (join / aggregation /
 //! repartition over *tensor relations*) lives in [`tra`]; model builders
@@ -97,14 +119,17 @@ pub use error::{Error, Result};
 
 /// Crate-wide convenience prelude for examples and benches.
 pub mod prelude {
-    pub use crate::coordinator::driver::{Driver, DriverConfig, RunReport};
+    pub use crate::coordinator::driver::{Driver, DriverConfig, PlanProvenance, RunReport};
+    pub use crate::coordinator::session::{CacheStats, Executable, Session};
     pub use crate::decomp::{
         baselines::Strategy, cost::CostModel, plan_graph, Plan, PlannerConfig,
     };
     pub use crate::einsum::{
+        canon::{canonicalize, Canon, CanonSignature},
         expr::{AggOp, EinSum, JoinOp, UnaryOp},
         graph::{EinGraph, VertexId},
         label::{labels, Label},
+        lazy::Expr,
     };
     pub use crate::error::{Error, Result};
     pub use crate::runtime::{Backend, KernelEngine};

@@ -97,6 +97,35 @@ pub fn eval_einsum_view(op: &EinSum, inputs: &[&TensorView]) -> Result<Tensor> {
     eval_einsum_view_scoped(op, inputs, &serial_scope())
 }
 
+/// Evaluate a whole EinGraph densely, vertex by vertex, with no
+/// decomposition — the single-device reference the distributed executor
+/// is checked against. Returns the value of **every** vertex keyed by id
+/// (inputs included, as cheap `Arc` clones).
+pub fn eval_graph(
+    g: &crate::einsum::graph::EinGraph,
+    inputs: &std::collections::HashMap<crate::einsum::graph::VertexId, Tensor>,
+) -> Result<std::collections::HashMap<crate::einsum::graph::VertexId, Tensor>> {
+    let mut vals: Vec<Tensor> = Vec::with_capacity(g.len());
+    for v in g.vertices() {
+        let t = match &v.op {
+            EinSum::Input => inputs
+                .get(&v.id)
+                .cloned()
+                .ok_or_else(|| Error::Exec(format!("missing input tensor for {}", v.name)))?,
+            op => {
+                let ins: Vec<&Tensor> = v.inputs.iter().map(|i| &vals[i.0]).collect();
+                eval_einsum(op, &ins)?
+            }
+        };
+        vals.push(t);
+    }
+    Ok(g.vertices()
+        .iter()
+        .map(|v| v.id)
+        .zip(vals)
+        .collect())
+}
+
 /// Evaluate an EinSum on strided tile views, sharding the hot loops
 /// through `scope` (see the module docs for which paths shard and why the
 /// result is bitwise-identical to the serial, copy-based evaluator).

@@ -258,11 +258,51 @@ impl Cluster {
     /// Execute for real: compute every task with `engine`, multi-threaded
     /// per [`ExecMode`], and return the dense outputs of the graph's
     /// output vertices plus the report (modeled timeline + measured wall
-    /// time).
+    /// time). Convenience for [`Self::lower`] + [`Self::run_lowered`];
+    /// run-many callers (the `Session` API) lower once and call
+    /// [`Self::run_lowered`] directly.
     pub fn execute(
         &self,
         g: &EinGraph,
         plan: &Plan,
+        engine: &dyn KernelEngine,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, ExecReport)> {
+        let tg = self.lower(g, plan)?;
+        self.run_lowered(g, plan, &tg, engine, inputs)
+    }
+
+    /// Execute an already lowered + placed task graph. Performs **zero**
+    /// planning and **zero** lowering work: `tg` is read-only and can be
+    /// reused across any number of calls (each run allocates only its
+    /// per-run result slots). This is the run-many half of the
+    /// compile-once / run-many split; results are bitwise-identical from
+    /// run to run for identical inputs. The modeled timeline is
+    /// recomputed here; run-many callers that hold a precomputed
+    /// [`Self::model`] report should use [`Self::run_lowered_modeled`].
+    pub fn run_lowered(
+        &self,
+        g: &EinGraph,
+        plan: &Plan,
+        tg: &TaskGraph,
+        engine: &dyn KernelEngine,
+        inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, ExecReport)> {
+        let base = self.model(tg);
+        self.run_lowered_modeled(g, plan, tg, &base, engine, inputs)
+    }
+
+    /// [`Self::run_lowered`] with the modeled-timeline report supplied by
+    /// the caller (it is a pure function of the frozen `tg`, so the
+    /// `Session` API computes it once at compile time instead of paying
+    /// the O(tasks + deps) event simulation per request). Only `wall_s`
+    /// is stamped fresh on the returned copy.
+    pub fn run_lowered_modeled(
+        &self,
+        g: &EinGraph,
+        plan: &Plan,
+        tg: &TaskGraph,
+        base: &ExecReport,
         engine: &dyn KernelEngine,
         inputs: &HashMap<VertexId, Tensor>,
     ) -> Result<(HashMap<VertexId, Tensor>, ExecReport)> {
@@ -281,8 +321,7 @@ impl Cluster {
                 )));
             }
         }
-        let tg = self.lower(g, plan)?;
-        let mut report = self.model(&tg);
+        let mut report = base.clone();
 
         let n = tg.tasks.len();
         let results: Vec<ResultSlot> = (0..n).map(|_| Mutex::new(None)).collect();
@@ -319,10 +358,10 @@ impl Cluster {
         let t0 = std::time::Instant::now();
         match self.exec_mode {
             ExecMode::WorkStealing => {
-                self.run_work_stealing(&tg, g, plan, engine, &results, threads, &keep)?
+                self.run_work_stealing(tg, g, plan, engine, &results, threads, &keep)?
             }
             ExecMode::LevelBarrier => {
-                self.run_level_barrier(&tg, g, plan, engine, &results, threads)?
+                self.run_level_barrier(tg, g, plan, engine, &results, threads)?
             }
         }
         report.wall_s = t0.elapsed().as_secs_f64();
@@ -720,6 +759,30 @@ mod tests {
             let cluster = Cluster::new(4, NetworkProfile::loopback()).with_exec_mode(mode);
             let (outs, rep) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
             assert!(outs[&z].allclose(&want, 1e-4, 1e-5), "{mode:?}");
+            assert!(rep.wall_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn run_lowered_reuses_one_task_graph_bitwise() {
+        // The run-many half of the compile-once split: lower exactly once,
+        // execute the frozen task graph repeatedly, outputs bitwise-equal
+        // to the one-shot execute() path.
+        let g = matmul_graph(32);
+        let z = g.by_name("Z").unwrap();
+        let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() }).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert(g.by_name("A").unwrap(), Tensor::random(&[32, 32], 21));
+        inputs.insert(g.by_name("B").unwrap(), Tensor::random(&[32, 32], 22));
+        let engine = NativeEngine::new();
+        let cluster = Cluster::new(4, NetworkProfile::loopback());
+        let (once, _) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+        let tg = cluster.lower(&g, &plan).unwrap();
+        for _ in 0..3 {
+            let (outs, rep) = cluster
+                .run_lowered(&g, &plan, &tg, &engine, &inputs)
+                .unwrap();
+            assert_eq!(outs[&z], once[&z]);
             assert!(rep.wall_s > 0.0);
         }
     }

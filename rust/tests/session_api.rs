@@ -1,0 +1,324 @@
+//! The compile-once / run-many `Session` API, differentially against the
+//! legacy `Driver` path:
+//!
+//! * Session outputs are **bitwise-identical** to `Driver::run` on the
+//!   matchain / FFNN / attention graphs (same planner, same lowered task
+//!   graph, same deterministic executor);
+//! * the plan cache hits on a label-renamed + vertex-reordered clone of a
+//!   compiled graph (and the hit's vertex remap is numerically correct),
+//!   and misses on a shape change;
+//! * `Executable::run` does zero planner / zero lowering work after
+//!   `compile` — asserted via the session's plan-cache stats — and
+//!   repeated runs are bitwise-identical with `cache_hit` provenance on
+//!   recompiles.
+
+use eindecomp::coordinator::driver::{Driver, DriverConfig, PlanProvenance};
+use eindecomp::coordinator::session::Session;
+use eindecomp::einsum::expr::{EinSum, JoinOp};
+use eindecomp::einsum::graph::{EinGraph, VertexId};
+use eindecomp::einsum::label::labels;
+use eindecomp::einsum::macros::multihead_attention;
+use eindecomp::models::ffnn::{ffnn_step, step_inputs, FfnnState};
+use eindecomp::models::matchain::{chain_graph, chain_inputs};
+use eindecomp::runtime::native::eval_graph;
+use eindecomp::runtime::Backend;
+use eindecomp::sim::NetworkProfile;
+use eindecomp::tensor::Tensor;
+use std::collections::HashMap;
+
+fn cfg(workers: usize) -> DriverConfig {
+    DriverConfig {
+        workers,
+        p: workers,
+        backend: Backend::Native,
+        network: NetworkProfile::loopback(),
+        ..Default::default()
+    }
+}
+
+/// Driver (plan-per-call) and Session (compile once) must produce
+/// bitwise-identical outputs for the same graph + inputs.
+fn assert_session_matches_driver(g: &EinGraph, inputs: &HashMap<VertexId, Tensor>) {
+    let driver = Driver::new(cfg(4)).unwrap();
+    let (outs_d, rep_d) = driver.run(g, inputs).unwrap();
+    assert_eq!(rep_d.provenance, PlanProvenance::Planned);
+
+    let session = Session::new(cfg(4)).unwrap();
+    let exe = session.compile(g).unwrap();
+    let (outs_s, rep_s) = exe.run(inputs).unwrap();
+    assert_eq!(rep_s.provenance, PlanProvenance::Planned);
+    assert_eq!(outs_d, outs_s);
+}
+
+#[test]
+fn session_matches_driver_bitwise_matchain() {
+    for skewed in [false, true] {
+        let chain = chain_graph(40, skewed).unwrap();
+        let inputs = chain_inputs(&chain, 11);
+        assert_session_matches_driver(&chain.graph, &inputs);
+    }
+}
+
+#[test]
+fn session_matches_driver_bitwise_ffnn() {
+    let step = ffnn_step(8, 32, 16, 4).unwrap();
+    let state = FfnnState::init(32, 16, 4, 3);
+    let inputs = step_inputs(
+        &step,
+        &state,
+        Tensor::random(&[8, 32], 7),
+        Tensor::random(&[8, 4], 8),
+    );
+    assert_session_matches_driver(&step.graph, &inputs);
+}
+
+#[test]
+fn session_matches_driver_bitwise_attention() {
+    let (s, a, h, d) = (16, 8, 2, 4);
+    let mut g = EinGraph::new();
+    let q = g.input("Q", vec![s, a]);
+    let k = g.input("K", vec![s, a]);
+    let v = g.input("V", vec![s, a]);
+    let wq = g.input("WQ", vec![a, h, d]);
+    let wk = g.input("WK", vec![a, h, d]);
+    let wv = g.input("WV", vec![a, h, d]);
+    let wo = g.input("WO", vec![a, h, d]);
+    multihead_attention(&mut g, "mha", q, k, v, wq, wk, wv, wo, false).unwrap();
+    let mut inputs = HashMap::new();
+    for (i, vid) in g.inputs().into_iter().enumerate() {
+        inputs.insert(vid, Tensor::random(&g.vertex(vid).bound, 30 + i as u64));
+    }
+    assert_session_matches_driver(&g, &inputs);
+}
+
+/// The Experiment-1 chain with caller-chosen labels and build order, so
+/// the cache tests can present genuinely renamed / reordered clones.
+struct NamedChain {
+    graph: EinGraph,
+    inputs_ids: [VertexId; 5],
+    z: VertexId,
+}
+
+fn build_chain(names: [&str; 4], reorder: bool, s: usize) -> NamedChain {
+    let l = |n: &str| labels(n)[0];
+    let (i, j, k, m) = (l(names[0]), l(names[1]), l(names[2]), l(names[3]));
+    let mut g = EinGraph::new();
+    let (a, b, c, d, e, z);
+    if reorder {
+        d = g.input("D", vec![s, s]);
+        e = g.input("E", vec![s, s]);
+        let de = g
+            .add("DE", EinSum::contraction(vec![j, m], vec![m, k], vec![j, k]), &[d, e])
+            .unwrap();
+        a = g.input("A", vec![s, s]);
+        b = g.input("B", vec![s, s]);
+        c = g.input("C", vec![s, s]);
+        let ab = g
+            .add("AB", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), &[a, b])
+            .unwrap();
+        let cde = g
+            .add("CDE", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), &[c, de])
+            .unwrap();
+        z = g
+            .add(
+                "Z",
+                EinSum::elementwise(vec![i, k], vec![i, k], JoinOp::Add),
+                &[ab, cde],
+            )
+            .unwrap();
+    } else {
+        a = g.input("A", vec![s, s]);
+        b = g.input("B", vec![s, s]);
+        c = g.input("C", vec![s, s]);
+        d = g.input("D", vec![s, s]);
+        e = g.input("E", vec![s, s]);
+        let ab = g
+            .add("AB", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), &[a, b])
+            .unwrap();
+        let de = g
+            .add("DE", EinSum::contraction(vec![j, m], vec![m, k], vec![j, k]), &[d, e])
+            .unwrap();
+        let cde = g
+            .add("CDE", EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]), &[c, de])
+            .unwrap();
+        z = g
+            .add(
+                "Z",
+                EinSum::elementwise(vec![i, k], vec![i, k], JoinOp::Add),
+                &[ab, cde],
+            )
+            .unwrap();
+    }
+    NamedChain {
+        graph: g,
+        inputs_ids: [a, b, c, d, e],
+        z,
+    }
+}
+
+fn random_inputs(c: &NamedChain, seed: u64) -> HashMap<VertexId, Tensor> {
+    let mut m = HashMap::new();
+    for (i, &v) in c.inputs_ids.iter().enumerate() {
+        m.insert(v, Tensor::random(&c.graph.vertex(v).bound, seed + i as u64));
+    }
+    m
+}
+
+#[test]
+fn cache_hits_renamed_reordered_clone_and_remaps_correctly() {
+    let g1 = build_chain(["i", "j", "k", "m"], false, 24);
+    let g2 = build_chain(["w", "x", "y", "z"], true, 24);
+
+    let session = Session::new(cfg(4)).unwrap();
+    let exe1 = session.compile(&g1.graph).unwrap();
+    assert_eq!(exe1.provenance(), PlanProvenance::Planned);
+
+    // label-renamed + vertex-reordered clone: a cache hit
+    let exe2 = session.compile(&g2.graph).unwrap();
+    assert_eq!(exe2.provenance(), PlanProvenance::CacheHit);
+    assert_eq!(exe1.signature(), exe2.signature());
+    let st = session.stats();
+    assert_eq!((st.compiles, st.hits, st.misses), (2, 1, 1));
+    assert_eq!(st.planner_runs, 1, "the hit must not re-plan");
+    assert_eq!(st.lower_runs, 1, "the hit must not re-lower");
+    assert_eq!(st.entries, 1);
+
+    // the hit's vertex remap is numerically correct: run the cached
+    // artifact with g2's ids and check against g2's dense reference
+    let inputs2 = random_inputs(&g2, 77);
+    let (outs2, rep2) = exe2.run(&inputs2).unwrap();
+    assert_eq!(rep2.provenance, PlanProvenance::CacheHit);
+    assert!(rep2.plan_s > 0.0, "cache hits report the real plan_s");
+    let want2 = eval_graph(&g2.graph, &inputs2).unwrap();
+    assert!(outs2[&g2.z].allclose(&want2[&g2.z], 1e-4, 1e-5));
+
+    // and it is bitwise-identical to compiling g2 in a fresh session
+    let fresh = Session::new(cfg(4)).unwrap();
+    let (outs_fresh, _) = fresh.compile(&g2.graph).unwrap().run(&inputs2).unwrap();
+    assert_eq!(outs2, outs_fresh);
+}
+
+#[test]
+fn cache_misses_on_shape_change() {
+    let g1 = build_chain(["i", "j", "k", "m"], false, 16);
+    let g2 = build_chain(["i", "j", "k", "m"], false, 32);
+    let session = Session::new(cfg(4)).unwrap();
+    session.compile(&g1.graph).unwrap();
+    let exe2 = session.compile(&g2.graph).unwrap();
+    assert_eq!(exe2.provenance(), PlanProvenance::Planned);
+    let st = session.stats();
+    assert_eq!((st.hits, st.misses, st.entries), (0, 2, 2));
+}
+
+#[test]
+fn run_many_is_bitwise_stable_with_zero_replanning() {
+    let chain = chain_graph(32, false).unwrap();
+    let inputs = chain_inputs(&chain, 13);
+    let session = Session::new(cfg(4)).unwrap();
+    let exe = session.compile(&chain.graph).unwrap();
+
+    let (first, rep) = exe.run(&inputs).unwrap();
+    assert_eq!(rep.provenance, PlanProvenance::Planned);
+    for _ in 0..2 {
+        let (outs, _) = exe.run(&inputs).unwrap();
+        assert_eq!(outs, first, "repeated runs must be bitwise-identical");
+    }
+    // zero planner / zero lowering work after compile
+    let st = session.stats();
+    assert_eq!(st.planner_runs, 1);
+    assert_eq!(st.lower_runs, 1);
+
+    // recompiling the same graph is a cache hit, with cache_hit provenance
+    // on its reports and still bitwise-identical outputs
+    let exe2 = session.compile(&chain.graph).unwrap();
+    assert_eq!(exe2.provenance(), PlanProvenance::CacheHit);
+    let (outs, rep2) = exe2.run(&inputs).unwrap();
+    assert_eq!(rep2.provenance, PlanProvenance::CacheHit);
+    assert_eq!(outs, first);
+    assert_eq!(session.stats().planner_runs, 1);
+}
+
+#[test]
+fn lazy_frontend_end_to_end_matches_dense_reference() {
+    let session = Session::new(cfg(2)).unwrap();
+    let a = session.input("A", &[24, 24]);
+    let b = session.input("B", &[24, 24]);
+    let c = session.input("C", &[24, 24]);
+    let ab = a.einsum("ij,jk->ik", &b).unwrap();
+    let z = ab.einsum("ik,km->im", &c).unwrap().ew(JoinOp::Add, &ab).unwrap();
+    let exe = session.compile_expr(&z).unwrap();
+
+    let mut inputs = HashMap::new();
+    for (i, e) in [&a, &b, &c].into_iter().enumerate() {
+        inputs.insert(e.id(), Tensor::random(&[24, 24], 50 + i as u64));
+    }
+    let (outs, _) = exe.run(&inputs).unwrap();
+    let want = eval_graph(exe.graph(), &inputs).unwrap();
+    assert_eq!(outs[&z.id()], want[&z.id()]);
+}
+
+#[test]
+fn extraneous_input_ids_ignored_identically_on_both_paths() {
+    let g1 = build_chain(["i", "j", "k", "m"], false, 16);
+    let g2 = build_chain(["p", "q", "r", "s"], true, 16);
+    let session = Session::new(cfg(2)).unwrap();
+    let exe1 = session.compile(&g1.graph).unwrap();
+    let exe2 = session.compile(&g2.graph).unwrap();
+    assert_eq!(exe2.provenance(), PlanProvenance::CacheHit);
+    // extraneous ids must be ignored — on the identity path and on the
+    // cache-hit remap path alike (no panic, no error, same outputs)
+    let mut inputs1 = random_inputs(&g1, 9);
+    let (clean1, _) = exe1.run(&inputs1).unwrap();
+    inputs1.insert(VertexId(999), Tensor::random(&[16, 16], 1));
+    let (extra1, _) = exe1.run(&inputs1).unwrap();
+    assert_eq!(clean1, extra1);
+    let mut inputs2 = random_inputs(&g2, 9);
+    let (clean2, _) = exe2.run(&inputs2).unwrap();
+    inputs2.insert(VertexId(999), Tensor::random(&[16, 16], 2));
+    let (extra2, _) = exe2.run(&inputs2).unwrap();
+    assert_eq!(clean2, extra2);
+    // a *missing* required input still errors on both paths
+    let mut short = random_inputs(&g2, 9);
+    short.remove(&g2.inputs_ids[0]);
+    assert!(exe2.run(&short).is_err());
+}
+
+#[test]
+fn label_sensitive_strategies_do_not_share_cache_across_renamings() {
+    // DataParallel plans by label *name* (roles: 'b' = batch), so a
+    // renamed twin must MISS even though its bare canonical signature
+    // matches — while an exact twin (same names, reordered build) hits.
+    let build = |batch: &str, reorder: bool| {
+        let l = |n: &str| labels(n)[0];
+        let (b, f, h) = (l(batch), l("f"), l("h"));
+        let mut g = EinGraph::new();
+        let (x, w);
+        if reorder {
+            w = g.input("W", vec![32, 16]);
+            x = g.input("X", vec![8, 32]);
+        } else {
+            x = g.input("X", vec![8, 32]);
+            w = g.input("W", vec![32, 16]);
+        }
+        g.add("Y", EinSum::contraction(vec![b, f], vec![f, h], vec![b, h]), &[x, w])
+            .unwrap();
+        g
+    };
+    let session = Session::new(DriverConfig {
+        workers: 4,
+        p: 4,
+        strategy: eindecomp::decomp::baselines::Strategy::DataParallel,
+        backend: Backend::Native,
+        network: NetworkProfile::loopback(),
+        ..Default::default()
+    })
+    .unwrap();
+    session.compile(&build("b", false)).unwrap();
+    // renamed batch label: canonically identical, but must not hit
+    let exe_renamed = session.compile(&build("q", false)).unwrap();
+    assert_eq!(exe_renamed.provenance(), PlanProvenance::Planned);
+    // exact twin, vertex-reordered: hits
+    let exe_twin = session.compile(&build("b", true)).unwrap();
+    assert_eq!(exe_twin.provenance(), PlanProvenance::CacheHit);
+    assert_eq!(session.stats().entries, 2);
+}
