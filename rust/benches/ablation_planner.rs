@@ -35,19 +35,39 @@ fn ablate_modes(name: &str, g: &EinGraph, p: usize) {
     let modes: Vec<(&str, PlannerConfig)> = vec![
         (
             "exact-tree (if tree)",
-            PlannerConfig { p, mode: PlanMode::ExactTree, off_path_cost: false },
+            PlannerConfig {
+                p,
+                mode: PlanMode::ExactTree,
+                off_path_cost: false,
+                ..Default::default()
+            },
         ),
         (
             "linearized (paper §8.4)",
-            PlannerConfig { p, mode: PlanMode::Linearized, off_path_cost: false },
+            PlannerConfig {
+                p,
+                mode: PlanMode::Linearized,
+                off_path_cost: false,
+                ..Default::default()
+            },
         ),
         (
             "linearized + off-path",
-            PlannerConfig { p, mode: PlanMode::Linearized, off_path_cost: true },
+            PlannerConfig {
+                p,
+                mode: PlanMode::Linearized,
+                off_path_cost: true,
+                ..Default::default()
+            },
         ),
         (
             "greedy",
-            PlannerConfig { p, mode: PlanMode::Greedy, off_path_cost: false },
+            PlannerConfig {
+                p,
+                mode: PlanMode::Greedy,
+                off_path_cost: false,
+                ..Default::default()
+            },
         ),
     ];
     for (label, cfg) in modes {

@@ -49,7 +49,7 @@ fn main() {
             let mut tg = cluster.lower(&chain.graph, &plan).unwrap();
             for t in tg.tasks.iter_mut() {
                 if matches!(t.kind, TaskKind::InputTile { .. }) {
-                    t.worker = 0; // master distributes everything
+                    t.worker = Some(0); // master distributes everything
                 }
             }
             let rep = cluster.model(&tg);

@@ -44,7 +44,7 @@ fn main() {
                 if let eindecomp::taskgraph::TaskKind::InputTile { vertex, .. } = &t.kind {
                     let name = &step.graph.vertex(*vertex).name;
                     if name.starts_with('W') {
-                        t.worker = 0; // parameter holder broadcasts
+                        t.worker = Some(0); // parameter holder broadcasts
                     }
                 }
             }

@@ -1,0 +1,269 @@
+//! Lowering benchmark: the TRA-IR mid-layer's cost and wins.
+//!
+//! Measures, per workload and p:
+//!
+//! * emit time — frozen direct lowering (`lower_graph_reference`) vs the
+//!   IR path (`from_plan` + passes + `emit_tasks`);
+//! * task-count deltas per pass (total / repart / agg tasks with the
+//!   pipeline off vs fully on), so wins are attributable to specific
+//!   rewrites.
+//!
+//! Asserts in-bench:
+//!
+//! * the no-pass IR emission equals the direct lowering **exactly**
+//!   (full `TaskGraph` equality — tasks, deps, bytes, flops);
+//! * `alias-refinement-repart` drops refinement-repart tasks to zero
+//!   with bitwise-identical execution;
+//! * `agg-tree` bounds aggregation fan-in by the tree arity.
+//!
+//! Writes `BENCH_lowering.json` (uploaded as a CI artifact). Run with
+//! `EINDECOMP_SMOKE=1` for capped iteration counts.
+//!
+//! ```sh
+//! cargo bench --bench lowering
+//! ```
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::decomp::{Plan, PlannerConfig};
+use eindecomp::einsum::expr::EinSum;
+use eindecomp::einsum::graph::EinGraph;
+use eindecomp::einsum::label::labels;
+use eindecomp::models::ffnn::ffnn_step;
+use eindecomp::models::llama::{llama_graph, LlamaConfig};
+use eindecomp::models::matchain::chain_graph;
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::taskgraph::lower::{lower_graph, lower_graph_reference};
+use eindecomp::taskgraph::{TaskGraph, TaskKind};
+use eindecomp::tensor::Tensor;
+use eindecomp::tra::passes::{PassManager, PassSelector};
+use eindecomp::tra::program::from_plan;
+use eindecomp::util::Json;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn count(tg: &TaskGraph, pred: fn(&TaskKind) -> bool) -> usize {
+    tg.tasks.iter().filter(|t| pred(&t.kind)).count()
+}
+
+fn is_repart(k: &TaskKind) -> bool {
+    matches!(k, TaskKind::Repart { .. })
+}
+
+fn is_agg(k: &TaskKind) -> bool {
+    matches!(k, TaskKind::Agg { .. })
+}
+
+fn bench_workload(name: &str, g: &EinGraph, plan: &Plan, iters: usize) -> Json {
+    // timing: direct reference vs IR path (build + emit, no passes)
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        lower_graph_reference(g, plan).unwrap();
+    }
+    let ref_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        from_plan(g, plan).unwrap().emit_tasks().unwrap();
+    }
+    let ir_ms = t1.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+    // equality gate: no-pass IR emission == direct lowering, bit for bit
+    let reference = lower_graph_reference(g, plan).unwrap();
+    let unoptimized = from_plan(g, plan).unwrap().emit_tasks().unwrap();
+    assert_eq!(
+        unoptimized, reference,
+        "{name}: no-pass IR emission diverged from the reference lowering"
+    );
+
+    // per-pass task-count deltas
+    let mut optimized_prog = from_plan(g, plan).unwrap();
+    let log = PassManager::new(&PassSelector::All).run(&mut optimized_prog);
+    let optimized = optimized_prog.emit_tasks().unwrap();
+    let changes: Vec<(String, Json)> = log
+        .entries
+        .iter()
+        .map(|e| (e.pass.clone(), Json::num(e.changes as f64)))
+        .collect();
+
+    println!(
+        "{name:<18} ref {ref_ms:8.3} ms | ir {ir_ms:8.3} ms | tasks {} -> {} \
+         (repart {} -> {}, agg {} -> {})",
+        reference.len(),
+        optimized.len(),
+        count(&reference, is_repart),
+        count(&optimized, is_repart),
+        count(&reference, is_agg),
+        count(&optimized, is_agg),
+    );
+
+    Json::Obj(vec![
+        ("workload".into(), Json::str(name)),
+        ("lower_reference_ms".into(), Json::num(ref_ms)),
+        ("lower_ir_ms".into(), Json::num(ir_ms)),
+        ("tasks_unoptimized".into(), Json::num(reference.len() as f64)),
+        ("tasks_optimized".into(), Json::num(optimized.len() as f64)),
+        (
+            "repart_tasks_unoptimized".into(),
+            Json::num(count(&reference, is_repart) as f64),
+        ),
+        (
+            "repart_tasks_optimized".into(),
+            Json::num(count(&optimized, is_repart) as f64),
+        ),
+        (
+            "agg_tasks_unoptimized".into(),
+            Json::num(count(&reference, is_agg) as f64),
+        ),
+        (
+            "agg_tasks_optimized".into(),
+            Json::num(count(&optimized, is_agg) as f64),
+        ),
+        ("pass_changes".into(), Json::Obj(changes)),
+        ("bitwise_unoptimized_equals_reference".into(), Json::Bool(true)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("EINDECOMP_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let iters = if smoke { 5 } else { 30 };
+    let tag = if smoke { " (smoke)" } else { "" };
+    println!("=== lowering: direct vs TRA-IR emission, per-pass deltas{tag} ===");
+
+    let roles = LabelRoles::by_convention();
+    // PlannerConfig carries the pass selector for plan-and-lower
+    // toolchains like this bench: one config names both the planning
+    // target and the pipeline the demos below lower with.
+    let pcfg = PlannerConfig {
+        p: 4,
+        passes: PassSelector::All,
+        ..Default::default()
+    };
+
+    let mut entries: Vec<Json> = Vec::new();
+    for p in [2usize, 4] {
+        let chain = chain_graph(if smoke { 32 } else { 64 }, false).unwrap().graph;
+        let plan = assign(&chain, &Strategy::EinDecomp, p, &roles).unwrap();
+        entries.push(bench_workload(&format!("matchain/p{p}"), &chain, &plan, iters));
+
+        let ffnn = ffnn_step(32, 48, 24, 8).unwrap().graph;
+        let plan = assign(&ffnn, &Strategy::EinDecomp, p, &roles).unwrap();
+        entries.push(bench_workload(&format!("ffnn/p{p}"), &ffnn, &plan, iters));
+
+        let llama_cfg = LlamaConfig {
+            layers: 1,
+            batch: 2,
+            seq: 16,
+            model_dim: 32,
+            heads: 2,
+            head_dim: 16,
+            ffn_dim: 64,
+        };
+        let attn = llama_graph(&llama_cfg).unwrap().graph;
+        let plan = assign(&attn, &Strategy::EinDecomp, p, &roles).unwrap();
+        entries.push(bench_workload(&format!("attention/p{p}"), &attn, &plan, iters));
+    }
+
+    // --- alias-refinement demo: refinement reparts drop to zero --------
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![32, 32]);
+    let b = g.input("B", vec![32, 32]);
+    let c = g.input("C", vec![32, 32]);
+    let z1 = g
+        .add(
+            "Z1",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let z2 = g
+        .add(
+            "Z2",
+            EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+            vec![z1, c],
+        )
+        .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z1, vec![2, 1, 2]);
+    plan.parts.insert(z2, vec![4, 4, 1]);
+    plan.finalize_inputs(&g);
+    let without = lower_graph(&g, &plan).unwrap();
+    let mut prog = from_plan(&g, &plan).unwrap();
+    pcfg.passes.manager().run(&mut prog);
+    let with = prog.emit_tasks().unwrap();
+    let (r0, r1) = (count(&without, is_repart), count(&with, is_repart));
+    assert!(r0 > 0 && r1 == 0, "alias pass must zero refinement reparts");
+    // bitwise gate: aliased execution == un-aliased execution
+    let mut inputs = HashMap::new();
+    for v in g.inputs() {
+        inputs.insert(v, Tensor::random(&[32, 32], 50 + v.0 as u64));
+    }
+    let engine = NativeEngine::new();
+    let base = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::None)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    let aliased = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes("elide-identity-repart,alias-refinement-repart".parse().unwrap())
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    assert_eq!(base[&z2], aliased[&z2], "alias pass changed execution bytes");
+    println!("alias demo        : repart tasks {r0} -> {r1} (bitwise-identical execution)");
+
+    // --- agg-tree demo: fan-in bounded by the arity --------------------
+    let mut ag = EinGraph::new();
+    let aa = ag.input("A", vec![64, 64]);
+    let ab = ag.input("B", vec![64, 64]);
+    let az = ag
+        .add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![aa, ab],
+        )
+        .unwrap();
+    let mut aplan = Plan::default();
+    aplan.parts.insert(az, vec![2, 16, 2]); // 16-way aggregation groups
+    aplan.finalize_inputs(&ag);
+    let serial = lower_graph(&ag, &aplan).unwrap();
+    let mut tprog = from_plan(&ag, &aplan).unwrap();
+    pcfg.passes.manager().run(&mut tprog);
+    let tree = tprog.emit_tasks().unwrap();
+    let max_fanin = |tg: &TaskGraph| {
+        tg.tasks
+            .iter()
+            .filter(|t| is_agg(&t.kind))
+            .map(|t| t.deps.len())
+            .max()
+            .unwrap_or(0)
+    };
+    let (f0, f1) = (max_fanin(&serial), max_fanin(&tree));
+    assert_eq!(f0, 16);
+    assert!(f1 <= 4, "agg-tree fan-in {f1} exceeds the arity");
+    println!("agg-tree demo     : max Agg fan-in {f0} -> {f1} (arity 4)");
+
+    let report = Json::Obj(vec![
+        ("iters".into(), Json::num(iters as f64)),
+        ("workloads".into(), Json::Arr(entries)),
+        (
+            "alias_demo".into(),
+            Json::Obj(vec![
+                ("repart_tasks_without".into(), Json::num(r0 as f64)),
+                ("repart_tasks_with".into(), Json::num(r1 as f64)),
+                ("bitwise_identical_execution".into(), Json::Bool(true)),
+            ]),
+        ),
+        (
+            "agg_tree_demo".into(),
+            Json::Obj(vec![
+                ("max_fanin_serial".into(), Json::num(f0 as f64)),
+                ("max_fanin_tree".into(), Json::num(f1 as f64)),
+                ("arity".into(), Json::num(4.0)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_lowering.json", report.render()).expect("write BENCH_lowering.json");
+    println!("wrote BENCH_lowering.json");
+}

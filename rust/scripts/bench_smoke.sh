@@ -19,5 +19,9 @@ echo "== serving (EINDECOMP_SMOKE=1): cold vs compile-once/run-many =="
 EINDECOMP_SMOKE=1 cargo bench --bench serving
 
 echo
+echo "== lowering (EINDECOMP_SMOKE=1): direct vs TRA-IR, per-pass deltas =="
+EINDECOMP_SMOKE=1 cargo bench --bench lowering
+
+echo
 echo "== fig9_ffnn (modeled, full sweep is cheap) =="
 cargo bench --bench fig9_ffnn

@@ -5,6 +5,9 @@
 //! eindecomp plan    --model chain|chain-skewed|ffnn|llama --p 16 [--scale N] [--compare]
 //! eindecomp run     --model ...         --workers 8 [--backend native|auto]
 //!                   [--exec steal|barrier] [--intra-op N] [--repeat N]
+//!                   [--passes all|none|safe|<csv>]
+//! eindecomp explain --model ...         [--workers N] [--p N] [--strategy S]
+//!                   [--passes ...] [--json]
 //! eindecomp program --file prog.ein     [--p 8] [--run]
 //! eindecomp help
 //! ```
@@ -16,6 +19,7 @@ use crate::models::{ffnn, llama, matchain};
 use crate::runtime::Backend;
 use crate::sim::network::NetworkProfile;
 use crate::tensor::Tensor;
+use crate::tra::passes::PassSelector;
 use std::collections::HashMap;
 
 /// Parsed command line.
@@ -78,6 +82,15 @@ fn strategy_by_name(name: &str) -> Result<Strategy> {
     })
 }
 
+/// `--passes all|none|safe|<csv>` (defaults to the task-graph-neutral
+/// `safe` pipeline when absent).
+fn parse_passes(args: &Args) -> Result<PassSelector> {
+    match args.get("passes") {
+        Some(s) => s.parse(),
+        None => Ok(PassSelector::default()),
+    }
+}
+
 fn build_model(args: &Args) -> Result<crate::einsum::graph::EinGraph> {
     let scale = args.get_usize("scale", 64);
     match args.get("model").unwrap_or("chain") {
@@ -110,6 +123,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
     match args.cmd.as_str() {
         "plan" => cmd_plan(&args),
         "run" => cmd_run(&args),
+        "explain" => cmd_explain(&args),
         "program" => cmd_program(&args),
         _ => {
             print_help();
@@ -184,6 +198,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         exec_mode,
         // 0 = match the executor's thread count (see DriverConfig docs).
         intra_op: args.get_usize("intra-op", 0),
+        passes: parse_passes(args)?,
         ..Default::default()
     };
     // Compile once (plan + lower + place), run `--repeat` many times: the
@@ -226,6 +241,33 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     println!("report         : {}", rep.exec.summary());
     println!("json           : {}", rep.to_json().render());
+    Ok(())
+}
+
+/// `explain`: compile the model through the Session pipeline and print
+/// the TRA program, the pass change log, and the modeled byte ledger —
+/// the compiler mid-layer made visible without executing anything.
+fn cmd_explain(args: &Args) -> Result<()> {
+    use super::driver::DriverConfig;
+    use super::session::Session;
+    let g = build_model(args)?;
+    let workers = args.get_usize("workers", 4);
+    let cfg = DriverConfig {
+        workers,
+        p: args.get_usize("p", workers),
+        strategy: strategy_by_name(args.get("strategy").unwrap_or("eindecomp"))?,
+        network: NetworkProfile::cpu_cluster(),
+        passes: parse_passes(args)?,
+        ..Default::default()
+    };
+    let session = Session::new(cfg)?;
+    let exe = session.compile(&g)?;
+    let explain = session.explain(&exe);
+    if args.get_bool("json") {
+        println!("{}", explain.to_json().render());
+    } else {
+        print!("{explain}");
+    }
     Ok(())
 }
 
@@ -273,10 +315,17 @@ USAGE:
                     [--intra-op N]   (kernel shard fan-out; 0 = threads)
                     [--repeat N]     (compile once, run N times; prints
                                       amortized serving throughput)
+                    [--passes all|none|safe|<csv>]  (TRA-IR pass pipeline)
+  eindecomp explain --model ... [--workers N] [--p N] [--strategy S]
+                    [--passes ...] [--json]
+                    (print the TRA program, pass change log, and modeled
+                     byte ledger of the compiled plan)
   eindecomp program --file prog.ein [--p N] [--run]
 
 STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,
             megatron, sequence, attention
+PASSES:     elide-identity-repart, alias-refinement-repart, agg-tree,
+            dead-rel-elim ("safe" = the task-graph-neutral default)
 
 Benches regenerating the paper's figures: `cargo bench` (see EXPERIMENTS.md)."#
     );
@@ -324,6 +373,28 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn explain_command_runs() {
+        let variants: [&[&str]; 3] = [&[], &["--passes", "all"], &["--json"]];
+        for extra in variants {
+            let mut args = vec!["explain", "--model", "chain", "--scale", "24", "--p", "4"];
+            args.extend_from_slice(extra);
+            let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            main_with_args(&argv).unwrap();
+        }
+    }
+
+    #[test]
+    fn run_rejects_unknown_passes() {
+        let argv: Vec<String> = [
+            "run", "--model", "chain", "--scale", "24", "--workers", "2", "--passes", "bogus",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert!(main_with_args(&argv).is_err());
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::sim::memory::{model_with_memory, MemoryConfig};
 use crate::sim::network::NetworkProfile;
 use crate::taskgraph::placement::Policy;
 use crate::tensor::Tensor;
+use crate::tra::passes::PassSelector;
 use crate::util::Json;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -47,6 +48,11 @@ pub struct DriverConfig {
     /// workers can steal them. `0` (default) matches the executor's
     /// thread count. Bitwise-neutral — see [`Cluster::with_intra_op`].
     pub intra_op: usize,
+    /// TRA-IR pass pipeline run between planning and task emission
+    /// (`--passes all|none|safe|<csv>` on the CLI; see
+    /// [`crate::tra::passes`]). Defaults to the task-graph-neutral
+    /// [`PassSelector::Safe`] set.
+    pub passes: PassSelector,
     pub roles: LabelRoles,
 }
 
@@ -62,6 +68,7 @@ impl Default for DriverConfig {
             placement: Policy::LocalityGreedy,
             exec_mode: ExecMode::WorkStealing,
             intra_op: 0,
+            passes: PassSelector::default(),
             roles: LabelRoles::by_convention(),
         }
     }
@@ -111,6 +118,10 @@ pub struct RunReport {
     /// Whether this run's plan was freshly planned, reused, or a cache
     /// hit.
     pub provenance: PlanProvenance,
+    /// Names of the TRA-IR passes applied when this run's task graph was
+    /// lowered (in pipeline order) — so sweeps can attribute wins to
+    /// specific rewrites.
+    pub passes: Vec<String>,
     pub exec: ExecReport,
 }
 
@@ -124,9 +135,14 @@ impl RunReport {
                 "plan_provenance".into(),
                 Json::str(self.provenance.as_str()),
             ),
+            (
+                "passes".into(),
+                Json::Arr(self.passes.iter().map(|p| Json::str(p.clone())).collect()),
+            ),
             ("sim_makespan_s".into(), Json::num(self.exec.sim_makespan_s)),
             ("wall_s".into(), Json::num(self.exec.wall_s)),
             ("bytes_moved".into(), Json::num(self.exec.bytes_moved as f64)),
+            ("bytes_input".into(), Json::num(self.exec.bytes_input as f64)),
             ("bytes_join".into(), Json::num(self.exec.bytes_join as f64)),
             ("bytes_agg".into(), Json::num(self.exec.bytes_agg as f64)),
             (
@@ -134,7 +150,7 @@ impl RunReport {
                 Json::num(self.exec.bytes_repart as f64),
             ),
             ("kernel_calls".into(), Json::num(self.exec.kernel_calls as f64)),
-            ("tasks".into(), Json::num(self.exec.tasks as f64)),
+            ("task_count".into(), Json::num(self.exec.tasks as f64)),
             ("efficiency".into(), Json::num(self.exec.efficiency())),
         ])
     }
@@ -209,6 +225,7 @@ impl Driver {
             plan_cost: plan.predicted_cost,
             plan_s,
             provenance: PlanProvenance::Planned,
+            passes: self.session.cluster().passes.manager().names(),
             exec,
         })
     }
@@ -229,6 +246,7 @@ impl Driver {
             plan_cost: plan.predicted_cost,
             plan_s,
             provenance: PlanProvenance::Planned,
+            passes: self.session.cluster().passes.manager().names(),
             exec,
         })
     }

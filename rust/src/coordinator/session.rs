@@ -54,6 +54,9 @@ use crate::runtime::DispatchEngine;
 use crate::sim::cluster::Cluster;
 use crate::taskgraph::TaskGraph;
 use crate::tensor::Tensor;
+use crate::tra::passes::PassLog;
+use crate::tra::program::TraProgram;
+use crate::util::Json;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -68,6 +71,12 @@ struct Artifact {
     graph: EinGraph,
     canon: Option<Canon>,
     plan: Plan,
+    /// The optimized TRA program the task graph was emitted from, plus
+    /// the per-pass change log — what `Session::explain` and
+    /// `Executable::tra_program` expose (the applied-pass list is
+    /// derived from the log, never stored separately).
+    prog: TraProgram,
+    pass_log: PassLog,
     tg: TaskGraph,
     model: crate::sim::cluster::ExecReport,
     plan_s: f64,
@@ -113,6 +122,7 @@ impl Session {
         cluster.placement = cfg.placement;
         cluster.exec_mode = cfg.exec_mode;
         cluster.intra_op = cfg.intra_op;
+        cluster.passes = cfg.passes.clone();
         Ok(Session {
             cfg,
             engine,
@@ -274,9 +284,33 @@ impl Session {
                 plan_cost: plan.predicted_cost,
                 plan_s: 0.0,
                 provenance: PlanProvenance::Reused,
+                passes: self.cluster.passes.manager().names(),
                 exec,
             },
         ))
+    }
+
+    /// Explain a compiled [`Executable`]: the optimized TRA program
+    /// listing (with relation schemas), the per-pass change log, and the
+    /// modeled per-[`TransferClass`](crate::taskgraph::TransferClass)
+    /// byte totals of its frozen task graph. Pretty-print with
+    /// [`Explain::render`] (the CLI `explain` subcommand) or serialize
+    /// with [`Explain::to_json`].
+    pub fn explain(&self, exe: &Executable) -> Explain {
+        let art = &exe.art;
+        Explain {
+            strategy: art.plan.strategy.clone(),
+            plan_cost: art.plan.predicted_cost,
+            program: art.prog.render(),
+            pass_log: art.pass_log.clone(),
+            passes: art.pass_log.applied(),
+            tasks: art.model.tasks,
+            kernel_calls: art.model.kernel_calls,
+            bytes_input: art.model.bytes_input,
+            bytes_join: art.model.bytes_join,
+            bytes_agg: art.model.bytes_agg,
+            bytes_repart: art.model.bytes_repart,
+        }
     }
 
     fn build_artifact(&self, g: &EinGraph, canon: Option<Canon>) -> Result<Arc<Artifact>> {
@@ -286,13 +320,15 @@ impl Session {
         let plan_s = t0.elapsed().as_secs_f64();
         self.lower_runs.fetch_add(1, Ordering::Relaxed);
         let t1 = std::time::Instant::now();
-        let tg = self.cluster.lower(g, &plan)?;
+        let (tg, prog, pass_log) = self.cluster.lower_explain(g, &plan)?;
         let lower_s = t1.elapsed().as_secs_f64();
         let model = self.cluster.model(&tg);
         Ok(Arc::new(Artifact {
             graph: g.clone(),
             canon,
             plan,
+            prog,
+            pass_log,
             tg,
             model,
             plan_s,
@@ -430,6 +466,7 @@ impl Executable {
                 plan_cost: self.art.plan.predicted_cost,
                 plan_s: self.art.plan_s,
                 provenance: self.provenance,
+                passes: self.art.pass_log.applied(),
                 exec,
             },
         ))
@@ -459,6 +496,25 @@ impl Executable {
         &self.art.tg
     }
 
+    /// The optimized TRA program the task graph was emitted from — the
+    /// Eq.-5 relational form of the compiled computation, after the
+    /// session's pass pipeline (cached twin's numbering on a hit; see
+    /// [`plan`](Self::plan)).
+    pub fn tra_program(&self) -> &TraProgram {
+        &self.art.prog
+    }
+
+    /// Per-pass change log of the compile that produced this artifact.
+    pub fn pass_log(&self) -> &PassLog {
+        &self.art.pass_log
+    }
+
+    /// Names of the passes applied at compile, in pipeline order
+    /// (derived from [`pass_log`](Self::pass_log)).
+    pub fn passes(&self) -> Vec<String> {
+        self.art.pass_log.applied()
+    }
+
     /// Canonical signature of the compiled program (computed on demand
     /// for [`Session::compile_fresh`] artifacts, which skip
     /// canonicalization on their hot path).
@@ -478,6 +534,76 @@ impl Executable {
     /// `(plan_s, lower_s)` wall-clock of the original compile.
     pub fn compile_times(&self) -> (f64, f64) {
         (self.art.plan_s, self.art.lower_s)
+    }
+}
+
+/// What [`Session::explain`] reports about a compiled program: the
+/// optimized TRA program listing, the pass pipeline's change log, and
+/// the modeled byte ledger per transfer class.
+#[derive(Clone, Debug)]
+pub struct Explain {
+    pub strategy: String,
+    /// Planner's predicted communication bound (floats).
+    pub plan_cost: f64,
+    /// Pretty-printed TRA program (one node per line, with schemas).
+    pub program: String,
+    pub pass_log: PassLog,
+    /// Passes applied, in pipeline order.
+    pub passes: Vec<String>,
+    pub tasks: usize,
+    pub kernel_calls: usize,
+    /// Modeled cross-worker bytes by transfer class.
+    pub bytes_input: u64,
+    pub bytes_join: u64,
+    pub bytes_agg: u64,
+    pub bytes_repart: u64,
+}
+
+impl Explain {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "strategy: {} (predicted {:.0} floats moved)\n",
+            self.strategy, self.plan_cost
+        ));
+        s.push_str(&self.program);
+        s.push_str(&self.pass_log.render());
+        s.push_str(&format!(
+            "task graph: {} tasks ({} kernel calls)\n",
+            self.tasks, self.kernel_calls
+        ));
+        s.push_str(&format!(
+            "modeled bytes: input {} | join {} | agg {} | repart {}\n",
+            self.bytes_input, self.bytes_join, self.bytes_agg, self.bytes_repart
+        ));
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("strategy".into(), Json::str(self.strategy.clone())),
+            ("plan_cost_floats".into(), Json::num(self.plan_cost)),
+            ("program".into(), Json::str(self.program.clone())),
+            ("passes".into(), self.pass_log.to_json()),
+            ("tasks".into(), Json::num(self.tasks as f64)),
+            (
+                "kernel_calls".into(),
+                Json::num(self.kernel_calls as f64),
+            ),
+            ("bytes_input".into(), Json::num(self.bytes_input as f64)),
+            ("bytes_join".into(), Json::num(self.bytes_join as f64)),
+            ("bytes_agg".into(), Json::num(self.bytes_agg as f64)),
+            (
+                "bytes_repart".into(),
+                Json::num(self.bytes_repart as f64),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Display for Explain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
     }
 }
 
@@ -531,6 +657,27 @@ mod tests {
         let exe = s.compile_expr(&w).unwrap();
         assert_eq!(exe.provenance(), PlanProvenance::CacheHit);
         assert_eq!(s.stats().hits, 1);
+    }
+
+    #[test]
+    fn explain_exposes_program_and_passes() {
+        let s = session();
+        let a = s.input("A", &[16, 16]);
+        let b = s.input("B", &[16, 16]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        let exe = s.compile_expr(&z).unwrap();
+        // default pipeline = the task-graph-neutral Safe set
+        assert_eq!(
+            exe.passes(),
+            &["elide-identity-repart".to_string(), "dead-rel-elim".to_string()]
+        );
+        assert!(!exe.tra_program().is_empty());
+        let ex = s.explain(&exe);
+        let text = ex.render();
+        assert!(text.contains("Join"), "{text}");
+        assert!(text.contains("elide-identity-repart"), "{text}");
+        assert!(text.contains("task graph:"), "{text}");
+        assert!(ex.to_json().render().contains("\"program\""));
     }
 
     #[test]

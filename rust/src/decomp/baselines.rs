@@ -101,6 +101,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                     p,
                     mode: PlanMode::Auto,
                     off_path_cost: true,
+                    ..Default::default()
                 },
             )?;
             if g.is_tree_like() {
@@ -112,6 +113,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                         p,
                         mode: PlanMode::Greedy,
                         off_path_cost: false,
+                        ..Default::default()
                     },
                 )?;
                 let mut best = if b.predicted_cost < a.predicted_cost { b } else { a };
@@ -125,6 +127,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                 p,
                 mode: PlanMode::Linearized,
                 off_path_cost: false,
+                ..Default::default()
             },
         ),
         Strategy::Greedy => plan_graph(
@@ -133,6 +136,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                 p,
                 mode: PlanMode::Greedy,
                 off_path_cost: false,
+                ..Default::default()
             },
         ),
         Strategy::Sqrt => role_plan(g, p, strategy.name(), |_, _| RolePrefs::sqrt()),

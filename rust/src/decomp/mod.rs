@@ -49,6 +49,14 @@ pub struct PlannerConfig {
     /// ignores these edges; including them is a strictly better
     /// approximation that we evaluate as an ablation.
     pub off_path_cost: bool,
+    /// TRA-IR pass selector carried for toolchains that plan *and*
+    /// lower from one config (the lowering bench, sweep scripts):
+    /// `cfg.passes.manager().run(&mut prog)` after
+    /// [`crate::tra::program::from_plan`]. **The planner itself never
+    /// reads this** — the cost model scores the raw Eq.-5 rewrite — and
+    /// the library's lowering path (`Cluster::lower`) is driven by
+    /// `Cluster::passes` / `DriverConfig::passes`, not this field.
+    pub passes: crate::tra::passes::PassSelector,
 }
 
 impl Default for PlannerConfig {
@@ -57,6 +65,7 @@ impl Default for PlannerConfig {
             p: 16,
             mode: PlanMode::Auto,
             off_path_cost: false,
+            passes: crate::tra::passes::PassSelector::default(),
         }
     }
 }

@@ -434,6 +434,7 @@ mod tests {
                 p: 1,
                 mode: crate::decomp::PlanMode::Greedy,
                 off_path_cost: false,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -628,6 +629,7 @@ mod tests {
                 p: 4,
                 mode: crate::decomp::PlanMode::Linearized,
                 off_path_cost: true,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -463,6 +463,125 @@ mod tests {
         assert_eq!(c1.named_signature(&g1), c3.named_signature(&g3));
     }
 
+    /// Diamond: T feeds two distinguishable branches (Relu / Exp) that
+    /// merge elementwise. `swap` flips both the insertion order of the
+    /// branches *and* their operand positions at the merge.
+    fn diamond(swap: bool, merge_swapped: bool) -> EinGraph {
+        let mut g = EinGraph::new();
+        let t = g.input("T", vec![8, 8]);
+        let (l, r);
+        if swap {
+            r = g.add("R", EinSum::map(labels("i j"), UnaryOp::Exp), vec![t]).unwrap();
+            l = g.add("L", EinSum::map(labels("i j"), UnaryOp::Relu), vec![t]).unwrap();
+        } else {
+            l = g.add("L", EinSum::map(labels("i j"), UnaryOp::Relu), vec![t]).unwrap();
+            r = g.add("R", EinSum::map(labels("i j"), UnaryOp::Exp), vec![t]).unwrap();
+        }
+        let (a, b) = if merge_swapped { (r, l) } else { (l, r) };
+        g.add(
+            "Z",
+            EinSum::elementwise(labels("i j"), labels("i j"), JoinOp::Sub),
+            vec![a, b],
+        )
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn diamond_insertion_order_is_canonical() {
+        // Same diamond, branches inserted in either order: one signature,
+        // and the isomorphism maps Relu to Relu, Exp to Exp.
+        let g1 = diamond(false, false);
+        let g2 = diamond(true, false);
+        let (c1, c2) = (canonicalize(&g1), canonicalize(&g2));
+        assert_eq!(c1.signature, c2.signature);
+        let l1 = g1.by_name("L").unwrap();
+        let l2 = g2.by_name("L").unwrap();
+        assert_eq!(c1.canon_of[l1.0], c2.canon_of[l2.0]);
+    }
+
+    #[test]
+    fn diamond_merge_operand_order_is_significant() {
+        // Z = L - R vs Z = R - L: the same multiset of vertices, wired
+        // differently — these are different programs (Sub is not
+        // symmetric, and Relu/Exp make the branches non-interchangeable),
+        // so the signatures must differ.
+        let g1 = diamond(false, false);
+        let g2 = diamond(false, true);
+        assert_ne!(canonicalize(&g1).signature, canonicalize(&g2).signature);
+    }
+
+    #[test]
+    fn twin_inputs_swapped_operand_positions_remap_correctly() {
+        // Z = A @ B vs Z = B @ A over same-shape inputs: isomorphic as
+        // programs (rename A <-> B), so one signature — and the canon
+        // isomorphism must align operand slot 0 with operand slot 0, so
+        // a cache-hit remap feeds the right tensor to the right side.
+        let build = |swap: bool| {
+            let mut g = EinGraph::new();
+            let a = g.input("A", vec![8, 8]);
+            let b = g.input("B", vec![8, 8]);
+            let (x, y) = if swap { (b, a) } else { (a, b) };
+            g.add(
+                "Z",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![x, y],
+            )
+            .unwrap();
+            g
+        };
+        let g1 = build(false);
+        let g2 = build(true);
+        let (c1, c2) = (canonicalize(&g1), canonicalize(&g2));
+        assert_eq!(c1.signature, c2.signature);
+        let op0_g1 = g1.vertex(g1.by_name("Z").unwrap()).inputs[0]; // A
+        let op0_g2 = g2.vertex(g2.by_name("Z").unwrap()).inputs[0]; // B
+        assert_eq!(c1.canon_of[op0_g1.0], c2.canon_of[op0_g2.0]);
+        // ... which for an asymmetric-shape twin is also shape-checked:
+        let mut g3 = EinGraph::new();
+        let a = g3.input("A", vec![8, 4]);
+        let b = g3.input("B", vec![4, 8]);
+        g3.add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+        let c3 = canonicalize(&g3);
+        let v = g3.vertex(g3.by_name("Z").unwrap()).inputs[0];
+        assert_eq!(g3.vertex(c3.order[c3.canon_of[v.0]]).bound, vec![8, 4]);
+    }
+
+    #[test]
+    fn same_shape_different_label_role_misses_under_named_signatures() {
+        // Two structurally identical single-contraction programs at the
+        // same shapes whose only difference is a label *name* ("b" batch
+        // vs "s" sequence). Bare signatures collapse them — correct for
+        // structural strategies — but role-driven strategies plan by
+        // label name, so the named signature must keep them apart.
+        let build = |lead: &str| {
+            let mut g = EinGraph::new();
+            let x = g.input("X", vec![16, 8]);
+            let w = g.input("W", vec![8, 16]);
+            let spec = format!("{lead} j");
+            g.add(
+                "Z",
+                EinSum::contraction(labels(&spec), labels("j k"), labels(&format!("{lead} k"))),
+                vec![x, w],
+            )
+            .unwrap();
+            g
+        };
+        let gb = build("b");
+        let gs = build("s");
+        let (cb, cs) = (canonicalize(&gb), canonicalize(&gs));
+        assert_eq!(cb.signature, cs.signature);
+        assert_ne!(cb.named_signature(&gb), cs.named_signature(&gs));
+        // same names -> named signatures agree
+        let gb2 = build("b");
+        assert_eq!(cb.named_signature(&gb), canonicalize(&gb2).named_signature(&gb2));
+    }
+
     #[test]
     fn canon_maps_are_inverse_permutations() {
         let g = chain(["i", "j", "k", "m"], true, 8);

@@ -9,7 +9,14 @@
 //! ```text
 //!   EinSum program (einsum::)          -- declarative spec, a DAG of EinSum ops
 //!     -> EinDecomp planner (decomp::)  -- choose a partitioning vector per vertex
-//!     -> TaskGraph (taskgraph::)       -- lower to kernel calls + transfers, place
+//!     -> TRA IR (tra::program)         -- the Eq.-5 relational program, reified:
+//!                                         Partition/ReKey/Join/Aggregate/
+//!                                         Repartition/Assemble over typed relations
+//!     -> passes (tra::passes)          -- ordered, toggleable rewrites with a
+//!                                         change log (identity-repart elision,
+//!                                         refinement aliasing, agg reduction
+//!                                         trees, dead-relation elimination)
+//!     -> TaskGraph (taskgraph::)       -- emit kernel calls + transfers, place
 //!     -> simulated cluster (sim::)     -- p workers, byte-accurate network model,
 //!                                         real execution via a nested work-stealing
 //!                                         scheduler (util::execute_dag_scoped):
@@ -19,6 +26,12 @@
 //!                                         intra-op GEMM); the PJRT artifact path is
 //!                                         a registry-only stub in this build
 //! ```
+//!
+//! The IR mid-layer is a public API: `Executable::tra_program()` exposes
+//! the optimized program behind any compiled artifact,
+//! `Session::explain` pretty-prints it with the pass change log and the
+//! modeled byte ledger, and `--passes` / the `explain` subcommand
+//! surface both on the CLI.
 //!
 //! The data plane between those stages is zero-copy: partitioning
 //! produces strided [`tensor::TensorView`] tiles in O(1), kernels read
@@ -120,7 +133,7 @@ pub use error::{Error, Result};
 /// Crate-wide convenience prelude for examples and benches.
 pub mod prelude {
     pub use crate::coordinator::driver::{Driver, DriverConfig, PlanProvenance, RunReport};
-    pub use crate::coordinator::session::{CacheStats, Executable, Session};
+    pub use crate::coordinator::session::{CacheStats, Executable, Explain, Session};
     pub use crate::decomp::{
         baselines::Strategy, cost::CostModel, plan_graph, Plan, PlannerConfig,
     };
@@ -137,6 +150,8 @@ pub mod prelude {
     pub use crate::sim::network::NetworkProfile;
     pub use crate::taskgraph::{lower::lower_graph, TaskGraph};
     pub use crate::tensor::{Tensor, TensorView};
+    pub use crate::tra::passes::{PassKind, PassLog, PassManager, PassSelector};
+    pub use crate::tra::program::{from_plan, RelId, RelSchema, TraOp, TraProgram};
     pub use crate::tra::relation::TensorRelation;
     pub use crate::util::BufferPool;
 }

@@ -68,13 +68,15 @@ use super::network::NetworkProfile;
 use crate::decomp::Plan;
 use crate::einsum::expr::{AggOp, EinSum};
 use crate::einsum::graph::{EinGraph, VertexId};
+use crate::einsum::label::project;
 use crate::error::{Error, Result};
 use crate::runtime::KernelEngine;
-use crate::taskgraph::lower::lower_graph;
 use crate::taskgraph::placement::{place, Policy};
 use crate::taskgraph::{TaskGraph, TaskKind, TransferClass};
 use crate::tensor::{Tensor, TensorView};
-use crate::tra::relation::{tile_origin, tile_shape};
+use crate::tra::passes::{PassLog, PassSelector};
+use crate::tra::program::{from_plan, TraProgram};
+use crate::tra::relation::{overlapping_tiles, tile_origin, tile_shape};
 use crate::util::{chunk_bounds, serial_scope, ShardScope, SyncPtr, SHARD_MIN};
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -165,6 +167,11 @@ pub struct Cluster {
     /// "match the executor's thread count". Purely a scheduling knob —
     /// results are bitwise-identical for every value.
     pub intra_op: usize,
+    /// TRA-IR pass pipeline applied between planning and task emission
+    /// (see [`crate::tra::passes`]). The default,
+    /// [`PassSelector::Safe`], is task-graph-neutral, so default
+    /// lowering reproduces the pre-IR pipeline byte for byte.
+    pub passes: PassSelector,
 }
 
 impl Cluster {
@@ -175,6 +182,7 @@ impl Cluster {
             placement: Policy::LocalityGreedy,
             exec_mode: ExecMode::WorkStealing,
             intra_op: 0,
+            passes: PassSelector::default(),
         }
     }
 
@@ -191,12 +199,38 @@ impl Cluster {
         self
     }
 
-    /// Lower + place a planned graph.
+    /// Builder-style override of the TRA pass pipeline.
+    pub fn with_passes(mut self, passes: PassSelector) -> Self {
+        self.passes = passes;
+        self
+    }
+
+    /// Lower + place a planned graph: build the TRA program (Eq. 5), run
+    /// the configured pass pipeline, emit and place the task graph. Every
+    /// compile validates the placed result (structure + placement, one
+    /// walk), so malformed graphs from IR rewrites fail here, not at run
+    /// time.
     pub fn lower(&self, g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
-        let mut tg = lower_graph(g, plan)?;
+        Ok(self.lower_explain(g, plan)?.0)
+    }
+
+    /// [`Self::lower`], also returning the optimized [`TraProgram`] and
+    /// the per-pass change log — what `Session::compile` stores so
+    /// `Session::explain` / `Executable::tra_program` can show the IR
+    /// behind a compiled artifact.
+    pub fn lower_explain(
+        &self,
+        g: &EinGraph,
+        plan: &Plan,
+    ) -> Result<(TaskGraph, TraProgram, PassLog)> {
+        let mut prog = from_plan(g, plan)?;
+        let log = self.passes.manager().run(&mut prog);
+        let mut tg = prog.emit_tasks()?;
         place(&mut tg, self.workers, self.placement);
+        // validate() re-checks structure (placement cannot invalidate
+        // it), so one post-place walk covers both.
         tg.validate(self.workers)?;
-        Ok(tg)
+        Ok((tg, prog, log))
     }
 
     /// Model the timeline and traffic of a placed task graph.
@@ -217,15 +251,16 @@ impl Cluster {
             ..Default::default()
         };
         for t in &tg.tasks {
-            let w = t.worker;
+            let w = t.assigned_worker();
             let mut ready = 0.0f64;
             for &d in &t.deps {
                 let dep = &tg.tasks[d.0];
+                let dw = dep.assigned_worker();
                 let mut arrive = finish[d.0];
-                if dep.worker != w {
-                    let send_start = finish[d.0].max(nic[dep.worker]);
+                if dw != w {
+                    let send_start = finish[d.0].max(nic[dw]);
                     let occupancy = dep.out_bytes as f64 / self.net.bandwidth_bps;
-                    nic[dep.worker] = send_start + occupancy;
+                    nic[dw] = send_start + occupancy;
                     arrive = send_start + self.net.wire_s(dep.out_bytes);
                     report.bytes_moved += dep.out_bytes as u64;
                     match t.kind.class() {
@@ -435,7 +470,7 @@ impl Cluster {
         // Placement seeds initial deque affinity: a task's home deque is
         // its placed worker (mod nothing — out-of-range homes fall into
         // the shared injector, which is exactly the case threads < workers).
-        let home: Vec<usize> = tg.tasks.iter().map(|t| t.worker).collect();
+        let home: Vec<usize> = tg.tasks.iter().map(|t| t.assigned_worker()).collect();
         let intra_op = if self.intra_op == 0 {
             threads
         } else {
@@ -558,13 +593,53 @@ fn exec_task(
         TaskKind::InputTile { .. } => Err(Error::Exec(
             "input tiles are pre-sliced by execute() (internal)".into(),
         )),
-        TaskKind::Kernel { vertex, .. } => {
-            let op = &g.vertex(*vertex).op;
-            let ins: Vec<TensorView> = task
-                .deps
-                .iter()
-                .map(|&d| dep_view(d))
-                .collect::<Result<_>>()?;
+        TaskKind::Kernel { vertex, key } => {
+            let vert = g.vertex(*vertex);
+            let op = &vert.op;
+            // Fast path (every non-aliased lowering, incl. the default
+            // `safe` pipeline): deps are exactly the expected operand
+            // tiles — no per-operand geometry work on the hot path.
+            if !tg.aliased_kernel_deps {
+                let ins: Vec<TensorView> = task
+                    .deps
+                    .iter()
+                    .map(|&d| dep_view(d))
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&TensorView> = ins.iter().collect();
+                return engine.eval_view_scoped(op, &refs, scope).map(Tensor::into_view);
+            }
+            let uniq = op.unique_labels();
+            let mut ins: Vec<TensorView> = Vec::with_capacity(task.deps.len());
+            for (o, &dt) in task.deps.iter().enumerate() {
+                let view = dep_view(dt)?;
+                let c = vert.inputs[o];
+                let cb = &g.vertex(c).bound;
+                let need = plan.required_in_part(g, *vertex, o);
+                let okey = project(key, op.operand_labels()[o], &uniq);
+                let shape = tile_shape(cb, &need, &okey);
+                if view.shape() == shape.as_slice() {
+                    ins.push(view);
+                } else {
+                    // `alias-refinement-repart` rewrite: the dep is the
+                    // single producer tile *containing* the needed
+                    // region (same containment math as the IR emission —
+                    // geometry only, no search). Slice the exact
+                    // sub-view the elided repart task would have
+                    // produced: bitwise-identical bytes and strides,
+                    // zero copies.
+                    let have = &tg.vertex_out_part[&c];
+                    let origin = tile_origin(cb, &need, &okey);
+                    let pkey: Vec<usize> = (0..cb.len())
+                        .map(|dim| {
+                            overlapping_tiles(cb[dim], have[dim], origin[dim], shape[dim]).0
+                        })
+                        .collect();
+                    let p_origin = tile_origin(cb, have, &pkey);
+                    let rel_off: Vec<usize> =
+                        origin.iter().zip(&p_origin).map(|(t, p)| t - p).collect();
+                    ins.push(view.slice(&rel_off, &shape)?);
+                }
+            }
             let refs: Vec<&TensorView> = ins.iter().collect();
             engine.eval_view_scoped(op, &refs, scope).map(Tensor::into_view)
         }

@@ -82,7 +82,7 @@ pub fn model_with_memory(
     };
 
     for t in &tg.tasks {
-        let w = t.worker;
+        let w = t.assigned_worker();
         tick += 1;
         let mut ready = 0.0f64;
         let mut stall = 0.0f64;
@@ -106,9 +106,10 @@ pub fn model_with_memory(
                     report.page_stall_s += net.host_s(dep.out_bytes);
                 }
                 _ => {
-                    if dep.worker != w {
-                        let send_start = finish[d.0].max(nic[dep.worker]);
-                        nic[dep.worker] =
+                    let dw = dep.assigned_worker();
+                    if dw != w {
+                        let send_start = finish[d.0].max(nic[dw]);
+                        nic[dw] =
                             send_start + dep.out_bytes as f64 / net.bandwidth_bps;
                         arrive = send_start + net.wire_s(dep.out_bytes);
                         report.bytes_moved += bytes;

@@ -10,6 +10,14 @@
 //!    reducing its group of kernel outputs.
 //!
 //! Inputs become one `InputTile` task per tile of their pre-partitioning.
+//!
+//! Since the TRA IR landed, [`lower_graph`] is a thin wrapper over
+//! [`crate::tra::program::from_plan`] + `emit_tasks` (no passes) and is
+//! kept for one release; the compiler pipeline proper goes through
+//! `Cluster::lower`, which runs the configured pass pipeline between the
+//! two steps. The pre-IR direct lowering survives verbatim as
+//! [`lower_graph_reference`] — the frozen differential baseline the
+//! equivalence tests and `benches/lowering.rs` compare against.
 
 use super::{TaskGraph, TaskId, TaskKind};
 use crate::decomp::Plan;
@@ -22,8 +30,21 @@ use crate::tra::relation::{
     linearize, overlapping_tiles, tile_bytes, tile_offset, tile_size,
 };
 
-/// Lower a planned EinGraph to a (not yet placed) task graph.
+/// Lower a planned EinGraph to a (not yet placed) task graph, through
+/// the TRA IR with **no** passes applied — task-for-task identical to
+/// [`lower_graph_reference`]. Kept for one release as the direct entry
+/// point; prefer `Cluster::lower` (which applies the configured passes)
+/// or [`crate::tra::program::from_plan`] to work with the IR itself.
 pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
+    crate::tra::program::from_plan(g, plan)?.emit_tasks()
+}
+
+/// The pre-IR direct lowering, one vertex at a time, with no
+/// intermediate program. Frozen as the differential baseline:
+/// `tests/tra_program.rs` and `benches/lowering.rs` assert the IR path
+/// reproduces this function's output exactly (same tasks, deps, bytes,
+/// flops).
+pub fn lower_graph_reference(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
     let mut tg = TaskGraph::default();
 
     for vert in g.vertices() {
@@ -308,6 +329,37 @@ mod tests {
         assert_eq!(overlapping_tiles(10, 3, 3, 3), (0, 1));
         assert_eq!(overlapping_tiles(10, 3, 7, 3), (2, 2));
         assert_eq!(overlapping_tiles(10, 3, 0, 10), (0, 2));
+    }
+
+    #[test]
+    fn wrapper_reproduces_reference_lowering() {
+        // lower_graph now routes through the TRA IR; it must match the
+        // frozen direct lowering exactly, including on graphs with
+        // repartitions and aggregations.
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![12, 8]);
+        let b = g.input("B", vec![8, 12]);
+        let c = g.input("C", vec![12, 12]);
+        let z1 = g
+            .add(
+                "Z1",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        g.add(
+            "Z2",
+            EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+            vec![z1, c],
+        )
+        .unwrap();
+        let mut plan = Plan::default();
+        plan.parts.insert(z1, vec![2, 2, 4]);
+        plan.parts.insert(g.by_name("Z2").unwrap(), vec![4, 1, 4]);
+        plan.finalize_inputs(&g);
+        let via_ir = lower_graph(&g, &plan).unwrap();
+        let direct = lower_graph_reference(&g, &plan).unwrap();
+        assert_eq!(via_ir, direct);
     }
 
     #[test]

@@ -62,7 +62,7 @@ pub enum TransferClass {
 }
 
 /// A node of the task graph.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Task {
     pub id: TaskId,
     pub kind: TaskKind,
@@ -72,12 +72,27 @@ pub struct Task {
     pub out_bytes: usize,
     /// Estimated floating point operations of this task.
     pub flops: f64,
-    /// Worker assignment (filled by placement; usize::MAX = unassigned).
-    pub worker: usize,
+    /// Worker assignment. `None` until placement runs; every consumer of
+    /// a placed graph reads it through [`Task::assigned_worker`], so an
+    /// unplaced task can never silently land on a phantom worker id.
+    pub worker: Option<usize>,
 }
 
-/// The lowered, placed task graph.
-#[derive(Clone, Debug, Default)]
+impl Task {
+    /// The placed worker. Panics with a diagnosable message when the
+    /// graph has not been placed — modeling/execution of an unplaced
+    /// graph is a pipeline bug, not a recoverable condition.
+    #[inline]
+    pub fn assigned_worker(&self) -> usize {
+        self.worker
+            .unwrap_or_else(|| panic!("task {} used before placement", self.id.0))
+    }
+}
+
+/// The lowered, placed task graph. `PartialEq` compares the full
+/// structure (tasks, deps, bytes, flops, placement, vertex maps) — the
+/// relation the IR-vs-direct-lowering differential tests assert.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct TaskGraph {
     pub tasks: Vec<Task>,
     /// For each EinGraph vertex: the tasks producing its output tiles, in
@@ -86,6 +101,12 @@ pub struct TaskGraph {
     /// Output partitioning of each vertex (row-major key order of
     /// `vertex_outputs`).
     pub vertex_out_part: std::collections::HashMap<VertexId, Vec<usize>>,
+    /// Set by IR emission when the `alias-refinement-repart` rewrite
+    /// routed at least one kernel operand directly at a *coarser*
+    /// producer tile. When `false` (every non-aliased lowering), the
+    /// executor skips per-operand geometry recovery entirely — kernel
+    /// deps are exactly the expected tiles.
+    pub aliased_kernel_deps: bool,
 }
 
 impl TaskGraph {
@@ -110,7 +131,7 @@ impl TaskGraph {
             deps,
             out_bytes,
             flops,
-            worker: usize::MAX,
+            worker: None,
         });
         id
     }
@@ -171,9 +192,20 @@ impl TaskGraph {
             .count()
     }
 
-    /// Validate topological ordering (deps precede users) and placement.
-    pub fn validate(&self, workers: usize) -> crate::error::Result<()> {
-        for t in &self.tasks {
+    /// Validate the pre-placement structure: topological dep order, ids
+    /// matching indices, non-empty aggregation fan-in, and vertex output
+    /// maps referencing real tasks. Run unconditionally on every compile
+    /// (`Session::compile` → `Cluster::lower`), so a malformed graph out
+    /// of a new IR pass fails at compile time with a real error instead
+    /// of at run time.
+    pub fn validate_structure(&self) -> crate::error::Result<()> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id.0 != i {
+                return Err(crate::error::Error::TaskGraph(format!(
+                    "task id {} at index {i}",
+                    t.id.0
+                )));
+            }
             for &d in &t.deps {
                 if d.0 >= t.id.0 {
                     return Err(crate::error::Error::TaskGraph(format!(
@@ -182,11 +214,53 @@ impl TaskGraph {
                     )));
                 }
             }
-            if t.worker >= workers {
+            if matches!(t.kind, TaskKind::Agg { .. }) && t.deps.is_empty() {
                 return Err(crate::error::Error::TaskGraph(format!(
-                    "task {} unplaced or out of range (worker {})",
-                    t.id.0, t.worker
+                    "aggregation task {} has no members",
+                    t.id.0
                 )));
+            }
+        }
+        for (v, outs) in &self.vertex_outputs {
+            if let Some(bad) = outs.iter().find(|t| t.0 >= self.tasks.len()) {
+                return Err(crate::error::Error::TaskGraph(format!(
+                    "vertex {v} output tile {} out of range",
+                    bad.0
+                )));
+            }
+            let part = self.vertex_out_part.get(v).ok_or_else(|| {
+                crate::error::Error::TaskGraph(format!("vertex {v} has outputs but no part"))
+            })?;
+            let n: usize = part.iter().product();
+            if outs.len() != n {
+                return Err(crate::error::Error::TaskGraph(format!(
+                    "vertex {v}: {} output tiles for part {part:?}",
+                    outs.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate structure ([`Self::validate_structure`]) plus placement:
+    /// every task assigned to a worker in range.
+    pub fn validate(&self, workers: usize) -> crate::error::Result<()> {
+        self.validate_structure()?;
+        for t in &self.tasks {
+            match t.worker {
+                None => {
+                    return Err(crate::error::Error::TaskGraph(format!(
+                        "task {} unplaced",
+                        t.id.0
+                    )))
+                }
+                Some(w) if w >= workers => {
+                    return Err(crate::error::Error::TaskGraph(format!(
+                        "task {} placed out of range (worker {w} of {workers})",
+                        t.id.0
+                    )));
+                }
+                Some(_) => {}
             }
         }
         Ok(())
@@ -251,7 +325,36 @@ mod tests {
         let tg = tiny_graph();
         for (i, t) in tg.tasks.iter().enumerate() {
             assert_eq!(t.id.0, i);
-            assert_eq!(t.worker, usize::MAX);
+            assert_eq!(t.worker, None);
         }
+    }
+
+    #[test]
+    fn validate_rejects_unplaced_and_malformed_graphs() {
+        let mut tg = tiny_graph();
+        tg.validate_structure().unwrap();
+        // unplaced tasks fail placement validation but not structure
+        assert!(tg.validate(4).is_err());
+        for t in tg.tasks.iter_mut() {
+            t.worker = Some(0);
+        }
+        tg.validate(4).unwrap();
+        // out-of-range placement
+        tg.tasks[1].worker = Some(9);
+        assert!(tg.validate(4).is_err());
+        tg.tasks[1].worker = Some(0);
+        // an aggregation with no members is structurally invalid
+        tg.push_task(
+            TaskKind::Agg { vertex: VertexId(9), key: vec![0] },
+            vec![],
+            4,
+            0.0,
+        );
+        assert!(tg.validate_structure().is_err());
+        let _ = tg.tasks.pop();
+        // vertex output map referencing a phantom task
+        tg.vertex_outputs.insert(VertexId(7), vec![TaskId(99)]);
+        tg.vertex_out_part.insert(VertexId(7), vec![1]);
+        assert!(tg.validate_structure().is_err());
     }
 }

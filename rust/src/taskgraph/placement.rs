@@ -44,7 +44,7 @@ fn place_round_robin(tg: &mut TaskGraph, workers: usize) {
             TaskKind::Repart { producer, .. } => (3, producer.0),
         };
         let c = counters.entry(keyv).or_insert(0);
-        tg.tasks[i].worker = *c % workers;
+        tg.tasks[i].worker = Some(*c % workers);
         *c += 1;
     }
 }
@@ -80,10 +80,11 @@ fn place_locality(tg: &mut TaskGraph, workers: usize) {
             }
             TaskKind::Agg { .. } => {
                 // co-locate with the first group member whose worker still
-                // has cap, else the least-loaded member worker
+                // has cap, else the least-loaded member worker (deps are
+                // already placed: lowering is topological)
                 let mut best: Option<usize> = None;
                 for &d in &tg.tasks[i].deps {
-                    let w = tg.tasks[d.0].worker;
+                    let w = tg.tasks[d.0].assigned_worker();
                     if gl[w] < cap {
                         best = Some(w);
                         break;
@@ -93,7 +94,7 @@ fn place_locality(tg: &mut TaskGraph, workers: usize) {
                     tg.tasks[i]
                         .deps
                         .iter()
-                        .map(|d| tg.tasks[d.0].worker)
+                        .map(|d| tg.tasks[d.0].assigned_worker())
                         .min_by_key(|&w| gl[w])
                         .unwrap_or(0)
                 })
@@ -104,7 +105,7 @@ fn place_locality(tg: &mut TaskGraph, workers: usize) {
                 let mut bytes_by_worker: HashMap<usize, usize> = HashMap::new();
                 for &d in &tg.tasks[i].deps {
                     let dep = &tg.tasks[d.0];
-                    *bytes_by_worker.entry(dep.worker).or_insert(0) += dep.out_bytes;
+                    *bytes_by_worker.entry(dep.assigned_worker()).or_insert(0) += dep.out_bytes;
                 }
                 let mut cands: Vec<(usize, usize)> = bytes_by_worker.into_iter().collect();
                 cands.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
@@ -115,7 +116,7 @@ fn place_locality(tg: &mut TaskGraph, workers: usize) {
                     .unwrap_or_else(|| (0..workers).min_by_key(|&w| gl[w]).unwrap())
             }
         };
-        tg.tasks[i].worker = worker;
+        tg.tasks[i].worker = Some(worker);
         load.get_mut(&gid).unwrap()[worker] += 1;
     }
 }
@@ -160,7 +161,7 @@ mod tests {
         let mut per_worker = vec![0usize; 8];
         for t in &tg.tasks {
             if matches!(t.kind, TaskKind::Kernel { .. }) {
-                per_worker[t.worker] += 1;
+                per_worker[t.assigned_worker()] += 1;
             }
         }
         assert!(per_worker.iter().all(|&c| c == 2), "{per_worker:?}");
@@ -174,7 +175,7 @@ mod tests {
         let mut per_worker = vec![0usize; 8];
         for t in &tg.tasks {
             if matches!(t.kind, TaskKind::Kernel { .. }) {
-                per_worker[t.worker] += 1;
+                per_worker[t.assigned_worker()] += 1;
             }
         }
         // cap = ceil(8/8) = 1 per vertex, two vertices -> exactly 2 each
@@ -201,8 +202,8 @@ mod tests {
         for t in &tg.tasks {
             if let TaskKind::Agg { .. } = t.kind {
                 let member_workers: Vec<usize> =
-                    t.deps.iter().map(|d| tg.tasks[d.0].worker).collect();
-                assert!(member_workers.contains(&t.worker));
+                    t.deps.iter().map(|d| tg.tasks[d.0].assigned_worker()).collect();
+                assert!(member_workers.contains(&t.assigned_worker()));
             }
         }
     }
@@ -212,6 +213,6 @@ mod tests {
         let mut tg = lowered(4);
         place(&mut tg, 1, Policy::LocalityGreedy);
         tg.validate(1).unwrap();
-        assert!(tg.tasks.iter().all(|t| t.worker == 0));
+        assert!(tg.tasks.iter().all(|t| t.worker == Some(0)));
     }
 }

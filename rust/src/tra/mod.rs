@@ -10,11 +10,21 @@
 //! exhaustively and via proptest). The *distributed* implementation of the
 //! same algebra — where tuples live on workers and movement is accounted —
 //! is [`crate::taskgraph`] + [`crate::sim`].
+//!
+//! Between the two sits the TRA **IR** ([`program`]): the relational
+//! program of Eq. 5 reified as a typed DAG that the compiler builds from
+//! `(EinGraph, Plan)`, rewrites with an optimizing pass pipeline
+//! ([`passes`]), and only then lowers to a task graph. See
+//! [`program::TraProgram`] and [`passes::PassManager`].
 
 pub mod ops;
+pub mod passes;
+pub mod program;
 pub mod relation;
 
 pub use ops::{
     aggregate, eval_einsum_tra, join, repartition, repartition_with_stats, RepartStats,
 };
+pub use passes::{PassKind, PassLog, PassManager, PassSelector};
+pub use program::{from_plan, RelId, RelSchema, TraOp, TraProgram};
 pub use relation::TensorRelation;

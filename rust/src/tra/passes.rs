@@ -1,0 +1,386 @@
+//! The optimizing pass pipeline over the TRA IR
+//! ([`crate::tra::program::TraProgram`]).
+//!
+//! Passes are ordered, individually toggleable rewrites with a per-pass
+//! change log. The canonical order is:
+//!
+//! 1. **`elide-identity-repart`** — remove `Π` nodes whose source and
+//!    target parts are equal (the direct lowering's inline `have == need`
+//!    check, generalized to an explicit IR rewrite). Task-graph neutral.
+//! 2. **`alias-refinement-repart`** — mark refinement `Π`s (every needed
+//!    tile contained in one producer tile) as aliases so they emit
+//!    **zero** tasks; consuming kernels slice the producer tile directly.
+//!    Bitwise-neutral to execution (the kernel reads the identical
+//!    sub-view the repart task would have built). Note the *modeled*
+//!    ledger trades granularity for tasks: a remote consumer is charged
+//!    the whole coarse producer tile instead of its refined sub-tile, so
+//!    `bytes_moved` can rise even as task counts fall — the win is task
+//!    count, scheduling overhead, and zero-copy local reads.
+//! 3. **`agg-tree`** — rewrite serial-fold aggregations whose group
+//!    exceeds the tree arity into balanced reduction trees, bounding any
+//!    task's fan-in by the arity. Deterministic, but float `Sum` folds
+//!    associate differently than the serial chain (bit-different, still
+//!    within dense-reference tolerance).
+//! 4. **`dead-rel-elim`** — drop nodes whose relations nothing consumes.
+//!
+//! Selection is driven by a [`PassSelector`] (`--passes all|none|safe`
+//! or a comma-separated subset on the CLI), carried by both
+//! `DriverConfig` and `PlannerConfig`. The default, [`PassSelector::Safe`],
+//! enables only the task-graph-neutral passes, so default lowering stays
+//! byte-identical to the pre-IR pipeline; `all` opts into the
+//! re-associating / re-routing rewrites.
+//!
+//! ```
+//! use eindecomp::tra::passes::{PassManager, PassSelector};
+//! let sel: PassSelector = "elide-identity-repart,agg-tree".parse()?;
+//! let mgr = PassManager::new(&sel);
+//! assert_eq!(mgr.names(), vec!["elide-identity-repart", "agg-tree"]);
+//! # Ok::<(), eindecomp::Error>(())
+//! ```
+
+use crate::error::{Error, Result};
+use crate::tra::program::TraProgram;
+use crate::util::Json;
+
+/// Default fan-in bound the `agg-tree` pass rewrites toward.
+pub const DEFAULT_AGG_TREE_ARITY: usize = 4;
+
+/// One rewrite of the pipeline, in canonical order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PassKind {
+    ElideIdentityRepart,
+    AliasRefinementRepart,
+    AggTree,
+    DeadRelElim,
+}
+
+impl PassKind {
+    /// Every pass, in canonical pipeline order.
+    pub const ALL: [PassKind; 4] = [
+        PassKind::ElideIdentityRepart,
+        PassKind::AliasRefinementRepart,
+        PassKind::AggTree,
+        PassKind::DeadRelElim,
+    ];
+
+    /// The task-graph-neutral subset enabled by default.
+    pub const SAFE: [PassKind; 2] = [PassKind::ElideIdentityRepart, PassKind::DeadRelElim];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PassKind::ElideIdentityRepart => "elide-identity-repart",
+            PassKind::AliasRefinementRepart => "alias-refinement-repart",
+            PassKind::AggTree => "agg-tree",
+            PassKind::DeadRelElim => "dead-rel-elim",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<PassKind> {
+        PassKind::ALL.into_iter().find(|k| k.name() == name)
+    }
+}
+
+/// Which passes to run — the `passes` field of `DriverConfig` /
+/// `PlannerConfig` and the CLI's `--passes` flag.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum PassSelector {
+    /// Every pass, canonical order.
+    All,
+    /// No passes: the raw Eq.-5 program, lowered as-is (still
+    /// task-graph-identical to the direct lowering).
+    None,
+    /// The default: only task-graph-neutral cleanups
+    /// ([`PassKind::SAFE`]), so default lowering reproduces the pre-IR
+    /// pipeline byte for byte.
+    #[default]
+    Safe,
+    /// An explicit subset (run in canonical order regardless of the
+    /// order given).
+    Custom(Vec<PassKind>),
+}
+
+impl PassSelector {
+    /// The selected passes, in canonical order, deduplicated.
+    pub fn kinds(&self) -> Vec<PassKind> {
+        match self {
+            PassSelector::All => PassKind::ALL.to_vec(),
+            PassSelector::None => vec![],
+            PassSelector::Safe => PassKind::SAFE.to_vec(),
+            PassSelector::Custom(ks) => PassKind::ALL
+                .into_iter()
+                .filter(|k| ks.contains(k))
+                .collect(),
+        }
+    }
+
+    /// Build the pass manager this selector describes.
+    pub fn manager(&self) -> PassManager {
+        PassManager::new(self)
+    }
+}
+
+impl std::str::FromStr for PassSelector {
+    type Err = Error;
+
+    /// Parse `all`, `none`, `safe`/`default`, or a comma-separated list
+    /// of pass names.
+    fn from_str(s: &str) -> Result<PassSelector> {
+        match s.trim() {
+            "all" => Ok(PassSelector::All),
+            "none" => Ok(PassSelector::None),
+            "safe" | "default" => Ok(PassSelector::Safe),
+            csv => {
+                let mut kinds = Vec::new();
+                for part in csv.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    let k = PassKind::from_name(part).ok_or_else(|| {
+                        Error::Parse(format!(
+                            "unknown pass {part:?} (try all, none, safe, or a comma list of: {})",
+                            PassKind::ALL.map(|k| k.name()).join(", ")
+                        ))
+                    })?;
+                    kinds.push(k);
+                }
+                Ok(PassSelector::Custom(kinds))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PassSelector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PassSelector::All => f.write_str("all"),
+            PassSelector::None => f.write_str("none"),
+            PassSelector::Safe => f.write_str("safe"),
+            PassSelector::Custom(ks) => {
+                let names: Vec<&str> = PassKind::ALL
+                    .into_iter()
+                    .filter(|k| ks.contains(k))
+                    .map(|k| k.name())
+                    .collect();
+                f.write_str(&names.join(","))
+            }
+        }
+    }
+}
+
+/// What one pass did to one program.
+#[derive(Clone, Debug)]
+pub struct PassEntry {
+    pub pass: String,
+    /// Number of rewrites applied (0 = ran but found nothing).
+    pub changes: usize,
+    /// One human-readable line per rewrite.
+    pub notes: Vec<String>,
+}
+
+/// Ordered per-pass change log of one [`PassManager::run`].
+#[derive(Clone, Debug, Default)]
+pub struct PassLog {
+    pub entries: Vec<PassEntry>,
+}
+
+impl PassLog {
+    /// Total rewrites across all passes.
+    pub fn total_changes(&self) -> usize {
+        self.entries.iter().map(|e| e.changes).sum()
+    }
+
+    /// Names of the passes that ran (whether or not they changed
+    /// anything).
+    pub fn applied(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.pass.clone()).collect()
+    }
+
+    pub fn render(&self) -> String {
+        if self.entries.is_empty() {
+            return "passes: (none)\n".into();
+        }
+        let mut s = String::from("passes:\n");
+        for e in &self.entries {
+            s.push_str(&format!("  {:<24} {} change(s)\n", e.pass, e.changes));
+            for n in &e.notes {
+                s.push_str(&format!("    - {n}\n"));
+            }
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    Json::Obj(vec![
+                        ("pass".into(), Json::str(e.pass.clone())),
+                        ("changes".into(), Json::num(e.changes as f64)),
+                        (
+                            "notes".into(),
+                            Json::Arr(e.notes.iter().map(|n| Json::str(n.clone())).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+impl std::fmt::Display for PassLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// Runs an ordered, toggleable pass list over a [`TraProgram`], logging
+/// every change.
+#[derive(Clone, Debug)]
+pub struct PassManager {
+    kinds: Vec<PassKind>,
+    /// Fan-in bound for the `agg-tree` rewrite (clamped to >= 2).
+    pub agg_tree_arity: usize,
+}
+
+impl PassManager {
+    pub fn new(selector: &PassSelector) -> PassManager {
+        PassManager {
+            kinds: selector.kinds(),
+            agg_tree_arity: DEFAULT_AGG_TREE_ARITY,
+        }
+    }
+
+    pub fn all() -> PassManager {
+        PassManager::new(&PassSelector::All)
+    }
+
+    pub fn none() -> PassManager {
+        PassManager::new(&PassSelector::None)
+    }
+
+    /// Override the `agg-tree` fan-in bound.
+    pub fn with_agg_tree_arity(mut self, arity: usize) -> PassManager {
+        self.agg_tree_arity = arity.max(2);
+        self
+    }
+
+    /// Names of the passes this manager will run, in order.
+    pub fn names(&self) -> Vec<String> {
+        self.kinds.iter().map(|k| k.name().to_string()).collect()
+    }
+
+    /// Run every selected pass, in canonical order, and return the log.
+    pub fn run(&self, prog: &mut TraProgram) -> PassLog {
+        let mut log = PassLog::default();
+        for k in &self.kinds {
+            let notes = match k {
+                PassKind::ElideIdentityRepart => prog.elide_identity_reparts(),
+                PassKind::AliasRefinementRepart => prog.alias_refinement_reparts(),
+                PassKind::AggTree => prog.agg_tree(self.agg_tree_arity),
+                PassKind::DeadRelElim => prog.dead_rel_elim(),
+            };
+            log.entries.push(PassEntry {
+                pass: k.name().to_string(),
+                changes: notes.len(),
+                notes,
+            });
+        }
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::Plan;
+    use crate::einsum::expr::EinSum;
+    use crate::einsum::graph::EinGraph;
+    use crate::einsum::label::labels;
+    use crate::tra::program::from_plan;
+
+    #[test]
+    fn selector_parses_and_roundtrips() {
+        assert_eq!("all".parse::<PassSelector>().unwrap(), PassSelector::All);
+        assert_eq!("none".parse::<PassSelector>().unwrap(), PassSelector::None);
+        assert_eq!("safe".parse::<PassSelector>().unwrap(), PassSelector::Safe);
+        assert_eq!(
+            "default".parse::<PassSelector>().unwrap(),
+            PassSelector::Safe
+        );
+        let custom: PassSelector = "agg-tree,elide-identity-repart".parse().unwrap();
+        // canonical order regardless of the order given
+        assert_eq!(
+            custom.kinds(),
+            vec![PassKind::ElideIdentityRepart, PassKind::AggTree]
+        );
+        assert_eq!(custom.to_string(), "elide-identity-repart,agg-tree");
+        assert!("nonsense-pass".parse::<PassSelector>().is_err());
+        assert_eq!(PassSelector::default(), PassSelector::Safe);
+    }
+
+    #[test]
+    fn safe_subset_is_task_graph_neutral_by_construction() {
+        assert_eq!(
+            PassSelector::Safe.kinds(),
+            vec![PassKind::ElideIdentityRepart, PassKind::DeadRelElim]
+        );
+    }
+
+    #[test]
+    fn manager_runs_in_order_and_logs() {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![16, 16]);
+        let b = g.input("B", vec![16, 16]);
+        let z = g
+            .add(
+                "Z",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        let mut plan = Plan::default();
+        plan.parts.insert(z, vec![1, 8, 2]); // 8-way aggregation groups
+        plan.finalize_inputs(&g);
+        let mut prog = from_plan(&g, &plan).unwrap();
+        let mgr = PassManager::all().with_agg_tree_arity(2);
+        let log = mgr.run(&mut prog);
+        assert_eq!(
+            log.applied(),
+            vec![
+                "elide-identity-repart",
+                "alias-refinement-repart",
+                "agg-tree",
+                "dead-rel-elim"
+            ]
+        );
+        // identity reparts elided (2 input edges), agg rewritten to a tree
+        assert_eq!(log.entries[0].changes, 2);
+        assert_eq!(log.entries[2].changes, 1);
+        assert_eq!(log.entries[3].changes, 0);
+        assert!(log.total_changes() >= 3);
+        let text = log.render();
+        assert!(text.contains("agg-tree"));
+        assert!(text.contains("tree"));
+        assert!(log.to_json().render().contains("\"pass\""));
+    }
+
+    #[test]
+    fn none_manager_is_empty() {
+        let mgr = PassManager::none();
+        assert!(mgr.names().is_empty());
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![4, 4]);
+        g.add("R", EinSum::map(labels("i j"), crate::einsum::expr::UnaryOp::Relu), vec![a])
+            .unwrap();
+        let mut plan = Plan::default();
+        plan.parts.insert(g.by_name("R").unwrap(), vec![2, 2]);
+        plan.finalize_inputs(&g);
+        let mut prog = from_plan(&g, &plan).unwrap();
+        let n = prog.len();
+        let log = mgr.run(&mut prog);
+        assert!(log.entries.is_empty());
+        assert_eq!(prog.len(), n);
+    }
+}

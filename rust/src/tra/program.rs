@@ -1,0 +1,1121 @@
+//! The TRA **intermediate representation**: the relational program of
+//! Eq. 5, reified as a first-class, inspectable compiler stage.
+//!
+//! The planner fixes one partitioning vector per vertex; the paper's core
+//! claim is that each vertex then *rewrites* into a tensor-relational
+//! expression — partition, re-key, join, aggregate, plus repartitions on
+//! every edge whose layouts disagree. Before this module, that program
+//! existed only implicitly inside the task-graph lowering; now it is a
+//! value:
+//!
+//! ```text
+//!   (EinGraph, Plan) ──from_plan──▶ TraProgram ──passes──▶ TraProgram
+//!                                                 │
+//!                                           emit_tasks()
+//!                                                 ▼
+//!                                             TaskGraph
+//! ```
+//!
+//! A [`TraProgram`] is a DAG of [`TraNode`]s over logical relations
+//! ([`RelId`]s), each carrying a [`RelSchema`] — `(bound, part, labels)`.
+//! [`from_plan`] builds the program; [`crate::tra::passes::PassManager`]
+//! rewrites it; [`TraProgram::emit_tasks`] lowers it to a concrete
+//! [`TaskGraph`]. With no passes applied, `emit_tasks` reproduces the
+//! direct lowering ([`crate::taskgraph::lower::lower_graph_reference`])
+//! **exactly** — same tasks, same ids, same deps, same bytes and flops —
+//! a property `tests/tra_program.rs` asserts differentially.
+//!
+//! ```
+//! use eindecomp::decomp::{plan_graph, PlannerConfig};
+//! use eindecomp::einsum::expr::EinSum;
+//! use eindecomp::einsum::graph::EinGraph;
+//! use eindecomp::einsum::label::labels;
+//! use eindecomp::tra::program::from_plan;
+//!
+//! let mut g = EinGraph::new();
+//! let a = g.input("A", vec![16, 16]);
+//! let b = g.input("B", vec![16, 16]);
+//! g.add("Z", EinSum::contraction(labels("i j"), labels("j k"), labels("i k")), vec![a, b])?;
+//! let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() })?;
+//!
+//! let prog = from_plan(&g, &plan)?;
+//! let tg = prog.emit_tasks()?;
+//! assert_eq!(tg.kernel_calls(), 4);
+//! assert!(prog.render().contains("Join"));
+//! # Ok::<(), eindecomp::Error>(())
+//! ```
+
+use crate::decomp::Plan;
+use crate::einsum::expr::{AggOp, EinSum};
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::einsum::label::LabelList;
+use crate::error::{Error, Result};
+use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
+use crate::tensor::index_space;
+use crate::tra::relation::{linearize, overlapping_tiles, tile_bytes, tile_offset, tile_size};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Index of a logical relation within its [`TraProgram`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RelId(pub usize);
+
+/// Schema of a logical tensor relation: the dense bound it tiles, the
+/// partitioning vector of its key space, and the labels the key
+/// coordinates range over (empty for graph inputs, whose axes are
+/// positional). For a [`TraOp::Join`] output the labels are the vertex's
+/// *unique* labels and `bound[i]` is the extent of label `labels[i]`;
+/// everywhere else labels/bound/part are parallel to the tensor's axes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RelSchema {
+    pub bound: Vec<usize>,
+    pub part: Vec<usize>,
+    pub labels: LabelList,
+}
+
+impl RelSchema {
+    /// Number of tuples, `prod(part)`.
+    pub fn num_tiles(&self) -> usize {
+        self.part.iter().product()
+    }
+
+    fn render(&self) -> String {
+        let axes: Vec<String> = if self.labels.len() == self.bound.len() {
+            self.labels
+                .iter()
+                .zip(self.bound.iter().zip(&self.part))
+                .map(|(l, (b, d))| format!("{l}:{b}/{d}"))
+                .collect()
+        } else {
+            self.bound
+                .iter()
+                .zip(&self.part)
+                .map(|(b, d)| format!("{b}/{d}"))
+                .collect()
+        };
+        format!("[{}]", axes.join(" "))
+    }
+}
+
+/// One relational operation of the IR (paper §4.2 / Eq. 5).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraOp {
+    /// `Π_d` over a graph input: the offline pre-partitioning. Emits one
+    /// `InputTile` task per tuple.
+    Partition { vertex: VertexId },
+    /// `Π_need` on an operand edge whose producer layout (`src`'s part)
+    /// differs from what the consumer requires. Emits one `Repart` task
+    /// per needed tile — except when the node is an *identity* (equal
+    /// parts forward tiles; see the `elide-identity-repart` pass) or
+    /// `alias` is set (a pure refinement; see `alias-refinement-repart`),
+    /// both of which emit **zero** tasks.
+    Repartition {
+        src: RelId,
+        producer: VertexId,
+        consumer: VertexId,
+        operand: usize,
+        /// Set by the `alias-refinement-repart` pass: every needed tile
+        /// is contained in exactly one producer tile, so consumers read
+        /// sub-views of the producer tiles directly.
+        alias: bool,
+    },
+    /// The Eq.-5 join: match tuples agreeing on shared labels and apply
+    /// the tile-local kernel. One `Kernel` task per tuple of `I(d)` (the
+    /// output schema's part). A single-input join is the unary map case.
+    Join {
+        vertex: VertexId,
+        inputs: Vec<RelId>,
+        flops_per_call: f64,
+    },
+    /// `(+)`-reduce groups of join tuples agreeing on the output labels.
+    /// `tree_arity: None` emits one serial-fold `Agg` task per group;
+    /// `Some(r)` (set by the `agg-tree` pass) emits a balanced `r`-ary
+    /// reduction tree in fixed member order, bounding every task's
+    /// fan-in by `r`.
+    Aggregate {
+        vertex: VertexId,
+        src: RelId,
+        agg: AggOp,
+        tree_arity: Option<usize>,
+    },
+    /// Pure key relabeling `I(d) -> I(d_Z)` when nothing aggregates:
+    /// the join tuples *are* the output tiles, reindexed row-major over
+    /// the output labels. Emits zero tasks.
+    ReKey { vertex: VertexId, src: RelId },
+    /// Marks a graph output: the executor assembles the relation into a
+    /// dense tensor after the run. Emits zero tasks.
+    Assemble { vertex: VertexId, src: RelId },
+}
+
+impl TraOp {
+    /// Kind tag for rendering and reports.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            TraOp::Partition { .. } => "Partition",
+            TraOp::Repartition { .. } => "Repartition",
+            TraOp::Join { .. } => "Join",
+            TraOp::Aggregate { .. } => "Aggregate",
+            TraOp::ReKey { .. } => "ReKey",
+            TraOp::Assemble { .. } => "Assemble",
+        }
+    }
+
+    /// Relations this op reads.
+    pub fn input_rels(&self) -> Vec<RelId> {
+        match self {
+            TraOp::Partition { .. } => vec![],
+            TraOp::Repartition { src, .. }
+            | TraOp::Aggregate { src, .. }
+            | TraOp::ReKey { src, .. }
+            | TraOp::Assemble { src, .. } => vec![*src],
+            TraOp::Join { inputs, .. } => inputs.clone(),
+        }
+    }
+
+    fn input_rels_mut(&mut self) -> Vec<&mut RelId> {
+        match self {
+            TraOp::Partition { .. } => vec![],
+            TraOp::Repartition { src, .. }
+            | TraOp::Aggregate { src, .. }
+            | TraOp::ReKey { src, .. }
+            | TraOp::Assemble { src, .. } => vec![src],
+            TraOp::Join { inputs, .. } => inputs.iter_mut().collect(),
+        }
+    }
+}
+
+/// A node of the program: the op, its output relation, and (private)
+/// projection maps frozen at build time so [`TraProgram::emit_tasks`]
+/// needs no access to the source graph. `zproj[j]` is the position of
+/// the j-th output label within the vertex's unique labels; `oproj[o][j]`
+/// the position of operand `o`'s j-th label. Positions stay valid under
+/// pass rewiring because passes never change a vertex's label lists.
+#[derive(Clone, Debug)]
+pub struct TraNode {
+    pub op: TraOp,
+    pub out: RelId,
+    pub(crate) name: String,
+    pub(crate) zproj: Vec<usize>,
+    pub(crate) oproj: Vec<Vec<usize>>,
+}
+
+/// A typed TRA program: nodes in topological order over logical
+/// relations. Built by [`from_plan`], optimized by
+/// [`crate::tra::passes::PassManager`], lowered by
+/// [`Self::emit_tasks`].
+#[derive(Clone, Debug, Default)]
+pub struct TraProgram {
+    nodes: Vec<TraNode>,
+    rels: Vec<RelSchema>,
+}
+
+/// Positions of `sub`'s labels within `full`.
+fn proj_indices(sub: &LabelList, full: &LabelList) -> Result<Vec<usize>> {
+    sub.iter()
+        .map(|l| {
+            full.iter().position(|m| m == l).ok_or_else(|| {
+                Error::TaskGraph(format!("label {l} missing from unique labels (internal)"))
+            })
+        })
+        .collect()
+}
+
+/// True when `need` is a pure refinement of `have` under balanced tiling:
+/// every needed tile lies inside exactly one producer tile, in every
+/// dimension — the precondition for the `alias-refinement-repart` pass
+/// (the same containment fact [`crate::tra::ops::repartition_with_stats`]
+/// exploits to alias tiles at zero bytes).
+pub fn is_refinement(bound: &[usize], have: &[usize], need: &[usize]) -> bool {
+    for dim in 0..bound.len() {
+        for i in 0..need[dim] {
+            let origin = tile_offset(bound[dim], need[dim], i);
+            let len = tile_size(bound[dim], need[dim], i);
+            let (lo, hi) = overlapping_tiles(bound[dim], have[dim], origin, len);
+            if lo != hi {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Rewrite a planned EinGraph into its TRA program (Eq. 5, per vertex:
+/// `Π` per operand → `Join` → `Aggregate`-or-`ReKey`), with an `Assemble`
+/// marking each graph output. Repartition nodes are emitted on **every**
+/// operand edge — including identity ones, which the IR shows explicitly
+/// and [`TraProgram::emit_tasks`] forwards without tasks (the
+/// `elide-identity-repart` pass removes them from the listing).
+pub fn from_plan(g: &EinGraph, plan: &Plan) -> Result<TraProgram> {
+    let mut p = TraProgram::default();
+    let mut rel_of: Vec<Option<RelId>> = vec![None; g.len()];
+    for vert in g.vertices() {
+        let v = vert.id;
+        match &vert.op {
+            EinSum::Input => {
+                let part = plan
+                    .input_parts
+                    .get(&v)
+                    .cloned()
+                    .unwrap_or_else(|| vec![1; vert.bound.len()]);
+                let rel = p.push_rel(RelSchema {
+                    bound: vert.bound.clone(),
+                    part,
+                    labels: vec![],
+                });
+                p.nodes.push(TraNode {
+                    op: TraOp::Partition { vertex: v },
+                    out: rel,
+                    name: vert.name.clone(),
+                    zproj: vec![],
+                    oproj: vec![],
+                });
+                rel_of[v.0] = Some(rel);
+            }
+            op => {
+                let d = plan
+                    .parts
+                    .get(&v)
+                    .ok_or_else(|| Error::TaskGraph(format!("vertex {} unplanned", vert.name)))?;
+                let uniq = op.unique_labels();
+                if d.len() != uniq.len() {
+                    return Err(Error::TaskGraph(format!(
+                        "vertex {}: d {:?} not parallel to unique labels {uniq:?}",
+                        vert.name, d
+                    )));
+                }
+                let lz = op.lz().expect("non-input vertex has output labels");
+                let zproj = proj_indices(lz, &uniq)?;
+                // Per-unique-label extents (the join relation's bound).
+                let mut uext = vec![0usize; uniq.len()];
+                for (o, lo) in op.operand_labels().iter().enumerate() {
+                    let cb = &g.vertex(vert.inputs[o]).bound;
+                    for (j, l) in lo.iter().enumerate() {
+                        let ui = uniq.iter().position(|m| m == l).expect("operand label");
+                        uext[ui] = cb[j];
+                    }
+                }
+                let mut in_rels = Vec::new();
+                let mut oproj = Vec::new();
+                for (o, lo) in op.operand_labels().iter().enumerate() {
+                    let c = vert.inputs[o];
+                    let opj = proj_indices(lo, &uniq)?;
+                    let need: Vec<usize> = opj.iter().map(|&i| d[i]).collect();
+                    let src = rel_of[c.0].expect("inputs precede consumers");
+                    let rel = p.push_rel(RelSchema {
+                        bound: p.rels[src.0].bound.clone(),
+                        part: need,
+                        labels: (*lo).clone(),
+                    });
+                    p.nodes.push(TraNode {
+                        op: TraOp::Repartition {
+                            src,
+                            producer: c,
+                            consumer: v,
+                            operand: o,
+                            alias: false,
+                        },
+                        out: rel,
+                        name: vert.name.clone(),
+                        zproj: vec![],
+                        oproj: vec![],
+                    });
+                    in_rels.push(rel);
+                    oproj.push(opj);
+                }
+                let in_bounds: Vec<&[usize]> = vert
+                    .inputs
+                    .iter()
+                    .map(|&i| g.vertex(i).bound.as_slice())
+                    .collect();
+                let total_flops = op.flops(&in_bounds)?;
+                let n_calls: usize = d.iter().product();
+                let flops_per_call = total_flops / n_calls as f64;
+                let jrel = p.push_rel(RelSchema {
+                    bound: uext,
+                    part: d.clone(),
+                    labels: uniq.clone(),
+                });
+                p.nodes.push(TraNode {
+                    op: TraOp::Join {
+                        vertex: v,
+                        inputs: in_rels,
+                        flops_per_call,
+                    },
+                    out: jrel,
+                    name: vert.name.clone(),
+                    zproj: zproj.clone(),
+                    oproj,
+                });
+                let lagg = op.lagg();
+                let n_agg: usize = crate::einsum::label::project(d, &lagg, &uniq)
+                    .iter()
+                    .product();
+                let dz: Vec<usize> = zproj.iter().map(|&i| d[i]).collect();
+                let orel = p.push_rel(RelSchema {
+                    bound: vert.bound.clone(),
+                    part: dz,
+                    labels: lz.clone(),
+                });
+                let agg = match op {
+                    EinSum::Unary { agg, .. } | EinSum::Binary { agg, .. } => *agg,
+                    EinSum::Input => unreachable!("matched above"),
+                };
+                let node_op = if n_agg > 1 {
+                    TraOp::Aggregate {
+                        vertex: v,
+                        src: jrel,
+                        agg,
+                        tree_arity: None,
+                    }
+                } else {
+                    TraOp::ReKey { vertex: v, src: jrel }
+                };
+                p.nodes.push(TraNode {
+                    op: node_op,
+                    out: orel,
+                    name: vert.name.clone(),
+                    zproj,
+                    oproj: vec![],
+                });
+                rel_of[v.0] = Some(orel);
+            }
+        }
+    }
+    for out in g.outputs() {
+        let src = rel_of[out.0].expect("all vertices lowered");
+        let s = p.rels[src.0].clone();
+        let arel = p.push_rel(RelSchema {
+            bound: s.bound.clone(),
+            part: vec![1; s.bound.len()],
+            labels: s.labels,
+        });
+        p.nodes.push(TraNode {
+            op: TraOp::Assemble { vertex: out, src },
+            out: arel,
+            name: g.vertex(out).name.clone(),
+            zproj: vec![],
+            oproj: vec![],
+        });
+    }
+    Ok(p)
+}
+
+/// How a relation's tiles are reachable during emission: either as
+/// materialized tasks (one per tile, row-major key order), or as an
+/// alias of a coarser relation's tasks (the `alias-refinement-repart`
+/// rewrite — consumers resolve each needed tile to its single containing
+/// producer tile).
+enum Provider {
+    Direct(Vec<TaskId>),
+    Aliased { tiles: Vec<TaskId>, have: Vec<usize> },
+}
+
+impl TraProgram {
+    fn push_rel(&mut self, s: RelSchema) -> RelId {
+        let id = RelId(self.rels.len());
+        self.rels.push(s);
+        id
+    }
+
+    /// Nodes in topological order.
+    pub fn nodes(&self) -> &[TraNode] {
+        &self.nodes
+    }
+
+    /// Schema of a relation.
+    pub fn schema(&self, r: RelId) -> &RelSchema {
+        &self.rels[r.0]
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Lower the program to a concrete, unplaced [`TaskGraph`].
+    ///
+    /// On an unoptimized program this reproduces the direct lowering
+    /// exactly (same task ids, deps, bytes, flops — the differential
+    /// guarantee `tests/tra_program.rs` pins); pass rewrites change only
+    /// what their contracts state: identity/aliased repartitions emit no
+    /// tasks, tree aggregations emit their reduction levels in fixed
+    /// member order.
+    pub fn emit_tasks(&self) -> Result<TaskGraph> {
+        let mut tg = TaskGraph::default();
+        let mut prov: Vec<Option<Provider>> = (0..self.rels.len()).map(|_| None).collect();
+        for node in &self.nodes {
+            let out_s = &self.rels[node.out.0];
+            match &node.op {
+                TraOp::Partition { vertex } => {
+                    let mut outs = Vec::new();
+                    for key in index_space(&out_s.part) {
+                        let bytes = tile_bytes(&out_s.bound, &out_s.part, &key);
+                        outs.push(tg.push_task(
+                            TaskKind::InputTile { vertex: *vertex, key },
+                            vec![],
+                            bytes,
+                            0.0,
+                        ));
+                    }
+                    tg.vertex_outputs.insert(*vertex, outs.clone());
+                    tg.vertex_out_part.insert(*vertex, out_s.part.clone());
+                    prov[node.out.0] = Some(Provider::Direct(outs));
+                }
+                TraOp::Repartition {
+                    src,
+                    producer,
+                    consumer,
+                    operand,
+                    alias,
+                } => {
+                    let have = self.rels[src.0].part.clone();
+                    let need = &out_s.part;
+                    let src_tiles = match prov[src.0].as_ref() {
+                        Some(Provider::Direct(t)) => t.clone(),
+                        _ => {
+                            return Err(Error::TaskGraph(
+                                "repartition source is not a materialized relation (internal)"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    if have == *need {
+                        // Identity Π: forward tiles, zero tasks (the
+                        // inline `have == need` check of the direct
+                        // lowering; the elide pass removes the node).
+                        prov[node.out.0] = Some(Provider::Direct(src_tiles));
+                        continue;
+                    }
+                    if *alias {
+                        prov[node.out.0] = Some(Provider::Aliased {
+                            tiles: src_tiles,
+                            have,
+                        });
+                        continue;
+                    }
+                    let cb = &out_s.bound;
+                    let mut tiles = Vec::new();
+                    for key in index_space(need) {
+                        let ranges: Vec<(usize, usize)> = key
+                            .iter()
+                            .enumerate()
+                            .map(|(dim, &k)| {
+                                let origin = tile_offset(cb[dim], need[dim], k);
+                                let len = tile_size(cb[dim], need[dim], k);
+                                overlapping_tiles(cb[dim], have[dim], origin, len)
+                            })
+                            .collect();
+                        let mut deps = Vec::new();
+                        let range_dims: Vec<usize> =
+                            ranges.iter().map(|(lo, hi)| hi - lo + 1).collect();
+                        for rk in index_space(&range_dims) {
+                            let pkey: Vec<usize> = rk
+                                .iter()
+                                .zip(&ranges)
+                                .map(|(&r, &(lo, _))| lo + r)
+                                .collect();
+                            deps.push(src_tiles[linearize(&pkey, &have)]);
+                        }
+                        let bytes = tile_bytes(cb, need, &key);
+                        tiles.push(tg.push_task(
+                            TaskKind::Repart {
+                                producer: *producer,
+                                consumer: *consumer,
+                                operand: *operand,
+                                key,
+                            },
+                            deps,
+                            bytes,
+                            0.0,
+                        ));
+                    }
+                    prov[node.out.0] = Some(Provider::Direct(tiles));
+                }
+                TraOp::Join {
+                    vertex,
+                    inputs,
+                    flops_per_call,
+                } => {
+                    let d = &out_s.part;
+                    let bz: Vec<usize> = node.zproj.iter().map(|&i| out_s.bound[i]).collect();
+                    let dz: Vec<usize> = node.zproj.iter().map(|&i| d[i]).collect();
+                    let mut kernels = Vec::new();
+                    for key in index_space(d) {
+                        let mut deps = Vec::new();
+                        for (o, rel) in inputs.iter().enumerate() {
+                            let okey: Vec<usize> = node.oproj[o].iter().map(|&i| key[i]).collect();
+                            let rs = &self.rels[rel.0];
+                            match prov[rel.0].as_ref() {
+                                Some(Provider::Direct(tiles)) => {
+                                    deps.push(tiles[linearize(&okey, &rs.part)]);
+                                }
+                                Some(Provider::Aliased { tiles, have }) => {
+                                    tg.aliased_kernel_deps = true;
+                                    let mut pkey = Vec::with_capacity(okey.len());
+                                    for (dim, &k) in okey.iter().enumerate() {
+                                        let origin = tile_offset(rs.bound[dim], rs.part[dim], k);
+                                        let len = tile_size(rs.bound[dim], rs.part[dim], k);
+                                        let b = rs.bound[dim];
+                                        let (lo, hi) =
+                                            overlapping_tiles(b, have[dim], origin, len);
+                                        if lo != hi {
+                                            return Err(Error::TaskGraph(
+                                                "aliased repartition is not a refinement \
+                                                 (internal)"
+                                                    .into(),
+                                            ));
+                                        }
+                                        pkey.push(lo);
+                                    }
+                                    deps.push(tiles[linearize(&pkey, have)]);
+                                }
+                                None => {
+                                    return Err(Error::TaskGraph(
+                                        "join input relation not yet emitted (internal)".into(),
+                                    ))
+                                }
+                            }
+                        }
+                        let zkey: Vec<usize> = node.zproj.iter().map(|&i| key[i]).collect();
+                        let bytes = tile_bytes(&bz, &dz, &zkey);
+                        kernels.push(tg.push_task(
+                            TaskKind::Kernel { vertex: *vertex, key },
+                            deps,
+                            bytes,
+                            *flops_per_call,
+                        ));
+                    }
+                    prov[node.out.0] = Some(Provider::Direct(kernels));
+                }
+                TraOp::Aggregate {
+                    vertex,
+                    src,
+                    tree_arity,
+                    ..
+                } => {
+                    let d = self.rels[src.0].part.clone();
+                    let kernels = match prov[src.0].as_ref() {
+                        Some(Provider::Direct(t)) => t.clone(),
+                        _ => {
+                            return Err(Error::TaskGraph(
+                                "aggregate source is not a materialized relation (internal)"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    let dz = &out_s.part;
+                    let bz = &out_s.bound;
+                    let mut groups: HashMap<Vec<usize>, Vec<TaskId>> = HashMap::new();
+                    for (key, &tid) in index_space(&d).zip(&kernels) {
+                        let zkey: Vec<usize> = node.zproj.iter().map(|&i| key[i]).collect();
+                        groups.entry(zkey).or_default().push(tid);
+                    }
+                    let mut outs = Vec::new();
+                    for zkey in index_space(dz) {
+                        let members = groups.remove(&zkey).ok_or_else(|| {
+                            Error::TaskGraph(format!("missing agg group {zkey:?}"))
+                        })?;
+                        let bytes = tile_bytes(bz, dz, &zkey);
+                        let elems = (bytes / 4) as f64;
+                        let root = match tree_arity {
+                            Some(r) if members.len() > *r => {
+                                // Balanced r-ary reduction tree, members
+                                // chunked in fixed dep order level by
+                                // level: deterministic shape, fan-in <= r.
+                                let mut level = members;
+                                loop {
+                                    let mut next = Vec::with_capacity(level.len().div_ceil(*r));
+                                    for chunk in level.chunks(*r) {
+                                        if chunk.len() == 1 {
+                                            // A remainder of one needs no
+                                            // fold: carry the member up.
+                                            next.push(chunk[0]);
+                                            continue;
+                                        }
+                                        let flops = elems * (chunk.len() as f64 - 1.0);
+                                        next.push(tg.push_task(
+                                            TaskKind::Agg {
+                                                vertex: *vertex,
+                                                key: zkey.clone(),
+                                            },
+                                            chunk.to_vec(),
+                                            bytes,
+                                            flops,
+                                        ));
+                                    }
+                                    if next.len() == 1 {
+                                        break next[0];
+                                    }
+                                    level = next;
+                                }
+                            }
+                            _ => {
+                                let flops = elems * (members.len() as f64 - 1.0);
+                                tg.push_task(
+                                    TaskKind::Agg { vertex: *vertex, key: zkey },
+                                    members,
+                                    bytes,
+                                    flops,
+                                )
+                            }
+                        };
+                        outs.push(root);
+                    }
+                    tg.vertex_outputs.insert(*vertex, outs.clone());
+                    tg.vertex_out_part.insert(*vertex, dz.clone());
+                    prov[node.out.0] = Some(Provider::Direct(outs));
+                }
+                TraOp::ReKey { vertex, src } => {
+                    let d = self.rels[src.0].part.clone();
+                    let kernels = match prov[src.0].as_ref() {
+                        Some(Provider::Direct(t)) => t.clone(),
+                        _ => {
+                            return Err(Error::TaskGraph(
+                                "rekey source is not a materialized relation (internal)".into(),
+                            ))
+                        }
+                    };
+                    let dz = &out_s.part;
+                    let mut outs = vec![TaskId(usize::MAX); kernels.len()];
+                    for (key, &tid) in index_space(&d).zip(&kernels) {
+                        let zkey: Vec<usize> = node.zproj.iter().map(|&i| key[i]).collect();
+                        outs[linearize(&zkey, dz)] = tid;
+                    }
+                    debug_assert!(outs.iter().all(|t| t.0 != usize::MAX));
+                    tg.vertex_outputs.insert(*vertex, outs.clone());
+                    tg.vertex_out_part.insert(*vertex, dz.clone());
+                    prov[node.out.0] = Some(Provider::Direct(outs));
+                }
+                TraOp::Assemble { .. } => {
+                    // Assembly is the executor's job (dense outputs are
+                    // materialized after the run); the node only marks
+                    // the relation as externally observed.
+                }
+            }
+        }
+        Ok(tg)
+    }
+
+    /// Pretty-print the program: one line per node with its output
+    /// relation's schema — the listing `Session::explain` and the CLI
+    /// `explain` subcommand show.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "tra program: {} nodes over {} relations",
+            self.nodes.len(),
+            self.rels.len()
+        );
+        for (i, node) in self.nodes.iter().enumerate() {
+            let ins = node
+                .op
+                .input_rels()
+                .iter()
+                .map(|r| format!("r{}", r.0))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let detail = match &node.op {
+                TraOp::Partition { .. } => String::new(),
+                TraOp::Repartition { src, operand, alias, .. } => {
+                    let tag = if self.rels[src.0].part == self.rels[node.out.0].part {
+                        " identity"
+                    } else if *alias {
+                        " alias"
+                    } else {
+                        ""
+                    };
+                    format!(" op{operand}{tag}")
+                }
+                TraOp::Join { flops_per_call, .. } => {
+                    format!(
+                        " {} calls, {:.3} Mflop/call",
+                        self.rels[node.out.0].num_tiles(),
+                        flops_per_call / 1e6
+                    )
+                }
+                TraOp::Aggregate {
+                    src,
+                    agg,
+                    tree_arity,
+                    ..
+                } => {
+                    let group =
+                        self.rels[src.0].num_tiles() / self.rels[node.out.0].num_tiles().max(1);
+                    match tree_arity {
+                        Some(r) => format!(" {agg:?} group={group} tree(arity {r})"),
+                        None => format!(" {agg:?} group={group} serial-fold"),
+                    }
+                }
+                TraOp::ReKey { .. } | TraOp::Assemble { .. } => String::new(),
+            };
+            let _ = writeln!(
+                s,
+                "  %{i:<3} {:<11} {:<12} ({ins}){detail} -> r{} {}",
+                node.op.kind_name(),
+                node.name,
+                node.out.0,
+                self.rels[node.out.0].render()
+            );
+        }
+        s
+    }
+
+    // ----- pass rewrites (driven by `tra::passes::PassManager`) --------
+
+    /// Remove identity `Repartition` nodes (equal source and target
+    /// parts), re-pointing consumers at the source relation. Emission
+    /// already forwards identity Π's without tasks, so this changes only
+    /// the IR listing, never the task graph.
+    pub(crate) fn elide_identity_reparts(&mut self) -> Vec<String> {
+        let mut notes = Vec::new();
+        let mut redirect: Vec<usize> = (0..self.rels.len()).collect();
+        let mut dead = vec![false; self.nodes.len()];
+        for (ni, node) in self.nodes.iter().enumerate() {
+            if let TraOp::Repartition { src, operand, .. } = &node.op {
+                if self.rels[src.0].part == self.rels[node.out.0].part {
+                    redirect[node.out.0] = src.0;
+                    dead[ni] = true;
+                    notes.push(format!("{}: operand {operand} identity Π elided", node.name));
+                }
+            }
+        }
+        if notes.is_empty() {
+            return notes;
+        }
+        // One hop suffices: repartition sources are vertex relations,
+        // never other repartitions.
+        for node in &mut self.nodes {
+            for r in node.op.input_rels_mut() {
+                r.0 = redirect[r.0];
+            }
+        }
+        let mut i = 0;
+        self.nodes.retain(|_| {
+            let keep = !dead[i];
+            i += 1;
+            keep
+        });
+        notes
+    }
+
+    /// Mark refinement `Repartition`s as aliases: when every needed tile
+    /// is contained in exactly one producer tile, consumers read
+    /// sub-views of the producer tiles directly and the repartition
+    /// emits **zero** tasks (the IR form of the data-plane aliasing in
+    /// [`crate::tra::ops::repartition_with_stats`]). Execution stays
+    /// bitwise-identical: the kernel slices the same sub-view the
+    /// repart task would have produced. The modeled byte ledger gets
+    /// coarser, though — a cross-worker consumer is charged the whole
+    /// producer tile rather than its sub-tile — which is one reason the
+    /// pass is opt-in (`all`), not in the default `safe` set.
+    pub(crate) fn alias_refinement_reparts(&mut self) -> Vec<String> {
+        let mut notes = Vec::new();
+        for ni in 0..self.nodes.len() {
+            let (src, out) = match &self.nodes[ni].op {
+                TraOp::Repartition { src, alias: false, .. } => (*src, self.nodes[ni].out),
+                _ => continue,
+            };
+            let have = &self.rels[src.0].part;
+            let need = &self.rels[out.0].part;
+            if have == need || !is_refinement(&self.rels[out.0].bound, have, need) {
+                continue;
+            }
+            let note = format!(
+                "{}: Π {have:?} -> {need:?} is a refinement, aliased ({} tasks dropped)",
+                self.nodes[ni].name,
+                self.rels[out.0].num_tiles()
+            );
+            if let TraOp::Repartition { alias, .. } = &mut self.nodes[ni].op {
+                *alias = true;
+            }
+            notes.push(note);
+        }
+        notes
+    }
+
+    /// Rewrite every serial-fold `Aggregate` whose group exceeds `arity`
+    /// members into a balanced `arity`-ary reduction tree, bounding any
+    /// task's fan-in by `arity`. Deterministic (fixed member order) but
+    /// — for non-exact `(+)` like float `Sum` — associates differently
+    /// than the serial fold, so results are bit-different (still within
+    /// the usual tolerance of the dense reference).
+    pub(crate) fn agg_tree(&mut self, arity: usize) -> Vec<String> {
+        let arity = arity.max(2);
+        let mut notes = Vec::new();
+        for ni in 0..self.nodes.len() {
+            let (src, out) = match &self.nodes[ni].op {
+                TraOp::Aggregate {
+                    src,
+                    tree_arity: None,
+                    ..
+                } => (*src, self.nodes[ni].out),
+                _ => continue,
+            };
+            let group = self.rels[src.0].num_tiles() / self.rels[out.0].num_tiles().max(1);
+            if group <= arity {
+                continue;
+            }
+            let mut depth = 0usize;
+            let mut n = group;
+            while n > 1 {
+                n = n.div_ceil(arity);
+                depth += 1;
+            }
+            let note = format!(
+                "{}: {group}-way serial fold -> depth-{depth} {arity}-ary tree",
+                self.nodes[ni].name
+            );
+            if let TraOp::Aggregate { tree_arity, .. } = &mut self.nodes[ni].op {
+                *tree_arity = Some(arity);
+            }
+            notes.push(note);
+        }
+        notes
+    }
+
+    /// Remove nodes whose output relation nothing consumes and that are
+    /// not `Assemble` markers, iterating to a fixpoint. `from_plan`
+    /// programs never contain dead relations (an unconsumed vertex is by
+    /// definition a graph output and gets an `Assemble`), so this is a
+    /// safety net for pass-produced orphans and hand-built programs.
+    pub(crate) fn dead_rel_elim(&mut self) -> Vec<String> {
+        let mut notes = Vec::new();
+        loop {
+            let mut used = vec![false; self.rels.len()];
+            for node in &self.nodes {
+                for r in node.op.input_rels() {
+                    used[r.0] = true;
+                }
+            }
+            let dead: Vec<bool> = self
+                .nodes
+                .iter()
+                .map(|n| !matches!(n.op, TraOp::Assemble { .. }) && !used[n.out.0])
+                .collect();
+            if !dead.iter().any(|&d| d) {
+                break;
+            }
+            for (ni, node) in self.nodes.iter().enumerate() {
+                if dead[ni] {
+                    notes.push(format!(
+                        "{}: dead {} removed",
+                        node.name,
+                        node.op.kind_name()
+                    ));
+                }
+            }
+            let mut i = 0;
+            self.nodes.retain(|_| {
+                let keep = !dead[i];
+                i += 1;
+                keep
+            });
+        }
+        notes
+    }
+
+    /// Test support: append a node verbatim (used to exercise
+    /// `dead-rel-elim` on programs `from_plan` cannot produce).
+    #[cfg(test)]
+    pub(crate) fn push_node_for_test(&mut self, op: TraOp, out_schema: RelSchema, name: &str) {
+        let out = self.push_rel(out_schema);
+        self.nodes.push(TraNode {
+            op,
+            out,
+            name: name.into(),
+            zproj: vec![],
+            oproj: vec![],
+        });
+    }
+}
+
+impl std::fmt::Display for TraProgram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::label::labels;
+
+    fn matmul_graph(s: usize) -> EinGraph {
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![s, s]);
+        let b = g.input("B", vec![s, s]);
+        g.add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+        g
+    }
+
+    fn plan_for(g: &EinGraph, d: Vec<usize>) -> Plan {
+        let z = g.by_name("Z").unwrap();
+        let mut plan = Plan::default();
+        plan.parts.insert(z, d);
+        plan.finalize_inputs(g);
+        plan
+    }
+
+    #[test]
+    fn from_plan_builds_eq5_shape() {
+        let g = matmul_graph(8);
+        let prog = from_plan(&g, &plan_for(&g, vec![2, 2, 4])).unwrap();
+        // 2 Partition + 2 Repartition (identity) + Join + Aggregate + Assemble
+        let kinds: Vec<&str> = prog.nodes().iter().map(|n| n.op.kind_name()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "Partition",
+                "Partition",
+                "Repartition",
+                "Repartition",
+                "Join",
+                "Aggregate",
+                "Assemble"
+            ]
+        );
+        let join = &prog.nodes()[4];
+        assert_eq!(prog.schema(join.out).part, vec![2, 2, 4]);
+        assert_eq!(prog.schema(join.out).labels, labels("i j k"));
+        let agg = &prog.nodes()[5];
+        assert_eq!(prog.schema(agg.out).part, vec![2, 4]);
+        assert_eq!(prog.schema(agg.out).labels, labels("i k"));
+    }
+
+    #[test]
+    fn join_only_plans_use_rekey() {
+        let g = matmul_graph(8);
+        let prog = from_plan(&g, &plan_for(&g, vec![4, 1, 4])).unwrap();
+        assert!(prog
+            .nodes()
+            .iter()
+            .any(|n| matches!(n.op, TraOp::ReKey { .. })));
+        assert!(!prog
+            .nodes()
+            .iter()
+            .any(|n| matches!(n.op, TraOp::Aggregate { .. })));
+    }
+
+    #[test]
+    fn emit_matches_figure2_counts() {
+        let g = matmul_graph(8);
+        let tg = from_plan(&g, &plan_for(&g, vec![2, 2, 4]))
+            .unwrap()
+            .emit_tasks()
+            .unwrap();
+        assert_eq!(tg.kernel_calls(), 16);
+        let aggs = tg
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Agg { .. }))
+            .count();
+        assert_eq!(aggs, 8);
+    }
+
+    #[test]
+    fn identity_reparts_forward_without_tasks_and_elide() {
+        let g = matmul_graph(8);
+        let mut prog = from_plan(&g, &plan_for(&g, vec![2, 2, 4])).unwrap();
+        let before = prog.emit_tasks().unwrap();
+        assert!(!before
+            .tasks
+            .iter()
+            .any(|t| matches!(t.kind, TaskKind::Repart { .. })));
+        let notes = prog.elide_identity_reparts();
+        assert_eq!(notes.len(), 2);
+        assert!(!prog
+            .nodes()
+            .iter()
+            .any(|n| matches!(n.op, TraOp::Repartition { .. })));
+        let after = prog.emit_tasks().unwrap();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn refinement_detection() {
+        assert!(is_refinement(&[8, 8], &[2, 2], &[4, 4]));
+        assert!(is_refinement(&[8, 8], &[2, 2], &[2, 4]));
+        assert!(is_refinement(&[7], &[1], &[3]));
+        assert!(!is_refinement(&[8, 8], &[4, 4], &[2, 2])); // coarsening
+        assert!(!is_refinement(&[8], &[3], &[2])); // misaligned
+        // uneven balanced tiling: [2,1] tiles of 3 vs [1,1,1] — tile 1 of
+        // need=[3] is [1,2) inside have-tile 0 ([0,2)): refinement.
+        assert!(is_refinement(&[3], &[2], &[3]));
+    }
+
+    #[test]
+    fn agg_tree_rewrites_large_groups_only() {
+        let g = matmul_graph(16);
+        let mut prog = from_plan(&g, &plan_for(&g, vec![1, 8, 2])).unwrap();
+        let notes = prog.agg_tree(4);
+        assert_eq!(notes.len(), 1, "{notes:?}");
+        let tg = prog.emit_tasks().unwrap();
+        for t in &tg.tasks {
+            if matches!(t.kind, TaskKind::Agg { .. }) {
+                assert!(t.deps.len() <= 4, "fan-in {} > arity", t.deps.len());
+            }
+        }
+        // group of 2 with arity 4: untouched
+        let mut small = from_plan(&g, &plan_for(&g, vec![2, 2, 4])).unwrap();
+        assert!(small.agg_tree(4).is_empty());
+    }
+
+    #[test]
+    fn dead_rel_elim_is_a_noop_on_from_plan_programs() {
+        let g = matmul_graph(8);
+        let mut prog = from_plan(&g, &plan_for(&g, vec![2, 2, 4])).unwrap();
+        assert!(prog.dead_rel_elim().is_empty());
+        // ... and removes a hand-planted orphan chain to fixpoint
+        let n = prog.len();
+        let orphan_src = RelId(prog.rels.len());
+        prog.push_node_for_test(
+            TraOp::Partition {
+                vertex: VertexId(0),
+            },
+            RelSchema {
+                bound: vec![4],
+                part: vec![1],
+                labels: vec![],
+            },
+            "orphan-base",
+        );
+        prog.push_node_for_test(
+            TraOp::ReKey {
+                vertex: VertexId(0),
+                src: orphan_src,
+            },
+            RelSchema {
+                bound: vec![4],
+                part: vec![1],
+                labels: vec![],
+            },
+            "orphan-user",
+        );
+        let notes = prog.dead_rel_elim();
+        assert_eq!(notes.len(), 2, "{notes:?}");
+        assert_eq!(prog.len(), n);
+    }
+
+    #[test]
+    fn render_lists_every_node_with_schemas() {
+        let g = matmul_graph(8);
+        let prog = from_plan(&g, &plan_for(&g, vec![2, 2, 4])).unwrap();
+        let text = prog.render();
+        for kind in ["Partition", "Repartition", "Join", "Aggregate", "Assemble"] {
+            assert!(text.contains(kind), "missing {kind} in:\n{text}");
+        }
+        assert!(text.contains("identity"));
+        assert!(text.contains("i:8/2"));
+        assert!(text.contains("group=2"));
+    }
+}

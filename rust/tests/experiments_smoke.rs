@@ -57,7 +57,7 @@ fn fig7_scalapack_proxy_trails() {
     let mut tg = cluster.lower(&chain.graph, &sqrt).unwrap();
     for t in tg.tasks.iter_mut() {
         if matches!(t.kind, TaskKind::InputTile { .. }) {
-            t.worker = 0;
+            t.worker = Some(0);
         }
     }
     let scal = cluster.model(&tg);
@@ -81,7 +81,7 @@ fn fig9_data_parallel_collapses() {
     for t in tg.tasks.iter_mut() {
         if let TaskKind::InputTile { vertex, .. } = &t.kind {
             if step.graph.vertex(*vertex).name.starts_with('W') {
-                t.worker = 0;
+                t.worker = Some(0);
             }
         }
     }

@@ -79,6 +79,7 @@ fn check_graph(name: &str, g: &EinGraph) {
             p,
             mode,
             off_path_cost: false,
+            ..Default::default()
         };
         let exact = plan_graph(g, &cfg(PlanMode::ExactTree)).unwrap();
         assert!(

@@ -289,11 +289,21 @@ fn prop_planner_never_worse_than_greedy_on_trees() {
         }
         let exact = plan_graph(
             &g,
-            &PlannerConfig { p: 8, mode: PlanMode::ExactTree, off_path_cost: false },
+            &PlannerConfig {
+                p: 8,
+                mode: PlanMode::ExactTree,
+                off_path_cost: false,
+                ..Default::default()
+            },
         );
         let greedy = plan_graph(
             &g,
-            &PlannerConfig { p: 8, mode: PlanMode::Greedy, off_path_cost: false },
+            &PlannerConfig {
+                p: 8,
+                mode: PlanMode::Greedy,
+                off_path_cost: false,
+                ..Default::default()
+            },
         );
         if let (Ok(e), Ok(gr)) = (exact, greedy) {
             assert!(

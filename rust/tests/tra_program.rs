@@ -1,0 +1,350 @@
+//! The TRA-IR differential and pass-behavior suite.
+//!
+//! Locks in the redesign's contracts:
+//!
+//! * `from_plan(...).emit_tasks()` with **no passes** reproduces the
+//!   frozen direct lowering (`lower_graph_reference`) exactly — same
+//!   tasks, deps, bytes, flops — across matchain / FFNN / attention
+//!   (LLaMA block) at p ∈ {2, 4}, and the `safe` default pipeline is
+//!   task-graph-neutral on top of that;
+//! * `alias-refinement-repart` drops refinement-repartition task counts
+//!   to zero while execution stays **bitwise**-identical;
+//! * `agg-tree` bounds every aggregation task's fan-in by the tree
+//!   arity, deterministically, within tolerance of the dense reference;
+//! * the serving surface reports the applied passes (`RunReport` JSON,
+//!   `Session::explain`).
+
+use eindecomp::coordinator::driver::DriverConfig;
+use eindecomp::coordinator::session::Session;
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::decomp::Plan;
+use eindecomp::einsum::expr::EinSum;
+use eindecomp::einsum::graph::EinGraph;
+use eindecomp::einsum::label::labels;
+use eindecomp::models::ffnn::ffnn_step;
+use eindecomp::models::llama::{llama_graph, LlamaConfig};
+use eindecomp::models::matchain::chain_graph;
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::cluster::{Cluster, ExecMode};
+use eindecomp::sim::NetworkProfile;
+use eindecomp::taskgraph::lower::{lower_graph, lower_graph_reference};
+use eindecomp::taskgraph::placement::{place, Policy};
+use eindecomp::taskgraph::TaskKind;
+use eindecomp::tensor::Tensor;
+use eindecomp::tra::passes::{PassManager, PassSelector};
+use eindecomp::tra::program::from_plan;
+use std::collections::HashMap;
+
+fn workload_graphs() -> Vec<(String, EinGraph)> {
+    let cfg = LlamaConfig {
+        layers: 1,
+        batch: 2,
+        seq: 16,
+        model_dim: 32,
+        heads: 2,
+        head_dim: 16,
+        ffn_dim: 64,
+    };
+    vec![
+        ("matchain".into(), chain_graph(24, false).unwrap().graph),
+        ("matchain-skewed".into(), chain_graph(20, true).unwrap().graph),
+        ("ffnn".into(), ffnn_step(32, 48, 24, 8).unwrap().graph),
+        ("attention-block".into(), llama_graph(&cfg).unwrap().graph),
+    ]
+}
+
+/// Acceptance: with all passes disabled, the IR path reproduces the
+/// direct lowering exactly over matchain/FFNN/attention at p in {2, 4}
+/// — and the default `safe` pipeline changes nothing either.
+#[test]
+fn ir_emission_matches_reference_lowering_differentially() {
+    let roles = LabelRoles::by_convention();
+    for (name, g) in workload_graphs() {
+        for p in [2usize, 4] {
+            for strategy in [Strategy::EinDecomp, Strategy::Greedy] {
+                let plan = assign(&g, &strategy, p, &roles).unwrap();
+                let reference = lower_graph_reference(&g, &plan).unwrap();
+
+                // raw IR, no passes
+                let prog = from_plan(&g, &plan).unwrap();
+                let emitted = prog.emit_tasks().unwrap();
+                assert_eq!(
+                    emitted, reference,
+                    "{name} p={p} {}: no-pass emission diverged",
+                    strategy.name()
+                );
+
+                // the wrapper is the same path
+                assert_eq!(lower_graph(&g, &plan).unwrap(), reference);
+
+                // the default (safe) pipeline is task-graph-neutral
+                let mut prog_safe = from_plan(&g, &plan).unwrap();
+                PassManager::new(&PassSelector::Safe).run(&mut prog_safe);
+                assert_eq!(
+                    prog_safe.emit_tasks().unwrap(),
+                    reference,
+                    "{name} p={p} {}: safe passes changed the task graph",
+                    strategy.name()
+                );
+            }
+        }
+    }
+}
+
+/// Placement on top of identical task graphs is identical too, so the
+/// whole `Cluster::lower` pipeline (with default passes) equals
+/// reference-lower + place.
+#[test]
+fn cluster_lower_equals_placed_reference() {
+    let roles = LabelRoles::by_convention();
+    let g = chain_graph(24, false).unwrap().graph;
+    for workers in [2usize, 4] {
+        let plan = assign(&g, &Strategy::EinDecomp, workers, &roles).unwrap();
+        let cluster = Cluster::new(workers, NetworkProfile::loopback());
+        let placed = cluster.lower(&g, &plan).unwrap();
+        let mut reference = lower_graph_reference(&g, &plan).unwrap();
+        place(&mut reference, workers, Policy::LocalityGreedy);
+        assert_eq!(placed, reference);
+    }
+}
+
+/// A chain whose second vertex needs operand 0 at a pure refinement of
+/// the producer's layout: Z1 emits [2,2] tiles, Z2 wants [4,4].
+fn refinement_chain() -> (EinGraph, Plan) {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![16, 16]);
+    let b = g.input("B", vec![16, 16]);
+    let c = g.input("C", vec![16, 16]);
+    let z1 = g
+        .add(
+            "Z1",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    g.add(
+        "Z2",
+        EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+        vec![z1, c],
+    )
+    .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z1, vec![2, 1, 2]); // dz(Z1) = [2, 2]
+    plan.parts.insert(g.by_name("Z2").unwrap(), vec![4, 4, 1]); // needs Z1 as [4, 4]
+    plan.finalize_inputs(&g);
+    (g, plan)
+}
+
+fn repart_count(tg: &eindecomp::taskgraph::TaskGraph) -> usize {
+    tg.tasks
+        .iter()
+        .filter(|t| matches!(t.kind, TaskKind::Repart { .. }))
+        .count()
+}
+
+/// Acceptance: `alias-refinement-repart` drops refinement-repartition
+/// task counts to zero, and execution stays bitwise-identical to the
+/// un-aliased pipeline.
+#[test]
+fn alias_pass_zeroes_refinement_reparts_bitwise() {
+    let (g, plan) = refinement_chain();
+    let without = lower_graph(&g, &plan).unwrap();
+    assert_eq!(repart_count(&without), 16, "16 refinement tiles expected");
+
+    let mut prog = from_plan(&g, &plan).unwrap();
+    let log = PassManager::new(&PassSelector::All).run(&mut prog);
+    let with = prog.emit_tasks().unwrap();
+    assert_eq!(repart_count(&with), 0, "aliased reparts must emit no tasks");
+    assert!(log
+        .entries
+        .iter()
+        .any(|e| e.pass == "alias-refinement-repart" && e.changes == 1));
+    assert_eq!(with.kernel_calls(), without.kernel_calls());
+
+    // execution: bitwise-identical outputs with and without the alias
+    let mut inputs = HashMap::new();
+    for name in ["A", "B", "C"] {
+        let v = g.by_name(name).unwrap();
+        inputs.insert(v, Tensor::random(&[16, 16], v.0 as u64 + 40));
+    }
+    let engine = NativeEngine::new();
+    let z2 = g.by_name("Z2").unwrap();
+    let base = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::None)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    // alias without the re-associating agg-tree: bitwise guarantee holds
+    let aliased = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes("elide-identity-repart,alias-refinement-repart".parse().unwrap())
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    assert_eq!(base[&z2], aliased[&z2], "alias pass changed execution bytes");
+    // and agrees with the dense reference
+    let dense = eindecomp::runtime::native::eval_graph(&g, &inputs).unwrap();
+    assert!(aliased[&z2].allclose(&dense[&z2], 1e-4, 1e-5));
+}
+
+/// Acceptance: `agg-tree` bounds every aggregation task's fan-in by the
+/// tree arity; execution is deterministic (bitwise across runs and
+/// executor modes) and matches the dense reference within tolerance.
+#[test]
+fn agg_tree_bounds_fan_in_and_stays_deterministic() {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![32, 32]);
+    let b = g.input("B", vec![32, 32]);
+    let z = g
+        .add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z, vec![2, 8, 2]); // 8-way aggregation groups
+    plan.finalize_inputs(&g);
+
+    let serial = lower_graph(&g, &plan).unwrap();
+    let serial_max_fanin = serial
+        .tasks
+        .iter()
+        .filter(|t| matches!(t.kind, TaskKind::Agg { .. }))
+        .map(|t| t.deps.len())
+        .max()
+        .unwrap();
+    assert_eq!(serial_max_fanin, 8, "serial fold reads the whole group");
+
+    let mut prog = from_plan(&g, &plan).unwrap();
+    PassManager::new(&PassSelector::All).run(&mut prog); // default arity 4
+    let tree = prog.emit_tasks().unwrap();
+    let mut tree_aggs = 0usize;
+    for t in &tree.tasks {
+        if matches!(t.kind, TaskKind::Agg { .. }) {
+            tree_aggs += 1;
+            assert!(t.deps.len() <= 4, "fan-in {} exceeds arity 4", t.deps.len());
+        }
+    }
+    // per group of 8 at arity 4: two level-1 folds + one root
+    let serial_agg_count = serial
+        .tasks
+        .iter()
+        .filter(|t| matches!(t.kind, TaskKind::Agg { .. }))
+        .count();
+    assert_eq!(tree_aggs, 3 * serial_agg_count);
+    // same total aggregation flops, just re-associated
+    let flops = |tg: &eindecomp::taskgraph::TaskGraph| -> f64 {
+        tg.tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Agg { .. }))
+            .map(|t| t.flops)
+            .sum()
+    };
+    assert_eq!(flops(&serial), flops(&tree));
+
+    // execution through the full pipeline: deterministic + correct
+    let mut inputs = HashMap::new();
+    inputs.insert(a, Tensor::random(&[32, 32], 91));
+    inputs.insert(b, Tensor::random(&[32, 32], 92));
+    let engine = NativeEngine::new();
+    let dense = eindecomp::runtime::native::eval_graph(&g, &inputs).unwrap();
+    let mut first: Option<Tensor> = None;
+    for mode in [ExecMode::WorkStealing, ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+        let outs = Cluster::new(4, NetworkProfile::loopback())
+            .with_passes(PassSelector::All)
+            .with_exec_mode(mode)
+            .execute(&g, &plan, &engine, &inputs)
+            .unwrap()
+            .0;
+        assert!(outs[&z].allclose(&dense[&z], 1e-4, 1e-5), "{mode:?}");
+        match &first {
+            None => first = Some(outs[&z].clone()),
+            Some(f) => assert_eq!(&outs[&z], f, "{mode:?} not bitwise-deterministic"),
+        }
+    }
+}
+
+/// The serving surface reports the applied pass list and the new ledger
+/// fields, and `Session::explain` shows the optimized program.
+#[test]
+fn session_surfaces_passes_and_explain() {
+    let cfg = DriverConfig {
+        workers: 2,
+        p: 4,
+        network: NetworkProfile::loopback(),
+        passes: PassSelector::All,
+        ..Default::default()
+    };
+    let session = Session::new(cfg).unwrap();
+    let g = chain_graph(24, false).unwrap().graph;
+    let exe = session.compile(&g).unwrap();
+    assert_eq!(exe.passes().len(), 4);
+    exe.task_graph().validate(2).unwrap(); // compile-time validation held
+
+    let mut inputs = HashMap::new();
+    for (i, v) in g.inputs().into_iter().enumerate() {
+        inputs.insert(v, Tensor::random(&g.vertex(v).bound, 70 + i as u64));
+    }
+    let (_, rep) = exe.run(&inputs).unwrap();
+    let json = rep.to_json().render();
+    for key in ["task_count", "bytes_input", "\"passes\"", "agg-tree"] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+
+    let explain = session.explain(&exe);
+    let text = explain.render();
+    for needle in ["Join", "Partition", "passes:", "task graph:", "modeled bytes:"] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+}
+
+/// `--passes none` and the IR wrapper agree through the public Cluster
+/// API even on plans with coarsening repartitions (not refinements), so
+/// the alias pass correctly leaves them alone.
+#[test]
+fn coarsening_reparts_are_never_aliased() {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![16, 16]);
+    let b = g.input("B", vec![16, 16]);
+    let c = g.input("C", vec![16, 16]);
+    let z1 = g
+        .add(
+            "Z1",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let z2 = g
+        .add(
+            "Z2",
+            EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+            vec![z1, c],
+        )
+        .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z1, vec![4, 1, 4]); // dz(Z1) = [4, 4]
+    plan.parts.insert(z2, vec![2, 2, 2]); // needs Z1 as [2, 2]: coarsening
+    plan.finalize_inputs(&g);
+    let mut prog = from_plan(&g, &plan).unwrap();
+    let log = PassManager::new(&PassSelector::All).run(&mut prog);
+    assert!(log
+        .entries
+        .iter()
+        .all(|e| e.pass != "alias-refinement-repart" || e.changes == 0));
+    let tg = prog.emit_tasks().unwrap();
+    assert!(repart_count(&tg) > 0, "coarsening must still emit repart tasks");
+    // and the lowered graph still executes correctly
+    let mut inputs = HashMap::new();
+    for name in ["A", "B", "C"] {
+        let v = g.by_name(name).unwrap();
+        inputs.insert(v, Tensor::random(&[16, 16], v.0 as u64 + 7));
+    }
+    let engine = NativeEngine::new();
+    let outs = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::All)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    let dense = eindecomp::runtime::native::eval_graph(&g, &inputs).unwrap();
+    assert!(outs[&z2].allclose(&dense[&z2], 1e-4, 1e-5));
+}
