@@ -4,14 +4,27 @@
 //!
 //! * emit time — frozen direct lowering (`lower_graph_reference`) vs the
 //!   IR path (`from_plan` + passes + `emit_tasks`);
-//! * task-count deltas per pass (total / repart / agg tasks with the
-//!   pipeline off vs fully on), so wins are attributable to specific
-//!   rewrites.
+//! * per-pass change counts **and task/repart-byte deltas** (the same
+//!   entries `Session::explain` surfaces), so wins are attributable to
+//!   specific rewrites;
+//! * total / repart / agg task counts and the repartition byte total,
+//!   pipeline off vs fully on.
+//!
+//! Suite inputs are *storage-sharded*: each graph input arrives
+//! partitioned along the reversed axis order of its consumer's needed
+//! layout (a row-store feeding a column-sharded consumer), so the
+//! unoptimized lowering pays real repartition traffic that
+//! `propagate-partitions` can elide — the paper's free-offline-placement
+//! assumption made load-bearing.
 //!
 //! Asserts in-bench:
 //!
 //! * the no-pass IR emission equals the direct lowering **exactly**
 //!   (full `TaskGraph` equality — tasks, deps, bytes, flops);
+//! * every suite workload executes **bitwise-identically** under
+//!   `--passes all` and `--passes none`;
+//! * at least one suite workload shows a strictly lower task count *and*
+//!   repartition byte total with the pipeline on;
 //! * `alias-refinement-repart` drops refinement-repart tasks to zero
 //!   with bitwise-identical execution;
 //! * `agg-tree` bounds aggregation fan-in by the tree arity.
@@ -33,7 +46,7 @@ use eindecomp::models::llama::{llama_graph, LlamaConfig};
 use eindecomp::models::matchain::chain_graph;
 use eindecomp::runtime::NativeEngine;
 use eindecomp::sim::{Cluster, NetworkProfile};
-use eindecomp::taskgraph::lower::{lower_graph, lower_graph_reference};
+use eindecomp::taskgraph::lower::lower_graph_reference;
 use eindecomp::taskgraph::{TaskGraph, TaskKind};
 use eindecomp::tensor::Tensor;
 use eindecomp::tra::passes::{PassManager, PassSelector};
@@ -52,6 +65,49 @@ fn is_repart(k: &TaskKind) -> bool {
 
 fn is_agg(k: &TaskKind) -> bool {
     matches!(k, TaskKind::Agg { .. })
+}
+
+fn repart_bytes(tg: &TaskGraph) -> u64 {
+    tg.tasks
+        .iter()
+        .filter(|t| is_repart(&t.kind))
+        .map(|t| t.out_bytes as u64)
+        .sum()
+}
+
+/// Re-shard every pre-partitioned input along the reversed axis order
+/// (storage layout vs compute layout), so repartition chains exist for
+/// the pipeline to optimize away.
+fn storage_shard_inputs(plan: &mut Plan) {
+    for part in plan.input_parts.values_mut() {
+        part.reverse();
+    }
+}
+
+/// Bitwise gate: `--passes all` and `--passes none` produce identical
+/// output bytes on real execution.
+fn assert_all_equals_none_bitwise(name: &str, g: &EinGraph, plan: &Plan) {
+    let mut inputs = HashMap::new();
+    for (i, v) in g.inputs().into_iter().enumerate() {
+        inputs.insert(v, Tensor::random(&g.vertex(v).bound, 300 + i as u64));
+    }
+    let engine = NativeEngine::new();
+    let base = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::None)
+        .execute(g, plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    let opt = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::All)
+        .execute(g, plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    for out in g.outputs() {
+        assert_eq!(
+            base[&out], opt[&out],
+            "{name}: --passes all diverged bitwise from --passes none"
+        );
+    }
 }
 
 fn bench_workload(name: &str, g: &EinGraph, plan: &Plan, iters: usize) -> Json {
@@ -75,25 +131,40 @@ fn bench_workload(name: &str, g: &EinGraph, plan: &Plan, iters: usize) -> Json {
         "{name}: no-pass IR emission diverged from the reference lowering"
     );
 
-    // per-pass task-count deltas
+    // per-pass change counts + task/byte deltas (the Session::explain
+    // pass-log entries, verbatim)
     let mut optimized_prog = from_plan(g, plan).unwrap();
     let log = PassManager::new(&PassSelector::All).run(&mut optimized_prog);
     let optimized = optimized_prog.emit_tasks().unwrap();
-    let changes: Vec<(String, Json)> = log
+    let passes: Vec<Json> = log
         .entries
         .iter()
-        .map(|e| (e.pass.clone(), Json::num(e.changes as f64)))
+        .map(|e| {
+            Json::Obj(vec![
+                ("pass".into(), Json::str(e.pass.clone())),
+                ("changes".into(), Json::num(e.changes as f64)),
+                ("tasks_delta".into(), Json::num(e.tasks_delta as f64)),
+                (
+                    "repart_bytes_delta".into(),
+                    Json::num(e.repart_bytes_delta as f64),
+                ),
+            ])
+        })
         .collect();
+
+    assert_all_equals_none_bitwise(name, g, plan);
 
     println!(
         "{name:<18} ref {ref_ms:8.3} ms | ir {ir_ms:8.3} ms | tasks {} -> {} \
-         (repart {} -> {}, agg {} -> {})",
+         (repart {} -> {}, agg {} -> {}, repart bytes {} -> {})",
         reference.len(),
         optimized.len(),
         count(&reference, is_repart),
         count(&optimized, is_repart),
         count(&reference, is_agg),
         count(&optimized, is_agg),
+        repart_bytes(&reference),
+        repart_bytes(&optimized),
     );
 
     Json::Obj(vec![
@@ -118,8 +189,24 @@ fn bench_workload(name: &str, g: &EinGraph, plan: &Plan, iters: usize) -> Json {
             "agg_tasks_optimized".into(),
             Json::num(count(&optimized, is_agg) as f64),
         ),
-        ("pass_changes".into(), Json::Obj(changes)),
+        (
+            "repart_bytes_unoptimized".into(),
+            Json::num(repart_bytes(&reference) as f64),
+        ),
+        (
+            "repart_bytes_optimized".into(),
+            Json::num(repart_bytes(&optimized) as f64),
+        ),
+        (
+            "strict_win".into(),
+            Json::Bool(
+                optimized.len() < reference.len()
+                    && repart_bytes(&optimized) < repart_bytes(&reference),
+            ),
+        ),
+        ("pass_log".into(), Json::Arr(passes)),
         ("bitwise_unoptimized_equals_reference".into(), Json::Bool(true)),
+        ("bitwise_all_equals_none".into(), Json::Bool(true)),
     ])
 }
 
@@ -144,11 +231,13 @@ fn main() {
     let mut entries: Vec<Json> = Vec::new();
     for p in [2usize, 4] {
         let chain = chain_graph(if smoke { 32 } else { 64 }, false).unwrap().graph;
-        let plan = assign(&chain, &Strategy::EinDecomp, p, &roles).unwrap();
+        let mut plan = assign(&chain, &Strategy::EinDecomp, p, &roles).unwrap();
+        storage_shard_inputs(&mut plan);
         entries.push(bench_workload(&format!("matchain/p{p}"), &chain, &plan, iters));
 
         let ffnn = ffnn_step(32, 48, 24, 8).unwrap().graph;
-        let plan = assign(&ffnn, &Strategy::EinDecomp, p, &roles).unwrap();
+        let mut plan = assign(&ffnn, &Strategy::EinDecomp, p, &roles).unwrap();
+        storage_shard_inputs(&mut plan);
         entries.push(bench_workload(&format!("ffnn/p{p}"), &ffnn, &plan, iters));
 
         let llama_cfg = LlamaConfig {
@@ -161,9 +250,25 @@ fn main() {
             ffn_dim: 64,
         };
         let attn = llama_graph(&llama_cfg).unwrap().graph;
-        let plan = assign(&attn, &Strategy::EinDecomp, p, &roles).unwrap();
+        let mut plan = assign(&attn, &Strategy::EinDecomp, p, &roles).unwrap();
+        storage_shard_inputs(&mut plan);
         entries.push(bench_workload(&format!("attention/p{p}"), &attn, &plan, iters));
     }
+    // acceptance: the pipeline must strictly beat no-passes somewhere
+    fn is_strict_win(e: &Json) -> bool {
+        match e {
+            Json::Obj(kv) => kv
+                .iter()
+                .any(|(k, v)| k == "strict_win" && matches!(v, Json::Bool(true))),
+            _ => false,
+        }
+    }
+    let strict_wins = entries.iter().filter(|e| is_strict_win(e)).count();
+    assert!(
+        strict_wins > 0,
+        "no suite workload showed a strict task+byte win with --passes all"
+    );
+    println!("strict task+byte wins: {strict_wins}/{} workloads", entries.len());
 
     // --- alias-refinement demo: refinement reparts drop to zero --------
     let mut g = EinGraph::new();
@@ -188,7 +293,7 @@ fn main() {
     plan.parts.insert(z1, vec![2, 1, 2]);
     plan.parts.insert(z2, vec![4, 4, 1]);
     plan.finalize_inputs(&g);
-    let without = lower_graph(&g, &plan).unwrap();
+    let without = from_plan(&g, &plan).unwrap().emit_tasks().unwrap();
     let mut prog = from_plan(&g, &plan).unwrap();
     pcfg.passes.manager().run(&mut prog);
     let with = prog.emit_tasks().unwrap();
@@ -227,7 +332,7 @@ fn main() {
     let mut aplan = Plan::default();
     aplan.parts.insert(az, vec![2, 16, 2]); // 16-way aggregation groups
     aplan.finalize_inputs(&ag);
-    let serial = lower_graph(&ag, &aplan).unwrap();
+    let serial = from_plan(&ag, &aplan).unwrap().emit_tasks().unwrap();
     let mut tprog = from_plan(&ag, &aplan).unwrap();
     pcfg.passes.manager().run(&mut tprog);
     let tree = tprog.emit_tasks().unwrap();

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Validate BENCH_lowering.json's per-pass delta ledger.
+
+CI gate for the TRA pass pipeline: every suite workload must carry a
+`pass_log` in which each entry names a pass and reports well-formed
+`changes` / `tasks_delta` / `repart_bytes_delta` fields, plus the
+workload-level task and repartition-byte totals the deltas roll up to.
+Fails (exit 1) if any field is missing or malformed, if the pass names
+do not match the pipeline, or if no workload shows the strict
+task+byte win the pipeline is supposed to deliver.
+
+Usage: check_lowering_json.py [path/to/BENCH_lowering.json]
+"""
+
+import json
+import sys
+
+EXPECTED_PASSES = [
+    "propagate-partitions",
+    "elide-identity-repart",
+    "cse",
+    "alias-refinement-repart",
+    "fuse-epilogue",
+    "agg-tree",
+    "dead-rel-elim",
+]
+
+WORKLOAD_COUNTERS = [
+    "tasks_unoptimized",
+    "tasks_optimized",
+    "repart_tasks_unoptimized",
+    "repart_tasks_optimized",
+    "repart_bytes_unoptimized",
+    "repart_bytes_optimized",
+]
+
+
+def fail(msg: str) -> None:
+    print(f"check_lowering_json: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_int_valued(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and float(v) == int(v)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_lowering.json"
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} not found (did the lowering bench run?)")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    workloads = report.get("workloads")
+    if not isinstance(workloads, list) or not workloads:
+        fail("top-level 'workloads' missing or empty")
+
+    strict_wins = 0
+    for w in workloads:
+        name = w.get("workload")
+        if not isinstance(name, str) or not name:
+            fail("workload entry without a 'workload' name")
+
+        for k in WORKLOAD_COUNTERS:
+            if not is_int_valued(w.get(k)):
+                fail(f"{name}: counter '{k}' missing or not an integer count")
+
+        log = w.get("pass_log")
+        if not isinstance(log, list) or not log:
+            fail(f"{name}: 'pass_log' missing or empty")
+        names = []
+        for entry in log:
+            if not isinstance(entry, dict):
+                fail(f"{name}: pass_log entry is not an object")
+            pname = entry.get("pass")
+            if not isinstance(pname, str) or not pname:
+                fail(f"{name}: pass_log entry without a 'pass' name")
+            names.append(pname)
+            for k in ("changes", "tasks_delta", "repart_bytes_delta"):
+                if not is_int_valued(entry.get(k)):
+                    fail(f"{name}: pass '{pname}' field '{k}' missing or malformed")
+            if int(entry["changes"]) < 0:
+                fail(f"{name}: pass '{pname}' has negative change count")
+        if names != EXPECTED_PASSES:
+            fail(
+                f"{name}: pass_log names {names} != expected pipeline "
+                f"{EXPECTED_PASSES}"
+            )
+
+        # deltas must roll up to the workload totals
+        dt = sum(int(e["tasks_delta"]) for e in log)
+        if dt != int(w["tasks_optimized"]) - int(w["tasks_unoptimized"]):
+            fail(f"{name}: sum of tasks_delta ({dt}) does not match task totals")
+        db = sum(int(e["repart_bytes_delta"]) for e in log)
+        if db != int(w["repart_bytes_optimized"]) - int(w["repart_bytes_unoptimized"]):
+            fail(f"{name}: sum of repart_bytes_delta ({db}) does not match byte totals")
+
+        if w.get("strict_win") is True:
+            strict_wins += 1
+
+    if strict_wins == 0:
+        fail("no workload shows a strict task+byte win with the full pipeline")
+
+    print(
+        f"check_lowering_json: OK — {len(workloads)} workloads, "
+        f"{len(EXPECTED_PASSES)} passes each, {strict_wins} strict win(s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

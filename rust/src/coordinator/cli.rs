@@ -324,7 +324,8 @@ USAGE:
 
 STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,
             megatron, sequence, attention
-PASSES:     elide-identity-repart, alias-refinement-repart, agg-tree,
+PASSES:     propagate-partitions, elide-identity-repart, cse,
+            alias-refinement-repart, fuse-epilogue, agg-tree,
             dead-rel-elim ("safe" = the task-graph-neutral default)
 
 Benches regenerating the paper's figures: `cargo bench` (see EXPERIMENTS.md)."#
@@ -394,7 +395,26 @@ mod tests {
         .iter()
         .map(|s| s.to_string())
         .collect();
-        assert!(main_with_args(&argv).is_err());
+        let err = main_with_args(&argv).unwrap_err().to_string();
+        assert!(err.contains("unknown pass"), "{err}");
+        assert!(err.contains("agg-tree"), "error must list valid names: {err}");
+    }
+
+    #[test]
+    fn run_rejects_duplicate_and_empty_pass_lists() {
+        for bad in ["agg-tree,cse,agg-tree", "agg-tree,,cse"] {
+            let argv: Vec<String> = [
+                "run", "--model", "chain", "--scale", "24", "--workers", "2", "--passes", bad,
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+            let err = main_with_args(&argv).unwrap_err().to_string();
+            assert!(
+                err.contains("duplicate pass") || err.contains("empty pass name"),
+                "--passes {bad}: {err}"
+            );
+        }
     }
 
     #[test]

@@ -176,7 +176,7 @@ fn unary_sig(op: &UnaryOp) -> String {
 
 /// Canonical op descriptor: kind, scalar ops, and locally-renumbered label
 /// pattern. Vertex names are deliberately not part of this.
-fn op_sig(op: &EinSum) -> String {
+pub(crate) fn op_sig(op: &EinSum) -> String {
     match op {
         EinSum::Input => "in".into(),
         EinSum::Unary { lx, lz, op, agg } => {

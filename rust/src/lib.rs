@@ -148,7 +148,7 @@ pub mod prelude {
     pub use crate::runtime::{Backend, KernelEngine};
     pub use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
     pub use crate::sim::network::NetworkProfile;
-    pub use crate::taskgraph::{lower::lower_graph, TaskGraph};
+    pub use crate::taskgraph::TaskGraph;
     pub use crate::tensor::{Tensor, TensorView};
     pub use crate::tra::passes::{PassKind, PassLog, PassManager, PassSelector};
     pub use crate::tra::program::{from_plan, RelId, RelSchema, TraOp, TraProgram};

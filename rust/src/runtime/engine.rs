@@ -145,6 +145,41 @@ impl KernelEngine for DispatchEngine {
         self.native.eval_view_scoped(op, inputs, scope)
     }
 
+    /// Same dispatch as [`eval_view_scoped`](Self::eval_view_scoped): a
+    /// PJRT artifact hit evaluates the bare kernel and applies the fused
+    /// epilogue on the host (artifacts are compiled without it); misses
+    /// fall through to the native engine's in-place epilogue path.
+    fn eval_view_epilogue_scoped(
+        &self,
+        op: &EinSum,
+        inputs: &[&TensorView],
+        epilogue: &[crate::einsum::expr::UnaryOp],
+        scope: &ShardScope,
+    ) -> Result<Tensor> {
+        if let Some(pjrt) = &self.pjrt {
+            let owned: Vec<Tensor> = inputs.iter().map(|v| v.to_tensor()).collect();
+            let refs: Vec<&Tensor> = owned.iter().collect();
+            match pjrt.try_eval(op, &refs)? {
+                Some(mut t) => {
+                    self.pjrt_hits.fetch_add(1, Ordering::Relaxed);
+                    crate::runtime::gemm::apply_epilogue(t.data_mut(), epilogue);
+                    return Ok(t);
+                }
+                None => {
+                    if self.backend == Backend::PjrtStrict {
+                        return Err(Error::Artifact(format!(
+                            "PjrtStrict: no artifact for {op} on {:?}",
+                            inputs.iter().map(|t| t.shape()).collect::<Vec<_>>()
+                        )));
+                    }
+                }
+            }
+        }
+        self.native_hits.fetch_add(1, Ordering::Relaxed);
+        self.native
+            .eval_view_epilogue_scoped(op, inputs, epilogue, scope)
+    }
+
     fn name(&self) -> &'static str {
         match self.backend {
             Backend::Native => "native",

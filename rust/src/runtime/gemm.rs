@@ -477,6 +477,20 @@ fn apply_beta(beta: f32, c: &mut [f32]) {
     }
 }
 
+/// The epilogue counterpart to the `alpha`/`beta` contract: after
+/// `C = alpha * (A @ B) + beta * C` lands, apply a chain of pointwise
+/// ops to `C` in order. This is where the `fuse-epilogue` IR pass hangs
+/// fused elementwise map vertices — the epilogue hits exactly the
+/// elements the retired map kernel would have, one op at a time, so the
+/// fused result is bitwise-identical to the unfused two-kernel run.
+pub fn apply_epilogue(c: &mut [f32], eps: &[crate::einsum::expr::UnaryOp]) {
+    for e in eps {
+        for v in c.iter_mut() {
+            *v = e.apply(*v);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -78,6 +78,30 @@ pub trait KernelEngine: Send + Sync {
         self.eval_scoped(op, &refs, scope)
     }
 
+    /// [`eval_view_scoped`](Self::eval_view_scoped) followed by a fused
+    /// pointwise epilogue (the `fuse-epilogue` IR pass's kernel hook —
+    /// see `runtime/gemm.rs`'s `alpha`/`beta` contract for where the
+    /// epilogue sits). Ops apply in order to every output element and
+    /// must be bitwise-identical to running each retired map kernel
+    /// separately. The default evaluates then rewrites the freshly-owned
+    /// output in place; engines with a cheaper path (the native engine
+    /// reuses its GEMM epilogue loop) override.
+    fn eval_view_epilogue_scoped(
+        &self,
+        op: &EinSum,
+        inputs: &[&TensorView],
+        epilogue: &[crate::einsum::expr::UnaryOp],
+        scope: &ShardScope,
+    ) -> Result<Tensor> {
+        let mut t = self.eval_view_scoped(op, inputs, scope)?;
+        for e in epilogue {
+            for v in t.data_mut().iter_mut() {
+                *v = e.apply(*v);
+            }
+        }
+        Ok(t)
+    }
+
     /// Human-readable identifier for reports.
     fn name(&self) -> &'static str;
 }

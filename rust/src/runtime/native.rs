@@ -72,6 +72,18 @@ impl KernelEngine for NativeEngine {
         eval_einsum_view_scoped(op, inputs, scope)
     }
 
+    fn eval_view_epilogue_scoped(
+        &self,
+        op: &EinSum,
+        inputs: &[&TensorView],
+        epilogue: &[crate::einsum::expr::UnaryOp],
+        scope: &ShardScope,
+    ) -> Result<Tensor> {
+        let mut t = eval_einsum_view_scoped(op, inputs, scope)?;
+        super::gemm::apply_epilogue(t.data_mut(), epilogue);
+        Ok(t)
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }

@@ -224,7 +224,18 @@ impl Cluster {
         plan: &Plan,
     ) -> Result<(TaskGraph, TraProgram, PassLog)> {
         let mut prog = from_plan(g, plan)?;
-        let log = self.passes.manager().run(&mut prog);
+        // Role-driven baselines plan by label *name*, so IR CSE must
+        // compare label-extended join signatures — the same caveat the
+        // plan cache honors with `Canon::named_signature`.
+        let label_sensitive = matches!(
+            plan.strategy.as_str(),
+            "data-parallel" | "megatron" | "sequence" | "attention"
+        );
+        let log = self
+            .passes
+            .manager()
+            .with_label_sensitivity(label_sensitive)
+            .run(&mut prog);
         let mut tg = prog.emit_tasks()?;
         place(&mut tg, self.workers, self.placement);
         // validate() re-checks structure (placement cannot invalidate
@@ -366,9 +377,15 @@ impl Cluster {
         for t in &tg.tasks {
             if let TaskKind::InputTile { vertex, key } = &t.kind {
                 let vert = g.vertex(*vertex);
-                let part = plan
-                    .input_parts
+                // The emitted graph is the authority on input layout: the
+                // `propagate-partitions` pass may have rewritten it away
+                // from the plan's `input_parts`. (Direct-lowered graphs
+                // register the plan layout verbatim, so the fallback only
+                // covers unpartitioned inputs.)
+                let part = tg
+                    .vertex_out_part
                     .get(vertex)
+                    .or_else(|| plan.input_parts.get(vertex))
                     .cloned()
                     .unwrap_or_else(|| vec![1; vert.bound.len()]);
                 let origin = tile_origin(&vert.bound, &part, key);
@@ -409,14 +426,16 @@ impl Cluster {
             let tiles = &tg.vertex_outputs[&out];
             let mut dense = Tensor::zeros(&vert.bound);
             for (key, &tid) in crate::tensor::index_space(part).zip(tiles) {
-                let tile = results[tid.0]
-                    .lock()
-                    .unwrap()
-                    .take()
+                // Borrow, don't take: after IR CSE two output vertices
+                // can share one set of result tiles, and each assembly
+                // must read them. The drain below recycles every slot
+                // exactly once.
+                let slot = results[tid.0].lock().unwrap();
+                let tile = slot
+                    .as_ref()
                     .ok_or_else(|| Error::Exec("missing result tile".into()))?;
                 let origin = tile_origin(&vert.bound, part, &key);
-                dense.write_slice_view(&origin, &tile)?;
-                tile.recycle();
+                dense.write_slice_view(&origin, tile)?;
             }
             outputs.insert(out, dense);
         }
@@ -596,6 +615,15 @@ fn exec_task(
         TaskKind::Kernel { vertex, key } => {
             let vert = g.vertex(*vertex);
             let op = &vert.op;
+            // `fuse-epilogue` attaches retired map vertices here; empty
+            // on every unfused lowering.
+            let epi = tg.kernel_epilogue.get(&task.id).map(Vec::as_slice);
+            let eval = |refs: &[&TensorView]| -> Result<Tensor> {
+                match epi {
+                    Some(eps) => engine.eval_view_epilogue_scoped(op, refs, eps, scope),
+                    None => engine.eval_view_scoped(op, refs, scope),
+                }
+            };
             // Fast path (every non-aliased lowering, incl. the default
             // `safe` pipeline): deps are exactly the expected operand
             // tiles — no per-operand geometry work on the hot path.
@@ -606,7 +634,7 @@ fn exec_task(
                     .map(|&d| dep_view(d))
                     .collect::<Result<_>>()?;
                 let refs: Vec<&TensorView> = ins.iter().collect();
-                return engine.eval_view_scoped(op, &refs, scope).map(Tensor::into_view);
+                return eval(&refs).map(Tensor::into_view);
             }
             let uniq = op.unique_labels();
             let mut ins: Vec<TensorView> = Vec::with_capacity(task.deps.len());
@@ -641,7 +669,7 @@ fn exec_task(
                 }
             }
             let refs: Vec<&TensorView> = ins.iter().collect();
-            engine.eval_view_scoped(op, &refs, scope).map(Tensor::into_view)
+            eval(&refs).map(Tensor::into_view)
         }
         TaskKind::Agg { vertex, .. } => {
             let agg = match &g.vertex(*vertex).op {
@@ -792,6 +820,41 @@ mod tests {
         )
         .unwrap();
         g
+    }
+
+    #[test]
+    fn zero_byte_cross_worker_edges_model_zero_seconds() {
+        // Regression: `wire_s` used to charge `latency_s` on zero-byte
+        // transfers, so free rewrites (aliased / elided repartitions)
+        // modeled as non-free. A cross-worker edge carrying no bytes must
+        // contribute exactly nothing to the ledger or the timeline.
+        let mut tg = TaskGraph::default();
+        let t0 = tg.push_task(
+            TaskKind::InputTile {
+                vertex: VertexId(0),
+                key: vec![0],
+            },
+            vec![],
+            0,
+            0.0,
+        );
+        tg.push_task(
+            TaskKind::Kernel {
+                vertex: VertexId(1),
+                key: vec![0],
+            },
+            vec![t0],
+            0,
+            0.0,
+        );
+        tg.tasks[0].worker = Some(0);
+        tg.tasks[1].worker = Some(1);
+        let mut net = NetworkProfile::cpu_cluster();
+        net.sched_overhead_s = 0.0;
+        assert!(net.latency_s > 0.0, "test needs a latency-bearing profile");
+        let rep = Cluster::new(2, net).model(&tg);
+        assert_eq!(rep.sim_makespan_s, 0.0);
+        assert_eq!(rep.bytes_moved, 0);
     }
 
     #[test]

@@ -86,15 +86,26 @@ impl NetworkProfile {
         }
     }
 
-    /// Time to move `bytes` across one link.
+    /// Time to move `bytes` across one link. A zero-byte transfer is no
+    /// transfer at all — nothing crosses the wire, so no latency either.
+    /// (Zero-byte edges are exactly what alias-refinement and identity
+    /// repartitions produce; charging them latency modeled free rewrites
+    /// as non-free.)
     #[inline]
     pub fn wire_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 
-    /// Time to page `bytes` to/from host memory.
+    /// Time to page `bytes` to/from host memory. Zero bytes page in zero
+    /// seconds (see [`Self::wire_s`]).
     #[inline]
     pub fn host_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
         bytes as f64 / self.host_bps
     }
 
@@ -120,7 +131,18 @@ mod tests {
     fn wire_time_monotone() {
         let n = NetworkProfile::cpu_cluster();
         assert!(n.wire_s(1 << 20) < n.wire_s(1 << 24));
-        assert!(n.wire_s(0) >= n.latency_s);
+        assert!(n.wire_s(1) >= n.latency_s);
+    }
+
+    #[test]
+    fn zero_byte_transfers_are_free() {
+        for p in [
+            NetworkProfile::cpu_cluster(),
+            NetworkProfile::gpu_server_p100(),
+        ] {
+            assert_eq!(p.wire_s(0), 0.0, "{}", p.name);
+            assert_eq!(p.host_s(0), 0.0, "{}", p.name);
+        }
     }
 
     #[test]

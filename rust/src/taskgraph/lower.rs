@@ -11,13 +11,13 @@
 //!
 //! Inputs become one `InputTile` task per tile of their pre-partitioning.
 //!
-//! Since the TRA IR landed, [`lower_graph`] is a thin wrapper over
-//! [`crate::tra::program::from_plan`] + `emit_tasks` (no passes) and is
-//! kept for one release; the compiler pipeline proper goes through
-//! `Cluster::lower`, which runs the configured pass pipeline between the
-//! two steps. The pre-IR direct lowering survives verbatim as
-//! [`lower_graph_reference`] — the frozen differential baseline the
-//! equivalence tests and `benches/lowering.rs` compare against.
+//! Since the TRA IR landed, lowering proper goes through
+//! [`crate::tra::program::from_plan`] + `emit_tasks` (`Cluster::lower`
+//! runs the configured pass pipeline between the two steps; the one-time
+//! `lower_graph` wrapper is gone). The pre-IR direct lowering survives
+//! verbatim as [`lower_graph_reference`] — the frozen differential
+//! baseline the equivalence tests and `benches/lowering.rs` compare
+//! against.
 
 use super::{TaskGraph, TaskId, TaskKind};
 use crate::decomp::Plan;
@@ -29,15 +29,6 @@ use crate::tensor::index_space;
 use crate::tra::relation::{
     linearize, overlapping_tiles, tile_bytes, tile_offset, tile_size,
 };
-
-/// Lower a planned EinGraph to a (not yet placed) task graph, through
-/// the TRA IR with **no** passes applied — task-for-task identical to
-/// [`lower_graph_reference`]. Kept for one release as the direct entry
-/// point; prefer `Cluster::lower` (which applies the configured passes)
-/// or [`crate::tra::program::from_plan`] to work with the IR itself.
-pub fn lower_graph(g: &EinGraph, plan: &Plan) -> Result<TaskGraph> {
-    crate::tra::program::from_plan(g, plan)?.emit_tasks()
-}
 
 /// The pre-IR direct lowering, one vertex at a time, with no
 /// intermediate program. Frozen as the differential baseline:
@@ -218,6 +209,15 @@ mod tests {
     use crate::decomp::{plan_graph, PlannerConfig};
     use crate::einsum::label::labels;
 
+    /// The no-pass IR lowering every test compares or builds through —
+    /// what the retired `lower_graph` wrapper did.
+    fn lower_via_ir(g: &EinGraph, plan: &Plan) -> TaskGraph {
+        crate::tra::program::from_plan(g, plan)
+            .unwrap()
+            .emit_tasks()
+            .unwrap()
+    }
+
     fn matmul_graph(s: usize) -> EinGraph {
         let mut g = EinGraph::new();
         let a = g.input("A", vec![s, s]);
@@ -235,7 +235,7 @@ mod tests {
     fn matmul_lowering_produces_p_kernels() {
         let g = matmul_graph(64);
         let plan = plan_graph(&g, &PlannerConfig { p: 16, ..Default::default() }).unwrap();
-        let tg = lower_graph(&g, &plan).unwrap();
+        let tg = lower_via_ir(&g, &plan);
         assert_eq!(tg.kernel_calls(), 16);
         // topological by construction
         for t in &tg.tasks {
@@ -255,7 +255,7 @@ mod tests {
         let mut plan = Plan::default();
         plan.parts.insert(z, vec![2, 2, 4]);
         plan.finalize_inputs(&g);
-        let tg = lower_graph(&g, &plan).unwrap();
+        let tg = lower_via_ir(&g, &plan);
         assert_eq!(tg.kernel_calls(), 16);
         let aggs = tg
             .tasks
@@ -272,7 +272,7 @@ mod tests {
         let mut plan2 = Plan::default();
         plan2.parts.insert(z, vec![4, 1, 4]);
         plan2.finalize_inputs(&g);
-        let tg2 = lower_graph(&g, &plan2).unwrap();
+        let tg2 = lower_via_ir(&g, &plan2);
         assert_eq!(
             tg2.tasks
                 .iter()
@@ -307,7 +307,7 @@ mod tests {
         plan.parts.insert(z1, vec![2, 2, 4]); // dz over (i,k) = [2,4]
         plan.parts.insert(z2, vec![4, 1, 4]); // needs z1 as [4,1]
         plan.finalize_inputs(&g);
-        let tg = lower_graph(&g, &plan).unwrap();
+        let tg = lower_via_ir(&g, &plan);
         let reparts: Vec<_> = tg
             .tasks
             .iter()
@@ -332,10 +332,10 @@ mod tests {
     }
 
     #[test]
-    fn wrapper_reproduces_reference_lowering() {
-        // lower_graph now routes through the TRA IR; it must match the
-        // frozen direct lowering exactly, including on graphs with
-        // repartitions and aggregations.
+    fn ir_reproduces_reference_lowering() {
+        // The no-pass IR lowering must match the frozen direct lowering
+        // exactly, including on graphs with repartitions and
+        // aggregations.
         let mut g = EinGraph::new();
         let a = g.input("A", vec![12, 8]);
         let b = g.input("B", vec![8, 12]);
@@ -357,7 +357,7 @@ mod tests {
         plan.parts.insert(z1, vec![2, 2, 4]);
         plan.parts.insert(g.by_name("Z2").unwrap(), vec![4, 1, 4]);
         plan.finalize_inputs(&g);
-        let via_ir = lower_graph(&g, &plan).unwrap();
+        let via_ir = lower_via_ir(&g, &plan);
         let direct = lower_graph_reference(&g, &plan).unwrap();
         assert_eq!(via_ir, direct);
     }
@@ -369,7 +369,7 @@ mod tests {
         let mut plan = Plan::default();
         plan.parts.insert(z, vec![2, 1, 2]);
         plan.finalize_inputs(&g);
-        let tg = lower_graph(&g, &plan).unwrap();
+        let tg = lower_via_ir(&g, &plan);
         let a = g.by_name("A").unwrap();
         // A pre-partitioned [2,1] -> 2 input tiles of 4x8 = 128 bytes
         assert_eq!(tg.vertex_outputs[&a].len(), 2);

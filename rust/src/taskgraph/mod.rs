@@ -101,6 +101,13 @@ pub struct TaskGraph {
     /// Output partitioning of each vertex (row-major key order of
     /// `vertex_outputs`).
     pub vertex_out_part: std::collections::HashMap<VertexId, Vec<usize>>,
+    /// Pointwise ops the executor applies to a kernel task's output tile
+    /// after evaluation, in order — placed by the `fuse-epilogue` IR
+    /// pass. Kernels without an entry run bare. Empty map on every
+    /// unfused lowering, so `PartialEq` against a reference lowering
+    /// still holds bit-for-bit.
+    pub kernel_epilogue:
+        std::collections::HashMap<TaskId, Vec<crate::einsum::expr::UnaryOp>>,
     /// Set by IR emission when the `alias-refinement-repart` rewrite
     /// routed at least one kernel operand directly at a *coarser*
     /// producer tile. When `false` (every non-aliased lowering), the

@@ -128,7 +128,7 @@ mod tests {
     use crate::einsum::expr::EinSum;
     use crate::einsum::graph::EinGraph;
     use crate::einsum::label::labels;
-    use crate::taskgraph::lower::lower_graph;
+    use crate::tra::program::from_plan;
 
     fn lowered(p: usize) -> TaskGraph {
         let mut g = EinGraph::new();
@@ -149,7 +149,7 @@ mod tests {
         )
         .unwrap();
         let plan = plan_graph(&g, &PlannerConfig { p, ..Default::default() }).unwrap();
-        lower_graph(&g, &plan).unwrap()
+        from_plan(&g, &plan).unwrap().emit_tasks().unwrap()
     }
 
     #[test]
@@ -197,7 +197,7 @@ mod tests {
         let mut plan = crate::decomp::Plan::default();
         plan.parts.insert(z, vec![2, 2, 4]);
         plan.finalize_inputs(&g);
-        let mut tg = lower_graph(&g, &plan).unwrap();
+        let mut tg = from_plan(&g, &plan).unwrap().emit_tasks().unwrap();
         place(&mut tg, 4, Policy::LocalityGreedy);
         for t in &tg.tasks {
             if let TaskKind::Agg { .. } = t.kind {

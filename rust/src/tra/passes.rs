@@ -2,12 +2,26 @@
 //! ([`crate::tra::program::TraProgram`]).
 //!
 //! Passes are ordered, individually toggleable rewrites with a per-pass
-//! change log. The canonical order is:
+//! change log and task/byte deltas. The canonical order is:
 //!
-//! 1. **`elide-identity-repart`** — remove `Π` nodes whose source and
+//! 1. **`propagate-partitions`** — rewrite input `Partition` layouts to
+//!    the consumer-need layout the `decomp/cost` repartition model scores
+//!    cheapest (summed over all consumers), eliding whole repartition
+//!    chains at the source. Input placement is offline in the paper's
+//!    model, so this is free; bitwise-neutral.
+//! 2. **`elide-identity-repart`** — remove `Π` nodes whose source and
 //!    target parts are equal (the direct lowering's inline `have == need`
-//!    check, generalized to an explicit IR rewrite). Task-graph neutral.
-//! 2. **`alias-refinement-repart`** — mark refinement `Π`s (every needed
+//!    check, generalized to an explicit IR rewrite — and the pass that
+//!    cashes in `propagate-partitions`' newly-identity `Π`s). Task-graph
+//!    neutral.
+//! 3. **`cse`** — value-number the program and merge duplicate
+//!    `Repartition`/`Join`/`Aggregate`/`ReKey` chains; duplicate vertex
+//!    terminals become zero-task `Reuse` markers. Joins compare frozen
+//!    structural signatures ([`crate::einsum::canon`]) — or
+//!    label-name-extended ones under label-role-sensitive strategies, so
+//!    same-shape vertices whose label roles differ never merge.
+//!    Bitwise-neutral (duplicates compute identical bytes).
+//! 4. **`alias-refinement-repart`** — mark refinement `Π`s (every needed
 //!    tile contained in one producer tile) as aliases so they emit
 //!    **zero** tasks; consuming kernels slice the producer tile directly.
 //!    Bitwise-neutral to execution (the kernel reads the identical
@@ -16,12 +30,17 @@
 //!    the whole coarse producer tile instead of its refined sub-tile, so
 //!    `bytes_moved` can rise even as task counts fall — the win is task
 //!    count, scheduling overhead, and zero-copy local reads.
-//! 3. **`agg-tree`** — rewrite serial-fold aggregations whose group
+//! 5. **`fuse-epilogue`** — fold single-consumer elementwise map
+//!    vertices into their producer `Join`'s kernel epilogue (applied
+//!    after the GEMM `alpha`/`beta` step, see `runtime/gemm.rs`),
+//!    deleting the map's kernel tasks outright. Bitwise-neutral: the
+//!    same pointwise op hits the same tile elements.
+//! 6. **`agg-tree`** — rewrite serial-fold aggregations whose group
 //!    exceeds the tree arity into balanced reduction trees, bounding any
 //!    task's fan-in by the arity. Deterministic, but float `Sum` folds
 //!    associate differently than the serial chain (bit-different, still
 //!    within dense-reference tolerance).
-//! 4. **`dead-rel-elim`** — drop nodes whose relations nothing consumes.
+//! 7. **`dead-rel-elim`** — drop nodes whose relations nothing consumes.
 //!
 //! Selection is driven by a [`PassSelector`] (`--passes all|none|safe`
 //! or a comma-separated subset on the CLI), carried by both
@@ -48,17 +67,27 @@ pub const DEFAULT_AGG_TREE_ARITY: usize = 4;
 /// One rewrite of the pipeline, in canonical order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PassKind {
+    PropagatePartitions,
     ElideIdentityRepart,
+    Cse,
     AliasRefinementRepart,
+    FuseEpilogue,
     AggTree,
     DeadRelElim,
 }
 
 impl PassKind {
-    /// Every pass, in canonical pipeline order.
-    pub const ALL: [PassKind; 4] = [
+    /// Every pass, in canonical pipeline order. The order is load-bearing:
+    /// `propagate-partitions` creates identity `Π`s for
+    /// `elide-identity-repart` to remove; `cse` and `fuse-epilogue` both
+    /// need those one-hop chains collapsed so producers and consumers
+    /// read each other's relations directly.
+    pub const ALL: [PassKind; 7] = [
+        PassKind::PropagatePartitions,
         PassKind::ElideIdentityRepart,
+        PassKind::Cse,
         PassKind::AliasRefinementRepart,
+        PassKind::FuseEpilogue,
         PassKind::AggTree,
         PassKind::DeadRelElim,
     ];
@@ -68,8 +97,11 @@ impl PassKind {
 
     pub fn name(self) -> &'static str {
         match self {
+            PassKind::PropagatePartitions => "propagate-partitions",
             PassKind::ElideIdentityRepart => "elide-identity-repart",
+            PassKind::Cse => "cse",
             PassKind::AliasRefinementRepart => "alias-refinement-repart",
+            PassKind::FuseEpilogue => "fuse-epilogue",
             PassKind::AggTree => "agg-tree",
             PassKind::DeadRelElim => "dead-rel-elim",
         }
@@ -123,8 +155,13 @@ impl std::str::FromStr for PassSelector {
     type Err = Error;
 
     /// Parse `all`, `none`, `safe`/`default`, or a comma-separated list
-    /// of pass names.
+    /// of pass names. Malformed lists are rejected, not tolerated: an
+    /// empty segment (trailing comma, `a,,b`, or an empty string) and a
+    /// repeated pass name are both errors, each listing the valid names —
+    /// a silently-dropped segment would run a different pipeline than the
+    /// one the user typed.
     fn from_str(s: &str) -> Result<PassSelector> {
+        let valid = || PassKind::ALL.map(|k| k.name()).join(", ");
         match s.trim() {
             "all" => Ok(PassSelector::All),
             "none" => Ok(PassSelector::None),
@@ -134,14 +171,24 @@ impl std::str::FromStr for PassSelector {
                 for part in csv.split(',') {
                     let part = part.trim();
                     if part.is_empty() {
-                        continue;
+                        return Err(Error::Parse(format!(
+                            "empty pass name in {csv:?} (try all, none, safe, \
+                             or a comma list of: {})",
+                            valid()
+                        )));
                     }
                     let k = PassKind::from_name(part).ok_or_else(|| {
                         Error::Parse(format!(
                             "unknown pass {part:?} (try all, none, safe, or a comma list of: {})",
-                            PassKind::ALL.map(|k| k.name()).join(", ")
+                            valid()
                         ))
                     })?;
+                    if kinds.contains(&k) {
+                        return Err(Error::Parse(format!(
+                            "duplicate pass {part:?} (each of {} may appear once)",
+                            valid()
+                        )));
+                    }
                     kinds.push(k);
                 }
                 Ok(PassSelector::Custom(kinds))
@@ -174,6 +221,13 @@ pub struct PassEntry {
     pub pass: String,
     /// Number of rewrites applied (0 = ran but found nothing).
     pub changes: usize,
+    /// Change in the number of tasks the program will emit
+    /// ([`TraProgram::task_stats`] after minus before). Negative =
+    /// tasks saved; `agg-tree` is legitimately positive (it trades task
+    /// count for bounded fan-in).
+    pub tasks_delta: i64,
+    /// Change in total modeled repartition bytes, same convention.
+    pub repart_bytes_delta: i64,
     /// One human-readable line per rewrite.
     pub notes: Vec<String>,
 }
@@ -202,7 +256,10 @@ impl PassLog {
         }
         let mut s = String::from("passes:\n");
         for e in &self.entries {
-            s.push_str(&format!("  {:<24} {} change(s)\n", e.pass, e.changes));
+            s.push_str(&format!(
+                "  {:<24} {} change(s), tasks {:+}, repart bytes {:+}\n",
+                e.pass, e.changes, e.tasks_delta, e.repart_bytes_delta
+            ));
             for n in &e.notes {
                 s.push_str(&format!("    - {n}\n"));
             }
@@ -218,6 +275,11 @@ impl PassLog {
                     Json::Obj(vec![
                         ("pass".into(), Json::str(e.pass.clone())),
                         ("changes".into(), Json::num(e.changes as f64)),
+                        ("tasks_delta".into(), Json::num(e.tasks_delta as f64)),
+                        (
+                            "repart_bytes_delta".into(),
+                            Json::num(e.repart_bytes_delta as f64),
+                        ),
                         (
                             "notes".into(),
                             Json::Arr(e.notes.iter().map(|n| Json::str(n.clone())).collect()),
@@ -242,6 +304,13 @@ pub struct PassManager {
     kinds: Vec<PassKind>,
     /// Fan-in bound for the `agg-tree` rewrite (clamped to >= 2).
     pub agg_tree_arity: usize,
+    /// When set, `cse` compares joins by label-name-extended signatures —
+    /// required under strategies that plan by label *role* (data-parallel,
+    /// megatron, sequence, attention-head), where same-shape vertices with
+    /// different roles must not merge. Off by default: purely structural
+    /// planners treat renamed-but-isomorphic chains as equal, which is
+    /// both safe and strictly more merging.
+    pub label_sensitive: bool,
 }
 
 impl PassManager {
@@ -249,6 +318,7 @@ impl PassManager {
         PassManager {
             kinds: selector.kinds(),
             agg_tree_arity: DEFAULT_AGG_TREE_ARITY,
+            label_sensitive: false,
         }
     }
 
@@ -266,24 +336,40 @@ impl PassManager {
         self
     }
 
+    /// Set whether `cse` must honor label roles (see
+    /// [`PassManager::label_sensitive`]).
+    pub fn with_label_sensitivity(mut self, on: bool) -> PassManager {
+        self.label_sensitive = on;
+        self
+    }
+
     /// Names of the passes this manager will run, in order.
     pub fn names(&self) -> Vec<String> {
         self.kinds.iter().map(|k| k.name().to_string()).collect()
     }
 
     /// Run every selected pass, in canonical order, and return the log.
+    /// Each entry carries the pass's task-count and repartition-byte
+    /// deltas, measured by [`TraProgram::task_stats`] around the rewrite.
     pub fn run(&self, prog: &mut TraProgram) -> PassLog {
         let mut log = PassLog::default();
         for k in &self.kinds {
+            let before = prog.task_stats();
             let notes = match k {
+                PassKind::PropagatePartitions => prog.propagate_partitions(),
                 PassKind::ElideIdentityRepart => prog.elide_identity_reparts(),
+                PassKind::Cse => prog.cse(self.label_sensitive),
                 PassKind::AliasRefinementRepart => prog.alias_refinement_reparts(),
+                PassKind::FuseEpilogue => prog.fuse_epilogues(),
                 PassKind::AggTree => prog.agg_tree(self.agg_tree_arity),
                 PassKind::DeadRelElim => prog.dead_rel_elim(),
             };
+            let after = prog.task_stats();
             log.entries.push(PassEntry {
                 pass: k.name().to_string(),
                 changes: notes.len(),
+                tasks_delta: after.tasks as i64 - before.tasks as i64,
+                repart_bytes_delta: after.repart_bytes as i64 - before.repart_bytes as i64,
                 notes,
             });
         }
@@ -316,8 +402,23 @@ mod tests {
             vec![PassKind::ElideIdentityRepart, PassKind::AggTree]
         );
         assert_eq!(custom.to_string(), "elide-identity-repart,agg-tree");
-        assert!("nonsense-pass".parse::<PassSelector>().is_err());
         assert_eq!(PassSelector::default(), PassSelector::Safe);
+    }
+
+    #[test]
+    fn selector_rejects_malformed_csv() {
+        let unknown = "nonsense-pass".parse::<PassSelector>().unwrap_err();
+        assert!(unknown.to_string().contains("unknown pass"));
+        // every valid name is listed in the error
+        for k in PassKind::ALL {
+            assert!(unknown.to_string().contains(k.name()), "{k:?}");
+        }
+        let dup = "agg-tree,cse,agg-tree".parse::<PassSelector>().unwrap_err();
+        assert!(dup.to_string().contains("duplicate pass \"agg-tree\""));
+        for bad in ["", "agg-tree,", "agg-tree,,cse", " , "] {
+            let e = bad.parse::<PassSelector>().unwrap_err();
+            assert!(e.to_string().contains("empty pass name"), "{bad:?}: {e}");
+        }
     }
 
     #[test]
@@ -349,21 +450,36 @@ mod tests {
         assert_eq!(
             log.applied(),
             vec![
+                "propagate-partitions",
                 "elide-identity-repart",
+                "cse",
                 "alias-refinement-repart",
+                "fuse-epilogue",
                 "agg-tree",
                 "dead-rel-elim"
             ]
         );
-        // identity reparts elided (2 input edges), agg rewritten to a tree
-        assert_eq!(log.entries[0].changes, 2);
-        assert_eq!(log.entries[2].changes, 1);
-        assert_eq!(log.entries[3].changes, 0);
+        // inputs already sit at the consumer layout (finalize_inputs), so
+        // propagation finds nothing; identity reparts elided (2 input
+        // edges); agg rewritten to a tree
+        assert_eq!(log.entries[0].changes, 0);
+        assert_eq!(log.entries[1].changes, 2);
+        assert_eq!(log.entries[5].changes, 1);
+        assert_eq!(log.entries[6].changes, 0);
         assert!(log.total_changes() >= 3);
+        // identity reparts already emitted zero tasks, so eliding them is
+        // task-neutral; the tree rewrite trades tasks for bounded fan-in
+        assert_eq!(log.entries[1].tasks_delta, 0);
+        assert!(log.entries[5].tasks_delta > 0);
+        assert_eq!(log.entries[5].repart_bytes_delta, 0);
         let text = log.render();
         assert!(text.contains("agg-tree"));
         assert!(text.contains("tree"));
-        assert!(log.to_json().render().contains("\"pass\""));
+        assert!(text.contains("tasks +"));
+        let json = log.to_json().render();
+        assert!(json.contains("\"pass\""));
+        assert!(json.contains("\"tasks_delta\""));
+        assert!(json.contains("\"repart_bytes_delta\""));
     }
 
     #[test]

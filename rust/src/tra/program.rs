@@ -126,6 +126,17 @@ pub enum TraOp {
         vertex: VertexId,
         inputs: Vec<RelId>,
         flops_per_call: f64,
+        /// `Some(u)` when this join is a *pure elementwise map* (a
+        /// [`EinSum::Unary`] whose output labels equal its input labels,
+        /// so no permutation and no aggregation) — the shape the
+        /// `fuse-epilogue` pass folds into its producer's kernel.
+        map_op: Option<crate::einsum::expr::UnaryOp>,
+        /// Pointwise maps fused *into* this join's kernel by the
+        /// `fuse-epilogue` pass, applied in order to every output tile
+        /// right after the kernel writes it (the `alpha`/`beta`-style
+        /// epilogue position of [`crate::runtime::gemm`]). Empty until
+        /// the pass runs.
+        epilogue: Vec<crate::einsum::expr::UnaryOp>,
     },
     /// `(+)`-reduce groups of join tuples agreeing on the output labels.
     /// `tree_arity: None` emits one serial-fold `Agg` task per group;
@@ -145,6 +156,13 @@ pub enum TraOp {
     /// Marks a graph output: the executor assembles the relation into a
     /// dense tensor after the run. Emits zero tasks.
     Assemble { vertex: VertexId, src: RelId },
+    /// Placed by the `cse` pass where a duplicate vertex chain was
+    /// merged into its first occurrence: `vertex`'s tiles *are* the
+    /// tiles of `src` (the canonical chain's output relation). Emits
+    /// zero tasks — emission forwards `src`'s tasks and registers them
+    /// as `vertex`'s outputs so downstream repartition key recovery and
+    /// output assembly still find the merged vertex.
+    Reuse { vertex: VertexId, src: RelId },
 }
 
 impl TraOp {
@@ -157,6 +175,7 @@ impl TraOp {
             TraOp::Aggregate { .. } => "Aggregate",
             TraOp::ReKey { .. } => "ReKey",
             TraOp::Assemble { .. } => "Assemble",
+            TraOp::Reuse { .. } => "Reuse",
         }
     }
 
@@ -167,7 +186,8 @@ impl TraOp {
             TraOp::Repartition { src, .. }
             | TraOp::Aggregate { src, .. }
             | TraOp::ReKey { src, .. }
-            | TraOp::Assemble { src, .. } => vec![*src],
+            | TraOp::Assemble { src, .. }
+            | TraOp::Reuse { src, .. } => vec![*src],
             TraOp::Join { inputs, .. } => inputs.clone(),
         }
     }
@@ -178,7 +198,8 @@ impl TraOp {
             TraOp::Repartition { src, .. }
             | TraOp::Aggregate { src, .. }
             | TraOp::ReKey { src, .. }
-            | TraOp::Assemble { src, .. } => vec![src],
+            | TraOp::Assemble { src, .. }
+            | TraOp::Reuse { src, .. } => vec![src],
             TraOp::Join { inputs, .. } => inputs.iter_mut().collect(),
         }
     }
@@ -190,6 +211,13 @@ impl TraOp {
 /// the j-th output label within the vertex's unique labels; `oproj[o][j]`
 /// the position of operand `o`'s j-th label. Positions stay valid under
 /// pass rewiring because passes never change a vertex's label lists.
+///
+/// `Join` nodes additionally carry the vertex op's structural signature
+/// (`sig`, [`crate::einsum::canon`]'s renumbered `op_sig`) and its
+/// label-name-extended variant (`named_sig`), frozen at build time so
+/// the `cse` pass can detect equal subprograms without the source graph
+/// — and, under label-role-sensitive strategies, refuse to merge
+/// same-shape vertices whose concrete label names differ.
 #[derive(Clone, Debug)]
 pub struct TraNode {
     pub op: TraOp,
@@ -197,6 +225,8 @@ pub struct TraNode {
     pub(crate) name: String,
     pub(crate) zproj: Vec<usize>,
     pub(crate) oproj: Vec<Vec<usize>>,
+    pub(crate) sig: String,
+    pub(crate) named_sig: String,
 }
 
 /// A typed TRA program: nodes in topological order over logical
@@ -268,6 +298,8 @@ pub fn from_plan(g: &EinGraph, plan: &Plan) -> Result<TraProgram> {
                     name: vert.name.clone(),
                     zproj: vec![],
                     oproj: vec![],
+                    sig: String::new(),
+                    named_sig: String::new(),
                 });
                 rel_of[v.0] = Some(rel);
             }
@@ -318,6 +350,8 @@ pub fn from_plan(g: &EinGraph, plan: &Plan) -> Result<TraProgram> {
                         name: vert.name.clone(),
                         zproj: vec![],
                         oproj: vec![],
+                        sig: String::new(),
+                        named_sig: String::new(),
                     });
                     in_rels.push(rel);
                     oproj.push(opj);
@@ -335,16 +369,41 @@ pub fn from_plan(g: &EinGraph, plan: &Plan) -> Result<TraProgram> {
                     part: d.clone(),
                     labels: uniq.clone(),
                 });
+                // Pure elementwise maps (Unary with lz == lx: no
+                // permutation, no aggregation) are what `fuse-epilogue`
+                // folds into their producer's kernel.
+                let map_op = match op {
+                    EinSum::Unary {
+                        lx, lz, op: uop, ..
+                    } if lz == lx => Some(*uop),
+                    _ => None,
+                };
+                let sig = crate::einsum::canon::op_sig(op);
+                let mut named_sig = sig.clone();
+                named_sig.push('|');
+                for lo in op.operand_labels() {
+                    for l in lo.iter() {
+                        let _ = write!(named_sig, "{l},");
+                    }
+                    named_sig.push(';');
+                }
+                for l in lz.iter() {
+                    let _ = write!(named_sig, "{l},");
+                }
                 p.nodes.push(TraNode {
                     op: TraOp::Join {
                         vertex: v,
                         inputs: in_rels,
                         flops_per_call,
+                        map_op,
+                        epilogue: vec![],
                     },
                     out: jrel,
                     name: vert.name.clone(),
                     zproj: zproj.clone(),
                     oproj,
+                    sig,
+                    named_sig,
                 });
                 let lagg = op.lagg();
                 let n_agg: usize = crate::einsum::label::project(d, &lagg, &uniq)
@@ -376,6 +435,8 @@ pub fn from_plan(g: &EinGraph, plan: &Plan) -> Result<TraProgram> {
                     name: vert.name.clone(),
                     zproj,
                     oproj: vec![],
+                    sig: String::new(),
+                    named_sig: String::new(),
                 });
                 rel_of[v.0] = Some(orel);
             }
@@ -395,9 +456,27 @@ pub fn from_plan(g: &EinGraph, plan: &Plan) -> Result<TraProgram> {
             name: g.vertex(out).name.clone(),
             zproj: vec![],
             oproj: vec![],
+            sig: String::new(),
+            named_sig: String::new(),
         });
     }
     Ok(p)
+}
+
+/// Static task/byte footprint of a program, computed without emitting:
+/// [`TraProgram::task_stats`] mirrors [`TraProgram::emit_tasks`]'s
+/// arithmetic exactly (identity and aliased repartitions are free,
+/// reduction trees count their internal fold nodes). The pass manager
+/// snapshots it around every pass so each rewrite's task and
+/// repartition-byte delta is attributed to that pass by name.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProgStats {
+    /// Tasks `emit_tasks` would create.
+    pub tasks: usize,
+    /// `Repart` tasks among them.
+    pub repart_tasks: usize,
+    /// Total bytes those repartition tasks materialize.
+    pub repart_bytes: u64,
 }
 
 /// How a relation's tiles are reachable during emission: either as
@@ -539,6 +618,8 @@ impl TraProgram {
                     vertex,
                     inputs,
                     flops_per_call,
+                    epilogue,
+                    ..
                 } => {
                     let d = &out_s.part;
                     let bz: Vec<usize> = node.zproj.iter().map(|&i| out_s.bound[i]).collect();
@@ -582,12 +663,16 @@ impl TraProgram {
                         }
                         let zkey: Vec<usize> = node.zproj.iter().map(|&i| key[i]).collect();
                         let bytes = tile_bytes(&bz, &dz, &zkey);
-                        kernels.push(tg.push_task(
+                        let tid = tg.push_task(
                             TaskKind::Kernel { vertex: *vertex, key },
                             deps,
                             bytes,
                             *flops_per_call,
-                        ));
+                        );
+                        if !epilogue.is_empty() {
+                            tg.kernel_epilogue.insert(tid, epilogue.clone());
+                        }
+                        kernels.push(tid);
                     }
                     prov[node.out.0] = Some(Provider::Direct(kernels));
                 }
@@ -695,9 +780,86 @@ impl TraProgram {
                     // materialized after the run); the node only marks
                     // the relation as externally observed.
                 }
+                TraOp::Reuse { vertex, src } => {
+                    // A merged duplicate (the `cse` pass): forward the
+                    // canonical chain's tiles, zero tasks — but register
+                    // them under the duplicate vertex too, so repartition
+                    // key recovery and output assembly still resolve it.
+                    let tiles = match prov[src.0].as_ref() {
+                        Some(Provider::Direct(t)) => t.clone(),
+                        _ => {
+                            return Err(Error::TaskGraph(
+                                "reuse source is not a materialized relation (internal)".into(),
+                            ))
+                        }
+                    };
+                    tg.vertex_outputs.insert(*vertex, tiles.clone());
+                    tg.vertex_out_part.insert(*vertex, out_s.part.clone());
+                    prov[node.out.0] = Some(Provider::Direct(tiles));
+                }
             }
         }
         Ok(tg)
+    }
+
+    /// Static task/byte footprint: what [`Self::emit_tasks`] would
+    /// produce, without building the graph. Mirrors emission exactly —
+    /// identity/aliased repartitions and ReKey/Assemble/Reuse nodes are
+    /// free; tree aggregations count the internal fold tasks of the
+    /// level-by-level chunking (a remainder of one carries up taskless).
+    pub fn task_stats(&self) -> ProgStats {
+        let mut s = ProgStats::default();
+        for node in &self.nodes {
+            let out_s = &self.rels[node.out.0];
+            match &node.op {
+                TraOp::Partition { .. } | TraOp::Join { .. } => s.tasks += out_s.num_tiles(),
+                TraOp::Repartition { src, alias, .. } => {
+                    let have = &self.rels[src.0].part;
+                    let need = &out_s.part;
+                    if have == need || *alias {
+                        continue;
+                    }
+                    for key in index_space(need) {
+                        s.repart_bytes += tile_bytes(&out_s.bound, need, &key) as u64;
+                    }
+                    s.tasks += out_s.num_tiles();
+                    s.repart_tasks += out_s.num_tiles();
+                }
+                TraOp::Aggregate {
+                    src, tree_arity, ..
+                } => {
+                    let groups = out_s.num_tiles();
+                    let group = self.rels[src.0].num_tiles() / groups.max(1);
+                    let per_group = match tree_arity {
+                        Some(r) if group > *r => {
+                            let mut tasks = 0usize;
+                            let mut level = group;
+                            loop {
+                                let mut next = 0usize;
+                                let mut i = 0usize;
+                                while i < level {
+                                    let chunk = (*r).min(level - i);
+                                    if chunk > 1 {
+                                        tasks += 1;
+                                    }
+                                    next += 1;
+                                    i += chunk;
+                                }
+                                if next == 1 {
+                                    break;
+                                }
+                                level = next;
+                            }
+                            tasks
+                        }
+                        _ => 1,
+                    };
+                    s.tasks += groups * per_group;
+                }
+                TraOp::ReKey { .. } | TraOp::Assemble { .. } | TraOp::Reuse { .. } => {}
+            }
+        }
+        s
     }
 
     /// Pretty-print the program: one line per node with its output
@@ -731,9 +893,20 @@ impl TraProgram {
                     };
                     format!(" op{operand}{tag}")
                 }
-                TraOp::Join { flops_per_call, .. } => {
+                TraOp::Join {
+                    flops_per_call,
+                    epilogue,
+                    ..
+                } => {
+                    let fused = if epilogue.is_empty() {
+                        String::new()
+                    } else {
+                        let ops: Vec<String> =
+                            epilogue.iter().map(|e| format!("{e:?}")).collect();
+                        format!(" epilogue[{}]", ops.join(","))
+                    };
                     format!(
-                        " {} calls, {:.3} Mflop/call",
+                        " {} calls, {:.3} Mflop/call{fused}",
                         self.rels[node.out.0].num_tiles(),
                         flops_per_call / 1e6
                     )
@@ -752,6 +925,7 @@ impl TraProgram {
                     }
                 }
                 TraOp::ReKey { .. } | TraOp::Assemble { .. } => String::new(),
+                TraOp::Reuse { .. } => " (merged duplicate)".into(),
             };
             let _ = writeln!(
                 s,
@@ -919,6 +1093,313 @@ impl TraProgram {
         notes
     }
 
+    /// Choose input pre-partitionings that elide whole repartition
+    /// chains. The paper treats input placement as free and offline, so
+    /// an input `Partition`'s layout is ours to pick: for each input
+    /// relation consumed only through `Repartition` nodes, score the
+    /// current layout and every consumer's needed layout with the §7
+    /// repartition cost model ([`crate::decomp::cost::cost_repart`],
+    /// summed over all consumers) and rewrite to a strict improvement
+    /// (first minimum wins; the current layout wins ties). Newly-identity
+    /// repartitions then emit zero tasks (and `elide-identity-repart`
+    /// removes them from the listing). Bitwise-neutral: repartitioned
+    /// tiles carry the same bytes regardless of the producer layout.
+    pub(crate) fn propagate_partitions(&mut self) -> Vec<String> {
+        use crate::decomp::cost::cost_repart;
+        let mut notes = Vec::new();
+        for ni in 0..self.nodes.len() {
+            let out = match &self.nodes[ni].op {
+                TraOp::Partition { .. } => self.nodes[ni].out,
+                _ => continue,
+            };
+            let bound = self.rels[out.0].bound.clone();
+            let current = self.rels[out.0].part.clone();
+            // Consumers: only plain (non-alias) Repartition nodes may
+            // read it, or the layout is pinned (a join or an aliased Π
+            // reads the current tiling directly).
+            let mut needs: Vec<Vec<usize>> = Vec::new();
+            let mut pinned = false;
+            for node in &self.nodes {
+                match &node.op {
+                    TraOp::Repartition { src, alias, .. } if *src == out => {
+                        if *alias {
+                            pinned = true;
+                        } else {
+                            needs.push(self.rels[node.out.0].part.clone());
+                        }
+                    }
+                    op if op.input_rels().contains(&out) => pinned = true,
+                    _ => {}
+                }
+            }
+            if pinned || needs.is_empty() {
+                continue;
+            }
+            let score = |cand: &[usize]| -> f64 {
+                needs.iter().map(|n| cost_repart(n, cand, &bound)).sum()
+            };
+            let cur_cost = score(&current);
+            let (mut best, mut best_cost) = (current.clone(), cur_cost);
+            for cand in &needs {
+                let c = score(cand);
+                if c < best_cost {
+                    best_cost = c;
+                    best = cand.clone();
+                }
+            }
+            if best == current {
+                continue;
+            }
+            notes.push(format!(
+                "{}: input pre-partitioning {current:?} -> {best:?} \
+                 (modeled repart floats {cur_cost:.0} -> {best_cost:.0})",
+                self.nodes[ni].name
+            ));
+            self.rels[out.0].part = best;
+        }
+        notes
+    }
+
+    /// IR-level common-subexpression elimination: value-number the nodes
+    /// in topological order (key = op kind + frozen structural signature
+    /// + resolved input relations + output partitioning + op parameters)
+    /// and merge duplicates. Intermediate duplicates (`Repartition`,
+    /// `Join`) are deleted outright with their consumers redirected to
+    /// the first occurrence; a duplicate vertex *terminal* (`Aggregate` /
+    /// `ReKey`) becomes a zero-task [`TraOp::Reuse`] so the merged
+    /// vertex still registers its output tiles for downstream key
+    /// recovery and assembly. With `label_sensitive` set (role-driven
+    /// strategies that plan by label *name*), joins compare their
+    /// label-name-extended signatures, so same-shape vertices whose
+    /// label roles differ never merge — the same caveat the plan cache
+    /// honors with `Canon::named_signature`.
+    pub(crate) fn cse(&mut self, label_sensitive: bool) -> Vec<String> {
+        let mut notes = Vec::new();
+        // `redirect` rewires consumers of deleted intermediate dups;
+        // `vn` additionally equates merged terminals for key purposes
+        // (their relations stay live — the Reuse node provides them).
+        let mut redirect: Vec<usize> = (0..self.rels.len()).collect();
+        let mut vn: Vec<usize> = (0..self.rels.len()).collect();
+        fn resolve(map: &[usize], mut r: usize) -> usize {
+            while map[r] != r {
+                r = map[r];
+            }
+            r
+        }
+        let mut seen: HashMap<String, (usize, String)> = HashMap::new();
+        let mut dead = vec![false; self.nodes.len()];
+        for ni in 0..self.nodes.len() {
+            let node = &self.nodes[ni];
+            let out_s = &self.rels[node.out.0];
+            let key = match &node.op {
+                // Tiles of a Π are a pure function of (source relation,
+                // target partitioning) — producer/consumer/operand tags
+                // are bookkeeping.
+                TraOp::Repartition { src, alias, .. } => {
+                    format!("R|{}|{:?}|{alias}", resolve(&vn, src.0), out_s.part)
+                }
+                TraOp::Join {
+                    inputs,
+                    map_op,
+                    epilogue,
+                    ..
+                } => {
+                    let sig = if label_sensitive {
+                        &node.named_sig
+                    } else {
+                        &node.sig
+                    };
+                    let ins: Vec<usize> = inputs.iter().map(|r| resolve(&vn, r.0)).collect();
+                    format!("J|{sig}|{ins:?}|{:?}|{map_op:?}|{epilogue:?}", out_s.part)
+                }
+                TraOp::Aggregate {
+                    src,
+                    agg,
+                    tree_arity,
+                    ..
+                } => format!(
+                    "A|{}|{agg:?}|{tree_arity:?}|{:?}|{:?}",
+                    resolve(&vn, src.0),
+                    out_s.part,
+                    node.zproj
+                ),
+                TraOp::ReKey { src, .. } => format!(
+                    "K|{}|{:?}|{:?}",
+                    resolve(&vn, src.0),
+                    out_s.part,
+                    node.zproj
+                ),
+                // Partitions of distinct inputs hold distinct data;
+                // Assemble/Reuse are markers. Never merged.
+                _ => continue,
+            };
+            let hit = seen.get(&key).cloned();
+            match hit {
+                None => {
+                    seen.insert(key, (node.out.0, node.name.clone()));
+                }
+                Some((canon, canon_name)) => {
+                    let out = node.out.0;
+                    match &node.op {
+                        TraOp::Aggregate { vertex, .. } | TraOp::ReKey { vertex, .. } => {
+                            let vertex = *vertex;
+                            vn[out] = canon;
+                            notes.push(format!(
+                                "{}: duplicate of {canon_name}, reusing r{canon}",
+                                node.name
+                            ));
+                            self.nodes[ni].op = TraOp::Reuse {
+                                vertex,
+                                src: RelId(canon),
+                            };
+                        }
+                        _ => {
+                            redirect[out] = canon;
+                            vn[out] = canon;
+                            dead[ni] = true;
+                            notes.push(format!(
+                                "{}: duplicate {} of {canon_name} merged",
+                                node.name,
+                                node.op.kind_name()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        if notes.is_empty() {
+            return notes;
+        }
+        for node in &mut self.nodes {
+            for r in node.op.input_rels_mut() {
+                r.0 = resolve(&redirect, r.0);
+            }
+        }
+        let mut i = 0;
+        self.nodes.retain(|_| {
+            let keep = !dead[i];
+            i += 1;
+            keep
+        });
+        notes
+    }
+
+    /// Fold pure elementwise map vertices into their producer's kernel
+    /// epilogue. A candidate is a single-input `Join` with `map_op`
+    /// whose operand relation is produced by a `ReKey` (kernel tiles,
+    /// nothing aggregates between kernel and consumer — an epilogue must
+    /// not commute past an `Aggregate`) and is consumed by this join
+    /// alone. The map (plus anything already fused into the consumer)
+    /// is appended to the producer `Join`'s epilogue, the producer's
+    /// terminal takes over the consumer terminal's vertex identity, and
+    /// the consumer's Join/ReKey pair disappears — its kernel tasks with
+    /// it. Runs to fixpoint so map chains stack in application order.
+    /// Requires identity Π's to be gone (`elide-identity-repart` runs
+    /// earlier); a surviving Repartition between producer and consumer
+    /// blocks fusion, as it must. Bitwise-neutral: the epilogue applies
+    /// the identical pointwise op to the identical tile elements the
+    /// fused vertex's own kernel would have.
+    pub(crate) fn fuse_epilogues(&mut self) -> Vec<String> {
+        let mut notes = Vec::new();
+        loop {
+            let mut consumers = vec![0usize; self.rels.len()];
+            let mut producer_of: Vec<Option<usize>> = vec![None; self.rels.len()];
+            for (ni, node) in self.nodes.iter().enumerate() {
+                producer_of[node.out.0] = Some(ni);
+                for r in node.op.input_rels() {
+                    consumers[r.0] += 1;
+                }
+            }
+            // (consumer Join, consumer ReKey, producer ReKey, producer Join)
+            let mut found: Option<(usize, usize, usize, usize)> = None;
+            for (ni, node) in self.nodes.iter().enumerate() {
+                let src = match &node.op {
+                    TraOp::Join {
+                        inputs,
+                        map_op: Some(_),
+                        ..
+                    } if inputs.len() == 1 => inputs[0],
+                    _ => continue,
+                };
+                if consumers[src.0] != 1 || self.rels[node.out.0].part != self.rels[src.0].part {
+                    continue;
+                }
+                let pi = match producer_of[src.0] {
+                    Some(pi) if matches!(self.nodes[pi].op, TraOp::ReKey { .. }) => pi,
+                    _ => continue,
+                };
+                let pj = match &self.nodes[pi].op {
+                    TraOp::ReKey { src: jrel, .. } => match producer_of[jrel.0] {
+                        Some(pj) if matches!(self.nodes[pj].op, TraOp::Join { .. }) => pj,
+                        _ => continue,
+                    },
+                    _ => unreachable!("matched above"),
+                };
+                let mut ri = None;
+                for (i, n) in self.nodes.iter().enumerate() {
+                    if matches!(&n.op, TraOp::ReKey { src, .. } if *src == node.out) {
+                        ri = Some(i);
+                        break;
+                    }
+                }
+                let Some(ri) = ri else { continue };
+                found = Some((ni, ri, pi, pj));
+                break;
+            }
+            let Some((ni, ri, pi, pj)) = found else {
+                break;
+            };
+            let (map, mut absorbed) = match &self.nodes[ni].op {
+                TraOp::Join {
+                    map_op: Some(m),
+                    epilogue,
+                    ..
+                } => (*m, epilogue.clone()),
+                _ => unreachable!("candidate is a map join"),
+            };
+            let dropped = self.rels[self.nodes[ni].out.0].num_tiles();
+            // The consumer terminal's *current* vertex identity (it may
+            // already carry an even-later fused consumer) moves onto the
+            // producer's terminal, along with its display name.
+            let (cons_vertex, cons_rel) = match &self.nodes[ri].op {
+                TraOp::ReKey { vertex, .. } => (*vertex, self.nodes[ri].out),
+                _ => unreachable!("terminal is a rekey"),
+            };
+            let cons_name = self.nodes[ri].name.clone();
+            let prod_rel = match &self.nodes[ni].op {
+                TraOp::Join { inputs, .. } => inputs[0],
+                _ => unreachable!("candidate is a map join"),
+            };
+            notes.push(format!(
+                "{cons_name}: map {map:?} fused into {}'s kernel epilogue \
+                 ({dropped} kernel tasks dropped)",
+                self.nodes[pj].name
+            ));
+            if let TraOp::Join { epilogue, .. } = &mut self.nodes[pj].op {
+                epilogue.push(map);
+                epilogue.append(&mut absorbed);
+            }
+            if let TraOp::ReKey { vertex, .. } = &mut self.nodes[pi].op {
+                *vertex = cons_vertex;
+            }
+            self.nodes[pi].name = cons_name;
+            for node in &mut self.nodes {
+                for r in node.op.input_rels_mut() {
+                    if *r == cons_rel {
+                        *r = prod_rel;
+                    }
+                }
+            }
+            let mut i = 0;
+            self.nodes.retain(|_| {
+                let keep = i != ni && i != ri;
+                i += 1;
+                keep
+            });
+        }
+        notes
+    }
+
     /// Test support: append a node verbatim (used to exercise
     /// `dead-rel-elim` on programs `from_plan` cannot produce).
     #[cfg(test)]
@@ -930,6 +1411,8 @@ impl TraProgram {
             name: name.into(),
             zproj: vec![],
             oproj: vec![],
+            sig: String::new(),
+            named_sig: String::new(),
         });
     }
 }

@@ -225,6 +225,14 @@ fn pool_class_for_cap(cap: usize) -> Option<usize> {
 impl BufferPool {
     /// Take a buffer of exactly `len` elements with **stale contents**
     /// (see the type docs); the caller must overwrite every element.
+    ///
+    /// Debug builds poison reused buffers with NaN before handing them
+    /// out, so a caller that *reads* before overwriting (a broken
+    /// `beta = 0` kernel, a partially-written repartition target, an
+    /// aggregation folding into uninitialized memory) propagates NaN into
+    /// its output and fails the dense-reference comparisons instead of
+    /// silently returning whatever the buffer held last. Release builds
+    /// skip the fill — the contract is unchanged, only unenforced.
     pub fn take(len: usize) -> Vec<f32> {
         POOL.with(|p| {
             let mut pool = p.borrow_mut();
@@ -238,6 +246,8 @@ impl BufferPool {
                     } else {
                         v.resize(len, 0.0);
                     }
+                    #[cfg(debug_assertions)]
+                    v.fill(f32::NAN);
                     return v;
                 }
                 let mut v = Vec::with_capacity(1usize << c);

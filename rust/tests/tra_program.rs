@@ -18,7 +18,7 @@ use eindecomp::coordinator::driver::DriverConfig;
 use eindecomp::coordinator::session::Session;
 use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
 use eindecomp::decomp::Plan;
-use eindecomp::einsum::expr::EinSum;
+use eindecomp::einsum::expr::{EinSum, UnaryOp};
 use eindecomp::einsum::graph::EinGraph;
 use eindecomp::einsum::label::labels;
 use eindecomp::models::ffnn::ffnn_step;
@@ -27,7 +27,7 @@ use eindecomp::models::matchain::chain_graph;
 use eindecomp::runtime::NativeEngine;
 use eindecomp::sim::cluster::{Cluster, ExecMode};
 use eindecomp::sim::NetworkProfile;
-use eindecomp::taskgraph::lower::{lower_graph, lower_graph_reference};
+use eindecomp::taskgraph::lower::lower_graph_reference;
 use eindecomp::taskgraph::placement::{place, Policy};
 use eindecomp::taskgraph::TaskKind;
 use eindecomp::tensor::Tensor;
@@ -73,9 +73,6 @@ fn ir_emission_matches_reference_lowering_differentially() {
                     "{name} p={p} {}: no-pass emission diverged",
                     strategy.name()
                 );
-
-                // the wrapper is the same path
-                assert_eq!(lower_graph(&g, &plan).unwrap(), reference);
 
                 // the default (safe) pipeline is task-graph-neutral
                 let mut prog_safe = from_plan(&g, &plan).unwrap();
@@ -148,7 +145,7 @@ fn repart_count(tg: &eindecomp::taskgraph::TaskGraph) -> usize {
 #[test]
 fn alias_pass_zeroes_refinement_reparts_bitwise() {
     let (g, plan) = refinement_chain();
-    let without = lower_graph(&g, &plan).unwrap();
+    let without = from_plan(&g, &plan).unwrap().emit_tasks().unwrap();
     assert_eq!(repart_count(&without), 16, "16 refinement tiles expected");
 
     let mut prog = from_plan(&g, &plan).unwrap();
@@ -205,7 +202,7 @@ fn agg_tree_bounds_fan_in_and_stays_deterministic() {
     plan.parts.insert(z, vec![2, 8, 2]); // 8-way aggregation groups
     plan.finalize_inputs(&g);
 
-    let serial = lower_graph(&g, &plan).unwrap();
+    let serial = from_plan(&g, &plan).unwrap().emit_tasks().unwrap();
     let serial_max_fanin = serial
         .tasks
         .iter()
@@ -278,7 +275,7 @@ fn session_surfaces_passes_and_explain() {
     let session = Session::new(cfg).unwrap();
     let g = chain_graph(24, false).unwrap().graph;
     let exe = session.compile(&g).unwrap();
-    assert_eq!(exe.passes().len(), 4);
+    assert_eq!(exe.passes().len(), 7);
     exe.task_graph().validate(2).unwrap(); // compile-time validation held
 
     let mut inputs = HashMap::new();
@@ -347,4 +344,244 @@ fn coarsening_reparts_are_never_aliased() {
         .0;
     let dense = eindecomp::runtime::native::eval_graph(&g, &inputs).unwrap();
     assert!(outs[&z2].allclose(&dense[&z2], 1e-4, 1e-5));
+}
+
+/// Tentpole acceptance: `fuse-epilogue` folds a pure map vertex into its
+/// producer's kernel epilogue — fewer kernel tasks, and outputs stay
+/// bitwise-identical to the unfused pipeline across intra-op sharding
+/// degrees (the epilogue applies per whole output tile, outside the
+/// sharded GEMM, so the shard count cannot reorder it).
+#[test]
+fn fused_epilogue_bitwise_across_intra_op_threads() {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![32, 32]);
+    let b = g.input("B", vec![32, 32]);
+    let z = g
+        .add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let r = g.add("R", EinSum::map(labels("i k"), UnaryOp::Relu), vec![z]).unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z, vec![2, 1, 2]); // dz(Z) = [2, 2]
+    plan.parts.insert(r, vec![2, 2]); // same layout: fusable
+    plan.finalize_inputs(&g);
+
+    let unfused = from_plan(&g, &plan).unwrap().emit_tasks().unwrap();
+    let mut prog = from_plan(&g, &plan).unwrap();
+    let log = PassManager::new(&PassSelector::All).run(&mut prog);
+    let fused = prog.emit_tasks().unwrap();
+    assert_eq!(
+        fused.kernel_calls(),
+        unfused.kernel_calls() - 4,
+        "R's 4 map kernels must fold into Z's epilogue"
+    );
+    let entry = log.entries.iter().find(|e| e.pass == "fuse-epilogue").unwrap();
+    assert_eq!(entry.changes, 1);
+    assert!(entry.tasks_delta < 0, "fusion must drop tasks");
+    assert!(!fused.kernel_epilogue.is_empty(), "epilogue hook must be registered");
+
+    let mut inputs = HashMap::new();
+    inputs.insert(a, Tensor::random(&[32, 32], 11));
+    inputs.insert(b, Tensor::random(&[32, 32], 12));
+    let engine = NativeEngine::new();
+    let dense = eindecomp::runtime::native::eval_graph(&g, &inputs).unwrap();
+    let base = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::None)
+        .with_intra_op(1)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    assert!(base[&r].allclose(&dense[&r], 1e-4, 1e-5));
+    for intra in [1usize, 2, 8] {
+        let outs = Cluster::new(4, NetworkProfile::loopback())
+            .with_passes(PassSelector::All)
+            .with_intra_op(intra)
+            .execute(&g, &plan, &engine, &inputs)
+            .unwrap()
+            .0;
+        assert_eq!(outs[&r], base[&r], "intra_op {intra}: fused epilogue changed bits");
+    }
+}
+
+/// IR CSE merges duplicate vertex chains into one, halving kernel work;
+/// both merged vertices still assemble (shared result tiles are read by
+/// each output) and execution stays bitwise-identical.
+#[test]
+fn cse_merges_duplicate_chains_and_shares_assembly() {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![16, 16]);
+    let b = g.input("B", vec![16, 16]);
+    let z1 = g
+        .add(
+            "Z1",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let z2 = g
+        .add(
+            "Z2",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z1, vec![2, 2, 2]); // aggregating: terminal is an Aggregate
+    plan.parts.insert(z2, vec![2, 2, 2]);
+    plan.finalize_inputs(&g);
+
+    let baseline = from_plan(&g, &plan).unwrap().emit_tasks().unwrap();
+    let mut prog = from_plan(&g, &plan).unwrap();
+    let log = PassManager::new(&PassSelector::All).run(&mut prog);
+    let merged = prog.emit_tasks().unwrap();
+    assert_eq!(
+        merged.kernel_calls() * 2,
+        baseline.kernel_calls(),
+        "duplicate join kernels must halve"
+    );
+    let entry = log.entries.iter().find(|e| e.pass == "cse").unwrap();
+    assert!(entry.changes > 0);
+    assert!(entry.tasks_delta < 0, "cse must drop tasks");
+    // both output vertices registered, sharing one tile set
+    assert_eq!(merged.vertex_outputs[&z1], merged.vertex_outputs[&z2]);
+
+    let mut inputs = HashMap::new();
+    inputs.insert(a, Tensor::random(&[16, 16], 21));
+    inputs.insert(b, Tensor::random(&[16, 16], 22));
+    let engine = NativeEngine::new();
+    let base = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::None)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    let outs = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::All)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    assert_eq!(outs[&z1], base[&z1], "cse changed Z1 bits");
+    assert_eq!(outs[&z2], base[&z2], "cse changed Z2 bits");
+}
+
+/// Mirrors `canon.rs`'s adversarial named-signature case: same-shape
+/// joins whose label roles differ (batch `b` vs sequence `s`) are
+/// structurally isomorphic, so structural CSE merges them — but under a
+/// label-role-sensitive strategy the merge is wrong, and the
+/// label-sensitive manager must leave them alone.
+#[test]
+fn cse_respects_label_roles_under_named_signatures() {
+    let mut g = EinGraph::new();
+    let x = g.input("X", vec![16, 8]);
+    let w = g.input("W", vec![8, 16]);
+    g.add(
+        "Zb",
+        EinSum::contraction(labels("b j"), labels("j k"), labels("b k")),
+        vec![x, w],
+    )
+    .unwrap();
+    g.add(
+        "Zs",
+        EinSum::contraction(labels("s j"), labels("j k"), labels("s k")),
+        vec![x, w],
+    )
+    .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(g.by_name("Zb").unwrap(), vec![2, 1, 2]);
+    plan.parts.insert(g.by_name("Zs").unwrap(), vec![2, 1, 2]);
+    plan.finalize_inputs(&g);
+
+    let mut prog = from_plan(&g, &plan).unwrap();
+    let log = PassManager::new(&PassSelector::All).run(&mut prog);
+    assert!(
+        log.entries.iter().any(|e| e.pass == "cse" && e.changes > 0),
+        "structural cse should merge the isomorphic twins"
+    );
+
+    let mut prog2 = from_plan(&g, &plan).unwrap();
+    let log2 = PassManager::new(&PassSelector::All)
+        .with_label_sensitivity(true)
+        .run(&mut prog2);
+    assert!(
+        log2.entries.iter().all(|e| e.pass != "cse" || e.changes == 0),
+        "label-sensitive cse must not merge across label roles"
+    );
+}
+
+/// `propagate-partitions` rewrites a mis-partitioned input to its
+/// consumer's needed layout, eliding the repartition chain entirely —
+/// the byte win lands on the propagation entry itself (the `Π` becomes
+/// identity the moment the layout changes).
+#[test]
+fn propagation_elides_repart_chains() {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![16, 16]);
+    let b = g.input("B", vec![16, 16]);
+    let z = g
+        .add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z, vec![4, 1, 1]); // A needed as [4,1], B as [1,1]
+    // deliberately mis-partitioned: A split along the wrong axis
+    plan.input_parts.insert(a, vec![1, 4]);
+    plan.input_parts.insert(b, vec![1, 1]);
+
+    let baseline = from_plan(&g, &plan).unwrap().emit_tasks().unwrap();
+    assert_eq!(repart_count(&baseline), 4, "mis-partitioned A needs 4 repart tiles");
+
+    let mut prog = from_plan(&g, &plan).unwrap();
+    let log = PassManager::new(&PassSelector::All).run(&mut prog);
+    let tuned = prog.emit_tasks().unwrap();
+    assert_eq!(repart_count(&tuned), 0, "propagated layout must elide all reparts");
+    let entry = log
+        .entries
+        .iter()
+        .find(|e| e.pass == "propagate-partitions")
+        .unwrap();
+    assert_eq!(entry.changes, 1, "only A needs rewriting");
+    assert!(entry.tasks_delta < 0);
+    assert!(entry.repart_bytes_delta < 0);
+
+    // execution agrees bitwise (the executor slices inputs by the
+    // emitted layout, not the plan's)
+    let mut inputs = HashMap::new();
+    inputs.insert(a, Tensor::random(&[16, 16], 31));
+    inputs.insert(b, Tensor::random(&[16, 16], 32));
+    let engine = NativeEngine::new();
+    let base = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::None)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    let outs = Cluster::new(4, NetworkProfile::loopback())
+        .with_passes(PassSelector::All)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0;
+    assert_eq!(outs[&z], base[&z], "propagation changed execution bits");
+}
+
+/// Regression for the zero-byte cost-model fix, pinned at the ledger
+/// level: a fully-aliased refinement chain moves zero modeled repart
+/// bytes, and zero-byte transfers cost exactly zero seconds even on a
+/// latency-bearing profile.
+#[test]
+fn alias_refinement_ledger_is_free() {
+    let (g, plan) = refinement_chain();
+    let net = NetworkProfile::cpu_cluster();
+    assert!(net.latency_s > 0.0);
+    assert_eq!(net.wire_s(0), 0.0, "zero bytes must cost zero seconds");
+    assert_eq!(net.host_s(0), 0.0);
+    let sel: PassSelector = "elide-identity-repart,alias-refinement-repart".parse().unwrap();
+    let rep = Cluster::new(4, net)
+        .with_passes(sel)
+        .dry_run(&g, &plan)
+        .unwrap();
+    assert_eq!(rep.bytes_repart, 0, "aliased reparts move no modeled bytes");
 }
