@@ -27,7 +27,12 @@
 //!   repartition byte total with the pipeline on;
 //! * `alias-refinement-repart` drops refinement-repart tasks to zero
 //!   with bitwise-identical execution;
-//! * `agg-tree` bounds aggregation fan-in by the tree arity.
+//! * `agg-tree` bounds aggregation fan-in by the tree arity;
+//! * the topology sweep (p=8, flat / two-level / three-level) executes
+//!   every workload bitwise-identically with `lower-collectives` on,
+//!   and under the three-level topology at least one workload moves
+//!   strictly fewer cross-node bytes (per-link-class ledger recorded
+//!   in the JSON).
 //!
 //! Writes `BENCH_lowering.json` (uploaded as a CI artifact). Run with
 //! `EINDECOMP_SMOKE=1` for capped iteration counts.
@@ -45,7 +50,7 @@ use eindecomp::models::ffnn::ffnn_step;
 use eindecomp::models::llama::{llama_graph, LlamaConfig};
 use eindecomp::models::matchain::chain_graph;
 use eindecomp::runtime::NativeEngine;
-use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::sim::{Cluster, NetworkProfile, Topology};
 use eindecomp::taskgraph::lower::lower_graph_reference;
 use eindecomp::taskgraph::{TaskGraph, TaskKind};
 use eindecomp::tensor::Tensor;
@@ -67,10 +72,19 @@ fn is_agg(k: &TaskKind) -> bool {
     matches!(k, TaskKind::Agg { .. })
 }
 
+/// Repartition-class movement: plain repart assembles plus collective
+/// relay hops (`lower-collectives` turns the former into the latter, and
+/// `TraProgram::task_stats` ledgers both as repart bytes — counting only
+/// `Repart` here would make the per-pass deltas stop rolling up).
 fn repart_bytes(tg: &TaskGraph) -> u64 {
     tg.tasks
         .iter()
-        .filter(|t| is_repart(&t.kind))
+        .filter(|t| {
+            matches!(
+                t.kind,
+                TaskKind::Repart { .. } | TaskKind::Collective { .. }
+            )
+        })
         .map(|t| t.out_bytes as u64)
         .sum()
 }
@@ -349,6 +363,126 @@ fn main() {
     assert!(f1 <= 4, "agg-tree fan-in {f1} exceeds the arity");
     println!("agg-tree demo     : max Agg fan-in {f0} -> {f1} (arity 4)");
 
+    // --- topology sweep: per-link-class byte deltas from the collective
+    // lowering at p=8, flat / two-level / three-level. The acceptance
+    // bar: under the three-level topology at least one workload moves
+    // strictly fewer cross-node bytes (link classes above the innermost)
+    // with `lower-collectives` on — ring relays hop between neighboring
+    // members, so most hops stay on the fast intra-node links where the
+    // point-to-point pattern scattered them across the whole machine.
+    println!("=== topology sweep at p=8: safe vs +lower-collectives ===");
+    let p8 = 8usize;
+    let net = NetworkProfile::cpu_cluster();
+    let collective: PassSelector = "elide-identity-repart,lower-collectives,dead-rel-elim"
+        .parse()
+        .unwrap();
+    let sweep_graphs: Vec<(&str, EinGraph)> = vec![
+        (
+            "matchain",
+            chain_graph(if smoke { 32 } else { 64 }, false).unwrap().graph,
+        ),
+        ("ffnn", ffnn_step(32, 48, 24, 8).unwrap().graph),
+        (
+            "attention",
+            llama_graph(&LlamaConfig {
+                layers: 1,
+                batch: 2,
+                seq: 16,
+                model_dim: 32,
+                heads: 2,
+                head_dim: 16,
+                ffn_dim: 64,
+            })
+            .unwrap()
+            .graph,
+        ),
+    ];
+    // cross-node bytes: everything charged above the innermost class
+    fn cross_bytes(by_link: &[(String, u64)]) -> u64 {
+        by_link.iter().skip(1).map(|(_, b)| *b).sum()
+    }
+    let engine = NativeEngine::new();
+    let mut sweep_entries: Vec<Json> = Vec::new();
+    let mut cross_node_win = false;
+    for (wname, g) in &sweep_graphs {
+        let mut plan = assign(g, &Strategy::EinDecomp, p8, &roles).unwrap();
+        storage_shard_inputs(&mut plan);
+        let mut inputs = HashMap::new();
+        for (i, v) in g.inputs().into_iter().enumerate() {
+            inputs.insert(v, Tensor::random(&g.vertex(v).bound, 700 + i as u64));
+        }
+        for topo in [
+            Topology::flat_of(&net, p8),
+            Topology::two_level_of(&net, p8),
+            Topology::three_level_of(&net, p8),
+        ] {
+            let safe_cluster = Cluster::new(p8, net.clone())
+                .with_passes(PassSelector::Safe)
+                .with_topology(topo.clone());
+            let coll_cluster = Cluster::new(p8, net.clone())
+                .with_passes(collective.clone())
+                .with_topology(topo.clone());
+            let (safe_out, safe_rep) =
+                safe_cluster.execute(g, &plan, &engine, &inputs).unwrap();
+            let (coll_out, coll_rep) =
+                coll_cluster.execute(g, &plan, &engine, &inputs).unwrap();
+            // bitwise gate, in-bench: the lowering must not change results
+            for out in g.outputs() {
+                assert_eq!(
+                    safe_out[&out], coll_out[&out],
+                    "{wname}/{}: collective lowering diverged bitwise",
+                    topo.name()
+                );
+            }
+            let (sc, cc) = (
+                cross_bytes(&safe_rep.bytes_by_link),
+                cross_bytes(&coll_rep.bytes_by_link),
+            );
+            if topo.levels() == 3 && cc < sc {
+                cross_node_win = true;
+            }
+            let link_obj = |by: &[(String, u64)]| {
+                Json::Obj(
+                    by.iter()
+                        .map(|(n, b)| (n.clone(), Json::num(*b as f64)))
+                        .collect(),
+                )
+            };
+            println!(
+                "{wname:<10} {:<24} bytes {:>9} -> {:>9} | cross-node {:>9} -> {:>9}",
+                topo.name(),
+                safe_rep.bytes_moved,
+                coll_rep.bytes_moved,
+                sc,
+                cc
+            );
+            sweep_entries.push(Json::Obj(vec![
+                ("workload".into(), Json::str(*wname)),
+                ("topology".into(), Json::str(topo.name())),
+                ("levels".into(), Json::num(topo.levels() as f64)),
+                ("p".into(), Json::num(p8 as f64)),
+                ("bytes_moved_safe".into(), Json::num(safe_rep.bytes_moved as f64)),
+                (
+                    "bytes_moved_collective".into(),
+                    Json::num(coll_rep.bytes_moved as f64),
+                ),
+                ("bytes_by_link_safe".into(), link_obj(&safe_rep.bytes_by_link)),
+                (
+                    "bytes_by_link_collective".into(),
+                    link_obj(&coll_rep.bytes_by_link),
+                ),
+                ("cross_node_bytes_safe".into(), Json::num(sc as f64)),
+                ("cross_node_bytes_collective".into(), Json::num(cc as f64)),
+                ("bitwise_identical_execution".into(), Json::Bool(true)),
+            ]));
+        }
+    }
+    assert!(
+        cross_node_win,
+        "no workload reduced cross-node bytes under the three-level topology"
+    );
+    println!("cross-node byte reduction under three-level topology: confirmed");
+
     let report = Json::Obj(vec![
         ("iters".into(), Json::num(iters as f64)),
         ("workloads".into(), Json::Arr(entries)),
@@ -371,4 +505,12 @@ fn main() {
     ]);
     std::fs::write("BENCH_lowering.json", report.render()).expect("write BENCH_lowering.json");
     println!("wrote BENCH_lowering.json");
+
+    let topo_report = Json::Obj(vec![
+        ("p".into(), Json::num(p8 as f64)),
+        ("topology_sweep".into(), Json::Arr(sweep_entries)),
+    ]);
+    std::fs::write("BENCH_topology.json", topo_report.render())
+        .expect("write BENCH_topology.json");
+    println!("wrote BENCH_topology.json");
 }

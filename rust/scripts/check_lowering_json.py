@@ -6,10 +6,13 @@ CI gate for the TRA pass pipeline: every suite workload must carry a
 `changes` / `tasks_delta` / `repart_bytes_delta` fields, plus the
 workload-level task and repartition-byte totals the deltas roll up to.
 Fails (exit 1) if any field is missing or malformed, if the pass names
-do not match the pipeline, or if no workload shows the strict
-task+byte win the pipeline is supposed to deliver.
+do not match the pipeline, if no workload shows the strict task+byte
+win the pipeline is supposed to deliver, if the topology sweep's
+per-link-class byte ledgers do not roll up to the workload totals, or
+if no three-level workload shows a strict cross-node byte reduction
+from `lower-collectives`.
 
-Usage: check_lowering_json.py [path/to/BENCH_lowering.json]
+Usage: check_lowering_json.py [BENCH_lowering.json] [BENCH_topology.json]
 """
 
 import json
@@ -22,6 +25,7 @@ EXPECTED_PASSES = [
     "alias-refinement-repart",
     "fuse-epilogue",
     "agg-tree",
+    "lower-collectives",
     "dead-rel-elim",
 ]
 
@@ -44,15 +48,20 @@ def is_int_valued(v) -> bool:
     return isinstance(v, (int, float)) and not isinstance(v, bool) and float(v) == int(v)
 
 
-def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_lowering.json"
+def load(path: str):
     try:
         with open(path) as f:
-            report = json.load(f)
+            return json.load(f)
     except FileNotFoundError:
         fail(f"{path} not found (did the lowering bench run?)")
     except json.JSONDecodeError as e:
         fail(f"{path} is not valid JSON: {e}")
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_lowering.json"
+    topo_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_topology.json"
+    report = load(path)
 
     workloads = report.get("workloads")
     if not isinstance(workloads, list) or not workloads:
@@ -104,9 +113,53 @@ def main() -> None:
     if strict_wins == 0:
         fail("no workload shows a strict task+byte win with the full pipeline")
 
+    # topology sweep: per-link-class ledgers must roll up to the workload
+    # byte totals, and the three-level topology must show at least one
+    # strict cross-node byte reduction from lower-collectives.
+    sweep = load(topo_path).get("topology_sweep")
+    if not isinstance(sweep, list) or not sweep:
+        fail("top-level 'topology_sweep' missing or empty")
+    cross_node_wins = 0
+    for e in sweep:
+        name = f"{e.get('workload')}/{e.get('topology')}"
+        for arm in ("safe", "collective"):
+            by_link = e.get(f"bytes_by_link_{arm}")
+            if not isinstance(by_link, dict) or not by_link:
+                fail(f"{name}: 'bytes_by_link_{arm}' missing or empty")
+            total = e.get(f"bytes_moved_{arm}")
+            if not is_int_valued(total):
+                fail(f"{name}: 'bytes_moved_{arm}' missing or malformed")
+            classes = list(by_link.values())
+            if any(not is_int_valued(b) or b < 0 for b in classes):
+                fail(f"{name}: malformed per-class byte count in {arm} arm")
+            if sum(int(b) for b in classes) != int(total):
+                fail(
+                    f"{name}: per-class bytes do not roll up to "
+                    f"bytes_moved_{arm} ({classes} vs {total})"
+                )
+            cross = e.get(f"cross_node_bytes_{arm}")
+            if not is_int_valued(cross):
+                fail(f"{name}: 'cross_node_bytes_{arm}' missing or malformed")
+            # cross-node = everything above the innermost link class
+            if sum(int(b) for b in classes[1:]) != int(cross):
+                fail(f"{name}: cross_node_bytes_{arm} inconsistent with ledger")
+        if e.get("bitwise_identical_execution") is not True:
+            fail(f"{name}: topology sweep entry not marked bitwise-identical")
+        if int(e.get("levels", 0)) == 3 and int(
+            e["cross_node_bytes_collective"]
+        ) < int(e["cross_node_bytes_safe"]):
+            cross_node_wins += 1
+    if cross_node_wins == 0:
+        fail(
+            "no three-level workload shows a strict cross-node byte "
+            "reduction from lower-collectives"
+        )
+
     print(
         f"check_lowering_json: OK — {len(workloads)} workloads, "
-        f"{len(EXPECTED_PASSES)} passes each, {strict_wins} strict win(s)"
+        f"{len(EXPECTED_PASSES)} passes each, {strict_wins} strict win(s), "
+        f"{len(sweep)} topology-sweep entries, {cross_node_wins} "
+        f"cross-node win(s)"
     )
 
 

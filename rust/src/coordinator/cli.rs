@@ -6,8 +6,9 @@
 //! eindecomp run     --model ...         --workers 8 [--backend native|auto]
 //!                   [--exec steal|barrier] [--intra-op N] [--repeat N]
 //!                   [--passes all|none|safe|<csv>]
+//!                   [--topology flat|two-level|three-level]
 //! eindecomp explain --model ...         [--workers N] [--p N] [--strategy S]
-//!                   [--passes ...] [--json]
+//!                   [--passes ...] [--topology ...] [--json]
 //! eindecomp program --file prog.ein     [--p 8] [--run]
 //! eindecomp help
 //! ```
@@ -17,7 +18,7 @@ use crate::einsum::parser::parse_program;
 use crate::error::{Error, Result};
 use crate::models::{ffnn, llama, matchain};
 use crate::runtime::Backend;
-use crate::sim::network::NetworkProfile;
+use crate::sim::network::{NetworkProfile, Topology};
 use crate::tensor::Tensor;
 use crate::tra::passes::PassSelector;
 use std::collections::HashMap;
@@ -89,6 +90,26 @@ fn parse_passes(args: &Args) -> Result<PassSelector> {
         Some(s) => s.parse(),
         None => Ok(PassSelector::default()),
     }
+}
+
+/// `--topology flat|two-level|three-level` (absent = the flat
+/// [`NetworkProfile`] alone, byte-for-byte the seed model).
+fn parse_topology(
+    args: &Args,
+    workers: usize,
+    net: &NetworkProfile,
+) -> Result<Option<Topology>> {
+    Ok(match args.get("topology") {
+        None => None,
+        Some("flat") => Some(Topology::flat_of(net, workers)),
+        Some("two-level") => Some(Topology::two_level_of(net, workers)),
+        Some("three-level") => Some(Topology::three_level_of(net, workers)),
+        Some(other) => {
+            return Err(Error::Parse(format!(
+                "unknown topology {other:?} (try flat, two-level, three-level)"
+            )))
+        }
+    })
 }
 
 fn build_model(args: &Args) -> Result<crate::einsum::graph::EinGraph> {
@@ -189,12 +210,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             )))
         }
     };
+    let network = NetworkProfile::cpu_cluster();
     let cfg = DriverConfig {
         workers,
         p: args.get_usize("p", workers),
         strategy: strategy_by_name(args.get("strategy").unwrap_or("eindecomp"))?,
         backend,
-        network: NetworkProfile::cpu_cluster(),
+        topology: parse_topology(args, workers, &network)?,
+        network,
         exec_mode,
         // 0 = match the executor's thread count (see DriverConfig docs).
         intra_op: args.get_usize("intra-op", 0),
@@ -252,11 +275,13 @@ fn cmd_explain(args: &Args) -> Result<()> {
     use super::session::Session;
     let g = build_model(args)?;
     let workers = args.get_usize("workers", 4);
+    let network = NetworkProfile::cpu_cluster();
     let cfg = DriverConfig {
         workers,
         p: args.get_usize("p", workers),
         strategy: strategy_by_name(args.get("strategy").unwrap_or("eindecomp"))?,
-        network: NetworkProfile::cpu_cluster(),
+        topology: parse_topology(args, workers, &network)?,
+        network,
         passes: parse_passes(args)?,
         ..Default::default()
     };
@@ -316,8 +341,12 @@ USAGE:
                     [--repeat N]     (compile once, run N times; prints
                                       amortized serving throughput)
                     [--passes all|none|safe|<csv>]  (TRA-IR pass pipeline)
+                    [--topology flat|two-level|three-level]
+                                     (hierarchical interconnect: cost
+                                      model, per-link byte ledger, and
+                                      collective schedules)
   eindecomp explain --model ... [--workers N] [--p N] [--strategy S]
-                    [--passes ...] [--json]
+                    [--passes ...] [--topology ...] [--json]
                     (print the TRA program, pass change log, and modeled
                      byte ledger of the compiled plan)
   eindecomp program --file prog.ein [--p N] [--run]
@@ -326,7 +355,8 @@ STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,
             megatron, sequence, attention
 PASSES:     propagate-partitions, elide-identity-repart, cse,
             alias-refinement-repart, fuse-epilogue, agg-tree,
-            dead-rel-elim ("safe" = the task-graph-neutral default)
+            lower-collectives, dead-rel-elim
+            ("safe" = the task-graph-neutral default)
 
 Benches regenerating the paper's figures: `cargo bench` (see EXPERIMENTS.md)."#
     );
@@ -385,6 +415,44 @@ mod tests {
             let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
             main_with_args(&argv).unwrap();
         }
+    }
+
+    #[test]
+    fn run_command_with_topology() {
+        let argv: Vec<String> = [
+            "run", "--model", "chain", "--scale", "24", "--workers", "4", "--p", "4",
+            "--topology", "three-level", "--passes", "all",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn explain_command_with_topology() {
+        for topo in ["flat", "two-level", "three-level"] {
+            let argv: Vec<String> = [
+                "explain", "--model", "chain", "--scale", "24", "--p", "4", "--workers", "4",
+                "--topology", topo,
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+            main_with_args(&argv).unwrap();
+        }
+    }
+
+    #[test]
+    fn run_rejects_unknown_topology() {
+        let argv: Vec<String> = [
+            "run", "--model", "chain", "--scale", "24", "--workers", "2", "--topology", "torus",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let err = main_with_args(&argv).unwrap_err().to_string();
+        assert!(err.contains("unknown topology"), "{err}");
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::error::Result;
 use crate::runtime::{Backend, DispatchEngine};
 use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
 use crate::sim::memory::{model_with_memory, MemoryConfig};
-use crate::sim::network::NetworkProfile;
+use crate::sim::network::{NetworkProfile, Topology};
 use crate::taskgraph::placement::Policy;
 use crate::tensor::Tensor;
 use crate::tra::passes::PassSelector;
@@ -54,6 +54,15 @@ pub struct DriverConfig {
     /// [`PassSelector::Safe`] set.
     pub passes: PassSelector,
     pub roles: LabelRoles,
+    /// Hierarchical worker topology (`--topology` on the CLI). `None`
+    /// (default) keeps the flat `network` profile — byte-for-byte the
+    /// seed model. `Some` charges each modeled transfer at the link
+    /// class of the two workers' lowest common group, reports
+    /// [`ExecReport::bytes_by_link`], biases the planner's repartition
+    /// costs toward topology-friendly layouts, and steers the
+    /// `lower-collectives` gather schedule (ring on hierarchical
+    /// topologies, tree on flat ones).
+    pub topology: Option<Topology>,
 }
 
 impl Default for DriverConfig {
@@ -70,6 +79,7 @@ impl Default for DriverConfig {
             intra_op: 0,
             passes: PassSelector::default(),
             roles: LabelRoles::by_convention(),
+            topology: None,
         }
     }
 }
@@ -148,6 +158,16 @@ impl RunReport {
             (
                 "bytes_repart".into(),
                 Json::num(self.exec.bytes_repart as f64),
+            ),
+            (
+                "bytes_by_link".into(),
+                Json::Obj(
+                    self.exec
+                        .bytes_by_link
+                        .iter()
+                        .map(|(name, b)| (name.clone(), Json::num(*b as f64)))
+                        .collect(),
+                ),
             ),
             ("kernel_calls".into(), Json::num(self.exec.kernel_calls as f64)),
             ("task_count".into(), Json::num(self.exec.tasks as f64)),

@@ -44,7 +44,7 @@
 //! ```
 
 use super::driver::{DriverConfig, PlanProvenance, RunReport};
-use crate::decomp::baselines::{assign, Strategy};
+use crate::decomp::baselines::{assign_on, Strategy};
 use crate::decomp::Plan;
 use crate::einsum::canon::{canonicalize, Canon, CanonSignature};
 use crate::einsum::graph::{EinGraph, VertexId};
@@ -123,6 +123,7 @@ impl Session {
         cluster.exec_mode = cfg.exec_mode;
         cluster.intra_op = cfg.intra_op;
         cluster.passes = cfg.passes.clone();
+        cluster.topology = cfg.topology.clone();
         Ok(Session {
             cfg,
             engine,
@@ -261,7 +262,13 @@ impl Session {
     pub fn plan(&self, g: &EinGraph) -> Result<(Plan, f64)> {
         self.planner_runs.fetch_add(1, Ordering::Relaxed);
         let t0 = std::time::Instant::now();
-        let plan = assign(g, &self.cfg.strategy, self.cfg.p, &self.cfg.roles)?;
+        let plan = assign_on(
+            g,
+            &self.cfg.strategy,
+            self.cfg.p,
+            &self.cfg.roles,
+            self.cfg.topology.as_ref(),
+        )?;
         Ok((plan, t0.elapsed().as_secs_f64()))
     }
 
@@ -310,13 +317,20 @@ impl Session {
             bytes_join: art.model.bytes_join,
             bytes_agg: art.model.bytes_agg,
             bytes_repart: art.model.bytes_repart,
+            bytes_by_link: art.model.bytes_by_link.clone(),
         }
     }
 
     fn build_artifact(&self, g: &EinGraph, canon: Option<Canon>) -> Result<Arc<Artifact>> {
         self.planner_runs.fetch_add(1, Ordering::Relaxed);
         let t0 = std::time::Instant::now();
-        let plan = assign(g, &self.cfg.strategy, self.cfg.p, &self.cfg.roles)?;
+        let plan = assign_on(
+            g,
+            &self.cfg.strategy,
+            self.cfg.p,
+            &self.cfg.roles,
+            self.cfg.topology.as_ref(),
+        )?;
         let plan_s = t0.elapsed().as_secs_f64();
         self.lower_runs.fetch_add(1, Ordering::Relaxed);
         let t1 = std::time::Instant::now();
@@ -557,6 +571,10 @@ pub struct Explain {
     pub bytes_join: u64,
     pub bytes_agg: u64,
     pub bytes_repart: u64,
+    /// Modeled cross-worker bytes by link class, innermost first —
+    /// `[("flat", total)]` when the session has no
+    /// [`Topology`](crate::sim::network::Topology) configured.
+    pub bytes_by_link: Vec<(String, u64)>,
 }
 
 impl Explain {
@@ -576,6 +594,14 @@ impl Explain {
             "modeled bytes: input {} | join {} | agg {} | repart {}\n",
             self.bytes_input, self.bytes_join, self.bytes_agg, self.bytes_repart
         ));
+        if !self.bytes_by_link.is_empty() {
+            let per_link: Vec<String> = self
+                .bytes_by_link
+                .iter()
+                .map(|(name, b)| format!("{name} {b}"))
+                .collect();
+            s.push_str(&format!("modeled bytes by link: {}\n", per_link.join(" | ")));
+        }
         s
     }
 
@@ -596,6 +622,15 @@ impl Explain {
             (
                 "bytes_repart".into(),
                 Json::num(self.bytes_repart as f64),
+            ),
+            (
+                "bytes_by_link".into(),
+                Json::Obj(
+                    self.bytes_by_link
+                        .iter()
+                        .map(|(name, b)| (name.clone(), Json::num(*b as f64)))
+                        .collect(),
+                ),
             ),
         ])
     }
@@ -678,6 +713,32 @@ mod tests {
         assert!(text.contains("elide-identity-repart"), "{text}");
         assert!(text.contains("task graph:"), "{text}");
         assert!(ex.to_json().render().contains("\"program\""));
+    }
+
+    #[test]
+    fn explain_reports_per_link_class_bytes() {
+        use crate::sim::network::{NetworkProfile, Topology};
+        let net = NetworkProfile::cpu_cluster();
+        let s = Session::new(DriverConfig {
+            workers: 4,
+            p: 4,
+            network: net.clone(),
+            topology: Some(Topology::three_level_of(&net, 4)),
+            ..Default::default()
+        })
+        .unwrap();
+        let a = s.input("A", &[32, 32]);
+        let b = s.input("B", &[32, 32]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        let exe = s.compile_expr(&z).unwrap();
+        let ex = s.explain(&exe);
+        // one entry per link class, rolling up to the class ledger
+        assert_eq!(ex.bytes_by_link.len(), 3, "{:?}", ex.bytes_by_link);
+        let by_link: u64 = ex.bytes_by_link.iter().map(|(_, b)| *b).sum();
+        let by_class = ex.bytes_input + ex.bytes_join + ex.bytes_agg + ex.bytes_repart;
+        assert_eq!(by_link, by_class);
+        assert!(ex.render().contains("modeled bytes by link:"), "{}", ex.render());
+        assert!(ex.to_json().render().contains("\"bytes_by_link\""));
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::einsum::expr::EinSum;
 use crate::einsum::graph::EinGraph;
 use crate::einsum::label::Label;
 use crate::error::Result;
+use crate::sim::network::Topology;
 
 /// Semantic roles of labels in a model graph, used by role-driven
 /// baselines (data parallel = split batch, Megatron = split heads/hidden,
@@ -85,6 +86,21 @@ impl Strategy {
 
 /// Assign a plan for `g` under `strategy` with `p` processors.
 pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -> Result<Plan> {
+    assign_on(g, strategy, p, roles, None)
+}
+
+/// [`assign`] under a worker [`Topology`]: the EinDecomp-family planners
+/// cost repartition edges per link class (discounting moves that stay
+/// inside fast groups), and `predicted_cost` is scored on the same
+/// topology. Role-driven baselines assign by label role regardless —
+/// only their reported cost changes. `None` is exactly [`assign`].
+pub fn assign_on(
+    g: &EinGraph,
+    strategy: &Strategy,
+    p: usize,
+    roles: &LabelRoles,
+    topology: Option<&Topology>,
+) -> Result<Plan> {
     match strategy {
         // EinDecomp default: exact DP on trees; on DAGs, a small portfolio
         // — the linearized DP *with* cross-path cost awareness
@@ -101,6 +117,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                     p,
                     mode: PlanMode::Auto,
                     off_path_cost: true,
+                    topology: topology.cloned(),
                     ..Default::default()
                 },
             )?;
@@ -113,6 +130,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                         p,
                         mode: PlanMode::Greedy,
                         off_path_cost: false,
+                        topology: topology.cloned(),
                         ..Default::default()
                     },
                 )?;
@@ -127,6 +145,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                 p,
                 mode: PlanMode::Linearized,
                 off_path_cost: false,
+                topology: topology.cloned(),
                 ..Default::default()
             },
         ),
@@ -136,6 +155,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
                 p,
                 mode: PlanMode::Greedy,
                 off_path_cost: false,
+                topology: topology.cloned(),
                 ..Default::default()
             },
         ),
@@ -171,7 +191,7 @@ pub fn assign(g: &EinGraph, strategy: &Strategy, p: usize, roles: &LabelRoles) -
     }
     .map(|mut plan| {
         plan.finalize_inputs(g);
-        plan.predicted_cost = plan.total_cost(g).unwrap_or(f64::NAN);
+        plan.predicted_cost = plan.total_cost_on(g, topology).unwrap_or(f64::NAN);
         plan
     })
 }

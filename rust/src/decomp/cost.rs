@@ -11,6 +11,7 @@
 use crate::einsum::expr::EinSum;
 use crate::einsum::label::project;
 use crate::error::{Error, Result};
+use crate::sim::network::Topology;
 
 #[inline]
 fn ceil_div(b: usize, d: usize) -> f64 {
@@ -113,6 +114,119 @@ pub fn cost_repart(d_x: &[usize], d_z: &[usize], bound: &[usize]) -> f64 {
         cost += n_p * (n / n_c);
     }
     cost
+}
+
+/// Topology-aware repartition cost: the §7 closed form, scaled by the
+/// fraction of moved elements that traverse each link class, weighted by
+/// that class's bandwidth relative to the outermost (flat) class.
+///
+/// `None` and single-level topologies return [`cost_repart`] verbatim,
+/// so the seed model — and every optimality result proved against it —
+/// is untouched. A hierarchical topology discounts the closed form by
+/// `sum_class(frac_class * class_weight)` where the fractions come from
+/// enumerating producer x consumer tile overlaps under the canonical
+/// worker mapping `w(tile) = linear_key mod workers` (the same mapping
+/// round-robin placement uses), with same-worker overlaps free. Since
+/// every fraction sums to <= 1 and the preset weights are <= 1, the
+/// hierarchical cost never exceeds the flat one for the same plan.
+pub fn cost_repart_on(
+    topo: Option<&Topology>,
+    d_x: &[usize],
+    d_z: &[usize],
+    bound: &[usize],
+) -> f64 {
+    let base = cost_repart(d_x, d_z, bound);
+    match topo {
+        Some(t) if !t.is_flat() && base > 0.0 => {
+            base * repart_link_discount(t, d_x, d_z, bound)
+        }
+        _ => base,
+    }
+}
+
+/// Weighted fraction of repartition traffic, by link class, under the
+/// canonical worker mapping. In `[0, 1]` for the builtin presets.
+fn repart_link_discount(topo: &Topology, d_x: &[usize], d_z: &[usize], bound: &[usize]) -> f64 {
+    use crate::tensor::index_space;
+    use crate::tra::relation::{linearize, overlapping_tiles, tile_offset, tile_size};
+    let workers = topo.workers().max(1);
+    let mut total = 0.0f64;
+    let mut weighted = 0.0f64;
+    for pkey in index_space(d_z) {
+        let wp = linearize(&pkey, d_z) % workers;
+        // per-dim extent of this producer tile, then the consumer tiles
+        // it overlaps
+        let ranges: Vec<(usize, usize)> = bound
+            .iter()
+            .zip(d_z.iter().zip(&pkey))
+            .map(|(&b, (&dz, &k))| {
+                let off = tile_offset(b, dz, k);
+                let len = tile_size(b, dz, k);
+                (off, len)
+            })
+            .collect();
+        let windows: Vec<(usize, usize)> = bound
+            .iter()
+            .zip(d_x.iter().zip(&ranges))
+            .map(|(&b, (&dx, &(off, len)))| overlapping_tiles(b, dx, off, len))
+            .collect();
+        let win_dims: Vec<usize> = windows.iter().map(|&(lo, hi)| hi - lo + 1).collect();
+        for rel in index_space(&win_dims) {
+            let ckey: Vec<usize> = rel.iter().zip(&windows).map(|(&r, &(lo, _))| lo + r).collect();
+            let wc = linearize(&ckey, d_x) % workers;
+            let mut overlap = 1.0f64;
+            for (dim, &ck) in ckey.iter().enumerate() {
+                let (poff, plen) = ranges[dim];
+                let coff = tile_offset(bound[dim], d_x[dim], ck);
+                let clen = tile_size(bound[dim], d_x[dim], ck);
+                let lo = poff.max(coff);
+                let hi = (poff + plen).min(coff + clen);
+                overlap *= hi.saturating_sub(lo) as f64;
+            }
+            total += overlap;
+            if let Some(cls) = topo.link_class(wp, wc) {
+                weighted += overlap * topo.class_weight(cls);
+            }
+        }
+    }
+    if total <= 0.0 {
+        return 1.0;
+    }
+    weighted / total
+}
+
+/// Floats a ring all-gather (or ring reduce-scatter) of an `n`-float
+/// tensor moves over `p` members: `(p-1)/p * n` per the textbook
+/// bandwidth-optimal schedule.
+pub fn cost_ring_collective(n: f64, p: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p as f64 - 1.0) / p as f64 * n
+}
+
+/// Floats a ring all-reduce moves: a reduce-scatter followed by an
+/// all-gather, `2 * (p-1)/p * n`.
+pub fn cost_ring_allreduce(n: f64, p: usize) -> f64 {
+    2.0 * cost_ring_collective(n, p)
+}
+
+/// Serialized steps in a ring schedule over `p` members: `p - 1`.
+pub fn ring_steps(p: usize) -> usize {
+    p.saturating_sub(1)
+}
+
+/// Depth of an `arity`-ary tree schedule over `p` members:
+/// `ceil(log_arity(p))`.
+pub fn tree_depth(p: usize, arity: usize) -> usize {
+    let arity = arity.max(2);
+    let mut depth = 0usize;
+    let mut n = p.max(1);
+    while n > 1 {
+        n = n.div_ceil(arity);
+        depth += 1;
+    }
+    depth
 }
 
 /// Join + aggregation cost of executing one vertex under `d`.
@@ -239,6 +353,66 @@ mod tests {
         let c = cost_join(&op, &[&[7, 4], &[4, 6]], &[2, 1, 1]).unwrap();
         // N=2; n_X = 4*4; n_Y = 4*6 -> 2*(16+24) = 80
         assert_eq!(c, 80.0);
+    }
+
+    #[test]
+    fn cost_repart_on_none_and_flat_are_the_seed_model() {
+        use crate::sim::network::NetworkProfile;
+        let net = NetworkProfile::cpu_cluster();
+        let flat = Topology::flat_of(&net, 8);
+        for (dx, dz, b) in [
+            (vec![4, 1], vec![2, 4], vec![8, 8]),
+            (vec![2, 2], vec![4, 4], vec![8, 8]),
+            (vec![3, 2], vec![2, 3], vec![7, 5]),
+        ] {
+            let seed = cost_repart(&dx, &dz, &b);
+            assert_eq!(cost_repart_on(None, &dx, &dz, &b), seed);
+            assert_eq!(cost_repart_on(Some(&flat), &dx, &dz, &b), seed);
+        }
+    }
+
+    #[test]
+    fn hierarchical_repart_cost_never_exceeds_flat() {
+        use crate::sim::network::NetworkProfile;
+        let net = NetworkProfile::cpu_cluster();
+        for workers in [2usize, 4, 8] {
+            for t in [
+                Topology::two_level_of(&net, workers),
+                Topology::three_level_of(&net, workers),
+            ] {
+                for (dx, dz, b) in [
+                    (vec![4, 1], vec![2, 4], vec![8, 8]),
+                    (vec![1, 8], vec![8, 1], vec![16, 16]),
+                    (vec![2, 2], vec![4, 4], vec![8, 8]),
+                ] {
+                    let flat = cost_repart(&dx, &dz, &b);
+                    let hier = cost_repart_on(Some(&t), &dx, &dz, &b);
+                    assert!(
+                        hier <= flat + 1e-9,
+                        "{}: {hier} > {flat} for {dx:?}<-{dz:?}",
+                        t.name()
+                    );
+                    assert!(hier >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collective_formulas_match_textbook_counts() {
+        // ring all-gather / reduce-scatter of n floats over p: (p-1)/p * n
+        assert_eq!(cost_ring_collective(1024.0, 8), 896.0);
+        assert_eq!(cost_ring_collective(1024.0, 2), 512.0);
+        assert_eq!(cost_ring_collective(1024.0, 1), 0.0);
+        // ring all-reduce: reduce-scatter + all-gather
+        assert_eq!(cost_ring_allreduce(1024.0, 8), 1792.0);
+        // step counts
+        assert_eq!(ring_steps(8), 7);
+        assert_eq!(ring_steps(1), 0);
+        assert_eq!(tree_depth(8, 2), 3);
+        assert_eq!(tree_depth(16, 4), 2);
+        assert_eq!(tree_depth(1, 2), 0);
+        assert_eq!(tree_depth(9, 2), 4);
     }
 
     #[test]

@@ -6,13 +6,14 @@
 //! in topological order and backtracking from the cheapest entry of the
 //! output vertex.
 
-use super::cost::{cost_repart, vertex_cost};
+use super::cost::{cost_repart_on, vertex_cost};
 use super::viable::{pow2_at_least, unique_label_bounds, viable};
 use super::{Plan, PlannerConfig};
 use crate::einsum::expr::EinSum;
 use crate::einsum::graph::{EinGraph, VertexId};
 use crate::einsum::label::project;
 use crate::error::{Error, Result};
+use crate::sim::network::Topology;
 use std::collections::HashMap;
 
 /// One DP table row: output partitioning -> (cost, chosen d, chosen child
@@ -44,6 +45,7 @@ fn child_cost(
     tables: &HashMap<VertexId, Row>,
     c: VertexId,
     need: &[usize],
+    topo: Option<&Topology>,
 ) -> Result<(f64, Vec<usize>)> {
     let cv = g.vertex(c);
     if matches!(cv.op, EinSum::Input) {
@@ -55,7 +57,7 @@ fn child_cost(
         .ok_or_else(|| Error::NoViablePlan(format!("child {} has no DP row", cv.name)))?;
     let mut best: Option<(f64, Vec<usize>)> = None;
     for (dc, (mc, _, _)) in row {
-        let total = mc + cost_repart(need, dc, &cv.bound);
+        let total = mc + cost_repart_on(topo, need, dc, &cv.bound);
         if best.as_ref().map_or(true, |(b, _)| total < *b) {
             best = Some((total, dc.clone()));
         }
@@ -69,6 +71,7 @@ fn fill_row(
     tables: &HashMap<VertexId, Row>,
     v: VertexId,
     p: usize,
+    topo: Option<&Topology>,
 ) -> Result<Row> {
     let vert = g.vertex(v);
     let op = &vert.op;
@@ -88,7 +91,7 @@ fn fill_row(
         let mut feasible = true;
         for (o, &c) in vert.inputs.iter().enumerate() {
             let need = project(&d, op.operand_labels()[o], &uniq);
-            match child_cost(g, tables, c, &need) {
+            match child_cost(g, tables, c, &need, topo) {
                 Ok((cc, dc)) => {
                     total += cc;
                     chosen_children.push(dc);
@@ -131,7 +134,7 @@ pub fn plan_exact_tree(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
         if matches!(g.vertex(v).op, EinSum::Input) {
             continue;
         }
-        let row = fill_row(g, &tables, v, p)?;
+        let row = fill_row(g, &tables, v, p, cfg.topology.as_ref())?;
         tables.insert(v, row);
     }
     // Backtrack from each output's cheapest entry.
@@ -196,7 +199,7 @@ pub fn plan_greedy(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
             for (o, &c) in vert.inputs.iter().enumerate() {
                 let need = project(&d, op.operand_labels()[o], &uniq);
                 if let Some(have) = fixed.get(&c) {
-                    total += cost_repart(&need, have, &g.vertex(c).bound);
+                    total += cost_repart_on(cfg.topology.as_ref(), &need, have, &g.vertex(c).bound);
                 }
                 // inputs: free
             }

@@ -8,7 +8,7 @@
 //! repartition cost (`PlannerConfig::off_path_cost`) — a strictly better
 //! approximation than the paper's, evaluated as an ablation.
 
-use super::cost::{cost_repart, vertex_cost};
+use super::cost::{cost_repart_on, vertex_cost};
 use super::dp::viable_or_relaxed;
 use super::viable::{pow2_at_least, unique_label_bounds};
 use super::{Plan, PlannerConfig};
@@ -23,6 +23,7 @@ type Row = HashMap<Vec<usize>, (f64, Vec<usize>, Option<Vec<usize>>)>;
 
 pub fn plan_linearized(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
     let p = pow2_at_least(cfg.p);
+    let topo = cfg.topology.as_ref();
     let mut plan = Plan {
         strategy: if cfg.off_path_cost {
             "eindecomp-linearized+offpath".into()
@@ -64,7 +65,7 @@ pub fn plan_linearized(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
                         let prow = rows.last().unwrap();
                         let mut best: Option<(f64, Vec<usize>)> = None;
                         for (dzc, (mc, _, _)) in prow {
-                            let t = mc + cost_repart(&need, dzc, &g.vertex(c).bound);
+                            let t = mc + cost_repart_on(topo, &need, dzc, &g.vertex(c).bound);
                             if best.as_ref().map_or(true, |(b, _)| t < *b) {
                                 best = Some((t, dzc.clone()));
                             }
@@ -83,7 +84,7 @@ pub fn plan_linearized(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
                         // free, pre-partitioned
                     } else if cfg.off_path_cost {
                         if let Some(have) = fixed_dz.get(&c) {
-                            total += cost_repart(&need, have, &g.vertex(c).bound);
+                            total += cost_repart_on(topo, &need, have, &g.vertex(c).bound);
                         }
                         // not yet fixed: paper ignores (0)
                     }
@@ -108,7 +109,7 @@ pub fn plan_linearized(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
                                         cvert.op.operand_labels()[o],
                                         &cuniq,
                                     );
-                                    total += cost_repart(&need, &dz, &vert.bound);
+                                    total += cost_repart_on(topo, &need, &dz, &vert.bound);
                                 }
                             }
                         }

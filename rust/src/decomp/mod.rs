@@ -57,6 +57,12 @@ pub struct PlannerConfig {
     /// the library's lowering path (`Cluster::lower`) is driven by
     /// `Cluster::passes` / `DriverConfig::passes`, not this field.
     pub passes: crate::tra::passes::PassSelector,
+    /// Hierarchical worker topology for the cost model. `None` (the
+    /// default) and flat topologies score repartitions with the seed §7
+    /// closed form, byte-for-byte; a multi-level topology discounts
+    /// transfers that stay on faster inner links
+    /// ([`cost::cost_repart_on`]), never exceeding the flat bound.
+    pub topology: Option<crate::sim::network::Topology>,
 }
 
 impl Default for PlannerConfig {
@@ -66,6 +72,7 @@ impl Default for PlannerConfig {
             mode: PlanMode::Auto,
             off_path_cost: false,
             passes: crate::tra::passes::PassSelector::default(),
+            topology: None,
         }
     }
 }
@@ -176,6 +183,17 @@ impl Plan {
     /// edges whose pre-partitioning differs from what the consumer needs —
     /// free only for the *first* consumer).
     pub fn total_cost(&self, g: &EinGraph) -> Result<f64> {
+        self.total_cost_on(g, None)
+    }
+
+    /// [`Plan::total_cost`] under a worker topology: repartition edges
+    /// are charged via [`cost::cost_repart_on`]. `None` and flat
+    /// topologies reproduce `total_cost` exactly.
+    pub fn total_cost_on(
+        &self,
+        g: &EinGraph,
+        topo: Option<&crate::sim::network::Topology>,
+    ) -> Result<f64> {
         let mut total = 0.0;
         for vert in g.vertices() {
             if matches!(vert.op, EinSum::Input) {
@@ -193,7 +211,7 @@ impl Plan {
             for (o, &c) in vert.inputs.iter().enumerate() {
                 let have = self.out_part(g, c);
                 let need = self.required_in_part(g, vert.id, o);
-                total += cost::cost_repart(&need, &have, &g.vertex(c).bound);
+                total += cost::cost_repart_on(topo, &need, &have, &g.vertex(c).bound);
             }
         }
         Ok(total)
@@ -256,7 +274,7 @@ pub fn plan_graph(g: &EinGraph, cfg: &PlannerConfig) -> Result<Plan> {
         PlanMode::Auto => unreachable!(),
     };
     plan.finalize_inputs(g);
-    plan.predicted_cost = plan.total_cost(g)?;
+    plan.predicted_cost = plan.total_cost_on(g, cfg.topology.as_ref())?;
     Ok(plan)
 }
 

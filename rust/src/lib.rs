@@ -147,11 +147,11 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::runtime::{Backend, KernelEngine};
     pub use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
-    pub use crate::sim::network::NetworkProfile;
+    pub use crate::sim::network::{LinkClass, NetworkProfile, Topology};
     pub use crate::taskgraph::TaskGraph;
     pub use crate::tensor::{Tensor, TensorView};
     pub use crate::tra::passes::{PassKind, PassLog, PassManager, PassSelector};
-    pub use crate::tra::program::{from_plan, RelId, RelSchema, TraOp, TraProgram};
+    pub use crate::tra::program::{from_plan, CollectiveSchedule, RelId, RelSchema, TraOp, TraProgram};
     pub use crate::tra::relation::TensorRelation;
     pub use crate::util::BufferPool;
 }

@@ -64,7 +64,7 @@
 //! `sim_*`/`bytes_*` fields describe the modeled cluster, `wall_s` the
 //! real host execution.
 
-use super::network::NetworkProfile;
+use super::network::{NetworkProfile, Topology};
 use crate::decomp::Plan;
 use crate::einsum::expr::{AggOp, EinSum};
 use crate::einsum::graph::{EinGraph, VertexId};
@@ -124,6 +124,12 @@ pub struct ExecReport {
     pub flops: f64,
     /// Per-worker modeled busy time.
     pub worker_busy_s: Vec<f64>,
+    /// Modeled bytes per link class, `(class name, bytes)` innermost
+    /// first, summing to `bytes_moved`. Without a [`Topology`] every
+    /// transfer rides the flat profile: `[("flat", bytes_moved)]`.
+    /// Empty only on reports that never went through [`Cluster::model`]
+    /// (e.g. the memory-policy simulator).
+    pub bytes_by_link: Vec<(String, u64)>,
 }
 
 impl ExecReport {
@@ -172,6 +178,14 @@ pub struct Cluster {
     /// [`PassSelector::Safe`], is task-graph-neutral, so default
     /// lowering reproduces the pre-IR pipeline byte for byte.
     pub passes: PassSelector,
+    /// Hierarchical worker topology. `None` (default) models every
+    /// cross-worker transfer on the flat `net` profile — byte-for-byte
+    /// the seed model; `Some` charges each transfer at the link class of
+    /// the two workers' lowest common group, tallies
+    /// [`ExecReport::bytes_by_link`], and steers the
+    /// `lower-collectives` gather schedule
+    /// ([`crate::tra::passes::PassManager::with_topology`]).
+    pub topology: Option<Topology>,
 }
 
 impl Cluster {
@@ -183,6 +197,7 @@ impl Cluster {
             exec_mode: ExecMode::WorkStealing,
             intra_op: 0,
             passes: PassSelector::default(),
+            topology: None,
         }
     }
 
@@ -202,6 +217,12 @@ impl Cluster {
     /// Builder-style override of the TRA pass pipeline.
     pub fn with_passes(mut self, passes: PassSelector) -> Self {
         self.passes = passes;
+        self
+    }
+
+    /// Builder-style worker topology (see [`Cluster::topology`]).
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
         self
     }
 
@@ -231,11 +252,11 @@ impl Cluster {
             plan.strategy.as_str(),
             "data-parallel" | "megatron" | "sequence" | "attention"
         );
-        let log = self
-            .passes
-            .manager()
-            .with_label_sensitivity(label_sensitive)
-            .run(&mut prog);
+        let mut mgr = self.passes.manager().with_label_sensitivity(label_sensitive);
+        if let Some(t) = &self.topology {
+            mgr = mgr.with_topology(t);
+        }
+        let log = mgr.run(&mut prog);
         let mut tg = prog.emit_tasks()?;
         place(&mut tg, self.workers, self.placement);
         // validate() re-checks structure (placement cannot invalidate
@@ -261,6 +282,12 @@ impl Cluster {
             kernel_calls: tg.kernel_calls(),
             ..Default::default()
         };
+        // per-link-class byte tally when a topology is set
+        let mut by_link: Vec<u64> = self
+            .topology
+            .as_ref()
+            .map(|t| vec![0u64; t.classes().len()])
+            .unwrap_or_default();
         for t in &tg.tasks {
             let w = t.assigned_worker();
             let mut ready = 0.0f64;
@@ -270,9 +297,22 @@ impl Cluster {
                 let mut arrive = finish[d.0];
                 if dw != w {
                     let send_start = finish[d.0].max(nic[dw]);
-                    let occupancy = dep.out_bytes as f64 / self.net.bandwidth_bps;
+                    // lowest-common-group link class when a topology is
+                    // set; `None` is exactly the seed flat-profile math
+                    let (bandwidth, wire) = match &self.topology {
+                        Some(topo) => {
+                            let lc = topo
+                                .link_class(dw, w)
+                                .unwrap_or(topo.classes().len() - 1);
+                            by_link[lc] += dep.out_bytes as u64;
+                            let class = &topo.classes()[lc];
+                            (class.bandwidth_bps, class.wire_s(dep.out_bytes))
+                        }
+                        None => (self.net.bandwidth_bps, self.net.wire_s(dep.out_bytes)),
+                    };
+                    let occupancy = dep.out_bytes as f64 / bandwidth;
                     nic[dw] = send_start + occupancy;
-                    arrive = send_start + self.net.wire_s(dep.out_bytes);
+                    arrive = send_start + wire;
                     report.bytes_moved += dep.out_bytes as u64;
                     match t.kind.class() {
                         TransferClass::Join => report.bytes_join += dep.out_bytes as u64,
@@ -292,6 +332,15 @@ impl Cluster {
         }
         report.sim_makespan_s = finish.iter().copied().fold(0.0, f64::max);
         report.worker_busy_s = busy;
+        report.bytes_by_link = match &self.topology {
+            Some(topo) => topo
+                .classes()
+                .iter()
+                .zip(&by_link)
+                .map(|(c, &b)| (c.name.clone(), b))
+                .collect(),
+            None => vec![("flat".into(), report.bytes_moved)],
+        };
         report
     }
 
@@ -745,6 +794,11 @@ fn exec_task(
             // Kernel task keys over the unique labels).
             let vouts = &tg.vertex_outputs[producer];
             let dep_key = |d: crate::taskgraph::TaskId| -> Result<Vec<usize>> {
+                // Collective relays are not producer outputs; they carry
+                // their source tile's producer-layout key themselves.
+                if let TaskKind::Collective { key, .. } = &tg.tasks[d.0].kind {
+                    return Ok(key.clone());
+                }
                 let pos = vouts
                     .iter()
                     .position(|&t| t == d)
@@ -798,6 +852,12 @@ fn exec_task(
                 out.write_slice_view(&dst_off, &piece)?;
             }
             Ok(out.into_view())
+        }
+        TaskKind::Collective { .. } => {
+            // A relay step is a pure pass-through copy of its single
+            // dependency — a zero-copy view clone (Arc bump), so relayed
+            // bytes are bitwise the source tile's bytes by construction.
+            dep_view(task.deps[0])
         }
     }
 }
@@ -1021,6 +1081,97 @@ mod tests {
                 .unwrap()
                 .0;
             assert_eq!(got[&z], base[&z], "intra_op {intra}");
+        }
+    }
+
+    #[test]
+    fn topology_model_tallies_per_link_bytes() {
+        let g = matmul_graph(64);
+        let plan = plan_graph(&g, &PlannerConfig { p: 8, ..Default::default() }).unwrap();
+        let net = NetworkProfile::cpu_cluster();
+        let flat = Cluster::new(8, net.clone());
+        let tg = flat.lower(&g, &plan).unwrap();
+        let base = flat.model(&tg);
+        assert_eq!(
+            base.bytes_by_link,
+            vec![("flat".to_string(), base.bytes_moved)]
+        );
+        // an explicit flat topology is the seed model, byte for byte
+        let rep = flat
+            .clone()
+            .with_topology(Topology::flat_of(&net, 8))
+            .model(&tg);
+        assert_eq!(rep.bytes_moved, base.bytes_moved);
+        assert_eq!(rep.sim_makespan_s, base.sim_makespan_s);
+        assert_eq!(rep.bytes_by_link.len(), 1);
+        assert_eq!(rep.bytes_by_link[0].1, base.bytes_moved);
+        // three-level: per-class tallies roll up to the same total, and
+        // faster inner links can only shorten the modeled makespan
+        let rep3 = flat
+            .clone()
+            .with_topology(Topology::three_level_of(&net, 8))
+            .model(&tg);
+        assert_eq!(rep3.bytes_moved, base.bytes_moved);
+        assert_eq!(rep3.bytes_by_link.len(), 3);
+        assert_eq!(
+            rep3.bytes_by_link.iter().map(|(_, b)| *b).sum::<u64>(),
+            rep3.bytes_moved
+        );
+        assert!(rep3.sim_makespan_s <= base.sim_makespan_s + 1e-12);
+    }
+
+    #[test]
+    fn collective_lowering_executes_bitwise() {
+        // The forced-repart chain of `execute_chain_with_repartitions`:
+        // lower-collectives lifts the Π into an AllGather relay chain and
+        // the serial folds into ReduceScatter chains; outputs must be
+        // bitwise the point-to-point run in both exec modes.
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![16, 16]);
+        let b = g.input("B", vec![16, 16]);
+        let c = g.input("C", vec![16, 16]);
+        let z1 = g
+            .add(
+                "Z1",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        let z2 = g
+            .add(
+                "Z2",
+                EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+                vec![z1, c],
+            )
+            .unwrap();
+        let mut plan = crate::decomp::Plan::default();
+        plan.parts.insert(z1, vec![2, 2, 4]); // dz = [2,4]
+        plan.parts.insert(z2, vec![4, 1, 4]); // needs [4,1]
+        plan.finalize_inputs(&g);
+        let mut inputs = HashMap::new();
+        inputs.insert(a, Tensor::random(&[16, 16], 3));
+        inputs.insert(b, Tensor::random(&[16, 16], 4));
+        inputs.insert(c, Tensor::random(&[16, 16], 5));
+        let engine = NativeEngine::new();
+        let net = NetworkProfile::loopback();
+        let base = Cluster::new(4, net.clone())
+            .execute(&g, &plan, &engine, &inputs)
+            .unwrap()
+            .0;
+        let sel: PassSelector = "elide-identity-repart,lower-collectives,dead-rel-elim"
+            .parse()
+            .unwrap();
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            let coll = Cluster::new(4, net.clone())
+                .with_passes(sel.clone())
+                .with_topology(Topology::three_level_of(&net, 4))
+                .with_exec_mode(mode);
+            // the rewrite actually fired: Z1's fold + Π fuse into an
+            // AllReduce (its dz rel has exactly one consumer, the Π)
+            let (_, prog, _) = coll.lower_explain(&g, &plan).unwrap();
+            assert!(prog.render().contains("AllReduce"), "{}", prog.render());
+            let outs = coll.execute(&g, &plan, &engine, &inputs).unwrap().0;
+            assert_eq!(outs[&z2], base[&z2], "{mode:?}");
         }
     }
 

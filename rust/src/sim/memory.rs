@@ -95,11 +95,17 @@ pub fn model_with_memory(
             let weight = is_weight_tile(d.0);
             // weight policies add movement independent of placement
             match (weight, mem.weight_policy) {
-                (true, WeightPolicy::ZeroSharded) => {
+                // A sharded weight tile already resident on the consuming
+                // worker crosses no wire — the shard's owner *is* the
+                // consumer. Charging it anyway (the pre-fix behaviour)
+                // inflated the ZeRO ledger with phantom local traffic.
+                (true, WeightPolicy::ZeroSharded) if dep.assigned_worker() != w => {
                     arrive += net.wire_s(dep.out_bytes);
                     report.bytes_moved += bytes;
                     report.bytes_input += bytes;
                 }
+                // same-worker sharded weights fall through to the
+                // resident-tile path below (fault back in if paged out)
                 (true, WeightPolicy::HostStreamed) => {
                     arrive += net.host_s(dep.out_bytes);
                     report.bytes_paged += bytes;
@@ -283,7 +289,36 @@ mod tests {
         };
         let r1 = model_with_memory(&tg, &net, 4, &resident, &weights);
         let r2 = model_with_memory(&tg, &net, 4, &zero, &weights);
-        assert!(r2.bytes_moved > r1.bytes_moved);
+        // ZeRO gathers remote weight shards as *input* traffic on every
+        // use; under the resident policy the same remote edges tally
+        // against the consuming kernel (join class) instead.
+        assert!(r2.bytes_input > 0);
+        assert_eq!(r1.bytes_input, 0);
+        // Since the same-worker fix, gathers replace — never inflate —
+        // the resident ledger: a shard crosses the wire iff the resident
+        // tile would have (same edges, same bytes, different class).
+        assert_eq!(r2.bytes_moved, r1.bytes_moved);
+    }
+
+    #[test]
+    fn zero_sharded_local_shards_are_free() {
+        // Regression for the same-worker-transfer fix: a sharded weight
+        // whose shard lives on the consuming worker crosses no wire. On a
+        // single worker every shard is local, so the ZeRO policy must
+        // model exactly zero traffic — it used to charge every weight use
+        // as if gathered remotely.
+        let (g, weights) = chain(3, 32);
+        let plan = plan_graph(&g, &PlannerConfig { p: 1, ..Default::default() }).unwrap();
+        let cluster = Cluster::new(1, NetworkProfile::gpu_server_a100());
+        let tg = cluster.lower(&g, &plan).unwrap();
+        let zero = MemoryConfig {
+            capacity_bytes: 1 << 30,
+            weight_policy: WeightPolicy::ZeroSharded,
+        };
+        let rep = model_with_memory(&tg, &cluster.net, 1, &zero, &weights);
+        assert_eq!(rep.bytes_moved, 0);
+        assert_eq!(rep.bytes_input, 0);
+        assert_eq!(rep.bytes_paged, 0);
     }
 
     #[test]

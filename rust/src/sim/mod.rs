@@ -18,4 +18,4 @@ pub mod memory;
 pub mod network;
 
 pub use cluster::{Cluster, ExecMode, ExecReport};
-pub use network::NetworkProfile;
+pub use network::{LinkClass, NetworkProfile, Topology};

@@ -1,4 +1,14 @@
-//! Network and device profiles for the simulated cluster.
+//! Network and device profiles for the simulated cluster, plus the
+//! hierarchical [`Topology`] view of the worker set.
+//!
+//! The seed model priced every cross-worker transfer at one flat
+//! [`NetworkProfile`] link. Real clusters are hierarchical — cores share
+//! a socket, sockets a node, nodes a rack — and the link two workers
+//! actually traverse is the one at their *lowest common group*.
+//! [`Topology`] captures exactly that: a nested grouping of the workers
+//! with one [`LinkClass`] (bandwidth + latency) per level. A `Cluster`
+//! or planner without a topology (`None`) uses the flat profile
+//! unchanged, byte-for-byte.
 
 /// Bandwidth/latency model of the interconnect plus a device compute rate.
 /// Transfers cost `latency_s + bytes / bandwidth_Bps`; compute costs
@@ -123,6 +133,239 @@ impl NetworkProfile {
     }
 }
 
+/// One class of links in a hierarchical [`Topology`]: the price of a
+/// hop between two workers whose lowest common group sits at this
+/// level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkClass {
+    pub name: String,
+    /// Link bandwidth at this level, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message latency at this level, seconds.
+    pub latency_s: f64,
+}
+
+impl LinkClass {
+    /// Time to move `bytes` across one link of this class. Mirrors
+    /// [`NetworkProfile::wire_s`]: a zero-byte transfer is no transfer
+    /// at all, so no latency either.
+    #[inline]
+    pub fn wire_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// A hierarchical view of the worker set: consecutive workers nest into
+/// groups (cores into sockets into nodes into racks), and a transfer
+/// between two workers is charged at the link class of their *lowest
+/// common group* — the hierarchical analogue of the seed's single flat
+/// link.
+///
+/// `spans[i]` is the number of consecutive workers per group at level
+/// `i`, innermost first: workers `a` and `b` share a level-`i` group
+/// iff `a / spans[i] == b / spans[i]`. Interior spans divide the next
+/// level's span (groups nest), the outermost span covers every worker
+/// (so [`Topology::link_class`] always resolves for distinct workers),
+/// and `classes` is parallel to `spans`. The presets make the
+/// *outermost* class equal to the underlying [`NetworkProfile`] and
+/// every inner class at least as fast, so a hierarchical topology only
+/// ever discounts the flat model — never exceeds it (the property
+/// `tests/topology_cost.rs` pins).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    name: String,
+    workers: usize,
+    spans: Vec<usize>,
+    classes: Vec<LinkClass>,
+}
+
+impl Topology {
+    /// Build a topology from explicit spans and link classes.
+    ///
+    /// Panics when the invariants above are violated; the `flat_of` /
+    /// `two_level_of` / `three_level_of` presets always satisfy them.
+    pub fn new(
+        name: impl Into<String>,
+        workers: usize,
+        spans: Vec<usize>,
+        classes: Vec<LinkClass>,
+    ) -> Self {
+        assert!(workers >= 1, "topology needs at least one worker");
+        assert!(!spans.is_empty(), "topology needs at least one level");
+        assert_eq!(
+            spans.len(),
+            classes.len(),
+            "spans and link classes must be parallel"
+        );
+        for (i, &s) in spans.iter().enumerate() {
+            assert!(s >= 1, "span at level {i} must be positive");
+            if i > 0 {
+                assert!(
+                    s >= spans[i - 1] && s % spans[i - 1] == 0,
+                    "span {s} at level {i} does not nest over {}",
+                    spans[i - 1]
+                );
+            }
+        }
+        assert!(
+            *spans.last().unwrap() >= workers,
+            "outermost span must cover all {workers} workers"
+        );
+        Topology {
+            name: name.into(),
+            workers,
+            spans,
+            classes,
+        }
+    }
+
+    /// Flat topology: one level whose single link class *is* `net`.
+    /// Reproduces the seed model exactly.
+    pub fn flat_of(net: &NetworkProfile, workers: usize) -> Self {
+        let workers = workers.max(1);
+        Topology::new(
+            format!("flat({})", net.name),
+            workers,
+            vec![workers],
+            vec![LinkClass {
+                name: "flat".into(),
+                bandwidth_bps: net.bandwidth_bps,
+                latency_s: net.latency_s,
+            }],
+        )
+    }
+
+    /// Two-level socket/node split: workers pair off into two sockets
+    /// of `ceil(workers/2)`; intra-socket links are 4x the profile
+    /// bandwidth at a quarter of the latency, cross-socket links are
+    /// the profile itself.
+    pub fn two_level_of(net: &NetworkProfile, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let socket = workers.div_ceil(2).max(1);
+        Topology::new(
+            format!("two-level({})", net.name),
+            workers,
+            vec![socket, socket * 2],
+            vec![
+                LinkClass {
+                    name: "intra-socket".into(),
+                    bandwidth_bps: net.bandwidth_bps * 4.0,
+                    latency_s: net.latency_s / 4.0,
+                },
+                LinkClass {
+                    name: "cross-socket".into(),
+                    bandwidth_bps: net.bandwidth_bps,
+                    latency_s: net.latency_s,
+                },
+            ],
+        )
+    }
+
+    /// Three-level rack config: nodes of `workers/4`, a middle
+    /// cross-node level of roughly half the workers, and a top rack
+    /// level at the profile's own speed. Intra-node links run at 8x
+    /// bandwidth / latency/8, cross-node at 2x / half latency.
+    pub fn three_level_of(net: &NetworkProfile, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let node = (workers / 4).max(1);
+        // middle span: at least half the workers, rounded up to nest
+        // over the node span (degenerate spans like [1, 1, 2] are fine:
+        // a never-matching level simply never prices a link).
+        let mid = node * (workers / 2).max(node).div_ceil(node);
+        let top = mid * workers.div_ceil(mid);
+        Topology::new(
+            format!("three-level({})", net.name),
+            workers,
+            vec![node, mid, top],
+            vec![
+                LinkClass {
+                    name: "intra-node".into(),
+                    bandwidth_bps: net.bandwidth_bps * 8.0,
+                    latency_s: net.latency_s / 8.0,
+                },
+                LinkClass {
+                    name: "cross-node".into(),
+                    bandwidth_bps: net.bandwidth_bps * 2.0,
+                    latency_s: net.latency_s / 2.0,
+                },
+                LinkClass {
+                    name: "cross-rack".into(),
+                    bandwidth_bps: net.bandwidth_bps,
+                    latency_s: net.latency_s,
+                },
+            ],
+        )
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Number of hierarchy levels (== number of link classes).
+    pub fn levels(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// A single-level topology prices every link identically — the
+    /// planner and executor treat it as the seed flat model.
+    pub fn is_flat(&self) -> bool {
+        self.classes.len() == 1
+    }
+
+    pub fn classes(&self) -> &[LinkClass] {
+        &self.classes
+    }
+
+    pub fn spans(&self) -> &[usize] {
+        &self.spans
+    }
+
+    /// Index of the link class a transfer `a -> b` traverses: the
+    /// innermost level whose groups contain both. `None` when `a == b`
+    /// (no wire at all).
+    pub fn link_class(&self, a: usize, b: usize) -> Option<usize> {
+        if a == b {
+            return None;
+        }
+        self.spans
+            .iter()
+            .position(|&s| a / s == b / s)
+            .or(Some(self.classes.len() - 1))
+    }
+
+    /// The link class a transfer `a -> b` traverses, or `None` for a
+    /// same-worker "transfer".
+    pub fn link_of(&self, a: usize, b: usize) -> Option<&LinkClass> {
+        self.link_class(a, b).map(|i| &self.classes[i])
+    }
+
+    /// Cost weight of level `i` relative to the outermost (flat) class:
+    /// `outermost_bw / class_bw`. With the presets' faster inner links
+    /// this is <= 1, which is what keeps hierarchical planner costs at
+    /// or below flat for the same plan.
+    pub fn class_weight(&self, i: usize) -> f64 {
+        let outer = self.classes.last().unwrap();
+        outer.bandwidth_bps / self.classes[i].bandwidth_bps
+    }
+
+    /// Branching factor at the top level: how many next-inner groups a
+    /// tree-shaped collective fans out over. At least 2.
+    pub fn gather_arity(&self) -> usize {
+        if self.classes.len() < 2 {
+            return 2;
+        }
+        let inner = self.spans[self.spans.len() - 2];
+        self.workers.div_ceil(inner).max(2)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,5 +399,73 @@ mod tests {
         ] {
             assert!(p.bandwidth_bps > 0.0 && p.flops_per_s > 0.0);
         }
+    }
+
+    #[test]
+    fn flat_topology_is_the_seed_link() {
+        let net = NetworkProfile::cpu_cluster();
+        let t = Topology::flat_of(&net, 8);
+        assert!(t.is_flat());
+        assert_eq!(t.levels(), 1);
+        assert_eq!(t.workers(), 8);
+        for a in 0..8 {
+            for b in 0..8 {
+                if a == b {
+                    assert_eq!(t.link_class(a, b), None);
+                } else {
+                    assert_eq!(t.link_class(a, b), Some(0));
+                    let l = t.link_of(a, b).unwrap();
+                    assert_eq!(l.bandwidth_bps, net.bandwidth_bps);
+                    assert_eq!(l.latency_s, net.latency_s);
+                    assert_eq!(l.wire_s(1 << 20), net.wire_s(1 << 20));
+                }
+            }
+        }
+        assert_eq!(t.class_weight(0), 1.0);
+    }
+
+    #[test]
+    fn two_level_groups_by_socket() {
+        let net = NetworkProfile::cpu_cluster();
+        let t = Topology::two_level_of(&net, 8);
+        assert_eq!(t.levels(), 2);
+        // sockets of 4: {0..3} and {4..7}
+        assert_eq!(t.link_class(0, 3), Some(0));
+        assert_eq!(t.link_class(1, 2), Some(0));
+        assert_eq!(t.link_class(3, 4), Some(1));
+        assert_eq!(t.link_class(0, 7), Some(1));
+        assert_eq!(t.link_class(5, 5), None);
+        // inner class is faster, outer class is the profile
+        assert!(t.class_weight(0) < 1.0);
+        assert_eq!(t.class_weight(1), 1.0);
+        assert_eq!(t.classes()[1].bandwidth_bps, net.bandwidth_bps);
+    }
+
+    #[test]
+    fn three_level_lca_lookup() {
+        let net = NetworkProfile::cpu_cluster();
+        let t = Topology::three_level_of(&net, 8);
+        assert_eq!(t.spans(), &[2, 4, 8]);
+        assert_eq!(t.link_class(0, 1), Some(0)); // same node
+        assert_eq!(t.link_class(1, 2), Some(1)); // same half, other node
+        assert_eq!(t.link_class(2, 3), Some(0));
+        assert_eq!(t.link_class(3, 4), Some(2)); // across the rack split
+        assert_eq!(t.link_class(0, 7), Some(2));
+        assert_eq!(t.gather_arity(), 2);
+        // weights strictly improve toward the leaves
+        assert!(t.class_weight(0) < t.class_weight(1));
+        assert!(t.class_weight(1) < t.class_weight(2));
+        assert_eq!(t.class_weight(2), 1.0);
+    }
+
+    #[test]
+    fn degenerate_spans_never_match() {
+        // three-level on 2 workers degenerates to [1, 1, 2]: the two
+        // inner levels can never group two distinct workers, so the
+        // only priced class is the top one.
+        let net = NetworkProfile::loopback();
+        let t = Topology::three_level_of(&net, 2);
+        assert_eq!(t.spans(), &[1, 1, 2]);
+        assert_eq!(t.link_class(0, 1), Some(2));
     }
 }

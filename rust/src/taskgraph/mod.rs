@@ -36,6 +36,22 @@ pub enum TaskKind {
         operand: usize,
         key: Vec<usize>,
     },
+    /// One step of a collective schedule: a pure pass-through relay of a
+    /// producer-layout tile toward collective member `member` (emitted
+    /// by the `lower-collectives` IR pass). `key` is the *source* tile's
+    /// key under the producer's partitioning — unlike `Repart`, whose
+    /// `key` is a consumer-layout tile — so the executor can recover dep
+    /// geometry without consulting `vertex_outputs`. Executes as a
+    /// zero-copy view clone; the modeled ledger charges it as
+    /// repartition traffic on whatever link the step crosses.
+    Collective {
+        producer: VertexId,
+        consumer: VertexId,
+        operand: usize,
+        key: Vec<usize>,
+        member: usize,
+        step: usize,
+    },
 }
 
 impl TaskKind {
@@ -47,6 +63,7 @@ impl TaskKind {
             TaskKind::Kernel { .. } => TransferClass::Join,
             TaskKind::Agg { .. } => TransferClass::Agg,
             TaskKind::Repart { .. } => TransferClass::Repart,
+            TaskKind::Collective { .. } => TransferClass::Repart,
         }
     }
 }

@@ -42,7 +42,15 @@ fn place_round_robin(tg: &mut TaskGraph, workers: usize) {
             TaskKind::Kernel { vertex, .. } => (1, vertex.0),
             TaskKind::Agg { vertex, .. } => (2, vertex.0),
             TaskKind::Repart { producer, .. } => (3, producer.0),
+            // relay steps are pinned to their member's worker (below),
+            // bypassing the counter — a relay on any other worker would
+            // defeat the schedule
+            TaskKind::Collective { producer, .. } => (4, producer.0),
         };
+        if let TaskKind::Collective { member, .. } = &tg.tasks[i].kind {
+            tg.tasks[i].worker = Some(member % workers);
+            continue;
+        }
         let c = counters.entry(keyv).or_insert(0);
         tg.tasks[i].worker = Some(*c % workers);
         *c += 1;
@@ -58,6 +66,7 @@ fn place_locality(tg: &mut TaskGraph, workers: usize) {
             TaskKind::Kernel { vertex, .. } => (1, vertex.0),
             TaskKind::Agg { vertex, .. } => (2, vertex.0),
             TaskKind::Repart { producer, .. } => (3, producer.0),
+            TaskKind::Collective { producer, .. } => (4, producer.0),
         }
     };
     // group sizes for caps
@@ -71,6 +80,12 @@ fn place_locality(tg: &mut TaskGraph, workers: usize) {
         let cap = group_size[&gid].div_ceil(workers);
         let gl = load.entry(gid).or_insert_with(|| vec![0; workers]);
         let worker = match &tg.tasks[i].kind {
+            TaskKind::Collective { member, .. } => {
+                // relay steps belong to their member by definition — the
+                // schedule's link pattern *is* the placement, so the
+                // load-balancing cap does not apply
+                member % workers
+            }
             TaskKind::InputTile { .. } => {
                 // inputs: pre-placed round-robin (offline, free)
                 let c = rr.entry(gid).or_insert(0);

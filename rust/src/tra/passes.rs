@@ -40,7 +40,16 @@
 //!    task's fan-in by the arity. Deterministic, but float `Sum` folds
 //!    associate differently than the serial chain (bit-different, still
 //!    within dense-reference tolerance).
-//! 7. **`dead-rel-elim`** — drop nodes whose relations nothing consumes.
+//! 7. **`lower-collectives`** — lift O(p²) point-to-point patterns into
+//!    first-class collectives: broadcast-shaped `Π`s become `AllGather`
+//!    relay chains, remaining serial folds become `ReduceScatter`
+//!    chains, and a fold feeding a single plain `Π` fuses into an
+//!    `AllReduce`. With the default `Ring` schedules every emitted chain
+//!    is bitwise-identical to the point-to-point baseline (relays are
+//!    pure copies; the ring reduce is the serial left fold). A `Tree`
+//!    *reduce* schedule re-associates float `Sum` like `agg-tree` does
+//!    and is opt-in only ([`PassManager::with_reduce_schedule`]).
+//! 8. **`dead-rel-elim`** — drop nodes whose relations nothing consumes.
 //!
 //! Selection is driven by a [`PassSelector`] (`--passes all|none|safe`
 //! or a comma-separated subset on the CLI), carried by both
@@ -58,7 +67,8 @@
 //! ```
 
 use crate::error::{Error, Result};
-use crate::tra::program::TraProgram;
+use crate::sim::network::Topology;
+use crate::tra::program::{CollectiveSchedule, TraProgram};
 use crate::util::Json;
 
 /// Default fan-in bound the `agg-tree` pass rewrites toward.
@@ -73,6 +83,7 @@ pub enum PassKind {
     AliasRefinementRepart,
     FuseEpilogue,
     AggTree,
+    LowerCollectives,
     DeadRelElim,
 }
 
@@ -82,13 +93,14 @@ impl PassKind {
     /// `elide-identity-repart` to remove; `cse` and `fuse-epilogue` both
     /// need those one-hop chains collapsed so producers and consumers
     /// read each other's relations directly.
-    pub const ALL: [PassKind; 7] = [
+    pub const ALL: [PassKind; 8] = [
         PassKind::PropagatePartitions,
         PassKind::ElideIdentityRepart,
         PassKind::Cse,
         PassKind::AliasRefinementRepart,
         PassKind::FuseEpilogue,
         PassKind::AggTree,
+        PassKind::LowerCollectives,
         PassKind::DeadRelElim,
     ];
 
@@ -103,6 +115,7 @@ impl PassKind {
             PassKind::AliasRefinementRepart => "alias-refinement-repart",
             PassKind::FuseEpilogue => "fuse-epilogue",
             PassKind::AggTree => "agg-tree",
+            PassKind::LowerCollectives => "lower-collectives",
             PassKind::DeadRelElim => "dead-rel-elim",
         }
     }
@@ -311,6 +324,21 @@ pub struct PassManager {
     /// planners treat renamed-but-isomorphic chains as equal, which is
     /// both safe and strictly more merging.
     pub label_sensitive: bool,
+    /// Relay schedule the `lower-collectives` pass gives `AllGather`
+    /// chains (and the gather phase of `AllReduce`). Bitwise-neutral
+    /// either way — relays are pure copies — so topology only steers the
+    /// cost/latency shape: `Ring` by default and on hierarchical
+    /// topologies (bandwidth-optimal; consecutive members land on
+    /// neighboring workers, keeping hops on the fast inner links),
+    /// `Tree` on explicitly-flat ones (fewer serialized steps).
+    pub gather_schedule: CollectiveSchedule,
+    /// Fold schedule for `ReduceScatter` / the reduce phase of
+    /// `AllReduce`. `Ring` (default) is the serial left fold,
+    /// bit-identical to the baseline; `Tree` re-associates float `Sum`
+    /// and is reachable only through
+    /// [`PassManager::with_reduce_schedule`] — the same opt-in contract
+    /// as `agg-tree`.
+    pub reduce_schedule: CollectiveSchedule,
 }
 
 impl PassManager {
@@ -319,6 +347,8 @@ impl PassManager {
             kinds: selector.kinds(),
             agg_tree_arity: DEFAULT_AGG_TREE_ARITY,
             label_sensitive: false,
+            gather_schedule: CollectiveSchedule::Ring,
+            reduce_schedule: CollectiveSchedule::Ring,
         }
     }
 
@@ -343,6 +373,32 @@ impl PassManager {
         self
     }
 
+    /// Pick the `lower-collectives` gather schedule for a worker
+    /// topology: `Ring` relays on hierarchical topologies (member order
+    /// follows worker order, so ring hops mostly stay on the fast inner
+    /// links), an explicit `Tree` fan-out sized by
+    /// [`Topology::gather_arity`] on flat ones (every hop costs the
+    /// same, so fewer serialized steps win). The reduce schedule is
+    /// never changed here — see [`PassManager::with_reduce_schedule`].
+    pub fn with_topology(mut self, topo: &Topology) -> PassManager {
+        self.gather_schedule = if topo.is_flat() {
+            CollectiveSchedule::Tree {
+                arity: topo.gather_arity(),
+            }
+        } else {
+            CollectiveSchedule::Ring
+        };
+        self
+    }
+
+    /// Opt into a non-default fold schedule for collective reductions.
+    /// A `Tree` schedule re-associates float `Sum` (the agg-tree
+    /// caveat), so it is never selected implicitly.
+    pub fn with_reduce_schedule(mut self, schedule: CollectiveSchedule) -> PassManager {
+        self.reduce_schedule = schedule;
+        self
+    }
+
     /// Names of the passes this manager will run, in order.
     pub fn names(&self) -> Vec<String> {
         self.kinds.iter().map(|k| k.name().to_string()).collect()
@@ -362,6 +418,9 @@ impl PassManager {
                 PassKind::AliasRefinementRepart => prog.alias_refinement_reparts(),
                 PassKind::FuseEpilogue => prog.fuse_epilogues(),
                 PassKind::AggTree => prog.agg_tree(self.agg_tree_arity),
+                PassKind::LowerCollectives => {
+                    prog.lower_collectives(self.gather_schedule, self.reduce_schedule)
+                }
                 PassKind::DeadRelElim => prog.dead_rel_elim(),
             };
             let after = prog.task_stats();
@@ -456,16 +515,20 @@ mod tests {
                 "alias-refinement-repart",
                 "fuse-epilogue",
                 "agg-tree",
+                "lower-collectives",
                 "dead-rel-elim"
             ]
         );
         // inputs already sit at the consumer layout (finalize_inputs), so
         // propagation finds nothing; identity reparts elided (2 input
-        // edges); agg rewritten to a tree
+        // edges); agg rewritten to a tree — which lower-collectives then
+        // leaves alone (tree'd folds are agg-tree's, and no plain Π's
+        // remain to lift)
         assert_eq!(log.entries[0].changes, 0);
         assert_eq!(log.entries[1].changes, 2);
         assert_eq!(log.entries[5].changes, 1);
         assert_eq!(log.entries[6].changes, 0);
+        assert_eq!(log.entries[7].changes, 0);
         assert!(log.total_changes() >= 3);
         // identity reparts already emitted zero tasks, so eliding them is
         // task-neutral; the tree rewrite trades tasks for bounded fan-in

@@ -52,7 +52,9 @@ use crate::einsum::label::LabelList;
 use crate::error::{Error, Result};
 use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
 use crate::tensor::index_space;
-use crate::tra::relation::{linearize, overlapping_tiles, tile_bytes, tile_offset, tile_size};
+use crate::tra::relation::{
+    delinearize, linearize, overlapping_tiles, tile_bytes, tile_offset, tile_size,
+};
 use std::collections::HashMap;
 use std::fmt::Write as _;
 
@@ -95,6 +97,25 @@ impl RelSchema {
         };
         format!("[{}]", axes.join(" "))
     }
+}
+
+/// How a collective's relay/fold chain is laid out across its members.
+///
+/// Both schedules are deterministic (fixed member order). `Ring` relays
+/// neighbor-to-neighbor — the textbook bandwidth-optimal layout, and for
+/// reductions it reproduces the serial left-fold order bit-for-bit.
+/// `Tree` fans out/in over an `arity`-ary tree — fewer serialized steps,
+/// but a *tree-scheduled reduction* re-associates the float fold and is
+/// therefore opt-in only (see `PassManager::with_reduce_schedule` and
+/// the agg-tree precedent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveSchedule {
+    /// Member `i` relays from member `i - 1`: `p - 1` serialized steps,
+    /// `(p-1)/p` of the bytes per link.
+    Ring,
+    /// Member `i` relays from member `(i - 1) / arity`: depth
+    /// `ceil(log_arity p)`.
+    Tree { arity: usize },
 }
 
 /// One relational operation of the IR (paper §4.2 / Eq. 5).
@@ -163,6 +184,45 @@ pub enum TraOp {
     /// as `vertex`'s outputs so downstream repartition key recovery and
     /// output assembly still find the merged vertex.
     Reuse { vertex: VertexId, src: RelId },
+    /// A broadcast-shaped `Π` lifted by the `lower-collectives` pass:
+    /// source tiles read by two or more consumer tiles are relayed
+    /// member-to-member along `schedule` (pure pass-through copies, so
+    /// bitwise-identical to the point-to-point `Repartition`) instead of
+    /// every member fetching from the producer — O(p) link crossings
+    /// where the point-to-point pattern pays O(p²).
+    AllGather {
+        src: RelId,
+        producer: VertexId,
+        consumer: VertexId,
+        operand: usize,
+        schedule: CollectiveSchedule,
+    },
+    /// A serial-fold `Aggregate` lifted by `lower-collectives`: each
+    /// group reduces along a chain of two-input `Agg` tasks. The `Ring`
+    /// schedule is the serial left fold and stays bit-identical; `Tree`
+    /// re-associates and is opt-in only.
+    ReduceScatter {
+        vertex: VertexId,
+        src: RelId,
+        agg: AggOp,
+        schedule: CollectiveSchedule,
+    },
+    /// An `Aggregate` whose only consumer was a plain `Π`, fused by
+    /// `lower-collectives`: reduce-scatter into the aggregate's own
+    /// `d_Z` layout, then all-gather straight into the consumer's needed
+    /// layout. `mid` is the aggregate's original output relation — its
+    /// schema still carries the intermediate `d_Z` the reduce phase
+    /// produces (relations are never deleted, so it stays valid).
+    AllReduce {
+        vertex: VertexId,
+        src: RelId,
+        agg: AggOp,
+        mid: RelId,
+        consumer: VertexId,
+        operand: usize,
+        reduce: CollectiveSchedule,
+        bcast: CollectiveSchedule,
+    },
 }
 
 impl TraOp {
@@ -176,6 +236,9 @@ impl TraOp {
             TraOp::ReKey { .. } => "ReKey",
             TraOp::Assemble { .. } => "Assemble",
             TraOp::Reuse { .. } => "Reuse",
+            TraOp::AllGather { .. } => "AllGather",
+            TraOp::ReduceScatter { .. } => "ReduceScatter",
+            TraOp::AllReduce { .. } => "AllReduce",
         }
     }
 
@@ -187,7 +250,10 @@ impl TraOp {
             | TraOp::Aggregate { src, .. }
             | TraOp::ReKey { src, .. }
             | TraOp::Assemble { src, .. }
-            | TraOp::Reuse { src, .. } => vec![*src],
+            | TraOp::Reuse { src, .. }
+            | TraOp::AllGather { src, .. }
+            | TraOp::ReduceScatter { src, .. }
+            | TraOp::AllReduce { src, .. } => vec![*src],
             TraOp::Join { inputs, .. } => inputs.clone(),
         }
     }
@@ -199,7 +265,10 @@ impl TraOp {
             | TraOp::Aggregate { src, .. }
             | TraOp::ReKey { src, .. }
             | TraOp::Assemble { src, .. }
-            | TraOp::Reuse { src, .. } => vec![src],
+            | TraOp::Reuse { src, .. }
+            | TraOp::AllGather { src, .. }
+            | TraOp::ReduceScatter { src, .. }
+            | TraOp::AllReduce { src, .. } => vec![src],
             TraOp::Join { inputs, .. } => inputs.iter_mut().collect(),
         }
     }
@@ -267,6 +336,266 @@ pub fn is_refinement(bound: &[usize], have: &[usize], need: &[usize]) -> bool {
         }
     }
     true
+}
+
+/// Per consumer tile (row-major over `need`), the linearized producer
+/// tiles (under `have`) it reads — in exactly the range order
+/// [`TraProgram::emit_tasks`]'s `Repartition` arm enumerates deps. The
+/// single source of truth the point-to-point emission, the
+/// `lower-collectives` detection, the collective emission, and
+/// [`TraProgram::task_stats`] all share, which is what makes the
+/// collective lowering bitwise-identical by construction.
+pub(crate) fn pi_source_map(bound: &[usize], have: &[usize], need: &[usize]) -> Vec<Vec<usize>> {
+    let mut map = Vec::new();
+    for key in index_space(need) {
+        let ranges: Vec<(usize, usize)> = key
+            .iter()
+            .enumerate()
+            .map(|(dim, &k)| {
+                let origin = tile_offset(bound[dim], need[dim], k);
+                let len = tile_size(bound[dim], need[dim], k);
+                overlapping_tiles(bound[dim], have[dim], origin, len)
+            })
+            .collect();
+        let range_dims: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo + 1).collect();
+        let mut srcs = Vec::new();
+        for rk in index_space(&range_dims) {
+            let pkey: Vec<usize> = rk
+                .iter()
+                .zip(&ranges)
+                .map(|(&r, &(lo, _))| lo + r)
+                .collect();
+            srcs.push(linearize(&pkey, have));
+        }
+        map.push(srcs);
+    }
+    map
+}
+
+/// Source tiles shared by two or more consumer tiles, ascending, paired
+/// with their members (consumer linear keys, ascending).
+fn shared_sources(smap: &[Vec<usize>]) -> Vec<(usize, Vec<usize>)> {
+    let mut members_of: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (m, srcs) in smap.iter().enumerate() {
+        for &s in srcs {
+            members_of.entry(s).or_default().push(m);
+        }
+    }
+    let mut shared: Vec<(usize, Vec<usize>)> = members_of
+        .into_iter()
+        .filter(|(_, ms)| ms.len() >= 2)
+        .collect();
+    shared.sort_unstable();
+    shared
+}
+
+/// Emit the relay + assemble tasks of an all-gather over `src_tiles`
+/// (the producer relation, `have` layout over `bound`), returning the
+/// assembled tiles in `need` layout. Each source tile read by two or
+/// more consumer tiles is relayed member-to-member along `schedule` as
+/// [`TaskKind::Collective`] pass-through copies; every member then
+/// assembles from *its own* relay via a standard `Repart` task whose
+/// dep geometry (source tiles, range order) is identical to the
+/// point-to-point emission — which is why the assembled bytes are
+/// bitwise-identical to the `Repartition` this replaces.
+#[allow(clippy::too_many_arguments)]
+fn emit_all_gather(
+    tg: &mut TaskGraph,
+    src_tiles: &[TaskId],
+    bound: &[usize],
+    have: &[usize],
+    need: &[usize],
+    producer: VertexId,
+    consumer: VertexId,
+    operand: usize,
+    schedule: CollectiveSchedule,
+) -> Vec<TaskId> {
+    let smap = pi_source_map(bound, have, need);
+    // (source, member) -> that member's relay of the source tile
+    let mut relay: HashMap<(usize, usize), TaskId> = HashMap::new();
+    for (s, members) in shared_sources(&smap) {
+        let skey = delinearize(s, have);
+        let sbytes = tile_bytes(bound, have, &skey);
+        let mut chain: Vec<TaskId> = Vec::with_capacity(members.len());
+        for (i, &m) in members.iter().enumerate() {
+            let dep = if i == 0 {
+                src_tiles[s]
+            } else {
+                match schedule {
+                    CollectiveSchedule::Ring => chain[i - 1],
+                    CollectiveSchedule::Tree { arity } => chain[(i - 1) / arity.max(1)],
+                }
+            };
+            let t = tg.push_task(
+                TaskKind::Collective {
+                    producer,
+                    consumer,
+                    operand,
+                    key: skey.clone(),
+                    member: m,
+                    step: i,
+                },
+                vec![dep],
+                sbytes,
+                0.0,
+            );
+            chain.push(t);
+            relay.insert((s, m), t);
+        }
+    }
+    let mut tiles = Vec::new();
+    for (m, key) in index_space(need).enumerate() {
+        let deps: Vec<TaskId> = smap[m]
+            .iter()
+            .map(|&s| relay.get(&(s, m)).copied().unwrap_or(src_tiles[s]))
+            .collect();
+        let bytes = tile_bytes(bound, need, &key);
+        tiles.push(tg.push_task(
+            TaskKind::Repart {
+                producer,
+                consumer,
+                operand,
+                key,
+            },
+            deps,
+            bytes,
+            0.0,
+        ));
+    }
+    tiles
+}
+
+/// Emit one reduce-scatter phase: group `kernels` (in `d` layout) by
+/// `zproj` into `dz` groups and fold each along `schedule`. `Ring` is a
+/// moving-accumulator chain of two-input `Agg` tasks whose combine
+/// order equals the baseline serial fold — bitwise-identical; `Tree`
+/// re-associates (the same caveat as the `agg-tree` pass) and is only
+/// reachable through the explicit opt-in.
+#[allow(clippy::too_many_arguments)]
+fn emit_reduce_scatter(
+    tg: &mut TaskGraph,
+    kernels: &[TaskId],
+    d: &[usize],
+    zproj: &[usize],
+    dz: &[usize],
+    bz: &[usize],
+    vertex: VertexId,
+    schedule: CollectiveSchedule,
+) -> Result<Vec<TaskId>> {
+    let mut groups: HashMap<Vec<usize>, Vec<TaskId>> = HashMap::new();
+    for (key, &tid) in index_space(d).zip(kernels) {
+        let zkey: Vec<usize> = zproj.iter().map(|&i| key[i]).collect();
+        groups.entry(zkey).or_default().push(tid);
+    }
+    let mut outs = Vec::new();
+    for zkey in index_space(dz) {
+        let members = groups
+            .remove(&zkey)
+            .ok_or_else(|| Error::TaskGraph(format!("missing collective group {zkey:?}")))?;
+        let bytes = tile_bytes(bz, dz, &zkey);
+        let elems = (bytes / 4) as f64;
+        let root = match schedule {
+            CollectiveSchedule::Ring => {
+                let mut acc = members[0];
+                for &m in &members[1..] {
+                    acc = tg.push_task(
+                        TaskKind::Agg {
+                            vertex,
+                            key: zkey.clone(),
+                        },
+                        vec![acc, m],
+                        bytes,
+                        elems,
+                    );
+                }
+                acc
+            }
+            CollectiveSchedule::Tree { arity } if members.len() > arity.max(2) => {
+                let arity = arity.max(2);
+                let mut level = members;
+                loop {
+                    let mut next = Vec::with_capacity(level.len().div_ceil(arity));
+                    for chunk in level.chunks(arity) {
+                        if chunk.len() == 1 {
+                            next.push(chunk[0]);
+                            continue;
+                        }
+                        let flops = elems * (chunk.len() as f64 - 1.0);
+                        next.push(tg.push_task(
+                            TaskKind::Agg {
+                                vertex,
+                                key: zkey.clone(),
+                            },
+                            chunk.to_vec(),
+                            bytes,
+                            flops,
+                        ));
+                    }
+                    if next.len() == 1 {
+                        break next[0];
+                    }
+                    level = next;
+                }
+            }
+            CollectiveSchedule::Tree { .. } => {
+                let flops = elems * (members.len() as f64 - 1.0);
+                tg.push_task(TaskKind::Agg { vertex, key: zkey }, members, bytes, flops)
+            }
+        };
+        outs.push(root);
+    }
+    Ok(outs)
+}
+
+/// Task and repart-byte footprint of one all-gather phase — the member
+/// assembles plus one relay per (shared source, member) pair — mirroring
+/// [`emit_all_gather`] exactly. Relays move the *source* tile's bytes
+/// and count as repartition traffic (they are `Repart`-class movement).
+fn gather_stats(bound: &[usize], have: &[usize], need: &[usize]) -> (usize, u64) {
+    let smap = pi_source_map(bound, have, need);
+    let mut tasks = 0usize;
+    let mut bytes = 0u64;
+    for key in index_space(need) {
+        tasks += 1;
+        bytes += tile_bytes(bound, need, &key) as u64;
+    }
+    for (s, members) in shared_sources(&smap) {
+        let skey = delinearize(s, have);
+        tasks += members.len();
+        bytes += (tile_bytes(bound, have, &skey) * members.len()) as u64;
+    }
+    (tasks, bytes)
+}
+
+/// Fold tasks one reduce-scatter group of `group` members emits under
+/// `schedule`, mirroring [`emit_reduce_scatter`] exactly.
+fn reduce_tasks_per_group(group: usize, schedule: CollectiveSchedule) -> usize {
+    match schedule {
+        CollectiveSchedule::Ring => group.saturating_sub(1),
+        CollectiveSchedule::Tree { arity } if group > arity.max(2) => {
+            let arity = arity.max(2);
+            let mut tasks = 0usize;
+            let mut level = group;
+            loop {
+                let mut next = 0usize;
+                let mut i = 0usize;
+                while i < level {
+                    let chunk = arity.min(level - i);
+                    if chunk > 1 {
+                        tasks += 1;
+                    }
+                    next += 1;
+                    i += chunk;
+                }
+                if next == 1 {
+                    break;
+                }
+                level = next;
+            }
+            tasks
+        }
+        CollectiveSchedule::Tree { .. } => 1,
+    }
 }
 
 /// Rewrite a planned EinGraph into its TRA program (Eq. 5, per vertex:
@@ -577,28 +906,11 @@ impl TraProgram {
                         continue;
                     }
                     let cb = &out_s.bound;
+                    let smap = pi_source_map(cb, &have, need);
                     let mut tiles = Vec::new();
-                    for key in index_space(need) {
-                        let ranges: Vec<(usize, usize)> = key
-                            .iter()
-                            .enumerate()
-                            .map(|(dim, &k)| {
-                                let origin = tile_offset(cb[dim], need[dim], k);
-                                let len = tile_size(cb[dim], need[dim], k);
-                                overlapping_tiles(cb[dim], have[dim], origin, len)
-                            })
-                            .collect();
-                        let mut deps = Vec::new();
-                        let range_dims: Vec<usize> =
-                            ranges.iter().map(|(lo, hi)| hi - lo + 1).collect();
-                        for rk in index_space(&range_dims) {
-                            let pkey: Vec<usize> = rk
-                                .iter()
-                                .zip(&ranges)
-                                .map(|(&r, &(lo, _))| lo + r)
-                                .collect();
-                            deps.push(src_tiles[linearize(&pkey, &have)]);
-                        }
+                    for (m, key) in index_space(need).enumerate() {
+                        let deps: Vec<TaskId> =
+                            smap[m].iter().map(|&s| src_tiles[s]).collect();
                         let bytes = tile_bytes(cb, need, &key);
                         tiles.push(tg.push_task(
                             TaskKind::Repart {
@@ -797,6 +1109,120 @@ impl TraProgram {
                     tg.vertex_out_part.insert(*vertex, out_s.part.clone());
                     prov[node.out.0] = Some(Provider::Direct(tiles));
                 }
+                TraOp::AllGather {
+                    src,
+                    producer,
+                    consumer,
+                    operand,
+                    schedule,
+                } => {
+                    let have = self.rels[src.0].part.clone();
+                    let need = &out_s.part;
+                    let src_tiles = match prov[src.0].as_ref() {
+                        Some(Provider::Direct(t)) => t.clone(),
+                        _ => {
+                            return Err(Error::TaskGraph(
+                                "all-gather source is not a materialized relation (internal)"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    if have == *need {
+                        prov[node.out.0] = Some(Provider::Direct(src_tiles));
+                        continue;
+                    }
+                    let tiles = emit_all_gather(
+                        &mut tg,
+                        &src_tiles,
+                        &out_s.bound,
+                        &have,
+                        need,
+                        *producer,
+                        *consumer,
+                        *operand,
+                        *schedule,
+                    );
+                    prov[node.out.0] = Some(Provider::Direct(tiles));
+                }
+                TraOp::ReduceScatter {
+                    vertex,
+                    src,
+                    schedule,
+                    ..
+                } => {
+                    let d = self.rels[src.0].part.clone();
+                    let kernels = match prov[src.0].as_ref() {
+                        Some(Provider::Direct(t)) => t.clone(),
+                        _ => {
+                            return Err(Error::TaskGraph(
+                                "reduce-scatter source is not a materialized relation (internal)"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    let outs = emit_reduce_scatter(
+                        &mut tg,
+                        &kernels,
+                        &d,
+                        &node.zproj,
+                        &out_s.part,
+                        &out_s.bound,
+                        *vertex,
+                        *schedule,
+                    )?;
+                    tg.vertex_outputs.insert(*vertex, outs.clone());
+                    tg.vertex_out_part.insert(*vertex, out_s.part.clone());
+                    prov[node.out.0] = Some(Provider::Direct(outs));
+                }
+                TraOp::AllReduce {
+                    vertex,
+                    src,
+                    mid,
+                    consumer,
+                    operand,
+                    reduce,
+                    bcast,
+                    ..
+                } => {
+                    let d = self.rels[src.0].part.clone();
+                    let kernels = match prov[src.0].as_ref() {
+                        Some(Provider::Direct(t)) => t.clone(),
+                        _ => {
+                            return Err(Error::TaskGraph(
+                                "all-reduce source is not a materialized relation (internal)"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    // reduce phase into the aggregate's own d_Z layout
+                    // (the fused `mid` relation still carries it) ...
+                    let mid_s = &self.rels[mid.0];
+                    let roots = emit_reduce_scatter(
+                        &mut tg,
+                        &kernels,
+                        &d,
+                        &node.zproj,
+                        &mid_s.part,
+                        &mid_s.bound,
+                        *vertex,
+                        *reduce,
+                    )?;
+                    tg.vertex_outputs.insert(*vertex, roots.clone());
+                    tg.vertex_out_part.insert(*vertex, mid_s.part.clone());
+                    // ... then gather straight into the consumer's layout
+                    let tiles = emit_all_gather(
+                        &mut tg,
+                        &roots,
+                        &out_s.bound,
+                        &mid_s.part,
+                        &out_s.part,
+                        *vertex,
+                        *consumer,
+                        *operand,
+                        *bcast,
+                    );
+                    prov[node.out.0] = Some(Provider::Direct(tiles));
+                }
             }
         }
         Ok(tg)
@@ -855,6 +1281,37 @@ impl TraProgram {
                         _ => 1,
                     };
                     s.tasks += groups * per_group;
+                }
+                TraOp::AllGather { src, .. } => {
+                    let have = &self.rels[src.0].part;
+                    let need = &out_s.part;
+                    if have == need {
+                        continue;
+                    }
+                    let (tasks, bytes) = gather_stats(&out_s.bound, have, need);
+                    s.tasks += tasks;
+                    s.repart_tasks += tasks;
+                    s.repart_bytes += bytes;
+                }
+                TraOp::ReduceScatter { src, schedule, .. } => {
+                    let groups = out_s.num_tiles();
+                    let group = self.rels[src.0].num_tiles() / groups.max(1);
+                    s.tasks += groups * reduce_tasks_per_group(group, *schedule);
+                }
+                TraOp::AllReduce {
+                    src,
+                    mid,
+                    reduce,
+                    ..
+                } => {
+                    let mid_s = &self.rels[mid.0];
+                    let groups = mid_s.num_tiles();
+                    let group = self.rels[src.0].num_tiles() / groups.max(1);
+                    s.tasks += groups * reduce_tasks_per_group(group, *reduce);
+                    let (tasks, bytes) = gather_stats(&out_s.bound, &mid_s.part, &out_s.part);
+                    s.tasks += tasks;
+                    s.repart_tasks += tasks;
+                    s.repart_bytes += bytes;
                 }
                 TraOp::ReKey { .. } | TraOp::Assemble { .. } | TraOp::Reuse { .. } => {}
             }
@@ -923,6 +1380,28 @@ impl TraProgram {
                         Some(r) => format!(" {agg:?} group={group} tree(arity {r})"),
                         None => format!(" {agg:?} group={group} serial-fold"),
                     }
+                }
+                TraOp::AllGather {
+                    operand, schedule, ..
+                } => format!(" op{operand} {schedule:?} relay"),
+                TraOp::ReduceScatter {
+                    src, agg, schedule, ..
+                } => {
+                    let group =
+                        self.rels[src.0].num_tiles() / self.rels[node.out.0].num_tiles().max(1);
+                    format!(" {agg:?} group={group} {schedule:?} chain")
+                }
+                TraOp::AllReduce {
+                    src,
+                    agg,
+                    mid,
+                    reduce,
+                    bcast,
+                    ..
+                } => {
+                    let group =
+                        self.rels[src.0].num_tiles() / self.rels[mid.0].num_tiles().max(1);
+                    format!(" {agg:?} group={group} {reduce:?} reduce + {bcast:?} gather")
                 }
                 TraOp::ReKey { .. } | TraOp::Assemble { .. } => String::new(),
                 TraOp::Reuse { .. } => " (merged duplicate)".into(),
@@ -1048,6 +1527,162 @@ impl TraProgram {
                 *tree_arity = Some(arity);
             }
             notes.push(note);
+        }
+        notes
+    }
+
+    /// Lift point-to-point communication patterns into first-class
+    /// collectives (the `lower-collectives` pass):
+    ///
+    /// 1. a serial-fold `Aggregate` whose output's only consumer is a
+    ///    plain (non-identity, non-alias) `Repartition` fuses into one
+    ///    [`TraOp::AllReduce`] — reduce-scatter in the aggregate's own
+    ///    layout, then gather straight into the consumer's;
+    /// 2. every remaining serial-fold `Aggregate` with two or more
+    ///    members per group becomes a [`TraOp::ReduceScatter`] chain
+    ///    (tree'd aggregates stay with the `agg-tree` rewrite);
+    /// 3. every remaining plain non-identity `Repartition` with at least
+    ///    one source tile read by two or more consumer tiles becomes an
+    ///    [`TraOp::AllGather`] relay.
+    ///
+    /// With `Ring` schedules (the defaults) the emitted task chains are
+    /// bitwise-identical to the point-to-point baseline: gather relays
+    /// are pure copies and the ring reduce is the serial left fold.
+    pub(crate) fn lower_collectives(
+        &mut self,
+        gather: CollectiveSchedule,
+        reduce: CollectiveSchedule,
+    ) -> Vec<String> {
+        let mut notes = Vec::new();
+        // Consumer count per relation, for the fusion's only-consumer test.
+        let mut cons: Vec<Vec<usize>> = vec![Vec::new(); self.rels.len()];
+        for (ni, node) in self.nodes.iter().enumerate() {
+            for r in node.op.input_rels() {
+                cons[r.0].push(ni);
+            }
+        }
+        let mut dead = vec![false; self.nodes.len()];
+        // 1. Aggregate whose out feeds exactly one plain Π -> AllReduce.
+        for ai in 0..self.nodes.len() {
+            let (src, agg, vertex) = match &self.nodes[ai].op {
+                TraOp::Aggregate {
+                    src,
+                    agg,
+                    vertex,
+                    tree_arity: None,
+                } => (*src, *agg, *vertex),
+                _ => continue,
+            };
+            let mid = self.nodes[ai].out;
+            let group = self.rels[src.0].num_tiles() / self.rels[mid.0].num_tiles().max(1);
+            if group < 2 || cons[mid.0].len() != 1 {
+                continue;
+            }
+            let pi = cons[mid.0][0];
+            let (consumer, operand) = match &self.nodes[pi].op {
+                TraOp::Repartition {
+                    consumer,
+                    operand,
+                    alias: false,
+                    ..
+                } => (*consumer, *operand),
+                _ => continue,
+            };
+            let pout = self.nodes[pi].out;
+            if self.rels[mid.0].part == self.rels[pout.0].part {
+                continue; // identity Π: elision gets it for free
+            }
+            notes.push(format!(
+                "{}: {group}-way fold + Π fused into AllReduce ({reduce:?} reduce, {gather:?} gather)",
+                self.nodes[ai].name
+            ));
+            self.nodes[ai].op = TraOp::AllReduce {
+                vertex,
+                src,
+                agg,
+                mid,
+                consumer,
+                operand,
+                reduce,
+                bcast: gather,
+            };
+            self.nodes[ai].out = pout;
+            dead[pi] = true;
+        }
+        // 2 + 3. Remaining serial folds and broadcast-shaped Π's.
+        for ni in 0..self.nodes.len() {
+            if dead[ni] {
+                continue;
+            }
+            let out = self.nodes[ni].out;
+            match &self.nodes[ni].op {
+                TraOp::Aggregate {
+                    src,
+                    agg,
+                    vertex,
+                    tree_arity: None,
+                } => {
+                    let (src, agg, vertex) = (*src, *agg, *vertex);
+                    let group =
+                        self.rels[src.0].num_tiles() / self.rels[out.0].num_tiles().max(1);
+                    if group < 2 {
+                        continue;
+                    }
+                    notes.push(format!(
+                        "{}: {group}-way serial fold -> ReduceScatter ({reduce:?})",
+                        self.nodes[ni].name
+                    ));
+                    self.nodes[ni].op = TraOp::ReduceScatter {
+                        vertex,
+                        src,
+                        agg,
+                        schedule: reduce,
+                    };
+                }
+                TraOp::Repartition {
+                    src,
+                    producer,
+                    consumer,
+                    operand,
+                    alias: false,
+                } => {
+                    let (src, producer, consumer, operand) =
+                        (*src, *producer, *consumer, *operand);
+                    if self.rels[src.0].part == self.rels[out.0].part {
+                        continue;
+                    }
+                    let smap = pi_source_map(
+                        &self.rels[out.0].bound,
+                        &self.rels[src.0].part,
+                        &self.rels[out.0].part,
+                    );
+                    let shared = shared_sources(&smap);
+                    if shared.is_empty() {
+                        continue;
+                    }
+                    notes.push(format!(
+                        "{}: op {operand} Π broadcasts {} source tiles -> AllGather ({gather:?})",
+                        self.nodes[ni].name,
+                        shared.len()
+                    ));
+                    self.nodes[ni].op = TraOp::AllGather {
+                        src,
+                        producer,
+                        consumer,
+                        operand,
+                        schedule: gather,
+                    };
+                }
+                _ => {}
+            }
+        }
+        if dead.iter().any(|&d| d) {
+            let mut i = 0;
+            self.nodes.retain(|_| {
+                let keep = !dead[i];
+                i += 1;
+                keep
+            });
         }
         notes
     }

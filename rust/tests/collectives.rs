@@ -1,0 +1,248 @@
+//! Differential suite for the `lower-collectives` pass.
+//!
+//! The pass replaces O(p^2) point-to-point repartition patterns with
+//! `AllGather` / `ReduceScatter` / `AllReduce` collectives, scheduled as
+//! ring relays or explicit trees per the worker topology. The lowering
+//! contract is *bitwise* equivalence: `AllGather` relays are pure
+//! copies, and the default `Ring` reduce fold combines members in
+//! exactly the baseline serial-fold order. This suite locks that in:
+//!
+//! * every bench workload (matrix chain, FFNN training step, one-layer
+//!   attention), for p in {2, 4, 8}, under flat / two-level /
+//!   three-level topologies, in BOTH real-execution modes, produces
+//!   bitwise-identical outputs with the collective lowering on vs off;
+//! * the sweep is not vacuous — the pass is asserted to rewrite at
+//!   least one pattern per workload family;
+//! * tree-scheduled reductions for float `Sum` stay out of the default
+//!   pass set and out of `with_topology` (they re-associate the fold,
+//!   same caveat as `agg-tree`) — `Tree` reduce is reachable only
+//!   through the explicit [`PassManager::with_reduce_schedule`] opt-in.
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::decomp::Plan;
+use eindecomp::einsum::expr::EinSum;
+use eindecomp::einsum::graph::{EinGraph, VertexId};
+use eindecomp::einsum::label::labels;
+use eindecomp::models::ffnn::ffnn_step;
+use eindecomp::models::llama::{llama_graph, LlamaConfig};
+use eindecomp::models::matchain::chain_graph;
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::{Cluster, ExecMode, NetworkProfile, Topology};
+use eindecomp::taskgraph::placement::{place, Policy};
+use eindecomp::tensor::Tensor;
+use eindecomp::tra::passes::{PassKind, PassManager, PassSelector};
+use eindecomp::tra::program::{from_plan, CollectiveSchedule};
+use std::collections::HashMap;
+
+/// `lower-collectives` plus the structure-neutral cleanups it composes
+/// with — the treatment arm of the differential.
+fn collective_passes() -> PassSelector {
+    "elide-identity-repart,lower-collectives,dead-rel-elim"
+        .parse()
+        .unwrap()
+}
+
+/// Re-shard every pre-partitioned input along the reversed axis order
+/// (storage layout vs compute layout) so real repartition patterns
+/// exist for the pass to collapse — same setup as `benches/lowering.rs`.
+fn storage_shard_inputs(plan: &mut Plan) {
+    for part in plan.input_parts.values_mut() {
+        part.reverse();
+    }
+}
+
+fn random_inputs(g: &EinGraph, seed: u64) -> HashMap<VertexId, Tensor> {
+    g.inputs()
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (v, Tensor::random(&g.vertex(v).bound, seed + i as u64)))
+        .collect()
+}
+
+/// The full differential sweep for one workload: p x topology x
+/// exec-mode, collective lowering on vs off, outputs compared bitwise.
+/// Returns the total number of `lower-collectives` rewrites observed so
+/// callers can assert the sweep actually exercised the pass.
+fn sweep(name: &str, g: &EinGraph) -> usize {
+    let engine = NativeEngine::new();
+    let roles = LabelRoles::by_convention();
+    let net = NetworkProfile::cpu_cluster();
+    let mut fired = 0usize;
+    for p in [2usize, 4, 8] {
+        let mut plan = assign(g, &Strategy::EinDecomp, p, &roles).unwrap();
+        storage_shard_inputs(&mut plan);
+        let inputs = random_inputs(g, 900 + p as u64);
+        let topologies = [
+            Topology::flat_of(&net, p),
+            Topology::two_level_of(&net, p),
+            Topology::three_level_of(&net, p),
+        ];
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            // control arm: the seed-identical Safe pipeline
+            let base = Cluster::new(p, NetworkProfile::cpu_cluster())
+                .with_passes(PassSelector::Safe)
+                .with_exec_mode(mode)
+                .execute(g, &plan, &engine, &inputs)
+                .unwrap()
+                .0;
+            for topo in &topologies {
+                let cluster = Cluster::new(p, NetworkProfile::cpu_cluster())
+                    .with_passes(collective_passes())
+                    .with_topology(topo.clone())
+                    .with_exec_mode(mode);
+                let (_, _, log) = cluster.lower_explain(g, &plan).unwrap();
+                fired += log
+                    .entries
+                    .iter()
+                    .filter(|e| e.pass == "lower-collectives")
+                    .map(|e| e.changes)
+                    .sum::<usize>();
+                let got = cluster.execute(g, &plan, &engine, &inputs).unwrap().0;
+                for out in g.outputs() {
+                    assert_eq!(
+                        base[&out],
+                        got[&out],
+                        "{name} p={p} {mode:?} {}: collective lowering \
+                         diverged bitwise from the safe pipeline",
+                        topo.name()
+                    );
+                }
+            }
+        }
+    }
+    fired
+}
+
+#[test]
+fn matchain_collectives_bitwise_all_topologies() {
+    let chain = chain_graph(24, false).unwrap();
+    let fired = sweep("matchain", &chain.graph);
+    assert!(fired > 0, "sweep never triggered lower-collectives (vacuous)");
+}
+
+#[test]
+fn ffnn_collectives_bitwise_all_topologies() {
+    let ffnn = ffnn_step(32, 48, 24, 8).unwrap();
+    let fired = sweep("ffnn", &ffnn.graph);
+    assert!(fired > 0, "sweep never triggered lower-collectives (vacuous)");
+}
+
+#[test]
+fn attention_collectives_bitwise_all_topologies() {
+    let cfg = LlamaConfig {
+        layers: 1,
+        batch: 2,
+        seq: 16,
+        model_dim: 32,
+        heads: 2,
+        head_dim: 16,
+        ffn_dim: 64,
+    };
+    let attn = llama_graph(&cfg).unwrap();
+    let fired = sweep("attention", &attn.graph);
+    assert!(fired > 0, "sweep never triggered lower-collectives (vacuous)");
+}
+
+/// One contraction with an 8-way aggregation group — the canonical
+/// reduce-scatter shape (agg-tree is deliberately absent from the pass
+/// set so the serial fold survives for `lower-collectives` to claim).
+fn allreduce_case() -> (EinGraph, Plan, HashMap<VertexId, Tensor>, VertexId) {
+    let mut g = EinGraph::new();
+    let a = g.input("A", vec![32, 64]);
+    let b = g.input("B", vec![64, 32]);
+    let z = g
+        .add(
+            "Z",
+            EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+            vec![a, b],
+        )
+        .unwrap();
+    let mut plan = Plan::default();
+    plan.parts.insert(z, vec![1, 8, 2]); // 8-way reduce groups
+    plan.finalize_inputs(&g);
+    let mut inputs = HashMap::new();
+    inputs.insert(a, Tensor::random(&[32, 64], 41));
+    inputs.insert(b, Tensor::random(&[64, 32], 42));
+    (g, plan, inputs, z)
+}
+
+/// Run `allreduce_case` through an explicit manager + manual place, so
+/// the reduce schedule can be overridden (the `Cluster` builder only
+/// exposes selectors — schedule overrides are a deliberate extra step).
+fn run_with_reduce_schedule(schedule: CollectiveSchedule) -> Tensor {
+    let (g, plan, inputs, z) = allreduce_case();
+    let mut prog = from_plan(&g, &plan).unwrap();
+    PassManager::new(&collective_passes())
+        .with_reduce_schedule(schedule)
+        .run(&mut prog);
+    let mut tg = prog.emit_tasks().unwrap();
+    place(&mut tg, 4, Policy::LocalityGreedy);
+    tg.validate(4).unwrap();
+    let cluster = Cluster::new(4, NetworkProfile::cpu_cluster());
+    let engine = NativeEngine::new();
+    let (outs, _) = cluster
+        .run_lowered(&g, &plan, &tg, &engine, &inputs)
+        .unwrap();
+    outs[&z].clone()
+}
+
+/// Why tree reductions stay opt-in (mirroring the `agg-tree` precedent):
+/// a tree fold re-associates floating-point `Sum` — `(a+b)+(c+d)` is not
+/// bitwise `((a+b)+c)+d` — so any schedule that does not pin the
+/// baseline member order cannot promise bitwise reproducibility. The
+/// default `Ring` reduce IS the pinned serial fold; `Tree` reduce is
+/// reachable only through `PassManager::with_reduce_schedule`, and
+/// `with_topology` (which freely flips the *gather* schedule, a pure
+/// copy either way) never touches it.
+#[test]
+fn tree_reduce_for_float_sum_is_opt_in() {
+    // 1. Default managers pin the reduce fold to Ring, for every
+    //    selector — including All, where lower-collectives runs.
+    for sel in [PassSelector::All, PassSelector::Safe, collective_passes()] {
+        assert_eq!(
+            PassManager::new(&sel).reduce_schedule,
+            CollectiveSchedule::Ring
+        );
+    }
+
+    // 2. Topology steering picks the gather schedule only; the reduce
+    //    schedule survives untouched on flat AND hierarchical trees.
+    let net = NetworkProfile::cpu_cluster();
+    for topo in [
+        Topology::flat_of(&net, 8),
+        Topology::two_level_of(&net, 8),
+        Topology::three_level_of(&net, 8),
+    ] {
+        let mgr = PassManager::new(&PassSelector::All).with_topology(&topo);
+        assert_eq!(
+            mgr.reduce_schedule,
+            CollectiveSchedule::Ring,
+            "{}: with_topology must never select a re-associating reduce",
+            topo.name()
+        );
+    }
+
+    // 3. The default (Safe) pipeline does not run lower-collectives at
+    //    all, so seed lowering stays byte-for-byte untouched.
+    assert!(!PassKind::SAFE.contains(&PassKind::LowerCollectives));
+
+    // 4. The contract in action: Ring reduce is bitwise-identical to
+    //    the no-pass baseline; Tree reduce is numerically sound but
+    //    only promises allclose — exactly why it is never implicit.
+    let (g, plan, inputs, z) = allreduce_case();
+    let engine = NativeEngine::new();
+    let baseline = Cluster::new(4, NetworkProfile::cpu_cluster())
+        .with_passes(PassSelector::None)
+        .execute(&g, &plan, &engine, &inputs)
+        .unwrap()
+        .0[&z]
+        .clone();
+    let ring = run_with_reduce_schedule(CollectiveSchedule::Ring);
+    assert_eq!(ring, baseline, "Ring reduce must equal the serial fold bitwise");
+    let tree = run_with_reduce_schedule(CollectiveSchedule::Tree { arity: 2 });
+    assert!(
+        tree.allclose(&baseline, 1e-4, 1e-5),
+        "Tree reduce diverged beyond float re-association tolerance: {}",
+        tree.max_abs_diff(&baseline).unwrap()
+    );
+}

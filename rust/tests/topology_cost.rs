@@ -1,0 +1,248 @@
+//! Property tests for the hierarchical topology cost layer.
+//!
+//! Four contracts:
+//!
+//! * [`Topology::link_class`] is a true lowest-common-ancestor lookup:
+//!   on randomized valid span trees it matches an independent
+//!   brute-force reimplementation, is symmetric, respects nesting
+//!   monotonicity, and satisfies the ultrametric inequality a tree
+//!   metric must;
+//! * a flat topology (and `None`) reproduces the seed §7 repartition
+//!   cost model *exactly* — bitwise `f64` equality, including the
+//!   paper's worked 320- and 240-float examples;
+//! * the collective cost formulas match the textbook ring / tree
+//!   byte-and-step counts;
+//! * for the same plan, a hierarchical preset topology never costs
+//!   more than flat (inner links are at least as fast, so the model
+//!   may only discount).
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::decomp::cost::{
+    cost_repart, cost_repart_on, cost_ring_allreduce, cost_ring_collective, ring_steps,
+    tree_depth,
+};
+use eindecomp::models::ffnn::ffnn_step;
+use eindecomp::models::matchain::chain_graph;
+use eindecomp::sim::{LinkClass, NetworkProfile, Topology};
+use eindecomp::util::Rng;
+
+/// A random *valid* span tree: 1..=4 levels, each span a multiple of
+/// the previous, worker count within the outermost span.
+fn random_topology(rng: &mut Rng) -> Topology {
+    let levels = 1 + rng.next_below(4);
+    let mut spans = Vec::with_capacity(levels);
+    let mut span = 1 + rng.next_below(4);
+    for _ in 0..levels {
+        spans.push(span);
+        span *= 2 + rng.next_below(3); // next level nests 2..=4 groups
+    }
+    let workers = 1 + rng.next_below(*spans.last().unwrap());
+    // make sure the outermost span covers every worker (Topology::new
+    // invariant); inner spans need no relation to `workers`
+    let base_bw = 1e9;
+    let classes: Vec<LinkClass> = (0..levels)
+        .map(|i| LinkClass {
+            name: format!("level{i}"),
+            // inner levels faster — same shape as the presets
+            bandwidth_bps: base_bw * (1 << (levels - 1 - i)) as f64,
+            latency_s: 1e-6 * (i + 1) as f64,
+        })
+        .collect();
+    Topology::new("random", workers, spans, classes)
+}
+
+/// Independent LCA reimplementation: the innermost level whose groups
+/// contain both workers, else the outermost class.
+fn brute_force_lca(spans: &[usize], levels: usize, a: usize, b: usize) -> Option<usize> {
+    if a == b {
+        return None;
+    }
+    for (i, &s) in spans.iter().enumerate() {
+        if a / s == b / s {
+            return Some(i);
+        }
+    }
+    Some(levels - 1)
+}
+
+#[test]
+fn lca_lookup_matches_brute_force_on_random_trees() {
+    let mut rng = Rng::seed_from_u64(0x70_70_10);
+    for _ in 0..200 {
+        let topo = random_topology(&mut rng);
+        let w = topo.workers();
+        for _ in 0..50 {
+            let a = rng.next_below(w);
+            let b = rng.next_below(w);
+            let got = topo.link_class(a, b);
+            let want = brute_force_lca(topo.spans(), topo.levels(), a, b);
+            assert_eq!(got, want, "{:?} workers {a},{b}", topo.spans());
+            // symmetry
+            assert_eq!(got, topo.link_class(b, a));
+            // link_of agrees with link_class
+            assert_eq!(
+                topo.link_of(a, b).map(|c| c.name.clone()),
+                got.map(|i| topo.classes()[i].name.clone())
+            );
+        }
+    }
+}
+
+#[test]
+fn lca_lookup_is_an_ultrametric_on_random_trees() {
+    // Tree distances are ultrametric: d(a,c) <= max(d(a,b), d(b,c)).
+    // Violations would mean a transfer can be charged at a *slower*
+    // class than any path through an intermediate worker — nonsense
+    // for a nesting hierarchy.
+    let mut rng = Rng::seed_from_u64(0x70_70_20);
+    for _ in 0..100 {
+        let topo = random_topology(&mut rng);
+        let w = topo.workers();
+        for _ in 0..60 {
+            let (a, b, c) = (rng.next_below(w), rng.next_below(w), rng.next_below(w));
+            if a == b || b == c || a == c {
+                continue;
+            }
+            let ac = topo.link_class(a, c).unwrap();
+            let ab = topo.link_class(a, b).unwrap();
+            let bc = topo.link_class(b, c).unwrap();
+            assert!(
+                ac <= ab.max(bc),
+                "ultrametric violated on {:?}: d({a},{c})={ac} > max({ab},{bc})",
+                topo.spans()
+            );
+            // monotone nesting: sharing a level-i group caps the class
+            for (i, &s) in topo.spans().iter().enumerate() {
+                if a / s == b / s {
+                    assert!(ab <= i);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_topology_is_bytewise_the_seed_cost_model() {
+    let net = NetworkProfile::cpu_cluster();
+    // the paper's worked §7 examples, pinned
+    assert_eq!(cost_repart(&[4, 1], &[2, 4], &[8, 8]), 320.0);
+    assert_eq!(cost_repart(&[2, 2], &[4, 4], &[8, 8]), 240.0);
+    let mut rng = Rng::seed_from_u64(0x70_70_30);
+    for trial in 0..300 {
+        let dims = 1 + rng.next_below(3);
+        let d_x: Vec<usize> = (0..dims).map(|_| 1 + rng.next_below(5)).collect();
+        let d_z: Vec<usize> = (0..dims).map(|_| 1 + rng.next_below(5)).collect();
+        let bound: Vec<usize> = (0..dims).map(|_| 1 + rng.next_below(16)).collect();
+        let seed_cost = cost_repart(&d_x, &d_z, &bound);
+        // exact f64 equality, not approximate: None and flat MUST be
+        // the seed model byte for byte
+        assert_eq!(
+            cost_repart_on(None, &d_x, &d_z, &bound),
+            seed_cost,
+            "trial {trial}: None diverged for {d_x:?} <- {d_z:?} over {bound:?}"
+        );
+        for workers in [1usize, 2, 8, 16] {
+            let flat = Topology::flat_of(&net, workers);
+            assert_eq!(
+                cost_repart_on(Some(&flat), &d_x, &d_z, &bound),
+                seed_cost,
+                "trial {trial}: flat({workers}) diverged for {d_x:?} <- {d_z:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn collective_formulas_match_textbook_byte_and_step_counts() {
+    let mut rng = Rng::seed_from_u64(0x70_70_40);
+    for _ in 0..100 {
+        let n = (1 + rng.next_below(1 << 20)) as f64;
+        let p = 1 + rng.next_below(64);
+        // ring all-gather / reduce-scatter: (p-1)/p * n
+        let ring = cost_ring_collective(n, p);
+        if p == 1 {
+            assert_eq!(ring, 0.0);
+        } else {
+            assert!((ring - (p as f64 - 1.0) / p as f64 * n).abs() < 1e-9);
+            // strictly less than the naive p-1 full-tensor broadcast
+            assert!(ring < (p as f64 - 1.0) * n);
+        }
+        // ring all-reduce = reduce-scatter + all-gather
+        assert_eq!(cost_ring_allreduce(n, p), 2.0 * ring);
+        // ring serializes p-1 steps
+        assert_eq!(ring_steps(p), p - 1);
+        // tree depth is the minimal d with arity^d >= p
+        for arity in [2usize, 3, 4, 8] {
+            let d = tree_depth(p, arity);
+            if p > 1 {
+                assert!((arity as u64).pow(d as u32) >= p as u64);
+                assert!((arity as u64).pow(d as u32 - 1) < p as u64);
+            } else {
+                assert_eq!(d, 0);
+            }
+        }
+    }
+    // spot values
+    assert_eq!(cost_ring_collective(1024.0, 8), 896.0);
+    assert_eq!(cost_ring_allreduce(1024.0, 8), 1792.0);
+    assert_eq!(tree_depth(8, 2), 3);
+    assert_eq!(tree_depth(9, 2), 4);
+}
+
+#[test]
+fn hierarchical_plan_never_costlier_than_flat_for_same_plan() {
+    let roles = LabelRoles::by_convention();
+    let net = NetworkProfile::cpu_cluster();
+    let chain = chain_graph(32, false).unwrap().graph;
+    let ffnn = ffnn_step(32, 48, 24, 8).unwrap().graph;
+    for (name, g) in [("matchain", &chain), ("ffnn", &ffnn)] {
+        for p in [2usize, 4, 8] {
+            let plan = assign(g, &Strategy::EinDecomp, p, &roles).unwrap();
+            let flat_cost = plan.total_cost(g).unwrap();
+            assert_eq!(
+                plan.total_cost_on(g, Some(&Topology::flat_of(&net, p))).unwrap(),
+                flat_cost,
+                "{name} p={p}: flat total_cost_on must equal the seed total_cost"
+            );
+            for topo in [
+                Topology::two_level_of(&net, p),
+                Topology::three_level_of(&net, p),
+            ] {
+                let hier = plan.total_cost_on(g, Some(&topo)).unwrap();
+                assert!(
+                    hier <= flat_cost + 1e-9,
+                    "{name} p={p} {}: hierarchical cost {hier} exceeds flat {flat_cost}",
+                    topo.name()
+                );
+                assert!(hier.is_finite() && hier >= 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn random_d_sweep_hierarchical_repart_never_exceeds_flat() {
+    let net = NetworkProfile::cpu_cluster();
+    let mut rng = Rng::seed_from_u64(0x70_70_50);
+    for trial in 0..200 {
+        let dims = 1 + rng.next_below(3);
+        let d_x: Vec<usize> = (0..dims).map(|_| 1 + rng.next_below(5)).collect();
+        let d_z: Vec<usize> = (0..dims).map(|_| 1 + rng.next_below(5)).collect();
+        let bound: Vec<usize> = (0..dims).map(|_| 4 + rng.next_below(29)).collect();
+        let flat = cost_repart(&d_x, &d_z, &bound);
+        for workers in [2usize, 4, 8, 16] {
+            for topo in [
+                Topology::two_level_of(&net, workers),
+                Topology::three_level_of(&net, workers),
+            ] {
+                let hier = cost_repart_on(Some(&topo), &d_x, &d_z, &bound);
+                assert!(
+                    hier <= flat + 1e-9 && hier >= 0.0,
+                    "trial {trial} {} workers {workers}: {hier} vs flat {flat} \
+                     for {d_x:?} <- {d_z:?} over {bound:?}",
+                    topo.name()
+                );
+            }
+        }
+    }
+}

@@ -275,7 +275,7 @@ fn session_surfaces_passes_and_explain() {
     let session = Session::new(cfg).unwrap();
     let g = chain_graph(24, false).unwrap().graph;
     let exe = session.compile(&g).unwrap();
-    assert_eq!(exe.passes().len(), 7);
+    assert_eq!(exe.passes().len(), 8);
     exe.task_graph().validate(2).unwrap(); // compile-time validation held
 
     let mut inputs = HashMap::new();
