@@ -23,5 +23,9 @@ echo "== lowering (EINDECOMP_SMOKE=1): direct vs TRA-IR, per-pass deltas =="
 EINDECOMP_SMOKE=1 cargo bench --bench lowering
 
 echo
+echo "== faults (EINDECOMP_SMOKE=1): recovery overhead, clean vs faulted =="
+EINDECOMP_SMOKE=1 cargo bench --bench faults
+
+echo
 echo "== fig9_ffnn (modeled, full sweep is cheap) =="
 cargo bench --bench fig9_ffnn

@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Chaos smoke: a fixed-seed multi-fault CLI run diffed against a clean
+# one. The CLI seeds its inputs deterministically and prints an FNV-1a
+# fingerprint of every output tensor ("output checksum: ..."), so the
+# recovery contract — a faulted run reproduces the fault-free outputs
+# BITWISE — reduces to a string comparison. Used by CI and as a local
+# quickstart for the fault-injection machinery.
+#
+#   rust/scripts/chaos_smoke.sh
+#
+# The fault plan mixes a seeded 20% transient sweep with an explicit
+# permanent worker death, so both recovery paths (retry-in-place and
+# lineage recompute after re-homing) run every time; the explicit clause
+# guarantees the run is never vacuously fault-free.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+MODEL_ARGS=(--model chain --scale 24 --workers 4)
+FAULTS="seed:7:0.2,task:5:permanent"
+
+run() { cargo run --release --quiet -- run "${MODEL_ARGS[@]}" "$@"; }
+
+echo "== clean run =="
+clean_out=$(run)
+echo "$clean_out"
+
+echo
+echo "== chaos run (--inject-faults $FAULTS) =="
+chaos_out=$(run --inject-faults "$FAULTS" --max-retries 4)
+echo "$chaos_out"
+
+checksum() { grep '^output checksum' <<<"$1" | awk '{print $3}'; }
+
+clean_sum=$(checksum "$clean_out")
+chaos_sum=$(checksum "$chaos_out")
+if [[ -z "$clean_sum" || -z "$chaos_sum" ]]; then
+  echo "chaos_smoke: FAIL: missing output checksum line" >&2
+  exit 1
+fi
+if [[ "$clean_sum" != "$chaos_sum" ]]; then
+  echo "chaos_smoke: FAIL: faulted outputs diverged bitwise" \
+       "(clean $clean_sum vs chaos $chaos_sum)" >&2
+  exit 1
+fi
+
+# the clean run must report zero recovery overhead...
+if grep -q 'faults=' <<<"$clean_out"; then
+  echo "chaos_smoke: FAIL: clean run reports injected faults" >&2
+  exit 1
+fi
+if ! grep -q '"faults_injected":0' <<<"$clean_out"; then
+  echo "chaos_smoke: FAIL: clean run JSON lacks faults_injected:0" >&2
+  exit 1
+fi
+# ...and the chaos run must actually have injected and recovered
+if ! grep -q 'faults=' <<<"$chaos_out"; then
+  echo "chaos_smoke: FAIL: chaos run summary lacks a faults= ledger" >&2
+  exit 1
+fi
+if grep -q '"faults_injected":0' <<<"$chaos_out"; then
+  echo "chaos_smoke: FAIL: chaos run injected nothing (vacuous)" >&2
+  exit 1
+fi
+
+echo
+echo "chaos_smoke: OK — checksum $clean_sum reproduced under faults ($FAULTS)"

@@ -12,7 +12,17 @@ per-link-class byte ledgers do not roll up to the workload totals, or
 if no three-level workload shows a strict cross-node byte reduction
 from `lower-collectives`.
 
+When a third path is given, also validates BENCH_faults.json from the
+fault-recovery bench: each workload must carry the four arms
+(clean / single_transient / single_permanent / seeded_10pct) with
+integer counters and bitwise-match flags, the clean arm must report
+zero recovery overhead, single faults must count exactly one injection
+with the right worker-loss shape (transient: no loss, no recovery
+bytes; permanent: one worker lost), and every faulted arm must cost
+retries and modeled makespan.
+
 Usage: check_lowering_json.py [BENCH_lowering.json] [BENCH_topology.json]
+                              [BENCH_faults.json]
 """
 
 import json
@@ -58,9 +68,73 @@ def load(path: str):
         fail(f"{path} is not valid JSON: {e}")
 
 
+FAULT_ARMS = ["clean", "single_transient", "single_permanent", "seeded_10pct"]
+
+FAULT_COUNTERS = [
+    "faults_injected",
+    "retries",
+    "recomputed_tasks",
+    "recovery_bytes",
+    "workers_lost",
+]
+
+
+def check_faults(path: str) -> str:
+    """Validate BENCH_faults.json; returns a summary fragment."""
+    workloads = load(path).get("workloads")
+    if not isinstance(workloads, list) or not workloads:
+        fail(f"{path}: top-level 'workloads' missing or empty")
+    for w in workloads:
+        name = w.get("workload")
+        if not isinstance(name, str) or not name:
+            fail(f"{path}: fault workload entry without a 'workload' name")
+        if not is_int_valued(w.get("tasks")) or int(w["tasks"]) <= 0:
+            fail(f"{name}: 'tasks' missing or not a positive count")
+        arms = {a.get("arm"): a for a in w.get("arms", []) if isinstance(a, dict)}
+        if sorted(arms) != sorted(FAULT_ARMS):
+            fail(f"{name}: arms {sorted(arms)} != expected {sorted(FAULT_ARMS)}")
+        for arm_name, a in arms.items():
+            tag = f"{name}/{arm_name}"
+            for k in FAULT_COUNTERS:
+                if not is_int_valued(a.get(k)) or int(a[k]) < 0:
+                    fail(f"{tag}: counter '{k}' missing or malformed")
+            for k in ("recovery_stall_s", "sim_makespan_s"):
+                v = a.get(k)
+                if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+                    fail(f"{tag}: '{k}' missing or malformed")
+            if a.get("bitwise_match") is not True:
+                fail(f"{tag}: not marked bitwise-identical to the clean run")
+            if not isinstance(a.get("fault_plan"), str) or not a["fault_plan"]:
+                fail(f"{tag}: 'fault_plan' missing")
+        clean = arms["clean"]
+        if any(int(clean[k]) != 0 for k in FAULT_COUNTERS) or clean["recovery_stall_s"] != 0:
+            fail(f"{name}: clean arm reports nonzero recovery overhead")
+        for arm_name in FAULT_ARMS[1:]:
+            a = arms[arm_name]
+            if int(a["faults_injected"]) < 1:
+                fail(f"{name}/{arm_name}: no fault was injected (vacuous arm)")
+            if int(a["retries"]) < int(a["faults_injected"]):
+                fail(f"{name}/{arm_name}: fewer retries than injected faults")
+            if a["sim_makespan_s"] <= clean["sim_makespan_s"]:
+                fail(
+                    f"{name}/{arm_name}: recovery stall missing from the "
+                    f"modeled makespan"
+                )
+        for arm_name, lost in (("single_transient", 0), ("single_permanent", 1)):
+            a = arms[arm_name]
+            if int(a["faults_injected"]) != 1:
+                fail(f"{name}/{arm_name}: expected exactly one injected fault")
+            if int(a["workers_lost"]) != lost:
+                fail(f"{name}/{arm_name}: expected workers_lost == {lost}")
+        if int(arms["single_transient"]["recovery_bytes"]) != 0:
+            fail(f"{name}: transient fault charged recovery bytes")
+    return f", {len(workloads)} fault workloads x {len(FAULT_ARMS)} arms"
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_lowering.json"
     topo_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_topology.json"
+    faults_path = sys.argv[3] if len(sys.argv) > 3 else None
     report = load(path)
 
     workloads = report.get("workloads")
@@ -155,11 +229,12 @@ def main() -> None:
             "reduction from lower-collectives"
         )
 
+    faults_note = check_faults(faults_path) if faults_path else ""
     print(
         f"check_lowering_json: OK — {len(workloads)} workloads, "
         f"{len(EXPECTED_PASSES)} passes each, {strict_wins} strict win(s), "
         f"{len(sweep)} topology-sweep entries, {cross_node_wins} "
-        f"cross-node win(s)"
+        f"cross-node win(s){faults_note}"
     )
 
 

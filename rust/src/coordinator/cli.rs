@@ -7,6 +7,7 @@
 //!                   [--exec steal|barrier] [--intra-op N] [--repeat N]
 //!                   [--passes all|none|safe|<csv>]
 //!                   [--topology flat|two-level|three-level]
+//!                   [--inject-faults <spec>] [--max-retries N] [--deadline-ms N]
 //! eindecomp explain --model ...         [--workers N] [--p N] [--strategy S]
 //!                   [--passes ...] [--topology ...] [--json]
 //! eindecomp program --file prog.ein     [--p 8] [--run]
@@ -211,6 +212,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     };
     let network = NetworkProfile::cpu_cluster();
+    // --inject-faults task:<i>:transient[:<n>] | task:<i>:permanent |
+    //                 seed:<u64>:<rate>   (comma-separated clauses)
+    let faults = args
+        .get("inject-faults")
+        .map(|spec| spec.parse::<crate::sim::FaultPlan>())
+        .transpose()?;
+    let run_opts = crate::sim::RunOptions {
+        // default mirrors RunOptions::default()
+        max_retries: args.get_usize("max-retries", 3) as u32,
+        deadline: args
+            .get("deadline-ms")
+            .map(|ms| -> Result<std::time::Duration> {
+                let v: u64 = ms.parse().map_err(|_| {
+                    Error::Parse(format!("--deadline-ms expects milliseconds, got {ms:?}"))
+                })?;
+                Ok(std::time::Duration::from_millis(v))
+            })
+            .transpose()?,
+        ..Default::default()
+    };
     let cfg = DriverConfig {
         workers,
         p: args.get_usize("p", workers),
@@ -222,6 +243,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         // 0 = match the executor's thread count (see DriverConfig docs).
         intra_op: args.get_usize("intra-op", 0),
         passes: parse_passes(args)?,
+        faults,
+        run_opts,
         ..Default::default()
     };
     // Compile once (plan + lower + place), run `--repeat` many times: the
@@ -239,12 +262,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let (plan_s, lower_s) = exe.compile_times();
     let t1 = std::time::Instant::now();
-    let mut rep = None;
+    let mut last = None;
     for _ in 0..repeat {
-        rep = Some(exe.run(&inputs)?.1);
+        last = Some(exe.run(&inputs)?);
     }
     let run_s = t1.elapsed().as_secs_f64();
-    let rep = rep.expect("repeat >= 1");
+    let (outs, rep) = last.expect("repeat >= 1");
     println!("strategy       : {}", rep.strategy);
     println!("plan cost      : {:.0} floats", rep.plan_cost);
     println!("plan time      : {:.2} ms", rep.plan_s * 1e3);
@@ -263,8 +286,31 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     println!("report         : {}", rep.exec.summary());
+    // Bitwise fingerprint of every output tensor — `scripts/chaos_smoke.sh`
+    // diffs this between clean and fault-injected runs.
+    println!("output checksum: {:016x}", output_checksum(&outs));
     println!("json           : {}", rep.to_json().render());
     Ok(())
+}
+
+/// FNV-1a over the outputs in vertex-id order: shape dims, then the raw
+/// f32 bit patterns. Equal iff the outputs are bitwise-identical.
+fn output_checksum(outs: &HashMap<crate::einsum::graph::VertexId, Tensor>) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut ids: Vec<_> = outs.keys().copied().collect();
+    ids.sort_by_key(|v| v.0);
+    let mut h: u64 = 0xcbf29ce484222325;
+    for vid in ids {
+        h = (h ^ vid.0 as u64).wrapping_mul(PRIME);
+        let t = &outs[&vid];
+        for &d in t.shape() {
+            h = (h ^ d as u64).wrapping_mul(PRIME);
+        }
+        for &v in t.data() {
+            h = (h ^ u64::from(v.to_bits())).wrapping_mul(PRIME);
+        }
+    }
+    h
 }
 
 /// `explain`: compile the model through the Session pipeline and print
@@ -345,6 +391,15 @@ USAGE:
                                      (hierarchical interconnect: cost
                                       model, per-link byte ledger, and
                                       collective schedules)
+                    [--inject-faults <spec>]
+                                     (deterministic fault injection:
+                                      comma-separated task:<i>:transient[:<n>],
+                                      task:<i>:permanent, seed:<u64>:<rate>;
+                                      recovery counters land in the report)
+                    [--max-retries N]   (per-task retry budget, default 3)
+                    [--deadline-ms N]   (whole-run deadline; exceeding it
+                                         is a typed error with partial
+                                         progress stats)
   eindecomp explain --model ... [--workers N] [--p N] [--strategy S]
                     [--passes ...] [--topology ...] [--json]
                     (print the TRA program, pass change log, and modeled
@@ -441,6 +496,44 @@ mod tests {
             .collect();
             main_with_args(&argv).unwrap();
         }
+    }
+
+    #[test]
+    fn run_command_with_fault_injection() {
+        let argv: Vec<String> = [
+            "run", "--model", "chain", "--scale", "24", "--workers", "2", "--p", "2",
+            "--inject-faults", "task:3:transient,task:5:permanent", "--max-retries", "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn run_rejects_bad_fault_spec() {
+        let argv: Vec<String> = [
+            "run", "--model", "chain", "--scale", "24", "--workers", "2",
+            "--inject-faults", "task:zero:transient",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let err = main_with_args(&argv).unwrap_err().to_string();
+        assert!(err.contains("fault spec"), "{err}");
+    }
+
+    #[test]
+    fn run_zero_deadline_reports_typed_timeout() {
+        let argv: Vec<String> = [
+            "run", "--model", "chain", "--scale", "24", "--workers", "2", "--deadline-ms", "0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let err = main_with_args(&argv).unwrap_err();
+        assert!(err.is_deadline(), "{err}");
+        assert!(err.to_string().contains("deadline exceeded"), "{err}");
     }
 
     #[test]

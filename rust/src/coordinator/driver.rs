@@ -19,6 +19,7 @@ use crate::einsum::graph::{EinGraph, VertexId};
 use crate::error::Result;
 use crate::runtime::{Backend, DispatchEngine};
 use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
+use crate::sim::faults::{FaultPlan, RunOptions};
 use crate::sim::memory::{model_with_memory, MemoryConfig};
 use crate::sim::network::{NetworkProfile, Topology};
 use crate::taskgraph::placement::Policy;
@@ -63,6 +64,15 @@ pub struct DriverConfig {
     /// `lower-collectives` gather schedule (ring on hierarchical
     /// topologies, tree on flat ones).
     pub topology: Option<Topology>,
+    /// Deterministic fault plan (`--inject-faults` on the CLI). `None`
+    /// (default) runs fault-free with a ledger byte-identical to the
+    /// pre-recovery executor; `Some` makes the chosen tasks fail and
+    /// exercises lineage-based recovery (see [`crate::sim::faults`]).
+    pub faults: Option<FaultPlan>,
+    /// Per-run execution options: retry budget, deadline, backoff shape,
+    /// and opt-in non-finite input screening (`--max-retries` /
+    /// `--deadline-ms` on the CLI).
+    pub run_opts: RunOptions,
 }
 
 impl Default for DriverConfig {
@@ -80,6 +90,8 @@ impl Default for DriverConfig {
             passes: PassSelector::default(),
             roles: LabelRoles::by_convention(),
             topology: None,
+            faults: None,
+            run_opts: RunOptions::default(),
         }
     }
 }
@@ -172,6 +184,37 @@ impl RunReport {
             ("kernel_calls".into(), Json::num(self.exec.kernel_calls as f64)),
             ("task_count".into(), Json::num(self.exec.tasks as f64)),
             ("efficiency".into(), Json::num(self.exec.efficiency())),
+            (
+                "faults_injected".into(),
+                Json::num(self.exec.faults_injected as f64),
+            ),
+            ("retries".into(), Json::num(self.exec.retries as f64)),
+            (
+                "recomputed_tasks".into(),
+                Json::num(self.exec.recomputed_tasks as f64),
+            ),
+            (
+                "recovery_bytes".into(),
+                Json::num(self.exec.recovery_bytes as f64),
+            ),
+            (
+                "workers_lost".into(),
+                Json::num(self.exec.workers_lost as f64),
+            ),
+            (
+                "recovery_stall_s".into(),
+                Json::num(self.exec.recovery_stall_s),
+            ),
+            (
+                "recovery_by_link".into(),
+                Json::Obj(
+                    self.exec
+                        .recovery_by_link
+                        .iter()
+                        .map(|(name, b)| (name.clone(), Json::num(*b as f64)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }

@@ -49,9 +49,10 @@ use crate::decomp::Plan;
 use crate::einsum::canon::{canonicalize, Canon, CanonSignature};
 use crate::einsum::graph::{EinGraph, VertexId};
 use crate::einsum::lazy::Expr;
-use crate::error::{Error, Result};
+use crate::error::{Error, LowerError, PlanError, Result};
 use crate::runtime::DispatchEngine;
 use crate::sim::cluster::Cluster;
+use crate::sim::faults::RunOptions;
 use crate::taskgraph::TaskGraph;
 use crate::tensor::Tensor;
 use crate::tra::passes::PassLog;
@@ -124,6 +125,7 @@ impl Session {
         cluster.intra_op = cfg.intra_op;
         cluster.passes = cfg.passes.clone();
         cluster.topology = cfg.topology.clone();
+        cluster.faults = cfg.faults.clone().filter(|f| !f.is_empty());
         Ok(Session {
             cfg,
             engine,
@@ -262,14 +264,27 @@ impl Session {
     pub fn plan(&self, g: &EinGraph) -> Result<(Plan, f64)> {
         self.planner_runs.fetch_add(1, Ordering::Relaxed);
         let t0 = std::time::Instant::now();
-        let plan = assign_on(
+        let plan = self.plan_typed(g)?;
+        Ok((plan, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Run the configured planner, wrapping any failure into the typed
+    /// [`Error::PlanFailure`] surface (strategy tag + underlying detail).
+    fn plan_typed(&self, g: &EinGraph) -> Result<Plan> {
+        assign_on(
             g,
             &self.cfg.strategy,
             self.cfg.p,
             &self.cfg.roles,
             self.cfg.topology.as_ref(),
-        )?;
-        Ok((plan, t0.elapsed().as_secs_f64()))
+        )
+        .map_err(|e| match e {
+            Error::PlanFailure(_) => e,
+            other => Error::PlanFailure(PlanError {
+                strategy: self.cfg.strategy.name().to_string(),
+                detail: other.to_string(),
+            }),
+        })
     }
 
     /// Execute a caller-supplied plan (strategy sweeps that reuse one
@@ -318,23 +333,33 @@ impl Session {
             bytes_agg: art.model.bytes_agg,
             bytes_repart: art.model.bytes_repart,
             bytes_by_link: art.model.bytes_by_link.clone(),
+            fault_plan: self
+                .cluster
+                .faults
+                .as_ref()
+                .map(|f| f.to_string())
+                .unwrap_or_else(|| "none".to_string()),
+            faults_injected: art.model.faults_injected,
+            retries: art.model.retries,
+            recomputed_tasks: art.model.recomputed_tasks,
+            recovery_bytes: art.model.recovery_bytes,
         }
     }
 
     fn build_artifact(&self, g: &EinGraph, canon: Option<Canon>) -> Result<Arc<Artifact>> {
         self.planner_runs.fetch_add(1, Ordering::Relaxed);
         let t0 = std::time::Instant::now();
-        let plan = assign_on(
-            g,
-            &self.cfg.strategy,
-            self.cfg.p,
-            &self.cfg.roles,
-            self.cfg.topology.as_ref(),
-        )?;
+        let plan = self.plan_typed(g)?;
         let plan_s = t0.elapsed().as_secs_f64();
         self.lower_runs.fetch_add(1, Ordering::Relaxed);
         let t1 = std::time::Instant::now();
-        let (tg, prog, pass_log) = self.cluster.lower_explain(g, &plan)?;
+        let (tg, prog, pass_log) = self.cluster.lower_explain(g, &plan).map_err(|e| match e {
+            Error::LowerFailure(_) => e,
+            other => Error::LowerFailure(LowerError {
+                stage: "lower",
+                detail: other.to_string(),
+            }),
+        })?;
         let lower_s = t1.elapsed().as_secs_f64();
         let model = self.cluster.model(&tg);
         Ok(Arc::new(Artifact {
@@ -359,6 +384,7 @@ impl Session {
             cluster: self.cluster.clone(),
             remap: None,
             provenance,
+            run_opts: self.cfg.run_opts,
         }
     }
 
@@ -408,6 +434,7 @@ impl Session {
             cluster: self.cluster.clone(),
             remap,
             provenance,
+            run_opts: self.cfg.run_opts,
         })
     }
 }
@@ -429,6 +456,7 @@ pub struct Executable {
     cluster: Cluster,
     remap: Option<Remap>,
     provenance: PlanProvenance,
+    run_opts: RunOptions,
 }
 
 impl Executable {
@@ -440,6 +468,20 @@ impl Executable {
     pub fn run(
         &self,
         inputs: &HashMap<VertexId, Tensor>,
+    ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
+        self.run_with(inputs, &self.run_opts)
+    }
+
+    /// [`run`](Self::run) with explicit per-call [`RunOptions`] (retry
+    /// budget, deadline, non-finite input screening), overriding the
+    /// session-level `DriverConfig::run_opts` for this call only. A run
+    /// that exceeds `opts.deadline` returns a typed
+    /// [`ExecCause::DeadlineExceeded`](crate::error::ExecCause) error
+    /// carrying partial-progress stats.
+    pub fn run_with(
+        &self,
+        inputs: &HashMap<VertexId, Tensor>,
+        opts: &RunOptions,
     ) -> Result<(HashMap<VertexId, Tensor>, RunReport)> {
         let mapped;
         let effective: &HashMap<VertexId, Tensor> = match &self.remap {
@@ -458,13 +500,14 @@ impl Executable {
                 &mapped
             }
         };
-        let (outs, exec) = self.cluster.run_lowered_modeled(
+        let (outs, exec) = self.cluster.run_lowered_modeled_opts(
             &self.art.graph,
             &self.art.plan,
             &self.art.tg,
             &self.art.model,
             self.engine.as_ref(),
             effective,
+            opts,
         )?;
         let outs = match &self.remap {
             None => outs,
@@ -575,6 +618,17 @@ pub struct Explain {
     /// `[("flat", total)]` when the session has no
     /// [`Topology`](crate::sim::network::Topology) configured.
     pub bytes_by_link: Vec<(String, u64)>,
+    /// The session's configured fault plan, in canonical spec form
+    /// (`"none"` when fault-free). The compile-time model is always
+    /// fault-free; injection happens at run time.
+    pub fault_plan: String,
+    /// Recovery counters of the artifact's modeled report — zero by
+    /// construction (the model never injects); real runs report theirs in
+    /// [`RunReport`](super::driver::RunReport).
+    pub faults_injected: u64,
+    pub retries: u64,
+    pub recomputed_tasks: u64,
+    pub recovery_bytes: u64,
 }
 
 impl Explain {
@@ -601,6 +655,13 @@ impl Explain {
                 .map(|(name, b)| format!("{name} {b}"))
                 .collect();
             s.push_str(&format!("modeled bytes by link: {}\n", per_link.join(" | ")));
+        }
+        s.push_str(&format!("fault plan: {}\n", self.fault_plan));
+        if self.faults_injected > 0 {
+            s.push_str(&format!(
+                "recovery: faults {} | retries {} | recomputed {} | bytes {}\n",
+                self.faults_injected, self.retries, self.recomputed_tasks, self.recovery_bytes
+            ));
         }
         s
     }
@@ -631,6 +692,20 @@ impl Explain {
                         .map(|(name, b)| (name.clone(), Json::num(*b as f64)))
                         .collect(),
                 ),
+            ),
+            ("fault_plan".into(), Json::str(self.fault_plan.clone())),
+            (
+                "faults_injected".into(),
+                Json::num(self.faults_injected as f64),
+            ),
+            ("retries".into(), Json::num(self.retries as f64)),
+            (
+                "recomputed_tasks".into(),
+                Json::num(self.recomputed_tasks as f64),
+            ),
+            (
+                "recovery_bytes".into(),
+                Json::num(self.recovery_bytes as f64),
             ),
         ])
     }
@@ -739,6 +814,58 @@ mod tests {
         assert_eq!(by_link, by_class);
         assert!(ex.render().contains("modeled bytes by link:"), "{}", ex.render());
         assert!(ex.to_json().render().contains("\"bytes_by_link\""));
+    }
+
+    #[test]
+    fn session_faults_and_run_with_options() {
+        use crate::sim::faults::{FaultPlan, RunOptions};
+        // clean baseline session
+        let cs = session();
+        let a = cs.input("A", &[16, 16]);
+        let b = cs.input("B", &[16, 16]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        let exe = cs.compile_expr(&z).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert(a.id(), Tensor::random(&[16, 16], 1));
+        inputs.insert(b.id(), Tensor::random(&[16, 16], 2));
+        let (clean, clean_rep) = exe.run(&inputs).unwrap();
+        assert_eq!(clean_rep.exec.faults_injected, 0);
+        assert!(cs.explain(&exe).render().contains("fault plan: none"));
+        // same config plus an injected transient fault
+        let s = Session::new(DriverConfig {
+            workers: 2,
+            p: 2,
+            faults: Some(FaultPlan::new().transient(0, 1)),
+            ..Default::default()
+        })
+        .unwrap();
+        let a2 = s.input("A", &[16, 16]);
+        let b2 = s.input("B", &[16, 16]);
+        let z2 = a2.einsum("ij,jk->ik", &b2).unwrap();
+        let exe2 = s.compile_expr(&z2).unwrap();
+        let ex = s.explain(&exe2);
+        assert_eq!(ex.fault_plan, "task:0:transient:1");
+        assert_eq!(ex.faults_injected, 0); // the model never injects
+        assert!(ex.to_json().render().contains("\"fault_plan\""));
+        let mut inputs2 = HashMap::new();
+        inputs2.insert(a2.id(), Tensor::random(&[16, 16], 1));
+        inputs2.insert(b2.id(), Tensor::random(&[16, 16], 2));
+        let (outs, rep) = exe2.run(&inputs2).unwrap();
+        assert_eq!(outs[&z2.id()], clean[&z.id()]); // bitwise despite the fault
+        assert_eq!(rep.exec.faults_injected, 1);
+        assert!(rep.exec.retries >= 1);
+        assert!(rep.to_json().render().contains("\"faults_injected\":1"));
+        // per-call options override: an expired deadline is a typed error
+        let err = exe2
+            .run_with(
+                &inputs2,
+                &RunOptions {
+                    deadline: Some(std::time::Duration::ZERO),
+                    ..Default::default()
+                },
+            )
+            .unwrap_err();
+        assert!(err.is_deadline(), "{err}");
     }
 
     #[test]

@@ -1,7 +1,127 @@
 //! Crate-wide error type (hand-rolled `Display`/`Error` impls — this
 //! crate is dependency-free, so no `thiserror`).
+//!
+//! Two layers coexist:
+//!
+//! * the original string-payload variants (`Parse`, `Shape`, ...), kept
+//!   for the construction-time checks whose only consumer is a human
+//!   reading the message;
+//! * a structured taxonomy for the `Session::compile` /
+//!   `Executable::run` path — [`PlanError`], [`LowerError`] and
+//!   [`ExecError`] — so serving front-ends can branch on *what* failed
+//!   (which task, after how many attempts, for which [`ExecCause`])
+//!   instead of string-matching. [`ExecCause::DeadlineExceeded`] carries
+//!   partial-progress stats; [`ExecCause::Injected`] marks deterministic
+//!   fault-plan failures (see [`crate::sim::faults`]).
 
 use std::fmt;
+
+/// Planning failed for a configured strategy (the typed face of the
+/// `Session::compile` planner stage).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanError {
+    /// Strategy name the planner ran under.
+    pub strategy: String,
+    pub detail: String,
+}
+
+/// Lowering (IR build, pass pipeline, task emission, placement or
+/// validation) failed — the typed face of the `Cluster::lower` stage.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LowerError {
+    /// Pipeline stage that failed (`"ir-build"`, `"emit"`, ...).
+    pub stage: &'static str,
+    pub detail: String,
+}
+
+/// Execution failed. `task` is the task-graph index when the failure is
+/// attributable to one task (`None` for run-level failures such as input
+/// validation), `attempts` counts how many times that task was tried
+/// before the executor gave up (0 when no retry loop was involved).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecError {
+    pub task: Option<usize>,
+    pub attempts: u32,
+    pub cause: ExecCause,
+}
+
+/// Why execution failed — the run-path taxonomy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecCause {
+    /// A task reached the run path without a placed worker.
+    Unplaced,
+    /// A required graph input tensor was not supplied.
+    MissingInput { vertex: String },
+    /// A supplied input's shape disagrees with the graph's bound.
+    ShapeMismatch {
+        vertex: String,
+        got: Vec<usize>,
+        want: Vec<usize>,
+    },
+    /// A supplied input contains NaN/Inf and the run opted into
+    /// `RunOptions::reject_nonfinite`.
+    NonFinite { vertex: String, index: usize },
+    /// A fault-plan permanent failure killed this worker.
+    WorkerDead { worker: usize },
+    /// Every simulated worker is dead — no survivor to re-home onto.
+    NoSurvivors,
+    /// The run exceeded `RunOptions::deadline`. Carries partial-progress
+    /// stats: elapsed wall time, tasks completed out of total, and the
+    /// retries spent before the budget ran out.
+    DeadlineExceeded {
+        elapsed_s: f64,
+        completed: usize,
+        total: usize,
+        retries: u64,
+    },
+    /// A deterministic fault-plan failure (transient unless `permanent`).
+    Injected { permanent: bool },
+    /// A result-slot mutex was poisoned by a panicking thread.
+    LockPoisoned { what: &'static str },
+    /// A dependency tile was missing and could not be recomputed.
+    MissingDep { dep: usize },
+    /// The kernel/engine failed for a non-injected reason.
+    Kernel { detail: String },
+}
+
+impl fmt::Display for ExecCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecCause::Unplaced => write!(f, "task used before placement"),
+            ExecCause::MissingInput { vertex } => {
+                write!(f, "missing input tensor for {vertex}")
+            }
+            ExecCause::ShapeMismatch { vertex, got, want } => {
+                write!(f, "input {vertex}: shape {got:?} != bound {want:?}")
+            }
+            ExecCause::NonFinite { vertex, index } => {
+                write!(f, "input {vertex}: non-finite value at flat index {index}")
+            }
+            ExecCause::WorkerDead { worker } => write!(f, "worker {worker} died"),
+            ExecCause::NoSurvivors => write!(f, "all workers dead, nothing to re-home onto"),
+            ExecCause::DeadlineExceeded {
+                elapsed_s,
+                completed,
+                total,
+                retries,
+            } => write!(
+                f,
+                "deadline exceeded after {:.3}s ({completed}/{total} tasks done, {retries} retries)",
+                elapsed_s
+            ),
+            ExecCause::Injected { permanent } => write!(
+                f,
+                "injected {} fault",
+                if *permanent { "permanent" } else { "transient" }
+            ),
+            ExecCause::LockPoisoned { what } => write!(f, "{what} mutex poisoned"),
+            ExecCause::MissingDep { dep } => {
+                write!(f, "dependency tile {dep} missing and unrecoverable")
+            }
+            ExecCause::Kernel { detail } => write!(f, "{detail}"),
+        }
+    }
+}
 
 /// All errors surfaced by the eindecomp library.
 #[derive(Debug)]
@@ -28,7 +148,8 @@ pub enum Error {
     /// Task graph construction/validation failure.
     TaskGraph(String),
 
-    /// Simulated cluster execution failure.
+    /// Simulated cluster execution failure (legacy string form; the run
+    /// path raises [`Error::ExecFailure`]).
     Exec(String),
 
     /// PJRT / XLA runtime failure.
@@ -41,6 +162,45 @@ pub enum Error {
     Oom(String),
 
     Io(std::io::Error),
+
+    /// Structured planner failure (`Session::compile` path).
+    PlanFailure(PlanError),
+
+    /// Structured lowering failure (`Session::compile` path).
+    LowerFailure(LowerError),
+
+    /// Structured execution failure (`Executable::run` path).
+    ExecFailure(ExecError),
+}
+
+impl Error {
+    /// Construct a structured execution failure.
+    pub fn exec_failure(task: Option<usize>, attempts: u32, cause: ExecCause) -> Error {
+        Error::ExecFailure(ExecError {
+            task,
+            attempts,
+            cause,
+        })
+    }
+
+    /// The structured execution error, if this is one.
+    pub fn as_exec(&self) -> Option<&ExecError> {
+        match self {
+            Error::ExecFailure(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// True when this error is a [`ExecCause::DeadlineExceeded`] timeout.
+    pub fn is_deadline(&self) -> bool {
+        matches!(
+            self,
+            Error::ExecFailure(ExecError {
+                cause: ExecCause::DeadlineExceeded { .. },
+                ..
+            })
+        )
+    }
 }
 
 impl fmt::Display for Error {
@@ -58,6 +218,20 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Oom(m) => write!(f, "out of device memory: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::PlanFailure(e) => {
+                write!(f, "plan error [{}]: {}", e.strategy, e.detail)
+            }
+            Error::LowerFailure(e) => {
+                write!(f, "lower error [{}]: {}", e.stage, e.detail)
+            }
+            Error::ExecFailure(e) => match e.task {
+                Some(t) => write!(
+                    f,
+                    "execution error [task {t}, {} attempt(s)]: {}",
+                    e.attempts, e.cause
+                ),
+                None => write!(f, "execution error: {}", e.cause),
+            },
         }
     }
 }
@@ -95,5 +269,52 @@ mod tests {
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(matches!(e, Error::Io(_)));
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn exec_failure_carries_task_and_attempts() {
+        let e = Error::exec_failure(Some(7), 3, ExecCause::Injected { permanent: false });
+        let s = e.to_string();
+        assert!(s.contains("task 7"), "{s}");
+        assert!(s.contains("3 attempt(s)"), "{s}");
+        assert!(s.contains("transient"), "{s}");
+        let inner = e.as_exec().unwrap();
+        assert_eq!(inner.task, Some(7));
+        assert_eq!(inner.attempts, 3);
+    }
+
+    #[test]
+    fn deadline_is_detectable_and_carries_progress() {
+        let e = Error::exec_failure(
+            None,
+            0,
+            ExecCause::DeadlineExceeded {
+                elapsed_s: 1.25,
+                completed: 3,
+                total: 10,
+                retries: 2,
+            },
+        );
+        assert!(e.is_deadline());
+        let s = e.to_string();
+        assert!(s.contains("3/10"), "{s}");
+        assert!(s.contains("2 retries"), "{s}");
+        assert!(!Error::Exec("x".into()).is_deadline());
+    }
+
+    #[test]
+    fn structured_variants_render_their_context() {
+        let p = Error::PlanFailure(PlanError {
+            strategy: "eindecomp".into(),
+            detail: "no viable partitioning".into(),
+        });
+        assert!(p.to_string().starts_with("plan error [eindecomp]"));
+        let l = Error::LowerFailure(LowerError {
+            stage: "emit",
+            detail: "bad rel".into(),
+        });
+        assert!(l.to_string().starts_with("lower error [emit]"));
+        let u = Error::exec_failure(Some(0), 0, ExecCause::Unplaced);
+        assert!(u.to_string().contains("before placement"));
     }
 }

@@ -144,9 +144,10 @@ pub mod prelude {
         label::{labels, Label},
         lazy::Expr,
     };
-    pub use crate::error::{Error, Result};
+    pub use crate::error::{Error, ExecCause, ExecError, LowerError, PlanError, Result};
     pub use crate::runtime::{Backend, KernelEngine};
     pub use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
+    pub use crate::sim::faults::{FaultKind, FaultPlan, RunOptions};
     pub use crate::sim::network::{LinkClass, NetworkProfile, Topology};
     pub use crate::taskgraph::TaskGraph;
     pub use crate::tensor::{Tensor, TensorView};

@@ -64,12 +64,13 @@
 //! `sim_*`/`bytes_*` fields describe the modeled cluster, `wall_s` the
 //! real host execution.
 
+use super::faults::{ArmedFaults, FaultKind, FaultPlan, RunOptions};
 use super::network::{NetworkProfile, Topology};
 use crate::decomp::Plan;
 use crate::einsum::expr::{AggOp, EinSum};
 use crate::einsum::graph::{EinGraph, VertexId};
 use crate::einsum::label::project;
-use crate::error::{Error, Result};
+use crate::error::{Error, ExecCause, Result};
 use crate::runtime::KernelEngine;
 use crate::taskgraph::placement::{place, Policy};
 use crate::taskgraph::{TaskGraph, TaskKind, TransferClass};
@@ -79,13 +80,25 @@ use crate::tra::program::{from_plan, TraProgram};
 use crate::tra::relation::{overlapping_tiles, tile_origin, tile_shape};
 use crate::util::{chunk_bounds, serial_scope, ShardScope, SyncPtr, SHARD_MIN};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
 
 /// A task's result slot: the produced tile as a zero-copy view. Slots
 /// are `Option` so the executor can *take* a tile back once every
 /// consumer has read it and recycle its buffer into the
-/// [`crate::util::BufferPool`].
+/// [`crate::util::BufferPool`] — and so worker death can drop every tile
+/// homed on the dead worker (the recovery walk recomputes on demand).
 type ResultSlot = Mutex<Option<TensorView>>;
+
+/// Lock a result slot, converting mutex poisoning (a panicking sibling
+/// thread) into a typed, recoverable [`ExecCause::LockPoisoned`] instead
+/// of propagating the panic into an unrelated task.
+fn lock_slot(results: &[ResultSlot], i: usize) -> Result<MutexGuard<'_, Option<TensorView>>> {
+    results[i].lock().map_err(|_| {
+        Error::exec_failure(Some(i), 0, ExecCause::LockPoisoned { what: "result slot" })
+    })
+}
 
 /// How [`Cluster::execute`] schedules real task execution on host threads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -130,6 +143,33 @@ pub struct ExecReport {
     /// Empty only on reports that never went through [`Cluster::model`]
     /// (e.g. the memory-policy simulator).
     pub bytes_by_link: Vec<(String, u64)>,
+    /// Fault events the armed [`FaultPlan`] actually fired during this
+    /// run. All fault-tolerance fields below default to zero/empty, so a
+    /// fault-free run's ledger is byte-identical to the pre-recovery
+    /// executor's.
+    pub faults_injected: u64,
+    /// Task re-attempts taken after injected failures (plus the rare
+    /// repair retry when a racing worker death yanks a dependency
+    /// mid-read).
+    pub retries: u64,
+    /// Tiles the lineage walk rebuilt because worker death reclaimed
+    /// them (input-tile re-slices are free and not counted). Like
+    /// `wall_s` this is schedule-dependent: it counts what was actually
+    /// lost at the moment of death, which depends on thread interleaving.
+    pub recomputed_tasks: u64,
+    /// Modeled extra repartition bytes charged when a dead worker's
+    /// pending tasks re-home to survivors and their formerly-local
+    /// dependency tiles must now cross the wire.
+    pub recovery_bytes: u64,
+    /// Workers the fault plan killed permanently.
+    pub workers_lost: usize,
+    /// Backoff time charged to the modeled timeline (added to
+    /// `sim_makespan_s` on faulty runs) — the same capped exponential
+    /// schedule the wall executor actually slept.
+    pub recovery_stall_s: f64,
+    /// `recovery_bytes` split per link class (same naming as
+    /// `bytes_by_link`). Empty when no recovery traffic was charged.
+    pub recovery_by_link: Vec<(String, u64)>,
 }
 
 impl ExecReport {
@@ -143,7 +183,7 @@ impl ExecReport {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "tasks={} kernels={} moved={:.2}MiB (join {:.2} agg {:.2} repart {:.2}) sim={:.3}ms wall={:.3}ms eff={:.0}%",
             self.tasks,
             self.kernel_calls,
@@ -154,7 +194,21 @@ impl ExecReport {
             self.sim_makespan_s * 1e3,
             self.wall_s * 1e3,
             self.efficiency() * 100.0
-        )
+        );
+        // fault-free summaries stay byte-identical to the pre-recovery
+        // executor's output
+        if self.faults_injected > 0 {
+            s.push_str(&format!(
+                " faults={} retries={} recomputed={} workers_lost={} recovery={:.2}MiB stall={:.3}ms",
+                self.faults_injected,
+                self.retries,
+                self.recomputed_tasks,
+                self.workers_lost,
+                self.recovery_bytes as f64 / (1 << 20) as f64,
+                self.recovery_stall_s * 1e3,
+            ));
+        }
+        s
     }
 }
 
@@ -186,6 +240,13 @@ pub struct Cluster {
     /// `lower-collectives` gather schedule
     /// ([`crate::tra::passes::PassManager::with_topology`]).
     pub topology: Option<Topology>,
+    /// Deterministic fault schedule for real execution (see
+    /// [`crate::sim::faults`]). `None` (default): nothing is injected and
+    /// the executor behaves identically to the pre-recovery
+    /// implementation. Faults only affect [`Cluster::execute`]-family
+    /// runs; [`Cluster::model`] and [`Cluster::dry_run`] always model the
+    /// fault-free timeline.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Cluster {
@@ -198,6 +259,7 @@ impl Cluster {
             intra_op: 0,
             passes: PassSelector::default(),
             topology: None,
+            faults: None,
         }
     }
 
@@ -223,6 +285,14 @@ impl Cluster {
     /// Builder-style worker topology (see [`Cluster::topology`]).
     pub fn with_topology(mut self, topology: Topology) -> Self {
         self.topology = Some(topology);
+        self
+    }
+
+    /// Builder-style deterministic fault schedule (see
+    /// [`Cluster::faults`]). An empty plan is normalized to `None`, so
+    /// `--inject-faults none` runs the exact fault-free executor.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = if plan.is_empty() { None } else { Some(plan) };
         self
     }
 
@@ -391,7 +461,9 @@ impl Cluster {
     /// the caller (it is a pure function of the frozen `tg`, so the
     /// `Session` API computes it once at compile time instead of paying
     /// the O(tasks + deps) event simulation per request). Only `wall_s`
-    /// is stamped fresh on the returned copy.
+    /// is stamped fresh on the returned copy. Runs under
+    /// [`RunOptions::default`]; callers with a deadline, retry budget, or
+    /// input-hygiene needs use [`Self::run_lowered_modeled_opts`].
     pub fn run_lowered_modeled(
         &self,
         g: &EinGraph,
@@ -401,48 +473,84 @@ impl Cluster {
         engine: &dyn KernelEngine,
         inputs: &HashMap<VertexId, Tensor>,
     ) -> Result<(HashMap<VertexId, Tensor>, ExecReport)> {
-        // check inputs present and correctly shaped
+        self.run_lowered_modeled_opts(g, plan, tg, base, engine, inputs, &RunOptions::default())
+    }
+
+    /// [`Self::execute`] with explicit [`RunOptions`] — the one-shot
+    /// convenience the fault-injection suites use (lower + model + run).
+    pub fn execute_opts(
+        &self,
+        g: &EinGraph,
+        plan: &Plan,
+        engine: &dyn KernelEngine,
+        inputs: &HashMap<VertexId, Tensor>,
+        opts: &RunOptions,
+    ) -> Result<(HashMap<VertexId, Tensor>, ExecReport)> {
+        let tg = self.lower(g, plan)?;
+        let base = self.model(&tg);
+        self.run_lowered_modeled_opts(g, plan, &tg, &base, engine, inputs, opts)
+    }
+
+    /// The full run entry point: typed input validation, fault-injected
+    /// execution with lineage recovery, deadline enforcement, and the
+    /// recovery counters stamped into the returned report.
+    ///
+    /// With no armed faults and default options this is behaviorally
+    /// identical to the pre-recovery executor: outputs bitwise-equal,
+    /// ledger byte-identical (all recovery fields zero).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_lowered_modeled_opts(
+        &self,
+        g: &EinGraph,
+        plan: &Plan,
+        tg: &TaskGraph,
+        base: &ExecReport,
+        engine: &dyn KernelEngine,
+        inputs: &HashMap<VertexId, Tensor>,
+        opts: &RunOptions,
+    ) -> Result<(HashMap<VertexId, Tensor>, ExecReport)> {
+        // check inputs present, correctly shaped, and (opt-in) finite —
+        // typed errors, so serving front-ends can branch without string
+        // matching. Extraneous entries in `inputs` are ignored.
         for vid in g.inputs() {
             let vert = g.vertex(vid);
             let t = inputs.get(&vid).ok_or_else(|| {
-                Error::Exec(format!("missing input tensor for {}", vert.name))
+                Error::exec_failure(
+                    None,
+                    0,
+                    ExecCause::MissingInput {
+                        vertex: vert.name.clone(),
+                    },
+                )
             })?;
             if t.shape() != vert.bound.as_slice() {
-                return Err(Error::Exec(format!(
-                    "input {}: shape {:?} != bound {:?}",
-                    vert.name,
-                    t.shape(),
-                    vert.bound
-                )));
+                return Err(Error::exec_failure(
+                    None,
+                    0,
+                    ExecCause::ShapeMismatch {
+                        vertex: vert.name.clone(),
+                        got: t.shape().to_vec(),
+                        want: vert.bound.clone(),
+                    },
+                ));
+            }
+            if opts.reject_nonfinite {
+                if let Some(index) = t.data().iter().position(|v| !v.is_finite()) {
+                    return Err(Error::exec_failure(
+                        None,
+                        0,
+                        ExecCause::NonFinite {
+                            vertex: vert.name.clone(),
+                            index,
+                        },
+                    ));
+                }
             }
         }
         let mut report = base.clone();
 
         let n = tg.tasks.len();
         let results: Vec<ResultSlot> = (0..n).map(|_| Mutex::new(None)).collect();
-        // Pre-slice all input tiles serially (they carry no deps and model
-        // the paper's free, offline pre-partitioning). With views this is
-        // O(1) per tile — no input bytes are copied.
-        for t in &tg.tasks {
-            if let TaskKind::InputTile { vertex, key } = &t.kind {
-                let vert = g.vertex(*vertex);
-                // The emitted graph is the authority on input layout: the
-                // `propagate-partitions` pass may have rewritten it away
-                // from the plan's `input_parts`. (Direct-lowered graphs
-                // register the plan layout verbatim, so the fallback only
-                // covers unpartitioned inputs.)
-                let part = tg
-                    .vertex_out_part
-                    .get(vertex)
-                    .or_else(|| plan.input_parts.get(vertex))
-                    .cloned()
-                    .unwrap_or_else(|| vec![1; vert.bound.len()]);
-                let origin = tile_origin(&vert.bound, &part, key);
-                let shape = tile_shape(&vert.bound, &part, key);
-                let tile = inputs[vertex].slice_view(&origin, &shape)?;
-                *results[t.id.0].lock().unwrap() = Some(tile);
-            }
-        }
         // Output-vertex tiles must survive until assembly below; every
         // other tile is recycled once its last consumer has read it.
         let mut keep = vec![false; n];
@@ -451,21 +559,37 @@ impl Cluster {
                 keep[tid.0] = true;
             }
         }
+        let ctx = RunCtx::new(self, tg, g, plan, engine, inputs, &results, *opts)?;
+        // Pre-slice all input tiles serially (they carry no deps and model
+        // the paper's free, offline pre-partitioning). With views this is
+        // O(1) per tile — no input bytes are copied.
+        for t in &tg.tasks {
+            if matches!(t.kind, TaskKind::InputTile { .. }) {
+                *lock_slot(&results, t.id.0)? = Some(slice_input(tg, g, plan, inputs, t.id.0)?);
+                ctx.mark_completed(t.id.0);
+            }
+        }
         let threads = std::thread::available_parallelism()
             .map(|x| x.get())
             .unwrap_or(4)
             .min(self.workers.max(1) * 2)
             .max(1);
-        let t0 = std::time::Instant::now();
         match self.exec_mode {
-            ExecMode::WorkStealing => {
-                self.run_work_stealing(tg, g, plan, engine, &results, threads, &keep)?
-            }
-            ExecMode::LevelBarrier => {
-                self.run_level_barrier(tg, g, plan, engine, &results, threads)?
+            ExecMode::WorkStealing => self.run_work_stealing(&ctx, threads, &keep)?,
+            ExecMode::LevelBarrier => self.run_level_barrier(&ctx, threads)?,
+        }
+        // A worker death late in the run may have dropped output tiles
+        // whose producing tasks had already completed; rebuild them (and
+        // any missing lineage under them) before assembly.
+        if ctx.armed.is_some() {
+            ctx.check_deadline()?;
+            for out in g.outputs() {
+                for tid in &tg.vertex_outputs[&out] {
+                    ctx.ensure_tile(tid.0, &serial_scope())?;
+                }
             }
         }
-        report.wall_s = t0.elapsed().as_secs_f64();
+        report.wall_s = ctx.start.elapsed().as_secs_f64();
 
         // assemble outputs
         let mut outputs = HashMap::new();
@@ -479,7 +603,7 @@ impl Cluster {
                 // can share one set of result tiles, and each assembly
                 // must read them. The drain below recycles every slot
                 // exactly once.
-                let slot = results[tid.0].lock().unwrap();
+                let slot = lock_slot(&results, tid.0)?;
                 let tile = slot
                     .as_ref()
                     .ok_or_else(|| Error::Exec("missing result tile".into()))?;
@@ -493,11 +617,12 @@ impl Cluster {
         // reclaimed mid-run land in scoped *worker* threads' pools and are
         // reused within this execute() only (those pools die with the
         // thread scope); what is drained here survives across executes.
-        for slot in &results {
-            if let Some(v) = slot.lock().unwrap().take() {
+        for (i, _) in results.iter().enumerate() {
+            if let Some(v) = lock_slot(&results, i)?.take() {
                 v.recycle();
             }
         }
+        ctx.stamp(&mut report);
         Ok((outputs, report))
     }
 
@@ -521,29 +646,29 @@ impl Cluster {
     /// thread. Reclamation only recycles buffers with no remaining
     /// references, so it cannot affect values (and aliased tiles keep
     /// shared buffers alive).
-    #[allow(clippy::too_many_arguments)]
-    fn run_work_stealing(
-        &self,
-        tg: &TaskGraph,
-        g: &EinGraph,
-        plan: &Plan,
-        engine: &dyn KernelEngine,
-        results: &[ResultSlot],
-        threads: usize,
-        keep: &[bool],
-    ) -> Result<()> {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        let consumers = tg.consumers();
-        let indegree = tg.indegrees();
+    fn run_work_stealing(&self, ctx: &RunCtx<'_>, threads: usize, keep: &[bool]) -> Result<()> {
+        let consumers = ctx.tg.consumers();
+        let indegree = ctx.tg.indegrees();
         // Placement seeds initial deque affinity: a task's home deque is
         // its placed worker (mod nothing — out-of-range homes fall into
         // the shared injector, which is exactly the case threads < workers).
-        let home: Vec<usize> = tg.tasks.iter().map(|t| t.assigned_worker()).collect();
+        // Homes are affinity hints only, so the frozen snapshot is fine
+        // even if a mid-run death later re-homes tasks in the overlay.
+        let home: Vec<usize> = ctx
+            .effective
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed))
+            .collect();
         let intra_op = if self.intra_op == 0 {
             threads
         } else {
             self.intra_op
         };
+        // `reads_left[d]` counts the decrements d's consumers have not yet
+        // performed. Consumers decrement only after success, so clearing a
+        // slot on worker death needs no counter surgery: the recomputed
+        // tile simply absorbs the remaining decrements, and the final one
+        // recycles it exactly as it would have the original.
         let reads_left: Vec<AtomicUsize> =
             consumers.iter().map(|c| AtomicUsize::new(c.len())).collect();
         crate::util::execute_dag_scoped(
@@ -553,14 +678,10 @@ impl Cluster {
             threads,
             intra_op,
             |ti, scope| {
-                let precomputed = results[ti].lock().unwrap().is_some();
-                if !precomputed {
-                    let t = exec_task(tg, g, plan, engine, results, ti, scope)?;
-                    *results[ti].lock().unwrap() = Some(t);
-                }
-                for &d in &tg.tasks[ti].deps {
+                ctx.exec_recovering(ti, scope)?;
+                for &d in &ctx.tg.tasks[ti].deps {
                     if reads_left[d.0].fetch_sub(1, Ordering::AcqRel) == 1 && !keep[d.0] {
-                        if let Some(v) = results[d.0].lock().unwrap().take() {
+                        if let Some(v) = lock_slot(ctx.results, d.0)?.take() {
                             v.recycle();
                         }
                     }
@@ -573,29 +694,16 @@ impl Cluster {
     /// Reference mode: one persistent thread team, synchronized per ASAP
     /// level with a barrier. Retained so differential tests and benches
     /// can compare against the work-stealing scheduler.
-    fn run_level_barrier(
-        &self,
-        tg: &TaskGraph,
-        g: &EinGraph,
-        plan: &Plan,
-        engine: &dyn KernelEngine,
-        results: &[ResultSlot],
-        threads: usize,
-    ) -> Result<()> {
-        let by_level = tg.levels();
+    fn run_level_barrier(&self, ctx: &RunCtx<'_>, threads: usize) -> Result<()> {
+        let by_level = ctx.tg.levels();
         if threads == 1 {
             for lvl in &by_level {
                 for &ti in lvl {
-                    if results[ti].lock().unwrap().is_some() {
-                        continue;
-                    }
-                    let t = exec_task(tg, g, plan, engine, results, ti, &serial_scope())?;
-                    *results[ti].lock().unwrap() = Some(t);
+                    ctx.exec_recovering(ti, &serial_scope())?;
                 }
             }
             return Ok(());
         }
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let err = std::sync::Mutex::new(None::<Error>);
         let counters: Vec<AtomicUsize> = by_level.iter().map(|_| AtomicUsize::new(0)).collect();
         let barrier = std::sync::Barrier::new(threads);
@@ -604,20 +712,18 @@ impl Cluster {
                 scope.spawn(|| {
                     for (li, lvl) in by_level.iter().enumerate() {
                         loop {
+                            // first error wins; stop claiming more work but
+                            // keep hitting every barrier so siblings drain
+                            if err.lock().map(|e| e.is_some()).unwrap_or(true) {
+                                break;
+                            }
                             let i = counters[li].fetch_add(1, Ordering::Relaxed);
                             if i >= lvl.len() {
                                 break;
                             }
-                            let ti = lvl[i];
-                            if results[ti].lock().unwrap().is_some() {
-                                continue; // pre-sliced input tile
-                            }
-                            match exec_task(tg, g, plan, engine, results, ti, &serial_scope()) {
-                                Ok(t) => {
-                                    *results[ti].lock().unwrap() = Some(t);
-                                }
-                                Err(e) => {
-                                    *err.lock().unwrap() = Some(e);
+                            if let Err(e) = ctx.exec_recovering(lvl[i], &serial_scope()) {
+                                if let Ok(mut slot) = err.lock() {
+                                    slot.get_or_insert(e);
                                 }
                             }
                         }
@@ -626,11 +732,450 @@ impl Cluster {
                 });
             }
         });
-        match err.into_inner().unwrap() {
-            Some(e) => Err(e),
-            None => Ok(()),
+        match err.into_inner() {
+            Ok(Some(e)) => Err(e),
+            Ok(None) => Ok(()),
+            Err(_) => Err(Error::exec_failure(
+                None,
+                0,
+                ExecCause::LockPoisoned {
+                    what: "level-barrier error slot",
+                },
+            )),
         }
     }
+}
+
+/// Shared state of one recovering execution: the frozen task graph plus
+/// its per-run slots, the armed fault plan, the re-homable placement
+/// overlay, and the recovery counters that end up in [`ExecReport`].
+///
+/// The frozen [`TaskGraph`] is never mutated — worker death is recorded
+/// in the `effective` overlay (task → live worker) — so compile-once /
+/// run-many artifacts survive a faulty run untouched.
+struct RunCtx<'a> {
+    cluster: &'a Cluster,
+    tg: &'a TaskGraph,
+    g: &'a EinGraph,
+    plan: &'a Plan,
+    engine: &'a dyn KernelEngine,
+    inputs: &'a HashMap<VertexId, Tensor>,
+    results: &'a [ResultSlot],
+    opts: RunOptions,
+    armed: Option<ArmedFaults>,
+    start: Instant,
+    /// Per-task effective worker: placement, overridden on re-homing.
+    effective: Vec<AtomicUsize>,
+    /// Per-worker death flags.
+    dead: Vec<AtomicBool>,
+    /// Tasks whose tile has been produced (and not lost to a death since)
+    /// — the "pending" predicate the re-homing accountant uses, and the
+    /// progress numerator of a deadline error.
+    completed: Vec<AtomicBool>,
+    completed_count: AtomicUsize,
+    /// Serializes worker deaths: re-home + slot clearing is multi-step.
+    kill_lock: Mutex<()>,
+    faults_injected: AtomicU64,
+    retries: AtomicU64,
+    recomputed: AtomicU64,
+    recovery_bytes: AtomicU64,
+    recovery_by_link: Vec<AtomicU64>,
+    workers_lost: AtomicUsize,
+    stall_ns: AtomicU64,
+}
+
+impl<'a> RunCtx<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        cluster: &'a Cluster,
+        tg: &'a TaskGraph,
+        g: &'a EinGraph,
+        plan: &'a Plan,
+        engine: &'a dyn KernelEngine,
+        inputs: &'a HashMap<VertexId, Tensor>,
+        results: &'a [ResultSlot],
+        opts: RunOptions,
+    ) -> Result<Self> {
+        let mut effective = Vec::with_capacity(tg.tasks.len());
+        for t in &tg.tasks {
+            // the run path reads placement through the typed accessor
+            effective.push(AtomicUsize::new(t.worker_checked()?));
+        }
+        let armed = cluster
+            .faults
+            .as_ref()
+            .filter(|f| !f.is_empty())
+            .map(|f| f.arm(tg.tasks.len()));
+        let classes = cluster
+            .topology
+            .as_ref()
+            .map(|t| t.classes().len())
+            .unwrap_or(1);
+        Ok(RunCtx {
+            cluster,
+            tg,
+            g,
+            plan,
+            engine,
+            inputs,
+            results,
+            opts,
+            armed,
+            start: Instant::now(),
+            effective,
+            dead: (0..cluster.workers.max(1)).map(|_| AtomicBool::new(false)).collect(),
+            completed: (0..tg.tasks.len()).map(|_| AtomicBool::new(false)).collect(),
+            completed_count: AtomicUsize::new(0),
+            kill_lock: Mutex::new(()),
+            faults_injected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            recomputed: AtomicU64::new(0),
+            recovery_bytes: AtomicU64::new(0),
+            recovery_by_link: (0..classes).map(|_| AtomicU64::new(0)).collect(),
+            workers_lost: AtomicUsize::new(0),
+            stall_ns: AtomicU64::new(0),
+        })
+    }
+
+    fn slot(&self, i: usize) -> Result<MutexGuard<'a, Option<TensorView>>> {
+        lock_slot(self.results, i)
+    }
+
+    fn mark_completed(&self, ti: usize) {
+        if !self.completed[ti].swap(true, Ordering::AcqRel) {
+            self.completed_count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Typed timeout: past the deadline, every subsequent task attempt
+    /// fails with the run's partial-progress stats (the scheduler aborts
+    /// on the first error, so the run returns promptly).
+    fn check_deadline(&self) -> Result<()> {
+        if let Some(d) = self.opts.deadline {
+            let elapsed = self.start.elapsed();
+            if elapsed >= d {
+                return Err(Error::exec_failure(
+                    None,
+                    0,
+                    ExecCause::DeadlineExceeded {
+                        elapsed_s: elapsed.as_secs_f64(),
+                        completed: self.completed_count.load(Ordering::Relaxed),
+                        total: self.tg.tasks.len(),
+                        retries: self.retries.load(Ordering::Relaxed),
+                    },
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sleep the capped exponential backoff for retry `attempt` (real
+    /// time) and charge the same delay to the modeled ledger (virtual
+    /// time, surfaced as `recovery_stall_s`).
+    fn backoff_and_count(&self, attempt: u32) {
+        let d = self.opts.backoff(attempt);
+        self.stall_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Produce task `ti`'s tile. Input tiles re-slice the caller's dense
+    /// tensor (graph inputs live in driver memory, outside any worker, so
+    /// they are always recoverable); everything else runs the kernel.
+    fn compute_tile(&self, ti: usize, scope: &ShardScope) -> Result<TensorView> {
+        if matches!(self.tg.tasks[ti].kind, TaskKind::InputTile { .. }) {
+            slice_input(self.tg, self.g, self.plan, self.inputs, ti)
+        } else {
+            exec_task(self.tg, self.g, self.plan, self.engine, self.results, ti, scope)
+        }
+    }
+
+    /// The scheduler's task body: deterministic fault injection, retry
+    /// with capped exponential backoff, and lineage repair of missing
+    /// dependency tiles. Non-injected kernel errors are deterministic
+    /// (same inputs → same failure), so they propagate immediately — only
+    /// injected faults and racing-death dep losses are retried.
+    fn exec_recovering(&self, ti: usize, scope: &ShardScope) -> Result<()> {
+        let mut attempt: u32 = 0;
+        loop {
+            self.check_deadline()?;
+            if let Some(kind) = self.armed.as_ref().and_then(|a| a.next_failure(ti)) {
+                self.faults_injected.fetch_add(1, Ordering::Relaxed);
+                let permanent = matches!(kind, FaultKind::Permanent);
+                if permanent {
+                    // the fault kills the task's *worker*: every tile
+                    // homed there dies with it, pending tasks re-home
+                    self.kill_worker(self.effective[ti].load(Ordering::Acquire))?;
+                }
+                if attempt >= self.opts.max_retries {
+                    return Err(Error::exec_failure(
+                        Some(ti),
+                        attempt + 1,
+                        ExecCause::Injected { permanent },
+                    ));
+                }
+                self.backoff_and_count(attempt);
+                attempt += 1;
+                continue;
+            }
+            // lineage repair: recompute whatever upstream tiles a worker
+            // death reclaimed, minimal subgraph only (resident tiles are
+            // reused as-is)
+            let ensured = (|| {
+                for &d in &self.tg.tasks[ti].deps {
+                    self.ensure_tile(d.0, scope)?;
+                }
+                Ok(())
+            })();
+            if let Err(e) = ensured {
+                if is_missing_dep(&e) && attempt < self.opts.max_retries {
+                    // a racing death yanked a tile mid-walk; back off and
+                    // re-walk (deaths are finite: each worker dies once)
+                    self.backoff_and_count(attempt);
+                    attempt += 1;
+                    continue;
+                }
+                return Err(retag(e, ti, attempt + 1));
+            }
+            // pre-sliced input tiles (and tiles an eager recovery walk
+            // already rebuilt) are done the moment we observe them
+            if self.slot(ti)?.is_some() {
+                self.mark_completed(ti);
+                return Ok(());
+            }
+            match self.compute_tile(ti, scope) {
+                Ok(tile) => {
+                    let mut slot = self.slot(ti)?;
+                    if slot.is_none() {
+                        *slot = Some(tile);
+                        drop(slot);
+                    } else {
+                        // a concurrent recovery walk won the slot with
+                        // bitwise-identical bytes; ours just recycles
+                        drop(slot);
+                        tile.recycle();
+                    }
+                    self.mark_completed(ti);
+                    return Ok(());
+                }
+                Err(e) if is_missing_dep(&e) && attempt < self.opts.max_retries => {
+                    self.backoff_and_count(attempt);
+                    attempt += 1;
+                }
+                Err(e) => return Err(retag(e, ti, attempt + 1)),
+            }
+        }
+    }
+
+    /// Lineage-based recovery: make task `d`'s tile present, recomputing
+    /// the minimal missing upstream subgraph first (depth-first over
+    /// `deps`; recursion depth is the graph's level count — tens, not
+    /// thousands). Recomputation is bitwise-identical to the original
+    /// execution because tasks are pure functions of their deps and every
+    /// fold order is fixed by the graph. Racing repairs of one tile are
+    /// benign: both compute identical bytes, one wins the slot, the
+    /// loser's buffer is recycled.
+    fn ensure_tile(&self, d: usize, scope: &ShardScope) -> Result<()> {
+        if self.slot(d)?.is_some() {
+            return Ok(());
+        }
+        self.check_deadline()?;
+        for &dd in &self.tg.tasks[d].deps {
+            self.ensure_tile(dd.0, scope)?;
+        }
+        let tile = self.compute_tile(d, scope)?;
+        let mut slot = self.slot(d)?;
+        if slot.is_none() {
+            *slot = Some(tile);
+            drop(slot);
+            if !matches!(self.tg.tasks[d].kind, TaskKind::InputTile { .. }) {
+                self.recomputed.fetch_add(1, Ordering::Relaxed);
+            }
+            self.mark_completed(d);
+        } else {
+            drop(slot);
+            tile.recycle();
+        }
+        Ok(())
+    }
+
+    /// Permanent-fault handler: mark `w` dead, re-home everything placed
+    /// there onto the survivors (round-robin by task id — deterministic),
+    /// drop every tile homed on `w` (its memory is gone with it), and
+    /// charge the modeled ledger for the formerly-local dependency bytes
+    /// that pending victims must now pull across the wire to their new
+    /// homes.
+    fn kill_worker(&self, w: usize) -> Result<()> {
+        let _guard = self.kill_lock.lock().map_err(|_| {
+            Error::exec_failure(None, 0, ExecCause::LockPoisoned { what: "kill lock" })
+        })?;
+        if self.dead[w].swap(true, Ordering::AcqRel) {
+            return Ok(()); // the plan faulted two tasks on one worker
+        }
+        self.workers_lost.fetch_add(1, Ordering::Relaxed);
+        let survivors: Vec<usize> = (0..self.dead.len())
+            .filter(|&i| !self.dead[i].load(Ordering::Acquire))
+            .collect();
+        if survivors.is_empty() {
+            return Err(Error::exec_failure(None, 0, ExecCause::NoSurvivors));
+        }
+        let n = self.tg.tasks.len();
+        let victim: Vec<bool> = (0..n)
+            .map(|i| self.effective[i].load(Ordering::Acquire) == w)
+            .collect();
+        let new_home = |i: usize| survivors[i % survivors.len()];
+        // Modeled accounting: a pending victim's formerly-*local* deps
+        // (both ends on `w`, so the base ledger charged nothing) must now
+        // be rebuilt on the dep's new home and shipped to the task's.
+        // Deps that already crossed workers stay charged by the base
+        // ledger. Snapshot-based, so like `wall_s` it depends on how far
+        // execution had progressed when the fault fired.
+        for i in 0..n {
+            if !victim[i] || self.completed[i].load(Ordering::Acquire) {
+                continue;
+            }
+            let s = new_home(i);
+            for &dp in &self.tg.tasks[i].deps {
+                if victim[dp.0] {
+                    let nd = new_home(dp.0);
+                    if nd != s {
+                        self.charge_recovery(nd, s, self.tg.tasks[dp.0].out_bytes as u64);
+                    }
+                }
+            }
+        }
+        // Re-home the overlay and drop dead tiles. `reads_left` counters
+        // need no surgery: they count *future* consumer decrements, which
+        // clearing a slot does not change — the recomputed tile absorbs
+        // them (see `run_work_stealing`).
+        for i in 0..n {
+            if !victim[i] {
+                continue;
+            }
+            self.effective[i].store(new_home(i), Ordering::Release);
+            if let Some(v) = self.slot(i)?.take() {
+                if self.completed[i].swap(false, Ordering::AcqRel) {
+                    self.completed_count.fetch_sub(1, Ordering::Relaxed);
+                }
+                v.recycle();
+            }
+        }
+        Ok(())
+    }
+
+    fn charge_recovery(&self, from: usize, to: usize, bytes: u64) {
+        self.recovery_bytes.fetch_add(bytes, Ordering::Relaxed);
+        let class = match &self.cluster.topology {
+            Some(t) => t.link_class(from, to).unwrap_or(t.classes().len() - 1),
+            None => 0,
+        };
+        self.recovery_by_link[class].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Stamp the recovery counters into the report. On a fault-free run
+    /// every field stays at its zero default, leaving the ledger
+    /// byte-identical to the pre-recovery executor's.
+    fn stamp(&self, report: &mut ExecReport) {
+        report.faults_injected = self.faults_injected.load(Ordering::Relaxed);
+        report.retries = self.retries.load(Ordering::Relaxed);
+        report.recomputed_tasks = self.recomputed.load(Ordering::Relaxed);
+        report.recovery_bytes = self.recovery_bytes.load(Ordering::Relaxed);
+        report.workers_lost = self.workers_lost.load(Ordering::Relaxed);
+        report.recovery_stall_s = self.stall_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+        if report.recovery_bytes > 0 {
+            report.recovery_by_link = match &self.cluster.topology {
+                Some(t) => t
+                    .classes()
+                    .iter()
+                    .zip(&self.recovery_by_link)
+                    .map(|(c, b)| (c.name.clone(), b.load(Ordering::Relaxed)))
+                    .collect(),
+                None => vec![("flat".into(), report.recovery_bytes)],
+            };
+        }
+        if report.faults_injected > 0 {
+            // injected failures stall the modeled timeline by the same
+            // backoff schedule the wall executor slept
+            report.sim_makespan_s += report.recovery_stall_s;
+        }
+    }
+}
+
+/// True for the typed missing-dependency error the recovery loop treats
+/// as retryable (a racing worker death can clear a dep between the
+/// lineage walk and the read).
+fn is_missing_dep(e: &Error) -> bool {
+    matches!(
+        e.as_exec().map(|x| &x.cause),
+        Some(ExecCause::MissingDep { .. })
+    )
+}
+
+/// Attribute an execution error to the task the scheduler was running:
+/// typed causes keep their cause with `task`/`attempts` filled in;
+/// legacy string errors (kernel internals) wrap as [`ExecCause::Kernel`].
+fn retag(e: Error, ti: usize, attempts: u32) -> Error {
+    match e {
+        Error::ExecFailure(mut x) => {
+            if x.task.is_none() {
+                x.task = Some(ti);
+            }
+            x.attempts = attempts;
+            Error::ExecFailure(x)
+        }
+        other => Error::exec_failure(
+            Some(ti),
+            attempts,
+            ExecCause::Kernel {
+                detail: other.to_string(),
+            },
+        ),
+    }
+}
+
+/// Slice one pre-partitioned input tile out of the caller-provided dense
+/// input tensor — O(1), views only. Used both by the up-front pre-slice
+/// pass and by the recovery walk when a worker death dropped an input
+/// tile. The emitted graph is the authority on input layout: the
+/// `propagate-partitions` pass may have rewritten it away from the
+/// plan's `input_parts`. (Direct-lowered graphs register the plan layout
+/// verbatim, so the fallback only covers unpartitioned inputs.)
+fn slice_input(
+    tg: &TaskGraph,
+    g: &EinGraph,
+    plan: &Plan,
+    inputs: &HashMap<VertexId, Tensor>,
+    ti: usize,
+) -> Result<TensorView> {
+    let (vertex, key) = match &tg.tasks[ti].kind {
+        TaskKind::InputTile { vertex, key } => (vertex, key),
+        _ => {
+            return Err(Error::Exec(
+                "slice_input called on a non-input task (internal)".into(),
+            ))
+        }
+    };
+    let vert = g.vertex(*vertex);
+    let part = tg
+        .vertex_out_part
+        .get(vertex)
+        .or_else(|| plan.input_parts.get(vertex))
+        .cloned()
+        .unwrap_or_else(|| vec![1; vert.bound.len()]);
+    let origin = tile_origin(&vert.bound, &part, key);
+    let shape = tile_shape(&vert.bound, &part, key);
+    let src = inputs.get(vertex).ok_or_else(|| {
+        Error::exec_failure(
+            Some(ti),
+            0,
+            ExecCause::MissingInput {
+                vertex: vert.name.clone(),
+            },
+        )
+    })?;
+    src.slice_view(&origin, &shape)
 }
 
 /// Execute a single task; all deps already computed. `scope` is the
@@ -651,11 +1196,11 @@ fn exec_task(
 ) -> Result<TensorView> {
     let task = &tg.tasks[ti];
     let dep_view = |d: crate::taskgraph::TaskId| -> Result<TensorView> {
-        results[d.0]
-            .lock()
-            .unwrap()
-            .clone()
-            .ok_or_else(|| Error::Exec(format!("dep {} not computed", d.0)))
+        lock_slot(results, d.0)?.clone().ok_or_else(|| {
+            // typed so the recovery loop can distinguish "tile reclaimed
+            // by a racing worker death" (repairable) from kernel errors
+            Error::exec_failure(None, 0, ExecCause::MissingDep { dep: d.0 })
+        })
     };
     match &task.kind {
         TaskKind::InputTile { .. } => Err(Error::Exec(
@@ -730,18 +1275,29 @@ fn exec_task(
             // `deps` order, never completion order. Large folds chunk the
             // output buffer across shards — each cell still combines its
             // deps in the same order, so chunking cannot change bits.
+            // `acc` may hold a pooled buffer; every error exit below
+            // recycles it so a failing task leaks nothing from the pool.
             let mut acc = dep_view(task.deps[0])?.to_tensor();
-            let rest: Vec<TensorView> = task.deps[1..]
+            let rest: Vec<TensorView> = match task.deps[1..]
                 .iter()
                 .map(|&d| dep_view(d))
-                .collect::<Result<_>>()?;
+                .collect::<Result<_>>()
+            {
+                Ok(r) => r,
+                Err(e) => {
+                    acc.recycle();
+                    return Err(e);
+                }
+            };
             for t in &rest {
                 if t.shape() != acc.shape() {
-                    return Err(Error::Shape(format!(
+                    let msg = format!(
                         "aggregate shape mismatch: {:?} vs {:?}",
                         acc.shape(),
                         t.shape()
-                    )));
+                    );
+                    acc.recycle();
+                    return Err(Error::Shape(msg));
                 }
             }
             // Kernel outputs are contiguous whole-buffer views; fold over
@@ -771,7 +1327,11 @@ fn exec_task(
             } else {
                 for t in &rest {
                     let owned = t.to_tensor();
-                    acc.accumulate(&owned, |a, b| agg.combine(a, b))?;
+                    if let Err(e) = acc.accumulate(&owned, |a, b| agg.combine(a, b)) {
+                        owned.recycle();
+                        acc.recycle();
+                        return Err(e);
+                    }
                     owned.recycle();
                 }
             }
@@ -819,39 +1379,50 @@ fn exec_task(
             }
             // Otherwise move exactly the overlapping sub-regions. The
             // union of intersections covers the tile once, so the pooled
-            // buffer is fully overwritten.
+            // buffer is fully overwritten. The fill runs in a closure so
+            // any error path hands the pooled buffer back instead of
+            // leaking it.
             let mut out = Tensor::full_pooled(&t_shape, 0.0);
-            for &d in &task.deps {
-                let pkey = dep_key(d)?;
-                let p_origin = tile_origin(pb, have, &pkey);
-                let p_shape = tile_shape(pb, have, &pkey);
-                let ptile = dep_view(d)?;
-                // intersection in global coords
-                let rank = pb.len();
-                let mut lo = vec![0usize; rank];
-                let mut sz = vec![0usize; rank];
-                let mut empty = false;
-                for dim in 0..rank {
-                    let a = t_origin[dim].max(p_origin[dim]);
-                    let b = (t_origin[dim] + t_shape[dim]).min(p_origin[dim] + p_shape[dim]);
-                    if b <= a {
-                        empty = true;
-                        break;
+            let fill = (|| -> Result<()> {
+                for &d in &task.deps {
+                    let pkey = dep_key(d)?;
+                    let p_origin = tile_origin(pb, have, &pkey);
+                    let p_shape = tile_shape(pb, have, &pkey);
+                    let ptile = dep_view(d)?;
+                    // intersection in global coords
+                    let rank = pb.len();
+                    let mut lo = vec![0usize; rank];
+                    let mut sz = vec![0usize; rank];
+                    let mut empty = false;
+                    for dim in 0..rank {
+                        let a = t_origin[dim].max(p_origin[dim]);
+                        let b = (t_origin[dim] + t_shape[dim]).min(p_origin[dim] + p_shape[dim]);
+                        if b <= a {
+                            empty = true;
+                            break;
+                        }
+                        lo[dim] = a;
+                        sz[dim] = b - a;
                     }
-                    lo[dim] = a;
-                    sz[dim] = b - a;
+                    if empty {
+                        continue;
+                    }
+                    let src_off: Vec<usize> =
+                        lo.iter().zip(&p_origin).map(|(a, o)| a - o).collect();
+                    let dst_off: Vec<usize> =
+                        lo.iter().zip(&t_origin).map(|(a, o)| a - o).collect();
+                    let piece = ptile.slice(&src_off, &sz)?;
+                    out.write_slice_view(&dst_off, &piece)?;
                 }
-                if empty {
-                    continue;
+                Ok(())
+            })();
+            match fill {
+                Ok(()) => Ok(out.into_view()),
+                Err(e) => {
+                    out.recycle();
+                    Err(e)
                 }
-                let src_off: Vec<usize> =
-                    lo.iter().zip(&p_origin).map(|(a, o)| a - o).collect();
-                let dst_off: Vec<usize> =
-                    lo.iter().zip(&t_origin).map(|(a, o)| a - o).collect();
-                let piece = ptile.slice(&src_off, &sz)?;
-                out.write_slice_view(&dst_off, &piece)?;
             }
-            Ok(out.into_view())
         }
         TaskKind::Collective { .. } => {
             // A relay step is a pure pass-through copy of its single
@@ -1182,5 +1753,227 @@ mod tests {
         let cluster = Cluster::new(4, NetworkProfile::loopback());
         let engine = NativeEngine::new();
         assert!(cluster.execute(&g, &plan, &engine, &HashMap::new()).is_err());
+    }
+
+    #[test]
+    fn input_validation_is_typed() {
+        let g = matmul_graph(8);
+        let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() }).unwrap();
+        let cluster = Cluster::new(4, NetworkProfile::loopback());
+        let engine = NativeEngine::new();
+        // missing input
+        let err = cluster
+            .execute(&g, &plan, &engine, &HashMap::new())
+            .unwrap_err();
+        assert!(matches!(
+            err.as_exec().map(|e| &e.cause),
+            Some(ExecCause::MissingInput { .. })
+        ));
+        // shape mismatch
+        let mut bad = HashMap::new();
+        bad.insert(g.by_name("A").unwrap(), Tensor::random(&[4, 4], 1));
+        bad.insert(g.by_name("B").unwrap(), Tensor::random(&[8, 8], 2));
+        let err = cluster.execute(&g, &plan, &engine, &bad).unwrap_err();
+        match err.as_exec().map(|e| &e.cause) {
+            Some(ExecCause::ShapeMismatch { got, want, .. }) => {
+                assert_eq!(got, &vec![4, 4]);
+                assert_eq!(want, &vec![8, 8]);
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        // non-finite screening is opt-in
+        let mut nan_in = HashMap::new();
+        let mut a = Tensor::random(&[8, 8], 1);
+        a.data_mut()[5] = f32::NAN;
+        nan_in.insert(g.by_name("A").unwrap(), a);
+        nan_in.insert(g.by_name("B").unwrap(), Tensor::random(&[8, 8], 2));
+        assert!(cluster.execute(&g, &plan, &engine, &nan_in).is_ok());
+        let opts = RunOptions {
+            reject_nonfinite: true,
+            ..Default::default()
+        };
+        let err = cluster
+            .execute_opts(&g, &plan, &engine, &nan_in, &opts)
+            .unwrap_err();
+        match err.as_exec().map(|e| &e.cause) {
+            Some(ExecCause::NonFinite { index, .. }) => assert_eq!(*index, 5),
+            other => panic!("expected NonFinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn injected_faults_recover_bitwise_with_counters() {
+        let g = matmul_graph(24);
+        let z = g.by_name("Z").unwrap();
+        let mut plan = crate::decomp::Plan::default();
+        plan.parts.insert(z, vec![2, 3, 2]); // forces aggregation tasks
+        plan.finalize_inputs(&g);
+        let mut inputs = HashMap::new();
+        inputs.insert(g.by_name("A").unwrap(), Tensor::random(&[24, 24], 6));
+        inputs.insert(g.by_name("B").unwrap(), Tensor::random(&[24, 24], 7));
+        let engine = NativeEngine::new();
+        let (clean, clean_rep) = Cluster::new(4, NetworkProfile::loopback())
+            .execute(&g, &plan, &engine, &inputs)
+            .unwrap();
+        // fault-free ledgers carry zero recovery overhead
+        assert_eq!(clean_rep.faults_injected, 0);
+        assert_eq!(clean_rep.retries, 0);
+        assert_eq!(clean_rep.recomputed_tasks, 0);
+        assert_eq!(clean_rep.recovery_bytes, 0);
+        assert_eq!(clean_rep.workers_lost, 0);
+        assert_eq!(clean_rep.recovery_stall_s, 0.0);
+        assert!(clean_rep.recovery_by_link.is_empty());
+        assert!(!clean_rep.summary().contains("faults="));
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            let faulty = Cluster::new(4, NetworkProfile::loopback())
+                .with_exec_mode(mode)
+                .with_faults(FaultPlan::new().transient(4, 2).permanent(7));
+            let (outs, rep) = faulty.execute(&g, &plan, &engine, &inputs).unwrap();
+            assert_eq!(outs[&z], clean[&z], "{mode:?}");
+            assert_eq!(rep.faults_injected, 3, "{mode:?}"); // 2 transient + 1 permanent
+            assert!(rep.retries >= 3, "{mode:?}");
+            assert_eq!(rep.workers_lost, 1, "{mode:?}");
+            assert!(rep.recovery_stall_s > 0.0, "{mode:?}");
+            assert!(rep.summary().contains("faults=3"), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_typed() {
+        let g = matmul_graph(8);
+        let plan = plan_graph(&g, &PlannerConfig { p: 2, ..Default::default() }).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert(g.by_name("A").unwrap(), Tensor::random(&[8, 8], 1));
+        inputs.insert(g.by_name("B").unwrap(), Tensor::random(&[8, 8], 2));
+        let engine = NativeEngine::new();
+        // a task that fails more times than the retry budget allows
+        let cluster = Cluster::new(2, NetworkProfile::loopback())
+            .with_faults(FaultPlan::new().transient(0, 10));
+        let opts = RunOptions {
+            max_retries: 2,
+            ..Default::default()
+        };
+        let err = cluster
+            .execute_opts(&g, &plan, &engine, &inputs, &opts)
+            .unwrap_err();
+        let exec = err.as_exec().expect("typed exec error");
+        assert_eq!(exec.task, Some(0));
+        assert_eq!(exec.attempts, 3); // 1 try + 2 retries
+        assert!(matches!(exec.cause, ExecCause::Injected { permanent: false }));
+    }
+
+    #[test]
+    fn zero_deadline_times_out_typed_and_promptly() {
+        let g = matmul_graph(16);
+        let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() }).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert(g.by_name("A").unwrap(), Tensor::random(&[16, 16], 1));
+        inputs.insert(g.by_name("B").unwrap(), Tensor::random(&[16, 16], 2));
+        let engine = NativeEngine::new();
+        let cluster = Cluster::new(4, NetworkProfile::loopback());
+        let opts = RunOptions {
+            deadline: Some(std::time::Duration::ZERO),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let err = cluster
+            .execute_opts(&g, &plan, &engine, &inputs, &opts)
+            .unwrap_err();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "not prompt");
+        assert!(err.is_deadline(), "{err}");
+        match err.as_exec().unwrap().cause {
+            ExecCause::DeadlineExceeded { total, .. } => assert!(total > 0),
+            ref other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn agg_error_path_returns_pooled_buffers() {
+        use crate::util::BufferPool;
+        // An Agg whose accumulator draws a pooled buffer (first dep is a
+        // strided view, so `to_tensor` pools a copy) and then hits a shape
+        // mismatch: the error path must hand the buffer back.
+        let g = matmul_graph(8);
+        let z = g.by_name("Z").unwrap();
+        let mut tg = TaskGraph::default();
+        let d0 = tg.push_task(
+            TaskKind::InputTile { vertex: z, key: vec![0] },
+            vec![],
+            0,
+            0.0,
+        );
+        let d1 = tg.push_task(
+            TaskKind::InputTile { vertex: z, key: vec![1] },
+            vec![],
+            0,
+            0.0,
+        );
+        let agg = tg.push_task(TaskKind::Agg { vertex: z, key: vec![0] }, vec![d0, d1], 0, 0.0);
+        let results: Vec<ResultSlot> = (0..3).map(|_| Mutex::new(None)).collect();
+        let big = Tensor::random(&[4, 4], 11);
+        *results[0].lock().unwrap() = Some(big.slice_view(&[0, 0], &[2, 2]).unwrap());
+        *results[1].lock().unwrap() = Some(Tensor::random(&[3, 3], 12).into_view());
+        let plan = crate::decomp::Plan::default();
+        let engine = NativeEngine::new();
+        let before = BufferPool::stats();
+        let r = exec_task(&tg, &g, &plan, &engine, &results, agg.0, &serial_scope());
+        assert!(r.is_err());
+        let after = BufferPool::stats();
+        assert!(after.takes > before.takes, "accumulator should be pooled");
+        assert_eq!(
+            after.takes - before.takes,
+            after.gives - before.gives,
+            "aggregation error path leaked pooled buffers"
+        );
+    }
+
+    #[test]
+    fn repart_error_path_returns_pooled_buffer() {
+        use crate::util::BufferPool;
+        // A gathering Repart fails on its missing deps *after* drawing its
+        // output buffer from the pool; the error path must return it.
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![16, 16]);
+        let b = g.input("B", vec![16, 16]);
+        let c = g.input("C", vec![16, 16]);
+        let z1 = g
+            .add(
+                "Z1",
+                EinSum::contraction(labels("i j"), labels("j k"), labels("i k")),
+                vec![a, b],
+            )
+            .unwrap();
+        let z2 = g
+            .add(
+                "Z2",
+                EinSum::contraction(labels("i k"), labels("k m"), labels("i m")),
+                vec![z1, c],
+            )
+            .unwrap();
+        let mut plan = crate::decomp::Plan::default();
+        plan.parts.insert(z1, vec![2, 2, 4]);
+        plan.parts.insert(z2, vec![4, 1, 4]);
+        plan.finalize_inputs(&g);
+        let cluster = Cluster::new(4, NetworkProfile::loopback());
+        let tg = cluster.lower(&g, &plan).unwrap();
+        let ri = tg
+            .tasks
+            .iter()
+            .find(|t| matches!(t.kind, TaskKind::Repart { .. }) && t.deps.len() > 1)
+            .expect("mismatched chain lowers a gathering repart")
+            .id
+            .0;
+        let results: Vec<ResultSlot> = (0..tg.tasks.len()).map(|_| Mutex::new(None)).collect();
+        let engine = NativeEngine::new();
+        let before = BufferPool::stats();
+        let err = exec_task(&tg, &g, &plan, &engine, &results, ri, &serial_scope()).unwrap_err();
+        assert!(is_missing_dep(&err), "{err}");
+        let after = BufferPool::stats();
+        assert!(after.takes > before.takes, "repart output should be pooled");
+        assert_eq!(
+            after.takes - before.takes,
+            after.gives - before.gives,
+            "repart error path leaked pooled buffers"
+        );
     }
 }

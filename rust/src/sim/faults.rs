@@ -1,0 +1,420 @@
+//! Deterministic fault injection and per-run robustness options.
+//!
+//! The paper's program is *declarative*: a lowered task graph plus its
+//! inputs determines every tile bitwise, so any lost tile is recomputable
+//! from lineage alone. That property is only worth anything if failure is
+//! a first-class, testable execution scenario — which requires faults to
+//! be **deterministic**. A [`FaultPlan`] names exactly which tasks fail
+//! and how (explicit task ids, or a seeded pseudo-random sweep that is a
+//! pure function of `(seed, rate, task count)`), so a faulty run can be
+//! replayed bit-for-bit and diffed against a clean one
+//! (`scripts/chaos_smoke.sh` does exactly that in CI).
+//!
+//! Two fault shapes, mirroring real clusters:
+//!
+//! * **transient** — the task fails its first `failures` attempts and
+//!   then succeeds (a flaky kernel, a dropped message). The executor
+//!   retries in place with capped exponential backoff.
+//! * **permanent** — the first attempt kills the task's simulated
+//!   *worker*: every tile homed there is lost, pending tasks re-home to
+//!   survivors, and lost tiles are recomputed from task-graph lineage
+//!   (see `sim::cluster`'s recovery executor).
+//!
+//! [`RunOptions`] carries the per-run robustness knobs: retry budget,
+//! wall-clock deadline, and opt-in non-finite input rejection.
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::time::Duration;
+
+/// What an armed fault does to its task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the task's first `failures` attempts, then let it succeed.
+    Transient { failures: u32 },
+    /// On the task's first attempt, mark its assigned worker dead: tiles
+    /// homed there are dropped, pending tasks re-home to survivors, and
+    /// the attempt itself fails (the retry runs on the re-homed worker).
+    Permanent,
+}
+
+/// A deterministic fault schedule for one execution, threaded via
+/// [`Cluster::with_faults`](crate::sim::Cluster::with_faults),
+/// `DriverConfig::faults`, or the CLI's `--inject-faults`.
+///
+/// The plan is resolved against a concrete task graph at run time
+/// ([`FaultPlan::arm`]); explicit task indices beyond the graph's task
+/// count are ignored, so one plan can be swept across graphs of
+/// different sizes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Explicit per-task faults, `(task index, kind)`.
+    explicit: Vec<(usize, FaultKind)>,
+    /// Seeded sweep: every task independently receives a single
+    /// transient failure with probability `rate`, drawn from a SplitMix64
+    /// stream — a pure function of `(seed, rate, task count)`.
+    seeded: Option<(u64, f64)>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Builder: fail task `task`'s first `failures` attempts.
+    pub fn transient(mut self, task: usize, failures: u32) -> Self {
+        self.explicit
+            .push((task, FaultKind::Transient { failures }));
+        self
+    }
+
+    /// Builder: kill task `task`'s worker on its first attempt.
+    pub fn permanent(mut self, task: usize) -> Self {
+        self.explicit.push((task, FaultKind::Permanent));
+        self
+    }
+
+    /// A seeded sweep: each task fails once (transiently) with
+    /// probability `rate`.
+    pub fn seeded(seed: u64, rate: f64) -> Self {
+        FaultPlan {
+            explicit: Vec::new(),
+            seeded: Some((seed, rate)),
+        }
+    }
+
+    /// True when the plan can never inject anything.
+    pub fn is_empty(&self) -> bool {
+        self.explicit.is_empty() && self.seeded.is_none()
+    }
+
+    /// Resolve the plan against a graph of `n` tasks. Explicit entries
+    /// win over the seeded draw on the same index; later explicit
+    /// entries win over earlier ones.
+    pub(crate) fn arm(&self, n: usize) -> ArmedFaults {
+        let mut kinds: Vec<Option<FaultKind>> = vec![None; n];
+        if let Some((seed, rate)) = self.seeded {
+            let mut rng = Rng::seed_from_u64(seed);
+            for k in kinds.iter_mut() {
+                // one draw per task, in task order: a pure function of
+                // (seed, rate, n) — replayable and diffable
+                if (rng.next_f32() as f64) < rate {
+                    *k = Some(FaultKind::Transient { failures: 1 });
+                }
+            }
+        }
+        for &(ti, kind) in &self.explicit {
+            if ti < n {
+                kinds[ti] = Some(kind);
+            }
+        }
+        let remaining = kinds
+            .iter()
+            .map(|k| {
+                AtomicU32::new(match k {
+                    Some(FaultKind::Transient { failures }) => *failures,
+                    _ => 0,
+                })
+            })
+            .collect();
+        let fired = kinds.iter().map(|_| AtomicBool::new(false)).collect();
+        ArmedFaults {
+            kinds,
+            remaining,
+            fired,
+        }
+    }
+
+    /// Human-readable description (the canonical spec string).
+    pub fn describe(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    /// Canonical spec string — round-trips through [`FromStr`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some((seed, rate)) = self.seeded {
+            parts.push(format!("seed:{seed}:{rate}"));
+        }
+        for (ti, kind) in &self.explicit {
+            match kind {
+                FaultKind::Transient { failures } => {
+                    parts.push(format!("task:{ti}:transient:{failures}"))
+                }
+                FaultKind::Permanent => parts.push(format!("task:{ti}:permanent")),
+            }
+        }
+        if parts.is_empty() {
+            return f.write_str("none");
+        }
+        f.write_str(&parts.join(","))
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = Error;
+
+    /// Parse the CLI spec: comma-separated clauses, each either
+    /// `seed:<u64>:<rate>` (seeded transient sweep),
+    /// `task:<idx>:transient[:<n>]` (fail n times, default 1), or
+    /// `task:<idx>:permanent` (kill the task's worker).
+    fn from_str(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        if s == "none" || s.is_empty() {
+            return Ok(plan);
+        }
+        for clause in s.split(',') {
+            let fields: Vec<&str> = clause.split(':').collect();
+            match fields.as_slice() {
+                ["seed", seed, rate] => {
+                    let seed: u64 = seed.parse().map_err(|_| {
+                        Error::Parse(format!("fault spec {clause:?}: bad seed"))
+                    })?;
+                    let rate: f64 = rate.parse().map_err(|_| {
+                        Error::Parse(format!("fault spec {clause:?}: bad rate"))
+                    })?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(Error::Parse(format!(
+                            "fault spec {clause:?}: rate must be in [0, 1]"
+                        )));
+                    }
+                    plan.seeded = Some((seed, rate));
+                }
+                ["task", idx, rest @ ..] => {
+                    let ti: usize = idx.parse().map_err(|_| {
+                        Error::Parse(format!("fault spec {clause:?}: bad task index"))
+                    })?;
+                    match rest {
+                        ["transient"] => plan = plan.transient(ti, 1),
+                        ["transient", n] => {
+                            let n: u32 = n.parse().map_err(|_| {
+                                Error::Parse(format!(
+                                    "fault spec {clause:?}: bad failure count"
+                                ))
+                            })?;
+                            plan = plan.transient(ti, n);
+                        }
+                        ["permanent"] => plan = plan.permanent(ti),
+                        _ => {
+                            return Err(Error::Parse(format!(
+                                "fault spec {clause:?}: expected transient[:n] or permanent"
+                            )))
+                        }
+                    }
+                }
+                _ => {
+                    return Err(Error::Parse(format!(
+                        "fault spec {clause:?}: expected seed:<seed>:<rate> or \
+                         task:<idx>:transient[:n]|permanent"
+                    )))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// A [`FaultPlan`] resolved against a concrete task count: per-task fault
+/// kinds plus the consumable failure budgets. Shared read-only across the
+/// executor's threads; consumption is atomic so each planned failure
+/// fires exactly once even under racing attempts.
+pub(crate) struct ArmedFaults {
+    kinds: Vec<Option<FaultKind>>,
+    /// Transient failures left per task.
+    remaining: Vec<AtomicU32>,
+    /// Whether a permanent fault has fired per task.
+    fired: Vec<AtomicBool>,
+}
+
+impl ArmedFaults {
+    /// Number of tasks the resolved plan will fault at least once.
+    pub(crate) fn planned(&self) -> usize {
+        self.kinds.iter().flatten().count()
+    }
+
+    /// Consume one failure event for task `ti`, if the plan has one left.
+    pub(crate) fn next_failure(&self, ti: usize) -> Option<FaultKind> {
+        match self.kinds.get(ti).copied().flatten()? {
+            k @ FaultKind::Transient { .. } => {
+                let mut cur = self.remaining[ti].load(Ordering::Acquire);
+                while cur > 0 {
+                    match self.remaining[ti].compare_exchange(
+                        cur,
+                        cur - 1,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => return Some(k),
+                        Err(now) => cur = now,
+                    }
+                }
+                None
+            }
+            FaultKind::Permanent => {
+                if !self.fired[ti].swap(true, Ordering::AcqRel) {
+                    Some(FaultKind::Permanent)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Per-run robustness options for `Executable::run_with` /
+/// `Cluster::run_lowered_opts`: retry budget, deadline, input hygiene,
+/// and the backoff schedule. The default is the pre-fault-tolerance
+/// behaviour: no deadline, no non-finite screening, and a retry budget
+/// that only matters when a [`FaultPlan`] is armed (non-injected kernel
+/// errors are deterministic and are never retried).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RunOptions {
+    /// Re-attempts allowed per task beyond the first try.
+    pub max_retries: u32,
+    /// Wall-clock budget for the whole run; exceeding it returns a typed
+    /// [`ExecCause::DeadlineExceeded`](crate::error::ExecCause) carrying
+    /// partial-progress stats.
+    pub deadline: Option<Duration>,
+    /// Reject NaN/Inf input tensors with a typed error before executing.
+    pub reject_nonfinite: bool,
+    /// First retry waits this long; attempt `k` waits `base << k`,
+    /// capped at [`RunOptions::backoff_cap`].
+    pub backoff_base: Duration,
+    /// Upper bound of the exponential backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            max_retries: 3,
+            deadline: None,
+            reject_nonfinite: false,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(16),
+        }
+    }
+}
+
+impl RunOptions {
+    /// The capped exponential delay before retry attempt `attempt`
+    /// (0-based): `base << attempt`, capped.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        crate::util::backoff_delay(self.backoff_base, self.backoff_cap, attempt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips() {
+        for spec in [
+            "seed:42:0.1",
+            "task:3:transient:2",
+            "task:7:permanent",
+            "seed:9:0.25,task:0:transient:1,task:4:permanent",
+        ] {
+            let plan: FaultPlan = spec.parse().unwrap();
+            assert_eq!(plan.to_string(), spec, "round trip of {spec}");
+            // and the canonical form re-parses to the same plan
+            let again: FaultPlan = plan.to_string().parse().unwrap();
+            assert_eq!(again, plan);
+        }
+        assert!(FaultPlan::new().is_empty());
+        assert_eq!(FaultPlan::new().to_string(), "none");
+        assert_eq!("none".parse::<FaultPlan>().unwrap(), FaultPlan::new());
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "seed:x:0.1",
+            "seed:1:2.0",
+            "task:one:permanent",
+            "task:3:sometimes",
+            "bogus",
+            "task:3",
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn armed_transient_consumes_exactly_n_failures() {
+        let plan = FaultPlan::new().transient(2, 2);
+        let armed = plan.arm(4);
+        assert_eq!(armed.planned(), 1);
+        assert!(armed.next_failure(0).is_none());
+        assert!(matches!(
+            armed.next_failure(2),
+            Some(FaultKind::Transient { .. })
+        ));
+        assert!(armed.next_failure(2).is_some());
+        assert!(armed.next_failure(2).is_none(), "budget exhausted");
+    }
+
+    #[test]
+    fn armed_permanent_fires_once() {
+        let armed = FaultPlan::new().permanent(1).arm(3);
+        assert_eq!(armed.next_failure(1), Some(FaultKind::Permanent));
+        assert!(armed.next_failure(1).is_none());
+    }
+
+    #[test]
+    fn out_of_range_explicit_faults_are_ignored() {
+        let armed = FaultPlan::new().transient(99, 1).arm(4);
+        assert_eq!(armed.planned(), 0);
+        assert!(armed.next_failure(3).is_none());
+    }
+
+    #[test]
+    fn seeded_sweep_is_deterministic_and_rate_shaped() {
+        let a = FaultPlan::seeded(7, 0.5).arm(64);
+        let b = FaultPlan::seeded(7, 0.5).arm(64);
+        for ti in 0..64 {
+            assert_eq!(a.kinds[ti], b.kinds[ti], "task {ti}");
+        }
+        assert!(a.planned() > 0, "rate 0.5 over 64 tasks hit nothing");
+        assert!(a.planned() < 64, "rate 0.5 over 64 tasks hit everything");
+        assert_eq!(FaultPlan::seeded(7, 0.0).arm(64).planned(), 0);
+        assert_eq!(FaultPlan::seeded(7, 1.0).arm(64).planned(), 64);
+        // a different seed draws a different subset (overwhelmingly)
+        let c = FaultPlan::seeded(8, 0.5).arm(64);
+        assert!(
+            (0..64).any(|ti| a.kinds[ti] != c.kinds[ti]),
+            "seeds 7 and 8 drew identical 64-task subsets"
+        );
+    }
+
+    #[test]
+    fn explicit_overrides_seeded() {
+        let plan = FaultPlan {
+            explicit: vec![(0, FaultKind::Permanent)],
+            seeded: Some((1, 1.0)),
+        };
+        let armed = plan.arm(2);
+        assert_eq!(armed.kinds[0], Some(FaultKind::Permanent));
+        assert_eq!(
+            armed.kinds[1],
+            Some(FaultKind::Transient { failures: 1 })
+        );
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let opts = RunOptions::default();
+        assert_eq!(opts.backoff(0), Duration::from_millis(1));
+        assert_eq!(opts.backoff(1), Duration::from_millis(2));
+        assert_eq!(opts.backoff(3), Duration::from_millis(8));
+        assert_eq!(opts.backoff(10), Duration::from_millis(16), "capped");
+        assert_eq!(opts.backoff(63), Duration::from_millis(16), "no overflow");
+    }
+}

@@ -14,8 +14,10 @@
 //! the TURNIP-style offloading that Experiment 4 (Fig. 11) exercises.
 
 pub mod cluster;
+pub mod faults;
 pub mod memory;
 pub mod network;
 
 pub use cluster::{Cluster, ExecMode, ExecReport};
+pub use faults::{FaultKind, FaultPlan, RunOptions};
 pub use network::{LinkClass, NetworkProfile, Topology};

@@ -96,13 +96,34 @@ pub struct Task {
 }
 
 impl Task {
-    /// The placed worker. Panics with a diagnosable message when the
-    /// graph has not been placed — modeling/execution of an unplaced
-    /// graph is a pipeline bug, not a recoverable condition.
+    /// The placed worker, for modeling/placement internals that only run
+    /// on validated graphs. An unplaced task is a pipeline bug there, so
+    /// debug builds panic with a diagnosable message; release builds fall
+    /// back to worker 0 (the *run* path never takes that fallback — it
+    /// reads placement through [`Task::worker_checked`] and surfaces a
+    /// typed [`ExecCause::Unplaced`](crate::error::ExecCause) instead).
     #[inline]
     pub fn assigned_worker(&self) -> usize {
-        self.worker
-            .unwrap_or_else(|| panic!("task {} used before placement", self.id.0))
+        debug_assert!(
+            self.worker.is_some(),
+            "task {} used before placement",
+            self.id.0
+        );
+        self.worker.unwrap_or(0)
+    }
+
+    /// The placed worker as a typed result — the run-path accessor.
+    /// Returns [`ExecCause::Unplaced`](crate::error::ExecCause) when
+    /// placement never ran, instead of panicking mid-execution.
+    #[inline]
+    pub fn worker_checked(&self) -> crate::error::Result<usize> {
+        self.worker.ok_or_else(|| {
+            crate::error::Error::exec_failure(
+                Some(self.id.0),
+                0,
+                crate::error::ExecCause::Unplaced,
+            )
+        })
     }
 }
 
@@ -206,6 +227,40 @@ impl TaskGraph {
 
     pub fn task(&self, id: TaskId) -> &Task {
         &self.tasks[id.0]
+    }
+
+    /// The lineage closure of `roots`: every task some root transitively
+    /// depends on, *including* the roots themselves, in ascending task-id
+    /// order (which is topological — ids are emitted topologically).
+    ///
+    /// This is the recovery executor's recompute set: when a root's tile
+    /// is gone, re-running its lineage in id order (skipping tasks whose
+    /// tiles survive) rebuilds it bitwise-identically, because the graph
+    /// is a pure function of its inputs and every task's fold order is
+    /// fixed by `deps`.
+    pub fn lineage(&self, roots: &[TaskId]) -> Vec<TaskId> {
+        let mut in_set = vec![false; self.tasks.len()];
+        let mut stack: Vec<usize> = Vec::new();
+        for r in roots {
+            if r.0 < self.tasks.len() && !in_set[r.0] {
+                in_set[r.0] = true;
+                stack.push(r.0);
+            }
+        }
+        while let Some(t) = stack.pop() {
+            for &d in &self.tasks[t].deps {
+                if !in_set[d.0] {
+                    in_set[d.0] = true;
+                    stack.push(d.0);
+                }
+            }
+        }
+        in_set
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m)
+            .map(|(i, _)| TaskId(i))
+            .collect()
     }
 
     /// Number of kernel-call tasks (the paper's unit of parallel work).
@@ -351,6 +406,36 @@ mod tests {
             assert_eq!(t.id.0, i);
             assert_eq!(t.worker, None);
         }
+    }
+
+    #[test]
+    fn lineage_closes_over_deps_in_id_order() {
+        let tg = tiny_graph();
+        // task 3 reads 2 (twice); 2 reads 0 and 1 — closure is everything
+        assert_eq!(
+            tg.lineage(&[TaskId(3)]),
+            vec![TaskId(0), TaskId(1), TaskId(2), TaskId(3)]
+        );
+        // a root with no deps is its own lineage
+        assert_eq!(tg.lineage(&[TaskId(1)]), vec![TaskId(1)]);
+        // duplicate + out-of-range roots are deduped / ignored
+        assert_eq!(
+            tg.lineage(&[TaskId(2), TaskId(2), TaskId(99)]),
+            vec![TaskId(0), TaskId(1), TaskId(2)]
+        );
+        assert!(tg.lineage(&[]).is_empty());
+    }
+
+    #[test]
+    fn worker_checked_is_typed_where_assigned_worker_asserts() {
+        let mut tg = tiny_graph();
+        let err = tg.tasks[2].worker_checked().unwrap_err();
+        let exec = err.as_exec().expect("typed exec error");
+        assert_eq!(exec.task, Some(2));
+        assert!(matches!(exec.cause, crate::error::ExecCause::Unplaced));
+        tg.tasks[2].worker = Some(3);
+        assert_eq!(tg.tasks[2].worker_checked().unwrap(), 3);
+        assert_eq!(tg.tasks[2].assigned_worker(), 3);
     }
 
     #[test]

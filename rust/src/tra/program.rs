@@ -844,6 +844,36 @@ impl TraProgram {
         self.nodes.is_empty()
     }
 
+    /// The IR-level lineage of relation `rel`: every relation it
+    /// transitively derives from (via each producing node's
+    /// [`TraOp::input_rels`]), including `rel` itself, in ascending
+    /// [`RelId`] order. This is the relational statement of the recovery
+    /// property the executor exploits at task granularity
+    /// (`TaskGraph::lineage`): a lost relation is a pure function of its
+    /// lineage inputs, so recomputing the closure rebuilds it exactly.
+    pub fn lineage(&self, rel: RelId) -> Vec<RelId> {
+        let mut in_set = vec![false; self.rels.len()];
+        if rel.0 >= self.rels.len() {
+            return vec![];
+        }
+        in_set[rel.0] = true;
+        // nodes are topological, so one reverse sweep closes the set:
+        // when a node's output is in the set, pull in its input rels.
+        for node in self.nodes.iter().rev() {
+            if in_set[node.out.0] {
+                for r in node.op.input_rels() {
+                    in_set[r.0] = true;
+                }
+            }
+        }
+        in_set
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m)
+            .map(|(i, _)| RelId(i))
+            .collect()
+    }
+
     /// Lower the program to a concrete, unplaced [`TaskGraph`].
     ///
     /// On an unoptimized program this reproduces the direct lowering
@@ -2082,6 +2112,25 @@ mod tests {
         plan.parts.insert(z, d);
         plan.finalize_inputs(g);
         plan
+    }
+
+    #[test]
+    fn lineage_closes_transitively_over_input_rels() {
+        let g = matmul_graph(8);
+        let prog = from_plan(&g, &plan_for(&g, vec![2, 2, 4])).unwrap();
+        // the Assemble output's lineage is every relation in the program
+        let last = prog.nodes().last().unwrap().out;
+        let all: Vec<RelId> = (0..prog.rels.len()).map(RelId).collect();
+        assert_eq!(prog.lineage(last), all);
+        // a Partition output has no producers upstream of itself
+        let first = prog.nodes().first().unwrap().out;
+        assert_eq!(prog.lineage(first), vec![first]);
+        // lineage is monotone along a producer chain
+        let mid = prog.nodes()[4].out; // the Join relation
+        let mid_lineage = prog.lineage(mid);
+        assert!(mid_lineage.contains(&first));
+        assert!(!mid_lineage.contains(&last));
+        assert!(prog.lineage(RelId(9999)).is_empty());
     }
 
     #[test]

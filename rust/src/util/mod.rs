@@ -60,6 +60,24 @@ impl Rng {
     }
 }
 
+/// Capped exponential backoff: the delay before retry `attempt`
+/// (0-based) is `base << attempt`, saturating at `cap`. A pure function
+/// so the same schedule drives both wall-clock sleeps in the recovery
+/// executor and virtual-time charges in the modeled ledger (see
+/// `sim::faults::RunOptions`).
+pub fn backoff_delay(
+    base: std::time::Duration,
+    cap: std::time::Duration,
+    attempt: u32,
+) -> std::time::Duration {
+    // shifting past 63 bits would overflow; anything that large is
+    // beyond any cap we would ever configure
+    let factor = 1u64.checked_shl(attempt).unwrap_or(u64::MAX);
+    base.checked_mul(factor.min(u32::MAX as u64) as u32)
+        .unwrap_or(cap)
+        .min(cap)
+}
+
 /// Run `f(chunk_index)` for `n` chunks on up to `threads` OS threads.
 /// A minimal data-parallel scatter used by the executor and benches.
 pub fn parallel_for<F>(n: usize, threads: usize, f: F)
@@ -901,6 +919,18 @@ mod tests {
             let v = r.next_f32();
             assert!((0.0..1.0).contains(&v));
         }
+    }
+
+    #[test]
+    fn backoff_delay_doubles_then_caps() {
+        use std::time::Duration;
+        let base = Duration::from_millis(1);
+        let cap = Duration::from_millis(16);
+        assert_eq!(backoff_delay(base, cap, 0), Duration::from_millis(1));
+        assert_eq!(backoff_delay(base, cap, 2), Duration::from_millis(4));
+        assert_eq!(backoff_delay(base, cap, 4), Duration::from_millis(16));
+        assert_eq!(backoff_delay(base, cap, 40), cap, "saturates");
+        assert_eq!(backoff_delay(base, cap, 200), cap, "no shift overflow");
     }
 
     #[test]

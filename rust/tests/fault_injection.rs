@@ -1,0 +1,286 @@
+//! Differential suite for fault-injected execution and lineage-based
+//! recovery.
+//!
+//! The recovery contract is *bitwise* equivalence: tasks are pure
+//! functions of their dependency tiles and every fold order is fixed by
+//! the task graph, so recomputing a reclaimed tile reproduces its exact
+//! bytes. This suite locks that in:
+//!
+//! * every bench workload (matrix chain, FFNN training step, one-layer
+//!   attention), for p in {2, 4, 8}, in BOTH real-execution modes,
+//!   survives a single injected fault at EVERY task index
+//!   (parity-alternating transient/permanent, plus a full both-kinds
+//!   sweep on the chain at p = 4) with outputs bitwise-identical to the
+//!   fault-free run and non-vacuous retry/recompute counters;
+//! * seeded multi-fault runs are deterministic and bitwise-clean;
+//! * a zero deadline returns a typed `DeadlineExceeded` error promptly,
+//!   with partial-progress stats attached;
+//! * a fault-free run reports zero recovery overhead and a ledger
+//!   identical to the precomputed model.
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::einsum::graph::{EinGraph, VertexId};
+use eindecomp::error::ExecCause;
+use eindecomp::models::ffnn::ffnn_step;
+use eindecomp::models::llama::{llama_graph, LlamaConfig};
+use eindecomp::models::matchain::chain_graph;
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::{Cluster, ExecMode, FaultPlan, NetworkProfile, RunOptions};
+use eindecomp::tensor::Tensor;
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn random_inputs(g: &EinGraph, seed: u64) -> HashMap<VertexId, Tensor> {
+    g.inputs()
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (v, Tensor::random(&g.vertex(v).bound, seed + i as u64)))
+        .collect()
+}
+
+/// Zero-backoff options so exhaustive sweeps do not sleep between
+/// retries (retry counting and recovery behaviour are unaffected; only
+/// the stall charge collapses to zero).
+fn fast_retries() -> RunOptions {
+    RunOptions {
+        backoff_base: Duration::ZERO,
+        backoff_cap: Duration::ZERO,
+        ..Default::default()
+    }
+}
+
+/// The exhaustive single-fault sweep for one workload: for every p and
+/// both exec modes, inject exactly one fault at every task index and
+/// require bitwise-identical outputs plus truthful counters. `kinds_at`
+/// picks which fault kinds to exercise at a given task index. Returns
+/// `(total_retries, total_recomputed)` so callers can assert the sweep
+/// was not vacuous.
+fn sweep_single_faults(
+    name: &str,
+    g: &EinGraph,
+    ps: &[usize],
+    kinds_at: fn(usize) -> &'static [bool],
+) -> (u64, u64) {
+    let engine = NativeEngine::new();
+    let roles = LabelRoles::by_convention();
+    let opts = fast_retries();
+    let mut total_retries = 0u64;
+    let mut total_recomputed = 0u64;
+    for &p in ps {
+        let plan = assign(g, &Strategy::EinDecomp, p, &roles).unwrap();
+        let inputs = random_inputs(g, 700 + p as u64);
+        // Lower + model once per (workload, p): the frozen task graph is
+        // reusable across every faulted run (compile-once / run-many).
+        let base_cluster = Cluster::new(p, NetworkProfile::loopback());
+        let tg = base_cluster.lower(g, &plan).unwrap();
+        let model = base_cluster.model(&tg);
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            let clean_cluster =
+                Cluster::new(p, NetworkProfile::loopback()).with_exec_mode(mode);
+            let (clean, clean_rep) = clean_cluster
+                .run_lowered_modeled_opts(g, &plan, &tg, &model, &engine, &inputs, &opts)
+                .unwrap();
+            assert_eq!(clean_rep.faults_injected, 0, "{name} p={p} {mode:?}");
+            assert_eq!(clean_rep.retries, 0, "{name} p={p} {mode:?}");
+            for ti in 0..tg.tasks.len() {
+                for &permanent in kinds_at(ti) {
+                    let fp = if permanent {
+                        FaultPlan::new().permanent(ti)
+                    } else {
+                        FaultPlan::new().transient(ti, 1)
+                    };
+                    let cluster = Cluster::new(p, NetworkProfile::loopback())
+                        .with_exec_mode(mode)
+                        .with_faults(fp);
+                    let (outs, rep) = cluster
+                        .run_lowered_modeled_opts(g, &plan, &tg, &model, &engine, &inputs, &opts)
+                        .unwrap();
+                    let tag = format!(
+                        "{name} p={p} {mode:?} task {ti} {}",
+                        if permanent { "permanent" } else { "transient" }
+                    );
+                    for out in g.outputs() {
+                        assert_eq!(
+                            clean[&out], outs[&out],
+                            "{tag}: recovery diverged bitwise from the fault-free run"
+                        );
+                    }
+                    assert_eq!(rep.faults_injected, 1, "{tag}");
+                    assert!(rep.retries >= 1, "{tag}: fault recovered without a retry");
+                    if permanent {
+                        assert_eq!(rep.workers_lost, 1, "{tag}");
+                    } else {
+                        assert_eq!(rep.workers_lost, 0, "{tag}");
+                        assert_eq!(rep.recovery_bytes, 0, "{tag}: transient faults move no bytes");
+                    }
+                    total_retries += rep.retries;
+                    total_recomputed += rep.recomputed_tasks;
+                }
+            }
+        }
+    }
+    (total_retries, total_recomputed)
+}
+
+/// Parity-alternating kind choice: even task ids take a transient fault,
+/// odd ones a permanent worker death — every index is hit, both kinds
+/// are exercised across the sweep.
+fn parity(ti: usize) -> &'static [bool] {
+    if ti % 2 == 0 {
+        &[false]
+    } else {
+        &[true]
+    }
+}
+
+/// Both kinds at every index — the full cross product.
+fn both(_ti: usize) -> &'static [bool] {
+    &[false, true]
+}
+
+#[test]
+fn matchain_exhaustive_both_kinds_p4() {
+    let chain = chain_graph(24, false).unwrap();
+    let (retries, recomputed) = sweep_single_faults("matchain", &chain.graph, &[4], both);
+    assert!(retries > 0, "sweep never retried (vacuous)");
+    assert!(recomputed > 0, "no worker death ever forced a lineage recompute");
+}
+
+#[test]
+fn matchain_single_fault_every_index() {
+    let chain = chain_graph(24, false).unwrap();
+    let (retries, recomputed) = sweep_single_faults("matchain", &chain.graph, &[2, 4, 8], parity);
+    assert!(retries > 0, "sweep never retried (vacuous)");
+    assert!(recomputed > 0, "no worker death ever forced a lineage recompute");
+}
+
+#[test]
+fn ffnn_single_fault_every_index() {
+    let ffnn = ffnn_step(32, 48, 24, 8).unwrap();
+    let (retries, _) = sweep_single_faults("ffnn", &ffnn.graph, &[2, 4, 8], parity);
+    assert!(retries > 0, "sweep never retried (vacuous)");
+}
+
+#[test]
+fn attention_single_fault_every_index() {
+    let cfg = LlamaConfig {
+        layers: 1,
+        batch: 2,
+        seq: 16,
+        model_dim: 32,
+        heads: 2,
+        head_dim: 16,
+        ffn_dim: 64,
+    };
+    let attn = llama_graph(&cfg).unwrap();
+    let (retries, _) = sweep_single_faults("attention", &attn.graph, &[2, 4, 8], parity);
+    assert!(retries > 0, "sweep never retried (vacuous)");
+}
+
+#[test]
+fn seeded_multi_fault_runs_are_deterministic_and_bitwise() {
+    let chain = chain_graph(24, false).unwrap();
+    let g = &chain.graph;
+    let engine = NativeEngine::new();
+    let roles = LabelRoles::by_convention();
+    let opts = fast_retries();
+    let plan = assign(g, &Strategy::EinDecomp, 4, &roles).unwrap();
+    let inputs = random_inputs(g, 1300);
+    let base_cluster = Cluster::new(4, NetworkProfile::loopback());
+    let tg = base_cluster.lower(g, &plan).unwrap();
+    let model = base_cluster.model(&tg);
+    let (clean, _) = base_cluster
+        .run_lowered_modeled_opts(g, &plan, &tg, &model, &engine, &inputs, &opts)
+        .unwrap();
+    let mut any_fault = false;
+    for seed in [7u64, 23, 91] {
+        // fault arming is a pure function of (seed, rate, task count):
+        // both exec modes must inject the same fault count
+        let mut injected_by_mode = Vec::new();
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            let cluster = Cluster::new(4, NetworkProfile::loopback())
+                .with_exec_mode(mode)
+                .with_faults(FaultPlan::new().seeded(seed, 0.3));
+            let (outs, rep) = cluster
+                .run_lowered_modeled_opts(g, &plan, &tg, &model, &engine, &inputs, &opts)
+                .unwrap();
+            for out in g.outputs() {
+                assert_eq!(clean[&out], outs[&out], "seed {seed} {mode:?}");
+            }
+            assert!(rep.retries >= rep.faults_injected, "seed {seed} {mode:?}");
+            injected_by_mode.push(rep.faults_injected);
+            any_fault |= rep.faults_injected > 0;
+        }
+        assert_eq!(
+            injected_by_mode[0], injected_by_mode[1],
+            "seed {seed}: injected fault count must be schedule-independent"
+        );
+    }
+    assert!(any_fault, "rate 0.3 across three seeds never armed a fault (vacuous)");
+}
+
+#[test]
+fn deadline_exceeded_is_typed_and_prompt() {
+    let chain = chain_graph(24, false).unwrap();
+    let g = &chain.graph;
+    let engine = NativeEngine::new();
+    let roles = LabelRoles::by_convention();
+    let plan = assign(g, &Strategy::EinDecomp, 4, &roles).unwrap();
+    let inputs = random_inputs(g, 1700);
+    let cluster = Cluster::new(4, NetworkProfile::loopback());
+    let opts = RunOptions {
+        deadline: Some(Duration::ZERO),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let err = cluster
+        .execute_opts(g, &plan, &engine, &inputs, &opts)
+        .unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline error took {:?} to surface",
+        t0.elapsed()
+    );
+    assert!(err.is_deadline(), "{err}");
+    match &err.as_exec().unwrap().cause {
+        ExecCause::DeadlineExceeded { total, completed, .. } => {
+            assert!(*total > 0);
+            assert!(completed <= total);
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+}
+
+#[test]
+fn fault_free_run_reports_zero_recovery_overhead() {
+    let chain = chain_graph(24, false).unwrap();
+    let g = &chain.graph;
+    let engine = NativeEngine::new();
+    let roles = LabelRoles::by_convention();
+    let plan = assign(g, &Strategy::EinDecomp, 4, &roles).unwrap();
+    let inputs = random_inputs(g, 2100);
+    let cluster = Cluster::new(4, NetworkProfile::loopback());
+    let tg = cluster.lower(g, &plan).unwrap();
+    let model = cluster.model(&tg);
+    let (first, rep) = cluster
+        .run_lowered(g, &plan, &tg, &engine, &inputs)
+        .unwrap();
+    // zero recovery overhead, ledger identical to the precomputed model
+    assert_eq!(rep.faults_injected, 0);
+    assert_eq!(rep.retries, 0);
+    assert_eq!(rep.recomputed_tasks, 0);
+    assert_eq!(rep.recovery_bytes, 0);
+    assert_eq!(rep.workers_lost, 0);
+    assert_eq!(rep.recovery_stall_s, 0.0);
+    assert!(rep.recovery_by_link.is_empty());
+    assert_eq!(rep.sim_makespan_s, model.sim_makespan_s);
+    assert_eq!(rep.bytes_moved, model.bytes_moved);
+    assert_eq!(rep.bytes_repart, model.bytes_repart);
+    // and bitwise-reproducible across calls
+    let (second, _) = cluster
+        .run_lowered(g, &plan, &tg, &engine, &inputs)
+        .unwrap();
+    for out in g.outputs() {
+        assert_eq!(first[&out], second[&out]);
+    }
+}
