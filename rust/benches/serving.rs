@@ -1,11 +1,21 @@
-//! Serving-path benchmark: cold per-call `Driver::run` (re-plans and
-//! re-lowers every request) versus the compile-once / run-many `Session`
-//! path (`compile` once, `Executable::run` per request) on the Experiment-1
-//! matchain graph. Reports amortized request throughput — the cached
-//! path's amortization *includes* its one-time compile — and asserts the
-//! two paths produce bitwise-identical outputs. Timings are written to
-//! `BENCH_serving.json` (uploaded as a CI artifact alongside
-//! `BENCH_micro.json`). `EINDECOMP_SMOKE=1` caps the configuration for CI.
+//! Serving-path benchmark, two halves:
+//!
+//! 1. Cold per-call `Driver::run` (re-plans and re-lowers every request)
+//!    versus the compile-once / run-many `Session` path on the
+//!    Experiment-1 matchain graph — amortized request throughput, with
+//!    the cached path's amortization *including* its one-time compile,
+//!    and a bitwise-identity assertion between the two paths.
+//! 2. Multi-tenant serving arms: a closed-loop load generator drives
+//!    `serve::Server` with batching off (`solo`) and on (`batched`,
+//!    max_batch 8) across serving pool sizes, reporting p50/p95/p99
+//!    latency and req/s per arm. Every arm's XOR-combined output
+//!    checksum must equal the solo-reference XOR (bitwise parity), and
+//!    the best batched arm must beat the best solo arm by >= 1.5x
+//!    req/s (asserted here; the JSON schema is validated in CI by
+//!    `scripts/check_serving_json.py`).
+//!
+//! Results land in `BENCH_serving.json` (uploaded as a CI artifact).
+//! `EINDECOMP_SMOKE=1` caps scales, request counts, and pool sizes.
 //!
 //! ```sh
 //! cargo bench --bench serving
@@ -15,8 +25,12 @@ use eindecomp::coordinator::driver::{Driver, DriverConfig, PlanProvenance};
 use eindecomp::coordinator::session::Session;
 use eindecomp::models::matchain::{chain_graph, chain_inputs};
 use eindecomp::runtime::Backend;
+use eindecomp::serve::{output_checksum, run_load, LoadConfig, ServeConfig, Server};
 use eindecomp::sim::NetworkProfile;
 use eindecomp::util::Json;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let smoke = std::env::var("EINDECOMP_SMOKE")
@@ -95,6 +109,155 @@ fn main() {
     let speedup = warm_rps_amortized / cold_rps;
     println!("amortized speedup (cached / per-call): {speedup:.2}x  (acceptance gate: >= 1.3x)");
 
+    // --- multi-tenant serving arms: solo vs dynamic batching -----------
+    // Smaller graph than the cold/cached half on purpose: dynamic
+    // batching pays off by amortizing per-execution overhead (scheduler
+    // scope spawn, repartitioning, result plumbing) and by handing the
+    // kernels batch entries to shard across — the short-request regime
+    // a serving tier actually sees.
+    println!("=== serving: multi-tenant load, solo vs dynamic batching{tag} ===");
+    let serve_scale = if smoke { 32 } else { 48 };
+    let clients = if smoke { 8 } else { 16 };
+    let per_client = if smoke { 4 } else { 8 };
+    let worker_arms: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let window = Duration::from_millis(2);
+    let serve_driver = DriverConfig {
+        workers: 2,
+        p: 2,
+        backend: Backend::Native,
+        network: NetworkProfile::loopback(),
+        ..Default::default()
+    };
+    let serve_chain = chain_graph(serve_scale, false).unwrap();
+    let seeds: Vec<u64> = (0..8u64).map(|s| 500 + s).collect();
+    let seed_at = |c: usize, i: usize| seeds[(c * per_client + i) % seeds.len()];
+
+    // solo references: one direct run per distinct seed, XORed over the
+    // exact request multiset every arm will issue
+    let ref_session = Session::new(serve_driver.clone()).unwrap();
+    let ref_exe = ref_session.compile(&serve_chain.graph).unwrap();
+    let per_seed: HashMap<u64, u64> = seeds
+        .iter()
+        .map(|&s| {
+            let (outs, _) = ref_exe.run(&chain_inputs(&serve_chain, s)).unwrap();
+            (s, output_checksum(&outs))
+        })
+        .collect();
+    let mut expected = 0u64;
+    for c in 0..clients {
+        for i in 0..per_client {
+            expected ^= per_seed[&seed_at(c, i)];
+        }
+    }
+
+    let mut arms = Vec::new();
+    let mut best_solo: f64 = 0.0;
+    let mut best_batched: f64 = 0.0;
+    for &sw in worker_arms {
+        for (mode, max_batch) in [("solo", 1usize), ("batched", 8usize)] {
+            let session = Arc::new(Session::new(serve_driver.clone()).unwrap());
+            let server = Server::with_session(
+                Arc::clone(&session),
+                ServeConfig {
+                    serve_workers: sw,
+                    max_batch,
+                    batch_window: window,
+                    ..Default::default()
+                },
+            );
+            // warmup primes the compile cache and kernel buffer pools
+            server
+                .run(
+                    "warmup",
+                    &serve_chain.graph,
+                    chain_inputs(&serve_chain, seeds[0]),
+                )
+                .unwrap();
+            let load = LoadConfig {
+                clients,
+                requests_per_client: per_client,
+            };
+            let report = run_load(&server, &load, |c, i| {
+                (
+                    format!("tenant-{c}"),
+                    serve_chain.graph.clone(),
+                    chain_inputs(&serve_chain, seed_at(c, i)),
+                )
+            })
+            .unwrap();
+            server.shutdown();
+            assert_eq!(
+                report.rejected, 0,
+                "{mode} x{sw}: load run must not reject under default queue depth"
+            );
+            assert_eq!(
+                report.checksum, expected,
+                "{mode} x{sw}: served outputs are not bitwise-identical to solo runs"
+            );
+            if mode == "solo" {
+                assert_eq!(report.max_batched_with, 1, "solo arm must not coalesce");
+                best_solo = best_solo.max(report.req_per_s);
+            } else {
+                best_batched = best_batched.max(report.req_per_s);
+            }
+            println!(
+                "serve {mode:>7} x{sw} workers: {:8.1} req/s  p50 {:6.2} p95 {:6.2} p99 {:6.2} ms  \
+                 mean batch {:.2} (max {})",
+                report.req_per_s,
+                report.latency.p50_ms,
+                report.latency.p95_ms,
+                report.latency.p99_ms,
+                report.mean_batched_with,
+                report.max_batched_with
+            );
+            let mut fields = vec![
+                ("mode".to_string(), Json::str(mode)),
+                ("serve_workers".to_string(), Json::num(sw as f64)),
+                ("max_batch".to_string(), Json::num(max_batch as f64)),
+            ];
+            if let Json::Obj(rep_fields) = report.to_json() {
+                fields.extend(rep_fields);
+            }
+            arms.push(Json::Obj(fields));
+        }
+    }
+    let serving_speedup = best_batched / best_solo;
+    println!(
+        "dynamic batching speedup (best batched / best solo): {serving_speedup:.2}x  \
+         (acceptance gate: >= 1.5x)"
+    );
+    assert!(
+        serving_speedup >= 1.5,
+        "dynamic batching gate failed: {serving_speedup:.2}x < 1.5x \
+         (best batched {best_batched:.1} req/s, best solo {best_solo:.1} req/s)"
+    );
+    let serving_json = Json::Obj(vec![
+        ("workload".to_string(), Json::str("matchain")),
+        ("scale".to_string(), Json::num(serve_scale as f64)),
+        ("clients".to_string(), Json::num(clients as f64)),
+        (
+            "requests_per_client".to_string(),
+            Json::num(per_client as f64),
+        ),
+        (
+            "batch_window_ms".to_string(),
+            Json::num(window.as_secs_f64() * 1e3),
+        ),
+        (
+            "expected_checksum".to_string(),
+            Json::str(format!("{expected:016x}")),
+        ),
+        ("arms".to_string(), Json::Arr(arms)),
+        ("best_solo_req_per_s".to_string(), Json::num(best_solo)),
+        (
+            "best_batched_req_per_s".to_string(),
+            Json::num(best_batched),
+        ),
+        ("batched_speedup".to_string(), Json::num(serving_speedup)),
+        ("parity_ok".to_string(), Json::Bool(true)),
+        ("gate_1_5x".to_string(), Json::Bool(serving_speedup >= 1.5)),
+    ]);
+
     let entry = |mode: &str, total: f64, rps: f64, extra: Vec<(String, Json)>| {
         let mut fields = vec![
             ("workload".to_string(), Json::str("matchain")),
@@ -133,6 +296,7 @@ fn main() {
         ),
         ("speedup_amortized".to_string(), Json::num(speedup)),
         ("bitwise_identical".to_string(), Json::Bool(true)),
+        ("serving".to_string(), serving_json),
     ]);
     std::fs::write("BENCH_serving.json", report.render()).expect("write BENCH_serving.json");
     println!("wrote BENCH_serving.json");

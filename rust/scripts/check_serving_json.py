@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Validate BENCH_serving.json's latency/throughput schema.
+
+CI gate for the multi-tenant serving bench: the legacy cold-vs-cached
+section must carry well-formed throughput entries and a >= 1.3x
+amortized speedup, and the `serving` section must report solo and
+batched load arms for every serving pool size, each with nearest-rank
+latency percentiles (p50 <= p95 <= p99), a non-negative request ledger
+that adds up, zero rejections, and an output checksum equal to the
+solo-reference XOR (bitwise parity). The batched-vs-solo speedup must
+meet the 1.5x gate the bench itself asserts.
+
+Usage: check_serving_json.py [BENCH_serving.json]
+"""
+
+import json
+import sys
+
+ARM_FIELDS = [
+    "mode",
+    "serve_workers",
+    "max_batch",
+    "requests",
+    "completed",
+    "rejected",
+    "elapsed_s",
+    "req_per_s",
+    "latency",
+    "max_batched_with",
+    "mean_batched_with",
+    "checksum",
+]
+
+LATENCY_FIELDS = ["p50_ms", "p95_ms", "p99_ms", "mean_ms"]
+
+
+def fail(msg: str) -> None:
+    print(f"check_serving_json: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def is_int_valued(v) -> bool:
+    return is_num(v) and float(v) == int(v)
+
+
+def load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} not found (did the serving bench run?)")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+
+def check_legacy(doc) -> None:
+    for key in ("driver_per_call", "session_cached"):
+        entry = doc.get(key)
+        if not isinstance(entry, dict):
+            fail(f"missing or malformed {key!r} entry")
+        for field in ("workload", "mode"):
+            if not isinstance(entry.get(field), str):
+                fail(f"{key}.{field} must be a string")
+        for field in ("total_s", "ms_per_run", "runs_per_s"):
+            if not is_num(entry.get(field)) or entry[field] < 0:
+                fail(f"{key}.{field} must be a non-negative number")
+    if not is_num(doc.get("speedup_amortized")):
+        fail("speedup_amortized must be a number")
+    if doc["speedup_amortized"] < 1.3:
+        fail(
+            "amortized cached-vs-cold speedup "
+            f"{doc['speedup_amortized']:.2f}x below the 1.3x gate"
+        )
+    if doc.get("bitwise_identical") is not True:
+        fail("bitwise_identical must be true")
+
+
+def check_arm(arm, expected_checksum: str) -> str:
+    for field in ARM_FIELDS:
+        if field not in arm:
+            fail(f"serving arm missing field {field!r}: {arm}")
+    mode = arm["mode"]
+    if mode not in ("solo", "batched"):
+        fail(f"unknown serving arm mode {mode!r}")
+    for field in ("serve_workers", "max_batch", "requests", "completed", "rejected"):
+        if not is_int_valued(arm[field]) or arm[field] < 0:
+            fail(f"arm {mode}: {field} must be a non-negative integer")
+    if arm["serve_workers"] < 1:
+        fail(f"arm {mode}: serve_workers must be >= 1")
+    if arm["rejected"] != 0:
+        fail(f"arm {mode} x{arm['serve_workers']}: {arm['rejected']} rejected requests")
+    if arm["completed"] != arm["requests"]:
+        fail(
+            f"arm {mode} x{arm['serve_workers']}: completed {arm['completed']} "
+            f"!= requests {arm['requests']}"
+        )
+    if not is_num(arm["req_per_s"]) or arm["req_per_s"] <= 0:
+        fail(f"arm {mode} x{arm['serve_workers']}: req_per_s must be positive")
+    lat = arm["latency"]
+    if not isinstance(lat, dict):
+        fail(f"arm {mode}: latency must be an object")
+    for field in LATENCY_FIELDS:
+        if not is_num(lat.get(field)) or lat[field] < 0:
+            fail(f"arm {mode}: latency.{field} must be a non-negative number")
+    if not lat["p50_ms"] <= lat["p95_ms"] <= lat["p99_ms"]:
+        fail(
+            f"arm {mode} x{arm['serve_workers']}: percentiles not monotone "
+            f"(p50 {lat['p50_ms']}, p95 {lat['p95_ms']}, p99 {lat['p99_ms']})"
+        )
+    if not is_int_valued(arm["max_batched_with"]) or arm["max_batched_with"] < 1:
+        fail(f"arm {mode}: max_batched_with must be >= 1")
+    if mode == "solo" and arm["max_batched_with"] != 1:
+        fail("solo arm reports coalesced requests")
+    if not is_num(arm["mean_batched_with"]) or not (
+        1.0 <= arm["mean_batched_with"] <= arm["max_batched_with"]
+    ):
+        fail(f"arm {mode}: mean_batched_with out of [1, max_batched_with]")
+    if arm["checksum"] != expected_checksum:
+        fail(
+            f"arm {mode} x{arm['serve_workers']}: checksum {arm['checksum']} "
+            f"!= solo reference {expected_checksum} (bitwise parity broken)"
+        )
+    return mode
+
+
+def check_serving(doc) -> None:
+    serving = doc.get("serving")
+    if not isinstance(serving, dict):
+        fail("missing 'serving' section")
+    for field in ("workload", "expected_checksum"):
+        if not isinstance(serving.get(field), str):
+            fail(f"serving.{field} must be a string")
+    for field in ("scale", "clients", "requests_per_client"):
+        if not is_int_valued(serving.get(field)) or serving[field] < 1:
+            fail(f"serving.{field} must be a positive integer")
+    if not is_num(serving.get("batch_window_ms")) or serving["batch_window_ms"] < 0:
+        fail("serving.batch_window_ms must be a non-negative number")
+    arms = serving.get("arms")
+    if not isinstance(arms, list) or not arms:
+        fail("serving.arms must be a non-empty array")
+    expected = serving["expected_checksum"]
+    modes_by_workers = {}
+    for arm in arms:
+        if not isinstance(arm, dict):
+            fail("serving.arms entries must be objects")
+        mode = check_arm(arm, expected)
+        modes_by_workers.setdefault(int(arm["serve_workers"]), set()).add(mode)
+    for workers, modes in sorted(modes_by_workers.items()):
+        if modes != {"solo", "batched"}:
+            fail(f"serving pool size {workers} missing an arm: has {sorted(modes)}")
+    for field in ("best_solo_req_per_s", "best_batched_req_per_s", "batched_speedup"):
+        if not is_num(serving.get(field)) or serving[field] <= 0:
+            fail(f"serving.{field} must be a positive number")
+    best_solo = max(a["req_per_s"] for a in arms if a["mode"] == "solo")
+    best_batched = max(a["req_per_s"] for a in arms if a["mode"] == "batched")
+    ratio = best_batched / best_solo
+    if abs(serving["batched_speedup"] - ratio) > 1e-6 * max(1.0, ratio):
+        fail(
+            f"serving.batched_speedup {serving['batched_speedup']} does not match "
+            f"the arms ({ratio:.4f})"
+        )
+    if serving.get("parity_ok") is not True:
+        fail("serving.parity_ok must be true")
+    if serving.get("gate_1_5x") is not True:
+        fail("serving.gate_1_5x must be true")
+    if serving["batched_speedup"] < 1.5:
+        fail(
+            f"dynamic batching speedup {serving['batched_speedup']:.2f}x "
+            "below the 1.5x gate"
+        )
+    print(
+        "check_serving_json: OK "
+        f"({len(arms)} arms over pool sizes {sorted(modes_by_workers)}, "
+        f"batched speedup {serving['batched_speedup']:.2f}x, parity verified)"
+    )
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serving.json"
+    doc = load(path)
+    if not isinstance(doc, dict):
+        fail("top-level JSON must be an object")
+    check_legacy(doc)
+    check_serving(doc)
+
+
+if __name__ == "__main__":
+    main()

@@ -145,6 +145,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
     match args.cmd.as_str() {
         "plan" => cmd_plan(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "explain" => cmd_explain(&args),
         "program" => cmd_program(&args),
         _ => {
@@ -263,8 +264,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (plan_s, lower_s) = exe.compile_times();
     let t1 = std::time::Instant::now();
     let mut last = None;
+    let mut run_ms = Vec::with_capacity(repeat);
     for _ in 0..repeat {
+        let t = std::time::Instant::now();
         last = Some(exe.run(&inputs)?);
+        run_ms.push(t.elapsed().as_secs_f64() * 1e3);
     }
     let run_s = t1.elapsed().as_secs_f64();
     let (outs, rep) = last.expect("repeat >= 1");
@@ -284,33 +288,153 @@ fn cmd_run(args: &Args) -> Result<()> {
             run_s * 1e3 / repeat as f64,
             repeat as f64 / (compile_s + run_s)
         );
+        println!(
+            "run latency    : p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms (nearest-rank)",
+            crate::util::percentile(&run_ms, 50.0),
+            crate::util::percentile(&run_ms, 95.0),
+            crate::util::percentile(&run_ms, 99.0),
+        );
     }
     println!("report         : {}", rep.exec.summary());
     // Bitwise fingerprint of every output tensor — `scripts/chaos_smoke.sh`
     // diffs this between clean and fault-injected runs.
-    println!("output checksum: {:016x}", output_checksum(&outs));
+    println!(
+        "output checksum: {:016x}",
+        crate::serve::output_checksum(&outs)
+    );
     println!("json           : {}", rep.to_json().render());
     Ok(())
 }
 
-/// FNV-1a over the outputs in vertex-id order: shape dims, then the raw
-/// f32 bit patterns. Equal iff the outputs are bitwise-identical.
-fn output_checksum(outs: &HashMap<crate::einsum::graph::VertexId, Tensor>) -> u64 {
-    const PRIME: u64 = 0x100000001b3;
-    let mut ids: Vec<_> = outs.keys().copied().collect();
-    ids.sort_by_key(|v| v.0);
-    let mut h: u64 = 0xcbf29ce484222325;
-    for vid in ids {
-        h = (h ^ vid.0 as u64).wrapping_mul(PRIME);
-        let t = &outs[&vid];
-        for &d in t.shape() {
-            h = (h ^ d as u64).wrapping_mul(PRIME);
-        }
-        for &v in t.data() {
-            h = (h ^ u64::from(v.to_bits())).wrapping_mul(PRIME);
+/// `serve`: stand up a multi-tenant [`Server`](crate::serve::Server)
+/// over the model and drive it with the closed-loop load generator —
+/// the serving shape of the pipeline with admission control and
+/// signature-keyed dynamic batching. `--verify` precomputes solo
+/// reference checksums and fails the command unless the served outputs
+/// are bitwise-identical and nothing was rejected.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use super::driver::DriverConfig;
+    use super::session::Session;
+    use crate::serve::{output_checksum, run_load, LoadConfig, ServeConfig, Server};
+    let g = build_model(args)?;
+    let workers = args.get_usize("workers", 2);
+    let cfg = DriverConfig {
+        workers,
+        p: args.get_usize("p", workers),
+        strategy: strategy_by_name(args.get("strategy").unwrap_or("eindecomp"))?,
+        ..Default::default()
+    };
+    let session = std::sync::Arc::new(Session::new(cfg)?);
+    let max_batch = if args.get_bool("no-batch") {
+        1
+    } else {
+        args.get_usize("max-batch", 8)
+    };
+    let window_ms = args.get_usize("batch-window-ms", 2) as u64;
+    let serve_cfg = ServeConfig {
+        serve_workers: args.get_usize("serve-workers", 2),
+        max_batch,
+        batch_window: std::time::Duration::from_millis(window_ms),
+        max_queue_depth: args.get_usize("queue-depth", 1024),
+        autostart: true,
+    };
+    let tenants = args.get_usize("tenants", 4).max(1);
+    let requests = args.get_usize("requests", 64).max(1);
+    let per_client = requests.div_ceil(tenants);
+    // a small pool of distinct input seeds cycles across requests so
+    // --verify can precompute one solo reference per seed
+    let seeds: Vec<u64> = (0..8u64).map(|s| 1000 + s).collect();
+    let seed_at = |c: usize, i: usize| seeds[(c * per_client + i) % seeds.len()];
+    let verify = args.get_bool("verify");
+    let mut expected = 0u64;
+    if verify {
+        let exe = session.compile(&g)?;
+        let mut per_seed: HashMap<u64, u64> = HashMap::new();
+        for c in 0..tenants {
+            for i in 0..per_client {
+                let seed = seed_at(c, i);
+                let cs = match per_seed.get(&seed) {
+                    Some(&cs) => cs,
+                    None => {
+                        let (outs, _) = exe.run(&model_inputs(&g, seed))?;
+                        let cs = output_checksum(&outs);
+                        per_seed.insert(seed, cs);
+                        cs
+                    }
+                };
+                expected ^= cs;
+            }
         }
     }
-    h
+    let server = Server::with_session(std::sync::Arc::clone(&session), serve_cfg);
+    let load = LoadConfig {
+        clients: tenants,
+        requests_per_client: per_client,
+    };
+    let report = run_load(&server, &load, |c, i| {
+        (
+            format!("tenant-{c}"),
+            g.clone(),
+            model_inputs(&g, seed_at(c, i)),
+        )
+    })?;
+    let stats = server.serve_stats();
+    server.shutdown();
+    println!(
+        "served         : {}/{} requests from {tenants} tenants ({} rejected)",
+        report.completed, report.requests, report.rejected
+    );
+    println!(
+        "throughput     : {:.1} req/s over {:.2} s",
+        report.req_per_s, report.elapsed_s
+    );
+    println!(
+        "latency        : p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+        report.latency.p50_ms, report.latency.p95_ms, report.latency.p99_ms
+    );
+    println!(
+        "batching       : {} coalesced executions covering {} requests (mean {:.2}, max {})",
+        stats.batches, stats.batched_requests, report.mean_batched_with, report.max_batched_with
+    );
+    let cache = session.stats();
+    println!(
+        "compile cache  : {} compiles, {} hits, {} entries",
+        cache.compiles, cache.hits, cache.entries
+    );
+    println!("output checksum: {:016x}", report.checksum);
+    if verify {
+        if report.rejected != 0 {
+            return Err(Error::Exec(format!(
+                "serve --verify: {} of {} requests rejected",
+                report.rejected, report.requests
+            )));
+        }
+        if report.checksum != expected {
+            return Err(Error::Exec(format!(
+                "serve --verify: served checksum {:016x} != solo reference {expected:016x}",
+                report.checksum
+            )));
+        }
+        println!(
+            "verify         : ok ({} served outputs bitwise-identical to solo runs)",
+            report.completed
+        );
+    }
+    println!("json           : {}", report.to_json().render());
+    Ok(())
+}
+
+/// Seeded random inputs for every graph input (seed varies per vertex
+/// so twin inputs differ).
+fn model_inputs(
+    g: &crate::einsum::graph::EinGraph,
+    seed: u64,
+) -> HashMap<crate::einsum::graph::VertexId, Tensor> {
+    g.inputs()
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (v, Tensor::random(&g.vertex(v).bound, seed + i as u64)))
+        .collect()
 }
 
 /// `explain`: compile the model through the Session pipeline and print
@@ -400,6 +524,18 @@ USAGE:
                     [--deadline-ms N]   (whole-run deadline; exceeding it
                                          is a typed error with partial
                                          progress stats)
+  eindecomp serve   --model ... [--workers N] [--p N] [--strategy S]
+                    [--serve-workers N]  (serving pool threads, default 2)
+                    [--tenants N]        (closed-loop clients, default 4)
+                    [--requests N]       (total requests, default 64)
+                    [--max-batch N]      (dynamic batching cap, default 8)
+                    [--batch-window-ms N] [--queue-depth N] [--no-batch]
+                    [--verify]           (fail unless served outputs are
+                                          bitwise-identical to solo runs
+                                          and nothing was rejected)
+                    (multi-tenant serving: shared compile cache, fair
+                     per-tenant queue, signature-keyed dynamic batching;
+                     prints p50/p95/p99 latency and req/s)
   eindecomp explain --model ... [--workers N] [--p N] [--strategy S]
                     [--passes ...] [--topology ...] [--json]
                     (print the TRA program, pass change log, and modeled
@@ -454,6 +590,31 @@ mod tests {
         let argv: Vec<String> = [
             "run", "--model", "chain", "--scale", "24", "--workers", "2", "--p", "2",
             "--repeat", "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn serve_command_verifies_bitwise_parity() {
+        let argv: Vec<String> = [
+            "serve", "--model", "chain", "--scale", "24", "--workers", "2", "--p", "2",
+            "--serve-workers", "2", "--tenants", "3", "--requests", "9", "--verify",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn serve_command_no_batch_arm() {
+        let argv: Vec<String> = [
+            "serve", "--model", "chain", "--scale", "24", "--workers", "2", "--p", "2",
+            "--serve-workers", "1", "--tenants", "2", "--requests", "4", "--no-batch",
+            "--verify",
         ]
         .iter()
         .map(|s| s.to_string())

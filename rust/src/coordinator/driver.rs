@@ -144,6 +144,14 @@ pub struct RunReport {
     /// lowered (in pipeline order) — so sweeps can attribute wins to
     /// specific rewrites.
     pub passes: Vec<String>,
+    /// How many requests shared the execution that produced this report.
+    /// `1` for every direct run; the serving batcher sets the coalesced
+    /// batch size when it splits one batched execution back into
+    /// per-request reports (see [`crate::serve`]).
+    pub batched_with: usize,
+    /// Seconds the request waited in the serving queue (admission to
+    /// execution start). `0.0` for direct runs that never queued.
+    pub queue_wait_s: f64,
     pub exec: ExecReport,
 }
 
@@ -161,6 +169,11 @@ impl RunReport {
                 "passes".into(),
                 Json::Arr(self.passes.iter().map(|p| Json::str(p.clone())).collect()),
             ),
+            (
+                "batched_with".into(),
+                Json::num(self.batched_with as f64),
+            ),
+            ("queue_wait_s".into(), Json::num(self.queue_wait_s)),
             ("sim_makespan_s".into(), Json::num(self.exec.sim_makespan_s)),
             ("wall_s".into(), Json::num(self.exec.wall_s)),
             ("bytes_moved".into(), Json::num(self.exec.bytes_moved as f64)),
@@ -289,6 +302,8 @@ impl Driver {
             plan_s,
             provenance: PlanProvenance::Planned,
             passes: self.session.cluster().passes.manager().names(),
+            batched_with: 1,
+            queue_wait_s: 0.0,
             exec,
         })
     }
@@ -310,6 +325,8 @@ impl Driver {
             plan_s,
             provenance: PlanProvenance::Planned,
             passes: self.session.cluster().passes.manager().names(),
+            batched_with: 1,
+            queue_wait_s: 0.0,
             exec,
         })
     }

@@ -85,6 +85,13 @@ struct Artifact {
 }
 
 /// Plan-cache counters (monotonic over the session's lifetime).
+///
+/// The classification counters (`compiles` / `hits` / `misses` /
+/// `raced`) are maintained under the cache lock, *at* the lookup and
+/// publish decision points, so they stay mutually coherent under
+/// concurrent [`Session::compile`] calls: `compiles == hits + misses`
+/// holds in every snapshot, and `raced` accounts exactly for the misses
+/// whose freshly-built artifact lost the publish race and was discarded.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// `compile()` / `compile_expr()` calls (cached path only).
@@ -93,6 +100,11 @@ pub struct CacheStats {
     pub hits: u64,
     /// Compiles that had to plan + lower.
     pub misses: u64,
+    /// Misses whose artifact lost the publish race to a concurrent
+    /// compile of the same signature and was discarded in favor of the
+    /// incumbent (the duplicate planning work is still counted in
+    /// `misses` and `planner_runs`). Always `<= misses`.
+    pub raced: u64,
     /// Total planner invocations (incl. `plan()` / `compile_fresh()`).
     pub planner_runs: u64,
     /// Total lower+place invocations.
@@ -101,17 +113,27 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
+/// The plan cache proper: the artifact map together with the counters
+/// that describe its decisions. One lock guards both, so a hit / miss /
+/// raced classification can never be observed out of step with the map
+/// state that caused it (see [`CacheStats`]).
+#[derive(Default)]
+struct PlanCache {
+    map: HashMap<CanonSignature, Arc<Artifact>>,
+    compiles: u64,
+    hits: u64,
+    misses: u64,
+    raced: u64,
+}
+
 /// A long-lived execution context: engine + cluster + plan cache (+ the
 /// staging graph of the lazy [`Expr`] frontend). See the module docs.
 pub struct Session {
     pub cfg: DriverConfig,
     engine: Arc<DispatchEngine>,
     cluster: Cluster,
-    cache: Mutex<HashMap<CanonSignature, Arc<Artifact>>>,
+    cache: Mutex<PlanCache>,
     staging: Mutex<Arc<Mutex<EinGraph>>>,
-    compiles: AtomicU64,
-    hits: AtomicU64,
-    misses: AtomicU64,
     planner_runs: AtomicU64,
     lower_runs: AtomicU64,
 }
@@ -130,11 +152,8 @@ impl Session {
             cfg,
             engine,
             cluster,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(PlanCache::default()),
             staging: Mutex::new(Arc::new(Mutex::new(EinGraph::new()))),
-            compiles: AtomicU64::new(0),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
             planner_runs: AtomicU64::new(0),
             lower_runs: AtomicU64::new(0),
         })
@@ -150,19 +169,21 @@ impl Session {
 
     /// Plan-cache counters.
     pub fn stats(&self) -> CacheStats {
+        let cache = self.cache.lock().unwrap();
         CacheStats {
-            compiles: self.compiles.load(Ordering::Relaxed),
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+            compiles: cache.compiles,
+            hits: cache.hits,
+            misses: cache.misses,
+            raced: cache.raced,
             planner_runs: self.planner_runs.load(Ordering::Relaxed),
             lower_runs: self.lower_runs.load(Ordering::Relaxed),
-            entries: self.cache.lock().unwrap().len(),
+            entries: cache.map.len(),
         }
     }
 
     /// Drop every cached artifact (counters are retained).
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().clear();
+        self.cache.lock().unwrap().map.clear();
     }
 
     /// Start (or extend) the lazy program: declare an input tensor of the
@@ -195,26 +216,45 @@ impl Session {
     /// transparently remaps the caller's vertex ids onto the cached
     /// artifact.
     pub fn compile(&self, g: &EinGraph) -> Result<Executable> {
-        self.compiles.fetch_add(1, Ordering::Relaxed);
         let canon = canonicalize(g);
         let key = self.cache_key(g, &canon);
-        let cached = self.cache.lock().unwrap().get(&key).cloned();
+        // Classify under the cache lock, at the lookup itself: a snapshot
+        // of the counters can then never contradict the map state (a miss
+        // that errors during build still counts as a miss — planning was
+        // attempted for it).
+        let cached = {
+            let mut guard = self.cache.lock().unwrap();
+            let cache = &mut *guard;
+            cache.compiles += 1;
+            match cache.map.get(&key) {
+                Some(art) => {
+                    cache.hits += 1;
+                    Some(Arc::clone(art))
+                }
+                None => {
+                    cache.misses += 1;
+                    None
+                }
+            }
+        };
         if let Some(art) = cached {
-            self.hits.fetch_add(1, Ordering::Relaxed);
             return self.executable(art, &canon, PlanProvenance::CacheHit);
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
         let art = self.build_artifact(g, Some(canon.clone()))?;
         // Re-check under the lock before publishing: a concurrent compile
         // of the same program may have landed first. Keep the incumbent so
-        // every Executable of one signature shares one artifact (the race
-        // at worst plans twice and is counted truthfully in the stats).
+        // every Executable of one signature shares one artifact; the loser
+        // discards its build and is counted in `raced`.
         let art = {
-            let mut cache = self.cache.lock().unwrap();
-            match cache.get(&key) {
-                Some(existing) => Arc::clone(existing),
+            let mut guard = self.cache.lock().unwrap();
+            let cache = &mut *guard;
+            match cache.map.get(&key) {
+                Some(existing) => {
+                    cache.raced += 1;
+                    Arc::clone(existing)
+                }
                 None => {
-                    cache.insert(key, Arc::clone(&art));
+                    cache.map.insert(key, Arc::clone(&art));
                     art
                 }
             }
@@ -249,6 +289,43 @@ impl Session {
     pub fn compile_fresh(&self, g: &EinGraph) -> Result<Executable> {
         let art = self.build_artifact(g, None)?;
         Ok(self.executable_identity(art, PlanProvenance::Planned))
+    }
+
+    /// Lower + place a caller-supplied plan for `g`, returning an
+    /// uncached [`Executable`] in the caller's own vertex numbering (no
+    /// canonicalization, no remap, no cache entry). The planner never
+    /// runs: provenance is [`PlanProvenance::Reused`] with `plan_s = 0`.
+    ///
+    /// This is how the serving batcher materializes a batched twin: the
+    /// twin's plan is *derived* from the solo artifact's (the batch dim
+    /// prepended, unsplit — see [`crate::serve`]), so running the
+    /// planner again would be both wasted work and a correctness risk
+    /// (a different plan could change tile shapes and break the
+    /// bitwise-equality contract with solo runs).
+    pub fn compile_with_plan(&self, g: &EinGraph, plan: Plan) -> Result<Executable> {
+        self.lower_runs.fetch_add(1, Ordering::Relaxed);
+        let t1 = std::time::Instant::now();
+        let (tg, prog, pass_log) = self.cluster.lower_explain(g, &plan).map_err(|e| match e {
+            Error::LowerFailure(_) => e,
+            other => Error::LowerFailure(LowerError {
+                stage: "lower",
+                detail: other.to_string(),
+            }),
+        })?;
+        let lower_s = t1.elapsed().as_secs_f64();
+        let model = self.cluster.model(&tg);
+        let art = Arc::new(Artifact {
+            graph: g.clone(),
+            canon: None,
+            plan,
+            prog,
+            pass_log,
+            tg,
+            model,
+            plan_s: 0.0,
+            lower_s,
+        });
+        Ok(self.executable_identity(art, PlanProvenance::Reused))
     }
 
     /// Convenience: compile (through the cache) and run once.
@@ -307,6 +384,8 @@ impl Session {
                 plan_s: 0.0,
                 provenance: PlanProvenance::Reused,
                 passes: self.cluster.passes.manager().names(),
+                batched_with: 1,
+                queue_wait_s: 0.0,
                 exec,
             },
         ))
@@ -524,6 +603,8 @@ impl Executable {
                 plan_s: self.art.plan_s,
                 provenance: self.provenance,
                 passes: self.art.pass_log.applied(),
+                batched_with: 1,
+                queue_wait_s: 0.0,
                 exec,
             },
         ))
@@ -586,6 +667,40 @@ impl Executable {
     /// from the session's plan cache.
     pub fn provenance(&self) -> PlanProvenance {
         self.provenance
+    }
+
+    /// Translate a vertex id of the graph this executable was compiled
+    /// from into the stored artifact's numbering — the numbering
+    /// [`plan`](Self::plan) / [`graph`](Self::graph) /
+    /// [`task_graph`](Self::task_graph) use. Identity unless this handle
+    /// came from a cache hit on a canonically-equivalent twin. Ids
+    /// outside the graph come back unchanged.
+    pub fn to_stored(&self, v: VertexId) -> VertexId {
+        match &self.remap {
+            None => v,
+            Some(r) => r.to_stored.get(v.0).copied().unwrap_or(v),
+        }
+    }
+
+    /// Inverse of [`to_stored`](Self::to_stored): stored numbering back
+    /// to the caller's.
+    pub fn to_presented(&self, v: VertexId) -> VertexId {
+        match &self.remap {
+            None => v,
+            Some(r) => r.to_presented.get(v.0).copied().unwrap_or(v),
+        }
+    }
+
+    /// Opaque identity of the shared compiled artifact: two executables
+    /// from the same session compare equal here iff they share one
+    /// artifact (one plan, one placed task graph, one stored numbering).
+    /// The serving batcher uses this as its coalescing key — it is
+    /// exactly "same plan-cache entry", which the session already keys
+    /// by canonical (or named, for label-sensitive strategies)
+    /// signature. Not meaningful across sessions or after every handle
+    /// to the artifact is dropped.
+    pub fn artifact_key(&self) -> usize {
+        Arc::as_ptr(&self.art) as usize
     }
 
     /// `(plan_s, lower_s)` wall-clock of the original compile.
@@ -866,6 +981,80 @@ mod tests {
             )
             .unwrap_err();
         assert!(err.is_deadline(), "{err}");
+    }
+
+    #[test]
+    fn session_and_executable_are_send_sync() {
+        // Compile-time assertion: the serving pool shares one Session
+        // across worker threads and moves Executables between them. If
+        // either type loses Send + Sync (e.g. a future field gains
+        // non-atomic interior mutability), this stops compiling.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Session>();
+        assert_send_sync::<Executable>();
+        assert_send_sync::<CacheStats>();
+    }
+
+    #[test]
+    fn cache_stats_coherent_under_concurrent_compile() {
+        // N threads race compile() on one graph: exactly one artifact
+        // must be published, every handle must share it, and the
+        // counters — classified under the cache lock — must balance.
+        let s = session();
+        let a = s.input("A", &[16, 16]);
+        let b = s.input("B", &[16, 16]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        let g = z.graph();
+        let n = 8u64;
+        let keys: Vec<usize> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let (s, g) = (&s, &g);
+                    scope.spawn(move || s.compile(g).unwrap().artifact_key())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(
+            keys.windows(2).all(|w| w[0] == w[1]),
+            "every executable must share the single published artifact"
+        );
+        let st = s.stats();
+        assert_eq!(st.compiles, n);
+        assert_eq!(st.hits + st.misses, st.compiles, "no dropped updates");
+        assert_eq!(st.entries, 1);
+        assert!(st.misses >= 1);
+        assert_eq!(
+            st.misses,
+            1 + st.raced,
+            "one publisher; every other miss must be counted as raced"
+        );
+        assert_eq!(st.planner_runs, st.misses, "one planner run per miss");
+    }
+
+    #[test]
+    fn compile_with_plan_lowers_without_planning() {
+        let s = session();
+        let a = s.input("A", &[16, 16]);
+        let b = s.input("B", &[16, 16]);
+        let z = a.einsum("ij,jk->ik", &b).unwrap();
+        let g = z.graph();
+        let (plan, _) = s.plan(&g).unwrap();
+        let planner_before = s.stats().planner_runs;
+        let exe = s.compile_with_plan(&g, plan).unwrap();
+        assert_eq!(exe.provenance(), PlanProvenance::Reused);
+        assert_eq!(s.stats().planner_runs, planner_before, "no planning");
+        assert_eq!(s.stats().entries, 0, "uncached");
+        let mut inputs = HashMap::new();
+        inputs.insert(a.id(), Tensor::random(&[16, 16], 1));
+        inputs.insert(b.id(), Tensor::random(&[16, 16], 2));
+        let (outs, rep) = exe.run(&inputs).unwrap();
+        assert_eq!(rep.provenance, PlanProvenance::Reused);
+        assert_eq!(rep.plan_s, 0.0);
+        assert_eq!(rep.batched_with, 1);
+        assert_eq!(rep.queue_wait_s, 0.0);
+        let want = eval_graph(&g, &inputs).unwrap();
+        assert_eq!(outs[&z.id()], want[&z.id()]);
     }
 
     #[test]

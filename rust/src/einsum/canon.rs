@@ -355,6 +355,26 @@ mod tests {
     }
 
     #[test]
+    fn batched_twins_preserve_canonical_equality() {
+        // the serving batcher coalesces renamed-but-equivalent programs
+        // into one batched twin; that is sound only if batching
+        // preserves canonical equality (and inequality)
+        let g1 = chain(["i", "j", "k", "m"], false, 16);
+        let g2 = chain(["w", "x", "y", "z"], true, 16);
+        assert_eq!(canonicalize(&g1).signature, canonicalize(&g2).signature);
+        let b1 = g1.batched(4).unwrap();
+        let b2 = g2.batched(4).unwrap();
+        assert_eq!(canonicalize(&b1).signature, canonicalize(&b2).signature);
+        // different size classes are distinct compilation units
+        assert_ne!(
+            canonicalize(&b1).signature,
+            canonicalize(&g1.batched(2).unwrap()).signature
+        );
+        // and a twin never aliases its solo graph in the plan cache
+        assert_ne!(canonicalize(&b1).signature, canonicalize(&g1).signature);
+    }
+
+    #[test]
     fn shape_change_misses() {
         let g1 = chain(["i", "j", "k", "m"], false, 16);
         let g2 = chain(["i", "j", "k", "m"], false, 32);

@@ -303,6 +303,47 @@ impl EinSum {
         self.arity() > 0 && self.lagg().is_empty()
     }
 
+    /// Batched twin of this op: prepend the fresh label `b` to every
+    /// operand and output label list. `b` must not already occur in the
+    /// op (see [`crate::einsum::EinGraph::batched`], which picks one).
+    ///
+    /// Because the batch label lands first in every list, it is the first
+    /// entry of the twin's `unique_labels` (so a solo partitioning vector
+    /// extends to the twin by prepending the batch dim's split), and it
+    /// appears in both operands *and* the output — the kernel engine
+    /// classifies it as a BMM batch dim, leaving every other label's
+    /// classification (and hence the solo op's dispatch path) unchanged.
+    pub fn batched(&self, b: super::label::Label) -> EinSum {
+        let pre = |l: &LabelList| -> LabelList {
+            let mut v = Vec::with_capacity(l.len() + 1);
+            v.push(b);
+            v.extend_from_slice(l);
+            v
+        };
+        match self {
+            EinSum::Input => EinSum::Input,
+            EinSum::Unary { lx, lz, op, agg } => EinSum::Unary {
+                lx: pre(lx),
+                lz: pre(lz),
+                op: *op,
+                agg: *agg,
+            },
+            EinSum::Binary {
+                lx,
+                ly,
+                lz,
+                join,
+                agg,
+            } => EinSum::Binary {
+                lx: pre(lx),
+                ly: pre(ly),
+                lz: pre(lz),
+                join: *join,
+                agg: *agg,
+            },
+        }
+    }
+
     /// Validate the expression against operand bounds and infer the output
     /// bound `b_Z = b_XY[l_Z; l_XY]`.
     ///

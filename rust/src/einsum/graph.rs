@@ -7,6 +7,7 @@
 //! shape-consistent.
 
 use super::expr::EinSum;
+use super::label::Label;
 use crate::error::{Error, Result};
 use std::collections::HashMap;
 
@@ -206,6 +207,64 @@ impl EinGraph {
             }
         }
         Ok(())
+    }
+
+    /// Batched twin of this graph: a fresh batch label of bound `batch`
+    /// is prepended to every vertex — input bounds become `[batch] ++
+    /// bound` and every op's label lists gain the batch label up front
+    /// (see [`EinSum::batched`]). Vertex ids, names, and wiring are
+    /// preserved exactly, so ids translate 1:1 between a graph and its
+    /// twin.
+    ///
+    /// This is the stacking primitive behind dynamic batching (the
+    /// `serve` subsystem): `batch` independent runs of `self` equal one
+    /// run of the twin with inputs stacked along the leading dim. Because
+    /// the batch label is kept in every operand *and* output, batch
+    /// entries never mix, and each op's kernel dispatch path matches the
+    /// solo op's — which is what makes the twin's slices bitwise-equal to
+    /// solo runs.
+    pub fn batched(&self, batch: usize) -> Result<EinGraph> {
+        if batch == 0 {
+            return Err(Error::InvalidGraph(
+                "batched: batch size must be >= 1".into(),
+            ));
+        }
+        // A fresh label: one that no vertex of this graph mentions.
+        let used: std::collections::HashSet<Label> = self
+            .vertices
+            .iter()
+            .flat_map(|v| {
+                let mut ls: Vec<Label> = v
+                    .op
+                    .operand_labels()
+                    .into_iter()
+                    .flatten()
+                    .copied()
+                    .collect();
+                ls.extend(v.op.lz().into_iter().flatten().copied());
+                ls
+            })
+            .collect();
+        let mut b = Label::new("__batch");
+        let mut salt = 0usize;
+        while used.contains(&b) {
+            b = Label::new(&format!("__batch{salt}"));
+            salt += 1;
+        }
+        let mut out = EinGraph::new();
+        for v in &self.vertices {
+            let id = match &v.op {
+                EinSum::Input => {
+                    let mut bound = Vec::with_capacity(v.bound.len() + 1);
+                    bound.push(batch);
+                    bound.extend_from_slice(&v.bound);
+                    out.input(&v.name, bound)
+                }
+                op => out.add(&v.name, op.batched(b), v.inputs.iter().copied())?,
+            };
+            debug_assert_eq!(id, v.id, "batched twin must preserve vertex ids");
+        }
+        Ok(out)
     }
 
     /// Total flops of the computation (hardware-independent; identical for
@@ -422,4 +481,57 @@ mod tests {
         assert!(g.total_flops() > 0.0);
     }
 
+    #[test]
+    fn batched_twin_preserves_structure() {
+        let (g, z) = chain_graph();
+        let bg = g.batched(4).unwrap();
+        bg.validate().unwrap();
+        assert_eq!(bg.len(), g.len());
+        for v in g.vertices() {
+            let bv = bg.vertex(v.id);
+            // ids, names, wiring preserved; bounds gain a leading 4
+            assert_eq!(bv.id, v.id);
+            assert_eq!(bv.name, v.name);
+            assert_eq!(bv.inputs, v.inputs);
+            let mut want = vec![4];
+            want.extend_from_slice(&v.bound);
+            assert_eq!(bv.bound, want);
+            // batch label is the *first* unique label of every op, so a
+            // solo partitioning vector extends by prepending one entry
+            if !matches!(v.op, EinSum::Input) {
+                let solo = v.op.unique_labels();
+                let twin = bv.op.unique_labels();
+                assert_eq!(twin.len(), solo.len() + 1);
+                assert_eq!(&twin[1..], &solo[..]);
+                assert!(!solo.contains(&twin[0]), "batch label must be fresh");
+            }
+        }
+        assert_eq!(bg.vertex(z).bound, vec![4, 8, 8]);
+        assert_eq!(bg.outputs(), vec![z]);
+    }
+
+    #[test]
+    fn batched_picks_fresh_label_on_collision() {
+        // a graph that already uses the label "__batch"
+        let mut g = EinGraph::new();
+        let a = g.input("A", vec![3, 5]);
+        g.add(
+            "R",
+            EinSum::reduce(labels("__batch j"), labels("__batch"), AggOp::Sum),
+            vec![a],
+        )
+        .unwrap();
+        let bg = g.batched(2).unwrap();
+        bg.validate().unwrap();
+        let r = bg.vertex(VertexId(1));
+        let uniq = r.op.unique_labels();
+        assert_ne!(uniq[0], Label::new("__batch"));
+        assert_eq!(r.bound, vec![2, 3]);
+    }
+
+    #[test]
+    fn batched_rejects_zero() {
+        let (g, _) = chain_graph();
+        assert!(g.batched(0).is_err());
+    }
 }

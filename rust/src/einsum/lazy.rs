@@ -183,6 +183,22 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_supports_batched_twin() {
+        // the serving batcher stacks lazily-built programs too: a
+        // snapshot's batched twin must validate, keep vertex ids, and
+        // prepend the batch bound everywhere
+        let (a, b) = program();
+        let z = a.einsum("ij,jk->ik", &b).unwrap().map(UnaryOp::Relu).unwrap();
+        let g = z.graph();
+        let bg = g.batched(3).unwrap();
+        bg.validate().unwrap();
+        assert_eq!(bg.vertex(z.id()).bound, vec![3, 8, 8]);
+        assert_eq!(bg.vertex(a.id()).bound, vec![3, 8, 4]);
+        assert_eq!(bg.outputs(), g.outputs());
+        assert_eq!(bg.inputs(), g.inputs());
+    }
+
+    #[test]
     fn ew_and_ext_ops() {
         let (a, b) = program();
         let d = a.einsum_ext("ij,jk->ik", &b, JoinOp::AbsDiff, AggOp::Max).unwrap();

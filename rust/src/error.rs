@@ -84,6 +84,47 @@ pub enum ExecCause {
     Kernel { detail: String },
 }
 
+/// A serving request was rejected (or abandoned) by the [`crate::serve`]
+/// front-end — the typed face of the `Server::submit` admission path,
+/// mirroring [`ExecError`] so load generators can branch on the cause.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeError {
+    /// Tenant that issued the rejected request.
+    pub tenant: String,
+    pub cause: ServeCause,
+}
+
+/// Why the serving layer rejected or failed a request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeCause {
+    /// Admission control: the bounded request queue is at capacity.
+    QueueFull { depth: usize, limit: usize },
+    /// The server is draining and no longer admits requests.
+    ShuttingDown,
+    /// The coalesced execution this request was batched into failed;
+    /// `detail` renders the underlying error.
+    BatchFailed { batched_with: usize, detail: String },
+    /// The worker processing this request disappeared before replying
+    /// (its response channel closed without a result).
+    Disconnected,
+}
+
+impl fmt::Display for ServeCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeCause::QueueFull { depth, limit } => {
+                write!(f, "queue full ({depth}/{limit} requests pending)")
+            }
+            ServeCause::ShuttingDown => write!(f, "server shutting down"),
+            ServeCause::BatchFailed {
+                batched_with,
+                detail,
+            } => write!(f, "batched execution ({batched_with} requests) failed: {detail}"),
+            ServeCause::Disconnected => write!(f, "worker disconnected before replying"),
+        }
+    }
+}
+
 impl fmt::Display for ExecCause {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -171,6 +212,9 @@ pub enum Error {
 
     /// Structured execution failure (`Executable::run` path).
     ExecFailure(ExecError),
+
+    /// Structured serving rejection (`Server::submit` / ticket path).
+    ServeRejected(ServeError),
 }
 
 impl Error {
@@ -197,6 +241,35 @@ impl Error {
             self,
             Error::ExecFailure(ExecError {
                 cause: ExecCause::DeadlineExceeded { .. },
+                ..
+            })
+        )
+    }
+
+    /// Construct a structured serving rejection.
+    pub fn serve_rejected(tenant: impl Into<String>, cause: ServeCause) -> Error {
+        Error::ServeRejected(ServeError {
+            tenant: tenant.into(),
+            cause,
+        })
+    }
+
+    /// The structured serving rejection, if this is one.
+    pub fn as_serve(&self) -> Option<&ServeError> {
+        match self {
+            Error::ServeRejected(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// True when this error is a [`ServeCause::QueueFull`] admission
+    /// rejection (the one a load generator should treat as back-pressure
+    /// rather than failure).
+    pub fn is_queue_full(&self) -> bool {
+        matches!(
+            self,
+            Error::ServeRejected(ServeError {
+                cause: ServeCause::QueueFull { .. },
                 ..
             })
         )
@@ -232,6 +305,9 @@ impl fmt::Display for Error {
                 ),
                 None => write!(f, "execution error: {}", e.cause),
             },
+            Error::ServeRejected(e) => {
+                write!(f, "serve rejected [tenant {}]: {}", e.tenant, e.cause)
+            }
         }
     }
 }
@@ -300,6 +376,26 @@ mod tests {
         assert!(s.contains("3/10"), "{s}");
         assert!(s.contains("2 retries"), "{s}");
         assert!(!Error::Exec("x".into()).is_deadline());
+    }
+
+    #[test]
+    fn serve_rejection_is_typed_and_detectable() {
+        let e = Error::serve_rejected("tenant-3", ServeCause::QueueFull { depth: 64, limit: 64 });
+        assert!(e.is_queue_full());
+        let s = e.to_string();
+        assert!(s.contains("tenant-3"), "{s}");
+        assert!(s.contains("64/64"), "{s}");
+        assert_eq!(e.as_serve().unwrap().tenant, "tenant-3");
+        let b = Error::serve_rejected(
+            "t",
+            ServeCause::BatchFailed {
+                batched_with: 4,
+                detail: "boom".into(),
+            },
+        );
+        assert!(!b.is_queue_full());
+        assert!(b.to_string().contains("4 requests"), "{b}");
+        assert!(!Error::serve_rejected("t", ServeCause::ShuttingDown).is_queue_full());
     }
 
     #[test]

@@ -88,7 +88,11 @@
 //! ```
 //!
 //! The legacy [`coordinator::driver::Driver`] remains as a thin shim with
-//! the old plan-on-every-call semantics.
+//! the old plan-on-every-call semantics. For multi-tenant deployments,
+//! [`serve::Server`] wraps one shared session with admission control, a
+//! per-tenant fair queue, a fixed serving pool, and signature-keyed
+//! dynamic batching whose coalesced executions are bitwise-identical to
+//! solo runs (see the [`serve`] module docs).
 //!
 //! The tensor-relational algebra of the paper (join / aggregation /
 //! repartition over *tensor relations*) lives in [`tra`]; model builders
@@ -122,6 +126,7 @@ pub mod einsum;
 pub mod error;
 pub mod models;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod taskgraph;
 pub mod tensor;
@@ -144,8 +149,14 @@ pub mod prelude {
         label::{labels, Label},
         lazy::Expr,
     };
-    pub use crate::error::{Error, ExecCause, ExecError, LowerError, PlanError, Result};
+    pub use crate::error::{
+        Error, ExecCause, ExecError, LowerError, PlanError, Result, ServeCause, ServeError,
+    };
     pub use crate::runtime::{Backend, KernelEngine};
+    pub use crate::serve::{
+        output_checksum, run_load, LatencySummary, LoadConfig, LoadReport, Response, ServeConfig,
+        ServeStats, Server, Ticket,
+    };
     pub use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
     pub use crate::sim::faults::{FaultKind, FaultPlan, RunOptions};
     pub use crate::sim::network::{LinkClass, NetworkProfile, Topology};

@@ -1,0 +1,207 @@
+//! Batched-twin construction: derive the stacked graph and plan for a
+//! coalesced execution, and move request tensors in and out of the
+//! stacked layout.
+//!
+//! Bitwise identity with solo runs rests on three facts, each asserted
+//! by the differential suite in `tests/serving.rs`:
+//!
+//! 1. [`EinGraph::batched`] prepends the fresh batch label to every
+//!    operand *and* output list, so `bmm_plan`'s label classification
+//!    and the unary fast-path condition are preserved — every op keeps
+//!    its solo kernel dispatch path.
+//! 2. The twin plan leaves the batch dimension unsplit (`[1] ++ parts`),
+//!    so repartitioning slices exactly as the solo plan does within each
+//!    batch entry; intra-op kernel sharding over batch entries supplies
+//!    the extra parallelism instead.
+//! 3. Stacking and splitting are plain contiguous `memcpy`s: entry `r`
+//!    of a stacked tensor *is* request `r`'s tensor, bit for bit, and
+//!    batch entries never mix in any kernel's accumulation order.
+//!
+//! [`EinGraph::batched`]: crate::einsum::graph::EinGraph::batched
+
+use crate::coordinator::session::{Executable, Session};
+use crate::decomp::Plan;
+use crate::einsum::graph::VertexId;
+use crate::error::{Error, ExecCause, Result};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Batch size class for `k` coalesced requests: the next power of two.
+/// Classing keeps the twin cache at O(log max_batch) entries per
+/// signature; short batches pad with zero entries (batch entries are
+/// independent, so padding cannot perturb the real slices, and zeros
+/// pass the non-finite input screen).
+pub fn size_class(k: usize) -> usize {
+    k.max(1).next_power_of_two()
+}
+
+/// Compile the batched twin of `solo` for `class` stacked requests.
+///
+/// The twin reuses the solo artifact's plan — extended with an unsplit
+/// batch dimension — via [`Session::compile_with_plan`], so the planner
+/// never reruns for a batch and the partitioning seen by every kernel
+/// is exactly the solo partitioning per entry. The twin is compiled
+/// against the *stored* (possibly canon-remapped) solo graph, so its
+/// vertex ids line up with [`Executable::to_stored`] translations.
+pub fn batched_twin(session: &Session, solo: &Executable, class: usize) -> Result<Executable> {
+    let bg = solo.graph().batched(class)?;
+    let sp = solo.plan();
+    let mut parts = HashMap::with_capacity(sp.parts.len());
+    for (v, d) in &sp.parts {
+        let mut bd = Vec::with_capacity(d.len() + 1);
+        bd.push(1); // batch dim stays unsplit; kernels shard over entries
+        bd.extend_from_slice(d);
+        parts.insert(*v, bd);
+    }
+    let mut plan = Plan {
+        parts,
+        // finalize_inputs derives these from first consumers; it must
+        // start empty or stale solo entries (wrong rank) would win.
+        input_parts: HashMap::new(),
+        predicted_cost: 0.0,
+        strategy: format!("{}+batch{}", sp.strategy, class),
+    };
+    plan.finalize_inputs(&bg);
+    plan.predicted_cost = plan.total_cost(&bg).unwrap_or(sp.predicted_cost * class as f64);
+    session.compile_with_plan(&bg, plan)
+}
+
+/// Stack per-request input maps (already translated to the stored
+/// numbering of `solo`'s graph) into the twin's `[class, ..]` inputs.
+/// Slots beyond `members.len()` stay zero — padding for short batches.
+pub(crate) fn stack_inputs(
+    solo: &Executable,
+    class: usize,
+    members: &[HashMap<VertexId, Tensor>],
+) -> Result<HashMap<VertexId, Tensor>> {
+    let g = solo.graph();
+    let mut out = HashMap::new();
+    for v in g.inputs() {
+        let vert = g.vertex(v);
+        let len: usize = vert.bound.iter().product();
+        let mut shape = Vec::with_capacity(vert.bound.len() + 1);
+        shape.push(class);
+        shape.extend_from_slice(&vert.bound);
+        let mut stacked = Tensor::zeros(&shape);
+        let data = stacked.data_mut();
+        for (r, m) in members.iter().enumerate() {
+            let t = m.get(&v).ok_or_else(|| {
+                Error::exec_failure(
+                    None,
+                    0,
+                    ExecCause::MissingInput {
+                        vertex: vert.name.clone(),
+                    },
+                )
+            })?;
+            if t.len() != len {
+                return Err(Error::exec_failure(
+                    None,
+                    0,
+                    ExecCause::ShapeMismatch {
+                        vertex: vert.name.clone(),
+                        got: t.shape().to_vec(),
+                        want: vert.bound.clone(),
+                    },
+                ));
+            }
+            // The whole bitwise story: entry r of the stacked input IS
+            // request r's tensor.
+            data[r * len..(r + 1) * len].copy_from_slice(t.data());
+        }
+        out.insert(v, stacked);
+    }
+    Ok(out)
+}
+
+/// Split a stacked `[class, ..]` output back into the first `k`
+/// per-request tensors; padding entries are dropped.
+pub(crate) fn split_output(stacked: &Tensor, k: usize) -> Result<Vec<Tensor>> {
+    let inner: Vec<usize> = stacked.shape()[1..].to_vec();
+    let len: usize = inner.iter().product();
+    let data = stacked.data();
+    (0..k)
+        .map(|r| Tensor::new(inner.clone(), data[r * len..(r + 1) * len].to_vec()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_classes_are_powers_of_two() {
+        assert_eq!(size_class(0), 1);
+        assert_eq!(size_class(1), 1);
+        assert_eq!(size_class(2), 2);
+        assert_eq!(size_class(3), 4);
+        assert_eq!(size_class(7), 8);
+        assert_eq!(size_class(8), 8);
+    }
+
+    #[test]
+    fn stack_then_split_roundtrips_bitwise() {
+        use crate::coordinator::driver::DriverConfig;
+        use crate::coordinator::session::Session;
+        use crate::models::matchain;
+
+        let chain = matchain::chain_graph(12, false).unwrap();
+        let session = Session::new(DriverConfig {
+            workers: 2,
+            p: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let exe = session.compile(&chain.graph).unwrap();
+        let members: Vec<HashMap<VertexId, Tensor>> = (0..3)
+            .map(|seed| {
+                matchain::chain_inputs(&chain, seed as u64)
+                    .into_iter()
+                    .map(|(v, t)| (exe.to_stored(v), t))
+                    .collect()
+            })
+            .collect();
+        let stacked = stack_inputs(&exe, 4, &members).unwrap();
+        for (v, t) in &stacked {
+            let bound = &exe.graph().vertex(*v).bound;
+            assert_eq!(t.shape()[0], 4);
+            assert_eq!(&t.shape()[1..], bound.as_slice());
+            let per = split_output(t, 3).unwrap();
+            let len: usize = bound.iter().product();
+            for (r, s) in per.iter().enumerate() {
+                assert_eq!(s.data(), members[r][v].data(), "entry {r} mismatch");
+                assert_eq!(s.len(), len);
+            }
+            // padding slot stays zero
+            assert!(t.data()[3 * len..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn stack_reports_missing_and_misshapen_inputs() {
+        use crate::coordinator::driver::DriverConfig;
+        use crate::coordinator::session::Session;
+        use crate::models::matchain;
+
+        let chain = matchain::chain_graph(8, false).unwrap();
+        let session = Session::new(DriverConfig {
+            workers: 1,
+            p: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let exe = session.compile(&chain.graph).unwrap();
+        let empty = vec![HashMap::new()];
+        let err = stack_inputs(&exe, 1, &empty).unwrap_err().to_string();
+        assert!(err.contains("missing input"), "{err}");
+
+        let bad: Vec<HashMap<VertexId, Tensor>> = vec![exe
+            .graph()
+            .inputs()
+            .into_iter()
+            .map(|v| (v, Tensor::zeros(&[1])))
+            .collect()];
+        let err = stack_inputs(&exe, 1, &bad).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Closed-loop load generator: `clients` threads each keep exactly one
+//! request in flight, so queue pressure (and therefore batching
+//! opportunity) scales with the client count, not with an open-loop
+//! arrival rate that could overrun the admission bound.
+
+use super::server::Server;
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::error::Result;
+use crate::tensor::Tensor;
+use crate::util::{percentile, Json};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Load generator shape: `clients` threads, each submitting
+/// `requests_per_client` back-to-back requests.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadConfig {
+    pub clients: usize,
+    pub requests_per_client: usize,
+}
+
+/// Nearest-rank latency percentiles over one load run, in milliseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize request latencies given in seconds.
+    pub fn from_seconds(seconds: &[f64]) -> LatencySummary {
+        if seconds.is_empty() {
+            return LatencySummary::default();
+        }
+        let ms: Vec<f64> = seconds.iter().map(|s| s * 1e3).collect();
+        LatencySummary {
+            p50_ms: percentile(&ms, 50.0),
+            p95_ms: percentile(&ms, 95.0),
+            p99_ms: percentile(&ms, 99.0),
+            mean_ms: ms.iter().sum::<f64>() / ms.len() as f64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("p50_ms".into(), Json::Num(self.p50_ms)),
+            ("p95_ms".into(), Json::Num(self.p95_ms)),
+            ("p99_ms".into(), Json::Num(self.p99_ms)),
+            ("mean_ms".into(), Json::Num(self.mean_ms)),
+        ])
+    }
+}
+
+/// What one load run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests issued (`clients * requests_per_client`).
+    pub requests: usize,
+    /// Requests that returned successfully.
+    pub completed: usize,
+    /// Requests rejected or failed.
+    pub rejected: usize,
+    pub elapsed_s: f64,
+    /// Completed requests per wall-clock second.
+    pub req_per_s: f64,
+    pub latency: LatencySummary,
+    /// Largest `batched_with` observed across responses.
+    pub max_batched_with: usize,
+    /// Mean `batched_with` over completed responses (1.0 = no
+    /// coalescing happened).
+    pub mean_batched_with: f64,
+    /// XOR of every response's [`output_checksum`] — order-independent,
+    /// so it can be compared against the same XOR over solo reference
+    /// runs to check bitwise parity of an entire load run.
+    ///
+    /// [`output_checksum`]: super::output_checksum
+    pub checksum: u64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("requests".into(), Json::Num(self.requests as f64)),
+            ("completed".into(), Json::Num(self.completed as f64)),
+            ("rejected".into(), Json::Num(self.rejected as f64)),
+            ("elapsed_s".into(), Json::Num(self.elapsed_s)),
+            ("req_per_s".into(), Json::Num(self.req_per_s)),
+            ("latency".into(), self.latency.to_json()),
+            (
+                "max_batched_with".into(),
+                Json::Num(self.max_batched_with as f64),
+            ),
+            (
+                "mean_batched_with".into(),
+                Json::Num(self.mean_batched_with),
+            ),
+            ("checksum".into(), Json::str(format!("{:016x}", self.checksum))),
+        ])
+    }
+}
+
+/// Drive `server` with a closed-loop fleet. `make(client, i)` supplies
+/// each request as `(tenant, graph, inputs)`; requests and graphs may
+/// repeat freely (the session's plan cache absorbs recompiles). Errors
+/// are counted as rejections, not propagated — a load run measures the
+/// server, it does not assume the server is perfect.
+pub fn run_load<F>(server: &Server, cfg: &LoadConfig, make: F) -> Result<LoadReport>
+where
+    F: Fn(usize, usize) -> (String, EinGraph, HashMap<VertexId, Tensor>) + Sync,
+{
+    let latencies = Mutex::new(Vec::with_capacity(cfg.clients * cfg.requests_per_client));
+    let completed = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let checksum = AtomicU64::new(0);
+    let batch_sum = AtomicU64::new(0);
+    let batch_max = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..cfg.clients {
+            let make = &make;
+            let latencies = &latencies;
+            let completed = &completed;
+            let rejected = &rejected;
+            let checksum = &checksum;
+            let batch_sum = &batch_sum;
+            let batch_max = &batch_max;
+            scope.spawn(move || {
+                for i in 0..cfg.requests_per_client {
+                    let (tenant, g, inputs) = make(c, i);
+                    let t = Instant::now();
+                    match server.run(&tenant, &g, inputs) {
+                        Ok(resp) => {
+                            let dt = t.elapsed().as_secs_f64();
+                            latencies.lock().unwrap().push(dt);
+                            completed.fetch_add(1, Ordering::Relaxed);
+                            checksum.fetch_xor(
+                                super::output_checksum(&resp.outputs),
+                                Ordering::Relaxed,
+                            );
+                            batch_sum
+                                .fetch_add(resp.report.batched_with as u64, Ordering::Relaxed);
+                            batch_max
+                                .fetch_max(resp.report.batched_with as u64, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let lats = latencies.into_inner().unwrap();
+    let done = completed.load(Ordering::Relaxed) as usize;
+    Ok(LoadReport {
+        requests: cfg.clients * cfg.requests_per_client,
+        completed: done,
+        rejected: rejected.load(Ordering::Relaxed) as usize,
+        elapsed_s,
+        req_per_s: if elapsed_s > 0.0 {
+            done as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        latency: LatencySummary::from_seconds(&lats),
+        max_batched_with: batch_max.load(Ordering::Relaxed) as usize,
+        mean_batched_with: if done > 0 {
+            batch_sum.load(Ordering::Relaxed) as f64 / done as f64
+        } else {
+            0.0
+        },
+        checksum: checksum.load(Ordering::Relaxed),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::ServeConfig;
+    use super::*;
+    use crate::coordinator::driver::DriverConfig;
+    use crate::coordinator::session::Session;
+    use crate::models::matchain;
+
+    #[test]
+    fn load_run_matches_solo_checksums() {
+        let chain = matchain::chain_graph(16, false).unwrap();
+        let session = Session::new(DriverConfig {
+            workers: 2,
+            p: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        // solo references: one direct run per distinct seed
+        let exe = session.compile(&chain.graph).unwrap();
+        let seeds: Vec<u64> = vec![11, 12, 13];
+        let mut expected = 0u64;
+        for &s in &seeds {
+            let (outs, _) = exe.run(&matchain::chain_inputs(&chain, s)).unwrap();
+            expected ^= super::super::output_checksum(&outs);
+        }
+        let server = Server::with_session(
+            std::sync::Arc::new(session),
+            ServeConfig {
+                serve_workers: 2,
+                max_batch: 4,
+                ..Default::default()
+            },
+        );
+        let cfg = LoadConfig {
+            clients: 3,
+            requests_per_client: 1,
+        };
+        let report = run_load(&server, &cfg, |c, _| {
+            (
+                format!("tenant-{c}"),
+                chain.graph.clone(),
+                matchain::chain_inputs(&chain, seeds[c]),
+            )
+        })
+        .unwrap();
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.checksum, expected, "batched serving changed bits");
+        assert!(report.latency.p50_ms >= 0.0);
+        assert!(report.latency.p99_ms >= report.latency.p50_ms);
+        assert!(report.max_batched_with >= 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Multi-tenant serving: shared compile cache, concurrent executors, and
+//! signature-keyed dynamic batching.
+//!
+//! A [`Server`] owns one shared [`Session`](crate::coordinator::Session)
+//! and a fixed pool of serving threads draining a bounded, per-tenant
+//! request queue:
+//!
+//! ```text
+//!   tenant A ──┐
+//!   tenant B ──┼──> admission ──> per-tenant subqueues ──> round-robin
+//!   tenant C ──┘    (depth cap)                              seed pick
+//!                                                               │
+//!                             batch window: gather same-signature
+//!                             requests across tenants (≤ max_batch)
+//!                                                               │
+//!                      k == 1 ──> solo Executable::run           │
+//!                      k >= 2 ──> batched twin (stack along a     │
+//!                                 fresh batch label, run once,    │
+//!                                 split outputs per request) <────┘
+//! ```
+//!
+//! Coalescing is keyed by [`Executable::artifact_key`]: two requests
+//! batch together iff they resolved to the *same* plan-cache entry,
+//! which already folds in canonical signature equality and the
+//! label-sensitive strategies' named-signature rule. The batched twin
+//! is the solo graph run through [`EinGraph::batched`]
+//! (a fresh batch label prepended to every operand and output list) and
+//! compiled with the solo plan extended by an unsplit batch dimension —
+//! so every kernel takes the same dispatch path as the solo run and the
+//! split-back outputs are bitwise-identical to running each request
+//! alone. Twins are cached per `(artifact key, batch size class)` where
+//! the class is the next power of two; short batches pad with zero
+//! entries that are discarded on split.
+//!
+//! Worked example: tenants A and B each submit `chain_graph(64)` inside
+//! one batch window. Both compiles hit the same cache entry, so the
+//! worker seeds A's request, gathers B's, and (class 2) runs the twin
+//! `__batch` graph once on inputs of shape `[2, 64, 64]`. Entry 0 of
+//! every output goes back to A, entry 1 to B, each with
+//! `report.batched_with == 2` and its own `queue_wait_s`.
+//!
+//! [`EinGraph::batched`]: crate::einsum::graph::EinGraph::batched
+//! [`Executable::artifact_key`]: crate::coordinator::Executable::artifact_key
+
+mod batch;
+mod loadgen;
+mod server;
+
+pub use batch::{batched_twin, size_class};
+pub use loadgen::{run_load, LatencySummary, LoadConfig, LoadReport};
+pub use server::{Response, ServeConfig, ServeStats, Server, Ticket};
+
+use crate::einsum::graph::VertexId;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// FNV-1a over the outputs in vertex-id order: shape dims, then the raw
+/// f32 bit patterns. Equal iff the outputs are bitwise-identical — the
+/// serving differential suites and `scripts/chaos_smoke.sh` both diff
+/// this fingerprint.
+pub fn output_checksum(outs: &HashMap<VertexId, Tensor>) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut ids: Vec<_> = outs.keys().copied().collect();
+    ids.sort_by_key(|v| v.0);
+    let mut h: u64 = 0xcbf29ce484222325;
+    for vid in ids {
+        h = (h ^ vid.0 as u64).wrapping_mul(PRIME);
+        let t = &outs[&vid];
+        for &d in t.shape() {
+            h = (h ^ d as u64).wrapping_mul(PRIME);
+        }
+        for &v in t.data() {
+            h = (h ^ u64::from(v.to_bits())).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_detects_single_bit_flip() {
+        let mut outs = HashMap::new();
+        outs.insert(
+            VertexId(3),
+            Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+        );
+        let base = output_checksum(&outs);
+        let mut flipped = outs.clone();
+        let t = flipped.get_mut(&VertexId(3)).unwrap();
+        let bits = t.data()[2].to_bits() ^ 1;
+        t.data_mut()[2] = f32::from_bits(bits);
+        assert_ne!(base, output_checksum(&flipped));
+        assert_eq!(base, output_checksum(&outs.clone()));
+    }
+}

@@ -1,0 +1,696 @@
+//! The serving front end: admission control, per-tenant fair queueing,
+//! a fixed worker pool, and the dynamic batcher's gather loop.
+
+use super::batch::{batched_twin, size_class, split_output, stack_inputs};
+use crate::coordinator::driver::RunReport;
+use crate::coordinator::session::{Executable, Session};
+use crate::einsum::graph::{EinGraph, VertexId};
+use crate::error::{Error, ExecCause, Result, ServeCause};
+use crate::tensor::Tensor;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Configuration of a [`Server`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Serving pool threads, i.e. how many executions run concurrently.
+    /// Distinct from the session's simulated cluster `workers`, which
+    /// each execution spawns internally.
+    pub serve_workers: usize,
+    /// Largest number of same-signature requests one execution may
+    /// coalesce. `1` disables batching entirely.
+    pub max_batch: usize,
+    /// How long a worker holds an under-full batch open for
+    /// co-batchable arrivals, measured from the seed request's dequeue.
+    pub batch_window: Duration,
+    /// Admission bound: total requests queued across all tenants.
+    /// Submissions beyond it are rejected with a typed
+    /// [`ServeCause::QueueFull`].
+    pub max_queue_depth: usize,
+    /// When false, requests enqueue but nothing executes until
+    /// [`Server::start`] — lets tests stage a queue and observe
+    /// deterministic batch formation.
+    pub autostart: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            serve_workers: 2,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            max_queue_depth: 1024,
+            autostart: true,
+        }
+    }
+}
+
+/// Monotonic serving counters (see [`Server::serve_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Every `submit` call, admitted or not.
+    pub submitted: u64,
+    /// Requests whose execution succeeded.
+    pub completed: u64,
+    /// Requests refused at admission (compile failure, bad inputs,
+    /// queue full, shutdown).
+    pub rejected: u64,
+    /// Coalesced executions, each covering >= 2 requests.
+    pub batches: u64,
+    /// Requests served through a coalesced execution.
+    pub batched_requests: u64,
+}
+
+/// One request's result: outputs under the caller's own vertex
+/// numbering, the per-request report (batch size, queue wait), and the
+/// execution sequence number (`seq`) — executions are numbered in
+/// completion order, batch members sharing their execution's number.
+pub struct Response {
+    pub outputs: HashMap<VertexId, Tensor>,
+    pub report: RunReport,
+    pub seq: u64,
+}
+
+/// Handle to a pending request; redeem with [`Ticket::wait`].
+pub struct Ticket {
+    tenant: String,
+    rx: mpsc::Receiver<Result<Response>>,
+}
+
+impl Ticket {
+    /// Block until the server replies. A dropped server side surfaces
+    /// as a typed [`ServeCause::Disconnected`] rejection.
+    pub fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::serve_rejected(self.tenant, ServeCause::Disconnected)),
+        }
+    }
+}
+
+/// An admitted request parked in its tenant's subqueue.
+struct Pending {
+    tenant: String,
+    exe: Arc<Executable>,
+    inputs: HashMap<VertexId, Tensor>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<Response>>,
+}
+
+struct QueueState {
+    /// Per-tenant subqueues in first-seen order; `rr` is the
+    /// round-robin cursor — the next tenant to serve from.
+    tenants: Vec<(String, VecDeque<Pending>)>,
+    rr: usize,
+    /// Total parked requests across all subqueues.
+    depth: usize,
+    /// False once shutdown begins: no further admissions.
+    open: bool,
+    /// Workers only dequeue once started (see [`ServeConfig::autostart`]).
+    started: bool,
+}
+
+struct Shared {
+    session: Arc<Session>,
+    cfg: ServeConfig,
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    /// Batched-twin cache, keyed `(solo artifact key, size class)`.
+    /// Artifact keys stay valid for the session's lifetime because the
+    /// session's plan cache never evicts, so a key cannot be reused by
+    /// a different artifact.
+    twins: Mutex<HashMap<(usize, usize), Arc<Executable>>>,
+    seq: AtomicU64,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+}
+
+/// Multi-tenant serving front end over one shared [`Session`].
+///
+/// Requests compile through the session's plan cache on the caller's
+/// thread (compile errors surface synchronously), then park in their
+/// tenant's subqueue. Pool workers pick seeds round-robin across
+/// tenants, gather same-signature requests within the batch window,
+/// and run either the solo executable or a batched twin. Dropping the
+/// server shuts it down: admission closes, the queue drains, and the
+/// pool joins.
+pub struct Server {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Build a server owning its session.
+    pub fn new(session: Session, cfg: ServeConfig) -> Server {
+        Server::with_session(Arc::new(session), cfg)
+    }
+
+    /// Build a server over a shared session (zero-count config fields
+    /// are clamped up to 1).
+    pub fn with_session(session: Arc<Session>, cfg: ServeConfig) -> Server {
+        let mut cfg = cfg;
+        cfg.serve_workers = cfg.serve_workers.max(1);
+        cfg.max_batch = cfg.max_batch.max(1);
+        cfg.max_queue_depth = cfg.max_queue_depth.max(1);
+        let started = cfg.autostart;
+        let workers = cfg.serve_workers;
+        let shared = Arc::new(Shared {
+            session,
+            cfg,
+            q: Mutex::new(QueueState {
+                tenants: Vec::new(),
+                rr: 0,
+                depth: 0,
+                open: true,
+                started,
+            }),
+            cv: Condvar::new(),
+            twins: Mutex::new(HashMap::new()),
+            seq: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn serve worker"),
+            );
+        }
+        Server {
+            shared,
+            handles: Mutex::new(handles),
+        }
+    }
+
+    /// The shared session (its `stats()` expose compile-cache behaviour
+    /// across tenants).
+    pub fn session(&self) -> &Session {
+        &self.shared.session
+    }
+
+    /// Begin executing queued requests; no-op when `autostart` was set.
+    pub fn start(&self) {
+        self.shared.q.lock().unwrap().started = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Current queue depth (admitted, not-yet-dequeued requests).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.q.lock().unwrap().depth
+    }
+
+    /// How many batched twins have been compiled so far.
+    pub fn twin_cache_entries(&self) -> usize {
+        self.shared.twins.lock().unwrap().len()
+    }
+
+    /// Snapshot of the serving counters.
+    pub fn serve_stats(&self) -> ServeStats {
+        ServeStats {
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            batched_requests: self.shared.batched_requests.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Admit one request for `tenant`: compile (or cache-hit) the
+    /// graph, validate inputs, and park it. Admission failures are
+    /// synchronous typed errors; the returned [`Ticket`] resolves once
+    /// a pool worker executes the request.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        g: &EinGraph,
+        inputs: HashMap<VertexId, Tensor>,
+    ) -> Result<Ticket> {
+        let sh = &*self.shared;
+        sh.submitted.fetch_add(1, Ordering::Relaxed);
+        let exe = match sh.session.compile(g) {
+            Ok(e) => Arc::new(e),
+            Err(e) => {
+                sh.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        // Validate up front so a malformed request is rejected at
+        // admission instead of poisoning a coalesced batch later.
+        for v in g.inputs() {
+            let vert = g.vertex(v);
+            match inputs.get(&v) {
+                None => {
+                    sh.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::exec_failure(
+                        None,
+                        0,
+                        ExecCause::MissingInput {
+                            vertex: vert.name.clone(),
+                        },
+                    ));
+                }
+                Some(t) if t.shape() != vert.bound.as_slice() => {
+                    sh.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::exec_failure(
+                        None,
+                        0,
+                        ExecCause::ShapeMismatch {
+                            vertex: vert.name.clone(),
+                            got: t.shape().to_vec(),
+                            want: vert.bound.clone(),
+                        },
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending {
+            tenant: tenant.to_string(),
+            exe,
+            inputs,
+            enqueued: Instant::now(),
+            tx,
+        };
+        {
+            let mut q = sh.q.lock().unwrap();
+            if !q.open {
+                sh.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::serve_rejected(tenant, ServeCause::ShuttingDown));
+            }
+            if q.depth >= sh.cfg.max_queue_depth {
+                sh.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::serve_rejected(
+                    tenant,
+                    ServeCause::QueueFull {
+                        depth: q.depth,
+                        limit: sh.cfg.max_queue_depth,
+                    },
+                ));
+            }
+            let ti = match q.tenants.iter().position(|(name, _)| name == tenant) {
+                Some(i) => i,
+                None => {
+                    q.tenants.push((tenant.to_string(), VecDeque::new()));
+                    q.tenants.len() - 1
+                }
+            };
+            q.tenants[ti].1.push_back(pending);
+            q.depth += 1;
+        }
+        sh.cv.notify_all();
+        Ok(Ticket {
+            tenant: tenant.to_string(),
+            rx,
+        })
+    }
+
+    /// Convenience: `submit` + [`Ticket::wait`].
+    pub fn run(
+        &self,
+        tenant: &str,
+        g: &EinGraph,
+        inputs: HashMap<VertexId, Tensor>,
+    ) -> Result<Response> {
+        self.submit(tenant, g, inputs)?.wait()
+    }
+
+    /// Close admission, drain the queue, and join the pool. Idempotent;
+    /// also runs on drop.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.open = false;
+            // a never-started server must still drain its queue
+            q.started = true;
+        }
+        self.shared.cv.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let mut q = sh.q.lock().unwrap();
+        loop {
+            if !q.open && q.depth == 0 {
+                return;
+            }
+            if q.started && q.depth > 0 {
+                break;
+            }
+            q = sh.cv.wait(q).unwrap();
+        }
+        // Seed: pop the front of the next non-empty tenant subqueue in
+        // round-robin order, so a hot tenant cannot starve a cold one.
+        let nt = q.tenants.len();
+        let mut seed = None;
+        for off in 0..nt {
+            let ti = (q.rr + off) % nt;
+            if let Some(p) = q.tenants[ti].1.pop_front() {
+                q.rr = (ti + 1) % nt;
+                q.depth -= 1;
+                seed = Some(p);
+                break;
+            }
+        }
+        let Some(seed) = seed else {
+            drop(q);
+            continue;
+        };
+        let mut batch = vec![seed];
+        if sh.cfg.max_batch > 1 {
+            // Gather co-batchable requests (same plan-cache artifact),
+            // holding the window open until full, deadline, or
+            // shutdown. The lock is released while waiting.
+            let key = batch[0].exe.artifact_key();
+            let deadline = Instant::now() + sh.cfg.batch_window;
+            loop {
+                gather(&mut q, key, &mut batch, sh.cfg.max_batch);
+                if batch.len() >= sh.cfg.max_batch || !q.open {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = sh.cv.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+            }
+        }
+        drop(q);
+        execute(sh, batch);
+    }
+}
+
+/// Remove up to `cap - batch.len()` requests whose executable resolved
+/// to `key`'s artifact, sweeping tenants in round-robin order and
+/// taking at most one request per tenant per sweep — batching is a
+/// shared ride, not a hot tenant's express lane. Within a tenant,
+/// requests of a given signature leave in FIFO order.
+fn gather(q: &mut QueueState, key: usize, batch: &mut Vec<Pending>, cap: usize) {
+    loop {
+        let mut took = false;
+        let nt = q.tenants.len();
+        for off in 0..nt {
+            if batch.len() >= cap {
+                return;
+            }
+            let ti = (q.rr + off) % nt;
+            let dq = &mut q.tenants[ti].1;
+            if let Some(pos) = dq.iter().position(|p| p.exe.artifact_key() == key) {
+                let p = dq.remove(pos).expect("position just found");
+                q.depth -= 1;
+                batch.push(p);
+                took = true;
+            }
+        }
+        if !took || batch.len() >= cap {
+            return;
+        }
+    }
+}
+
+/// Run one dequeued batch and deliver each member's result.
+fn execute(sh: &Shared, batch: Vec<Pending>) {
+    let start = Instant::now();
+    let seq = sh.seq.fetch_add(1, Ordering::Relaxed);
+    let k = batch.len();
+    if k == 1 {
+        let p = batch.into_iter().next().expect("k == 1");
+        let wait = start.duration_since(p.enqueued).as_secs_f64();
+        let result = p.exe.run(&p.inputs).map(|(outputs, mut report)| {
+            report.batched_with = 1;
+            report.queue_wait_s = wait;
+            Response {
+                outputs,
+                report,
+                seq,
+            }
+        });
+        if result.is_ok() {
+            sh.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = p.tx.send(result);
+        return;
+    }
+    match run_batched(sh, &batch, start, seq) {
+        Ok(responses) => {
+            sh.batches.fetch_add(1, Ordering::Relaxed);
+            sh.batched_requests.fetch_add(k as u64, Ordering::Relaxed);
+            sh.completed.fetch_add(k as u64, Ordering::Relaxed);
+            for (p, resp) in batch.into_iter().zip(responses) {
+                let _ = p.tx.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            // The coalesced execution failed as a unit: every member
+            // gets a typed error naming the batch size and root cause.
+            let detail = e.to_string();
+            for p in batch {
+                let err = Error::serve_rejected(
+                    p.tenant,
+                    ServeCause::BatchFailed {
+                        batched_with: k,
+                        detail: detail.clone(),
+                    },
+                );
+                let _ = p.tx.send(Err(err));
+            }
+        }
+    }
+}
+
+/// Coalesced execution: translate each member's inputs to the stored
+/// numbering, stack, run the cached (or freshly compiled) twin once,
+/// split every output back, and translate into each member's own
+/// numbering. Members may come from differently-numbered (but
+/// canonically equal) graphs — their per-executable remaps bridge the
+/// difference.
+fn run_batched(
+    sh: &Shared,
+    batch: &[Pending],
+    start: Instant,
+    seq: u64,
+) -> Result<Vec<Response>> {
+    let k = batch.len();
+    let solo = &batch[0].exe;
+    let class = size_class(k);
+    let twin = twin_for(sh, solo, class)?;
+    let mapped: Vec<HashMap<VertexId, Tensor>> = batch
+        .iter()
+        .map(|p| {
+            p.inputs
+                .iter()
+                .map(|(v, t)| (p.exe.to_stored(*v), t.clone()))
+                .collect()
+        })
+        .collect();
+    let stacked = stack_inputs(solo, class, &mapped)?;
+    let (outs, report) = twin.run(&stacked)?;
+    let mut per_member: Vec<HashMap<VertexId, Tensor>> =
+        (0..k).map(|_| HashMap::with_capacity(outs.len())).collect();
+    for (v, t) in &outs {
+        let slices = split_output(t, k)?;
+        for (r, s) in slices.into_iter().enumerate() {
+            per_member[r].insert(batch[r].exe.to_presented(*v), s);
+        }
+    }
+    Ok(per_member
+        .into_iter()
+        .zip(batch)
+        .map(|(outputs, p)| {
+            let mut rep = report.clone();
+            rep.batched_with = k;
+            rep.queue_wait_s = start.duration_since(p.enqueued).as_secs_f64();
+            Response {
+                outputs,
+                report: rep,
+                seq,
+            }
+        })
+        .collect())
+}
+
+/// Fetch or compile the batched twin for `(solo, class)`. Compilation
+/// happens outside the cache lock; a racing worker's duplicate twin is
+/// discarded in favour of the incumbent, mirroring the session plan
+/// cache's publish rule.
+fn twin_for(sh: &Shared, solo: &Arc<Executable>, class: usize) -> Result<Arc<Executable>> {
+    let key = (solo.artifact_key(), class);
+    if let Some(t) = sh.twins.lock().unwrap().get(&key) {
+        return Ok(Arc::clone(t));
+    }
+    let twin = Arc::new(batched_twin(&sh.session, solo, class)?);
+    let mut twins = sh.twins.lock().unwrap();
+    Ok(Arc::clone(twins.entry(key).or_insert(twin)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::DriverConfig;
+    use crate::models::matchain;
+
+    fn small_session() -> Session {
+        Session::new(DriverConfig {
+            workers: 2,
+            p: 2,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn solo_serve_matches_direct_run() {
+        let chain = matchain::chain_graph(16, false).unwrap();
+        let inputs = matchain::chain_inputs(&chain, 7);
+        let session = small_session();
+        let exe = session.compile(&chain.graph).unwrap();
+        let (direct, _) = exe.run(&inputs).unwrap();
+        let server = Server::with_session(
+            Arc::new(session),
+            ServeConfig {
+                max_batch: 1,
+                ..Default::default()
+            },
+        );
+        let resp = server.run("t0", &chain.graph, inputs).unwrap();
+        assert_eq!(resp.report.batched_with, 1);
+        assert!(resp.report.queue_wait_s >= 0.0);
+        assert_eq!(
+            super::super::output_checksum(&resp.outputs),
+            super::super::output_checksum(&direct)
+        );
+        let stats = server.serve_stats();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.batches, 0);
+    }
+
+    #[test]
+    fn queue_full_and_shutdown_are_typed_rejections() {
+        let chain = matchain::chain_graph(8, false).unwrap();
+        let server = Server::new(
+            small_session(),
+            ServeConfig {
+                serve_workers: 1,
+                max_batch: 1,
+                max_queue_depth: 2,
+                autostart: false,
+                ..Default::default()
+            },
+        );
+        let t1 = server
+            .submit("a", &chain.graph, matchain::chain_inputs(&chain, 1))
+            .unwrap();
+        let t2 = server
+            .submit("b", &chain.graph, matchain::chain_inputs(&chain, 2))
+            .unwrap();
+        let err = server
+            .submit("c", &chain.graph, matchain::chain_inputs(&chain, 3))
+            .unwrap_err();
+        assert!(err.is_queue_full(), "{err}");
+        assert!(err.to_string().contains("tenant c"), "{err}");
+        assert_eq!(server.queue_depth(), 2);
+        server.start();
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+        server.shutdown();
+        let err = server
+            .submit("d", &chain.graph, matchain::chain_inputs(&chain, 4))
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("shutting down"),
+            "expected shutdown rejection: {err}"
+        );
+        let stats = server.serve_stats();
+        assert_eq!(stats.submitted, 4);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.rejected, 2);
+    }
+
+    #[test]
+    fn bad_inputs_rejected_at_admission() {
+        let chain = matchain::chain_graph(8, false).unwrap();
+        let server = Server::new(small_session(), ServeConfig::default());
+        let err = server
+            .submit("t", &chain.graph, HashMap::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing input"), "{err}");
+        let mut bad = matchain::chain_inputs(&chain, 0);
+        let first = *bad.keys().next().unwrap();
+        bad.insert(first, Tensor::zeros(&[3]));
+        let err = server.submit("t", &chain.graph, bad).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+        assert_eq!(server.serve_stats().rejected, 2);
+    }
+
+    #[test]
+    fn staged_queue_coalesces_into_one_batch() {
+        let chain = matchain::chain_graph(16, false).unwrap();
+        let session = small_session();
+        let server = Server::new(
+            session,
+            ServeConfig {
+                serve_workers: 1,
+                max_batch: 8,
+                batch_window: Duration::from_millis(50),
+                autostart: false,
+                ..Default::default()
+            },
+        );
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| {
+                server
+                    .submit(
+                        &format!("tenant-{i}"),
+                        &chain.graph,
+                        matchain::chain_inputs(&chain, i as u64),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(server.queue_depth(), 4);
+        server.start();
+        let seqs: Vec<u64> = tickets
+            .into_iter()
+            .map(|t| {
+                let resp = t.wait().unwrap();
+                assert_eq!(resp.report.batched_with, 4);
+                assert!(resp.report.queue_wait_s >= 0.0);
+                resp.seq
+            })
+            .collect();
+        // one execution served all four requests
+        assert!(seqs.windows(2).all(|w| w[0] == w[1]));
+        let stats = server.serve_stats();
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.batched_requests, 4);
+        assert_eq!(stats.completed, 4);
+        assert_eq!(server.twin_cache_entries(), 1);
+    }
+}

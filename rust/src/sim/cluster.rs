@@ -59,6 +59,14 @@
 //! whenever a level drains unevenly, which is exactly where the paper's
 //! event-driven cost model (§7) says work should overlap.
 //!
+//! Determinism here is also what makes the serving layer's dynamic
+//! batching safe: [`crate::serve::Server`] stacks concurrent same-plan
+//! requests along a fresh leading batch label and runs the batched twin
+//! through this same executor, relying on the guarantees above (fixed
+//! `deps`-order aggregation, shape-determined shard boundaries) plus
+//! intra-op kernel sharding over the batch entries for its parallelism —
+//! the batch dimension itself is left unsplit by the twin's plan.
+//!
 //! The modeled makespan/traffic accounting ([`Cluster::model`]) is shared
 //! by both modes and unchanged by the scheduler choice: `ExecReport`'s
 //! `sim_*`/`bytes_*` fields describe the modeled cluster, `wall_s` the

@@ -78,6 +78,27 @@ pub fn backoff_delay(
         .min(cap)
 }
 
+/// Nearest-rank percentile of a sample set, deterministic for any input
+/// order: the `ceil(pct/100 * n)`-th smallest sample (1-indexed), with
+/// `pct` clamped to `[0, 100]` and rank clamped to `[1, n]` so `pct = 0`
+/// yields the minimum and `pct = 100` the maximum. Ordering uses
+/// `f32`/`f64` total order, so NaN samples sort last instead of
+/// poisoning the comparison. Returns NaN for an empty sample set.
+///
+/// Used by the serving load generator's p50/p95/p99 latency summary and
+/// the CLI `run --repeat` timing summary.
+pub fn percentile(samples: &[f64], pct: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let n = sorted.len();
+    let pct = pct.clamp(0.0, 100.0);
+    let rank = ((pct / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 /// Run `f(chunk_index)` for `n` chunks on up to `threads` OS threads.
 /// A minimal data-parallel scatter used by the executor and benches.
 pub fn parallel_for<F>(n: usize, threads: usize, f: F)
@@ -939,6 +960,35 @@ mod tests {
         let n = 100_000;
         let mean: f32 = (0..n).map(|_| r.next_centered()).sum::<f32>() / n as f32;
         assert!(mean.abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [15.0, 20.0, 35.0, 40.0, 50.0];
+        // classic nearest-rank worked example: ranks ceil(p/100 * 5)
+        assert_eq!(percentile(&v, 30.0), 20.0);
+        assert_eq!(percentile(&v, 40.0), 20.0);
+        assert_eq!(percentile(&v, 50.0), 35.0);
+        assert_eq!(percentile(&v, 100.0), 50.0);
+        assert_eq!(percentile(&v, 0.0), 15.0, "p0 is the minimum");
+        // single sample: every percentile is that sample
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_order_invariant_and_total() {
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        let shuffled = [3.0, 1.0, 4.0, 2.0];
+        for p in [0.0, 25.0, 50.0, 75.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&sorted, p), percentile(&shuffled, p));
+        }
+        // out-of-range percentiles clamp instead of indexing out of bounds
+        assert_eq!(percentile(&sorted, -10.0), 1.0);
+        assert_eq!(percentile(&sorted, 250.0), 4.0);
+        // NaN samples sort last (total order) and empty input returns NaN
+        assert_eq!(percentile(&[f64::NAN, 2.0, 1.0], 50.0), 2.0);
+        assert!(percentile(&[], 50.0).is_nan());
     }
 
     #[test]

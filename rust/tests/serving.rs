@@ -1,0 +1,283 @@
+//! Differential and fairness tests for the multi-tenant serving
+//! subsystem (`serve::Server`).
+//!
+//! The load-bearing invariant: a coalesced (batched) execution returns
+//! outputs **bitwise-identical** to running each member request solo —
+//! across batch sizes (including a padded non-power-of-two), across
+//! tenants submitting differently-numbered but canonically equal
+//! graphs, and in both real-execution scheduler modes. On top of that:
+//! round-robin fair scheduling (a hot tenant cannot starve a cold one)
+//! and bounded-queue admission control.
+
+use eindecomp::coordinator::driver::DriverConfig;
+use eindecomp::coordinator::session::Session;
+use eindecomp::einsum::canon::canonicalize;
+use eindecomp::einsum::expr::EinSum;
+use eindecomp::einsum::graph::{EinGraph, VertexId};
+use eindecomp::einsum::label::labels;
+use eindecomp::serve::{ServeConfig, Server, Ticket};
+use eindecomp::sim::ExecMode;
+use eindecomp::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A two-matmul chain `Z = (A·B)·C`, with fully renamed labels and a
+/// different vertex insertion order when `renamed` — canonically equal
+/// to the plain variant but numbered differently, so serving has to
+/// bridge the remap when coalescing both into one batch.
+fn chain2(renamed: bool, s: usize) -> EinGraph {
+    let mut g = EinGraph::new();
+    let (li, lj, lk) = if renamed {
+        ("p", "q", "r")
+    } else {
+        ("i", "j", "k")
+    };
+    let (i, j, k) = (labels(li)[0], labels(lj)[0], labels(lk)[0]);
+    let mm = || EinSum::contraction(vec![i, j], vec![j, k], vec![i, k]);
+    if renamed {
+        let c = g.input("C2", vec![s, s]);
+        let a = g.input("A2", vec![s, s]);
+        let b = g.input("B2", vec![s, s]);
+        let ab = g.add("AB2", mm(), vec![a, b]).unwrap();
+        g.add("Z2", mm(), vec![ab, c]).unwrap();
+    } else {
+        let a = g.input("A", vec![s, s]);
+        let b = g.input("B", vec![s, s]);
+        let c = g.input("C", vec![s, s]);
+        let ab = g.add("AB", mm(), vec![a, b]).unwrap();
+        g.add("Z", mm(), vec![ab, c]).unwrap();
+    }
+    g
+}
+
+fn inputs_for(g: &EinGraph, seed: u64) -> HashMap<VertexId, Tensor> {
+    g.inputs()
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (v, Tensor::random(&g.vertex(v).bound, seed + i as u64)))
+        .collect()
+}
+
+fn session_with(mode: ExecMode) -> Arc<Session> {
+    Arc::new(
+        Session::new(DriverConfig {
+            workers: 2,
+            p: 2,
+            exec_mode: mode,
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn assert_bitwise_eq(got: &HashMap<VertexId, Tensor>, want: &HashMap<VertexId, Tensor>) {
+    assert_eq!(got.len(), want.len(), "output vertex sets differ");
+    for (v, w) in want {
+        let t = got.get(v).expect("missing output vertex");
+        assert_eq!(t.shape(), w.shape(), "output {v} shape differs");
+        let eq = t
+            .data()
+            .iter()
+            .zip(w.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(eq, "output {v} differs bitwise from the solo run");
+    }
+}
+
+/// Batched executions are bitwise-identical to solo runs for batch
+/// sizes {1, 2, 4, 7} (7 exercises zero-padding up to class 8), with
+/// members alternating between two differently-numbered canonical
+/// twins, in both scheduler modes.
+#[test]
+fn batched_bitwise_identical_to_solo_across_sizes_and_modes() {
+    let ga = chain2(false, 16);
+    let gb = chain2(true, 16);
+    assert_eq!(
+        canonicalize(&ga).signature,
+        canonicalize(&gb).signature,
+        "test premise: the two variants must be canonically equal"
+    );
+    for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+        let session = session_with(mode);
+        let exe_a = session.compile(&ga).unwrap();
+        let exe_b = session.compile(&gb).unwrap();
+        assert_eq!(
+            exe_a.artifact_key(),
+            exe_b.artifact_key(),
+            "canonical twins must share one plan-cache artifact"
+        );
+        for k in [1usize, 2, 4, 7] {
+            let server = Server::with_session(
+                Arc::clone(&session),
+                ServeConfig {
+                    serve_workers: 1,
+                    max_batch: 8,
+                    batch_window: Duration::from_millis(100),
+                    autostart: false,
+                    ..Default::default()
+                },
+            );
+            // solo references + staged submissions, request r uses
+            // variant r % 2 and its own seeded inputs
+            let mut refs = Vec::with_capacity(k);
+            let mut tickets: Vec<Ticket> = Vec::with_capacity(k);
+            for r in 0..k {
+                let (g, exe) = if r % 2 == 0 {
+                    (&ga, &exe_a)
+                } else {
+                    (&gb, &exe_b)
+                };
+                let inputs = inputs_for(g, 100 + r as u64);
+                let (solo, _) = exe.run(&inputs).unwrap();
+                refs.push(solo);
+                tickets.push(
+                    server
+                        .submit(&format!("tenant-{}", r % 3), g, inputs)
+                        .unwrap(),
+                );
+            }
+            assert_eq!(server.queue_depth(), k);
+            server.start();
+            for (r, t) in tickets.into_iter().enumerate() {
+                let resp = t.wait().unwrap();
+                assert_eq!(
+                    resp.report.batched_with, k,
+                    "mode {mode:?}, k={k}: wrong coalesced size"
+                );
+                assert!(resp.report.queue_wait_s >= 0.0);
+                assert_bitwise_eq(&resp.outputs, &refs[r]);
+            }
+            let stats = server.serve_stats();
+            assert_eq!(stats.completed, k as u64);
+            assert_eq!(stats.rejected, 0);
+            if k > 1 {
+                assert_eq!(stats.batches, 1, "staged queue must coalesce once");
+                assert_eq!(stats.batched_requests, k as u64);
+                assert_eq!(server.twin_cache_entries(), 1);
+            } else {
+                assert_eq!(stats.batches, 0);
+            }
+        }
+        // the batcher never re-ran the planner: one solo plan total
+        // (twins compile through Session::compile_with_plan)
+        assert_eq!(session.stats().planner_runs, 1, "mode {mode:?}");
+    }
+}
+
+/// Round-robin fair scheduling: with one serving worker and batching
+/// off, a cold tenant's 4 requests interleave with a hot tenant's 12
+/// instead of waiting behind them. Execution sequence numbers make the
+/// order observable and (with a staged queue) deterministic.
+#[test]
+fn cold_tenant_does_not_starve_behind_hot_tenant() {
+    let g = chain2(false, 12);
+    let server = Server::with_session(
+        session_with(ExecMode::WorkStealing),
+        ServeConfig {
+            serve_workers: 1,
+            max_batch: 1,
+            autostart: false,
+            ..Default::default()
+        },
+    );
+    let hot: Vec<Ticket> = (0..12)
+        .map(|r| server.submit("hot", &g, inputs_for(&g, r)).unwrap())
+        .collect();
+    let cold: Vec<Ticket> = (0..4)
+        .map(|r| server.submit("cold", &g, inputs_for(&g, 50 + r)).unwrap())
+        .collect();
+    server.start();
+    let hot_seqs: Vec<u64> = hot.into_iter().map(|t| t.wait().unwrap().seq).collect();
+    let cold_seqs: Vec<u64> = cold.into_iter().map(|t| t.wait().unwrap().seq).collect();
+    let cold_max = *cold_seqs.iter().max().unwrap();
+    let hot_max = *hot_seqs.iter().max().unwrap();
+    assert!(
+        cold_max < hot_max,
+        "cold tenant finished at seq {cold_max}, after hot's last {hot_max}"
+    );
+    // strict round-robin: cold's 4 requests all execute within the
+    // first 2*4 executions
+    assert!(
+        cold_max <= 7,
+        "cold tenant starved: last request executed at seq {cold_max}"
+    );
+}
+
+/// Admission control under a full queue: typed rejection, accurate
+/// depth, and a clean drain once started.
+#[test]
+fn bounded_queue_rejects_then_drains() {
+    let g = chain2(false, 12);
+    let server = Server::with_session(
+        session_with(ExecMode::WorkStealing),
+        ServeConfig {
+            serve_workers: 2,
+            max_batch: 8,
+            max_queue_depth: 3,
+            autostart: false,
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<Ticket> = (0..3)
+        .map(|r| {
+            server
+                .submit(&format!("t{r}"), &g, inputs_for(&g, r))
+                .unwrap()
+        })
+        .collect();
+    let err = server.submit("t3", &g, inputs_for(&g, 9)).unwrap_err();
+    assert!(err.is_queue_full(), "{err}");
+    server.start();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let stats = server.serve_stats();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(server.queue_depth(), 0);
+}
+
+/// Concurrent tenants over one shared session: every response matches
+/// its solo reference even when batches form nondeterministically under
+/// live load, and the compile cache planned only once.
+#[test]
+fn live_load_stays_bitwise_identical() {
+    let ga = chain2(false, 16);
+    let gb = chain2(true, 16);
+    let session = session_with(ExecMode::WorkStealing);
+    let exe_a = session.compile(&ga).unwrap();
+    let exe_b = session.compile(&gb).unwrap();
+    let server = Server::with_session(
+        Arc::clone(&session),
+        ServeConfig {
+            serve_workers: 2,
+            max_batch: 4,
+            batch_window: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    std::thread::scope(|scope| {
+        for c in 0..4usize {
+            let (server, ga, gb, exe_a, exe_b) = (&server, &ga, &gb, &exe_a, &exe_b);
+            scope.spawn(move || {
+                for i in 0..6usize {
+                    let (g, exe) = if (c + i) % 2 == 0 {
+                        (ga, exe_a)
+                    } else {
+                        (gb, exe_b)
+                    };
+                    let inputs = inputs_for(g, (c * 31 + i) as u64);
+                    let (want, _) = exe.run(&inputs).unwrap();
+                    let resp = server.run(&format!("tenant-{c}"), g, inputs).unwrap();
+                    assert!(resp.report.batched_with >= 1);
+                    assert_bitwise_eq(&resp.outputs, &want);
+                }
+            });
+        }
+    });
+    let stats = server.serve_stats();
+    assert_eq!(stats.completed, 24);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(session.stats().planner_runs, 1);
+}
