@@ -14,7 +14,7 @@
 use eindecomp::coordinator::driver::{Driver, DriverConfig};
 use eindecomp::decomp::baselines::Strategy;
 use eindecomp::models::llama::{llama_graph, llama_inputs, LlamaConfig};
-use eindecomp::runtime::Backend;
+use eindecomp::runtime::{Backend, MemoryBudget};
 use eindecomp::sim::NetworkProfile;
 
 fn main() -> eindecomp::Result<()> {
@@ -81,6 +81,51 @@ fn main() -> eindecomp::Result<()> {
         );
     }
     println!("(all strategies produced numerically identical first-token activations)");
+
+    // ---------- Part 1b: out-of-core execution under a memory budget ----------
+    // Rerun the EinDecomp arm with a per-worker tile budget that the
+    // weights alone overflow — the `--mem-budget-mb` regime. Cold tiles
+    // spill to disk and fault back on demand (Experiment 4's offload
+    // setting, executed for real rather than modeled), and the first-token
+    // activations must still match the unbudgeted run bit for bit.
+    let mk_cfg = |budget: Option<MemoryBudget>| DriverConfig {
+        workers: p,
+        p,
+        strategy: Strategy::EinDecomp,
+        backend: Backend::Auto,
+        network: NetworkProfile::gpu_server_v100(),
+        mem_budget: budget,
+        ..Default::default()
+    };
+    let (full_outs, full_rep) = Driver::new(mk_cfg(None))?.run(&model.graph, &inputs)?;
+    let peak = full_rep.exec.peak_resident_bytes.iter().copied().max().unwrap_or(0);
+    let weight_bytes = cfg.params() as u64 * 4;
+    let budget = (peak / 2).min(3 * weight_bytes / 4).max(1);
+    assert!(weight_bytes > budget, "weights must overflow the per-worker budget");
+    let (oo_outs, oo_rep) =
+        Driver::new(mk_cfg(Some(MemoryBudget::per_worker_bytes(budget))))?
+            .run(&model.graph, &inputs)?;
+    let (got, want) = (&oo_outs[&model.out], &full_outs[&model.out]);
+    assert_eq!(got.shape(), want.shape());
+    assert!(
+        got.data().iter().zip(want.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "out-of-core run must be bitwise-identical to the unbudgeted run"
+    );
+    let oo = &oo_rep.exec;
+    let oo_peak = oo.peak_resident_bytes.iter().copied().max().unwrap_or(0);
+    assert!(oo.spill_bytes > 0, "an over-budget run must spill");
+    assert!(oo_peak <= budget, "peak resident {oo_peak} B exceeds budget {budget} B");
+    println!(
+        "\nout-of-core: budget {:.2} MiB/worker (weights alone are {:.2} MiB) -> \
+         spilled {:.2} MiB, {} faults, stall {:.1} ms, peak resident {:.2} MiB; \
+         outputs bitwise-identical to the unbudgeted run",
+        budget as f64 / (1 << 20) as f64,
+        weight_bytes as f64 / (1 << 20) as f64,
+        oo.spill_bytes as f64 / (1 << 20) as f64,
+        oo.spill_faults,
+        oo.spill_stall_s * 1e3,
+        oo_peak as f64 / (1 << 20) as f64,
+    );
 
     // ---------- Part 2: paper-scale dry run (LLaMA-7B, V100 x8) ----------
     println!("\nLLaMA-7B shapes, batch=8 seq=1024, modeled V100x8 (Experiment 3, middle panel):");

@@ -16,9 +16,11 @@
 //! because paging/sharding replaces OOM.
 
 use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
-use eindecomp::models::llama::{llama_graph, weight_bytes, weight_set, LlamaConfig};
+use eindecomp::models::llama::{llama_graph, llama_inputs, weight_bytes, weight_set, LlamaConfig};
+use eindecomp::runtime::{MemoryBudget, NativeEngine};
 use eindecomp::sim::memory::{model_with_memory, MemoryConfig, WeightPolicy};
-use eindecomp::sim::{Cluster, NetworkProfile};
+use eindecomp::sim::{Cluster, ExecMode, NetworkProfile};
+use eindecomp::util::Json;
 
 fn main() {
     let p = 8;
@@ -83,4 +85,137 @@ fn main() {
             weight_bytes(&llama_graph(&mk(512)).unwrap()) as f64 / (1u64 << 30) as f64
         );
     }
+
+    // ---------- real-executor arm: out-of-core budget sweep -------------
+    // The tables above are modeled; this arm *runs* a container-scale
+    // stack under shrinking `--mem-budget-mb` arms: cold tiles spill to
+    // disk and fault back, outputs must stay bitwise-identical, and
+    // per-worker peak residency must respect the budget. Makespan is
+    // modeled as the unbudgeted makespan plus host-link time for the
+    // spill traffic (every spilled byte crosses the host link twice —
+    // out and back), mirroring `model_with_memory`'s paging charge.
+    // Writes BENCH_memory.json (checked by check_lowering_json.py).
+    let smoke = std::env::var("EINDECOMP_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let real_cfg = LlamaConfig {
+        layers: if smoke { 1 } else { 2 },
+        batch: 2,
+        seq: if smoke { 16 } else { 32 },
+        model_dim: if smoke { 32 } else { 64 },
+        heads: 2,
+        head_dim: if smoke { 16 } else { 32 },
+        ffn_dim: if smoke { 64 } else { 128 },
+    };
+    let rp = 4;
+    let engine = NativeEngine::new();
+    let rnet = NetworkProfile::cpu_cluster();
+    let model = llama_graph(&real_cfg).unwrap();
+    let inputs = llama_inputs(&model, 41);
+    let plan = assign(&model.graph, &Strategy::EinDecomp, rp, &roles).unwrap();
+    let base = Cluster::new(rp, rnet.clone()).with_exec_mode(ExecMode::LevelBarrier);
+    // largest single-task working set: output tile + every dep tile
+    let tg = base.lower(&model.graph, &plan).unwrap();
+    let floor: u64 = tg
+        .tasks
+        .iter()
+        .map(|t| {
+            t.out_bytes as u64
+                + t.deps
+                    .iter()
+                    .map(|d| tg.tasks[d.0].out_bytes as u64)
+                    .sum::<u64>()
+        })
+        .max()
+        .unwrap_or(0);
+    let (want, base_rep) = base.execute(&model.graph, &plan, &engine, &inputs).unwrap();
+    let peak = base_rep.peak_resident_bytes.iter().copied().max().unwrap_or(0);
+    println!(
+        "\n=== real-executor budget sweep | p={rp}, {} layers, unbudgeted peak {:.1} KiB/worker ===",
+        real_cfg.layers,
+        peak as f64 / 1024.0
+    );
+    println!(
+        "{:>14} {:>12} {:>8} {:>12} {:>12} {:>10}",
+        "budget KiB", "spill KiB", "faults", "peak KiB", "sim ms", "bitwise"
+    );
+    // widely-separated arms so spill traffic (and hence modeled makespan)
+    // grows as the budget shrinks; 0 = unlimited. The tightest arm must sit
+    // strictly below the unbudgeted peak (else nothing ever evicts) while
+    // staying at or above the working-set floor (else nothing can run) —
+    // small smoke configs can push 2*floor past the peak, so fall back to
+    // the bare floor there.
+    let mut tight = (peak / 4).max(2 * floor);
+    if tight >= peak {
+        tight = (peak / 4).max(floor);
+    }
+    let arms: Vec<u64> = vec![0, (2 * peak / 3).max(2 * floor), tight];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut tight_spill = 0u64;
+    for &budget in &arms {
+        let cluster = if budget == 0 {
+            base.clone()
+        } else {
+            base.clone()
+                .with_mem_budget(MemoryBudget::per_worker_bytes(budget))
+        };
+        let (got, rep) = cluster.execute(&model.graph, &plan, &engine, &inputs).unwrap();
+        for out in model.graph.outputs() {
+            let (a, b) = (&got[&out], &want[&out]);
+            assert!(
+                a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "budget {budget}: output {out} diverged bitwise from the unbudgeted run"
+            );
+        }
+        let peak_max = rep.peak_resident_bytes.iter().copied().max().unwrap_or(0);
+        if budget > 0 {
+            for (w, &r) in rep.peak_resident_bytes.iter().enumerate() {
+                assert!(r <= budget, "worker {w} peak {r} exceeds budget {budget}");
+            }
+            tight_spill = rep.spill_bytes; // last arm is the tightest
+        }
+        let sim_s = base_rep.sim_makespan_s + rnet.host_s(2 * rep.spill_bytes as usize);
+        println!(
+            "{:>14} {:>12.1} {:>8} {:>12.1} {:>12.3} {:>10}",
+            if budget == 0 { "unlimited".to_string() } else { format!("{:.1}", budget as f64 / 1024.0) },
+            rep.spill_bytes as f64 / 1024.0,
+            rep.spill_faults,
+            peak_max as f64 / 1024.0,
+            sim_s * 1e3,
+            "yes"
+        );
+        rows.push(Json::Obj(vec![
+            ("workload".into(), Json::str("llama-real")),
+            ("budget_bytes".into(), Json::num(budget as f64)),
+            ("spill_bytes".into(), Json::num(rep.spill_bytes as f64)),
+            ("spill_faults".into(), Json::num(rep.spill_faults as f64)),
+            ("spill_stall_s".into(), Json::num(rep.spill_stall_s)),
+            (
+                "peak_resident_bytes".into(),
+                Json::Arr(
+                    rep.peak_resident_bytes
+                        .iter()
+                        .map(|&b| Json::num(b as f64))
+                        .collect(),
+                ),
+            ),
+            ("peak_resident_bytes_max".into(), Json::num(peak_max as f64)),
+            ("bitwise_match".into(), Json::Bool(true)),
+            ("sim_makespan_s".into(), Json::num(sim_s)),
+            ("wall_s".into(), Json::num(rep.wall_s)),
+        ]));
+    }
+    assert!(
+        tight_spill > 0,
+        "tightest budget arm never spilled — the out-of-core path was not exercised"
+    );
+    let report = Json::Obj(vec![
+        ("p".into(), Json::num(rp as f64)),
+        ("floor_bytes".into(), Json::num(floor as f64)),
+        ("unbudgeted_peak_bytes".into(), Json::num(peak as f64)),
+        ("base_sim_makespan_s".into(), Json::num(base_rep.sim_makespan_s)),
+        ("arms".into(), Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_memory.json", report.render()).expect("write BENCH_memory.json");
+    println!("wrote BENCH_memory.json");
 }

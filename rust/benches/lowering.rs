@@ -168,9 +168,15 @@ fn bench_workload(name: &str, g: &EinGraph, plan: &Plan, iters: usize) -> Json {
 
     assert_all_equals_none_bitwise(name, g, plan);
 
+    // residency estimate (TraProgram::residency_stats): the traffic wins
+    // above trade against peak live bytes — the offload bench's axis.
+    let res_unopt = from_plan(g, plan).unwrap().residency_stats();
+    let res_opt = optimized_prog.residency_stats();
+
     println!(
         "{name:<18} ref {ref_ms:8.3} ms | ir {ir_ms:8.3} ms | tasks {} -> {} \
-         (repart {} -> {}, agg {} -> {}, repart bytes {} -> {})",
+         (repart {} -> {}, agg {} -> {}, repart bytes {} -> {}) \
+         | residency peak {} -> {} B",
         reference.len(),
         optimized.len(),
         count(&reference, is_repart),
@@ -179,6 +185,8 @@ fn bench_workload(name: &str, g: &EinGraph, plan: &Plan, iters: usize) -> Json {
         count(&optimized, is_agg),
         repart_bytes(&reference),
         repart_bytes(&optimized),
+        res_unopt.peak_bytes,
+        res_opt.peak_bytes,
     );
 
     Json::Obj(vec![
@@ -217,6 +225,22 @@ fn bench_workload(name: &str, g: &EinGraph, plan: &Plan, iters: usize) -> Json {
                 optimized.len() < reference.len()
                     && repart_bytes(&optimized) < repart_bytes(&reference),
             ),
+        ),
+        (
+            "residency_peak_bytes_unoptimized".into(),
+            Json::num(res_unopt.peak_bytes as f64),
+        ),
+        (
+            "residency_peak_bytes_optimized".into(),
+            Json::num(res_opt.peak_bytes as f64),
+        ),
+        (
+            "residency_max_task_bytes_unoptimized".into(),
+            Json::num(res_unopt.max_task_bytes as f64),
+        ),
+        (
+            "residency_max_task_bytes_optimized".into(),
+            Json::num(res_opt.max_task_bytes as f64),
         ),
         ("pass_log".into(), Json::Arr(passes)),
         ("bitwise_unoptimized_equals_reference".into(), Json::Bool(true)),

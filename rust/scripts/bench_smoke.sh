@@ -27,5 +27,9 @@ echo "== faults (EINDECOMP_SMOKE=1): recovery overhead, clean vs faulted =="
 EINDECOMP_SMOKE=1 cargo bench --bench faults
 
 echo
+echo "== fig11_offload (EINDECOMP_SMOKE=1): modeled sweep + real budget arms =="
+EINDECOMP_SMOKE=1 cargo bench --bench fig11_offload
+
+echo
 echo "== fig9_ffnn (modeled, full sweep is cheap) =="
 cargo bench --bench fig9_ffnn

@@ -21,8 +21,17 @@ with the right worker-loss shape (transient: no loss, no recovery
 bytes; permanent: one worker lost), and every faulted arm must cost
 retries and modeled makespan.
 
+When a fourth path is given, also validates BENCH_memory.json from the
+offload bench's real-executor arm: every arm must carry well-formed
+spill counters with the per-worker peak-residency ledger rolling up to
+its max, the unlimited arm must report zero spill overhead, budgeted
+arms must keep every worker's peak at or under the budget, the
+tightest arm must actually spill, every arm must be bitwise-identical
+to the unbudgeted run, and the modeled makespan must be monotone
+non-decreasing as the budget shrinks.
+
 Usage: check_lowering_json.py [BENCH_lowering.json] [BENCH_topology.json]
-                              [BENCH_faults.json]
+                              [BENCH_faults.json] [BENCH_memory.json]
 """
 
 import json
@@ -131,10 +140,70 @@ def check_faults(path: str) -> str:
     return f", {len(workloads)} fault workloads x {len(FAULT_ARMS)} arms"
 
 
+MEMORY_COUNTERS = ["budget_bytes", "spill_bytes", "spill_faults", "peak_resident_bytes_max"]
+
+
+def check_memory(path: str) -> str:
+    """Validate BENCH_memory.json; returns a summary fragment."""
+    report = load(path)
+    arms = report.get("arms")
+    if not isinstance(arms, list) or not arms:
+        fail(f"{path}: top-level 'arms' missing or empty")
+    for k in ("floor_bytes", "unbudgeted_peak_bytes"):
+        if not is_int_valued(report.get(k)) or int(report[k]) <= 0:
+            fail(f"{path}: '{k}' missing or not a positive byte count")
+    for a in arms:
+        tag = f"{a.get('workload')}/budget={a.get('budget_bytes')}"
+        for k in MEMORY_COUNTERS:
+            if not is_int_valued(a.get(k)) or int(a[k]) < 0:
+                fail(f"{tag}: counter '{k}' missing or malformed")
+        for k in ("spill_stall_s", "sim_makespan_s", "wall_s"):
+            v = a.get(k)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+                fail(f"{tag}: '{k}' missing or malformed")
+        per_worker = a.get("peak_resident_bytes")
+        if not isinstance(per_worker, list) or not per_worker:
+            fail(f"{tag}: 'peak_resident_bytes' missing or empty")
+        if any(not is_int_valued(b) or b < 0 for b in per_worker):
+            fail(f"{tag}: malformed per-worker peak residency")
+        # the per-worker ledger must roll up to the reported max
+        if max(int(b) for b in per_worker) != int(a["peak_resident_bytes_max"]):
+            fail(f"{tag}: per-worker peaks do not roll up to peak_resident_bytes_max")
+        if a.get("bitwise_match") is not True:
+            fail(f"{tag}: not marked bitwise-identical to the unbudgeted run")
+        budget = int(a["budget_bytes"])
+        if budget == 0:
+            # unlimited arm: the spill machinery must stay entirely cold
+            if int(a["spill_bytes"]) or int(a["spill_faults"]) or a["spill_stall_s"]:
+                fail(f"{tag}: unlimited arm reports spill overhead")
+        else:
+            if any(int(b) > budget for b in per_worker):
+                fail(f"{tag}: a worker's peak residency exceeds the budget")
+    if not any(int(a["budget_bytes"]) == 0 for a in arms):
+        fail(f"{path}: no unlimited (budget 0) arm")
+    budgeted = [a for a in arms if int(a["budget_bytes"]) > 0]
+    if not budgeted:
+        fail(f"{path}: no budgeted arm")
+    tightest = min(budgeted, key=lambda a: int(a["budget_bytes"]))
+    if int(tightest["spill_bytes"]) <= 0:
+        fail(f"{path}: tightest arm never spilled (out-of-core path unexercised)")
+    # shrinking the budget can only add spill traffic: makespan is
+    # monotone non-decreasing as the budget shrinks (0 = unlimited)
+    ordered = sorted(arms, key=lambda a: -(int(a["budget_bytes"]) or 1 << 62))
+    for prev, nxt in zip(ordered, ordered[1:]):
+        if nxt["sim_makespan_s"] < prev["sim_makespan_s"]:
+            fail(
+                f"{path}: makespan decreased when the budget shrank "
+                f"({prev['budget_bytes']} -> {nxt['budget_bytes']})"
+            )
+    return f", {len(arms)} memory arms (tightest spilled {int(tightest['spill_bytes'])} B)"
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_lowering.json"
     topo_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_topology.json"
     faults_path = sys.argv[3] if len(sys.argv) > 3 else None
+    memory_path = sys.argv[4] if len(sys.argv) > 4 else None
     report = load(path)
 
     workloads = report.get("workloads")
@@ -230,11 +299,12 @@ def main() -> None:
         )
 
     faults_note = check_faults(faults_path) if faults_path else ""
+    memory_note = check_memory(memory_path) if memory_path else ""
     print(
         f"check_lowering_json: OK — {len(workloads)} workloads, "
         f"{len(EXPECTED_PASSES)} passes each, {strict_wins} strict win(s), "
         f"{len(sweep)} topology-sweep entries, {cross_node_wins} "
-        f"cross-node win(s){faults_note}"
+        f"cross-node win(s){faults_note}{memory_note}"
     )
 
 

@@ -8,6 +8,7 @@
 //!                   [--passes all|none|safe|<csv>]
 //!                   [--topology flat|two-level|three-level]
 //!                   [--inject-faults <spec>] [--max-retries N] [--deadline-ms N]
+//!                   [--mem-budget-mb N]
 //! eindecomp explain --model ...         [--workers N] [--p N] [--strategy S]
 //!                   [--passes ...] [--topology ...] [--json]
 //! eindecomp program --file prog.ein     [--p 8] [--run]
@@ -18,7 +19,7 @@ use crate::decomp::baselines::{assign, LabelRoles, Strategy};
 use crate::einsum::parser::parse_program;
 use crate::error::{Error, Result};
 use crate::models::{ffnn, llama, matchain};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, MemoryBudget};
 use crate::sim::network::{NetworkProfile, Topology};
 use crate::tensor::Tensor;
 use crate::tra::passes::PassSelector;
@@ -193,6 +194,24 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--mem-budget-mb N`: per-worker tile-residency budget in MiB.
+/// 0 (or absent) means unlimited — the out-of-core machinery stays off.
+fn parse_mem_budget(args: &Args) -> Result<Option<MemoryBudget>> {
+    match args.get("mem-budget-mb") {
+        None => Ok(None),
+        Some(v) => {
+            let mb: u64 = v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--mem-budget-mb expects MiB, got {v:?}")))?;
+            Ok(if mb == 0 {
+                None
+            } else {
+                Some(MemoryBudget::per_worker_mb(mb))
+            })
+        }
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     use super::driver::DriverConfig;
     use super::session::Session;
@@ -246,6 +265,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         passes: parse_passes(args)?,
         faults,
         run_opts,
+        mem_budget: parse_mem_budget(args)?,
         ..Default::default()
     };
     // Compile once (plan + lower + place), run `--repeat` many times: the
@@ -453,6 +473,7 @@ fn cmd_explain(args: &Args) -> Result<()> {
         topology: parse_topology(args, workers, &network)?,
         network,
         passes: parse_passes(args)?,
+        mem_budget: parse_mem_budget(args)?,
         ..Default::default()
     };
     let session = Session::new(cfg)?;
@@ -524,6 +545,10 @@ USAGE:
                     [--deadline-ms N]   (whole-run deadline; exceeding it
                                          is a typed error with partial
                                          progress stats)
+                    [--mem-budget-mb N] (per-worker tile-residency budget;
+                                         cold tiles spill to disk and fault
+                                         back on demand, outputs stay
+                                         bitwise-identical; 0 = unlimited)
   eindecomp serve   --model ... [--workers N] [--p N] [--strategy S]
                     [--serve-workers N]  (serving pool threads, default 2)
                     [--tenants N]        (closed-loop clients, default 4)
@@ -538,8 +563,10 @@ USAGE:
                      prints p50/p95/p99 latency and req/s)
   eindecomp explain --model ... [--workers N] [--p N] [--strategy S]
                     [--passes ...] [--topology ...] [--json]
-                    (print the TRA program, pass change log, and modeled
-                     byte ledger of the compiled plan)
+                    [--mem-budget-mb N]  (reports whether the plan's peak
+                                          residency fits the budget)
+                    (print the TRA program, pass change log, modeled byte
+                     ledger, and residency estimate of the compiled plan)
   eindecomp program --file prog.ein [--p N] [--run]
 
 STRATEGIES: eindecomp, eindecomp-lin, greedy, sqrt, data-parallel,
@@ -695,6 +722,34 @@ mod tests {
         let err = main_with_args(&argv).unwrap_err();
         assert!(err.is_deadline(), "{err}");
         assert!(err.to_string().contains("deadline exceeded"), "{err}");
+    }
+
+    #[test]
+    fn mem_budget_flag_parses_and_zero_means_unlimited() {
+        let parse = |argv: &[&str]| {
+            let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+            let a = Args::parse(&argv).unwrap();
+            parse_mem_budget(&a)
+        };
+        assert_eq!(parse(&["run"]).unwrap(), None);
+        assert_eq!(parse(&["run", "--mem-budget-mb", "0"]).unwrap(), None);
+        let b = parse(&["run", "--mem-budget-mb", "64"]).unwrap().unwrap();
+        assert_eq!(b.bytes_per_worker(), 64 << 20);
+        let err = parse(&["run", "--mem-budget-mb", "lots"]).unwrap_err();
+        assert!(err.to_string().contains("--mem-budget-mb"), "{err}");
+    }
+
+    #[test]
+    fn run_and_explain_accept_mem_budget() {
+        for cmd in [
+            &["run", "--model", "chain", "--scale", "24", "--workers", "2", "--p", "2",
+              "--mem-budget-mb", "1"][..],
+            &["explain", "--model", "chain", "--scale", "24", "--p", "4",
+              "--mem-budget-mb", "1"][..],
+        ] {
+            let argv: Vec<String> = cmd.iter().map(|s| s.to_string()).collect();
+            main_with_args(&argv).unwrap();
+        }
     }
 
     #[test]

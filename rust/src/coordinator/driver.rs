@@ -17,6 +17,7 @@ use crate::decomp::baselines::{LabelRoles, Strategy};
 use crate::decomp::Plan;
 use crate::einsum::graph::{EinGraph, VertexId};
 use crate::error::Result;
+use crate::runtime::spill::MemoryBudget;
 use crate::runtime::{Backend, DispatchEngine};
 use crate::sim::cluster::{Cluster, ExecMode, ExecReport};
 use crate::sim::faults::{FaultPlan, RunOptions};
@@ -73,6 +74,13 @@ pub struct DriverConfig {
     /// and opt-in non-finite input screening (`--max-retries` /
     /// `--deadline-ms` on the CLI).
     pub run_opts: RunOptions,
+    /// Per-worker memory budget for real execution (`--mem-budget-mb` on
+    /// the CLI). `None` (default) runs unbudgeted with residency
+    /// tracking only; `Some` arms the out-of-core tile store — tiles
+    /// beyond the budget spill to disk and fault back, with outputs
+    /// bitwise-identical to the unbudgeted run (see
+    /// [`crate::runtime::spill`]).
+    pub mem_budget: Option<MemoryBudget>,
 }
 
 impl Default for DriverConfig {
@@ -92,6 +100,7 @@ impl Default for DriverConfig {
             topology: None,
             faults: None,
             run_opts: RunOptions::default(),
+            mem_budget: None,
         }
     }
 }
@@ -228,6 +237,22 @@ impl RunReport {
                         .collect(),
                 ),
             ),
+            (
+                "peak_resident_bytes".into(),
+                Json::Arr(
+                    self.exec
+                        .peak_resident_bytes
+                        .iter()
+                        .map(|&b| Json::num(b as f64))
+                        .collect(),
+                ),
+            ),
+            ("spill_bytes".into(), Json::num(self.exec.spill_bytes as f64)),
+            (
+                "spill_faults".into(),
+                Json::num(self.exec.spill_faults as f64),
+            ),
+            ("spill_stall_s".into(), Json::num(self.exec.spill_stall_s)),
         ])
     }
 }

@@ -148,6 +148,9 @@ impl Session {
         cluster.passes = cfg.passes.clone();
         cluster.topology = cfg.topology.clone();
         cluster.faults = cfg.faults.clone().filter(|f| !f.is_empty());
+        // zero ("unlimited") normalizes to None so `--mem-budget-mb 0`
+        // runs the exact unbudgeted executor
+        cluster.mem_budget = cfg.mem_budget.filter(|b| !b.is_unlimited());
         Ok(Session {
             cfg,
             engine,
@@ -399,7 +402,20 @@ impl Session {
     /// with [`Explain::to_json`].
     pub fn explain(&self, exe: &Executable) -> Explain {
         let art = &exe.art;
+        let residency = art.prog.residency_stats();
+        let mem_budget_bytes = self
+            .cluster
+            .mem_budget
+            .map(|b| b.bytes_per_worker())
+            .unwrap_or(0);
         Explain {
+            residency_peak_bytes: residency.peak_bytes,
+            residency_max_task_bytes: residency.max_task_bytes,
+            mem_budget_bytes,
+            residency_fits_budget: self
+                .cluster
+                .mem_budget
+                .map(|b| residency.fits(b.bytes_per_worker(), self.cfg.workers)),
             strategy: art.plan.strategy.clone(),
             plan_cost: art.plan.predicted_cost,
             program: art.prog.render(),
@@ -744,6 +760,19 @@ pub struct Explain {
     pub retries: u64,
     pub recomputed_tasks: u64,
     pub recovery_bytes: u64,
+    /// Planner-side peak-residency estimate over the whole cluster (see
+    /// [`crate::tra::program::ResidencyStats`]).
+    pub residency_peak_bytes: u64,
+    /// Upper bound on any single task's working set, bytes.
+    pub residency_max_task_bytes: u64,
+    /// The session's per-worker memory budget in bytes (`0` =
+    /// unlimited).
+    pub mem_budget_bytes: u64,
+    /// Whether the plan's estimated residency fits the budget without
+    /// spilling (`None` when unbudgeted). `Some(false)` still runs —
+    /// out-of-core, bitwise-identical — as long as the single-task
+    /// bound fits.
+    pub residency_fits_budget: Option<bool>,
 }
 
 impl Explain {
@@ -771,6 +800,18 @@ impl Explain {
                 .collect();
             s.push_str(&format!("modeled bytes by link: {}\n", per_link.join(" | ")));
         }
+        s.push_str(&format!(
+            "residency: peak {} B | max task {} B | budget {}\n",
+            self.residency_peak_bytes,
+            self.residency_max_task_bytes,
+            match self.residency_fits_budget {
+                None => "unlimited".to_string(),
+                Some(true) => format!("{} B/worker (fits)", self.mem_budget_bytes),
+                Some(false) => {
+                    format!("{} B/worker (spills out-of-core)", self.mem_budget_bytes)
+                }
+            }
+        ));
         s.push_str(&format!("fault plan: {}\n", self.fault_plan));
         if self.faults_injected > 0 {
             s.push_str(&format!(
@@ -821,6 +862,25 @@ impl Explain {
             (
                 "recovery_bytes".into(),
                 Json::num(self.recovery_bytes as f64),
+            ),
+            (
+                "residency_peak_bytes".into(),
+                Json::num(self.residency_peak_bytes as f64),
+            ),
+            (
+                "residency_max_task_bytes".into(),
+                Json::num(self.residency_max_task_bytes as f64),
+            ),
+            (
+                "mem_budget_bytes".into(),
+                Json::num(self.mem_budget_bytes as f64),
+            ),
+            (
+                "residency_fits_budget".into(),
+                match self.residency_fits_budget {
+                    None => Json::str("unlimited"),
+                    Some(f) => Json::Bool(f),
+                },
             ),
         ])
     }

@@ -80,6 +80,15 @@ pub enum ExecCause {
     LockPoisoned { what: &'static str },
     /// A dependency tile was missing and could not be recomputed.
     MissingDep { dep: usize },
+    /// A single-task working set cannot fit in the per-worker
+    /// [`MemoryBudget`](crate::runtime::spill::MemoryBudget) even after
+    /// evicting every cold tile — the budget is below the plan's
+    /// irreducible floor (see `TraProgram::residency_stats`).
+    BudgetExceeded {
+        worker: usize,
+        needed_bytes: u64,
+        budget_bytes: u64,
+    },
     /// The kernel/engine failed for a non-injected reason.
     Kernel { detail: String },
 }
@@ -159,6 +168,15 @@ impl fmt::Display for ExecCause {
             ExecCause::MissingDep { dep } => {
                 write!(f, "dependency tile {dep} missing and unrecoverable")
             }
+            ExecCause::BudgetExceeded {
+                worker,
+                needed_bytes,
+                budget_bytes,
+            } => write!(
+                f,
+                "worker {worker}: working set needs {needed_bytes} more bytes but the \
+                 per-worker budget is {budget_bytes} bytes even after evicting all cold tiles"
+            ),
             ExecCause::Kernel { detail } => write!(f, "{detail}"),
         }
     }
@@ -357,6 +375,27 @@ mod tests {
         let inner = e.as_exec().unwrap();
         assert_eq!(inner.task, Some(7));
         assert_eq!(inner.attempts, 3);
+    }
+
+    #[test]
+    fn budget_exceeded_renders_sizes() {
+        let e = Error::exec_failure(
+            None,
+            0,
+            ExecCause::BudgetExceeded {
+                worker: 2,
+                needed_bytes: 4096,
+                budget_bytes: 1024,
+            },
+        );
+        let s = e.to_string();
+        assert!(s.contains("worker 2"), "{s}");
+        assert!(s.contains("4096"), "{s}");
+        assert!(s.contains("budget is 1024"), "{s}");
+        assert!(matches!(
+            e.as_exec().unwrap().cause,
+            ExecCause::BudgetExceeded { worker: 2, .. }
+        ));
     }
 
     #[test]

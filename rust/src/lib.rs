@@ -152,7 +152,7 @@ pub mod prelude {
     pub use crate::error::{
         Error, ExecCause, ExecError, LowerError, PlanError, Result, ServeCause, ServeError,
     };
-    pub use crate::runtime::{Backend, KernelEngine};
+    pub use crate::runtime::{Backend, KernelEngine, MemoryBudget};
     pub use crate::serve::{
         output_checksum, run_load, LatencySummary, LoadConfig, LoadReport, Response, ServeConfig,
         ServeStats, Server, Ticket,
@@ -163,7 +163,9 @@ pub mod prelude {
     pub use crate::taskgraph::TaskGraph;
     pub use crate::tensor::{Tensor, TensorView};
     pub use crate::tra::passes::{PassKind, PassLog, PassManager, PassSelector};
-    pub use crate::tra::program::{from_plan, CollectiveSchedule, RelId, RelSchema, TraOp, TraProgram};
+    pub use crate::tra::program::{
+        from_plan, CollectiveSchedule, RelId, RelSchema, ResidencyStats, TraOp, TraProgram,
+    };
     pub use crate::tra::relation::TensorRelation;
     pub use crate::util::BufferPool;
 }

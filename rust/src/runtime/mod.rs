@@ -21,6 +21,7 @@ pub mod engine;
 pub mod gemm;
 pub mod native;
 pub mod pjrt;
+pub mod spill;
 
 use crate::einsum::expr::EinSum;
 use crate::error::Result;
@@ -109,3 +110,4 @@ pub trait KernelEngine: Send + Sync {
 pub use engine::DispatchEngine;
 pub use native::NativeEngine;
 pub use pjrt::PjrtEngine;
+pub use spill::MemoryBudget;

@@ -1,0 +1,881 @@
+//! Out-of-core tile storage: a per-worker memory-budgeted [`TileStore`]
+//! with a disk spill tier and graph-driven prefetch.
+//!
+//! The paper's decomposition story assumes the decomposed tensors fit on
+//! the `p` workers. This module extends the real executor to the case
+//! where they do not (ROADMAP item 5, the regime `sim/memory.rs` could
+//! previously only *model*): every intermediate tile lives in the store,
+//! and when a worker's resident bytes would exceed its
+//! [`MemoryBudget`], cold tiles are **evicted** — intermediates to a disk
+//! tier (plain `std::fs` files of little-endian `f32` bytes, staged
+//! through the [`crate::util::BufferPool`]), input tiles by dropping
+//! their zero-copy view (the dense input lives in driver memory, so
+//! "spilling" one models releasing its device copy). A consumer that
+//! needs an evicted tile **faults** it back in: disk tiles are read into
+//! a pooled buffer, input tiles are re-sliced — both restore the exact
+//! logical bytes, so budgeted runs are bitwise-identical to unbudgeted
+//! ones (spill/fault is pure data movement; kernels are
+//! stride-independent by the [`crate::runtime::KernelEngine`] contract).
+//!
+//! # State machine
+//!
+//! Each tile is in one of three states:
+//!
+//! ```text
+//!            publish                 evict (budget pressure)
+//!   Empty ──────────────▶ Resident ─────────────────────────▶ Spilled
+//!     ▲                      │  ▲                                │
+//!     │   reclaim / purge    │  │          fault-in / prefetch   │
+//!     └──────────────────────┘  └────────────────────────────────┘
+//! ```
+//!
+//! `Spilled` is `Disk` for owned intermediates and `Input` for
+//! pre-sliced input views. `reclaim` (last-consumer buffer recycling)
+//! and `purge` (worker death) return a tile to `Empty` from either
+//! state.
+//!
+//! # Invariants
+//!
+//! * **peak ≤ budget**: bytes are *reserved* under a per-worker lock
+//!   before any tile becomes resident, evicting until the reservation
+//!   fits (or failing with a typed
+//!   [`ExecCause::BudgetExceeded`](crate::error::ExecCause) when even
+//!   evicting everything unpinned cannot make room — the single-task
+//!   working set does not fit). Concurrent releases only shrink
+//!   residency, so the tracked per-worker peak can never exceed the
+//!   budget.
+//! * **pinned tiles are never evicted**: the executor pins a task's
+//!   dependencies (faulting them in as needed) before running it and
+//!   unpins after, so kernel reads always see resident views.
+//! * **determinism**: eviction picks the unpinned resident tile with the
+//!   *farthest next use* (the smallest not-yet-completed consumer id,
+//!   larger = colder; ties broken toward the larger task id). The
+//!   victim choice affects only data movement, never values.
+//! * **zero unbudgeted overhead**: with no budget, publish is a slot
+//!   write plus residency/peak accounting (the per-worker
+//!   `peak_resident_bytes` ledger is tracked even when unbudgeted);
+//!   nothing is ever evicted, pinned, or staged, and every spill counter
+//!   stays zero, so a fault-free unbudgeted ledger is byte-identical to
+//!   the pre-spill executor's.
+//!
+//! # Prefetch
+//!
+//! The task graph is frozen at placement time, so the next-k tasks of
+//! each worker are known while the current one runs. The executor asks
+//! the store to prefetch their spilled dependencies into free headroom
+//! (never evicting for a prefetch), overlapping read-back with compute.
+
+use crate::error::{Error, ExecCause, Result};
+use crate::tensor::{Tensor, TensorView};
+use crate::util::BufferPool;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// A task's result slot: the produced tile as a zero-copy view. Slots
+/// are `Option` so the executor can *take* a tile back once every
+/// consumer has read it and recycle its buffer — and so the [`TileStore`]
+/// can evict a cold tile to the spill tier (or worker death can drop
+/// every tile homed on the dead worker).
+pub(crate) type ResultSlot = Mutex<Option<TensorView>>;
+
+/// Lock a result slot, converting mutex poisoning (a panicking sibling
+/// thread) into a typed, recoverable
+/// [`ExecCause::LockPoisoned`](crate::error::ExecCause) instead of
+/// propagating the panic into an unrelated task.
+pub(crate) fn lock_slot(
+    results: &[ResultSlot],
+    i: usize,
+) -> Result<MutexGuard<'_, Option<TensorView>>> {
+    results[i].lock().map_err(|_| {
+        Error::exec_failure(Some(i), 0, ExecCause::LockPoisoned { what: "result slot" })
+    })
+}
+
+/// Per-worker device-memory budget for real execution, threaded through
+/// `Cluster` / `DriverConfig` / `Session` / the CLI's `--mem-budget-mb`.
+///
+/// The budget bounds the bytes of tile data resident on any one worker
+/// at any instant; tiles beyond it spill to disk and fault back on
+/// demand (see the module docs). Budgeted runs return bitwise-identical
+/// outputs to unbudgeted ones.
+///
+/// ```
+/// use eindecomp::runtime::spill::MemoryBudget;
+/// let b = MemoryBudget::per_worker_mb(64);
+/// assert_eq!(b.bytes_per_worker(), 64 << 20);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoryBudget {
+    bytes: u64,
+}
+
+impl MemoryBudget {
+    /// A budget of `bytes` per worker. Zero means "unlimited" at the
+    /// configuration layer and is normalized away before reaching the
+    /// store (see `Cluster::with_mem_budget`).
+    pub fn per_worker_bytes(bytes: u64) -> Self {
+        MemoryBudget { bytes }
+    }
+
+    /// A budget of `mb` MiB per worker (the CLI's `--mem-budget-mb`).
+    pub fn per_worker_mb(mb: u64) -> Self {
+        MemoryBudget { bytes: mb << 20 }
+    }
+
+    /// The per-worker cap in bytes.
+    pub fn bytes_per_worker(&self) -> u64 {
+        self.bytes
+    }
+
+    /// True when the cap is zero, i.e. the "unlimited" sentinel.
+    pub fn is_unlimited(&self) -> bool {
+        self.bytes == 0
+    }
+}
+
+/// Where an evicted tile's contents live.
+enum SpillState {
+    /// Not spilled (resident, or never produced / reclaimed).
+    None,
+    /// Owned intermediate written to the disk tier as LE `f32` bytes.
+    Disk { path: PathBuf, shape: Vec<usize>, len: usize },
+    /// Pre-sliced input view dropped; fault-in re-slices the dense
+    /// input (O(1), no disk involved).
+    Input,
+}
+
+/// Uniquifies spill directories across stores within one process.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// How many upcoming same-worker tasks the executor prefetches spilled
+/// dependencies for (see the module docs).
+pub(crate) const PREFETCH_WINDOW: usize = 2;
+
+/// The per-run tile store: owns residency accounting, the spill tier,
+/// pinning, and the eviction policy for one execution's result slots.
+/// Created by `Cluster::run_lowered_modeled_opts` next to the slots and
+/// dropped with them (removing its spill directory).
+pub(crate) struct TileStore {
+    /// Per-worker byte cap; `None` = unlimited (accounting only).
+    budget: Option<u64>,
+    /// Bytes currently resident per worker.
+    resident: Vec<AtomicU64>,
+    /// High-water mark per worker (tracked even when unbudgeted).
+    peak: Vec<AtomicU64>,
+    /// Which worker each tile's bytes are charged to, as `worker + 1`
+    /// (`0` = not charged, i.e. not resident).
+    charged: Vec<AtomicUsize>,
+    /// Pin counts: a pinned tile is never chosen for eviction.
+    pins: Vec<AtomicUsize>,
+    /// Per-tile spill state. Lock order: a tile's meta before its slot;
+    /// eviction acquires *other* tiles' metas only via `try_lock`, so
+    /// holding one meta while reserving can never deadlock.
+    meta: Vec<Mutex<SpillState>>,
+    /// Consumer task ids per tile, ascending — the eviction policy's
+    /// next-use oracle.
+    consumers: Vec<Vec<usize>>,
+    /// Which tasks are input tiles (spill = drop the view, no disk).
+    input_tile: Vec<bool>,
+    /// Serializes reservations per worker so check-then-charge is atomic
+    /// (the peak ≤ budget invariant).
+    reserve_locks: Vec<Mutex<()>>,
+    /// Lazily-created spill directory (unique per store).
+    dir: Mutex<Option<PathBuf>>,
+    seq: u64,
+    /// Bytes evicted off workers (disk writes + dropped input views).
+    spill_bytes: AtomicU64,
+    /// Tiles faulted back in (demand + prefetch; disk reads + input
+    /// re-slices).
+    spill_faults: AtomicU64,
+    /// Wall time spent writing and demand-reading spill files
+    /// (prefetch reads overlap compute and are not charged).
+    stall_ns: AtomicU64,
+}
+
+impl TileStore {
+    pub(crate) fn new(
+        workers: usize,
+        budget: Option<MemoryBudget>,
+        consumers: Vec<Vec<usize>>,
+        input_tile: Vec<bool>,
+    ) -> Self {
+        let n = consumers.len();
+        let workers = workers.max(1);
+        let budget = budget
+            .filter(|b| !b.is_unlimited())
+            .map(|b| b.bytes_per_worker());
+        TileStore {
+            budget,
+            resident: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            peak: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            charged: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            pins: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            meta: (0..n).map(|_| Mutex::new(SpillState::None)).collect(),
+            consumers,
+            input_tile,
+            reserve_locks: (0..workers).map(|_| Mutex::new(())).collect(),
+            dir: Mutex::new(None),
+            seq: STORE_SEQ.fetch_add(1, Ordering::Relaxed),
+            spill_bytes: AtomicU64::new(0),
+            spill_faults: AtomicU64::new(0),
+            stall_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// True when a finite per-worker budget is armed.
+    pub(crate) fn budgeted(&self) -> bool {
+        self.budget.is_some()
+    }
+
+    // ---- counters -------------------------------------------------------
+
+    pub(crate) fn spill_bytes(&self) -> u64 {
+        self.spill_bytes.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn spill_faults(&self) -> u64 {
+        self.spill_faults.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn spill_stall_s(&self) -> f64 {
+        self.stall_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Per-worker resident high-water marks (bytes).
+    pub(crate) fn peak_resident(&self) -> Vec<u64> {
+        self.peak.iter().map(|p| p.load(Ordering::Relaxed)).collect()
+    }
+
+    // ---- accounting -----------------------------------------------------
+
+    fn bump_peak(&self, w: usize, now: u64) {
+        let p = &self.peak[w];
+        let mut cur = p.load(Ordering::Relaxed);
+        while now > cur {
+            match p.compare_exchange_weak(cur, now, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Charge `need` bytes to worker `w` without a budget check — the
+    /// unbudgeted fast path (nothing is ever evicted, so residency only
+    /// needs tracking, not enforcement).
+    fn charge_unbudgeted(&self, w: usize, need: u64) {
+        let now = self.resident[w].fetch_add(need, Ordering::AcqRel) + need;
+        self.bump_peak(w, now);
+    }
+
+    fn uncharge(&self, w: usize, bytes: u64) {
+        self.resident[w].fetch_sub(bytes, Ordering::AcqRel);
+    }
+
+    /// Reserve `need` bytes on worker `w`, evicting cold tiles until the
+    /// reservation fits. The check-then-charge runs under the worker's
+    /// reserve lock; concurrent releases only shrink residency, so once
+    /// this returns `Ok` the worker's residency (and therefore its peak)
+    /// is `<= budget`. Fails typed when even a fully-evicted worker
+    /// cannot host `need` more bytes.
+    fn reserve(&self, results: &[ResultSlot], w: usize, need: u64, completed: &[AtomicBool]) -> Result<()> {
+        let Some(budget) = self.budget else {
+            self.charge_unbudgeted(w, need);
+            return Ok(());
+        };
+        let _guard = self.reserve_locks[w].lock().map_err(|_| {
+            Error::exec_failure(None, 0, ExecCause::LockPoisoned { what: "reserve lock" })
+        })?;
+        loop {
+            let r = self.resident[w].load(Ordering::Acquire);
+            if r.saturating_add(need) <= budget {
+                let now = self.resident[w].fetch_add(need, Ordering::AcqRel) + need;
+                self.bump_peak(w, now);
+                return Ok(());
+            }
+            if !self.evict_one(results, w, completed)? {
+                return Err(Error::exec_failure(
+                    None,
+                    0,
+                    ExecCause::BudgetExceeded {
+                        worker: w,
+                        needed_bytes: need,
+                        budget_bytes: budget,
+                    },
+                ));
+            }
+        }
+    }
+
+    /// Reserve `need` bytes on `w` only if they fit in free headroom —
+    /// the prefetch path, which must never evict (and never block on a
+    /// busy reserve lock). Returns whether the reservation was taken.
+    fn try_reserve_headroom(&self, w: usize, need: u64) -> bool {
+        let Some(budget) = self.budget else { return false };
+        let Ok(_guard) = self.reserve_locks[w].try_lock() else {
+            return false;
+        };
+        let r = self.resident[w].load(Ordering::Acquire);
+        if r.saturating_add(need) > budget {
+            return false;
+        }
+        let now = self.resident[w].fetch_add(need, Ordering::AcqRel) + need;
+        self.bump_peak(w, now);
+        true
+    }
+
+    // ---- eviction -------------------------------------------------------
+
+    /// Evict one unpinned tile charged to worker `w`, chosen
+    /// deterministically by farthest next use. Returns `false` only when
+    /// no candidate exists (every resident tile is pinned or mid-flight);
+    /// `true` means "progress was made or the race should be retried".
+    fn evict_one(&self, results: &[ResultSlot], w: usize, completed: &[AtomicBool]) -> Result<bool> {
+        // Deterministic victim: the tile whose earliest pending consumer
+        // is farthest away (usize::MAX = no pending consumer, coldest of
+        // all — e.g. a kept output tile waiting for assembly).
+        let mut best: Option<(usize, usize)> = None;
+        for i in 0..self.meta.len() {
+            if self.charged[i].load(Ordering::Acquire) != w + 1
+                || self.pins[i].load(Ordering::Acquire) != 0
+            {
+                continue;
+            }
+            let next = self.consumers[i]
+                .iter()
+                .copied()
+                .find(|&c| !completed[c].load(Ordering::Acquire))
+                .unwrap_or(usize::MAX);
+            if best.map_or(true, |b| (next, i) > b) {
+                best = Some((next, i));
+            }
+        }
+        let Some((_, i)) = best else { return Ok(false) };
+        // try_lock, not lock: a demand fault holds this meta while
+        // waiting on our reserve lock (pinned tiles are filtered above,
+        // but the pin may have landed after the scan) — blocking here
+        // would deadlock. A failed try means the tile is busy; report
+        // progress so the caller rescans.
+        let Ok(mut meta) = self.meta[i].try_lock() else {
+            std::thread::yield_now();
+            return Ok(true);
+        };
+        if self.pins[i].load(Ordering::Acquire) != 0
+            || self.charged[i].load(Ordering::Acquire) != w + 1
+        {
+            std::thread::yield_now();
+            return Ok(true); // pinned or migrated since the scan; rescan
+        }
+        let mut slot = lock_slot(results, i)?;
+        let Some(view) = slot.take() else {
+            // charged but slot still empty: a publish is mid-flight;
+            // treat as a race and rescan
+            drop(meta);
+            drop(slot);
+            std::thread::yield_now();
+            return Ok(true);
+        };
+        drop(slot); // readers re-check state under `meta`, held below
+        self.charged[i].store(0, Ordering::Release);
+        let bytes = view.bytes() as u64;
+        self.uncharge(w, bytes);
+        if self.input_tile[i] {
+            // Input views alias the caller's dense tensor; dropping the
+            // view releases the modeled device copy. Fault-in re-slices.
+            *meta = SpillState::Input;
+            view.recycle();
+        } else {
+            let t0 = Instant::now();
+            let path = self.spill_path(i)?;
+            write_tile(&path, &view)?;
+            self.stall_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            *meta = SpillState::Disk {
+                path,
+                shape: view.shape().to_vec(),
+                len: view.len(),
+            };
+            view.recycle();
+        }
+        self.spill_bytes.fetch_add(bytes, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    fn spill_path(&self, i: usize) -> Result<PathBuf> {
+        let mut dir = self.dir.lock().map_err(|_| {
+            Error::exec_failure(None, 0, ExecCause::LockPoisoned { what: "spill dir" })
+        })?;
+        if dir.is_none() {
+            let p = std::env::temp_dir().join(format!(
+                "eindecomp-spill-{}-{}",
+                std::process::id(),
+                self.seq
+            ));
+            std::fs::create_dir_all(&p)?;
+            *dir = Some(p);
+        }
+        Ok(dir.as_ref().expect("just created").join(format!("tile-{i}.bin")))
+    }
+
+    // ---- publish / reclaim ----------------------------------------------
+
+    /// Install task `i`'s freshly-computed tile, reserving its bytes on
+    /// worker `w` first. Returns whether this call won the slot (a
+    /// concurrent recovery walk may have published bitwise-identical
+    /// bytes already; the loser's buffer is recycled and its reservation
+    /// released).
+    pub(crate) fn publish(
+        &self,
+        results: &[ResultSlot],
+        i: usize,
+        w: usize,
+        view: TensorView,
+        completed: &[AtomicBool],
+    ) -> Result<bool> {
+        let need = view.bytes() as u64;
+        self.reserve(results, w, need, completed)?;
+        let mut slot = lock_slot(results, i)?;
+        if slot.is_none() {
+            self.charged[i].store(w + 1, Ordering::Release);
+            *slot = Some(view);
+            Ok(true)
+        } else {
+            drop(slot);
+            self.uncharge(w, need);
+            view.recycle();
+            Ok(false)
+        }
+    }
+
+    /// Release tile `i` entirely: take and recycle its resident view (if
+    /// any), delete its spill file (if any), and return it to `Empty`.
+    /// Used by last-consumer reclamation and the end-of-run drain;
+    /// idempotent.
+    pub(crate) fn reclaim(&self, results: &[ResultSlot], i: usize) -> Result<()> {
+        self.purge(results, i).map(|_| ())
+    }
+
+    /// [`Self::reclaim`], reporting whether the tile held any state
+    /// (resident *or* spilled) — worker death uses this to know whether
+    /// a completed flag needs rolling back.
+    pub(crate) fn purge(&self, results: &[ResultSlot], i: usize) -> Result<bool> {
+        let mut meta = self.meta[i].lock().map_err(|_| {
+            Error::exec_failure(Some(i), 0, ExecCause::LockPoisoned { what: "tile meta" })
+        })?;
+        let mut present = false;
+        if let Some(v) = lock_slot(results, i)?.take() {
+            let c = self.charged[i].swap(0, Ordering::AcqRel);
+            if c > 0 {
+                self.uncharge(c - 1, v.bytes() as u64);
+            }
+            v.recycle();
+            present = true;
+        }
+        match std::mem::replace(&mut *meta, SpillState::None) {
+            SpillState::None => {}
+            SpillState::Disk { path, .. } => {
+                let _ = std::fs::remove_file(path);
+                present = true;
+            }
+            SpillState::Input => present = true,
+        }
+        Ok(present)
+    }
+
+    // ---- fault-in / pinning ---------------------------------------------
+
+    /// True when tile `i` currently lives in the spill tier. A spilled
+    /// tile *was produced* — recovery must fault it back, not recompute
+    /// it.
+    pub(crate) fn is_spilled(&self, i: usize) -> bool {
+        self.meta[i]
+            .lock()
+            .map(|m| !matches!(*m, SpillState::None))
+            .unwrap_or(false)
+    }
+
+    /// If tile `i` is spilled, fault it back onto worker `w` (reserving
+    /// room, evicting colder tiles as needed). `restore_input` re-slices
+    /// input tiles. Returns whether the tile is now known resident
+    /// (faulted here or already back); `false` means it was not spilled.
+    pub(crate) fn fault_if_spilled(
+        &self,
+        results: &[ResultSlot],
+        i: usize,
+        w: usize,
+        completed: &[AtomicBool],
+        restore_input: &dyn Fn() -> Result<TensorView>,
+    ) -> Result<bool> {
+        let mut meta = self.meta[i].lock().map_err(|_| {
+            Error::exec_failure(Some(i), 0, ExecCause::LockPoisoned { what: "tile meta" })
+        })?;
+        match &*meta {
+            SpillState::None => Ok(lock_slot(results, i)?.is_some()),
+            SpillState::Disk { path, shape, len } => {
+                self.reserve(results, w, (*len * 4) as u64, completed)?;
+                let t0 = Instant::now();
+                let data = read_tile(path, *len)?;
+                self.stall_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let _ = std::fs::remove_file(path);
+                let tile = Tensor::new(shape.clone(), data)?.into_view();
+                self.charged[i].store(w + 1, Ordering::Release);
+                *lock_slot(results, i)? = Some(tile);
+                *meta = SpillState::None;
+                self.spill_faults.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+            SpillState::Input => {
+                let view = restore_input()?;
+                self.reserve(results, w, view.bytes() as u64, completed)?;
+                self.charged[i].store(w + 1, Ordering::Release);
+                *lock_slot(results, i)? = Some(view);
+                *meta = SpillState::None;
+                self.spill_faults.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+        }
+    }
+
+    /// Pin tile `i` resident on behalf of a consumer running on worker
+    /// `w`, faulting it in first if it was evicted. While pinned the
+    /// tile cannot be evicted; callers must [`Self::unpin`]. Only
+    /// meaningful under a budget (the executor skips pinning entirely
+    /// when unbudgeted). Fails with a typed `MissingDep` when the tile
+    /// is neither resident nor spilled (a racing worker death purged it
+    /// — the caller's retry loop recomputes lineage).
+    pub(crate) fn pin(
+        &self,
+        results: &[ResultSlot],
+        i: usize,
+        w: usize,
+        completed: &[AtomicBool],
+        restore_input: &dyn Fn() -> Result<TensorView>,
+    ) -> Result<()> {
+        self.pins[i].fetch_add(1, Ordering::SeqCst);
+        loop {
+            // An evictor that takes the slot lock after this point sees
+            // the pin and skips; one that won the race leaves the tile
+            // spilled, which the fault below undoes.
+            if lock_slot(results, i)?.is_some() {
+                return Ok(());
+            }
+            match self.fault_if_spilled(results, i, w, completed, restore_input) {
+                Ok(true) => continue, // re-check the slot (it may already be gone again)
+                Ok(false) => {
+                    self.pins[i].fetch_sub(1, Ordering::SeqCst);
+                    return Err(Error::exec_failure(
+                        None,
+                        0,
+                        ExecCause::MissingDep { dep: i },
+                    ));
+                }
+                Err(e) => {
+                    self.pins[i].fetch_sub(1, Ordering::SeqCst);
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    pub(crate) fn unpin(&self, i: usize) {
+        self.pins[i].fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Best-effort prefetch: if tile `i` is spilled and worker `w` has
+    /// free headroom for it, fault it back now so the consumer finds it
+    /// resident. Never evicts, never blocks on contended locks, and
+    /// swallows nothing: I/O errors still surface (a broken spill tier
+    /// should fail the run, not silently degrade).
+    pub(crate) fn prefetch(
+        &self,
+        results: &[ResultSlot],
+        i: usize,
+        w: usize,
+        restore_input: &dyn Fn() -> Result<TensorView>,
+    ) -> Result<()> {
+        if !self.budgeted() {
+            return Ok(());
+        }
+        // try_lock: if the tile is mid-fault or mid-evict, skip it.
+        let Ok(mut meta) = self.meta[i].try_lock() else {
+            return Ok(());
+        };
+        match &*meta {
+            SpillState::None => Ok(()),
+            SpillState::Disk { path, shape, len } => {
+                if !self.try_reserve_headroom(w, (*len * 4) as u64) {
+                    return Ok(());
+                }
+                // Prefetch reads overlap compute; not charged to stall.
+                let data = read_tile(path, *len)?;
+                let _ = std::fs::remove_file(path);
+                let tile = Tensor::new(shape.clone(), data)?.into_view();
+                self.charged[i].store(w + 1, Ordering::Release);
+                *lock_slot(results, i)? = Some(tile);
+                *meta = SpillState::None;
+                self.spill_faults.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            SpillState::Input => {
+                let view = restore_input()?;
+                if !self.try_reserve_headroom(w, view.bytes() as u64) {
+                    return Ok(());
+                }
+                self.charged[i].store(w + 1, Ordering::Release);
+                *lock_slot(results, i)? = Some(view);
+                *meta = SpillState::None;
+                self.spill_faults.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Drop for TileStore {
+    fn drop(&mut self) {
+        if let Ok(dir) = self.dir.lock() {
+            if let Some(p) = dir.as_ref() {
+                let _ = std::fs::remove_dir_all(p);
+            }
+        }
+    }
+}
+
+/// Serialize a tile's logical contents as little-endian `f32` bytes.
+/// Strides never reach the disk format, so a restored tile is a
+/// contiguous tensor with the exact same logical values — bitwise-safe
+/// because every kernel path is stride-independent.
+fn write_tile(path: &std::path::Path, view: &TensorView) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    match view.as_contiguous() {
+        Some(s) => write_floats(&mut w, s)?,
+        None => {
+            // Strided view: stage a contiguous copy through the pool.
+            let t = view.to_tensor();
+            write_floats(&mut w, t.data())?;
+            t.recycle();
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn write_floats<W: Write>(w: &mut W, s: &[f32]) -> Result<()> {
+    for v in s {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read `len` little-endian `f32`s back into a pooled buffer — the exact
+/// bytes `write_tile` wrote (f32 → LE bytes → f32 round-trips
+/// losslessly, NaN payloads included).
+fn read_tile(path: &std::path::Path, len: usize) -> Result<Vec<f32>> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut data = BufferPool::take(len);
+    let mut b = [0u8; 4];
+    for v in data.iter_mut() {
+        r.read_exact(&mut b)?;
+        *v = f32::from_le_bytes(b);
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slots(n: usize) -> Vec<ResultSlot> {
+        (0..n).map(|_| Mutex::new(None)).collect()
+    }
+
+    fn flags(n: usize) -> Vec<AtomicBool> {
+        (0..n).map(|_| AtomicBool::new(false)).collect()
+    }
+
+    fn tile(vals: &[f32]) -> TensorView {
+        Tensor::new(vec![vals.len()], vals.to_vec()).unwrap().into_view()
+    }
+
+    #[test]
+    fn budget_zero_is_unlimited() {
+        assert!(MemoryBudget::per_worker_mb(0).is_unlimited());
+        assert!(!MemoryBudget::per_worker_mb(1).is_unlimited());
+        assert_eq!(MemoryBudget::per_worker_mb(2).bytes_per_worker(), 2 << 20);
+        // the store normalizes the sentinel away
+        let s = TileStore::new(1, Some(MemoryBudget::per_worker_bytes(0)), vec![vec![]], vec![false]);
+        assert!(!s.budgeted());
+    }
+
+    #[test]
+    fn unbudgeted_publish_tracks_peak_without_spilling() {
+        let results = slots(2);
+        let done = flags(2);
+        let store = TileStore::new(1, None, vec![vec![], vec![]], vec![false, false]);
+        assert!(store.publish(&results, 0, 0, tile(&[1.0; 8]), &done).unwrap());
+        assert!(store.publish(&results, 1, 0, tile(&[2.0; 8]), &done).unwrap());
+        assert_eq!(store.peak_resident(), vec![64]);
+        assert_eq!(store.spill_bytes(), 0);
+        store.reclaim(&results, 0).unwrap();
+        store.reclaim(&results, 1).unwrap();
+        assert_eq!(store.peak_resident(), vec![64]); // high-water sticks
+        assert_eq!(store.spill_faults(), 0);
+    }
+
+    #[test]
+    fn eviction_spills_cold_tile_and_fault_restores_bytes() {
+        // budget fits exactly one 8-float tile
+        let budget = MemoryBudget::per_worker_bytes(32);
+        let results = slots(3);
+        let done = flags(3);
+        // tile 0 consumed by task 2 (pending), tile 1 by task 2 as well
+        let store = TileStore::new(
+            1,
+            Some(budget),
+            vec![vec![2], vec![2], vec![]],
+            vec![false, false, false],
+        );
+        let vals0: Vec<f32> = (0..8).map(|i| i as f32 + 0.5).collect();
+        assert!(store.publish(&results, 0, 0, tile(&vals0), &done).unwrap());
+        // publishing tile 1 forces tile 0 to disk
+        assert!(store.publish(&results, 1, 0, tile(&[9.0; 8]), &done).unwrap());
+        assert!(store.is_spilled(0));
+        assert_eq!(store.spill_bytes(), 32);
+        assert!(lock_slot(&results, 0).unwrap().is_none());
+        // every tracked peak respects the budget
+        assert!(store.peak_resident().iter().all(|&p| p <= 32));
+        // fault tile 0 back (evicting tile 1 in turn) and check bytes
+        let restore = || -> Result<TensorView> { unreachable!("not an input tile") };
+        store
+            .pin(&results, 0, 0, &done, &restore)
+            .unwrap();
+        let got = lock_slot(&results, 0).unwrap().clone().unwrap();
+        assert_eq!(got.to_vec(), vals0);
+        assert!(store.is_spilled(1));
+        assert_eq!(store.spill_faults(), 1);
+        assert!(store.spill_stall_s() >= 0.0);
+        store.unpin(0);
+        assert!(store.peak_resident().iter().all(|&p| p <= 32));
+    }
+
+    #[test]
+    fn pinned_tiles_are_not_evicted_and_overflow_is_typed() {
+        let budget = MemoryBudget::per_worker_bytes(32);
+        let results = slots(2);
+        let done = flags(2);
+        let store = TileStore::new(1, Some(budget), vec![vec![1], vec![]], vec![false, false]);
+        let restore = || -> Result<TensorView> { unreachable!() };
+        assert!(store.publish(&results, 0, 0, tile(&[1.0; 8]), &done).unwrap());
+        store.pin(&results, 0, 0, &done, &restore).unwrap();
+        // the only resident tile is pinned: a second 32-byte tile cannot fit
+        let err = store
+            .publish(&results, 1, 0, tile(&[2.0; 8]), &done)
+            .unwrap_err();
+        let cause = &err.as_exec().expect("typed").cause;
+        assert!(
+            matches!(cause, ExecCause::BudgetExceeded { worker: 0, needed_bytes: 32, budget_bytes: 32 }),
+            "{cause:?}"
+        );
+        store.unpin(0);
+        // unpinned, the same publish now succeeds by evicting tile 0
+        assert!(store.publish(&results, 1, 0, tile(&[2.0; 8]), &done).unwrap());
+        assert!(store.is_spilled(0));
+    }
+
+    #[test]
+    fn input_tiles_spill_by_dropping_and_restore_by_reslicing() {
+        let budget = MemoryBudget::per_worker_bytes(16);
+        let results = slots(2);
+        let done = flags(2);
+        let store = TileStore::new(1, Some(budget), vec![vec![1], vec![]], vec![true, false]);
+        let src = Tensor::new(vec![4], vec![3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert!(store
+            .publish(&results, 0, 0, src.slice_view(&[0], &[4]).unwrap(), &done)
+            .unwrap());
+        // a 4-float intermediate displaces the input view — no disk file
+        assert!(store.publish(&results, 1, 0, tile(&[7.0; 4]), &done).unwrap());
+        assert!(store.is_spilled(0));
+        assert_eq!(store.spill_bytes(), 16);
+        let restore = || src.slice_view(&[0], &[4]);
+        store.pin(&results, 0, 0, &done, &restore).unwrap();
+        let got = lock_slot(&results, 0).unwrap().clone().unwrap();
+        assert_eq!(got.to_vec(), vec![3.0, 4.0, 5.0, 6.0]);
+        store.unpin(0);
+    }
+
+    #[test]
+    fn eviction_prefers_farthest_next_use() {
+        let budget = MemoryBudget::per_worker_bytes(64);
+        let results = slots(4);
+        let done = flags(4);
+        // tile 0's next pending consumer is task 2; tile 1's is task 3
+        // (farther) — tile 1 is the colder one and must go first.
+        let store = TileStore::new(
+            1,
+            Some(budget),
+            vec![vec![2], vec![3], vec![], vec![]],
+            vec![false; 4],
+        );
+        assert!(store.publish(&results, 0, 0, tile(&[1.0; 8]), &done).unwrap());
+        assert!(store.publish(&results, 1, 0, tile(&[2.0; 8]), &done).unwrap());
+        assert!(store.publish(&results, 2, 0, tile(&[3.0; 8]), &done).unwrap());
+        assert!(store.is_spilled(1));
+        assert!(!store.is_spilled(0));
+    }
+
+    #[test]
+    fn purge_reports_presence_and_clears_both_tiers() {
+        let results = slots(2);
+        let done = flags(2);
+        let store = TileStore::new(
+            1,
+            Some(MemoryBudget::per_worker_bytes(32)),
+            vec![vec![1], vec![]],
+            vec![false, false],
+        );
+        assert!(store.publish(&results, 0, 0, tile(&[1.0; 8]), &done).unwrap());
+        assert!(store.publish(&results, 1, 0, tile(&[2.0; 8]), &done).unwrap());
+        assert!(store.is_spilled(0)); // evicted to disk by tile 1
+        assert!(store.purge(&results, 0).unwrap()); // spilled counts as present
+        assert!(!store.is_spilled(0));
+        assert!(store.purge(&results, 1).unwrap()); // resident counts as present
+        assert!(!store.purge(&results, 1).unwrap()); // idempotent: now empty
+    }
+
+    #[test]
+    fn prefetch_fills_headroom_only() {
+        let budget = MemoryBudget::per_worker_bytes(64);
+        let results = slots(3);
+        let done = flags(3);
+        let store = TileStore::new(
+            1,
+            Some(budget),
+            vec![vec![2], vec![2], vec![]],
+            vec![false; 3],
+        );
+        let vals: Vec<f32> = (0..8).map(|i| 2.0 * i as f32).collect();
+        assert!(store.publish(&results, 0, 0, tile(&vals), &done).unwrap());
+        assert!(store.publish(&results, 1, 0, tile(&[1.0; 8]), &done).unwrap());
+        // force tile 0 out by filling the second half of the budget
+        assert!(store.publish(&results, 2, 0, tile(&[4.0; 8]), &done).unwrap());
+        let spilled = if store.is_spilled(0) { 0 } else { 1 };
+        let restore = || -> Result<TensorView> { unreachable!() };
+        // no headroom: prefetch is a no-op
+        store.prefetch(&results, spilled, 0, &restore).unwrap();
+        assert!(store.is_spilled(spilled));
+        // free a tile, then prefetch succeeds into the fresh headroom
+        store.reclaim(&results, 2).unwrap();
+        store.prefetch(&results, spilled, 0, &restore).unwrap();
+        assert!(!store.is_spilled(spilled));
+        assert_eq!(
+            lock_slot(&results, spilled).unwrap().as_ref().unwrap().len(),
+            8
+        );
+        assert!(store.peak_resident().iter().all(|&p| p <= 64));
+    }
+}

@@ -79,6 +79,7 @@ use crate::einsum::expr::{AggOp, EinSum};
 use crate::einsum::graph::{EinGraph, VertexId};
 use crate::einsum::label::project;
 use crate::error::{Error, ExecCause, Result};
+use crate::runtime::spill::{lock_slot, MemoryBudget, ResultSlot, TileStore, PREFETCH_WINDOW};
 use crate::runtime::KernelEngine;
 use crate::taskgraph::placement::{place, Policy};
 use crate::taskgraph::{TaskGraph, TaskKind, TransferClass};
@@ -92,21 +93,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
-/// A task's result slot: the produced tile as a zero-copy view. Slots
-/// are `Option` so the executor can *take* a tile back once every
-/// consumer has read it and recycle its buffer into the
-/// [`crate::util::BufferPool`] — and so worker death can drop every tile
-/// homed on the dead worker (the recovery walk recomputes on demand).
-type ResultSlot = Mutex<Option<TensorView>>;
-
-/// Lock a result slot, converting mutex poisoning (a panicking sibling
-/// thread) into a typed, recoverable [`ExecCause::LockPoisoned`] instead
-/// of propagating the panic into an unrelated task.
-fn lock_slot(results: &[ResultSlot], i: usize) -> Result<MutexGuard<'_, Option<TensorView>>> {
-    results[i].lock().map_err(|_| {
-        Error::exec_failure(Some(i), 0, ExecCause::LockPoisoned { what: "result slot" })
-    })
-}
+// `ResultSlot` / `lock_slot` moved to [`crate::runtime::spill`] with the
+// out-of-core tile store that now owns slot lifecycle (re-exported via
+// the `use` above so this module reads unchanged).
 
 /// How [`Cluster::execute`] schedules real task execution on host threads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -178,6 +167,22 @@ pub struct ExecReport {
     /// `recovery_bytes` split per link class (same naming as
     /// `bytes_by_link`). Empty when no recovery traffic was charged.
     pub recovery_by_link: Vec<(String, u64)>,
+    /// Per-worker high-water mark of resident tile bytes, tracked by the
+    /// [`crate::runtime::spill::TileStore`] even when no budget is set.
+    /// Under a [`MemoryBudget`] every entry is `<= budget` by
+    /// construction. Like `wall_s`, schedule-dependent.
+    pub peak_resident_bytes: Vec<u64>,
+    /// Bytes evicted off workers by budget pressure (disk-tier writes of
+    /// intermediates plus dropped input views). Zero when unbudgeted, so
+    /// an unbudgeted ledger stays byte-identical to the pre-spill
+    /// executor's.
+    pub spill_bytes: u64,
+    /// Evicted tiles faulted back in (demand reads, prefetches, and
+    /// input re-slices).
+    pub spill_faults: u64,
+    /// Wall time spent writing spill files and demand-reading them back
+    /// (prefetch reads overlap compute and are not charged).
+    pub spill_stall_s: f64,
 }
 
 impl ExecReport {
@@ -214,6 +219,17 @@ impl ExecReport {
                 self.workers_lost,
                 self.recovery_bytes as f64 / (1 << 20) as f64,
                 self.recovery_stall_s * 1e3,
+            ));
+        }
+        // likewise: unbudgeted runs never spill, keeping their summary
+        // byte-identical as well (peak residency is schedule-dependent
+        // and lives in `to_json`, not here)
+        if self.spill_bytes > 0 || self.spill_faults > 0 {
+            s.push_str(&format!(
+                " spilled={:.2}MiB faults={} spill_stall={:.3}ms",
+                self.spill_bytes as f64 / (1 << 20) as f64,
+                self.spill_faults,
+                self.spill_stall_s * 1e3,
             ));
         }
         s
@@ -255,6 +271,13 @@ pub struct Cluster {
     /// runs; [`Cluster::model`] and [`Cluster::dry_run`] always model the
     /// fault-free timeline.
     pub faults: Option<FaultPlan>,
+    /// Per-worker device-memory budget for real execution (the CLI's
+    /// `--mem-budget-mb`). `None` (default) and the zero sentinel run the
+    /// pre-spill executor with residency tracking only; `Some` arms the
+    /// [`crate::runtime::spill::TileStore`]'s spill tier so runs whose
+    /// tiles exceed the budget still complete, bitwise-identical. Only
+    /// affects [`Cluster::execute`]-family runs, in both [`ExecMode`]s.
+    pub mem_budget: Option<MemoryBudget>,
 }
 
 impl Cluster {
@@ -268,7 +291,20 @@ impl Cluster {
             passes: PassSelector::default(),
             topology: None,
             faults: None,
+            mem_budget: None,
         }
+    }
+
+    /// Builder-style per-worker memory budget (see [`Cluster::mem_budget`]).
+    /// The zero sentinel ("unlimited") is normalized to `None`, so
+    /// `--mem-budget-mb 0` runs the exact unbudgeted executor.
+    pub fn with_mem_budget(mut self, budget: MemoryBudget) -> Self {
+        self.mem_budget = if budget.is_unlimited() {
+            None
+        } else {
+            Some(budget)
+        };
+        self
     }
 
     /// Builder-style override of the real-execution scheduler.
@@ -570,10 +606,15 @@ impl Cluster {
         let ctx = RunCtx::new(self, tg, g, plan, engine, inputs, &results, *opts)?;
         // Pre-slice all input tiles serially (they carry no deps and model
         // the paper's free, offline pre-partitioning). With views this is
-        // O(1) per tile — no input bytes are copied.
+        // O(1) per tile — no input bytes are copied. Published through the
+        // tile store so input bytes count against their placed worker's
+        // budget: inputs that exceed it (the llama over-budget story) are
+        // evicted to the zero-cost `Input` tier and re-sliced on fault.
         for t in &tg.tasks {
             if matches!(t.kind, TaskKind::InputTile { .. }) {
-                *lock_slot(&results, t.id.0)? = Some(slice_input(tg, g, plan, inputs, t.id.0)?);
+                let view = slice_input(tg, g, plan, inputs, t.id.0)?;
+                let w = ctx.home(t.id.0);
+                ctx.store.publish(&results, t.id.0, w, view, &ctx.completed)?;
                 ctx.mark_completed(t.id.0);
             }
         }
@@ -607,6 +648,14 @@ impl Cluster {
             let tiles = &tg.vertex_outputs[&out];
             let mut dense = Tensor::zeros(&vert.bound);
             for (key, &tid) in crate::tensor::index_space(part).zip(tiles) {
+                // An output tile may itself have been evicted by later
+                // budget pressure; fault it back before reading.
+                if ctx.store.budgeted() {
+                    let w = ctx.home(tid.0);
+                    ctx.store.fault_if_spilled(&results, tid.0, w, &ctx.completed, &|| {
+                        slice_input(tg, g, plan, inputs, tid.0)
+                    })?;
+                }
                 // Borrow, don't take: after IR CSE two output vertices
                 // can share one set of result tiles, and each assembly
                 // must read them. The drain below recycles every slot
@@ -621,14 +670,13 @@ impl Cluster {
             outputs.insert(out, dense);
         }
         // Drain whatever is left (un-reclaimed tiles, level-barrier runs)
-        // into the calling thread's pool. Note the reuse horizon: buffers
-        // reclaimed mid-run land in scoped *worker* threads' pools and are
-        // reused within this execute() only (those pools die with the
-        // thread scope); what is drained here survives across executes.
-        for (i, _) in results.iter().enumerate() {
-            if let Some(v) = lock_slot(&results, i)?.take() {
-                v.recycle();
-            }
+        // into the calling thread's pool, and delete any leftover spill
+        // files. Note the reuse horizon: buffers reclaimed mid-run land in
+        // scoped *worker* threads' pools and are reused within this
+        // execute() only (those pools die with the thread scope); what is
+        // drained here survives across executes.
+        for i in 0..results.len() {
+            ctx.store.reclaim(&results, i)?;
         }
         ctx.stamp(&mut report);
         Ok((outputs, report))
@@ -689,9 +737,12 @@ impl Cluster {
                 ctx.exec_recovering(ti, scope)?;
                 for &d in &ctx.tg.tasks[ti].deps {
                     if reads_left[d.0].fetch_sub(1, Ordering::AcqRel) == 1 && !keep[d.0] {
-                        if let Some(v) = lock_slot(ctx.results, d.0)?.take() {
-                            v.recycle();
-                        }
+                        // Routed through the store: a fully-consumed tile
+                        // may have been evicted, in which case reclamation
+                        // deletes its spill file instead of recycling a
+                        // resident buffer (and releases its residency
+                        // charge either way).
+                        ctx.store.reclaim(ctx.results, d.0)?;
                     }
                 }
                 Ok(())
@@ -783,6 +834,14 @@ struct RunCtx<'a> {
     completed_count: AtomicUsize,
     /// Serializes worker deaths: re-home + slot clearing is multi-step.
     kill_lock: Mutex<()>,
+    /// Out-of-core tile store: owns residency accounting, the spill/fault
+    /// tier, and eviction. Unbudgeted it only tracks per-worker peaks.
+    store: TileStore,
+    /// Tasks per initial-placement worker, ascending id — the frozen
+    /// prefetch order (next-k tasks per worker are known at placement).
+    worker_tasks: Vec<Vec<usize>>,
+    /// Each task's index within its home worker's `worker_tasks` list.
+    home_pos: Vec<usize>,
     faults_injected: AtomicU64,
     retries: AtomicU64,
     recomputed: AtomicU64,
@@ -819,6 +878,24 @@ impl<'a> RunCtx<'a> {
             .as_ref()
             .map(|t| t.classes().len())
             .unwrap_or(1);
+        // Occurrence-counted consumer lists double as the store's
+        // next-use oracle (ascending by construction: `consumers` walks
+        // tasks in id order). Input tiles spill by dropping their view.
+        let consumers = tg.consumers();
+        let input_tile: Vec<bool> = tg
+            .tasks
+            .iter()
+            .map(|t| matches!(t.kind, TaskKind::InputTile { .. }))
+            .collect();
+        let store = TileStore::new(cluster.workers, cluster.mem_budget, consumers, input_tile);
+        let workers = cluster.workers.max(1);
+        let mut worker_tasks: Vec<Vec<usize>> = vec![vec![]; workers];
+        let mut home_pos = vec![0usize; tg.tasks.len()];
+        for (i, e) in effective.iter().enumerate() {
+            let w = e.load(Ordering::Relaxed).min(workers - 1);
+            home_pos[i] = worker_tasks[w].len();
+            worker_tasks[w].push(i);
+        }
         Ok(RunCtx {
             cluster,
             tg,
@@ -835,6 +912,9 @@ impl<'a> RunCtx<'a> {
             completed: (0..tg.tasks.len()).map(|_| AtomicBool::new(false)).collect(),
             completed_count: AtomicUsize::new(0),
             kill_lock: Mutex::new(()),
+            store,
+            worker_tasks,
+            home_pos,
             faults_injected: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             recomputed: AtomicU64::new(0),
@@ -847,6 +927,60 @@ impl<'a> RunCtx<'a> {
 
     fn slot(&self, i: usize) -> Result<MutexGuard<'a, Option<TensorView>>> {
         lock_slot(self.results, i)
+    }
+
+    /// Task `ti`'s effective worker, clamped into the store's range.
+    fn home(&self, ti: usize) -> usize {
+        self.effective[ti]
+            .load(Ordering::Acquire)
+            .min(self.dead.len() - 1)
+    }
+
+    /// Pin task `ti`'s dependency tiles resident on its worker, faulting
+    /// spilled ones back in. On failure the already-pinned prefix is
+    /// unpinned so no pin leaks. Budgeted runs only.
+    fn pin_deps(&self, ti: usize) -> Result<()> {
+        let w = self.home(ti);
+        let deps = &self.tg.tasks[ti].deps;
+        for (k, &d) in deps.iter().enumerate() {
+            let r = self.store.pin(self.results, d.0, w, &self.completed, &|| {
+                slice_input(self.tg, self.g, self.plan, self.inputs, d.0)
+            });
+            if let Err(e) = r {
+                for &p in &deps[..k] {
+                    self.store.unpin(p.0);
+                }
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn unpin_deps(&self, ti: usize) {
+        for &d in &self.tg.tasks[ti].deps {
+            self.store.unpin(d.0);
+        }
+    }
+
+    /// Best-effort read-ahead: the task graph is frozen, so the next
+    /// [`PREFETCH_WINDOW`] tasks initially placed on `ti`'s worker are
+    /// known now — fault their spilled dependencies into free headroom
+    /// while `ti` computes. Never evicts; skips anything contended.
+    fn prefetch_window(&self, ti: usize) -> Result<()> {
+        let w = self.home(ti);
+        let list = &self.worker_tasks[w];
+        let pos = self.home_pos[ti];
+        for &nt in list.iter().skip(pos + 1).take(PREFETCH_WINDOW) {
+            if self.completed[nt].load(Ordering::Acquire) {
+                continue;
+            }
+            for &d in &self.tg.tasks[nt].deps {
+                self.store.prefetch(self.results, d.0, w, &|| {
+                    slice_input(self.tg, self.g, self.plan, self.inputs, d.0)
+                })?;
+            }
+        }
+        Ok(())
     }
 
     fn mark_completed(&self, ti: usize) {
@@ -907,6 +1041,7 @@ impl<'a> RunCtx<'a> {
     /// injected faults and racing-death dep losses are retried.
     fn exec_recovering(&self, ti: usize, scope: &ShardScope) -> Result<()> {
         let mut attempt: u32 = 0;
+        let mut budget_attempt: u32 = 0;
         loop {
             self.check_deadline()?;
             if let Some(kind) = self.armed.as_ref().and_then(|a| a.next_failure(ti)) {
@@ -948,25 +1083,71 @@ impl<'a> RunCtx<'a> {
                 return Err(retag(e, ti, attempt + 1));
             }
             // pre-sliced input tiles (and tiles an eager recovery walk
-            // already rebuilt) are done the moment we observe them
-            if self.slot(ti)?.is_some() {
+            // already rebuilt) are done the moment we observe them — a
+            // *spilled* tile counts: it was produced, and its consumers
+            // fault it back rather than recompute it
+            if self.slot(ti)?.is_some()
+                || (self.store.budgeted() && self.store.is_spilled(ti))
+            {
                 self.mark_completed(ti);
                 return Ok(());
             }
-            match self.compute_tile(ti, scope) {
-                Ok(tile) => {
-                    let mut slot = self.slot(ti)?;
-                    if slot.is_none() {
-                        *slot = Some(tile);
-                        drop(slot);
-                    } else {
-                        // a concurrent recovery walk won the slot with
-                        // bitwise-identical bytes; ours just recycles
-                        drop(slot);
-                        tile.recycle();
+            // Budgeted: pin the working set resident (faulting spilled
+            // deps back in) so kernel reads cannot race eviction, then
+            // overlap read-ahead for the next tasks on this worker with
+            // the kernel below. Unbudgeted runs skip both entirely.
+            //
+            // Pinning is two-phase with abort: concurrent tasks whose
+            // pinned working sets contend for one worker's budget could
+            // otherwise deadlock (each waiting for the other's pins), so
+            // a failed reservation releases *all* pins held here (done
+            // inside `pin_deps`), backs off, and retries — by then the
+            // contender has typically finished and unpinned. Only after
+            // `BUDGET_RETRIES` staggered attempts is the typed
+            // `BudgetExceeded` allowed to surface: at that point the
+            // working set genuinely does not fit alone.
+            if self.store.budgeted() {
+                if let Err(e) = self.pin_deps(ti) {
+                    if is_missing_dep(&e) && attempt < self.opts.max_retries {
+                        // a racing death purged a dep from both tiers;
+                        // back off and re-walk its lineage
+                        self.backoff_and_count(attempt);
+                        attempt += 1;
+                        continue;
                     }
-                    self.mark_completed(ti);
-                    return Ok(());
+                    if is_budget_exceeded(&e) && budget_attempt < BUDGET_RETRIES {
+                        budget_attempt += 1;
+                        budget_backoff(ti, budget_attempt);
+                        continue;
+                    }
+                    return Err(retag(e, ti, attempt + 1));
+                }
+                self.prefetch_window(ti)?;
+            }
+            let computed = self.compute_tile(ti, scope);
+            if self.store.budgeted() {
+                self.unpin_deps(ti);
+            }
+            match computed {
+                Ok(tile) => {
+                    // the store reserves budget room (evicting cold tiles
+                    // as needed) and handles the lost-publish race by
+                    // recycling our bitwise-identical duplicate
+                    let w = self.home(ti);
+                    match self.store.publish(self.results, ti, w, tile, &self.completed) {
+                        Ok(_) => {
+                            self.mark_completed(ti);
+                            return Ok(());
+                        }
+                        Err(e) if is_budget_exceeded(&e) && budget_attempt < BUDGET_RETRIES => {
+                            // no pins held here, so this is pure foreign
+                            // contention; the recompute is wasteful but
+                            // rare, and bitwise-identical by construction
+                            budget_attempt += 1;
+                            budget_backoff(ti, budget_attempt);
+                        }
+                        Err(e) => return Err(retag(e, ti, attempt + 1)),
+                    }
                 }
                 Err(e) if is_missing_dep(&e) && attempt < self.opts.max_retries => {
                     self.backoff_and_count(attempt);
@@ -990,21 +1171,34 @@ impl<'a> RunCtx<'a> {
             return Ok(());
         }
         self.check_deadline()?;
+        // an evicted tile was produced and is still the authoritative
+        // copy: fault it back (counts as a spill fault, never as a
+        // recompute) instead of re-running its lineage
+        if self.store.budgeted() {
+            let w = self.home(d);
+            let restored = self.store.fault_if_spilled(self.results, d, w, &self.completed, &|| {
+                slice_input(self.tg, self.g, self.plan, self.inputs, d)
+            })?;
+            if restored {
+                return Ok(());
+            }
+        }
         for &dd in &self.tg.tasks[d].deps {
             self.ensure_tile(dd.0, scope)?;
         }
-        let tile = self.compute_tile(d, scope)?;
-        let mut slot = self.slot(d)?;
-        if slot.is_none() {
-            *slot = Some(tile);
-            drop(slot);
+        if self.store.budgeted() {
+            self.pin_deps(d)?;
+        }
+        let computed = self.compute_tile(d, scope);
+        if self.store.budgeted() {
+            self.unpin_deps(d);
+        }
+        let w = self.home(d);
+        if self.store.publish(self.results, d, w, computed?, &self.completed)? {
             if !matches!(self.tg.tasks[d].kind, TaskKind::InputTile { .. }) {
                 self.recomputed.fetch_add(1, Ordering::Relaxed);
             }
             self.mark_completed(d);
-        } else {
-            drop(slot);
-            tile.recycle();
         }
         Ok(())
     }
@@ -1054,20 +1248,22 @@ impl<'a> RunCtx<'a> {
                 }
             }
         }
-        // Re-home the overlay and drop dead tiles. `reads_left` counters
-        // need no surgery: they count *future* consumer decrements, which
-        // clearing a slot does not change — the recomputed tile absorbs
-        // them (see `run_work_stealing`).
+        // Re-home the overlay and drop dead tiles — including *spilled*
+        // ones: the spill tier models worker-local disk, which dies with
+        // the worker, so `purge` clears both residency and disk state.
+        // `reads_left` counters need no surgery: they count *future*
+        // consumer decrements, which clearing a slot does not change —
+        // the recomputed tile simply absorbs them (see
+        // `run_work_stealing`).
         for i in 0..n {
             if !victim[i] {
                 continue;
             }
             self.effective[i].store(new_home(i), Ordering::Release);
-            if let Some(v) = self.slot(i)?.take() {
-                if self.completed[i].swap(false, Ordering::AcqRel) {
-                    self.completed_count.fetch_sub(1, Ordering::Relaxed);
-                }
-                v.recycle();
+            if self.store.purge(self.results, i)?
+                && self.completed[i].swap(false, Ordering::AcqRel)
+            {
+                self.completed_count.fetch_sub(1, Ordering::Relaxed);
             }
         }
         Ok(())
@@ -1108,6 +1304,15 @@ impl<'a> RunCtx<'a> {
             // backoff schedule the wall executor slept
             report.sim_makespan_s += report.recovery_stall_s;
         }
+        // Out-of-core ledger. Peak residency is tracked even unbudgeted;
+        // the spill counters stay zero without a budget, and
+        // `sim_makespan_s` is deliberately untouched by spill traffic
+        // (host-transfer pricing of it lives in the memory-policy model
+        // and the fig11 bench, which charge `net.host_s` explicitly).
+        report.peak_resident_bytes = self.store.peak_resident();
+        report.spill_bytes = self.store.spill_bytes();
+        report.spill_faults = self.store.spill_faults();
+        report.spill_stall_s = self.store.spill_stall_s();
     }
 }
 
@@ -1119,6 +1324,31 @@ fn is_missing_dep(e: &Error) -> bool {
         e.as_exec().map(|x| &x.cause),
         Some(ExecCause::MissingDep { .. })
     )
+}
+
+/// True for the typed budget-overflow error. Retryable inside
+/// `exec_recovering`: a reservation that fails while *other* tasks hold
+/// pins on the same worker is contention, not a genuine misfit, and
+/// resolves once the contenders unpin.
+fn is_budget_exceeded(e: &Error) -> bool {
+    matches!(
+        e.as_exec().map(|x| &x.cause),
+        Some(ExecCause::BudgetExceeded { .. })
+    )
+}
+
+/// How many release-all-pins-and-retry rounds a task gets before a
+/// failed budget reservation is accepted as a genuine single-task
+/// misfit. Generous because each round is cheap and a false
+/// `BudgetExceeded` aborts the whole run.
+const BUDGET_RETRIES: u32 = 64;
+
+/// Stagger budget-contention retries so symmetric contenders don't
+/// re-collide: linear per-attempt backoff, capped, skewed by task id.
+fn budget_backoff(ti: usize, attempt: u32) {
+    std::thread::yield_now();
+    let us = (u64::from(attempt) * (50 + (ti as u64 % 7) * 17)).min(2_000);
+    std::thread::sleep(std::time::Duration::from_micros(us));
 }
 
 /// Attribute an execution error to the task the scheduler was running:
@@ -1806,6 +2036,54 @@ mod tests {
         match err.as_exec().map(|e| &e.cause) {
             Some(ExecCause::NonFinite { index, .. }) => assert_eq!(*index, 5),
             other => panic!("expected NonFinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_is_typed_and_roomy_budget_never_spills() {
+        let g = matmul_graph(16);
+        let plan = plan_graph(&g, &PlannerConfig { p: 4, ..Default::default() }).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert(g.by_name("A").unwrap(), Tensor::random(&[16, 16], 8));
+        inputs.insert(g.by_name("B").unwrap(), Tensor::random(&[16, 16], 9));
+        let engine = NativeEngine::new();
+        for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+            // a budget smaller than any single task's working set cannot be
+            // satisfied by eviction; it must surface as a typed error, not
+            // a hang or a silent over-allocation
+            let err = Cluster::new(4, NetworkProfile::loopback())
+                .with_exec_mode(mode)
+                .with_mem_budget(MemoryBudget::per_worker_bytes(8))
+                .execute(&g, &plan, &engine, &inputs)
+                .unwrap_err();
+            match err.as_exec().map(|e| &e.cause) {
+                Some(ExecCause::BudgetExceeded {
+                    needed_bytes,
+                    budget_bytes,
+                    ..
+                }) => {
+                    assert_eq!(*budget_bytes, 8, "{mode:?}");
+                    assert!(*needed_bytes > 8, "{mode:?}");
+                }
+                other => panic!("expected BudgetExceeded, got {other:?}"),
+            }
+            // a budget far above the whole problem admits everything: the
+            // budgeted executor still tracks residency but never evicts
+            let base = Cluster::new(4, NetworkProfile::loopback())
+                .with_exec_mode(mode)
+                .execute(&g, &plan, &engine, &inputs)
+                .unwrap();
+            let roomy = 64u64 << 20;
+            let (outs, rep) = Cluster::new(4, NetworkProfile::loopback())
+                .with_exec_mode(mode)
+                .with_mem_budget(MemoryBudget::per_worker_bytes(roomy))
+                .execute(&g, &plan, &engine, &inputs)
+                .unwrap();
+            assert_eq!(outs[&g.by_name("Z").unwrap()], base.0[&g.by_name("Z").unwrap()]);
+            assert_eq!(rep.spill_bytes, 0, "{mode:?}");
+            assert_eq!(rep.spill_faults, 0, "{mode:?}");
+            assert!(rep.peak_resident_bytes.iter().any(|&b| b > 0), "{mode:?}");
+            assert!(rep.peak_resident_bytes.iter().all(|&b| b <= roomy), "{mode:?}");
         }
     }
 

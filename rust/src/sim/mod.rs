@@ -19,5 +19,6 @@ pub mod memory;
 pub mod network;
 
 pub use cluster::{Cluster, ExecMode, ExecReport};
+pub use crate::runtime::spill::MemoryBudget;
 pub use faults::{FaultKind, FaultPlan, RunOptions};
 pub use network::{LinkClass, NetworkProfile, Topology};

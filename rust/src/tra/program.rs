@@ -808,6 +808,37 @@ pub struct ProgStats {
     pub repart_bytes: u64,
 }
 
+/// Static peak-residency estimate of a program — see
+/// [`TraProgram::residency_stats`]. All byte figures cover the whole
+/// cluster; divide `peak_bytes` by the worker count for the balanced
+/// per-worker estimate [`Self::fits`] uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Peak live relation bytes across the program, node by node.
+    pub peak_bytes: u64,
+    /// Upper bound on any single task's working set (largest output
+    /// tile + read fan-in × largest input tile), in bytes. A per-worker
+    /// budget at or above this always executes without
+    /// `BudgetExceeded`.
+    pub max_task_bytes: u64,
+    /// Total bytes of all materialized relations (ignores liveness —
+    /// the residency an executor with no reclamation at all would need).
+    pub total_bytes: u64,
+}
+
+impl ResidencyStats {
+    /// Whether a per-worker budget of `budget_bytes` should fit this
+    /// program on `workers` workers *without spilling*: the balanced
+    /// share of the peak must fit, and so must the largest single-task
+    /// working set. A plan that fails this still *runs* under the
+    /// out-of-core executor (spilling) as long as
+    /// `budget_bytes >= max_task_bytes`.
+    pub fn fits(&self, budget_bytes: u64, workers: usize) -> bool {
+        let share = self.peak_bytes.div_ceil(workers.max(1) as u64);
+        budget_bytes >= share.max(self.max_task_bytes)
+    }
+}
+
 /// How a relation's tiles are reachable during emission: either as
 /// materialized tasks (one per tile, row-major key order), or as an
 /// alias of a coarser relation's tasks (the `alias-refinement-repart`
@@ -1347,6 +1378,145 @@ impl TraProgram {
             }
         }
         s
+    }
+
+    /// Static peak-residency estimate: how many bytes of relation
+    /// storage are live at once if the program runs node by node —
+    /// the planner-side mirror of the executor's measured
+    /// `peak_resident_bytes`, used by `Session::explain` to report
+    /// whether a plan fits a [`crate::runtime::spill::MemoryBudget`]
+    /// before anything runs.
+    ///
+    /// Mirrors emission's aliasing exactly: identity/aliased
+    /// repartitions, `ReKey`, `Reuse`, and identity `AllGather`s forward
+    /// their source's storage (zero new bytes); `Assemble` is driver-side
+    /// (zero worker bytes, but it keeps its source live). Every
+    /// materializing node charges its full output relation
+    /// (`4 * prod(bound)` — tiles cover the bound exactly) at its
+    /// program position; a storage is freed after the last node that
+    /// reads any alias of it. Relations nothing reads (graph outputs)
+    /// stay live to the end.
+    ///
+    /// `max_task_bytes` is a per-*task* working-set **upper bound**
+    /// (largest output tile plus largest input tile times the node's
+    /// read fan-in), deliberately conservative: the executor's
+    /// `BudgetExceeded` fires only when a real working set cannot fit,
+    /// so a budget at or above this bound always runs.
+    pub fn residency_stats(&self) -> ResidencyStats {
+        let rel_bytes = |r: usize| -> u64 {
+            4 * self.rels[r].bound.iter().product::<usize>() as u64
+        };
+        // largest single tile of a relation, in bytes (per-dim ceil)
+        let max_tile = |r: usize| -> u64 {
+            let s = &self.rels[r];
+            4 * s
+                .bound
+                .iter()
+                .zip(&s.part)
+                .map(|(&b, &p)| b.div_ceil(p.max(1)))
+                .product::<usize>() as u64
+        };
+        // storage roots: aliasing nodes forward their source's storage
+        let mut root: Vec<usize> = (0..self.rels.len()).collect();
+        let mut materialized_at: Vec<Option<usize>> = vec![None; self.rels.len()];
+        let mut stats = ResidencyStats::default();
+        for (i, node) in self.nodes.iter().enumerate() {
+            let out = node.out.0;
+            let out_s = &self.rels[out];
+            let aliases = match &node.op {
+                TraOp::ReKey { src, .. } | TraOp::Reuse { src, .. } => Some(src.0),
+                TraOp::Repartition { src, alias, .. } => {
+                    let same = self.rels[src.0].part == out_s.part;
+                    (same || *alias).then_some(src.0)
+                }
+                TraOp::AllGather { src, .. } => {
+                    (self.rels[src.0].part == out_s.part).then_some(src.0)
+                }
+                // driver-side: zero worker bytes, source stays live
+                TraOp::Assemble { src, .. } => Some(src.0),
+                _ => None,
+            };
+            if let Some(src) = aliases {
+                root[out] = root[src];
+                continue;
+            }
+            root[out] = out;
+            materialized_at[out] = Some(i);
+            stats.total_bytes += rel_bytes(out);
+            // working-set upper bound for one task of this node
+            let fanin: u64 = match &node.op {
+                TraOp::Aggregate {
+                    src, tree_arity, ..
+                } => {
+                    let group = (self.rels[src.0].num_tiles() / out_s.num_tiles().max(1)).max(1);
+                    tree_arity.map_or(group, |r| r.max(2).min(group)) as u64
+                }
+                TraOp::ReduceScatter { src, schedule, .. }
+                | TraOp::AllReduce {
+                    src,
+                    reduce: schedule,
+                    ..
+                } => {
+                    let group = (self.rels[src.0].num_tiles() / out_s.num_tiles().max(1)).max(1);
+                    match schedule {
+                        CollectiveSchedule::Ring => 2usize.min(group) as u64,
+                        CollectiveSchedule::Tree { arity } => (*arity).max(2).min(group) as u64,
+                    }
+                }
+                TraOp::Repartition { src, .. } | TraOp::AllGather { src, .. } => {
+                    // source tiles overlapping one destination tile,
+                    // bounded per dimension
+                    let have = &self.rels[src.0].part;
+                    have.iter()
+                        .zip(&out_s.part)
+                        .map(|(&h, &n)| h.min(h.div_ceil(n.max(1)) + 1))
+                        .product::<usize>() as u64
+                }
+                _ => 1,
+            };
+            let inputs_bytes: u64 = node
+                .op
+                .input_rels()
+                .iter()
+                .map(|r| max_tile(root[r.0]) * fanin)
+                .sum();
+            stats.max_task_bytes = stats.max_task_bytes.max(max_tile(out) + inputs_bytes);
+        }
+        // last reader per storage root (aliases extend their root's
+        // lifetime); unread storages (graph outputs) live to the end
+        let end = self.nodes.len().saturating_sub(1);
+        let mut last_use: Vec<usize> = vec![0; self.rels.len()];
+        let mut read: Vec<bool> = vec![false; self.rels.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for r in node.op.input_rels() {
+                last_use[root[r.0]] = last_use[root[r.0]].max(i);
+                read[root[r.0]] = true;
+            }
+        }
+        for r in 0..self.rels.len() {
+            if !read[r] {
+                last_use[r] = end;
+            }
+        }
+        // liveness sweep in program order
+        let mut free_at: Vec<Vec<usize>> = vec![vec![]; self.nodes.len()];
+        for r in 0..self.rels.len() {
+            if materialized_at[r].is_some() {
+                free_at[last_use[r].min(end)].push(r);
+            }
+        }
+        let mut live = 0u64;
+        for (i, node) in self.nodes.iter().enumerate() {
+            let out = node.out.0;
+            if materialized_at[out] == Some(i) {
+                live += rel_bytes(out);
+            }
+            stats.peak_bytes = stats.peak_bytes.max(live);
+            for &r in &free_at[i] {
+                live -= rel_bytes(r);
+            }
+        }
+        stats
     }
 
     /// Pretty-print the program: one line per node with its output
@@ -2157,6 +2327,50 @@ mod tests {
         let agg = &prog.nodes()[5];
         assert_eq!(prog.schema(agg.out).part, vec![2, 4]);
         assert_eq!(prog.schema(agg.out).labels, labels("i k"));
+    }
+
+    #[test]
+    fn residency_stats_sweeps_liveness_with_aliasing() {
+        let g = matmul_graph(8);
+        let prog = from_plan(&g, &plan_for(&g, vec![2, 2, 4])).unwrap();
+        let r = prog.residency_stats();
+        // A (256 B) + B (256 B) + the 8x8x8 joined relation (2048 B) are
+        // live together at the Join; the identity repartitions alias
+        // their sources and the driver-side Assemble charges nothing.
+        assert_eq!(r.peak_bytes, 256 + 256 + 2048);
+        // the aggregate output (256 B) materializes after A/B are freed
+        assert_eq!(r.total_bytes, 256 + 256 + 2048 + 256);
+        // largest working set is the Aggregate: one 8-float output tile
+        // (32 B) plus a 2-tile fold group of 128-B joined tiles
+        assert_eq!(r.max_task_bytes, 32 + 2 * 128);
+        assert!(r.fits(r.peak_bytes, 1));
+        assert!(!r.fits(r.max_task_bytes - 1, 1_000_000));
+    }
+
+    #[test]
+    fn residency_rekey_plans_add_no_storage() {
+        // j unpartitioned: the program re-keys the join output instead of
+        // aggregating — ReKey forwards storage, so only A, B, and the
+        // joined relation ever materialize.
+        let g = matmul_graph(8);
+        let prog = from_plan(&g, &plan_for(&g, vec![4, 1, 4])).unwrap();
+        let r = prog.residency_stats();
+        assert_eq!(r.total_bytes, 256 + 256 + 2048);
+        assert_eq!(r.peak_bytes, r.total_bytes);
+    }
+
+    #[test]
+    fn residency_fits_divides_peak_across_workers() {
+        let r = ResidencyStats {
+            peak_bytes: 1000,
+            max_task_bytes: 300,
+            total_bytes: 1200,
+        };
+        assert!(r.fits(500, 2)); // per-worker share 500 >= max task 300
+        assert!(!r.fits(499, 2));
+        assert!(!r.fits(299, 8)); // a single working set must always fit
+        assert!(r.fits(300, 8));
+        assert!(r.fits(1000, 0)); // workers clamp to 1
     }
 
     #[test]

@@ -179,6 +179,12 @@ pub(crate) fn chunk_bounds(len: usize, parts: usize, i: usize) -> (usize, usize)
 const POOL_MAX_CLASS: usize = 26;
 /// Free-list depth per size class — bounds pool residency per thread.
 const POOL_CLASS_CAP: usize = 32;
+/// Per-class retained-capacity cap as a multiple of the class size:
+/// class `c` parks at most `8 << c` floats (≈ 8 buffers). Without it the
+/// count cap alone lets one class pin `32 * 2^26` floats after a burst of
+/// large retirements; the capacity cap trims the excess at `give` time so
+/// steady-state residency is bounded by geometry, not burst history.
+const POOL_CLASS_RETAIN_X: usize = 8;
 
 /// Point-in-time counters of the calling thread's [`BufferPool`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -191,6 +197,9 @@ pub struct PoolStats {
     pub misses: u64,
     /// Buffers returned via [`BufferPool::give`] (kept or dropped).
     pub gives: u64,
+    /// Gives dropped by the per-class residency caps (free-list depth
+    /// [`POOL_CLASS_CAP`] or retained capacity `8 << c` floats).
+    pub trimmed: u64,
     /// Floats currently parked on this thread's free lists.
     pub resident: usize,
 }
@@ -237,6 +246,7 @@ thread_local! {
         takes: 0,
         hits: 0,
         gives: 0,
+        trimmed: 0,
         resident: 0,
     });
 }
@@ -304,16 +314,24 @@ impl BufferPool {
         v
     }
 
-    /// Return a buffer to the calling thread's free lists (dropped when
-    /// its class is full or it is larger than the pool retains).
+    /// Return a buffer to the calling thread's free lists. Dropped — and
+    /// counted in [`PoolStats::trimmed`] — when its class is already full
+    /// by buffer count ([`POOL_CLASS_CAP`]) or would exceed the class's
+    /// retained-capacity cap (`8 << c` floats), so a burst of retirements
+    /// cannot pin memory past the steady-state working set.
     pub fn give(v: Vec<f32>) {
         POOL.with(|p| {
             let mut pool = p.borrow_mut();
             pool.gives += 1;
             if let Some(c) = pool_class_for_cap(v.capacity()) {
-                if pool.classes[c].len() < POOL_CLASS_CAP {
+                let parked: usize = pool.classes[c].iter().map(|b| b.capacity()).sum();
+                if pool.classes[c].len() < POOL_CLASS_CAP
+                    && parked + v.capacity() <= (POOL_CLASS_RETAIN_X << c)
+                {
                     pool.resident += v.capacity();
                     pool.classes[c].push(v);
+                } else {
+                    pool.trimmed += 1;
                 }
             }
         });
@@ -328,6 +346,7 @@ impl BufferPool {
                 hits: pool.hits,
                 misses: pool.takes - pool.hits,
                 gives: pool.gives,
+                trimmed: pool.trimmed,
                 resident: pool.resident,
             }
         })
@@ -343,6 +362,7 @@ impl BufferPool {
             pool.takes = 0;
             pool.hits = 0;
             pool.gives = 0;
+            pool.trimmed = 0;
             pool.resident = 0;
         });
     }
@@ -1228,6 +1248,33 @@ mod tests {
         }
         let st = BufferPool::stats();
         assert!(st.resident <= POOL_CLASS_CAP * 16);
+        BufferPool::reset();
+    }
+
+    #[test]
+    fn pool_capacity_cap_trims_burst_and_keeps_steady_state() {
+        BufferPool::reset();
+        // Burst: retire far more class-12 (4096-float) buffers than the
+        // retained-capacity cap (8 << 12 floats = 8 buffers) admits.
+        for _ in 0..20 {
+            BufferPool::give(Vec::with_capacity(4096));
+        }
+        let st = BufferPool::stats();
+        assert_eq!(st.gives, 20);
+        assert_eq!(st.trimmed, 12, "8 parked, 12 trimmed");
+        assert!(st.resident <= POOL_CLASS_RETAIN_X << 12, "{}", st.resident);
+        // Steady state: a take/give loop inside the cap reuses buffers and
+        // never trims again — residency and trim count are both flat.
+        let parked = BufferPool::stats().resident;
+        let trimmed = BufferPool::stats().trimmed;
+        for _ in 0..50 {
+            let v = BufferPool::take(4096);
+            BufferPool::give(v);
+        }
+        let st = BufferPool::stats();
+        assert_eq!(st.trimmed, trimmed, "steady state must not trim");
+        assert_eq!(st.resident, parked, "steady state residency is flat");
+        assert_eq!(st.misses, 0, "every steady-state take is a pool hit");
         BufferPool::reset();
     }
 

@@ -1,0 +1,200 @@
+//! Differential tests for out-of-core execution (`runtime/spill.rs`).
+//!
+//! The memory-budgeted [`TileStore`] must be *invisible* in every output
+//! bit: spilling cold tiles to disk and faulting them back on demand may
+//! change timing and counters, never values. These tests lock in:
+//!
+//! 1. **Differential**: for every bench workload × worker count × exec
+//!    mode × budget arm (tight, roomy, unlimited), outputs are bitwise
+//!    identical to the unbudgeted run;
+//! 2. **Property**: `peak_resident_bytes[w]` never exceeds the budget on
+//!    any worker — the reserve-before-publish protocol makes this true by
+//!    construction, and the report must prove it;
+//! 3. **Zero overhead**: an unbudgeted run engages none of the spill
+//!    machinery — all spill counters are zero and the report summary has
+//!    no spill segment — while peak residency is still tracked.
+
+use eindecomp::decomp::baselines::{assign, LabelRoles, Strategy};
+use eindecomp::einsum::graph::{EinGraph, VertexId};
+use eindecomp::models::{ffnn, llama, matchain};
+use eindecomp::runtime::NativeEngine;
+use eindecomp::sim::{Cluster, ExecMode, MemoryBudget, NetworkProfile};
+use eindecomp::tensor::Tensor;
+use std::collections::HashMap;
+
+/// One bench workload: a graph plus deterministic inputs.
+fn workloads() -> Vec<(&'static str, EinGraph, HashMap<VertexId, Tensor>)> {
+    let mut out = Vec::new();
+    let chain = matchain::chain_graph(24, false).unwrap();
+    let inputs = matchain::chain_inputs(&chain, 7);
+    out.push(("chain", chain.graph, inputs));
+    let skewed = matchain::chain_graph(20, true).unwrap();
+    let inputs = matchain::chain_inputs(&skewed, 11);
+    out.push(("chain-skewed", skewed.graph, inputs));
+    let step = ffnn::ffnn_step(16, 32, 24, 8).unwrap();
+    let state = ffnn::FfnnState::init(32, 24, 8, 13);
+    let x = Tensor::random(&[16, 32], 17);
+    let t = Tensor::random(&[16, 8], 19);
+    let inputs = ffnn::step_inputs(&step, &state, x, t);
+    out.push(("ffnn", step.graph, inputs));
+    let cfg = llama::LlamaConfig::llama7b(1, 64).scaled(64, 32);
+    let model = llama::llama_graph(&cfg).unwrap();
+    let inputs = llama::llama_inputs(&model, 23);
+    out.push(("tiny-llama", model.graph, inputs));
+    out
+}
+
+/// Largest single-task working set of the lowered graph: a budget below
+/// this cannot run at all, anything at or above it must complete (spilling
+/// as needed). Mirrors the reserve path's accounting: a task needs its
+/// output tile plus every dep tile resident at once.
+fn working_set_floor(cluster: &Cluster, g: &EinGraph, plan: &eindecomp::decomp::Plan) -> u64 {
+    let tg = cluster.lower(g, plan).unwrap();
+    tg.tasks
+        .iter()
+        .map(|t| {
+            t.out_bytes as u64
+                + t.deps
+                    .iter()
+                    .map(|d| tg.tasks[d.0].out_bytes as u64)
+                    .sum::<u64>()
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+fn assert_bitwise_eq(
+    a: &HashMap<VertexId, Tensor>,
+    b: &HashMap<VertexId, Tensor>,
+    outs: &[VertexId],
+    ctx: &str,
+) {
+    for &o in outs {
+        let (x, y) = (&a[&o], &b[&o]);
+        assert_eq!(x.shape(), y.shape(), "{ctx}: output {o} shape");
+        for (i, (u, v)) in x.data().iter().zip(y.data()).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{ctx}: output {o} diverges at element {i} ({u} vs {v})"
+            );
+        }
+    }
+}
+
+/// The tentpole acceptance test: budgeted ≡ unbudgeted, bitwise, across
+/// every workload × p × exec mode × budget arm, with per-worker peak
+/// residency provably under the budget.
+#[test]
+fn budgeted_runs_are_bitwise_identical_across_budgets() {
+    let engine = NativeEngine::new();
+    let roles = LabelRoles::by_convention();
+    let mut tight_spill_total = 0u64;
+    for (name, g, inputs) in workloads() {
+        let outs = g.outputs();
+        for p in [2usize, 4, 8] {
+            let plan = assign(&g, &Strategy::EinDecomp, p, &roles).unwrap();
+            for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+                let base = Cluster::new(p, NetworkProfile::loopback()).with_exec_mode(mode);
+                let (want, base_rep) = base.execute(&g, &plan, &engine, &inputs).unwrap();
+                let peak = base_rep.peak_resident_bytes.iter().copied().max().unwrap();
+                let floor = working_set_floor(&base, &g, &plan);
+                assert!(floor > 0 && peak >= floor, "{name} p={p}: floor {floor} peak {peak}");
+                // tight forces eviction (well under peak) but always
+                // admits a single working set; roomy rarely spills.
+                let tight = (peak / 3).max(2 * floor);
+                let roomy = peak.max(2 * floor);
+                for budget in [tight, roomy] {
+                    let cluster = base
+                        .clone()
+                        .with_mem_budget(MemoryBudget::per_worker_bytes(budget));
+                    let (got, rep) = cluster.execute(&g, &plan, &engine, &inputs).unwrap();
+                    let ctx = format!("{name} p={p} {mode:?} budget={budget}");
+                    assert_bitwise_eq(&got, &want, &outs, &ctx);
+                    assert_eq!(rep.peak_resident_bytes.len(), p, "{ctx}");
+                    for (w, &resident) in rep.peak_resident_bytes.iter().enumerate() {
+                        assert!(
+                            resident <= budget,
+                            "{ctx}: worker {w} peak {resident} exceeds budget"
+                        );
+                    }
+                    if budget == tight {
+                        tight_spill_total += rep.spill_bytes;
+                    }
+                    // a fault implies bytes went to cold storage first
+                    // (intermediates) or a view was re-sliced (inputs);
+                    // either way the counters must be consistent.
+                    if rep.spill_bytes > 0 {
+                        assert!(rep.spill_faults > 0 || rep.spill_stall_s >= 0.0, "{ctx}");
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        tight_spill_total > 0,
+        "tight budget arms never spilled — the out-of-core path was not exercised"
+    );
+}
+
+/// Unbudgeted runs must not pay for the spill machinery: every spill
+/// counter is zero, the summary has no spill segment, and the modeled
+/// ledger matches a second unbudgeted run exactly — while per-worker peak
+/// residency is still tracked (it feeds `explain` and the offload bench).
+#[test]
+fn unbudgeted_runs_have_zero_spill_overhead() {
+    let engine = NativeEngine::new();
+    let roles = LabelRoles::by_convention();
+    let chain = matchain::chain_graph(24, false).unwrap();
+    let inputs = matchain::chain_inputs(&chain, 3);
+    let plan = assign(&chain.graph, &Strategy::EinDecomp, 4, &roles).unwrap();
+    for mode in [ExecMode::WorkStealing, ExecMode::LevelBarrier] {
+        let cluster = Cluster::new(4, NetworkProfile::loopback()).with_exec_mode(mode);
+        let (_, rep) = cluster.execute(&chain.graph, &plan, &engine, &inputs).unwrap();
+        assert_eq!(rep.spill_bytes, 0, "{mode:?}");
+        assert_eq!(rep.spill_faults, 0, "{mode:?}");
+        assert_eq!(rep.spill_stall_s, 0.0, "{mode:?}");
+        assert!(!rep.summary().contains("spilled="), "{mode:?}: {}", rep.summary());
+        assert_eq!(rep.peak_resident_bytes.len(), 4, "{mode:?}");
+        assert!(
+            rep.peak_resident_bytes.iter().any(|&b| b > 0),
+            "{mode:?}: peak residency must be tracked even without a budget"
+        );
+        // the modeled ledger is budget-independent AND run-independent
+        let (_, again) = cluster.execute(&chain.graph, &plan, &engine, &inputs).unwrap();
+        assert_eq!(rep.bytes_moved, again.bytes_moved);
+        assert_eq!(rep.kernel_calls, again.kernel_calls);
+        assert_eq!(rep.peak_resident_bytes, again.peak_resident_bytes);
+    }
+}
+
+/// The budget is threaded through the driver/session stack too: a
+/// [`Session`] compiled with `mem_budget` produces bitwise-identical
+/// outputs and reports its spill counters through `RunReport::to_json`.
+#[test]
+fn session_mem_budget_round_trips_through_reports() {
+    use eindecomp::coordinator::driver::DriverConfig;
+    use eindecomp::coordinator::session::Session;
+    let chain = matchain::chain_graph(24, false).unwrap();
+    let inputs = matchain::chain_inputs(&chain, 5);
+    let outs = chain.graph.outputs();
+    let run = |budget: Option<MemoryBudget>| {
+        let cfg = DriverConfig {
+            workers: 2,
+            p: 2,
+            mem_budget: budget,
+            ..Default::default()
+        };
+        let session = Session::new(cfg).unwrap();
+        let exe = session.compile(&chain.graph).unwrap();
+        exe.run(&inputs).unwrap()
+    };
+    let (want, base) = run(None);
+    let floor = base.exec.peak_resident_bytes.iter().copied().max().unwrap();
+    let (got, rep) = run(Some(MemoryBudget::per_worker_bytes(floor.max(1))));
+    assert_bitwise_eq(&got, &want, &outs, "session budget=peak");
+    let json = rep.to_json().render();
+    for key in ["peak_resident_bytes", "spill_bytes", "spill_faults", "spill_stall_s"] {
+        assert!(json.contains(key), "RunReport json missing {key}: {json}");
+    }
+}
